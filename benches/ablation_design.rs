@@ -1,0 +1,138 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   A. pipe depth (OpenCL FIFO size) vs stepped-simulator stalls
+//!   B. RL hyper-parameters (ε, episode budget) vs optimum-found rate
+//!   C. feature-buffer budget fraction vs the feasibility frontier
+//!   D. N_i/N_l caps vs the chosen operating point (why (16,32))
+
+mod common;
+
+use cnn2gate::dse::{brute, rl, RlConfig};
+use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA5};
+use cnn2gate::estimator::{estimate, Thresholds};
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::zoo;
+use cnn2gate::sim::{simulate, step_round, RoundWork};
+use common::Harness;
+
+fn main() {
+    let mut h = Harness::new();
+    let flow = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+    let th = Thresholds::default();
+
+    // --- A. pipe depth: a deep-enough FIFO hides the DDR burstiness ----
+    println!("[A] conv-round utilization vs pipe depth (stepped sim):");
+    let base = RoundWork {
+        pixels: 729,
+        groups: 6,
+        red_steps: 100,
+        bytes_per_step: 48,
+        ddr_bytes_per_cycle: 40.0,
+        out_bytes: 32,
+    };
+    // NB: PIPE_DEPTH is a compile-time constant in the estimator; the
+    // stepped sim exposes the effect through the work's burstiness knobs
+    let rep = step_round(&base);
+    println!(
+        "    depth=512: conv util {:.2}, rd->conv full stalls {}",
+        rep.conv_utilization(),
+        rep.rd_to_conv_full_stalls
+    );
+    h.check(
+        rep.conv_utilization() > 0.6,
+        "deep pipes keep the lane array >60% utilized on a balanced round",
+    );
+    let starved = step_round(&RoundWork {
+        ddr_bytes_per_cycle: 4.0,
+        ..base
+    });
+    h.check(
+        starved.conv_utilization() < rep.conv_utilization(),
+        "cutting DDR bandwidth starves the lanes (backpressure visible)",
+    );
+
+    // --- B. RL hyper-parameters ------------------------------------------
+    println!("[B] RL-DSE optimum-found rate across hyper-parameters:");
+    let bf = brute::explore(&flow, &ARRIA_10_GX1150, th);
+    for (eps, episodes, steps) in [
+        (0.05, 4, 8),
+        (0.35, 4, 8), // default
+        (0.35, 2, 4),
+        (0.80, 4, 8),
+    ] {
+        let mut hits = 0;
+        let mut queries = 0;
+        let seeds = 20;
+        for seed in 0..seeds {
+            let cfg = RlConfig {
+                epsilon: eps,
+                episodes,
+                steps_per_episode: steps,
+                seed,
+                ..RlConfig::default()
+            };
+            let r = rl::explore(&flow, &ARRIA_10_GX1150, th, cfg);
+            queries += r.queries;
+            hits += (r.best == bf.best) as usize;
+        }
+        println!(
+            "    eps={eps:.2} episodes={episodes} steps={steps}: found {hits}/{seeds}, avg queries {:.1}",
+            queries as f64 / seeds as f64
+        );
+        if (eps, episodes, steps) == (0.35, 4, 8) {
+            h.check(hits >= 18, "default RL config finds the optimum on ≥90% of seeds");
+        }
+        if (eps, episodes, steps) == (0.35, 2, 4) {
+            h.check(
+                hits < 20 || queries / (seeds as usize) < bf.queries,
+                "a starved episode budget trades hit rate for queries",
+            );
+        }
+    }
+
+    // --- C. feature-budget fraction: drives the CycloneV RAM anchor ----
+    println!("[C] feasibility at (8,8) on 5CSEMA5 (feature-budget calibration):");
+    let est = estimate(&flow, &CYCLONE_V_5CSEMA5, 8, 8);
+    println!(
+        "    RAM blocks {:.0}/397 ({:.1}%), mem bits {:.2} M",
+        est.ram_blocks,
+        est.p_mem,
+        est.mem_bits / 1e6
+    );
+    h.check(
+        est.p_mem > 95.0 && est.p_mem <= 101.0,
+        "the (8,8) fit saturates the 5CSEMA5 block RAM (paper: 100%)",
+    );
+
+    // --- D. why (16,32): remove the option caps and the fitter would
+    //        choose a bigger design that the OpenCL flow can't route ----
+    println!("[D] operating point with vs without the hardware caps:");
+    let capped = brute::explore(&flow, &ARRIA_10_GX1150, th);
+    // uncapped exploration: evaluate a 5x5 pow2 grid directly
+    let mut best = (0usize, 0usize, 0.0f64);
+    for ni in [4usize, 8, 16, 32, 64] {
+        for nl in [4usize, 8, 16, 32, 64] {
+            let e = estimate(&flow, &ARRIA_10_GX1150, ni, nl);
+            if e.fits(&th) && e.f_avg() > best.2 {
+                best = (ni, nl, e.f_avg());
+            }
+        }
+    }
+    println!(
+        "    capped H_best {:?} vs uncapped argmax ({}, {}) at F_avg {:.1}%",
+        capped.best, best.0, best.1, best.2
+    );
+    h.check(capped.best == Some((16, 32)), "caps reproduce the paper's (16,32)");
+    h.check(
+        best.0 * best.1 > 16 * 32,
+        "without the memory-interface/fan-out caps the fitter would pick a larger design — the paper's §5 'limited options' remark",
+    );
+
+    // latency sanity at both points
+    let t_capped = simulate(&flow, &ARRIA_10_GX1150, 16, 32).total_millis;
+    let t_big = simulate(&flow, &ARRIA_10_GX1150, best.0, best.1).total_millis;
+    h.check(
+        t_big < t_capped,
+        "the uncapped point would be faster — scalability/automation is the trade-off the paper accepts",
+    );
+    h.finish();
+}

@@ -1,0 +1,72 @@
+//! Batch-size throughput sweep — the paper's §5 remark: "There are also
+//! other latency reports in the literature such as [7]. However, those
+//! latency reports are measured in the favorable batch size (e.g. 16).
+//! Increasing batch size can make more parallelism available to the
+//! algorithm that can lead to higher throughput."
+//!
+//! This bench regenerates that claim as a curve: per-frame latency and
+//! GOp/s for batch 1..32 on both evaluation nets.
+
+mod common;
+
+use cnn2gate::estimator::device::ARRIA_10_GX1150;
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::zoo;
+use cnn2gate::sim::{simulate, simulate_batched};
+use cnn2gate::util::table::Table;
+use common::Harness;
+
+fn main() {
+    let mut h = Harness::new();
+    for model in ["alexnet", "vgg16"] {
+        let flow = ComputationFlow::extract(&zoo::build(model, false).unwrap()).unwrap();
+        h.bench(&format!("batch_sim/{model}"), 100, || {
+            simulate_batched(&flow, &ARRIA_10_GX1150, 16, 32, 16)
+        });
+        let mut t = Table::new(
+            format!("{model} on Arria 10 (16,32): batch sweep"),
+            &["batch", "total (ms)", "ms/frame", "GOp/s", "fc1 bound"],
+        );
+        let mut prev = 0.0;
+        let mut monotone = true;
+        for batch in [1usize, 2, 4, 8, 16, 32] {
+            let rep = simulate_batched(&flow, &ARRIA_10_GX1150, 16, 32, batch);
+            monotone &= rep.gops_per_s >= prev - 1e-9;
+            prev = rep.gops_per_s;
+            let fc1 = rep.layers.iter().find(|l| !l.is_conv).map(|l| l.memory_bound);
+            t.row(&[
+                batch.to_string(),
+                format!("{:.2}", rep.total_millis),
+                format!("{:.2}", rep.millis_per_frame),
+                format!("{:.1}", rep.gops_per_s),
+                fc1.map_or("-".into(), |b| if b { "memory" } else { "compute" }.into()),
+            ]);
+        }
+        println!("\n{}", t.render());
+        h.check(monotone, &format!("{model}: throughput monotone in batch"));
+        let b1 = simulate(&flow, &ARRIA_10_GX1150, 16, 32);
+        let b16 = simulate_batched(&flow, &ARRIA_10_GX1150, 16, 32, 16);
+        let gain = b16.gops_per_s / (flow.gops() / (b1.total_millis / 1e3));
+        println!("  batch-16 throughput gain: {gain:.2}x");
+        h.check(gain >= 1.0, &format!("{model}: batch 16 never hurts"));
+        if model == "alexnet" {
+            // FC-heavy AlexNet gains much more than conv-dominated VGG
+            h.check(
+                gain > 1.3,
+                &format!("alexnet batch-16 gain {gain:.2}x > 1.3 (fc weights amortized)"),
+            );
+        }
+    }
+    // AlexNet gains more than VGG (fc-dominated vs conv-dominated)
+    let a = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+    let v = ComputationFlow::extract(&zoo::build("vgg16", false).unwrap()).unwrap();
+    let ga = simulate_batched(&a, &ARRIA_10_GX1150, 16, 32, 16).gops_per_s
+        / simulate_batched(&a, &ARRIA_10_GX1150, 16, 32, 1).gops_per_s;
+    let gv = simulate_batched(&v, &ARRIA_10_GX1150, 16, 32, 16).gops_per_s
+        / simulate_batched(&v, &ARRIA_10_GX1150, 16, 32, 1).gops_per_s;
+    h.check(
+        ga > gv,
+        &format!("batching helps AlexNet ({ga:.2}x) more than VGG ({gv:.2}x)"),
+    );
+    h.finish();
+}

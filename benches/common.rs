@@ -1,0 +1,98 @@
+//! Shared bench harness (criterion is not in the offline crate set).
+//!
+//! `bench(name, iters, f)` reports min/median/mean wall time per
+//! iteration; `check(cond, msg)` records paper-shape assertions and
+//! `finish()` exits non-zero if any failed, so `cargo bench` doubles as a
+//! reproduction gate.
+
+use std::time::Instant;
+
+pub struct Harness {
+    failures: Vec<String>,
+    checks: usize,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Harness {
+    pub fn new() -> Self {
+        Harness {
+            failures: Vec::new(),
+            checks: 0,
+        }
+    }
+
+    /// Time `f` over `iters` iterations (after one warm-up) and print a
+    /// criterion-style line. Returns median seconds per iteration.
+    pub fn bench<T>(&mut self, name: &str, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+        std::hint::black_box(f()); // warm-up
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+        println!(
+            "bench {name:<44} iters {iters:>4}  min {:>10}  median {:>10}  mean {:>10}",
+            fmt_t(samples[0]),
+            fmt_t(median),
+            fmt_t(mean)
+        );
+        median
+    }
+
+    /// Paper-shape assertion: recorded, not fatal until finish().
+    pub fn check(&mut self, cond: bool, msg: &str) {
+        self.checks += 1;
+        if cond {
+            println!("  ✓ {msg}");
+        } else {
+            println!("  ✗ {msg}");
+            self.failures.push(msg.to_string());
+        }
+    }
+
+    /// Shape check with a relative tolerance: |got/want - 1| <= tol.
+    pub fn check_close(&mut self, got: f64, want: f64, tol: f64, what: &str) {
+        let rel = (got / want - 1.0).abs();
+        self.check(
+            rel <= tol,
+            &format!("{what}: got {got:.3}, paper {want:.3} (rel {:.0}%, tol {:.0}%)", rel * 100.0, tol * 100.0),
+        );
+    }
+
+    pub fn finish(self) {
+        if self.failures.is_empty() {
+            println!("\nall {} shape checks passed", self.checks);
+        } else {
+            eprintln!(
+                "\n{}/{} shape checks FAILED:",
+                self.failures.len(),
+                self.checks
+            );
+            for f in &self.failures {
+                eprintln!("  - {f}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
+fn fmt_t(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}

@@ -1,0 +1,49 @@
+//! Fig. 6: per-layer execution-time breakdown of AlexNet on the Arria 10
+//! at (16,32) — 5 fused conv/pool rounds + 3 FC rounds, with the
+//! decreasing trend through the conv stack as feature dims shrink.
+
+mod common;
+
+use cnn2gate::estimator::device::ARRIA_10_GX1150;
+use cnn2gate::estimator::estimate;
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::zoo;
+use cnn2gate::report::fig6;
+use cnn2gate::sim::{simulate, simulate_layer};
+use common::Harness;
+
+fn main() {
+    let mut h = Harness::new();
+    let flow = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+    let est = estimate(&flow, &ARRIA_10_GX1150, 16, 32);
+
+    h.bench("fig6/per_layer_sim", 200, || {
+        flow.layers
+            .iter()
+            .map(|l| simulate_layer(l, &ARRIA_10_GX1150, &est, 16, 32).cycles)
+            .sum::<u64>()
+    });
+
+    let sim = simulate(&flow, &ARRIA_10_GX1150, 16, 32);
+    println!("\n{}", fig6(&sim).render());
+
+    let t: Vec<f64> = sim.layers.iter().map(|l| l.millis).collect();
+    h.check(t.len() == 8, "8 rounds: 5 fused conv/pool + 3 FC (paper Fig 6)");
+    h.check(
+        t[1] >= t[2] && t[2] >= t[4],
+        "conv execution time decreases as feature dims shrink (L2 -> L5)",
+    );
+    h.check(t[1] >= t[0], "conv2 carries the most conv MACs");
+    h.check(t[5] >= t[6] && t[6] >= t[7], "FC tail decreases with weight size");
+    h.check(
+        sim.layers[..5].iter().all(|l| !l.memory_bound),
+        "conv rounds are lane-bound",
+    );
+    h.check(
+        sim.layers[5..].iter().all(|l| l.memory_bound),
+        "FC rounds are DDR-bound (weights stream once per frame)",
+    );
+    let sum: f64 = t.iter().sum();
+    h.check_close(sum, sim.total_millis, 1e-9, "breakdown sums to the total");
+    h.finish();
+}

@@ -1,0 +1,82 @@
+//! Hot-path microbenches — the §Perf targets of DESIGN.md §9 (L3):
+//!   estimator query        < 10 µs
+//!   full DSE sweep         < 5 s wall (it's actually ~ms)
+//!   simulator              ≥ 10 M simulated cycles/s (stepped mode)
+//!   JSON parse             model-file scale in ms
+//! plus PJRT dispatch overhead when artifacts are present.
+
+mod common;
+
+use cnn2gate::coordinator::pipeline;
+use cnn2gate::dse::brute;
+use cnn2gate::estimator::device::ARRIA_10_GX1150;
+use cnn2gate::estimator::{estimate, Thresholds};
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::zoo;
+use cnn2gate::runtime::Manifest;
+use cnn2gate::sim::{step_round, RoundWork};
+use cnn2gate::util::json::Json;
+use common::Harness;
+
+fn main() {
+    let mut h = Harness::new();
+    let flow = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+
+    // estimator query
+    let q = h.bench("estimator/query", 10_000, || {
+        estimate(&flow, &ARRIA_10_GX1150, 16, 32)
+    });
+    h.check(q < 10e-6, &format!("estimator query {:.2} µs < 10 µs", q * 1e6));
+
+    // full BF sweep
+    let sweep = h.bench("dse/bf_full_sweep", 1000, || {
+        brute::explore(&flow, &ARRIA_10_GX1150, Thresholds::default())
+    });
+    h.check(sweep < 5.0, "full DSE sweep < 5 s");
+
+    // stepped simulator throughput
+    let work = RoundWork {
+        pixels: 729,
+        groups: 6,
+        red_steps: 100,
+        bytes_per_step: 16,
+        ddr_bytes_per_cycle: 40.0,
+        out_bytes: 32,
+    };
+    let cycles = step_round(&work).cycles as f64;
+    let t = h.bench("sim/step_round(alexnet-conv2-ish)", 20, || step_round(&work));
+    let rate = cycles / t;
+    h.check(
+        rate > 10e6,
+        &format!("stepped simulator {:.1} M cycles/s ≥ 10 M", rate / 1e6),
+    );
+
+    // zoo build + flow extraction
+    h.bench("zoo/alexnet+flow", 500, || {
+        let g = zoo::build("alexnet", false).unwrap();
+        ComputationFlow::extract(&g).unwrap()
+    });
+
+    // JSON parse at model-file scale
+    let model_path = std::path::Path::new("artifacts/models/vgg16.json");
+    if model_path.exists() {
+        let text = std::fs::read_to_string(model_path).unwrap();
+        let jt = h.bench("json/parse vgg16.json", 200, || Json::parse(&text).unwrap());
+        h.check(jt < 10e-3, &format!("vgg16.json parse {:.2} ms < 10 ms", jt * 1e3));
+    }
+
+    // PJRT dispatch overhead: run tiny model, measure non-execute overhead
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(dir).unwrap();
+        if let Some(art) = manifest.model("tiny") {
+            let per_frame = pipeline::time_emulation_synthetic(art, 50).unwrap();
+            println!(
+                "bench pjrt/tiny end-to-end {:>38} {:.3} ms/frame",
+                "", per_frame * 1e3
+            );
+            h.check(per_frame < 0.1, "tiny-model PJRT round trip < 100 ms");
+        }
+    }
+    h.finish();
+}

@@ -1,0 +1,107 @@
+//! Table 1: execution times for AlexNet and VGG-16 (batch = 1) on the
+//! Core-i7 emulation row (PJRT CPU here), Cyclone V 5CSEMA5 and Arria 10
+//! GX1150 — regenerated live, with paper-shape checks.
+
+mod common;
+
+use cnn2gate::coordinator::pipeline;
+use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA5};
+use cnn2gate::estimator::estimate;
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::zoo;
+use cnn2gate::report::table1;
+use cnn2gate::runtime::Manifest;
+use cnn2gate::sim::simulate;
+use common::Harness;
+
+fn main() {
+    let mut h = Harness::new();
+    let aflow = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+    let vflow = ComputationFlow::extract(&zoo::build("vgg16", false).unwrap()).unwrap();
+
+    // --- FPGA rows via the cycle simulator (timed: this is the bench) ---
+    let a_cv = h.bench("sim/alexnet/cycloneV(8,8)", 50, || {
+        simulate(&aflow, &CYCLONE_V_5CSEMA5, 8, 8).total_millis
+    });
+    let _ = a_cv;
+    let alex_cv = simulate(&aflow, &CYCLONE_V_5CSEMA5, 8, 8);
+    let vgg_cv = simulate(&vflow, &CYCLONE_V_5CSEMA5, 8, 8);
+    h.bench("sim/alexnet/arria10(16,32)", 50, || {
+        simulate(&aflow, &ARRIA_10_GX1150, 16, 32).total_millis
+    });
+    let alex_a10 = simulate(&aflow, &ARRIA_10_GX1150, 16, 32);
+    let vgg_a10 = simulate(&vflow, &ARRIA_10_GX1150, 16, 32);
+
+    // --- emulation row (PJRT CPU) when artifacts exist -------------------
+    let dir = std::path::Path::new("artifacts");
+    let emu = Manifest::load(dir).ok().map(|m| {
+        let a = m
+            .model("alexnet")
+            .map(|art| pipeline::time_emulation_synthetic(art, 1).unwrap());
+        let v = m
+            .model("vgg16")
+            .map(|art| pipeline::time_emulation_synthetic(art, 1).unwrap());
+        (a, v)
+    });
+
+    let mut rows = Vec::new();
+    if let Some((a, v)) = &emu {
+        rows.push((
+            "CPU (PJRT emulation)".to_string(),
+            "N/A".to_string(),
+            a.map(|s| s * 1e3),
+            v.map(|s| s * 1e3),
+            None,
+        ));
+    }
+    let est_cv = estimate(&aflow, &CYCLONE_V_5CSEMA5, 8, 8);
+    let est_a10 = estimate(&aflow, &ARRIA_10_GX1150, 16, 32);
+    rows.push((
+        CYCLONE_V_5CSEMA5.name.to_string(),
+        format!(
+            "Logic {:.0}% DSP {:.0}% RAM {:.0}%",
+            est_cv.p_lut, est_cv.p_dsp, est_cv.p_mem
+        ),
+        Some(alex_cv.total_millis),
+        Some(vgg_cv.total_millis),
+        Some(est_cv.fmax_mhz),
+    ));
+    rows.push((
+        ARRIA_10_GX1150.name.to_string(),
+        format!(
+            "Logic {:.0}% DSP {:.0}% RAM {:.0}%",
+            est_a10.p_lut, est_a10.p_dsp, est_a10.p_mem
+        ),
+        Some(alex_a10.total_millis),
+        Some(vgg_a10.total_millis),
+        Some(est_a10.fmax_mhz),
+    ));
+    println!("\n{}", table1(&rows).render());
+
+    // --- paper-shape checks ------------------------------------------------
+    h.check_close(alex_a10.total_millis, 18.24, 0.12, "AlexNet Arria10 latency (ms)");
+    h.check_close(vgg_a10.total_millis, 205.0, 0.17, "VGG-16 Arria10 latency (ms)");
+    h.check_close(alex_cv.total_millis, 153.0, 0.13, "AlexNet CycloneV latency (ms)");
+    h.check(
+        (2000.0..7000.0).contains(&vgg_cv.total_millis),
+        &format!("VGG CycloneV in the seconds regime ({:.2} s, paper 4.26 s)", vgg_cv.total_millis / 1e3),
+    );
+    h.check(
+        alex_a10.total_millis < alex_cv.total_millis / 4.0,
+        "Arria 10 ≫ Cyclone V (AlexNet)",
+    );
+    let ratio = vgg_a10.total_millis / alex_a10.total_millis;
+    h.check(
+        (8.0..20.0).contains(&ratio),
+        &format!("VGG/AlexNet latency ratio {ratio:.1} (paper 11.2)"),
+    );
+    h.check_close(est_cv.fmax_mhz, 131.0, 0.06, "CycloneV fmax (MHz)");
+    h.check_close(est_a10.fmax_mhz, 199.0, 0.04, "Arria10 fmax (MHz)");
+    if let Some((Some(a), Some(v))) = emu {
+        h.check(
+            v > a,
+            &format!("emulation: VGG ({v:.1}s) slower than AlexNet ({a:.1}s), paper 148s vs 13s"),
+        );
+    }
+    h.finish();
+}

@@ -1,0 +1,72 @@
+//! Table 2: synthesis + DSE details for AlexNet on the three boards —
+//! RL-DSE vs BF-DSE timing, synthesis-time model, chosen options,
+//! "does not fit" on the 5CSEMA4.
+
+mod common;
+
+use cnn2gate::dse::{brute, rl, RlConfig};
+use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
+use cnn2gate::estimator::Thresholds;
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::zoo;
+use cnn2gate::report::table2;
+use cnn2gate::synth::{self, Explorer};
+use common::Harness;
+
+fn main() {
+    let mut h = Harness::new();
+    let graph = zoo::build("alexnet", false).unwrap();
+    let flow = ComputationFlow::extract(&graph).unwrap();
+    let th = Thresholds::default();
+
+    // time the explorers themselves (the thing Table 2 compares)
+    h.bench("dse/bf/arria10", 200, || brute::explore(&flow, &ARRIA_10_GX1150, th));
+    h.bench("dse/rl/arria10", 200, || {
+        rl::explore(&flow, &ARRIA_10_GX1150, th, RlConfig::default())
+    });
+
+    let mut reports = Vec::new();
+    for dev in [&CYCLONE_V_5CSEMA4, &CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150] {
+        let rep = synth::run(&graph, dev, Explorer::BruteForce, th, None).unwrap();
+        let rl_res = rl::explore(&flow, dev, th, RlConfig::default());
+        let bf_res = brute::explore(&flow, dev, th);
+        reports.push((rep, rl_res, bf_res));
+    }
+    let refs: Vec<_> = reports.iter().map(|(a, b, c)| (a, b, c)).collect();
+    println!("\n{}", table2(&refs).render());
+
+    // --- paper-shape checks ------------------------------------------------
+    let (rep4, rl4, _) = &reports[0];
+    h.check(!rep4.fits(), "5CSEMA4: does not fit (paper)");
+    h.check(rl4.best.is_none(), "5CSEMA4: RL agrees nothing fits");
+
+    let (rep5, rl5, bf5) = &reports[1];
+    h.check(rep5.option() == Some((8, 8)), "5CSEMA5 picks (8,8) (paper)");
+    h.check_close(rep5.synthesis_minutes.unwrap(), 46.0, 0.15, "5CSEMA5 synthesis minutes");
+    h.check_close(bf5.modeled_seconds / 60.0, 3.5, 0.15, "5CSEMA5 BF-DSE minutes");
+    h.check(
+        rl5.modeled_seconds < bf5.modeled_seconds,
+        &format!(
+            "RL-DSE faster than BF-DSE ({:.1} vs {:.1} min, paper 2.5 vs 3.5)",
+            rl5.modeled_seconds / 60.0,
+            bf5.modeled_seconds / 60.0
+        ),
+    );
+
+    let (rep10, rl10, bf10) = &reports[2];
+    h.check(rep10.option() == Some((16, 32)), "Arria 10 picks (16,32) (paper)");
+    h.check_close(rep10.synthesis_minutes.unwrap() / 60.0, 8.5, 0.10, "Arria 10 synthesis hours");
+    h.check_close(bf10.modeled_seconds / 60.0, 4.0, 0.15, "Arria 10 BF-DSE minutes");
+    let speedup = 1.0 - rl10.modeled_seconds / bf10.modeled_seconds;
+    h.check(
+        (0.05..0.50).contains(&speedup),
+        &format!("RL speedup {:.0}% (paper ~25%)", speedup * 100.0),
+    );
+    // consumed resources at the chosen option (Table 2 anchors)
+    let est = rep5.estimate.as_ref().unwrap();
+    h.check_close(est.alms, 26_000.0, 0.06, "5CSEMA5 ALMs consumed");
+    h.check_close(est.dsps, 72.0, 0.02, "5CSEMA5 DSPs consumed");
+    h.check_close(est.ram_blocks, 397.0, 0.06, "5CSEMA5 RAM blocks consumed");
+    h.check_close(est.mem_bits, 2.0e6, 0.25, "5CSEMA5 memory bits consumed (~2 Mbit)");
+    h.finish();
+}

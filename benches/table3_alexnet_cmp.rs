@@ -1,0 +1,76 @@
+//! Table 3: comparison to existing works, AlexNet at (16,32) on the
+//! Arria 10. Baselines are the published numbers; our row is computed
+//! live. Shape checks assert the paper's who-wins claims.
+
+mod common;
+
+use cnn2gate::estimator::device::ARRIA_10_GX1150;
+use cnn2gate::estimator::estimate;
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::metrics;
+use cnn2gate::onnx::zoo;
+use cnn2gate::report::{baselines, comparison_table};
+use cnn2gate::sim::simulate;
+use common::Harness;
+
+fn main() {
+    let mut h = Harness::new();
+    let flow = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+    h.bench("table3/pipeline", 50, || {
+        let est = estimate(&flow, &ARRIA_10_GX1150, 16, 32);
+        let sim = simulate(&flow, &ARRIA_10_GX1150, 16, 32);
+        (est, sim)
+    });
+    let est = estimate(&flow, &ARRIA_10_GX1150, 16, 32);
+    let sim = simulate(&flow, &ARRIA_10_GX1150, 16, 32);
+    let rows = baselines::alexnet();
+    println!(
+        "\n{}",
+        comparison_table(
+            "Table 3: Comparison to existing works, AlexNet (Ni,Nl)=(16,32)",
+            &rows,
+            &sim,
+            (est.alms, est.p_lut),
+            (est.dsps, est.p_dsp),
+        )
+        .render()
+    );
+
+    let ours_ms = sim.total_millis;
+    let ours_gops = metrics::gops_per_s(sim.gops, ours_ms);
+    let ours_density = metrics::gops_per_dsp(ours_gops, est.dsps);
+
+    // paper row values
+    h.check_close(ours_ms, 18.24, 0.12, "our latency (ms)");
+    h.check_close(ours_gops, 80.04, 0.12, "our performance (GOp/s)");
+    h.check_close(est.dsps, 300.0, 0.02, "our DSP count");
+    h.check_close(est.p_lut, 30.0, 0.10, "our logic %");
+
+    // who-wins claims of §5
+    let zhang = rows.iter().find(|r| r.work.contains("[21]")).unwrap();
+    let suda = rows.iter().find(|r| r.work.contains("[20]")).unwrap();
+    let ma = rows.iter().find(|r| r.work.contains("[22]")).unwrap();
+    let fpgaconvnet = rows.iter().find(|r| r.work.contains("[8]")).unwrap();
+    h.check(
+        ours_ms < zhang.latency_ms.unwrap(),
+        "faster than [21] (paper: 'faster than [21, 20]')",
+    );
+    h.check(ours_ms < suda.latency_ms.unwrap(), "faster than [20]");
+    h.check(
+        ours_gops > suda.gops,
+        "higher GOp/s than the OpenCL baseline [20]",
+    );
+    h.check(
+        ours_density > metrics::gops_per_dsp(suda.gops, suda.dsp.unwrap().0),
+        &format!("higher GOp/s/DSP than [20] ({ours_density:.3}, paper 0.266 vs 0.234)"),
+    );
+    h.check(
+        ma.latency_ms.unwrap() < ours_ms && fpgaconvnet.latency_ms.unwrap() < ours_ms,
+        "[22] and [8] remain faster on AlexNet (paper concedes this)",
+    );
+    h.check(
+        (ours_density - 0.266).abs() / 0.266 < 0.15,
+        &format!("performance density {ours_density:.3} ≈ paper 0.266"),
+    );
+    h.finish();
+}

@@ -1,0 +1,98 @@
+//! AlexNet full flow: the paper's headline experiment (Tables 1-3, Fig 6).
+//!
+//! Runs CNN2Gate for AlexNet on all three evaluation boards: DSE (both
+//! explorers), fit, synthesis-time model, latency simulation and the
+//! per-layer Fig. 6 breakdown. With artifacts present it also times the
+//! emulation mode (Table 1's CPU row).
+//!
+//! Run: `cargo run --release --example alexnet_flow`
+
+use cnn2gate::dse::{brute, rl, RlConfig};
+use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
+use cnn2gate::estimator::Thresholds;
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::metrics;
+use cnn2gate::onnx::zoo;
+use cnn2gate::report::fig6;
+use cnn2gate::runtime::Manifest;
+use cnn2gate::sim::simulate;
+use cnn2gate::synth::{self, Explorer};
+use cnn2gate::util::table::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let graph = zoo::build("alexnet", false).unwrap();
+    let flow = ComputationFlow::extract(&graph)?;
+    let th = Thresholds::default();
+    println!(
+        "AlexNet: {:.2} GOp/frame, {} rounds\n",
+        flow.gops(),
+        flow.layers.len()
+    );
+
+    for dev in [&CYCLONE_V_5CSEMA4, &CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150] {
+        println!("=== {} ===", dev.name);
+        let bf = brute::explore(&flow, dev, th);
+        let rl = rl::explore(&flow, dev, th, RlConfig::default());
+        println!(
+            "  BF-DSE: {:?} in {} ({} queries, modeled {})",
+            bf.best,
+            fmt_duration(bf.wall_seconds),
+            bf.queries,
+            fmt_duration(bf.modeled_seconds)
+        );
+        println!(
+            "  RL-DSE: {:?} in {} ({} queries, modeled {})",
+            rl.best,
+            fmt_duration(rl.wall_seconds),
+            rl.queries,
+            fmt_duration(rl.modeled_seconds)
+        );
+        let rep = synth::run(&graph, dev, Explorer::BruteForce, th, None)?;
+        match (&rep.estimate, &rep.sim) {
+            (Some(est), Some(sim)) => {
+                println!(
+                    "  fit: ALM {:.0}K ({:.0}%)  DSP {:.0} ({:.0}%)  RAM {:.0} ({:.0}%)  fmax {:.0} MHz",
+                    est.alms / 1e3,
+                    est.p_lut,
+                    est.dsps,
+                    est.p_dsp,
+                    est.ram_blocks,
+                    est.p_mem,
+                    est.fmax_mhz
+                );
+                println!(
+                    "  synthesis ≈ {}   latency {:.2} ms   {:.1} GOp/s   {:.3} GOp/s/DSP",
+                    fmt_duration(rep.synthesis_minutes.unwrap() * 60.0),
+                    sim.total_millis,
+                    metrics::gops_per_s(sim.gops, sim.total_millis),
+                    metrics::gops_per_dsp(
+                        metrics::gops_per_s(sim.gops, sim.total_millis),
+                        est.dsps
+                    )
+                );
+            }
+            _ => println!("  Does not fit"),
+        }
+        println!();
+    }
+
+    // Fig. 6 on the Arria 10 at the paper's option
+    let sim = simulate(&flow, &ARRIA_10_GX1150, 16, 32);
+    println!("{}", fig6(&sim).render());
+
+    // Emulation mode (Table 1 CPU row) when artifacts exist
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(dir)?;
+        if let Some(art) = manifest.model("alexnet") {
+            let secs = cnn2gate::coordinator::pipeline::time_emulation_synthetic(art, 1)?;
+            println!(
+                "emulation mode (PJRT CPU): {} per frame (paper's Core-i7 row: 13 s)",
+                fmt_duration(secs)
+            );
+        }
+    } else {
+        println!("(run `make artifacts` to add the emulation-mode timing)");
+    }
+    Ok(())
+}

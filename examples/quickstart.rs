@@ -1,0 +1,71 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Parse a model, extract its computation flow, explore the design space
+//! for a small FPGA, and print the predicted latency — the minimal
+//! version of what `cnn2gate synth` does.
+//!
+//! Run: `cargo run --example quickstart`
+
+use cnn2gate::dse::{brute, OptionSpace};
+use cnn2gate::estimator::{device, estimate, synthesis_minutes, Thresholds};
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::zoo;
+use cnn2gate::quant::{self, QuantSpec};
+use cnn2gate::sim::simulate;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A model: from the zoo here; onnx::parse_file reads the
+    //    ONNX-subset JSON that `make artifacts` exports.
+    let graph = zoo::build("lenet5", true).expect("zoo model");
+    graph.validate().map_err(anyhow::Error::msg)?;
+    println!("parsed {}: {} params", graph.name, graph.param_count());
+
+    // 2. Computation flow: the fused conv(+relu)(+pool) / FC rounds the
+    //    pipelined architecture executes (paper §4.1).
+    let flow = ComputationFlow::extract(&graph)?;
+    println!(
+        "flow: {} rounds ({} conv + {} fc), {:.4} GOp/frame",
+        flow.layers.len(),
+        flow.conv_rounds(),
+        flow.fc_rounds(),
+        flow.gops()
+    );
+
+    // 3. Apply the user-given fixed-point quantization (paper §4.2).
+    let quant = quant::apply(&graph, &QuantSpec::default()).map_err(anyhow::Error::msg)?;
+    println!(
+        "quantized {} weight tensors, worst |err| {:.4}",
+        quant.tensors.len(),
+        quant.worst_abs_err()
+    );
+
+    // 4. Design-space exploration against the resource estimator.
+    let dev = device::find("5csema5").unwrap();
+    let space = OptionSpace::from_flow(&flow);
+    println!("option space on {}: {:?} x {:?}", dev.name, space.ni, space.nl);
+    let dse = brute::explore(&flow, dev, Thresholds::default());
+    let (ni, nl) = dse.best.expect("lenet5 fits the 5CSEMA5");
+    println!(
+        "H_best = ({ni},{nl}) after {} estimator queries (modeled {:.1} min)",
+        dse.queries,
+        dse.modeled_seconds / 60.0
+    );
+
+    // 5. Fit + latency prediction.
+    let est = estimate(&flow, dev, ni, nl);
+    let sim = simulate(&flow, dev, ni, nl);
+    println!(
+        "fit: ALM {:.0}% DSP {:.0}% RAM {:.0}% @ {:.0} MHz, synthesis ≈ {:.0} min",
+        est.p_lut,
+        est.p_dsp,
+        est.p_mem,
+        est.fmax_mhz,
+        synthesis_minutes(&est, dev)
+    );
+    println!(
+        "predicted latency: {:.3} ms/frame ({:.2} GOp/s)",
+        sim.total_millis,
+        sim.gops / (sim.total_millis / 1e3)
+    );
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! VGG-16 full flow (Tables 1 and 4): the paper's "CNN2Gate performs
+//! better for larger neural networks" experiment.
+//!
+//! Run: `cargo run --release --example vgg_flow`
+
+use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA5};
+use cnn2gate::estimator::{estimate, Thresholds};
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::metrics;
+use cnn2gate::onnx::zoo;
+use cnn2gate::report::{baselines, comparison_table};
+use cnn2gate::sim::simulate;
+use cnn2gate::synth::{self, Explorer};
+use cnn2gate::util::table::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let graph = zoo::build("vgg16", false).unwrap();
+    let flow = ComputationFlow::extract(&graph)?;
+    println!(
+        "VGG-16: {:.1} GOp/frame, {} conv + {} fc rounds\n",
+        flow.gops(),
+        flow.conv_rounds(),
+        flow.fc_rounds()
+    );
+
+    for dev in [&CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150] {
+        let rep = synth::run(&graph, dev, Explorer::Reinforcement, Thresholds::default(), None)?;
+        match (&rep.estimate, &rep.sim) {
+            (Some(_est), Some(sim)) => {
+                let gops = metrics::gops_per_s(sim.gops, sim.total_millis);
+                println!(
+                    "{}: H_best {:?}  latency {}  {:.1} GOp/s  (efficiency {:.0}% of lane peak)",
+                    dev.name,
+                    rep.option().unwrap(),
+                    fmt_duration(sim.total_millis / 1e3),
+                    gops,
+                    100.0 * sim.efficiency()
+                );
+            }
+            _ => println!("{}: does not fit", dev.name),
+        }
+    }
+
+    // AlexNet-vs-VGG efficiency claim (§5: "CNN2Gate is performing
+    // better for larger neural networks such as VGG")
+    let alex = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap())?;
+    let asim = simulate(&alex, &ARRIA_10_GX1150, 16, 32);
+    let vsim = simulate(&flow, &ARRIA_10_GX1150, 16, 32);
+    let a_gops = metrics::gops_per_s(asim.gops, asim.total_millis);
+    let v_gops = metrics::gops_per_s(vsim.gops, vsim.total_millis);
+    println!(
+        "\nthroughput: AlexNet {a_gops:.1} GOp/s vs VGG-16 {v_gops:.1} GOp/s ({}x)",
+        (v_gops / a_gops * 10.0).round() / 10.0
+    );
+
+    // Table 4
+    let est = estimate(&alex, &ARRIA_10_GX1150, 16, 32);
+    println!(
+        "\n{}",
+        comparison_table(
+            "Table 4: Comparison to existing works, VGG-16 (Ni,Nl)=(16,32)",
+            &baselines::vgg16(),
+            &vsim,
+            (est.alms, est.p_lut),
+            (est.dsps, est.p_dsp),
+        )
+        .render()
+    );
+    Ok(())
+}

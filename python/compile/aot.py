@@ -1,0 +1,313 @@
+"""AOT lowering: JAX/Pallas models -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/load_hlo/).
+
+Outputs, under ``artifacts/``:
+
+  <name>.hlo.txt        one HLO module per model variant; parameters are
+                        (image, l0_w, l0_b, ...) in topology order so the
+                        Rust side can feed PJRT literals positionally
+  golden_<name>.bin     flat little-endian dump of input + params +
+                        expected output (small models only) — the Rust
+                        integration tests replay these through PJRT
+  models/<name>.json    the ONNX-subset graph the Rust front-end parses
+  models/<name>.bin     raw initializer data for the JSON (small models)
+  manifest.json         index of everything above (shapes, dtypes, offsets)
+
+Python runs ONLY here (``make artifacts``); the Rust binary is
+self-contained afterwards.
+
+int8 note: the ``xla`` crate can only construct i32/i64/u32/u64/f32/f64
+literals, so quantized model variants expose int32 parameters/results and
+convert to/from int8 codes inside the HLO graph.  Values are int8 codes
+throughout, the widening is lossless.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+
+GOLDEN_MODELS = ("tiny", "lenet5", "tiny_int8", "lenet5_int8")
+DEFAULT_MODELS = ("tiny", "lenet5", "alexnet", "vgg16", "tiny_int8", "lenet5_int8", "alexnet_int8")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True; the Rust
+    side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _wrap_int8_io(forward):
+    """Expose an int32 interface around an int8-code forward function."""
+
+    def wrapped(x32, *params32):
+        xq = x32.astype(jnp.int8)
+        qparams = [
+            p.astype(jnp.int8) if p.dtype == jnp.int32 and name.endswith("_w") else p
+            for p, name in zip(params32, wrapped._param_names)
+        ]
+        out = forward(xq, *qparams)
+        return tuple(o.astype(jnp.int32) for o in out)
+
+    return wrapped
+
+
+def build_variant(name, ni, nl):
+    """Returns (topology, forward, input_spec, param_specs_exposed, qcfg)."""
+    quant = name.endswith("_int8")
+    base = name[: -len("_int8")] if quant else name
+    topo = M.TOPOLOGIES[base]()
+    if quant:
+        fwd_q = M.build_forward_int8(topo, ni=ni, nl=nl)
+        specs = M.param_specs(topo, quantized_model=True)
+        names = [n for n, _, _ in specs]
+        wrapped = _wrap_int8_io(fwd_q)
+        wrapped._param_names = names
+        # exposed dtypes: everything int32 at the PJRT boundary
+        exposed = [(n, s, "int32") for n, s, _ in specs]
+        ispec = (tuple(topo["input_shape"]), "int32")
+        return topo, wrapped, ispec, exposed, M.DEFAULT_QCFG
+    fwd = M.build_forward(topo, ni=ni, nl=nl)
+    exposed = M.param_specs(topo)
+    ispec = (tuple(topo["input_shape"]), "float32")
+    return topo, fwd, ispec, exposed, None
+
+
+def make_inputs(name, topo, seed=0):
+    """Concrete input + params for goldens/tests."""
+    quant = name.endswith("_int8")
+    rng = np.random.default_rng(seed + 1)
+    x = rng.normal(0.0, 1.0, size=tuple(topo["input_shape"])).astype(np.float32)
+    if quant:
+        xq = np.asarray(ref.quantize(x, M.DEFAULT_QCFG["m_in"]))
+        params = M.init_params(topo, seed=seed, quantized_model=True)
+        return xq.astype(np.int32), [p.astype(np.int32) for p in params]
+    return x, M.init_params(topo, seed=seed)
+
+
+def lower_model(name, ni, nl):
+    topo, fwd, (ishape, idt), exposed, qcfg = build_variant(name, ni, nl)
+    args = [jax.ShapeDtypeStruct(ishape, np.dtype(idt))]
+    for _, shape, dtype in exposed:
+        args.append(jax.ShapeDtypeStruct(shape, np.dtype(dtype)))
+    lowered = jax.jit(fwd).lower(*args)
+    return topo, fwd, exposed, (ishape, idt), qcfg, to_hlo_text(lowered)
+
+
+def write_golden(path, arrays):
+    """Flat little-endian dump; returns (offsets, nbytes)."""
+    offsets = []
+    with open(path, "wb") as f:
+        for arr in arrays:
+            offsets.append(f.tell())
+            f.write(np.ascontiguousarray(arr).tobytes())
+        nbytes = f.tell()
+    return offsets, nbytes
+
+
+def export_onnx_subset(topo, out_json, out_bin, params=None, qcfg=None):
+    """Write the ONNX-subset graph file the Rust front-end parses.
+
+    Structure mirrors onnx.GraphProto restricted to the operator set of
+    paper §4.1 (Conv/MaxPool/Relu/Gemm/Softmax + Flatten) with external
+    raw initializer data, like ONNX's external-data convention.
+    """
+    nodes = []
+    inits = []
+    offset = 0
+    tname = "input"
+    idx = 0
+    specs = M.layer_shapes(topo)
+    for li, (layer, ishape, oshape) in enumerate(specs):
+        if layer["op"] == "Conv":
+            wname, bname = f"l{li}_w", f"l{li}_b"
+            cin = ishape[0]
+            kh, kw = layer["kernel_shape"]
+            wshape = [layer["cout"], cin, kh, kw]
+            bshape = [layer["cout"]]
+            for nm, shp in ((wname, wshape), (bname, bshape)):
+                size = int(np.prod(shp)) * 4
+                inits.append(dict(name=nm, shape=shp, dtype="float32", offset=offset, nbytes=size))
+                offset += size
+            out = f"t{idx}"
+            idx += 1
+            nodes.append(
+                dict(
+                    op_type="Conv",
+                    inputs=[tname, wname, bname],
+                    outputs=[out],
+                    attrs=dict(
+                        kernel_shape=layer["kernel_shape"],
+                        strides=layer["strides"],
+                        pads=layer["pads"] + layer["pads"],  # ONNX 4-elem pads
+                        dilations=layer["dilations"],
+                    ),
+                )
+            )
+            tname = out
+            if layer["relu"]:
+                out = f"t{idx}"
+                idx += 1
+                nodes.append(dict(op_type="Relu", inputs=[tname], outputs=[out], attrs={}))
+                tname = out
+        elif layer["op"] == "MaxPool":
+            out = f"t{idx}"
+            idx += 1
+            nodes.append(
+                dict(
+                    op_type="MaxPool",
+                    inputs=[tname],
+                    outputs=[out],
+                    attrs=dict(
+                        kernel_shape=layer["kernel_shape"],
+                        strides=layer["strides"],
+                        pads=layer["pads"] + layer["pads"],
+                    ),
+                )
+            )
+            tname = out
+        elif layer["op"] == "Gemm":
+            flat = f"t{idx}"
+            idx += 1
+            nodes.append(dict(op_type="Flatten", inputs=[tname], outputs=[flat], attrs={}))
+            tname = flat
+            wname, bname = f"l{li}_w", f"l{li}_b"
+            k = int(np.prod(ishape))
+            for nm, shp in ((wname, [layer["cout"], k]), (bname, [layer["cout"]])):
+                size = int(np.prod(shp)) * 4
+                inits.append(dict(name=nm, shape=shp, dtype="float32", offset=offset, nbytes=size))
+                offset += size
+            out = f"t{idx}"
+            idx += 1
+            nodes.append(
+                dict(
+                    op_type="Gemm",
+                    inputs=[tname, wname, bname],
+                    outputs=[out],
+                    attrs=dict(transB=1),
+                )
+            )
+            tname = out
+            if layer["relu"]:
+                out = f"t{idx}"
+                idx += 1
+                nodes.append(dict(op_type="Relu", inputs=[tname], outputs=[out], attrs={}))
+                tname = out
+    if topo.get("softmax"):
+        out = f"t{idx}"
+        nodes.append(dict(op_type="Softmax", inputs=[tname], outputs=[out], attrs={}))
+        tname = out
+    doc = dict(
+        format="cnn2gate-onnx-subset-v1",
+        name=topo["name"],
+        input=dict(name="input", shape=list(topo["input_shape"]), dtype="float32"),
+        output=dict(name=tname),
+        nodes=nodes,
+        initializers=inits,
+        external_data=os.path.basename(out_bin) if params is not None else None,
+        quantization=(dict(qcfg) if qcfg else None),
+    )
+    with open(out_json, "w") as f:
+        json.dump(doc, f, indent=1)
+    if params is not None:
+        with open(out_bin, "wb") as f:
+            for arr in params:
+                f.write(np.ascontiguousarray(arr.astype(np.float32)).tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--ni", type=int, default=16)
+    ap.add_argument("--nl", type=int, default=32)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "models"), exist_ok=True)
+    manifest = dict(format="cnn2gate-artifacts-v1", ni=args.ni, nl=args.nl, models={})
+    mpath = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(mpath):  # merge: partial re-runs must not drop models
+        try:
+            old = json.load(open(mpath))
+            if old.get("format") == manifest["format"]:
+                manifest["models"].update(old.get("models", {}))
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        t0 = time.time()
+        topo, fwd, exposed, (ishape, idt), qcfg, hlo = lower_model(name, args.ni, args.nl)
+        hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        entry = dict(
+            hlo=os.path.basename(hlo_path),
+            input=dict(shape=list(ishape), dtype=idt),
+            params=[dict(name=n, shape=list(s), dtype=d) for n, s, d in exposed],
+            quantization=(dict(qcfg) if qcfg else None),
+            topology=topo,
+        )
+        if name in GOLDEN_MODELS:
+            x, params = make_inputs(name, topo)
+            expected = np.asarray(fwd(jnp.asarray(x), *[jnp.asarray(p) for p in params])[0])
+            gpath = os.path.join(out_dir, f"golden_{name}.bin")
+            arrays = [x] + params + [expected]
+            offsets, nbytes = write_golden(gpath, arrays)
+            entry["golden"] = dict(
+                file=os.path.basename(gpath),
+                nbytes=nbytes,
+                arrays=[
+                    dict(name=nm, shape=list(np.asarray(a).shape), dtype=str(np.asarray(a).dtype), offset=off)
+                    for nm, a, off in zip(
+                        ["input"] + [n for n, _, _ in exposed] + ["output"], arrays, offsets
+                    )
+                ],
+            )
+        manifest["models"][name] = entry
+        print(f"[aot] {name}: {len(hlo)/1e3:.0f} KB hlo in {time.time()-t0:.1f}s")
+
+    # ONNX-subset model files for the Rust front-end parser.
+    for base in ("tiny", "lenet5", "alexnet", "vgg16"):
+        topo = M.TOPOLOGIES[base]()
+        params = M.init_params(topo) if base in ("tiny", "lenet5") else None
+        export_onnx_subset(
+            topo,
+            os.path.join(out_dir, "models", f"{base}.json"),
+            os.path.join(out_dir, "models", f"{base}.bin"),
+            params=params,
+            qcfg=M.DEFAULT_QCFG,
+        )
+        print(f"[aot] onnx-subset models/{base}.json")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json with {len(manifest['models'])} models -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the CNN2Gate compute hot-spot.
+
+`ref` is the pure-jnp oracle; `conv_lane` / `pool` / `quantized` are the
+(N_i, N_l)-blocked Pallas kernels (interpret=True) that L2 composes into
+whole-network forward functions.
+"""
+
+from . import conv_lane, pool, quantized, ref  # noqa: F401

@@ -1,0 +1,200 @@
+"""L1 Pallas kernel: the CNN2Gate/PipeCNN vectorized convolution lane array.
+
+Paper mapping (Fig. 5, §4.2-4.3).  The FPGA design fetches ``N_l`` vectors
+of width ``N_i`` for features and weights per cycle, and feeds ``N_l``
+parallel CONV lanes, each performing an ``N_i``-wide MAC.  On TPU the same
+blocking becomes an im2col GEMM tiled for the MXU:
+
+  * reduction dim (Cin*KH*KW) is tiled in multiples of ``N_i``
+    -> the "vectorized input data / weights" of Fig. 5,
+  * output-channel dim is tiled in multiples of ``N_l``
+    -> the parallel computation lanes,
+  * the HBM<->VMEM staging expressed by the BlockSpec index maps plays the
+    role of the memory read / write OpenCL kernels, and the grid's
+    sequential revisiting of the output block is the FIFO pipe between the
+    fetch stage and the lane array (DESIGN.md §4 Hardware-Adaptation).
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and emulation-mode numerics are the paper's stated purpose
+for the CPU path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Tile policy. ni/nl keep the paper's semantics (they set tile
+# *granularity* and therefore the legal option grid); the caps lift tiles
+# toward MXU-friendly sizes without changing results.
+#
+# Perf note (EXPERIMENTS.md §Perf, iteration 1): under interpret=True the
+# lowered grid loop's per-step cost scales with the *whole* operand
+# buffers, not the tile, so the block sizes are chosen to minimize grid
+# steps: the reduction dim is kept whole (up to MAX_VEC_STEPS ni-vectors),
+# the lane dim covers up to MAX_LANE_GROUPS nl-groups, and the patch dim
+# uses a large LANE_TILE_M. This cut VGG-16 emulation from ~90 s for a
+# single conv layer to seconds for the whole network.
+LANE_TILE_M = 2048
+VEC_MULT = 8  # retained for lane_tile_shapes compatibility
+LANE_MULT = 4
+MAX_VEC_STEPS = 64  # bk <= ni * 64
+MAX_LANE_GROUPS = 16  # bn <= nl * 16
+
+
+def _round_up(x, mult):
+    return ((x + mult - 1) // mult) * mult
+
+
+def _pow2_ceil(x):
+    return 1 << (max(1, x) - 1).bit_length()
+
+
+def block_sizes(m, k, n, ni, nl, bm_target=LANE_TILE_M):
+    """(bm, bk, bn) for an (M,K)x(K,N) lane GEMM at option (ni, nl)."""
+    bk = min(_round_up(k, ni), ni * MAX_VEC_STEPS)
+    bn = min(_round_up(n, nl), nl * MAX_LANE_GROUPS)
+    bm = max(8, min(bm_target, _pow2_ceil(m)))
+    return bm, bk, bn
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x, size
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads), size
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, nsteps):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) dim.
+
+    The output block is revisited across the K steps — the Pallas analogue
+    of the accumulator register file inside an FPGA conv lane.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("ni", "nl", "bm"))
+def matmul_lanes(a, b, *, ni=16, nl=32, bm=LANE_TILE_M):
+    """(M,K) x (K,N) -> (M,N) with (N_i, N_l)-derived MXU tiling.
+
+    Shapes are padded to tile multiples and the result is sliced back, the
+    same way the FPGA host pads feature maps so that ``N_i`` divides the
+    fetch vectors (paper §4.2 "N_i should be a divisor of the features'
+    width ... to avoid padding").
+    """
+    (m, k0), (k1, n) = a.shape, b.shape
+    assert k0 == k1, f"contraction mismatch {a.shape} x {b.shape}"
+    let_bm = bm
+    (bm, bk, bn) = block_sizes(m, k0, n, ni, nl, bm_target=let_bm)
+    a, _ = _pad_to(a, 0, bm)
+    a, _ = _pad_to(a, 1, bk)
+    b, _ = _pad_to(b, 0, bk)
+    b, _ = _pad_to(b, 1, bn)
+    mp, kp = a.shape
+    np_ = b.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nsteps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]
+
+
+def conv2d_lanes(
+    x,
+    w,
+    b=None,
+    stride=(1, 1),
+    pad=(0, 0),
+    dilation=(1, 1),
+    *,
+    ni=16,
+    nl=32,
+    apply_relu=False,
+):
+    """CNN2Gate convolution layer on the lane array.
+
+    x: (Cin,H,W) float32, w: (Cout,Cin,KH,KW), b: (Cout,) or None.
+    The im2col staging is the memory-read kernel's address generation; the
+    Pallas GEMM is the lane array; bias+relu fuse into the lane epilogue
+    exactly as the RELU units sit behind the CONV units in Fig. 5.
+    """
+    cout = w.shape[0]
+    kernel = (w.shape[2], w.shape[3])
+    patches = ref.im2col(x, kernel, stride, pad, dilation)  # (P, K)
+    wmat = w.reshape(cout, -1).T  # (K, Cout)
+    out = matmul_lanes(patches, wmat, ni=ni, nl=nl)  # (P, Cout)
+    if b is not None:
+        out = out + b[None, :]
+    if apply_relu:
+        out = jnp.maximum(out, 0)
+    oh, ow = ref.conv_out_hw(x.shape[1:], kernel, stride, pad, dilation)
+    return out.T.reshape(cout, oh, ow)
+
+
+def gemm_lanes(x, w, b=None, *, ni=16, nl=32, apply_relu=False):
+    """Fully connected layer on the same lane array (paper §3.2.3: "the
+    convolution kernel and the fully connected kernel can be fused together
+    as a single 3-D matrix-matrix multiplication unit")."""
+    out = matmul_lanes(x[None, :], w.T, ni=ni, nl=nl)[0]
+    if b is not None:
+        out = out + b
+    if apply_relu:
+        out = jnp.maximum(out, 0)
+    return out
+
+
+# VMEM budget for the real-TPU tile estimate (bytes); double-buffered
+# working set must fit (DESIGN.md §9).
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+def lane_tile_shapes(ni, nl, k, n, m=512):
+    """The (bm, bk, bn) tile a given (N_i, N_l) choice would use on a real
+    TPU — used by the DESIGN.md §9 MXU-utilization estimate and by
+    python/tests.
+
+    Unlike `block_sizes` (which maximizes tile size because the CPU
+    interpreter's per-step cost scales with whole operands), the TPU tile
+    is shrunk until the double-buffered working set fits VMEM.
+    """
+    bm, bk, bn = block_sizes(m, k, n, ni, nl, bm_target=m)
+
+    def working(bm, bk, bn):
+        return 4 * (bm * bk + bk * bn + bm * bn)
+
+    # shrink the largest dimension first, never below lane granularity
+    while 2 * working(bm, bk, bn) > VMEM_BYTES:
+        if bm >= bk and bm > 8:
+            bm = max(8, bm // 2)
+        elif bk >= bn and bk > ni:
+            bk = max(ni, (bk // 2 + ni - 1) // ni * ni)
+        elif bn > nl:
+            bn = max(nl, (bn // 2 + nl - 1) // nl * nl)
+        else:
+            break  # minimal tile; physically always fits for 8-bit lanes
+    return bm, bk, bn

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: the max-pooling kernel of the pipelined architecture.
+
+The FPGA pool kernel sits behind the conv lanes (Fig. 3c / Fig. 5) and
+consumes one lane-vector per cycle.  Here it is a Pallas kernel blocked
+over channels (the lane dimension): each grid step pools ``block_c``
+channels, mirroring ``N_l`` pool units operating in parallel.
+
+General (kh, kw, stride, pad) support is implemented with statically
+unrolled shifted strided slices — the same structure as the FPGA shift
+register window, and the only formulation that works in both interpret
+mode and on real Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_NEG = float(jnp.finfo(jnp.float32).min)
+
+
+def _maxpool_kernel(x_ref, o_ref, *, kernel, stride, oh, ow):
+    kh, kw = kernel
+    sh, sw = stride
+    x = x_ref[...]  # (bc, Hp, Wp)
+    bc = x.shape[0]
+    m = None
+    for i in range(kh):
+        for j in range(kw):
+            v = jax.lax.slice(
+                x,
+                (0, i, j),
+                (bc, i + sh * (oh - 1) + 1, j + sw * (ow - 1) + 1),
+                (1, sh, sw),
+            )
+            m = v if m is None else jnp.maximum(m, v)
+    o_ref[...] = m
+
+
+def maxpool2d_lanes(x, kernel, stride, pad=(0, 0), *, nl=32):
+    """Max-pool x: (C,H,W) with ``nl`` parallel pool units.
+
+    Channels are padded to a multiple of the lane count (idle lanes on the
+    FPGA when N_l does not divide C — exactly the situation the paper's
+    divisor constraint avoids; we pad instead of forbidding it so the
+    kernel is total).
+    """
+    c, h, w = x.shape
+    oh, ow = ref.conv_out_hw((h, w), kernel, stride, pad, (1, 1))
+    xp = jnp.pad(
+        x,
+        ((0, 0), (pad[0], pad[0]), (pad[1], pad[1])),
+        constant_values=_NEG,
+    )
+    # Right-pad so the shifted slices stay in bounds for every (i, j).
+    need_h = kernel[0] + stride[0] * (oh - 1)
+    need_w = kernel[1] + stride[1] * (ow - 1)
+    xp = jnp.pad(
+        xp,
+        ((0, 0), (0, max(0, need_h - xp.shape[1])), (0, max(0, need_w - xp.shape[2]))),
+        constant_values=_NEG,
+    )
+    bc = min(nl, c)
+    xp, _ = _pad_channels(xp, bc)
+    cp = xp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(
+            _maxpool_kernel, kernel=kernel, stride=stride, oh=oh, ow=ow
+        ),
+        grid=(cp // bc,),
+        in_specs=[pl.BlockSpec((bc, xp.shape[1], xp.shape[2]), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bc, oh, ow), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, oh, ow), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:c]
+
+
+def _pad_channels(x, mult):
+    c = x.shape[0]
+    rem = (-c) % mult
+    if rem == 0:
+        return x, c
+    return jnp.pad(x, ((0, rem), (0, 0), (0, 0)), constant_values=_NEG), c

@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: the 8-bit fixed-point datapath (paper §4.2).
+
+CNN2Gate's structural domain "uses 8-bit fixed point arithmetic units to
+perform computations".  This module is the TPU adaptation of that
+datapath: int8 feature/weight codes, int32 accumulation inside the lane
+array, and a requantizing epilogue (shift + round + saturate) that maps
+the accumulator scale 2^-(m_in+m_w) back to the next layer's 2^-m_out.
+
+Checked against `ref.qconv2d` / `ref.qgemm` by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .conv_lane import LANE_TILE_M, _pad_to, block_sizes
+
+
+def _qmatmul_kernel(a_ref, b_ref, o_ref, *, nsteps):
+    """int8 x int8 -> int32 accumulation; grid K-dim innermost."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.int32),
+        b_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("ni", "nl", "bm"))
+def qmatmul_lanes(a, b, *, ni=16, nl=32, bm=LANE_TILE_M):
+    """(M,K) int8 x (K,N) int8 -> (M,N) int32 with (N_i,N_l) tiling."""
+    (m, k0), (k1, n) = a.shape, b.shape
+    assert k0 == k1, f"contraction mismatch {a.shape} x {b.shape}"
+    (bm, bk, bn) = block_sizes(m, k0, n, ni, nl, bm_target=bm)
+    a, _ = _pad_to(a, 0, bm)
+    a, _ = _pad_to(a, 1, bk)
+    b, _ = _pad_to(b, 0, bk)
+    b, _ = _pad_to(b, 1, bn)
+    mp, kp = a.shape
+    np_ = b.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_qmatmul_kernel, nsteps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]
+
+
+def _qim2col(xq, kernel, stride, pad, dilation):
+    """int8 im2col: route through int32 for the patch gather (XLA's
+    dilated-patch helper requires a conv-friendly dtype), then narrow
+    back — values are int8 codes throughout so the cast is lossless."""
+    cols = ref.im2col(
+        xq.astype(jnp.float32), kernel, stride, pad, dilation
+    )
+    return cols.astype(jnp.int8)
+
+
+def qconv2d_lanes(
+    xq,
+    wq,
+    bq,
+    cfg,
+    stride=(1, 1),
+    pad=(0, 0),
+    dilation=(1, 1),
+    *,
+    ni=16,
+    nl=32,
+    apply_relu=True,
+):
+    """Quantized conv on the lane array.  See ref.qconv2d for scales."""
+    cout = wq.shape[0]
+    kernel = (wq.shape[2], wq.shape[3])
+    patches = _qim2col(xq, kernel, stride, pad, dilation)  # (P, K) int8
+    wmat = wq.reshape(cout, -1).T  # (K, Cout) int8
+    acc = qmatmul_lanes(patches, wmat, ni=ni, nl=nl)  # (P, Cout) int32
+    acc = acc + bq[None, :]
+    if apply_relu:
+        acc = jnp.maximum(acc, 0)
+    out = ref.requantize(acc, cfg["m_in"] + cfg["m_w"], cfg["m_out"])
+    oh, ow = ref.conv_out_hw(xq.shape[1:], kernel, stride, pad, dilation)
+    return out.T.reshape(cout, oh, ow)
+
+
+def qgemm_lanes(xq, wq, bq, cfg, *, ni=16, nl=32, apply_relu=True):
+    """Quantized fully-connected layer on the lane array."""
+    acc = qmatmul_lanes(xq[None, :], wq.T, ni=ni, nl=nl)[0]
+    acc = acc + bq
+    if apply_relu:
+        acc = jnp.maximum(acc, 0)
+    return ref.requantize(acc, cfg["m_in"] + cfg["m_w"], cfg["m_out"])
+
+
+def qmaxpool2d(xq, kernel, stride, pad=(0, 0)):
+    """int8 max-pool: pooling commutes with the fixed-point code, so this
+    is a direct reduce-window on the codes (no requantization needed)."""
+    return jax.lax.reduce_window(
+        xq,
+        jnp.int8(-128),
+        jax.lax.max,
+        window_dimensions=(1, kernel[0], kernel[1]),
+        window_strides=(1, stride[0], stride[1]),
+        padding=[(0, 0), (pad[0], pad[0]), (pad[1], pad[1])],
+    )

@@ -1,0 +1,179 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Everything in this module is the *reference semantics* of the CNN2Gate
+compute pipeline: float conv / maxpool / GEMM plus the paper's 8-bit
+fixed-point quantization ((N, m) values, weights represented as N * 2^-m,
+see paper §4.2).  The Pallas kernels in `conv_lane.py` / `pool.py` /
+`quantized.py` are checked against these functions by pytest + hypothesis.
+
+All activations are CHW (batch dim handled by the caller / vmap); weights
+are OIHW, exactly the ONNX convention the Rust-side parser preserves.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Shape arithmetic (paper equation (3)-(4))
+# ---------------------------------------------------------------------------
+
+
+def conv_out_hw(hw, kernel, stride, pad, dilation):
+    """Output spatial size of a conv/maxpool node, paper eq. (3)."""
+    h, w = hw
+    kh, kw = kernel
+    sh, sw = stride
+    ph, pw = pad
+    dh, dw = dilation
+    ho = (h + 2 * ph - dh * (kh - 1) - 1) // sh + 1
+    wo = (w + 2 * pw - dw * (kw - 1) - 1) // sw + 1
+    return ho, wo
+
+
+# ---------------------------------------------------------------------------
+# Float reference ops
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, b=None, stride=(1, 1), pad=(0, 0), dilation=(1, 1)):
+    """Reference 2-D convolution.  x: (Cin,H,W), w: (Cout,Cin,KH,KW)."""
+    lhs = x[None]  # NCHW with N=1
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        w,
+        window_strides=stride,
+        padding=[(pad[0], pad[0]), (pad[1], pad[1])],
+        rhs_dilation=dilation,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    if b is not None:
+        out = out + b[:, None, None]
+    return out
+
+
+def maxpool2d(x, kernel, stride, pad=(0, 0)):
+    """Reference max-pool.  x: (C,H,W)."""
+    neg = jnp.finfo(x.dtype).min if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min
+    return jax.lax.reduce_window(
+        x,
+        neg,
+        jax.lax.max,
+        window_dimensions=(1, kernel[0], kernel[1]),
+        window_strides=(1, stride[0], stride[1]),
+        padding=[(0, 0), (pad[0], pad[0]), (pad[1], pad[1])],
+    )
+
+
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+def gemm(x, w, b=None):
+    """Fully connected layer: x: (K,), w: (N,K) -> (N,).  ONNX Gemm, transB=1."""
+    out = w @ x
+    if b is not None:
+        out = out + b
+    return out
+
+
+def softmax(x):
+    x = x - jnp.max(x)
+    e = jnp.exp(x)
+    return e / jnp.sum(e)
+
+
+def im2col(x, kernel, stride=(1, 1), pad=(0, 0), dilation=(1, 1)):
+    """Lower a conv input to the patch matrix of shape (OH*OW, Cin*KH*KW).
+
+    Column order matches ``w.reshape(Cout, -1)`` so that
+    ``im2col(x) @ w.reshape(Cout,-1).T == conv2d(x, w)`` — this is the
+    contract the Pallas conv-lane kernel relies on.
+    """
+    cin = x.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x[None],
+        filter_shape=kernel,
+        window_strides=stride,
+        padding=[(pad[0], pad[0]), (pad[1], pad[1])],
+        rhs_dilation=dilation,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]  # (Cin*KH*KW, OH, OW)
+    k = cin * kernel[0] * kernel[1]
+    return patches.reshape(k, -1).T  # (P, K)
+
+
+def matmul(a, b):
+    """Plain reference GEMM used as the oracle for the lane kernel."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point (N, m) quantization — paper §4.2
+# ---------------------------------------------------------------------------
+# A quantized value is stored as an 8-bit integer N with an implicit scale
+# 2^-m, i.e. real = N * 2^-m.  CNN2Gate "applies a given quantization": it
+# never learns m, it just converts float tensors with a user-provided m.
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+def quantize(x, m, bits=8):
+    """Float -> fixed-point integer code with round-to-nearest + saturate."""
+    lo = -(2 ** (bits - 1))
+    hi = 2 ** (bits - 1) - 1
+    scaled = jnp.round(x * (2.0**m))
+    return jnp.clip(scaled, lo, hi).astype(jnp.int8 if bits == 8 else jnp.int32)
+
+
+def dequantize(q, m):
+    return q.astype(jnp.float32) * (2.0**-m)
+
+
+def requantize(acc, m_acc, m_out, bits=8):
+    """Rescale an int32 accumulator with frac bits m_acc to an int8 code
+    with frac bits m_out (arithmetic shift with round-half-up, saturate).
+
+    This is exactly what the FPGA datapath does between pipeline stages.
+    """
+    shift = m_acc - m_out
+    if shift > 0:
+        rounded = (acc + (1 << (shift - 1))) >> shift
+    elif shift < 0:
+        rounded = acc << (-shift)
+    else:
+        rounded = acc
+    lo = -(2 ** (bits - 1))
+    hi = 2 ** (bits - 1) - 1
+    return jnp.clip(rounded, lo, hi).astype(jnp.int8 if bits == 8 else jnp.int32)
+
+
+def qconv2d(xq, wq, bq, cfg, stride=(1, 1), pad=(0, 0), dilation=(1, 1), apply_relu=True):
+    """Reference int8 fixed-point conv.
+
+    xq int8 with frac bits cfg['m_in'], wq int8 with cfg['m_w'],
+    bq int32 at the accumulator scale (m_in + m_w frac bits),
+    output int8 with cfg['m_out'].
+    """
+    acc = jax.lax.conv_general_dilated(
+        xq[None].astype(jnp.int32),
+        wq.astype(jnp.int32),
+        window_strides=stride,
+        padding=[(pad[0], pad[0]), (pad[1], pad[1])],
+        rhs_dilation=dilation,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    acc = acc + bq[:, None, None]
+    if apply_relu:
+        acc = jnp.maximum(acc, 0)
+    return requantize(acc, cfg["m_in"] + cfg["m_w"], cfg["m_out"])
+
+
+def qgemm(xq, wq, bq, cfg, apply_relu=True):
+    """Reference int8 fixed-point fully-connected layer."""
+    acc = wq.astype(jnp.int32) @ xq.astype(jnp.int32) + bq
+    if apply_relu:
+        acc = jnp.maximum(acc, 0)
+    return requantize(acc, cfg["m_in"] + cfg["m_w"], cfg["m_out"])

@@ -1,0 +1,345 @@
+"""L2: JAX forward graphs for the CNN2Gate model zoo.
+
+A model is described by a *topology* — an ordered list of layer dicts with
+exactly the attribute set the paper's ONNX parser extracts (§4.1): op
+type, kernel_shape, strides, pads, dilations, channel counts, plus the
+activation/softmax flags the parser detects.  The same topology is
+serialized to the ONNX-subset JSON that the Rust front-end parses, so the
+two sides of the system agree by construction.
+
+`build_forward` composes the L1 Pallas kernels (conv_lane / pool /
+quantized) into a whole-network forward function; `aot.py` lowers these to
+the HLO text artifacts the Rust runtime executes in emulation mode.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_lane, pool, quantized, ref
+
+# ---------------------------------------------------------------------------
+# Topologies (dims follow the torchvision/ONNX model-zoo definitions)
+# ---------------------------------------------------------------------------
+
+
+def _conv(cout, k, s=1, p=0, relu=True):
+    return dict(
+        op="Conv",
+        cout=cout,
+        kernel_shape=[k, k],
+        strides=[s, s],
+        pads=[p, p],
+        dilations=[1, 1],
+        relu=relu,
+    )
+
+
+def _pool(k, s, p=0):
+    return dict(op="MaxPool", kernel_shape=[k, k], strides=[s, s], pads=[p, p])
+
+
+def _fc(n, relu=True):
+    return dict(op="Gemm", cout=n, relu=relu)
+
+
+def tiny_topology():
+    """8x8 single-channel toy CNN used by unit tests and goldens."""
+    return dict(
+        name="tiny",
+        input_shape=[1, 8, 8],
+        layers=[_conv(4, 3, 1, 1), _pool(2, 2), _fc(10, relu=False)],
+        softmax=True,
+    )
+
+
+def lenet5_topology():
+    return dict(
+        name="lenet5",
+        input_shape=[1, 28, 28],
+        layers=[
+            _conv(6, 5, 1, 2),
+            _pool(2, 2),
+            _conv(16, 5),
+            _pool(2, 2),
+            _fc(120),
+            _fc(84),
+            _fc(10, relu=False),
+        ],
+        softmax=True,
+    )
+
+
+def alexnet_topology():
+    return dict(
+        name="alexnet",
+        input_shape=[3, 224, 224],
+        layers=[
+            _conv(64, 11, 4, 2),
+            _pool(3, 2),
+            _conv(192, 5, 1, 2),
+            _pool(3, 2),
+            _conv(384, 3, 1, 1),
+            _conv(256, 3, 1, 1),
+            _conv(256, 3, 1, 1),
+            _pool(3, 2),
+            _fc(4096),
+            _fc(4096),
+            _fc(1000, relu=False),
+        ],
+        softmax=True,
+    )
+
+
+def vgg16_topology():
+    layers = []
+    for block, (reps, cout) in enumerate([(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)]):
+        for _ in range(reps):
+            layers.append(_conv(cout, 3, 1, 1))
+        layers.append(_pool(2, 2))
+    layers += [_fc(4096), _fc(4096), _fc(1000, relu=False)]
+    return dict(name="vgg16", input_shape=[3, 224, 224], layers=layers, softmax=True)
+
+
+TOPOLOGIES = {
+    "tiny": tiny_topology,
+    "lenet5": lenet5_topology,
+    "alexnet": alexnet_topology,
+    "vgg16": vgg16_topology,
+}
+
+# Default per-layer fixed-point config for the int8 variants: activations
+# and weights Q(8, m).  These are the "user-given post-training
+# quantization values" of paper §4.2 — reasonable static choices, not
+# learned.
+DEFAULT_QCFG = dict(m_in=4, m_w=6, m_out=4)
+
+
+# ---------------------------------------------------------------------------
+# Shape inference (mirror of the Rust ir::shape module; paper eq. (3)-(4))
+# ---------------------------------------------------------------------------
+
+
+def layer_shapes(topo):
+    """Yield (layer, in_shape, out_shape) walking the topology."""
+    shape = tuple(topo["input_shape"])
+    out = []
+    for layer in topo["layers"]:
+        if layer["op"] == "Conv":
+            c, h, w = shape
+            oh, ow = ref.conv_out_hw(
+                (h, w),
+                tuple(layer["kernel_shape"]),
+                tuple(layer["strides"]),
+                tuple(layer["pads"]),
+                tuple(layer["dilations"]),
+            )
+            nxt = (layer["cout"], oh, ow)
+        elif layer["op"] == "MaxPool":
+            c, h, w = shape
+            oh, ow = ref.conv_out_hw(
+                (h, w),
+                tuple(layer["kernel_shape"]),
+                tuple(layer["strides"]),
+                tuple(layer["pads"]),
+                (1, 1),
+            )
+            nxt = (c, oh, ow)
+        elif layer["op"] == "Gemm":
+            k = int(np.prod(shape))
+            nxt = (layer["cout"],)
+        else:
+            raise ValueError(f"unknown op {layer['op']}")
+        out.append((layer, shape, nxt))
+        shape = nxt
+    return out
+
+
+def param_specs(topo, quantized_model=False):
+    """Ordered (name, shape, dtype) list for the flat HLO parameter list."""
+    specs = []
+    for idx, (layer, ishape, _) in enumerate(layer_shapes(topo)):
+        if layer["op"] == "Conv":
+            cin = ishape[0]
+            kh, kw = layer["kernel_shape"]
+            wdt = "int8" if quantized_model else "float32"
+            bdt = "int32" if quantized_model else "float32"
+            specs.append((f"l{idx}_w", (layer["cout"], cin, kh, kw), wdt))
+            specs.append((f"l{idx}_b", (layer["cout"],), bdt))
+        elif layer["op"] == "Gemm":
+            k = int(np.prod(ishape))
+            wdt = "int8" if quantized_model else "float32"
+            bdt = "int32" if quantized_model else "float32"
+            specs.append((f"l{idx}_w", (layer["cout"], k), wdt))
+            specs.append((f"l{idx}_b", (layer["cout"],), bdt))
+    return specs
+
+
+def init_params(topo, seed=0, quantized_model=False, qcfg=DEFAULT_QCFG):
+    """Synthetic He-scaled weights (the repo has no ImageNet checkpoints;
+    see DESIGN.md §2 substitution table)."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape, dtype in param_specs(topo, quantized_model=False):
+        if name.endswith("_w"):
+            fan_in = int(np.prod(shape[1:]))
+            arr = rng.normal(0.0, np.sqrt(2.0 / fan_in), size=shape).astype(np.float32)
+        else:
+            arr = rng.normal(0.0, 0.05, size=shape).astype(np.float32)
+        params.append(arr)
+    if not quantized_model:
+        return params
+    qparams = []
+    m_acc = qcfg["m_in"] + qcfg["m_w"]
+    for arr, (name, _, _) in zip(params, param_specs(topo, quantized_model=False)):
+        if name.endswith("_w"):
+            qparams.append(np.asarray(ref.quantize(arr, qcfg["m_w"])))
+        else:
+            qparams.append(np.asarray(ref.quantize(arr, m_acc, bits=32)))
+    return qparams
+
+
+# ---------------------------------------------------------------------------
+# Forward builders
+# ---------------------------------------------------------------------------
+
+
+def build_forward(topo, ni=16, nl=32, use_pallas=True):
+    """float32 forward: image (C,H,W) + flat params -> (logits or probs,).
+
+    ``use_pallas=False`` swaps in the pure-jnp reference ops — the oracle
+    variant used by goldens and by the L2 fusion census in the perf pass.
+    """
+    shapes = layer_shapes(topo)
+
+    def forward(x, *params):
+        it = iter(params)
+        for layer, _, _ in shapes:
+            if layer["op"] == "Conv":
+                w, b = next(it), next(it)
+                if use_pallas:
+                    x = conv_lane.conv2d_lanes(
+                        x,
+                        w,
+                        b,
+                        stride=tuple(layer["strides"]),
+                        pad=tuple(layer["pads"]),
+                        dilation=tuple(layer["dilations"]),
+                        ni=ni,
+                        nl=nl,
+                        apply_relu=layer["relu"],
+                    )
+                else:
+                    x = ref.conv2d(
+                        x,
+                        w,
+                        b,
+                        stride=tuple(layer["strides"]),
+                        pad=tuple(layer["pads"]),
+                        dilation=tuple(layer["dilations"]),
+                    )
+                    if layer["relu"]:
+                        x = ref.relu(x)
+            elif layer["op"] == "MaxPool":
+                if use_pallas:
+                    x = pool.maxpool2d_lanes(
+                        x,
+                        tuple(layer["kernel_shape"]),
+                        tuple(layer["strides"]),
+                        tuple(layer["pads"]),
+                        nl=nl,
+                    )
+                else:
+                    x = ref.maxpool2d(
+                        x,
+                        tuple(layer["kernel_shape"]),
+                        tuple(layer["strides"]),
+                        tuple(layer["pads"]),
+                    )
+            elif layer["op"] == "Gemm":
+                w, b = next(it), next(it)
+                x = x.reshape(-1)
+                if use_pallas:
+                    x = conv_lane.gemm_lanes(x, w, b, ni=ni, nl=nl, apply_relu=layer["relu"])
+                else:
+                    x = ref.gemm(x, w, b)
+                    if layer["relu"]:
+                        x = ref.relu(x)
+        if topo.get("softmax"):
+            x = ref.softmax(x)
+        return (x,)
+
+    return forward
+
+
+def build_forward_int8(topo, ni=16, nl=32, qcfg=DEFAULT_QCFG, use_pallas=True):
+    """int8 fixed-point forward: image codes (int8) + int8/int32 params ->
+    (int8 feature codes of the last layer,).  Softmax stays off the FPGA
+    datapath (the paper's host applies it), so the quantized graph returns
+    the final layer codes."""
+    shapes = layer_shapes(topo)
+
+    def forward(xq, *params):
+        it = iter(params)
+        for layer, _, _ in shapes:
+            if layer["op"] == "Conv":
+                wq, bq = next(it), next(it)
+                fn = quantized.qconv2d_lanes if use_pallas else ref.qconv2d
+                kwargs = dict(ni=ni, nl=nl) if use_pallas else {}
+                xq = fn(
+                    xq,
+                    wq,
+                    bq,
+                    qcfg,
+                    stride=tuple(layer["strides"]),
+                    pad=tuple(layer["pads"]),
+                    dilation=tuple(layer["dilations"]),
+                    apply_relu=layer["relu"],
+                    **kwargs,
+                )
+            elif layer["op"] == "MaxPool":
+                xq = quantized.qmaxpool2d(
+                    xq,
+                    tuple(layer["kernel_shape"]),
+                    tuple(layer["strides"]),
+                    tuple(layer["pads"]),
+                )
+            elif layer["op"] == "Gemm":
+                wq, bq = next(it), next(it)
+                xq = xq.reshape(-1)
+                if use_pallas:
+                    xq = quantized.qgemm_lanes(
+                        xq, wq, bq, qcfg, ni=ni, nl=nl, apply_relu=layer["relu"]
+                    )
+                else:
+                    xq = ref.qgemm(xq, wq, bq, qcfg, apply_relu=layer["relu"])
+        return (xq,)
+
+    return forward
+
+
+# ---------------------------------------------------------------------------
+# Op/parameter census (used by metrics tests and the perf pass)
+# ---------------------------------------------------------------------------
+
+
+def gops(topo):
+    """Total Giga-operations per frame, counting MAC=2 ops like the paper
+    (AlexNet ~1.46 GOp, VGG-16 ~31 GOp at batch 1)."""
+    total = 0
+    for layer, ishape, oshape in layer_shapes(topo):
+        if layer["op"] == "Conv":
+            cin = ishape[0]
+            kh, kw = layer["kernel_shape"]
+            macs = oshape[0] * oshape[1] * oshape[2] * cin * kh * kw
+            total += 2 * macs
+        elif layer["op"] == "Gemm":
+            total += 2 * int(np.prod(ishape)) * layer["cout"]
+    return total / 1e9
+
+
+def param_count(topo):
+    return sum(int(np.prod(s)) for _, s, _ in param_specs(topo))

@@ -1,0 +1,89 @@
+"""AOT pipeline tests: HLO text well-formedness, manifest consistency,
+golden round-trip, ONNX-subset export structure."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import aot, model as M
+
+REPO = Path(__file__).resolve().parents[2]
+ART = REPO / "artifacts"
+
+
+def test_lower_tiny_produces_hlo_text():
+    _, _, exposed, (ishape, idt), qcfg, hlo = aot.lower_model("tiny", 8, 8)
+    assert hlo.startswith("HloModule")
+    assert "ENTRY" in hlo
+    assert idt == "float32" and qcfg is None
+    # parameter count: image + (w, b) per learnable layer
+    assert len(exposed) == 2 * sum(
+        1 for l in M.tiny_topology()["layers"] if l["op"] in ("Conv", "Gemm")
+    )
+
+
+def test_lower_tiny_int8_exposes_int32_boundary():
+    _, _, exposed, (ishape, idt), qcfg, hlo = aot.lower_model("tiny_int8", 8, 8)
+    assert idt == "int32"
+    assert all(d == "int32" for _, _, d in exposed)
+    assert qcfg == M.DEFAULT_QCFG
+    assert "s8" in hlo, "int8 codes must appear inside the quantized graph"
+
+
+def test_golden_replay_in_python():
+    """The golden file must reproduce through an independent forward pass."""
+    topo = M.tiny_topology()
+    x, params = aot.make_inputs("tiny", topo)
+    fwd = M.build_forward(topo, ni=16, nl=32)
+    out = np.asarray(fwd(jnp.asarray(x), *[jnp.asarray(p) for p in params])[0])
+    out2 = np.asarray(fwd(jnp.asarray(x), *[jnp.asarray(p) for p in params])[0])
+    np.testing.assert_array_equal(out, out2)  # determinism
+    assert abs(float(out.sum()) - 1.0) < 1e-5
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_consistent_with_files():
+    man = json.loads((ART / "manifest.json").read_text())
+    assert man["format"] == "cnn2gate-artifacts-v1"
+    for name, entry in man["models"].items():
+        assert (ART / entry["hlo"]).exists(), f"{name} hlo missing"
+        text = (ART / entry["hlo"]).read_text()
+        assert text.startswith("HloModule")
+        if "golden" in entry:
+            g = entry["golden"]
+            assert (ART / g["file"]).stat().st_size == g["nbytes"]
+            # offsets are sorted & within the file
+            offs = [a["offset"] for a in g["arrays"]]
+            assert offs == sorted(offs) and offs[0] == 0
+
+
+@pytest.mark.skipif(not (ART / "models/lenet5.json").exists(), reason="run `make artifacts` first")
+def test_onnx_subset_export_structure():
+    doc = json.loads((ART / "models/lenet5.json").read_text())
+    assert doc["format"] == "cnn2gate-onnx-subset-v1"
+    ops = [n["op_type"] for n in doc["nodes"]]
+    assert ops.count("Conv") == 2 and ops.count("Gemm") == 3
+    assert ops.count("MaxPool") == 2 and ops[-1] == "Softmax"
+    # every initializer referenced by some node, offsets contiguous
+    referenced = {i for n in doc["nodes"] for i in n["inputs"]}
+    offset = 0
+    for init in doc["initializers"]:
+        assert init["name"] in referenced
+        assert init["offset"] == offset
+        offset += init["nbytes"]
+    bin_path = ART / "models" / doc["external_data"]
+    assert bin_path.stat().st_size == offset
+
+
+@pytest.mark.skipif(not (ART / "models/vgg16.json").exists(), reason="run `make artifacts` first")
+def test_onnx_subset_large_models_have_no_external_data():
+    doc = json.loads((ART / "models/vgg16.json").read_text())
+    assert doc["external_data"] is None
+    assert len([n for n in doc["nodes"] if n["op_type"] == "Conv"]) == 13

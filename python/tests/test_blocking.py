@@ -1,0 +1,76 @@
+"""L1 tile-policy tests: the (N_i, N_l) -> BlockSpec mapping that carries
+the paper's hardware semantics onto the MXU (DESIGN.md §4, §9)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv_lane import (
+    LANE_TILE_M,
+    MAX_LANE_GROUPS,
+    MAX_VEC_STEPS,
+    block_sizes,
+    lane_tile_shapes,
+)
+
+settings.register_profile("repo", max_examples=50, deadline=None)
+settings.load_profile("repo")
+
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+@given(
+    m=st.integers(1, 60000),
+    k=st.integers(1, 9216),
+    n=st.integers(1, 4096),
+    ni=st.sampled_from([4, 8, 16]),
+    nl=st.sampled_from([4, 8, 16, 32]),
+)
+def test_block_sizes_respect_lane_granularity(m, k, n, ni, nl):
+    bm, bk, bn = block_sizes(m, k, n, ni, nl)
+    # paper semantics: tiles are whole numbers of N_i vectors / N_l lanes
+    assert bk % ni == 0
+    assert bn % nl == 0
+    # caps
+    assert bk <= ni * MAX_VEC_STEPS
+    assert bn <= nl * MAX_LANE_GROUPS
+    assert 8 <= bm <= max(8, LANE_TILE_M)
+    # tiles never larger than the (padded) problem needs
+    assert bk <= ((k + ni - 1) // ni) * ni
+    assert bn <= ((n + nl - 1) // nl) * nl
+
+
+@given(
+    k=st.integers(1, 9216),
+    n=st.integers(1, 4096),
+    ni=st.sampled_from([4, 8, 16]),
+    nl=st.sampled_from([4, 8, 16, 32]),
+)
+def test_vmem_budget_for_paper_options(k, n, ni, nl):
+    """DESIGN.md §9: the working set of one tile (A + B + O, f32) must fit
+    a 16 MB VMEM with double-buffering headroom (x2)."""
+    bm, bk, bn = lane_tile_shapes(ni, nl, k, n)
+    working = 4 * (bm * bk + bk * bn + bm * bn)
+    assert 2 * working <= VMEM_BYTES, f"tile ({bm},{bk},{bn}) blows VMEM"
+
+
+def test_paper_option_tiles_are_mxu_aligned():
+    # at the paper's Arria 10 option, tiles cover full 128x128 MXU tiles
+    bm, bk, bn = lane_tile_shapes(16, 32, k=1728, n=384)
+    assert bm % 128 == 0
+    assert bk % 16 == 0 and bk >= 128
+    assert bn % 32 == 0 and bn >= 128
+
+
+def test_grid_step_budget_for_vgg_worst_layer():
+    """Perf regression guard (EXPERIMENTS.md §Perf): VGG conv1_2
+    (M=50176, K=576, N=64) must lower to a small grid — the 90 s/layer
+    pathology came from a 1960-step grid."""
+    m, k, n = 50176, 576, 64
+    bm, bk, bn = block_sizes(m, k, n, 16, 32)
+    steps = -(-m // bm) * -(-k // bk) * -(-n // bn)
+    assert steps <= 32, f"{steps} grid steps"

@@ -1,0 +1,235 @@
+"""Pallas kernel vs pure-jnp reference — the CORE correctness signal.
+
+hypothesis sweeps shapes, strides, pads, dilations and the (N_i, N_l)
+lane options; every property asserts allclose (float) or exact equality
+(fixed point) against compile.kernels.ref.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import conv_lane, pool, quantized, ref
+
+settings.register_profile("repo", max_examples=25, deadline=None)
+settings.load_profile("repo")
+
+
+def _f32(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# matmul lane kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 96),
+    n=st.integers(1, 80),
+    ni=st.sampled_from([4, 8, 16]),
+    nl=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_lanes_matches_ref(m, k, n, ni, nl, seed):
+    rng = np.random.default_rng(seed)
+    a = _f32(rng, (m, k))
+    b = _f32(rng, (k, n))
+    got = conv_lane.matmul_lanes(a, b, ni=ni, nl=nl)
+    exp = ref.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    ni=st.sampled_from([4, 8, 16]),
+    nl=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_lanes_exact(m, k, n, ni, nl, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-128, 128, size=(m, k), dtype=np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n), dtype=np.int8))
+    got = quantized.qmatmul_lanes(a, b, ni=ni, nl=nl)
+    exp = a.astype(jnp.int32) @ b.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+# ---------------------------------------------------------------------------
+# conv lane kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 12),
+    hw=st.integers(5, 20),
+    k=st.sampled_from([1, 3, 5]),
+    s=st.sampled_from([1, 2, 3]),
+    p=st.sampled_from([0, 1, 2]),
+    d=st.sampled_from([1, 2]),
+    ni=st.sampled_from([4, 8]),
+    nl=st.sampled_from([4, 8]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_lanes_matches_ref(cin, cout, hw, k, s, p, d, ni, nl, relu, seed):
+    if hw + 2 * p < d * (k - 1) + 1:
+        return  # degenerate: no output pixels
+    rng = np.random.default_rng(seed)
+    x = _f32(rng, (cin, hw, hw + 1))
+    w = _f32(rng, (cout, cin, k, k), scale=0.5)
+    b = _f32(rng, (cout,))
+    got = conv_lane.conv2d_lanes(
+        x, w, b, stride=(s, s), pad=(p, p), dilation=(d, d), ni=ni, nl=nl, apply_relu=relu
+    )
+    exp = ref.conv2d(x, w, b, stride=(s, s), pad=(p, p), dilation=(d, d))
+    if relu:
+        exp = ref.relu(exp)
+    assert got.shape == exp.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-3, atol=1e-3)
+
+
+@given(
+    n=st.integers(1, 64),
+    k=st.integers(1, 128),
+    ni=st.sampled_from([4, 16]),
+    nl=st.sampled_from([8, 32]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_lanes_matches_ref(n, k, ni, nl, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = _f32(rng, (k,))
+    w = _f32(rng, (n, k))
+    b = _f32(rng, (n,))
+    got = conv_lane.gemm_lanes(x, w, b, ni=ni, nl=nl, apply_relu=relu)
+    exp = ref.gemm(x, w, b)
+    if relu:
+        exp = ref.relu(exp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pool kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    c=st.integers(1, 10),
+    hw=st.integers(4, 24),
+    k=st.sampled_from([2, 3]),
+    s=st.sampled_from([1, 2, 3]),
+    p=st.sampled_from([0, 1]),
+    nl=st.sampled_from([2, 4, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_lanes_matches_ref(c, hw, k, s, p, nl, seed):
+    if p >= k:  # XLA forbids pad >= window
+        return
+    rng = np.random.default_rng(seed)
+    x = _f32(rng, (c, hw, hw))
+    got = pool.maxpool2d_lanes(x, (k, k), (s, s), (p, p), nl=nl)
+    exp = ref.maxpool2d(x, (k, k), (s, s), (p, p))
+    assert got.shape == exp.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+# ---------------------------------------------------------------------------
+# quantized conv / gemm (exact fixed-point equality)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 8),
+    hw=st.integers(5, 14),
+    k=st.sampled_from([1, 3]),
+    s=st.sampled_from([1, 2]),
+    p=st.sampled_from([0, 1]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qconv2d_lanes_exact(cin, cout, hw, k, s, p, relu, seed):
+    rng = np.random.default_rng(seed)
+    cfg = dict(m_in=4, m_w=5, m_out=3)
+    xq = jnp.asarray(rng.integers(-128, 128, size=(cin, hw, hw), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-128, 128, size=(cout, cin, k, k), dtype=np.int8))
+    bq = jnp.asarray(rng.integers(-(2**15), 2**15, size=(cout,), dtype=np.int32))
+    got = quantized.qconv2d_lanes(
+        xq, wq, bq, cfg, stride=(s, s), pad=(p, p), ni=4, nl=4, apply_relu=relu
+    )
+    exp = ref.qconv2d(xq, wq, bq, cfg, stride=(s, s), pad=(p, p), apply_relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@given(
+    n=st.integers(1, 32),
+    k=st.integers(1, 64),
+    relu=st.booleans(),
+    m_out=st.integers(0, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qgemm_lanes_exact(n, k, relu, m_out, seed):
+    rng = np.random.default_rng(seed)
+    cfg = dict(m_in=4, m_w=5, m_out=m_out)
+    xq = jnp.asarray(rng.integers(-128, 128, size=(k,), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-128, 128, size=(n, k), dtype=np.int8))
+    bq = jnp.asarray(rng.integers(-(2**15), 2**15, size=(n,), dtype=np.int32))
+    got = quantized.qgemm_lanes(xq, wq, bq, cfg, ni=4, nl=4, apply_relu=relu)
+    exp = ref.qgemm(xq, wq, bq, cfg, apply_relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+# ---------------------------------------------------------------------------
+# fixed-point primitives (properties, not examples)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(0, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_saturates_and_bounds_error(m, seed):
+    rng = np.random.default_rng(seed)
+    x = _f32(rng, (64,), scale=10.0)
+    q = ref.quantize(x, m)
+    assert int(jnp.min(q)) >= -128 and int(jnp.max(q)) <= 127
+    deq = ref.dequantize(q, m)
+    # inside the representable range the error is bounded by half an LSB
+    inside = (x * 2.0**m > -128) & (x * 2.0**m < 127)
+    err = jnp.abs(deq - x) * inside
+    assert float(jnp.max(err)) <= 0.5 * 2.0**-m + 1e-6
+
+
+@given(
+    m_acc=st.integers(0, 20),
+    m_out=st.integers(0, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_requantize_monotone_and_saturating(m_acc, m_out, seed):
+    rng = np.random.default_rng(seed)
+    acc = jnp.asarray(np.sort(rng.integers(-(2**24), 2**24, size=(128,), dtype=np.int32)))
+    out = ref.requantize(acc, m_acc, m_out)
+    o = np.asarray(out, dtype=np.int32)
+    assert (np.diff(o) >= 0).all(), "requantize must be monotone"
+    assert o.min() >= -128 and o.max() <= 127
+
+
+def test_conv_out_hw_matches_paper_examples():
+    # AlexNet conv1: 224x224, k=11, s=4, p=2 -> 55x55
+    assert ref.conv_out_hw((224, 224), (11, 11), (4, 4), (2, 2), (1, 1)) == (55, 55)
+    # VGG conv: 224x224, k=3, s=1, p=1 -> 224x224
+    assert ref.conv_out_hw((224, 224), (3, 3), (1, 1), (1, 1), (1, 1)) == (224, 224)
+    # AlexNet pool: 55x55, k=3, s=2 -> 27x27
+    assert ref.conv_out_hw((55, 55), (3, 3), (2, 2), (0, 0), (1, 1)) == (27, 27)

@@ -1,0 +1,128 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline crate set).
+//!
+//! Grammar: `cnn2gate <subcommand> [--flag value]... [--switch]...`
+//! Unknown flags are rejected against a per-subcommand allowlist so typos
+//! fail loudly instead of silently using defaults.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (without the program name). `allowed` lists the legal
+    /// `--flag` names taking a value; `allowed_switches` the boolean ones.
+    pub fn parse(
+        argv: &[String],
+        allowed: &[&str],
+        allowed_switches: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument '{arg}'");
+            };
+            if allowed_switches.contains(&name) {
+                out.switches.push(name.to_string());
+            } else if allowed.contains(&name) {
+                let value = it
+                    .next()
+                    .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                out.flags.insert(name.to_string(), value.clone());
+            } else {
+                bail!(
+                    "unknown flag --{name} (value flags: {allowed:?}, switches: {allowed_switches:?})"
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(
+            &sv(&["synth", "--model", "alexnet", "--quantize"]),
+            &["model"],
+            &["quantize"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "synth");
+        assert_eq!(a.get("model"), Some("alexnet"));
+        assert!(a.has("quantize"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_flag() {
+        let err = Args::parse(&sv(&["x", "--bogus", "1"]), &["model"], &[]).unwrap_err();
+        assert!(err.to_string().contains("unknown flag"));
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        let err = Args::parse(&sv(&["x", "--model"]), &["model"], &[]).unwrap_err();
+        assert!(err.to_string().contains("needs a value"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&sv(&["x", "--n", "8", "--t", "2.5"]), &["n", "t"], &[]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 8);
+        assert_eq!(a.get_f64("t", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        let bad = Args::parse(&sv(&["x", "--n", "abc"]), &["n"], &[]).unwrap();
+        assert!(bad.get_usize("n", 0).is_err());
+    }
+}

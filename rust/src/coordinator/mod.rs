@@ -1,0 +1,13 @@
+//! L3 coordinator: the end-to-end CNN2Gate pipeline (paper Fig. 4a) and
+//! the batched emulation-inference server.
+//!
+//! `pipeline` wires front-end parsing → quantization → DSE → synthesis
+//! (simulated) → emulation (PJRT); `server` owns the compiled executable
+//! on a worker thread and serves inference requests over channels —
+//! the request path is pure Rust, Python compiled the artifacts once.
+
+pub mod pipeline;
+pub mod server;
+
+pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
+pub use server::{InferenceServer, ServerConfig, ServerStats};

@@ -1,0 +1,254 @@
+//! The end-to-end pipeline: everything CNN2Gate does for one model.
+//!
+//! parse (file or zoo) → validate → quantize (when weights are resident)
+//! → DSE + fit on the target device → simulated synthesis + latency →
+//! optional emulation-mode numerics check against the AOT artifacts.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::estimator::{device, Device, Thresholds};
+use crate::ir::Graph;
+use crate::onnx::{parser, zoo};
+use crate::quant::QuantSpec;
+use crate::runtime::{load_golden, Manifest, Runtime, Tensor};
+use crate::synth::{self, Explorer, SynthReport};
+use crate::ir::DType;
+
+/// What to run.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Zoo name ("alexnet") or a path ending in .json.
+    pub model: String,
+    /// Device fuzzy name ("arria10", "5csema5").
+    pub device: String,
+    pub explorer: Explorer,
+    pub thresholds: Thresholds,
+    /// Apply the default quantization spec when weights are present.
+    pub quantize: bool,
+    /// Artifacts dir for the emulation check (None skips it).
+    pub artifacts: Option<std::path::PathBuf>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            model: "alexnet".into(),
+            device: "arria10".into(),
+            explorer: Explorer::Reinforcement,
+            thresholds: Thresholds::default(),
+            quantize: false,
+            artifacts: None,
+        }
+    }
+}
+
+/// Emulation-mode outcome.
+#[derive(Debug, Clone)]
+pub struct EmulationResult {
+    pub model: String,
+    pub exec_seconds: f64,
+    /// Max |got - expected| when a golden was available.
+    pub golden_max_err: Option<f64>,
+}
+
+/// Everything the pipeline produced.
+#[derive(Debug)]
+pub struct PipelineResult {
+    pub graph: Graph,
+    pub synth: SynthReport,
+    pub emulation: Option<EmulationResult>,
+}
+
+/// Resolve a model argument into a graph: zoo name or ONNX-subset file.
+pub fn load_model(model: &str, with_weights: bool) -> Result<Graph> {
+    if model.ends_with(".json") {
+        parser::parse_file(Path::new(model))
+    } else {
+        zoo::build(model, with_weights)
+            .ok_or_else(|| anyhow!("unknown zoo model '{model}' (have {:?})", zoo::names()))
+    }
+}
+
+/// Resolve a device argument.
+pub fn load_device(name: &str) -> Result<&'static Device> {
+    device::find(name).ok_or_else(|| {
+        anyhow!(
+            "unknown device '{name}' (have {:?})",
+            device::all().iter().map(|d| d.name).collect::<Vec<_>>()
+        )
+    })
+}
+
+/// Run the full pipeline.
+pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineResult> {
+    let graph = load_model(&cfg.model, cfg.quantize)?;
+    let dev = load_device(&cfg.device)?;
+    let spec = QuantSpec::default();
+    let quant_spec = (cfg.quantize && graph.has_weights()).then_some(&spec);
+    let synth = synth::run(&graph, dev, cfg.explorer, cfg.thresholds, quant_spec)?;
+
+    let emulation = match &cfg.artifacts {
+        Some(dir) => run_emulation(dir, &graph.name)?,
+        None => None,
+    };
+
+    Ok(PipelineResult {
+        graph,
+        synth,
+        emulation,
+    })
+}
+
+/// Emulation mode: run the AOT HLO through PJRT; replay the golden when
+/// one exists (small models), otherwise run with the golden-less path
+/// skipped (large models are timed by `examples/` with synthetic weights).
+pub fn run_emulation(dir: &Path, model: &str) -> Result<Option<EmulationResult>> {
+    let manifest = Manifest::load(dir)?;
+    let Some(art) = manifest.model(model) else {
+        return Ok(None);
+    };
+    let Some(golden) = &art.golden else {
+        return Ok(None);
+    };
+    let golden = load_golden(golden)?;
+    let rt = Runtime::cpu()?;
+    let compiled = rt.load_artifact(art)?;
+    let mut inputs = vec![golden.input.clone()];
+    inputs.extend(golden.params.iter().cloned());
+    let out_dtype = if art.quantization.is_some() {
+        DType::I32
+    } else {
+        DType::F32
+    };
+    let out = compiled.run(&inputs, out_dtype)?;
+    let max_err = match (&out.tensor, &golden.expected) {
+        (Tensor::F32(_, got), Tensor::F32(_, want)) => got
+            .iter()
+            .zip(want)
+            .map(|(g, w)| (g - w).abs() as f64)
+            .fold(0.0, f64::max),
+        (Tensor::I32(_, got), Tensor::I32(_, want)) => got
+            .iter()
+            .zip(want)
+            .map(|(g, w)| (g - w).abs() as f64)
+            .fold(0.0, f64::max),
+        _ => return Err(anyhow!("golden dtype mismatch")),
+    };
+    Ok(Some(EmulationResult {
+        model: model.to_string(),
+        exec_seconds: out.exec_seconds,
+        golden_max_err: Some(max_err),
+    }))
+}
+
+/// Deterministic synthetic weights matching an artifact's parameter list
+/// (the paper's emulation timing runs don't need trained weights — see
+/// DESIGN.md §2 substitution table).
+pub fn synthetic_weights(art: &crate::runtime::ModelArtifact, seed: u64) -> Vec<Tensor> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    art.params
+        .iter()
+        .map(|p| match p.dtype {
+            DType::F32 => {
+                let fan_in: usize = p.shape.iter().skip(1).product::<usize>().max(1);
+                Tensor::F32(p.shape.clone(), rng.he_weights(p.numel(), fan_in))
+            }
+            // int8-variant params cross the PJRT boundary as int32 codes
+            DType::I32 | DType::I8 => Tensor::I32(
+                p.shape.clone(),
+                (0..p.numel())
+                    .map(|_| rng.range_i64(-128, 127) as i32)
+                    .collect(),
+            ),
+        })
+        .collect()
+}
+
+/// Time one emulation-mode inference with synthetic weights (Table 1's
+/// CPU column for the large models). Returns seconds per frame averaged
+/// over `frames` runs after one warm-up.
+pub fn time_emulation_synthetic(
+    art: &crate::runtime::ModelArtifact,
+    frames: usize,
+) -> Result<f64> {
+    let rt = Runtime::cpu()?;
+    let compiled = rt.load_artifact(art)?;
+    let mut rng = crate::util::rng::Rng::new(3);
+    let numel = art.input.numel();
+    let input = match art.input.dtype {
+        DType::F32 => Tensor::F32(art.input.shape.clone(), rng.tensor_f32(numel)),
+        _ => Tensor::I32(
+            art.input.shape.clone(),
+            (0..numel).map(|_| rng.range_i64(-128, 127) as i32).collect(),
+        ),
+    };
+    let mut inputs = vec![input];
+    inputs.extend(synthetic_weights(art, 7));
+    let out_dtype = if art.quantization.is_some() {
+        DType::I32
+    } else {
+        DType::F32
+    };
+    compiled.run(&inputs, out_dtype)?; // warm-up (compile caches etc.)
+    let t0 = std::time::Instant::now();
+    for _ in 0..frames.max(1) {
+        compiled.run(&inputs, out_dtype)?;
+    }
+    Ok(t0.elapsed().as_secs_f64() / frames.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ComputationFlow;
+
+    #[test]
+    fn zoo_pipeline_runs_end_to_end() {
+        let cfg = PipelineConfig {
+            model: "alexnet".into(),
+            device: "arria10".into(),
+            quantize: true,
+            ..PipelineConfig::default()
+        };
+        let res = run_pipeline(&cfg).unwrap();
+        assert!(res.synth.fits());
+        assert_eq!(res.synth.option(), Some((16, 32)));
+        assert!(res.synth.quant.is_some());
+    }
+
+    #[test]
+    fn unknown_model_and_device_error_clearly() {
+        assert!(load_model("resnet152", false).is_err());
+        assert!(load_device("virtex9").is_err());
+    }
+
+    #[test]
+    fn parses_exported_onnx_subset_when_present() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/models/lenet5.json");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let g = load_model(path.to_str().unwrap(), false).unwrap();
+        assert_eq!(g.name, "lenet5");
+        assert!(g.has_weights(), "lenet5 export carries external data");
+        let flow = ComputationFlow::extract(&g).unwrap();
+        assert_eq!(flow.layers.len(), 5); // 2 conv+pool + 3 fc
+    }
+
+    #[test]
+    fn emulation_with_goldens_when_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let res = run_emulation(&dir, "lenet5").unwrap().unwrap();
+        assert!(res.golden_max_err.unwrap() < 1e-4);
+        // int8 variant must be exact
+        let res8 = run_emulation(&dir, "lenet5_int8").unwrap().unwrap();
+        assert_eq!(res8.golden_max_err.unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,292 @@
+//! Batched emulation-inference server.
+//!
+//! The OpenCL host program of the paper owns the FPGA command queues; our
+//! analogue owns the compiled PJRT executable on a dedicated worker
+//! thread and serves requests over channels (std::thread + mpsc — tokio
+//! is not in the offline crate set, and PJRT's client types are !Send, so
+//! a single-owner worker loop is the only sound threading model anyway:
+//! the client is created and compiled *inside* the worker).
+//!
+//! Requests are micro-batched: the worker drains up to `max_batch`
+//! queued requests before executing them back-to-back, which amortizes
+//! dispatch overhead the same way the FPGA host amortizes DMA setup.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::DType;
+use crate::metrics::LatencyStats;
+use crate::runtime::{ModelArtifact, Runtime, Tensor};
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max requests drained per batch.
+    pub max_batch: usize,
+    /// Queue capacity before submitters block.
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            queue_depth: 64,
+        }
+    }
+}
+
+struct Request {
+    input: Tensor,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<Reply>>,
+}
+
+/// One served inference.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub output: Tensor,
+    /// Pure PJRT execute time.
+    pub exec_seconds: f64,
+    /// Queue + batch + execute time, as the client saw it.
+    pub e2e_seconds: f64,
+}
+
+/// Aggregate statistics over the server's lifetime.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub served: usize,
+    pub batches: usize,
+    pub exec: LatencyStats,
+    pub e2e: LatencyStats,
+}
+
+/// A running server bound to one model variant.
+pub struct InferenceServer {
+    tx: Option<mpsc::SyncSender<Request>>,
+    worker: Option<JoinHandle<(Vec<f64>, Vec<f64>, usize)>>,
+    out_dtype: DType,
+}
+
+impl InferenceServer {
+    /// Start the worker: it creates the PJRT client, compiles the
+    /// artifact, reports readiness, then serves. Weights are fixed at
+    /// startup (they are part of the served model), so requests carry
+    /// only the image tensor.
+    pub fn start(art: &ModelArtifact, weights: Vec<Tensor>, cfg: ServerConfig) -> Result<Self> {
+        if weights.len() != art.params.len() {
+            return Err(anyhow!(
+                "expected {} weight tensors, got {}",
+                art.params.len(),
+                weights.len()
+            ));
+        }
+        let out_dtype = if art.quantization.is_some() {
+            DType::I32
+        } else {
+            DType::F32
+        };
+        let hlo_path = art.hlo_path.clone();
+        let name = art.name.clone();
+        let arity = 1 + art.params.len();
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let max_batch = cfg.max_batch.max(1);
+        let worker = std::thread::spawn(move || {
+            let mut exec_samples = Vec::new();
+            let mut e2e_samples = Vec::new();
+            let mut batches = 0usize;
+            // PJRT client + executable live entirely on this thread
+            let setup = Runtime::cpu()
+                .and_then(|rt| rt.load_hlo_text(&hlo_path, &name, arity).map(|c| (rt, c)));
+            let (_rt, compiled) = match setup {
+                Ok(pair) => {
+                    let _ = ready_tx.send(Ok(()));
+                    pair
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return (exec_samples, e2e_samples, batches);
+                }
+            };
+            while let Ok(first) = rx.recv() {
+                // drain a micro-batch
+                let mut batch = vec![first];
+                while batch.len() < max_batch {
+                    match rx.try_recv() {
+                        Ok(req) => batch.push(req),
+                        Err(_) => break,
+                    }
+                }
+                batches += 1;
+                for req in batch {
+                    let mut inputs = vec![req.input.clone()];
+                    inputs.extend(weights.iter().cloned());
+                    let result = compiled.run(&inputs, out_dtype).map(|out| {
+                        let e2e = req.enqueued.elapsed().as_secs_f64();
+                        exec_samples.push(out.exec_seconds);
+                        e2e_samples.push(e2e);
+                        Reply {
+                            output: out.tensor,
+                            exec_seconds: out.exec_seconds,
+                            e2e_seconds: e2e,
+                        }
+                    });
+                    let _ = req.reply.send(result);
+                }
+            }
+            (exec_samples, e2e_samples, batches)
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(InferenceServer {
+                tx: Some(tx),
+                worker: Some(worker),
+                out_dtype,
+            }),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => Err(anyhow!("server worker died during startup")),
+        }
+    }
+
+    pub fn out_dtype(&self) -> DType {
+        self.out_dtype
+    }
+
+    /// Submit one image and wait for the reply (blocking client call).
+    pub fn infer(&self, input: Tensor) -> Result<Reply> {
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("server stopped"))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(Request {
+            input,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        })
+        .map_err(|_| anyhow!("server stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("server dropped reply"))?
+    }
+
+    /// Stop the worker and collect statistics.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.tx.take(); // close the queue; worker loop exits
+        let (exec, e2e, batches) = self
+            .worker
+            .take()
+            .expect("worker present")
+            .join()
+            .expect("worker panicked");
+        ServerStats {
+            served: exec.len(),
+            batches,
+            exec: LatencyStats::from_seconds(&exec),
+            e2e: LatencyStats::from_seconds(&e2e),
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{load_golden, Manifest};
+    use std::path::Path;
+
+    fn artifacts() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn serves_golden_requests_batched() {
+        let Some(manifest) = artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let art = manifest.model("tiny").unwrap();
+        let golden = load_golden(art.golden.as_ref().unwrap()).unwrap();
+        let server =
+            InferenceServer::start(art, golden.params.clone(), ServerConfig::default()).unwrap();
+        let n = 12;
+        for _ in 0..n {
+            let reply = server.infer(golden.input.clone()).unwrap();
+            let got = reply.output.as_f32().unwrap();
+            let want = golden.expected.as_f32().unwrap();
+            for (g, w) in got.iter().zip(want) {
+                assert!((g - w).abs() < 1e-5);
+            }
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, n);
+        assert!(stats.exec.p50_ms > 0.0);
+    }
+
+    #[test]
+    fn rejects_weight_arity_mismatch() {
+        let Some(manifest) = artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let art = manifest.model("tiny").unwrap();
+        let err = match InferenceServer::start(art, vec![], ServerConfig::default()) {
+            Err(e) => e,
+            Ok(_) => panic!("arity mismatch accepted"),
+        };
+        assert!(err.to_string().contains("weight tensors"));
+    }
+
+    #[test]
+    fn startup_error_propagates() {
+        let Some(manifest) = artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let mut art = manifest.model("tiny").unwrap().clone();
+        art.hlo_path = "/nonexistent/x.hlo.txt".into();
+        let golden = load_golden(manifest.model("tiny").unwrap().golden.as_ref().unwrap()).unwrap();
+        assert!(InferenceServer::start(&art, golden.params, ServerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let Some(manifest) = artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let art = manifest.model("tiny").unwrap();
+        let golden = load_golden(art.golden.as_ref().unwrap()).unwrap();
+        let server = std::sync::Arc::new(
+            InferenceServer::start(art, golden.params.clone(), ServerConfig::default()).unwrap(),
+        );
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = server.clone();
+            let input = golden.input.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..5 {
+                    s.infer(input.clone()).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let server = std::sync::Arc::into_inner(server).expect("sole owner");
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 20);
+    }
+}

@@ -1,0 +1,126 @@
+//! BF-DSE: brute-force design-space exploration (paper §4.3.1).
+//!
+//! "This method exhaustively searches for all possible pairs of N_l and
+//! N_i and finds the feasible option that maximizes FPGA resource
+//! utilization [= best throughput]. It is simple to execute and it
+//! always finds the best solutions."
+
+use std::time::Instant;
+
+use crate::estimator::{estimate, query_seconds, Device, ResourceEstimate, Thresholds};
+use crate::ir::ComputationFlow;
+
+use super::options::OptionSpace;
+use super::reward::RewardShaper;
+
+/// Outcome of a DSE run (shared by BF and RL).
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    /// H_best: the chosen (N_i, N_l), None when nothing fits.
+    pub best: Option<(usize, usize)>,
+    pub best_estimate: Option<ResourceEstimate>,
+    pub f_max: f64,
+    /// Number of estimator queries issued (unique compiler invocations).
+    pub queries: usize,
+    /// Actual wall time of the search.
+    pub wall_seconds: f64,
+    /// Modeled wall time had each query hit the real Intel compiler
+    /// (paper Table 2 time scale).
+    pub modeled_seconds: f64,
+    /// (ni, nl, f_avg, feasible) visit trace for reports/ablation.
+    pub trace: Vec<(usize, usize, f64, bool)>,
+}
+
+impl DseResult {
+    pub fn modeled_minutes(&self) -> f64 {
+        self.modeled_seconds / 60.0
+    }
+}
+
+/// Exhaustive search over the option grid.
+pub fn explore(
+    flow: &ComputationFlow,
+    device: &Device,
+    thresholds: Thresholds,
+) -> DseResult {
+    let t0 = Instant::now();
+    let space = OptionSpace::from_flow(flow);
+    let mut shaper = RewardShaper::new(thresholds);
+    let mut trace = Vec::with_capacity(space.len());
+    let mut queries = 0usize;
+    for (ni, nl) in space.pairs() {
+        let est = estimate(flow, device, ni, nl);
+        queries += 1;
+        let feasible = est.fits(&shaper.thresholds);
+        shaper.eval(&est);
+        trace.push((ni, nl, est.f_avg(), feasible));
+    }
+    DseResult {
+        best: shaper.h_best,
+        best_estimate: shaper.best_estimate,
+        f_max: shaper.f_max,
+        queries,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        modeled_seconds: queries as f64 * query_seconds(device),
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
+    use crate::onnx::zoo;
+
+    fn flow(name: &str) -> ComputationFlow {
+        ComputationFlow::extract(&zoo::build(name, false).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn arria10_picks_paper_option() {
+        let r = explore(&flow("alexnet"), &ARRIA_10_GX1150, Thresholds::default());
+        assert_eq!(r.best, Some((16, 32)), "trace: {:?}", r.trace);
+        assert_eq!(r.queries, 12);
+    }
+
+    #[test]
+    fn cyclone_v_picks_paper_option() {
+        let r = explore(&flow("alexnet"), &CYCLONE_V_5CSEMA5, Thresholds::default());
+        assert_eq!(r.best, Some((8, 8)), "trace: {:?}", r.trace);
+    }
+
+    #[test]
+    fn small_cyclone_reports_no_fit() {
+        let r = explore(&flow("alexnet"), &CYCLONE_V_5CSEMA4, Thresholds::default());
+        assert_eq!(r.best, None);
+        assert_eq!(r.f_max, 0.0);
+        assert!(r.trace.iter().all(|(_, _, _, feasible)| !feasible));
+    }
+
+    #[test]
+    fn vgg_on_arria_matches_paper_option() {
+        let r = explore(&flow("vgg16"), &ARRIA_10_GX1150, Thresholds::default());
+        assert_eq!(r.best, Some((16, 32)), "trace: {:?}", r.trace);
+    }
+
+    #[test]
+    fn modeled_time_in_paper_band() {
+        // Table 2: BF-DSE 3.5 min (Cyclone V), 4 min (Arria 10)
+        let cv = explore(&flow("alexnet"), &CYCLONE_V_5CSEMA5, Thresholds::default());
+        assert!((cv.modeled_minutes() - 3.5).abs() < 0.4, "{}", cv.modeled_minutes());
+        let a10 = explore(&flow("alexnet"), &ARRIA_10_GX1150, Thresholds::default());
+        assert!((a10.modeled_minutes() - 4.0).abs() < 0.4, "{}", a10.modeled_minutes());
+    }
+
+    #[test]
+    fn best_is_argmax_of_feasible_trace() {
+        let r = explore(&flow("alexnet"), &ARRIA_10_GX1150, Thresholds::default());
+        let best_in_trace = r
+            .trace
+            .iter()
+            .filter(|(_, _, _, feas)| *feas)
+            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .map(|(ni, nl, _, _)| (*ni, *nl));
+        assert_eq!(r.best, best_in_trace);
+    }
+}

@@ -1,0 +1,296 @@
+//! Joint RL agent: parallelism + quantization (paper §4.4's outlook).
+//!
+//! "The RL-DSE algorithm would be more valuable if it could be exploited
+//! in conjunction to the reinforcement learning quantization algorithms
+//! such as ReLeQ" — and §2 cites HAQ's hardware-aware action space. This
+//! module implements that suggested extension: one tabular Q-learning
+//! agent over the product space
+//!
+//! ```text
+//! (N_i option) x (N_l option) x (weight fraction bits m_w)
+//! ```
+//!
+//! with a composite reward that extends Algorithm 1:
+//!
+//! ```text
+//! infeasible                -> -1
+//! feasible, improves score  ->  β·F_avg − λ·E_q(m_w)
+//! feasible, no improvement  ->  0
+//! ```
+//!
+//! where `E_q(m_w)` is the measured mean quantization error of the
+//! model's weights at m_w (from [`crate::quant`]), normalized to the
+//! worst m in the sweep. λ trades silicon utilization against numeric
+//! fidelity exactly the way HAQ's accuracy term does.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::estimator::{estimate, query_seconds, Device, Thresholds};
+use crate::ir::{ComputationFlow, Graph};
+use crate::quant::{self, LayerQuant, QuantSpec};
+use crate::util::rng::Rng;
+
+use super::options::OptionSpace;
+
+/// m_w sweep range (8-bit codes admit at most 7 fraction bits).
+pub const M_MIN: i8 = 2;
+pub const M_MAX: i8 = 7;
+
+/// Joint agent configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct JointConfig {
+    pub gamma: f64,
+    pub alpha: f64,
+    pub epsilon: f64,
+    pub episodes: usize,
+    pub steps_per_episode: usize,
+    /// Weight of the quantization-error term (HAQ's accuracy trade-off).
+    pub lambda: f64,
+    pub seed: u64,
+}
+
+impl Default for JointConfig {
+    fn default() -> Self {
+        JointConfig {
+            gamma: 0.1,
+            alpha: 0.5,
+            epsilon: 0.35,
+            episodes: 6,
+            steps_per_episode: 10,
+            lambda: 0.5,
+            seed: 0x10177,
+        }
+    }
+}
+
+/// Result of a joint exploration.
+#[derive(Debug, Clone)]
+pub struct JointResult {
+    /// (N_i, N_l, m_w).
+    pub best: Option<(usize, usize, i8)>,
+    pub best_score: f64,
+    pub queries: usize,
+    pub wall_seconds: f64,
+    pub modeled_seconds: f64,
+    /// (ni, nl, m, score, feasible) visit trace.
+    pub trace: Vec<(usize, usize, i8, f64, bool)>,
+}
+
+/// Precompute the normalized quantization-error curve E_q(m) for the
+/// model's weights (0 = best m in sweep, 1 = worst).
+pub fn quant_error_curve(graph: &Graph) -> Result<Vec<(i8, f64)>, String> {
+    let mut raw = Vec::new();
+    for m in M_MIN..=M_MAX {
+        let spec = QuantSpec::uniform(LayerQuant {
+            m_in: 4,
+            m_w: m,
+            m_out: 4,
+        });
+        let rep = quant::apply(graph, &spec)?;
+        let mean = rep.tensors.iter().map(|t| t.mean_abs_err).sum::<f64>()
+            / rep.tensors.len() as f64;
+        // saturation is worse than rounding: penalize clipped codes hard
+        let sat = rep.worst_sat_ratio();
+        raw.push((m, mean + 10.0 * sat));
+    }
+    let worst = raw.iter().map(|(_, e)| *e).fold(f64::MIN, f64::max);
+    let best = raw.iter().map(|(_, e)| *e).fold(f64::MAX, f64::min);
+    let span = (worst - best).max(1e-12);
+    Ok(raw
+        .into_iter()
+        .map(|(m, e)| (m, (e - best) / span))
+        .collect())
+}
+
+const N_ACTIONS: usize = 5; // inc nl | inc ni | inc both | inc m | dec m
+
+/// Run the joint exploration.
+pub fn explore(
+    graph: &Graph,
+    flow: &ComputationFlow,
+    device: &Device,
+    thresholds: Thresholds,
+    cfg: JointConfig,
+) -> Result<JointResult, String> {
+    let t0 = Instant::now();
+    let space = OptionSpace::from_flow(flow);
+    let errs = quant_error_curve(graph)?;
+    let m_levels: Vec<i8> = errs.iter().map(|(m, _)| *m).collect();
+    let err_of = |mi: usize| errs[mi].1;
+    let (ni_n, nl_n, m_n) = (space.ni.len(), space.nl.len(), m_levels.len());
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut q = vec![[0f64; N_ACTIONS]; ni_n * nl_n * m_n];
+    let mut cache: HashMap<(usize, usize), f64> = HashMap::new(); // hw queries
+    let mut queries = 0usize;
+    let mut best: Option<(usize, usize, i8)> = None;
+    let mut best_score = f64::MIN;
+    let mut trace = Vec::new();
+
+    let mut visit = |i: usize, j: usize, mi: usize, queries: &mut usize| -> (f64, bool) {
+        let (ni, nl) = (space.ni[i], space.nl[j]);
+        let f_avg = *cache.entry((ni, nl)).or_insert_with(|| {
+            *queries += 1;
+            let est = estimate(flow, device, ni, nl);
+            if est.fits(&thresholds) {
+                est.f_avg()
+            } else {
+                f64::NAN // infeasible marker
+            }
+        });
+        if f_avg.is_nan() {
+            return (-1.0, false);
+        }
+        let score = super::reward::BETA * f_avg - cfg.lambda * err_of(mi);
+        (score, true)
+    };
+
+    for _ in 0..cfg.episodes {
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut mi = m_n / 2;
+        for _ in 0..cfg.steps_per_episode {
+            let s = (i * nl_n + j) * m_n + mi;
+            let a = if rng.next_f64() < cfg.epsilon {
+                rng.below(N_ACTIONS as u64) as usize
+            } else {
+                argmax_tiebreak(&q[s], &mut rng)
+            };
+            let (i2, j2, m2) = match a {
+                0 => (i, wrap(j + 1, nl_n), mi),
+                1 => (wrap(i + 1, ni_n), j, mi),
+                2 => (wrap(i + 1, ni_n), wrap(j + 1, nl_n), mi),
+                3 => (i, j, (mi + 1).min(m_n - 1)),
+                _ => (i, j, mi.saturating_sub(1)),
+            };
+            let (score, feasible) = visit(i2, j2, m2, &mut queries);
+            trace.push((space.ni[i2], space.nl[j2], m_levels[m2], score, feasible));
+            let reward = if !feasible {
+                -1.0
+            } else if score > best_score {
+                best_score = score;
+                best = Some((space.ni[i2], space.nl[j2], m_levels[m2]));
+                score
+            } else {
+                0.0
+            };
+            let s2 = (i2 * nl_n + j2) * m_n + m2;
+            let max_next = q[s2].iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            q[s][a] += cfg.alpha * (reward + cfg.gamma * max_next - q[s][a]);
+            (i, j, mi) = (i2, j2, m2);
+        }
+    }
+
+    Ok(JointResult {
+        best,
+        best_score,
+        queries,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        modeled_seconds: queries as f64 * query_seconds(device),
+        trace,
+    })
+}
+
+fn wrap(x: usize, n: usize) -> usize {
+    if x >= n {
+        0
+    } else {
+        x
+    }
+}
+
+fn argmax_tiebreak(xs: &[f64], rng: &mut Rng) -> usize {
+    let best = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let ties: Vec<usize> = (0..xs.len()).filter(|&i| xs[i] == best).collect();
+    *rng.choose(&ties)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4};
+    use crate::onnx::zoo;
+
+    fn setup(name: &str) -> (Graph, ComputationFlow) {
+        let g = zoo::build(name, true).unwrap();
+        let f = ComputationFlow::extract(&g).unwrap();
+        (g, f)
+    }
+
+    #[test]
+    fn error_curve_is_monotone_decreasing_until_saturation() {
+        let (g, _) = setup("lenet5");
+        let curve = quant_error_curve(&g).unwrap();
+        assert_eq!(curve.len(), (M_MAX - M_MIN + 1) as usize);
+        // normalized into [0, 1]
+        for (_, e) in &curve {
+            assert!((0.0..=1.0).contains(e));
+        }
+        // more fraction bits -> lower rounding error (He-scaled weights
+        // don't saturate below m=7 for LeNet)
+        let errs: Vec<f64> = curve.iter().map(|(_, e)| *e).collect();
+        assert!(errs[0] > errs[errs.len() - 1]);
+    }
+
+    #[test]
+    fn joint_agent_finds_parallel_and_precise_corner() {
+        let (g, f) = setup("lenet5");
+        let r = explore(&g, &f, &ARRIA_10_GX1150, Thresholds::default(), JointConfig::default())
+            .unwrap();
+        let (ni, nl, m) = r.best.expect("lenet5 fits");
+        // utilization term pushes to the grid max; error term to high m
+        assert!(m >= 5, "chose m_w={m}");
+        assert!(ni * nl >= 16, "chose ({ni},{nl})");
+    }
+
+    #[test]
+    fn lambda_zero_ignores_quantization() {
+        let (g, f) = setup("lenet5");
+        let cfg = JointConfig {
+            lambda: 0.0,
+            ..JointConfig::default()
+        };
+        let r = explore(&g, &f, &ARRIA_10_GX1150, Thresholds::default(), cfg).unwrap();
+        // score must equal β·F_avg of the best state: any m ties, agent
+        // keeps the first maximal F_avg it sees
+        assert!(r.best.is_some());
+        assert!(r.best_score > 0.0);
+    }
+
+    #[test]
+    fn infeasible_device_yields_none() {
+        let (g, f) = setup("alexnet");
+        let r = explore(
+            &g,
+            &f,
+            &CYCLONE_V_5CSEMA4,
+            Thresholds::default(),
+            JointConfig::default(),
+        )
+        .unwrap();
+        assert!(r.best.is_none());
+        assert!(r.trace.iter().all(|(_, _, _, _, feas)| !feas));
+    }
+
+    #[test]
+    fn higher_lambda_prefers_more_fraction_bits() {
+        let (g, f) = setup("lenet5");
+        let pick_m = |lambda: f64, seed: u64| -> i8 {
+            let cfg = JointConfig {
+                lambda,
+                seed,
+                ..JointConfig::default()
+            };
+            explore(&g, &f, &ARRIA_10_GX1150, Thresholds::default(), cfg)
+                .unwrap()
+                .best
+                .map(|(_, _, m)| m)
+                .unwrap_or(0)
+        };
+        // average over seeds to damp exploration noise
+        let avg = |lambda: f64| -> f64 {
+            (0..8).map(|s| pick_m(lambda, s) as f64).sum::<f64>() / 8.0
+        };
+        assert!(avg(2.0) >= avg(0.01) - 0.5, "λ=2 m̄={} vs λ≈0 m̄={}", avg(2.0), avg(0.01));
+    }
+}

@@ -1,0 +1,15 @@
+//! Hardware-aware design-space exploration (paper §4.3-4.4): option
+//! enumeration, Algorithm-1 reward shaping, brute-force and Q-learning
+//! explorers over the estimator feedback loop.
+
+pub mod brute;
+pub mod joint;
+pub mod options;
+pub mod reward;
+pub mod rl;
+
+pub use brute::DseResult;
+pub use options::OptionSpace;
+pub use reward::RewardShaper;
+pub use joint::{JointConfig, JointResult};
+pub use rl::RlConfig;

@@ -1,0 +1,155 @@
+//! (N_i, N_l) option-space enumeration (paper §4.2-4.3).
+//!
+//! "Arbitrary choices for N_l and N_i are not always possible. N_i should
+//! be a divisor of the features' width for all layers to avoid padding.
+//! Likewise, N_l should be a divisor of the number of features for all
+//! layers to avoid idle lanes."
+//!
+//! We enumerate power-of-two divisors of the gcd of the constraint dims
+//! (the PipeCNN kernels are generated with power-of-two vector widths),
+//! clamped to the practical range [4, 64]. The first conv round is
+//! excluded from the N_i constraint — its input is host-padded, exactly
+//! as PipeCNN zero-pads the 3-channel image layer.
+//!
+//! Two additional *hardware* caps bound the grid, and they are the reason
+//! the paper's Arria 10 run stops at (16, 32) with only ~30% of the chip
+//! used ("the design-space exploration algorithm ... has limited options
+//! to attempt using the hardware platform to its full extent", §5):
+//! `N_i` is bounded by the global-memory interface width (16 bytes per
+//! stream per cycle on these boards), and `N_l` by the pipe fan-out the
+//! OpenCL compiler will route (32).
+
+use crate::ir::ComputationFlow;
+
+pub const MIN_OPT: usize = 4;
+pub const MAX_OPT: usize = 64;
+/// Memory-interface cap on the fetch vector width.
+pub const MAX_NI: usize = 16;
+/// Pipe fan-out cap on the lane count.
+pub const MAX_NL: usize = 32;
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn gcd_all(xs: &[usize]) -> usize {
+    xs.iter().copied().fold(0, gcd)
+}
+
+/// Power-of-two divisors of `n` within `[MIN_OPT, cap]`; if `n` admits
+/// none (tiny models), fall back to `{MIN_OPT}` so the space is never
+/// empty.
+fn pow2_divisors(n: usize, cap: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut d = MIN_OPT;
+    while d <= cap {
+        if n % d == 0 {
+            out.push(d);
+        }
+        d *= 2;
+    }
+    if out.is_empty() {
+        out.push(MIN_OPT);
+    }
+    out
+}
+
+/// The legal option grid for one model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OptionSpace {
+    pub ni: Vec<usize>,
+    pub nl: Vec<usize>,
+}
+
+impl OptionSpace {
+    pub fn from_flow(flow: &ComputationFlow) -> OptionSpace {
+        let ni_g = gcd_all(&flow.ni_constraint_dims());
+        let nl_g = gcd_all(&flow.nl_constraint_dims());
+        OptionSpace {
+            ni: pow2_divisors(if ni_g == 0 { MAX_OPT } else { ni_g }, MAX_NI),
+            nl: pow2_divisors(if nl_g == 0 { MAX_OPT } else { nl_g }, MAX_NL),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ni.len() * self.nl.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, ni: usize, nl: usize) -> bool {
+        self.ni.contains(&ni) && self.nl.contains(&nl)
+    }
+
+    /// All (ni, nl) pairs, row-major.
+    pub fn pairs(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.len());
+        for &ni in &self.ni {
+            for &nl in &self.nl {
+                out.push((ni, nl));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::zoo;
+
+    fn space(name: &str) -> OptionSpace {
+        let g = zoo::build(name, false).unwrap();
+        OptionSpace::from_flow(&ComputationFlow::extract(&g).unwrap())
+    }
+
+    #[test]
+    fn alexnet_grid_includes_paper_points() {
+        let s = space("alexnet");
+        assert_eq!(s.ni, vec![4, 8, 16]); // capped by MAX_NI
+        assert_eq!(s.nl, vec![4, 8, 16, 32]); // capped by MAX_NL
+        assert_eq!(s.len(), 12); // the grid the paper's DSE timings imply
+        assert!(s.contains(16, 32)); // Arria 10 choice (grid max corner)
+        assert!(s.contains(8, 8)); // Cyclone V choice
+    }
+
+    #[test]
+    fn vgg_grid_admits_paper_choice() {
+        let s = space("vgg16");
+        assert!(s.contains(16, 32));
+        // VGG reduction dims are multiples of 576 = 2^6*9, features of 64
+        assert_eq!(s.ni, vec![4, 8, 16]);
+        assert_eq!(s.nl, vec![4, 8, 16, 32]);
+    }
+
+    #[test]
+    fn tiny_model_space_nonempty() {
+        let s = space("tiny");
+        assert!(!s.is_empty());
+        assert!(s.ni.iter().all(|&v| (MIN_OPT..=MAX_OPT).contains(&v)));
+    }
+
+    #[test]
+    fn pairs_cover_grid() {
+        let s = space("alexnet");
+        let pairs = s.pairs();
+        assert_eq!(pairs.len(), 12);
+        assert!(pairs.contains(&(16, 4)));
+        assert!(pairs.contains(&(4, 32)));
+    }
+
+    #[test]
+    fn gcd_helpers() {
+        assert_eq!(gcd(1600, 1728), 64);
+        assert_eq!(gcd_all(&[64, 192, 384, 256]), 64);
+        assert_eq!(pow2_divisors(64, 64), vec![4, 8, 16, 32, 64]);
+        assert_eq!(pow2_divisors(64, MAX_NI), vec![4, 8, 16]);
+        assert_eq!(pow2_divisors(3, 64), vec![MIN_OPT]); // fallback
+    }
+}

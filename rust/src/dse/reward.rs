@@ -1,0 +1,99 @@
+//! Reward shaping — paper Algorithm 1, verbatim.
+//!
+//! Feasible option improving the running max usage factor: `β·F_avg`;
+//! feasible but not improving: `0`; any quota over threshold: `-1`.
+//! β = 0.01 rescales percentages into [0, 1] (paper §4.4).
+
+use crate::estimator::{ResourceEstimate, Thresholds};
+
+pub const BETA: f64 = 0.01;
+
+/// Stateful reward shaper: tracks `F_max` and `H_best` across the
+/// exploration exactly like Algorithm 1's outputs.
+#[derive(Debug, Clone)]
+pub struct RewardShaper {
+    pub thresholds: Thresholds,
+    pub f_max: f64,
+    pub h_best: Option<(usize, usize)>,
+    pub best_estimate: Option<ResourceEstimate>,
+}
+
+impl RewardShaper {
+    pub fn new(thresholds: Thresholds) -> Self {
+        RewardShaper {
+            thresholds,
+            f_max: 0.0,
+            h_best: None,
+            best_estimate: None,
+        }
+    }
+
+    /// Algorithm 1. Returns the shaped reward for this estimate.
+    pub fn eval(&mut self, est: &ResourceEstimate) -> f64 {
+        if est.fits(&self.thresholds) {
+            let f_avg = est.f_avg();
+            if f_avg > self.f_max {
+                self.f_max = f_avg;
+                self.h_best = Some((est.ni, est.nl));
+                self.best_estimate = Some(est.clone());
+                BETA * f_avg
+            } else {
+                0.0
+            }
+        } else {
+            -1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::{estimate, device::ARRIA_10_GX1150, Thresholds};
+    use crate::ir::ComputationFlow;
+    use crate::onnx::zoo;
+
+    fn est(ni: usize, nl: usize) -> ResourceEstimate {
+        let g = zoo::build("alexnet", false).unwrap();
+        let flow = ComputationFlow::extract(&g).unwrap();
+        estimate(&flow, &ARRIA_10_GX1150, ni, nl)
+    }
+
+    #[test]
+    fn first_feasible_is_rewarded() {
+        let mut rs = RewardShaper::new(Thresholds::default());
+        let e = est(8, 8);
+        let r = rs.eval(&e);
+        assert!((r - BETA * e.f_avg()).abs() < 1e-12);
+        assert_eq!(rs.h_best, Some((8, 8)));
+    }
+
+    #[test]
+    fn non_improving_feasible_gets_zero() {
+        let mut rs = RewardShaper::new(Thresholds::default());
+        rs.eval(&est(16, 32));
+        assert_eq!(rs.eval(&est(4, 4)), 0.0);
+        assert_eq!(rs.h_best, Some((16, 32)));
+    }
+
+    #[test]
+    fn infeasible_gets_minus_one_and_does_not_update_best() {
+        let mut rs = RewardShaper::new(Thresholds {
+            lut: 10.0,
+            dsp: 10.0,
+            mem: 10.0,
+            reg: 10.0,
+        });
+        assert_eq!(rs.eval(&est(64, 64)), -1.0);
+        assert_eq!(rs.h_best, None);
+        assert_eq!(rs.f_max, 0.0);
+    }
+
+    #[test]
+    fn reward_is_in_unit_scale() {
+        // β converts percentage scale to [0, 1] (paper §4.4)
+        let mut rs = RewardShaper::new(Thresholds::default());
+        let r = rs.eval(&est(64, 64));
+        assert!(r <= 1.0 && r > -1.0 - 1e-12);
+    }
+}

@@ -1,0 +1,252 @@
+//! RL-DSE: reinforcement-learning design-space exploration (paper §4.4).
+//!
+//! A tabular Q-learning agent over the (N_i, N_l) option grid:
+//!
+//! * state  = (index into ni options, index into nl options)
+//! * actions = {increase N_l, increase N_i, increase both} — the paper's
+//!   action set; a variable that would exceed its maximum wraps to its
+//!   initial value ("the variable is reset to its initial value")
+//! * reward = Algorithm 1 (see [`super::reward`]), β = 0.01
+//! * discount γ = 0.1, time-limited episodes (paper cites [34])
+//!
+//! Estimator results are memoized: each *unique* option costs one
+//! (modeled) Intel-compiler query, which is what makes RL-DSE ~25%
+//! faster than BF-DSE on the paper's grid while still finding H_best.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::estimator::{estimate, query_seconds, Device, Thresholds};
+use crate::ir::ComputationFlow;
+use crate::util::rng::Rng;
+
+use super::brute::DseResult;
+use super::options::OptionSpace;
+use super::reward::RewardShaper;
+
+/// Hyper-parameters (paper values where given, conventional elsewhere).
+#[derive(Debug, Clone, Copy)]
+pub struct RlConfig {
+    /// Discount factor γ (paper: 0.1).
+    pub gamma: f64,
+    /// Learning rate α.
+    pub alpha: f64,
+    /// ε-greedy exploration rate.
+    pub epsilon: f64,
+    /// Time-limited episodes: iterations per episode.
+    pub steps_per_episode: usize,
+    /// Number of episodes.
+    pub episodes: usize,
+    /// PRNG seed (deterministic runs).
+    pub seed: u64,
+}
+
+impl Default for RlConfig {
+    fn default() -> Self {
+        RlConfig {
+            gamma: 0.1,
+            alpha: 0.5,
+            epsilon: 0.35,
+            steps_per_episode: 8,
+            episodes: 4,
+            seed: 0xD5E,
+        }
+    }
+}
+
+const N_ACTIONS: usize = 3; // inc nl | inc ni | inc both
+
+/// Run RL-DSE. Returns the same [`DseResult`] shape as BF-DSE.
+pub fn explore(
+    flow: &ComputationFlow,
+    device: &Device,
+    thresholds: Thresholds,
+    cfg: RlConfig,
+) -> DseResult {
+    let t0 = Instant::now();
+    let space = OptionSpace::from_flow(flow);
+    let (ni_n, nl_n) = (space.ni.len(), space.nl.len());
+    let mut rng = Rng::new(cfg.seed);
+    let mut q = vec![[0f64; N_ACTIONS]; ni_n * nl_n];
+    let mut shaper = RewardShaper::new(thresholds);
+    let mut cache: HashMap<(usize, usize), f64> = HashMap::new();
+    let mut trace = Vec::new();
+    let mut queries = 0usize;
+
+    // reward of *visiting* a state: query (memoized) + Algorithm 1
+    let mut visit = |i: usize,
+                     j: usize,
+                     shaper: &mut RewardShaper,
+                     queries: &mut usize,
+                     trace: &mut Vec<(usize, usize, f64, bool)>|
+     -> f64 {
+        let (ni, nl) = (space.ni[i], space.nl[j]);
+        if let Some(&r) = cache.get(&(ni, nl)) {
+            // revisits replay the shaped outcome without a compiler call;
+            // Algorithm 1 gives 0 for known-feasible non-improving states
+            return if r < 0.0 { -1.0 } else { 0.0 };
+        }
+        let est = estimate(flow, device, ni, nl);
+        *queries += 1;
+        let feasible = est.fits(&shaper.thresholds);
+        let r = shaper.eval(&est);
+        trace.push((ni, nl, est.f_avg(), feasible));
+        cache.insert((ni, nl), r);
+        r
+    };
+
+    for _episode in 0..cfg.episodes {
+        // "The agent starts from the minimum values of N_l and N_i."
+        let (mut i, mut j) = (0usize, 0usize);
+        visit(i, j, &mut shaper, &mut queries, &mut trace);
+        for _step in 0..cfg.steps_per_episode {
+            let s = i * nl_n + j;
+            let a = if rng.next_f64() < cfg.epsilon {
+                rng.below(N_ACTIONS as u64) as usize
+            } else {
+                argmax_tiebreak(&q[s], &mut rng)
+            };
+            // apply action with wraparound reset
+            let (ni2, nj2) = match a {
+                0 => (i, wrap(j + 1, nl_n)),
+                1 => (wrap(i + 1, ni_n), j),
+                _ => (wrap(i + 1, ni_n), wrap(j + 1, nl_n)),
+            };
+            let r = visit(ni2, nj2, &mut shaper, &mut queries, &mut trace);
+            let s2 = ni2 * nl_n + nj2;
+            let max_next = q[s2].iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            q[s][a] += cfg.alpha * (r + cfg.gamma * max_next - q[s][a]);
+            i = ni2;
+            j = nj2;
+        }
+    }
+
+    DseResult {
+        best: shaper.h_best,
+        best_estimate: shaper.best_estimate,
+        f_max: shaper.f_max,
+        queries,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        modeled_seconds: queries as f64 * query_seconds(device),
+        trace,
+    }
+}
+
+fn wrap(x: usize, n: usize) -> usize {
+    if x >= n {
+        0
+    } else {
+        x
+    }
+}
+
+/// Greedy action with uniform tie-breaking — without it the agent locks
+/// onto action 0 while all Q-values are still zero and never leaves the
+/// first grid column.
+fn argmax_tiebreak(xs: &[f64], rng: &mut Rng) -> usize {
+    let best = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let ties: Vec<usize> = (0..xs.len()).filter(|&i| xs[i] == best).collect();
+    *rng.choose(&ties)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::brute;
+    use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
+    use crate::onnx::zoo;
+    use crate::testkit::for_all;
+
+    fn flow(name: &str) -> ComputationFlow {
+        ComputationFlow::extract(&zoo::build(name, false).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn rl_finds_bf_optimum_on_paper_devices() {
+        for (dev, expect) in [
+            (&ARRIA_10_GX1150, Some((16usize, 32usize))),
+            (&CYCLONE_V_5CSEMA5, Some((8, 8))),
+            (&CYCLONE_V_5CSEMA4, None),
+        ] {
+            let bf = brute::explore(&flow("alexnet"), dev, Thresholds::default());
+            let rl = explore(&flow("alexnet"), dev, Thresholds::default(), RlConfig::default());
+            assert_eq!(bf.best, expect, "{}", dev.name);
+            assert_eq!(rl.best, bf.best, "{} rl trace: {:?}", dev.name, rl.trace);
+        }
+    }
+
+    #[test]
+    fn rl_uses_fewer_queries_than_bf() {
+        // Table 2: RL-DSE ~25-30% faster than BF-DSE
+        let bf = brute::explore(&flow("alexnet"), &ARRIA_10_GX1150, Thresholds::default());
+        let rl = explore(
+            &flow("alexnet"),
+            &ARRIA_10_GX1150,
+            Thresholds::default(),
+            RlConfig::default(),
+        );
+        assert!(
+            rl.queries < bf.queries,
+            "rl {} vs bf {}",
+            rl.queries,
+            bf.queries
+        );
+        let ratio = rl.modeled_seconds / bf.modeled_seconds;
+        assert!(
+            (0.5..0.95).contains(&ratio),
+            "modeled time ratio {ratio} outside paper band"
+        );
+    }
+
+    #[test]
+    fn rl_best_is_always_feasible_property() {
+        for_all("rl H_best feasible for random thresholds/seeds", |g| {
+            let th = Thresholds {
+                lut: g.f64(20.0, 101.0),
+                dsp: g.f64(20.0, 101.0),
+                mem: g.f64(20.0, 101.0),
+                reg: g.f64(20.0, 101.0),
+            };
+            let cfg = RlConfig {
+                seed: g.int(0, i64::MAX) as u64,
+                ..RlConfig::default()
+            };
+            let f = flow("alexnet");
+            let r = explore(&f, &ARRIA_10_GX1150, th, cfg);
+            if let Some(est) = &r.best_estimate {
+                assert!(est.fits(&th));
+                // never beaten by any feasible state it actually visited
+                for (ni, nl, favg, feas) in &r.trace {
+                    if *feas {
+                        assert!(
+                            *favg <= r.f_max + 1e-9,
+                            "visited ({ni},{nl}) favg {favg} > fmax {}",
+                            r.f_max
+                        );
+                    }
+                }
+            } else {
+                assert!(r.trace.iter().all(|(_, _, _, f)| !f));
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = explore(
+            &flow("alexnet"),
+            &ARRIA_10_GX1150,
+            Thresholds::default(),
+            RlConfig::default(),
+        );
+        let b = explore(
+            &flow("alexnet"),
+            &ARRIA_10_GX1150,
+            Thresholds::default(),
+            RlConfig::default(),
+        );
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.trace, b.trace);
+    }
+}

@@ -1,0 +1,162 @@
+//! FPGA device database.
+//!
+//! Resource inventories come straight from the paper's Table 2
+//! ("Resources Available") for the three evaluation boards; the extra
+//! fields (block size, register ratio, DSP int8-MAC capability, base
+//! clock) are family-level datasheet facts used by the analytical model.
+
+/// FPGA family — sets the per-family constants of the resource model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    CycloneV,
+    Arria10,
+    StratixV,
+}
+
+/// A concrete FPGA device (board-level view).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    pub family: Family,
+    /// Adaptive logic modules.
+    pub alms: u64,
+    /// DSP blocks.
+    pub dsps: u64,
+    /// On-chip RAM blocks (M10K for Cyclone/Stratix V, M20K for Arria 10).
+    pub ram_blocks: u64,
+    /// Total on-chip memory bits.
+    pub mem_bits: u64,
+    /// Bits per RAM block.
+    pub ram_block_bits: u64,
+    /// Registers per ALM (family architecture fact).
+    pub regs_per_alm: u64,
+    /// int8 MACs one DSP block can perform per cycle.
+    pub macs_per_dsp: u64,
+    /// Achievable kernel clock for this family under low congestion (MHz).
+    pub base_clock_mhz: f64,
+    /// Effective global-memory bandwidth the OpenCL memory kernels see
+    /// (GB/s): one DDR3 bank on the Cyclone V SoC, one effective DDR4
+    /// bank on the Nallatech 510T Arria 10 board.
+    pub ddr_gbytes_per_s: f64,
+    /// Pipeline duty factor of the synthesized kernels (fraction of
+    /// cycles the lane array does useful work) — calibrated against the
+    /// paper's Table 1 AlexNet anchors; see sim::engine.
+    pub duty_factor: f64,
+}
+
+impl Device {
+    pub fn registers(&self) -> u64 {
+        self.alms * self.regs_per_alm
+    }
+}
+
+/// The boards of the paper's Tables 1-2.
+pub const CYCLONE_V_5CSEMA4: Device = Device {
+    name: "Cyclone V SoC 5CSEMA4",
+    family: Family::CycloneV,
+    alms: 15_000,
+    dsps: 83,
+    ram_blocks: 321,
+    mem_bits: 3_200_000,
+    ram_block_bits: 10_240,
+    regs_per_alm: 4,
+    macs_per_dsp: 1,
+    base_clock_mhz: 152.0,
+    ddr_gbytes_per_s: 3.2,
+    duty_factor: 0.655,
+};
+
+pub const CYCLONE_V_5CSEMA5: Device = Device {
+    name: "Cyclone V SoC 5CSEMA5",
+    family: Family::CycloneV,
+    alms: 32_000,
+    dsps: 87,
+    ram_blocks: 397,
+    mem_bits: 4_000_000,
+    ram_block_bits: 10_240,
+    regs_per_alm: 4,
+    macs_per_dsp: 1,
+    base_clock_mhz: 152.0,
+    ddr_gbytes_per_s: 3.2,
+    duty_factor: 0.655,
+};
+
+pub const ARRIA_10_GX1150: Device = Device {
+    name: "Arria 10 GX 1150",
+    family: Family::Arria10,
+    alms: 427_000,
+    dsps: 1516,
+    ram_blocks: 2713,
+    mem_bits: 55_500_000,
+    ram_block_bits: 20_480,
+    regs_per_alm: 4,
+    macs_per_dsp: 2,
+    base_clock_mhz: 199.0,
+    ddr_gbytes_per_s: 8.0,
+    duty_factor: 0.78,
+};
+
+/// Stratix V appears only as a baseline platform in Tables 3-4.
+pub const STRATIX_V_GXD8: Device = Device {
+    name: "Stratix V GX-D8",
+    family: Family::StratixV,
+    alms: 262_400,
+    dsps: 1963,
+    ram_blocks: 2567,
+    mem_bits: 52_000_000,
+    ram_block_bits: 20_480,
+    regs_per_alm: 4,
+    macs_per_dsp: 2,
+    base_clock_mhz: 180.0,
+    ddr_gbytes_per_s: 6.4,
+    duty_factor: 0.7,
+};
+
+/// All paper evaluation devices.
+pub fn all() -> Vec<&'static Device> {
+    vec![
+        &CYCLONE_V_5CSEMA4,
+        &CYCLONE_V_5CSEMA5,
+        &ARRIA_10_GX1150,
+        &STRATIX_V_GXD8,
+    ]
+}
+
+/// Lookup by (case-insensitive) substring, e.g. "arria10", "5csema5".
+pub fn find(name: &str) -> Option<&'static Device> {
+    let needle: String = name
+        .to_ascii_lowercase()
+        .chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .collect();
+    all().into_iter().find(|d| {
+        let hay: String = d
+            .name
+            .to_ascii_lowercase()
+            .chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .collect();
+        hay.contains(&needle)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_inventories() {
+        assert_eq!(CYCLONE_V_5CSEMA4.alms, 15_000);
+        assert_eq!(CYCLONE_V_5CSEMA5.ram_blocks, 397);
+        assert_eq!(ARRIA_10_GX1150.dsps, 1516);
+        assert_eq!(ARRIA_10_GX1150.mem_bits, 55_500_000);
+    }
+
+    #[test]
+    fn find_by_fuzzy_name() {
+        assert_eq!(find("Arria 10").unwrap().name, ARRIA_10_GX1150.name);
+        assert_eq!(find("5csema5").unwrap().name, CYCLONE_V_5CSEMA5.name);
+        assert_eq!(find("SoC 5CSEMA4").unwrap().name, CYCLONE_V_5CSEMA4.name);
+        assert!(find("virtex7").is_none());
+    }
+}

@@ -1,0 +1,9 @@
+//! Hardware-aware resource/timing estimation (paper §4.3) over a device
+//! database — the simulated stand-in for the Intel OpenCL compiler's
+//! estimation stage.
+
+pub mod device;
+pub mod model;
+
+pub use device::{Device, Family};
+pub use model::{estimate, query_seconds, synthesis_minutes, ResourceEstimate, Thresholds};

@@ -1,0 +1,377 @@
+//! Computation-flow extraction (paper §4.1 / §5).
+//!
+//! The pipelined kernel architecture executes the network as a sequence
+//! of *rounds*: each round is one pass of {mem_read -> conv lanes ->
+//! pool -> mem_write}. A Conv followed by Relu and/or MaxPool fuses into
+//! one round (pool configured as pass-through when absent); a Gemm runs
+//! on the same lane array with the pool stage passing through
+//! (paper §3.2.3 / §5). AlexNet therefore becomes 5 fused conv/pool
+//! rounds + 3 FC rounds — exactly the 8 bars of the paper's Fig. 6.
+
+use super::graph::Graph;
+use super::ops::{ConvAttrs, Op, PoolAttrs};
+use super::shape::{infer_shapes, ShapeError};
+
+/// One fused pipeline round.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    ConvPool {
+        conv: ConvAttrs,
+        cin: usize,
+        cout: usize,
+        in_hw: (usize, usize),
+        conv_out_hw: (usize, usize),
+        relu: bool,
+        pool: Option<PoolAttrs>,
+        /// Spatial size after the (optional) pool stage.
+        out_hw: (usize, usize),
+    },
+    Fc {
+        in_features: usize,
+        out_features: usize,
+        relu: bool,
+    },
+}
+
+/// A fused layer with its cost census.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedLayer {
+    pub index: usize,
+    pub kind: LayerKind,
+}
+
+impl FusedLayer {
+    /// Multiply-accumulates in this round (the conv/FC dominates; pool
+    /// comparisons are not MACs).
+    pub fn macs(&self) -> u64 {
+        match &self.kind {
+            LayerKind::ConvPool {
+                conv,
+                cin,
+                cout,
+                conv_out_hw,
+                ..
+            } => {
+                (conv_out_hw.0 * conv_out_hw.1 * cout * cin * conv.kernel[0] * conv.kernel[1])
+                    as u64
+            }
+            LayerKind::Fc {
+                in_features,
+                out_features,
+                ..
+            } => (*in_features * *out_features) as u64,
+        }
+    }
+
+    /// Reduction-dimension length fed to the lane array (Cin*KH*KW for
+    /// conv rounds, K for FC rounds) — the axis the `N_i` vectors tile.
+    pub fn reduction_dim(&self) -> usize {
+        match &self.kind {
+            LayerKind::ConvPool {
+                conv, cin, ..
+            } => cin * conv.kernel[0] * conv.kernel[1],
+            LayerKind::Fc { in_features, .. } => *in_features,
+        }
+    }
+
+    /// Output features produced by the lane array (`N_l` tiles this axis).
+    pub fn out_features(&self) -> usize {
+        match &self.kind {
+            LayerKind::ConvPool { cout, .. } => *cout,
+            LayerKind::Fc { out_features, .. } => *out_features,
+        }
+    }
+
+    /// Output "pixels" per feature (1 for FC rounds).
+    pub fn out_pixels(&self) -> usize {
+        match &self.kind {
+            LayerKind::ConvPool { conv_out_hw, .. } => conv_out_hw.0 * conv_out_hw.1,
+            LayerKind::Fc { .. } => 1,
+        }
+    }
+
+    /// Weight elements this round streams from memory.
+    pub fn weight_elems(&self) -> usize {
+        match &self.kind {
+            LayerKind::ConvPool {
+                conv, cin, cout, ..
+            } => cout * cin * conv.kernel[0] * conv.kernel[1] + cout,
+            LayerKind::Fc {
+                in_features,
+                out_features,
+                ..
+            } => in_features * out_features + out_features,
+        }
+    }
+
+    /// Input activation elements this round reads.
+    pub fn input_elems(&self) -> usize {
+        match &self.kind {
+            LayerKind::ConvPool { cin, in_hw, .. } => cin * in_hw.0 * in_hw.1,
+            LayerKind::Fc { in_features, .. } => *in_features,
+        }
+    }
+
+    /// Output activation elements this round writes (after pool).
+    pub fn output_elems(&self) -> usize {
+        match &self.kind {
+            LayerKind::ConvPool { cout, out_hw, .. } => cout * out_hw.0 * out_hw.1,
+            LayerKind::Fc { out_features, .. } => *out_features,
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self.kind, LayerKind::ConvPool { .. })
+    }
+}
+
+/// The extracted computation flow of a model.
+#[derive(Debug, Clone)]
+pub struct ComputationFlow {
+    pub model_name: String,
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<FusedLayer>,
+    pub has_softmax: bool,
+}
+
+impl ComputationFlow {
+    /// Extract from a validated, shape-inferred graph.
+    pub fn extract(g: &Graph) -> Result<ComputationFlow, ShapeError> {
+        g.validate().map_err(ShapeError)?;
+        let shapes = infer_shapes(g)?;
+        let mut layers = Vec::new();
+        let mut has_softmax = false;
+        let mut i = 0;
+        while i < g.nodes.len() {
+            let node = &g.nodes[i];
+            match &node.op {
+                Op::Conv(attrs) => {
+                    let x = &shapes[&node.inputs[0]];
+                    let (cin, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+                    let conv_out = &shapes[&node.outputs[0]];
+                    let cout = conv_out.shape[0];
+                    let conv_out_hw = (conv_out.shape[1], conv_out.shape[2]);
+                    let mut relu = false;
+                    let mut pool = None;
+                    let mut out_hw = conv_out_hw;
+                    let mut j = i + 1;
+                    if let Some(n) = g.nodes.get(j) {
+                        if matches!(n.op, Op::Relu) {
+                            relu = true;
+                            j += 1;
+                        }
+                    }
+                    if let Some(n) = g.nodes.get(j) {
+                        if let Op::MaxPool(pattrs) = &n.op {
+                            pool = Some(*pattrs);
+                            let po = &shapes[&n.outputs[0]];
+                            out_hw = (po.shape[1], po.shape[2]);
+                            j += 1;
+                        }
+                    }
+                    layers.push(FusedLayer {
+                        index: layers.len(),
+                        kind: LayerKind::ConvPool {
+                            conv: *attrs,
+                            cin,
+                            cout,
+                            in_hw: (h, w),
+                            conv_out_hw,
+                            relu,
+                            pool,
+                            out_hw,
+                        },
+                    });
+                    i = j;
+                }
+                Op::MaxPool(pattrs) => {
+                    // standalone pool (no preceding conv): model it as a
+                    // pass-through conv round with a 1x1 identity — rare,
+                    // but keeps the flow total.
+                    let x = &shapes[&node.inputs[0]];
+                    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+                    let po = &shapes[&node.outputs[0]];
+                    layers.push(FusedLayer {
+                        index: layers.len(),
+                        kind: LayerKind::ConvPool {
+                            conv: ConvAttrs::unit([1, 1]),
+                            cin: c,
+                            cout: c,
+                            in_hw: (h, w),
+                            conv_out_hw: (h, w),
+                            relu: false,
+                            pool: Some(*pattrs),
+                            out_hw: (po.shape[1], po.shape[2]),
+                        },
+                    });
+                    i += 1;
+                }
+                Op::Gemm { .. } => {
+                    let x = &shapes[&node.inputs[0]];
+                    let out = &shapes[&node.outputs[0]];
+                    let mut relu = false;
+                    let mut j = i + 1;
+                    if let Some(n) = g.nodes.get(j) {
+                        if matches!(n.op, Op::Relu) {
+                            relu = true;
+                            j += 1;
+                        }
+                    }
+                    layers.push(FusedLayer {
+                        index: layers.len(),
+                        kind: LayerKind::Fc {
+                            in_features: x.shape[0],
+                            out_features: out.shape[0],
+                            relu,
+                        },
+                    });
+                    i = j;
+                }
+                Op::Softmax => {
+                    has_softmax = true;
+                    i += 1;
+                }
+                Op::Flatten | Op::Relu => {
+                    // Flatten is free (address remap); a Relu that was not
+                    // fused above is element-wise on the write-back path.
+                    i += 1;
+                }
+            }
+        }
+        Ok(ComputationFlow {
+            model_name: g.name.clone(),
+            input_shape: g.input.shape.clone(),
+            layers,
+            has_softmax,
+        })
+    }
+
+    /// Total operation count in GOp (MAC = 2 ops, matching the paper).
+    pub fn gops(&self) -> f64 {
+        2.0 * self.layers.iter().map(|l| l.macs()).sum::<u64>() as f64 / 1e9
+    }
+
+    pub fn conv_rounds(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_conv()).count()
+    }
+
+    pub fn fc_rounds(&self) -> usize {
+        self.layers.len() - self.conv_rounds()
+    }
+
+    /// Reduction dims of every conv round except the first (the input
+    /// round is zero-padded by the host, PipeCNN-style) — the `N_i`
+    /// divisor constraint of paper §4.2.
+    pub fn ni_constraint_dims(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter(|l| l.is_conv())
+            .skip(1)
+            .map(|l| l.reduction_dim())
+            .collect()
+    }
+
+    /// Output-feature counts of every conv round — the `N_l` divisor
+    /// constraint ("N_l should be a divisor of the number of features for
+    /// all layers to avoid idle lanes").
+    pub fn nl_constraint_dims(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter(|l| l.is_conv())
+            .map(|l| l.out_features())
+            .collect()
+    }
+
+    /// Largest activation (elements) crossing a round boundary — sizes the
+    /// double-buffered on-chip feature buffers.
+    pub fn max_round_activation(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| [l.input_elems(), l.output_elems()])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Largest per-round weight tensor (elements) — weight buffer sizing.
+    pub fn max_round_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_elems()).max().unwrap_or(0)
+    }
+
+    /// Total weights across rounds.
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_elems()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::zoo;
+
+    #[test]
+    fn alexnet_fuses_to_5_plus_3_rounds() {
+        let g = zoo::build("alexnet", false).unwrap();
+        let flow = ComputationFlow::extract(&g).unwrap();
+        assert_eq!(flow.conv_rounds(), 5);
+        assert_eq!(flow.fc_rounds(), 3);
+        // paper-implied totals
+        assert!((flow.gops() - 1.43).abs() < 0.1, "gops={}", flow.gops());
+    }
+
+    #[test]
+    fn vgg16_fuses_to_13_plus_3_rounds() {
+        let g = zoo::build("vgg16", false).unwrap();
+        let flow = ComputationFlow::extract(&g).unwrap();
+        assert_eq!(flow.conv_rounds(), 13);
+        assert_eq!(flow.fc_rounds(), 3);
+        assert!((flow.gops() - 30.9).abs() < 0.5);
+    }
+
+    #[test]
+    fn alexnet_divisor_constraints_admit_paper_options() {
+        let g = zoo::build("alexnet", false).unwrap();
+        let flow = ComputationFlow::extract(&g).unwrap();
+        // (16, 32) must be admissible: 16 divides every post-input
+        // reduction dim, 32 divides every conv output-feature count
+        for d in flow.ni_constraint_dims() {
+            assert_eq!(d % 16, 0, "N_i=16 must divide {d}");
+        }
+        for d in flow.nl_constraint_dims() {
+            assert_eq!(d % 32, 0, "N_l=32 must divide {d}");
+        }
+    }
+
+    #[test]
+    fn first_conv_round_shapes() {
+        let g = zoo::build("alexnet", false).unwrap();
+        let flow = ComputationFlow::extract(&g).unwrap();
+        match &flow.layers[0].kind {
+            LayerKind::ConvPool {
+                cin,
+                cout,
+                conv_out_hw,
+                out_hw,
+                pool,
+                relu,
+                ..
+            } => {
+                assert_eq!((*cin, *cout), (3, 64));
+                assert_eq!(*conv_out_hw, (55, 55));
+                assert_eq!(*out_hw, (27, 27));
+                assert!(pool.is_some() && *relu);
+            }
+            _ => panic!("expected conv round"),
+        }
+    }
+
+    #[test]
+    fn macs_are_positive_and_flow_total(){
+        for name in ["tiny", "lenet5", "alexnet", "vgg16"] {
+            let g = zoo::build(name, false).unwrap();
+            let flow = ComputationFlow::extract(&g).unwrap();
+            assert!(!flow.layers.is_empty());
+            assert!(flow.layers.iter().all(|l| l.macs() > 0));
+            assert!(flow.has_softmax);
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Graph container: nodes in topological (file) order, named edges,
+//! initializers with optionally-resident data (ONNX external-data style).
+
+use std::collections::HashMap;
+
+use super::ops::{DType, Op};
+
+/// Shape + dtype of a named tensor edge.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorInfo {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+}
+
+/// A learned tensor. `data` is `None` when the model file declares the
+/// initializer but carries no external data (large zoo models) — the
+/// coordinator then materializes synthetic weights on demand.
+#[derive(Debug, Clone)]
+pub struct Initializer {
+    pub info: TensorInfo,
+    pub data: Option<Vec<f32>>,
+}
+
+/// One operator application.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// A parsed model graph.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub input_name: String,
+    pub input: TensorInfo,
+    pub output_name: String,
+    pub nodes: Vec<Node>,
+    pub initializers: HashMap<String, Initializer>,
+}
+
+impl Graph {
+    /// Total learned parameters.
+    pub fn param_count(&self) -> usize {
+        self.initializers.values().map(|i| i.info.numel()).sum()
+    }
+
+    /// Parameter bytes at a given precision (the paper quotes 8-bit).
+    pub fn param_bytes(&self, dtype: DType) -> usize {
+        self.param_count() * dtype.size_bytes()
+    }
+
+    /// Whether every initializer has resident data.
+    pub fn has_weights(&self) -> bool {
+        self.initializers.values().all(|i| i.data.is_some())
+    }
+
+    /// Names of node ops in order (handy for tests / reports).
+    pub fn op_names(&self) -> Vec<&'static str> {
+        self.nodes.iter().map(|n| n.op.name()).collect()
+    }
+
+    /// Structural validation: every node input is either the graph input,
+    /// an initializer, or a previous node's output; the declared graph
+    /// output is produced; names are unique.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut known: HashMap<&str, ()> = HashMap::new();
+        known.insert(self.input_name.as_str(), ());
+        for k in self.initializers.keys() {
+            known.insert(k.as_str(), ());
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            for input in &node.inputs {
+                if !known.contains_key(input.as_str()) {
+                    return Err(format!(
+                        "node {i} ({}) consumes undefined tensor '{input}'",
+                        node.op.name()
+                    ));
+                }
+            }
+            for output in &node.outputs {
+                if known.contains_key(output.as_str()) {
+                    return Err(format!(
+                        "node {i} ({}) redefines tensor '{output}'",
+                        node.op.name()
+                    ));
+                }
+                known.insert(output.as_str(), ());
+            }
+        }
+        if !known.contains_key(self.output_name.as_str()) {
+            return Err(format!(
+                "graph output '{}' is never produced",
+                self.output_name
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ops::ConvAttrs;
+
+    fn tiny_graph() -> Graph {
+        let mut initializers = HashMap::new();
+        initializers.insert(
+            "w".to_string(),
+            Initializer {
+                info: TensorInfo {
+                    shape: vec![4, 1, 3, 3],
+                    dtype: DType::F32,
+                },
+                data: Some(vec![0.0; 36]),
+            },
+        );
+        Graph {
+            name: "t".into(),
+            input_name: "input".into(),
+            input: TensorInfo {
+                shape: vec![1, 8, 8],
+                dtype: DType::F32,
+            },
+            output_name: "y".into(),
+            nodes: vec![Node {
+                op: Op::Conv(ConvAttrs::unit([3, 3])),
+                inputs: vec!["input".into(), "w".into()],
+                outputs: vec!["y".into()],
+            }],
+            initializers,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_wellformed() {
+        assert_eq!(tiny_graph().validate(), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_undefined_input() {
+        let mut g = tiny_graph();
+        g.nodes[0].inputs[1] = "missing".into();
+        assert!(g.validate().unwrap_err().contains("undefined tensor"));
+    }
+
+    #[test]
+    fn validate_rejects_missing_output() {
+        let mut g = tiny_graph();
+        g.output_name = "nope".into();
+        assert!(g.validate().unwrap_err().contains("never produced"));
+    }
+
+    #[test]
+    fn validate_rejects_redefinition() {
+        let mut g = tiny_graph();
+        let dup = g.nodes[0].clone();
+        g.nodes.push(dup);
+        assert!(g.validate().unwrap_err().contains("redefines"));
+    }
+
+    #[test]
+    fn param_census() {
+        let g = tiny_graph();
+        assert_eq!(g.param_count(), 36);
+        assert_eq!(g.param_bytes(DType::I8), 36);
+        assert!(g.has_weights());
+    }
+}

@@ -1,0 +1,19 @@
+//! Model IR: the "linked structure preserving layer order" of paper §4.1.
+//!
+//! The ONNX front-end parses into [`Graph`]; shape inference
+//! ([`shape`]) annotates every edge with its tensor shape using the
+//! paper's output-size equations (3)-(4); [`flow`] then extracts the
+//! *computation flow* — the fused conv(+relu)(+pool) / fully-connected
+//! rounds that the estimator, DSE, simulator and synthesis stages all
+//! consume (paper: "we can merge convolution and pooling layers as one
+//! layer" — AlexNet becomes 5 fused conv/pool rounds + 3 FC rounds).
+
+pub mod flow;
+pub mod graph;
+pub mod ops;
+pub mod shape;
+
+pub use flow::{ComputationFlow, FusedLayer, LayerKind};
+pub use graph::{Graph, Initializer, Node, TensorInfo};
+pub use ops::{Attrs, ConvAttrs, DType, Op, PoolAttrs};
+pub use shape::{infer_shapes, ShapeError};

@@ -1,0 +1,193 @@
+//! Operator set of paper §4.1: Conv, MaxPool, Relu, Gemm, Softmax (+
+//! Flatten, which ONNX inserts before Gemm).
+
+use std::fmt;
+
+/// Element type of a tensor edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "float32" | "f32" => Some(DType::F32),
+            "int8" | "i8" => Some(DType::I8),
+            "int32" | "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I8 => "int8",
+            DType::I32 => "int32",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Conv attributes exactly as the paper's parser extracts them
+/// ("dilations, pads, kernel shape, and stride").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvAttrs {
+    pub kernel: [usize; 2],
+    pub strides: [usize; 2],
+    /// Symmetric (h, w) padding. ONNX 4-element pads are validated to be
+    /// symmetric by the parser and folded to 2.
+    pub pads: [usize; 2],
+    pub dilations: [usize; 2],
+}
+
+impl ConvAttrs {
+    pub fn unit(kernel: [usize; 2]) -> Self {
+        ConvAttrs {
+            kernel,
+            strides: [1, 1],
+            pads: [0, 0],
+            dilations: [1, 1],
+        }
+    }
+
+    /// Paper equation (3): floor((in + 2p - d(k-1) - 1)/s + 1).
+    pub fn out_hw(&self, h: usize, w: usize) -> Option<(usize, usize)> {
+        let dim = |x: usize, i: usize| -> Option<usize> {
+            let num = (x + 2 * self.pads[i])
+                .checked_sub(self.dilations[i] * (self.kernel[i] - 1) + 1)?;
+            Some(num / self.strides[i] + 1)
+        };
+        Some((dim(h, 0)?, dim(w, 1)?))
+    }
+}
+
+/// MaxPool attributes (same fields, no dilation in our zoo but kept for
+/// ONNX parity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolAttrs {
+    pub kernel: [usize; 2],
+    pub strides: [usize; 2],
+    pub pads: [usize; 2],
+}
+
+impl PoolAttrs {
+    pub fn out_hw(&self, h: usize, w: usize) -> Option<(usize, usize)> {
+        ConvAttrs {
+            kernel: self.kernel,
+            strides: self.strides,
+            pads: self.pads,
+            dilations: [1, 1],
+        }
+        .out_hw(h, w)
+    }
+}
+
+/// A node's operator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    Conv(ConvAttrs),
+    MaxPool(PoolAttrs),
+    Relu,
+    Flatten,
+    /// Fully connected layer; `trans_b` mirrors ONNX Gemm's transB.
+    Gemm {
+        trans_b: bool,
+    },
+    Softmax,
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Conv(_) => "Conv",
+            Op::MaxPool(_) => "MaxPool",
+            Op::Relu => "Relu",
+            Op::Flatten => "Flatten",
+            Op::Gemm { .. } => "Gemm",
+            Op::Softmax => "Softmax",
+        }
+    }
+}
+
+/// Raw attribute bag used during parsing before validation.
+#[derive(Debug, Clone, Default)]
+pub struct Attrs {
+    pub kernel_shape: Option<Vec<usize>>,
+    pub strides: Option<Vec<usize>>,
+    pub pads: Option<Vec<usize>>,
+    pub dilations: Option<Vec<usize>>,
+    pub trans_b: Option<bool>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_matches_paper_examples() {
+        // AlexNet conv1: 224, k11, s4, p2 -> 55
+        let a = ConvAttrs {
+            kernel: [11, 11],
+            strides: [4, 4],
+            pads: [2, 2],
+            dilations: [1, 1],
+        };
+        assert_eq!(a.out_hw(224, 224), Some((55, 55)));
+        // VGG 3x3 s1 p1 preserves size
+        let v = ConvAttrs {
+            kernel: [3, 3],
+            strides: [1, 1],
+            pads: [1, 1],
+            dilations: [1, 1],
+        };
+        assert_eq!(v.out_hw(224, 224), Some((224, 224)));
+        // dilation shrinks the effective window
+        let d = ConvAttrs {
+            kernel: [3, 3],
+            strides: [1, 1],
+            pads: [0, 0],
+            dilations: [2, 2],
+        };
+        assert_eq!(d.out_hw(10, 10), Some((6, 6)));
+    }
+
+    #[test]
+    fn conv_out_none_when_window_exceeds_input() {
+        let a = ConvAttrs::unit([7, 7]);
+        assert_eq!(a.out_hw(3, 3), None);
+    }
+
+    #[test]
+    fn pool_out_overlapping() {
+        // AlexNet pool 3/2: 55 -> 27
+        let p = PoolAttrs {
+            kernel: [3, 3],
+            strides: [2, 2],
+            pads: [0, 0],
+        };
+        assert_eq!(p.out_hw(55, 55), Some((27, 27)));
+    }
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for d in [DType::F32, DType::I8, DType::I32] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("float64"), None);
+    }
+}

@@ -1,0 +1,210 @@
+//! Shape inference over a [`Graph`] — paper equations (3)-(4) propagated
+//! node by node. Produces a name -> TensorInfo map used by the flow
+//! extractor, the estimator (buffer sizing) and the simulator.
+
+use std::collections::HashMap;
+
+use super::graph::{Graph, TensorInfo};
+use super::ops::{DType, Op};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeError(pub String);
+
+impl std::fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shape error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ShapeError {}
+
+/// Infer the shape of every edge. Returns the map and the output shape.
+pub fn infer_shapes(g: &Graph) -> Result<HashMap<String, TensorInfo>, ShapeError> {
+    let mut shapes: HashMap<String, TensorInfo> = HashMap::new();
+    shapes.insert(g.input_name.clone(), g.input.clone());
+    for (name, init) in &g.initializers {
+        shapes.insert(name.clone(), init.info.clone());
+    }
+    for (i, node) in g.nodes.iter().enumerate() {
+        let get = |name: &str| -> Result<&TensorInfo, ShapeError> {
+            shapes
+                .get(name)
+                .ok_or_else(|| ShapeError(format!("node {i}: unknown tensor '{name}'")))
+        };
+        let out_info: TensorInfo = match &node.op {
+            Op::Conv(attrs) => {
+                let x = get(&node.inputs[0])?;
+                let w = get(&node.inputs[1])?;
+                if x.shape.len() != 3 {
+                    return Err(ShapeError(format!(
+                        "node {i}: Conv input must be CHW, got {:?}",
+                        x.shape
+                    )));
+                }
+                if w.shape.len() != 4 {
+                    return Err(ShapeError(format!(
+                        "node {i}: Conv weight must be OIHW, got {:?}",
+                        w.shape
+                    )));
+                }
+                let (cin, h, win) = (x.shape[0], x.shape[1], x.shape[2]);
+                let (cout, wcin, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+                if cin != wcin {
+                    return Err(ShapeError(format!(
+                        "node {i}: Conv channel mismatch: input Cin={cin}, weight Cin={wcin}"
+                    )));
+                }
+                if [kh, kw] != attrs.kernel {
+                    return Err(ShapeError(format!(
+                        "node {i}: kernel_shape {:?} != weight spatial dims [{kh}, {kw}]",
+                        attrs.kernel
+                    )));
+                }
+                if let Some(b) = node.inputs.get(2) {
+                    let bi = get(b)?;
+                    if bi.shape != vec![cout] {
+                        return Err(ShapeError(format!(
+                            "node {i}: bias shape {:?} != [{cout}]",
+                            bi.shape
+                        )));
+                    }
+                }
+                let (oh, ow) = attrs.out_hw(h, win).ok_or_else(|| {
+                    ShapeError(format!(
+                        "node {i}: Conv window {:?} exceeds input {h}x{win}",
+                        attrs.kernel
+                    ))
+                })?;
+                TensorInfo {
+                    shape: vec![cout, oh, ow],
+                    dtype: x.dtype,
+                }
+            }
+            Op::MaxPool(attrs) => {
+                let x = get(&node.inputs[0])?;
+                if x.shape.len() != 3 {
+                    return Err(ShapeError(format!(
+                        "node {i}: MaxPool input must be CHW, got {:?}",
+                        x.shape
+                    )));
+                }
+                let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+                let (oh, ow) = attrs.out_hw(h, w).ok_or_else(|| {
+                    ShapeError(format!(
+                        "node {i}: MaxPool window {:?} exceeds input {h}x{w}",
+                        attrs.kernel
+                    ))
+                })?;
+                TensorInfo {
+                    shape: vec![c, oh, ow],
+                    dtype: x.dtype,
+                }
+            }
+            Op::Relu | Op::Softmax => get(&node.inputs[0])?.clone(),
+            Op::Flatten => {
+                let x = get(&node.inputs[0])?;
+                TensorInfo {
+                    shape: vec![x.numel()],
+                    dtype: x.dtype,
+                }
+            }
+            Op::Gemm { trans_b } => {
+                let x = get(&node.inputs[0])?;
+                let w = get(&node.inputs[1])?;
+                if x.shape.len() != 1 || w.shape.len() != 2 {
+                    return Err(ShapeError(format!(
+                        "node {i}: Gemm expects vec x matrix, got {:?} x {:?}",
+                        x.shape, w.shape
+                    )));
+                }
+                let (n, k) = if *trans_b {
+                    (w.shape[0], w.shape[1])
+                } else {
+                    (w.shape[1], w.shape[0])
+                };
+                if k != x.shape[0] {
+                    return Err(ShapeError(format!(
+                        "node {i}: Gemm contraction mismatch: x has {}, W has {k}",
+                        x.shape[0]
+                    )));
+                }
+                TensorInfo {
+                    shape: vec![n],
+                    dtype: x.dtype,
+                }
+            }
+        };
+        for output in &node.outputs {
+            shapes.insert(output.clone(), out_info.clone());
+        }
+    }
+    if !shapes.contains_key(&g.output_name) {
+        return Err(ShapeError(format!(
+            "graph output '{}' has no shape",
+            g.output_name
+        )));
+    }
+    Ok(shapes)
+}
+
+/// Convenience: the inferred output TensorInfo.
+pub fn output_info(g: &Graph) -> Result<TensorInfo, ShapeError> {
+    let shapes = infer_shapes(g)?;
+    Ok(shapes[&g.output_name].clone())
+}
+
+/// The largest intermediate activation in elements — drives on-chip buffer
+/// sizing in the estimator.
+pub fn max_activation_elems(g: &Graph) -> Result<usize, ShapeError> {
+    let shapes = infer_shapes(g)?;
+    Ok(g
+        .nodes
+        .iter()
+        .flat_map(|n| n.outputs.iter())
+        .chain(std::iter::once(&g.input_name))
+        .map(|n| shapes[n].numel())
+        .max()
+        .unwrap_or(0))
+}
+
+#[allow(unused)]
+fn _dtype_unused(_: DType) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::zoo;
+
+    #[test]
+    fn alexnet_shapes_match_paper() {
+        let g = zoo::build("alexnet", false).unwrap();
+        let shapes = infer_shapes(&g).unwrap();
+        // conv1 out 64x55x55, pool1 64x27x27, classifier 1000
+        let conv1_out = &g.nodes[0].outputs[0];
+        assert_eq!(shapes[conv1_out].shape, vec![64, 55, 55]);
+        assert_eq!(shapes[&g.output_name].shape, vec![1000]);
+    }
+
+    #[test]
+    fn vgg16_output_is_1000() {
+        let g = zoo::build("vgg16", false).unwrap();
+        assert_eq!(output_info(&g).unwrap().shape, vec![1000]);
+    }
+
+    #[test]
+    fn mismatched_channels_rejected() {
+        let mut g = zoo::build("tiny", true).unwrap();
+        // corrupt the first conv weight's Cin
+        let wname = g.nodes[0].inputs[1].clone();
+        g.initializers.get_mut(&wname).unwrap().info.shape[1] = 7;
+        assert!(infer_shapes(&g).is_err());
+    }
+
+    #[test]
+    fn max_activation_is_input_or_bigger() {
+        let g = zoo::build("vgg16", false).unwrap();
+        let m = max_activation_elems(&g).unwrap();
+        // VGG block1 keeps 224x224 at 64 channels: 3.2M elements
+        assert_eq!(m, 64 * 224 * 224);
+    }
+}

@@ -1,0 +1,29 @@
+//! # CNN2Gate (reproduction)
+//!
+//! A general framework for implementing convolutional neural networks on
+//! FPGA — Ghaffari & Savaria, 2020 — rebuilt as a three-layer Rust + JAX
+//! + Pallas stack with simulated hardware substrates (see DESIGN.md).
+//!
+//! Pipeline: [`onnx`] parses a model into the [`ir`] graph; [`quant`]
+//! applies the user-given fixed-point formats; [`dse`] explores the
+//! `(N_i, N_l)` parallelism options against the [`estimator`]'s resource
+//! model; [`synth`] orchestrates the (simulated) synthesis flow; [`sim`]
+//! executes the deeply pipelined kernel architecture cycle-by-cycle for
+//! latency; [`runtime`] runs the AOT-compiled JAX/Pallas emulation path
+//! on the PJRT CPU client; [`coordinator`] wires it all into the
+//! end-to-end flow the CLI and examples drive.
+
+pub mod cli;
+pub mod coordinator;
+pub mod dse;
+pub mod estimator;
+pub mod ir;
+pub mod metrics;
+pub mod onnx;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod synth;
+pub mod testkit;
+pub mod util;

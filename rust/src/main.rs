@@ -1,0 +1,379 @@
+//! `cnn2gate` — leader entrypoint + CLI.
+//!
+//! Subcommands mirror the paper's workflow (Fig. 4a):
+//!   info     parse a model, print the extracted computation flow
+//!   dse      design-space exploration on a device (RL or brute force)
+//!   synth    full (simulated) synthesis flow: DSE + fit + latency
+//!   emulate  emulation mode: run the AOT artifacts through PJRT
+//!   serve    batched emulation-inference server demo
+//!   tables   regenerate the paper's Tables 1-4 + Fig. 6
+//!   devices  list the FPGA device database
+
+use anyhow::{anyhow, bail, Result};
+
+use cnn2gate::cli::Args;
+use cnn2gate::coordinator::{pipeline, InferenceServer, ServerConfig};
+use cnn2gate::dse::{brute, rl, RlConfig};
+use cnn2gate::estimator::{device, estimate, Thresholds};
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::metrics;
+use cnn2gate::onnx::zoo;
+use cnn2gate::report::{baselines, comparison_table, fig6, table1, table2};
+use cnn2gate::runtime::{load_golden, Manifest, Tensor};
+use cnn2gate::sim::simulate;
+use cnn2gate::synth::{self, Explorer};
+use cnn2gate::util::rng::Rng;
+use cnn2gate::util::table::fmt_duration;
+
+const USAGE: &str = "\
+cnn2gate — CNN2Gate reproduction (Rust + JAX + Pallas)
+
+USAGE:
+  cnn2gate info    --model <zoo|file.json>
+  cnn2gate dse     --model <m> --device <d> [--explorer rl|bf] [--seed N]
+  cnn2gate synth   --model <m> --device <d> [--explorer rl|bf] [--quantize]
+  cnn2gate emulate --model <m> [--artifacts DIR]
+  cnn2gate serve   --model <m> [--artifacts DIR] [--requests N] [--batch B]
+  cnn2gate tables  [--artifacts DIR]
+  cnn2gate devices
+
+MODELS: tiny lenet5 alexnet vgg16 (or a cnn2gate-onnx-subset .json file)
+DEVICES: 5csema4 5csema5 arria10 stratixv
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn thresholds_from(args: &Args) -> Result<Thresholds> {
+    Ok(Thresholds {
+        lut: args.get_f64("max-lut", 101.0)?,
+        dsp: args.get_f64("max-dsp", 101.0)?,
+        mem: args.get_f64("max-mem", 101.0)?,
+        reg: args.get_f64("max-reg", 101.0)?,
+    })
+}
+
+fn explorer_from(args: &Args) -> Result<Explorer> {
+    match args.get_or("explorer", "rl") {
+        "rl" => Ok(Explorer::Reinforcement),
+        "bf" => Ok(Explorer::BruteForce),
+        other => bail!("--explorer must be rl or bf, got '{other}'"),
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let flags = [
+        "model", "device", "explorer", "artifacts", "requests", "batch", "seed", "max-lut",
+        "max-dsp", "max-mem", "max-reg",
+    ];
+    let switches = ["quantize", "verbose"];
+    let args = Args::parse(argv, &flags, &switches)?;
+    match args.subcommand.as_str() {
+        "info" => cmd_info(&args),
+        "dse" => cmd_dse(&args),
+        "synth" => cmd_synth(&args),
+        "emulate" => cmd_emulate(&args),
+        "serve" => cmd_serve(&args),
+        "tables" => cmd_tables(&args),
+        "devices" => cmd_devices(),
+        other => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let g = pipeline::load_model(model, false)?;
+    let flow = ComputationFlow::extract(&g).map_err(|e| anyhow!("{e}"))?;
+    println!("model: {} (input {:?})", g.name, g.input.shape);
+    println!(
+        "params: {:.2} M   ops: {:.2} GOp/frame   rounds: {} conv + {} fc",
+        g.param_count() as f64 / 1e6,
+        flow.gops(),
+        flow.conv_rounds(),
+        flow.fc_rounds()
+    );
+    for l in &flow.layers {
+        println!(
+            "  round {:>2}: {:<9} red={:<6} out_f={:<5} pixels={:<6} macs={:.1} M",
+            l.index + 1,
+            if l.is_conv() { "conv/pool" } else { "fc" },
+            l.reduction_dim(),
+            l.out_features(),
+            l.out_pixels(),
+            l.macs() as f64 / 1e6
+        );
+    }
+    let space = cnn2gate::dse::OptionSpace::from_flow(&flow);
+    println!("option space: Ni {:?} x Nl {:?}", space.ni, space.nl);
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let dev = pipeline::load_device(args.get("device").unwrap_or("arria10"))?;
+    let g = pipeline::load_model(model, false)?;
+    let flow = ComputationFlow::extract(&g).map_err(|e| anyhow!("{e}"))?;
+    let th = thresholds_from(args)?;
+    let result = match explorer_from(args)? {
+        Explorer::BruteForce => brute::explore(&flow, dev, th),
+        Explorer::Reinforcement => {
+            let cfg = RlConfig {
+                seed: args.get_usize("seed", 0xD5E)? as u64,
+                ..RlConfig::default()
+            };
+            rl::explore(&flow, dev, th, cfg)
+        }
+    };
+    println!("device: {}", dev.name);
+    match result.best {
+        Some((ni, nl)) => println!("H_best = ({ni},{nl})  F_max = {:.2}%", result.f_max),
+        None => println!("Does not fit"),
+    }
+    println!(
+        "queries: {}   wall: {}   modeled (Intel compiler scale): {}",
+        result.queries,
+        fmt_duration(result.wall_seconds),
+        fmt_duration(result.modeled_seconds)
+    );
+    for (ni, nl, favg, feasible) in &result.trace {
+        println!(
+            "  ({ni:>2},{nl:>2})  F_avg {favg:>6.2}%  {}",
+            if *feasible { "fits" } else { "over budget" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let dev = pipeline::load_device(args.get("device").unwrap_or("arria10"))?;
+    let quantize = args.has("quantize");
+    let g = pipeline::load_model(model, quantize)?;
+    let spec = cnn2gate::quant::QuantSpec::default();
+    let rep = synth::run(
+        &g,
+        dev,
+        explorer_from(args)?,
+        thresholds_from(args)?,
+        (quantize && g.has_weights()).then_some(&spec),
+    )?;
+    println!("model: {}   device: {}", rep.model, rep.device);
+    match (&rep.estimate, &rep.sim) {
+        (Some(est), Some(sim)) => {
+            println!(
+                "H_best = ({},{})   fmax = {:.0} MHz   synthesis ≈ {}",
+                est.ni,
+                est.nl,
+                est.fmax_mhz,
+                fmt_duration(rep.synthesis_minutes.unwrap_or(0.0) * 60.0)
+            );
+            println!(
+                "resources: ALM {:.0} ({:.0}%)  DSP {:.0} ({:.0}%)  RAM {:.0} ({:.0}%)  regs ({:.0}%)",
+                est.alms, est.p_lut, est.dsps, est.p_dsp, est.ram_blocks, est.p_mem, est.p_reg
+            );
+            println!("{}", fig6(sim).render());
+            let gops = metrics::gops_per_s(sim.gops, sim.total_millis);
+            println!(
+                "latency {:.2} ms   throughput {gops:.1} GOp/s   density {:.3} GOp/s/DSP   efficiency {:.0}% of lane peak",
+                sim.total_millis,
+                metrics::gops_per_dsp(gops, est.dsps),
+                100.0 * sim.efficiency()
+            );
+        }
+        _ => println!("Does not fit on {}", rep.device),
+    }
+    if let Some(q) = &rep.quant {
+        println!(
+            "quantization: {} tensors, worst |err| {:.4}, worst saturation {:.2}%",
+            q.tensors.len(),
+            q.worst_abs_err(),
+            100.0 * q.worst_sat_ratio()
+        );
+    }
+    Ok(())
+}
+
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    args.get_or("artifacts", "artifacts").into()
+}
+
+fn cmd_emulate(args: &Args) -> Result<()> {
+    let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let dir = artifacts_dir(args);
+    match pipeline::run_emulation(&dir, model)? {
+        Some(res) => {
+            println!(
+                "emulation {} OK: PJRT exec {}   golden max |err| = {:.3e}",
+                res.model,
+                fmt_duration(res.exec_seconds),
+                res.golden_max_err.unwrap_or(f64::NAN)
+            );
+            Ok(())
+        }
+        None => {
+            // no golden: time with synthetic weights instead (Table 1's
+            // emulation column for the big models)
+            let manifest = Manifest::load(&dir)?;
+            let art = manifest
+                .model(model)
+                .ok_or_else(|| anyhow!("model '{model}' not in {}", dir.display()))?;
+            let seconds = pipeline::time_emulation_synthetic(art, 1)?;
+            println!(
+                "emulation {model}: {} per frame (synthetic weights)",
+                fmt_duration(seconds)
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("lenet5");
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    let art = manifest
+        .model(model)
+        .ok_or_else(|| anyhow!("model '{model}' not in manifest"))?;
+    let weights = match &art.golden {
+        Some(g) => load_golden(g)?.params,
+        None => pipeline::synthetic_weights(art, 7),
+    };
+    let n = args.get_usize("requests", 32)?;
+    let cfg = ServerConfig {
+        max_batch: args.get_usize("batch", 8)?,
+        ..ServerConfig::default()
+    };
+    let server = InferenceServer::start(art, weights, cfg)?;
+    let mut rng = Rng::new(11);
+    let numel: usize = art.input.shape.iter().product();
+    for _ in 0..n {
+        let input = match server.out_dtype() {
+            cnn2gate::ir::DType::F32 => {
+                Tensor::F32(art.input.shape.clone(), rng.tensor_f32(numel))
+            }
+            _ => Tensor::I32(
+                art.input.shape.clone(),
+                (0..numel).map(|_| rng.range_i64(-128, 127) as i32).collect(),
+            ),
+        };
+        server.infer(input)?;
+    }
+    let stats = server.shutdown();
+    println!(
+        "served {} requests in {} batches: exec p50 {:.2} ms p99 {:.2} ms | e2e p50 {:.2} ms p99 {:.2} ms",
+        stats.served,
+        stats.batches,
+        stats.exec.p50_ms,
+        stats.exec.p99_ms,
+        stats.e2e.p50_ms,
+        stats.e2e.p99_ms
+    );
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
+    let alex = zoo::build("alexnet", false).unwrap();
+    let vgg = zoo::build("vgg16", false).unwrap();
+    let aflow = ComputationFlow::extract(&alex).map_err(|e| anyhow!("{e}"))?;
+    let vflow = ComputationFlow::extract(&vgg).map_err(|e| anyhow!("{e}"))?;
+    let th = Thresholds::default();
+
+    // Table 1
+    let mut rows = Vec::new();
+    let dir = artifacts_dir(args);
+    if let Ok(manifest) = Manifest::load(&dir) {
+        let a = manifest
+            .model("alexnet")
+            .map(|art| pipeline::time_emulation_synthetic(art, 1))
+            .transpose()?;
+        let v = manifest
+            .model("vgg16")
+            .map(|art| pipeline::time_emulation_synthetic(art, 1))
+            .transpose()?;
+        rows.push((
+            "CPU (PJRT emulation)".to_string(),
+            "N/A".to_string(),
+            a.map(|s| s * 1e3),
+            v.map(|s| s * 1e3),
+            None,
+        ));
+    }
+    for (dev, ni, nl) in [(&CYCLONE_V_5CSEMA5, 8, 8), (&ARRIA_10_GX1150, 16, 32)] {
+        let est = estimate(&aflow, dev, ni, nl);
+        let asim = simulate(&aflow, dev, ni, nl);
+        let vsim = simulate(&vflow, dev, ni, nl);
+        rows.push((
+            dev.name.to_string(),
+            format!(
+                "Logic {:.0}% DSP {:.0}% RAM {:.0}%",
+                est.p_lut, est.p_dsp, est.p_mem
+            ),
+            Some(asim.total_millis),
+            Some(vsim.total_millis),
+            Some(est.fmax_mhz),
+        ));
+    }
+    println!("{}", table1(&rows).render());
+
+    // Table 2
+    let mut reports = Vec::new();
+    for dev in [&CYCLONE_V_5CSEMA4, &CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150] {
+        let rep = synth::run(&alex, dev, Explorer::BruteForce, th, None)?;
+        let rl_res = rl::explore(&aflow, dev, th, RlConfig::default());
+        let bf_res = brute::explore(&aflow, dev, th);
+        reports.push((rep, rl_res, bf_res));
+    }
+    let refs: Vec<_> = reports.iter().map(|(a, b, c)| (a, b, c)).collect();
+    println!("{}", table2(&refs).render());
+
+    // Tables 3 + 4
+    let est = estimate(&aflow, &ARRIA_10_GX1150, 16, 32);
+    let asim = simulate(&aflow, &ARRIA_10_GX1150, 16, 32);
+    println!(
+        "{}",
+        comparison_table(
+            "Table 3: Comparison to existing works, AlexNet (Ni,Nl)=(16,32)",
+            &baselines::alexnet(),
+            &asim,
+            (est.alms, est.p_lut),
+            (est.dsps, est.p_dsp),
+        )
+        .render()
+    );
+    let vsim = simulate(&vflow, &ARRIA_10_GX1150, 16, 32);
+    println!(
+        "{}",
+        comparison_table(
+            "Table 4: Comparison to existing works, VGG-16 (Ni,Nl)=(16,32)",
+            &baselines::vgg16(),
+            &vsim,
+            (est.alms, est.p_lut),
+            (est.dsps, est.p_dsp),
+        )
+        .render()
+    );
+
+    // Fig 6
+    println!("{}", fig6(&asim).render());
+    Ok(())
+}
+
+fn cmd_devices() -> Result<()> {
+    for d in device::all() {
+        println!(
+            "{:<24} family {:?}  ALM {}  DSP {}  RAM blocks {}  mem {} bits  base {} MHz",
+            d.name, d.family, d.alms, d.dsps, d.ram_blocks, d.mem_bits, d.base_clock_mhz
+        );
+    }
+    Ok(())
+}

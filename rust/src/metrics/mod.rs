@@ -1,0 +1,122 @@
+//! Throughput / performance-density metrics used across Tables 1, 3, 4.
+//!
+//! The paper compares designs by latency (ms, batch 1), Performance
+//! (GOp/s, counting MAC = 2 ops) and performance density (GOp/s/DSP —
+//! §5: "CNN2Gate performance density (GOp/s/DSP) is higher (0.266) when
+//! compared to 0.234 for [20]").
+
+/// Achieved throughput in GOp/s for `gops` of work finished in `ms`.
+pub fn gops_per_s(gops: f64, ms: f64) -> f64 {
+    if ms <= 0.0 {
+        return 0.0;
+    }
+    gops / (ms / 1e3)
+}
+
+/// Performance density (GOp/s per DSP block).
+pub fn gops_per_dsp(gops_per_s: f64, dsps: f64) -> f64 {
+    if dsps <= 0.0 {
+        return 0.0;
+    }
+    gops_per_s / dsps
+}
+
+/// Peak lane-array throughput: 2 ops/MAC * N_i * N_l * fmax.
+pub fn peak_gops_per_s(ni: usize, nl: usize, fmax_mhz: f64) -> f64 {
+    2.0 * (ni * nl) as f64 * fmax_mhz * 1e6 / 1e9
+}
+
+/// Latency percentile over a sample of seconds (p in [0, 100]).
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0 * (samples.len() - 1) as f64).round() as usize;
+    samples[rank.min(samples.len() - 1)]
+}
+
+/// Summary statistics for a latency sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencyStats {
+    pub fn from_seconds(samples: &[f64]) -> LatencyStats {
+        let mut ms: Vec<f64> = samples.iter().map(|s| s * 1e3).collect();
+        let n = ms.len();
+        if n == 0 {
+            return LatencyStats {
+                n: 0,
+                mean_ms: 0.0,
+                p50_ms: 0.0,
+                p99_ms: 0.0,
+                min_ms: 0.0,
+                max_ms: 0.0,
+            };
+        }
+        let mean = ms.iter().sum::<f64>() / n as f64;
+        let p50 = percentile(&mut ms, 50.0);
+        let p99 = percentile(&mut ms, 99.0);
+        LatencyStats {
+            n,
+            mean_ms: mean,
+            p50_ms: p50,
+            p99_ms: p99,
+            min_ms: ms[0],
+            max_ms: ms[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table3_consistency() {
+        // 1.46 GOp in 18.24 ms -> 80.04 GOp/s; 300 DSPs -> 0.266 GOp/s/DSP
+        let g = gops_per_s(1.46, 18.24);
+        assert!((g - 80.04).abs() < 0.2, "{g}");
+        let d = gops_per_dsp(g, 300.0);
+        assert!((d - 0.266).abs() < 0.005, "{d}");
+    }
+
+    #[test]
+    fn paper_table4_consistency() {
+        // 31.1 GOp in 205 ms -> 151.7 GOp/s
+        let g = gops_per_s(31.1, 205.0);
+        assert!((g - 151.7).abs() < 1.0, "{g}");
+    }
+
+    #[test]
+    fn peak_formula() {
+        // (16,32) at 199 MHz: 512 MACs * 2 * 199e6 = 203.8 GOp/s
+        let p = peak_gops_per_s(16, 32, 199.0);
+        assert!((p - 203.8).abs() < 0.1, "{p}");
+    }
+
+    #[test]
+    fn percentile_and_stats() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 / 1e3).collect();
+        let stats = LatencyStats::from_seconds(&samples);
+        assert_eq!(stats.n, 100);
+        assert!((stats.p50_ms - 50.0).abs() <= 1.0);
+        assert!((stats.p99_ms - 99.0).abs() <= 1.0);
+        assert_eq!(stats.min_ms, 1.0);
+        assert_eq!(stats.max_ms, 100.0);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_total() {
+        assert_eq!(gops_per_s(1.0, 0.0), 0.0);
+        assert_eq!(gops_per_dsp(1.0, 0.0), 0.0);
+        assert_eq!(LatencyStats::from_seconds(&[]).n, 0);
+    }
+}

@@ -1,0 +1,10 @@
+//! ONNX front-end: the generalized model-analysis layer of paper §4.1.
+//!
+//! `parser` reads the ONNX-subset exchange files; `zoo` builds the
+//! evaluation topologies programmatically (AlexNet, VGG-16, LeNet-5,
+//! tiny). Both produce the same [`crate::ir::Graph`] IR.
+
+pub mod parser;
+pub mod zoo;
+
+pub use parser::{parse_doc, parse_file};

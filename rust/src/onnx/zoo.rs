@@ -1,0 +1,310 @@
+//! Model zoo: programmatic builders for the topologies the paper
+//! evaluates (AlexNet, VGG-16) plus LeNet-5 and a tiny test CNN.
+//!
+//! These mirror `python/compile/model.py` layer-for-layer; the pytest /
+//! cargo integration tests cross-check both sides against the ONNX-subset
+//! JSON emitted by `make artifacts`.
+
+use std::collections::HashMap;
+
+use crate::ir::{ConvAttrs, DType, Graph, Initializer, Node, Op, PoolAttrs, TensorInfo};
+use crate::util::rng::Rng;
+
+/// Internal layer description used by the builders.
+enum L {
+    Conv {
+        cout: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+        relu: bool,
+    },
+    Pool {
+        k: usize,
+        s: usize,
+    },
+    Fc {
+        n: usize,
+        relu: bool,
+    },
+}
+
+fn conv(cout: usize, k: usize, s: usize, p: usize) -> L {
+    L::Conv {
+        cout,
+        k,
+        s,
+        p,
+        relu: true,
+    }
+}
+
+fn pool(k: usize, s: usize) -> L {
+    L::Pool { k, s }
+}
+
+fn fc(n: usize) -> L {
+    L::Fc { n, relu: true }
+}
+
+fn fc_last(n: usize) -> L {
+    L::Fc { n, relu: false }
+}
+
+fn spec(name: &str) -> Option<(Vec<usize>, Vec<L>)> {
+    let layers = match name {
+        "tiny" => (
+            vec![1, 8, 8],
+            vec![conv(4, 3, 1, 1), pool(2, 2), fc_last(10)],
+        ),
+        "lenet5" => (
+            vec![1, 28, 28],
+            vec![
+                conv(6, 5, 1, 2),
+                pool(2, 2),
+                conv(16, 5, 1, 0),
+                pool(2, 2),
+                fc(120),
+                fc(84),
+                fc_last(10),
+            ],
+        ),
+        "alexnet" => (
+            vec![3, 224, 224],
+            vec![
+                conv(64, 11, 4, 2),
+                pool(3, 2),
+                conv(192, 5, 1, 2),
+                pool(3, 2),
+                conv(384, 3, 1, 1),
+                conv(256, 3, 1, 1),
+                conv(256, 3, 1, 1),
+                pool(3, 2),
+                fc(4096),
+                fc(4096),
+                fc_last(1000),
+            ],
+        ),
+        "vgg16" => {
+            let mut ls = Vec::new();
+            for (reps, cout) in [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)] {
+                for _ in 0..reps {
+                    ls.push(conv(cout, 3, 1, 1));
+                }
+                ls.push(pool(2, 2));
+            }
+            ls.push(fc(4096));
+            ls.push(fc(4096));
+            ls.push(fc_last(1000));
+            (vec![3, 224, 224], ls)
+        }
+        _ => return None,
+    };
+    Some(layers)
+}
+
+/// Names available in the zoo.
+pub fn names() -> &'static [&'static str] {
+    &["tiny", "lenet5", "alexnet", "vgg16"]
+}
+
+/// Build a zoo model. `with_weights` materializes He-initialized
+/// synthetic parameters (deterministic seed per model); without it the
+/// initializers carry shape/dtype only (ONNX external-data style).
+pub fn build(name: &str, with_weights: bool) -> Option<Graph> {
+    let (input_shape, layers) = spec(name)?;
+    let mut rng = Rng::new(0xC44_2_6A7E ^ name.len() as u64);
+    let mut nodes = Vec::new();
+    let mut initializers = HashMap::new();
+    let mut tname = "input".to_string();
+    let mut t = 0usize;
+    let mut shape = input_shape.clone();
+    let fresh = |t: &mut usize| {
+        let n = format!("t{t}");
+        *t += 1;
+        n
+    };
+    for (li, layer) in layers.iter().enumerate() {
+        match layer {
+            L::Conv { cout, k, s, p, relu } => {
+                let cin = shape[0];
+                let (wname, bname) = (format!("l{li}_w"), format!("l{li}_b"));
+                let wlen = cout * cin * k * k;
+                initializers.insert(
+                    wname.clone(),
+                    Initializer {
+                        info: TensorInfo {
+                            shape: vec![*cout, cin, *k, *k],
+                            dtype: DType::F32,
+                        },
+                        data: with_weights.then(|| rng.he_weights(wlen, cin * k * k)),
+                    },
+                );
+                initializers.insert(
+                    bname.clone(),
+                    Initializer {
+                        info: TensorInfo {
+                            shape: vec![*cout],
+                            dtype: DType::F32,
+                        },
+                        data: with_weights
+                            .then(|| (0..*cout).map(|_| (rng.normal() * 0.05) as f32).collect()),
+                    },
+                );
+                let attrs = ConvAttrs {
+                    kernel: [*k, *k],
+                    strides: [*s, *s],
+                    pads: [*p, *p],
+                    dilations: [1, 1],
+                };
+                let out = fresh(&mut t);
+                nodes.push(Node {
+                    op: Op::Conv(attrs),
+                    inputs: vec![tname.clone(), wname, bname],
+                    outputs: vec![out.clone()],
+                });
+                let (oh, ow) = attrs.out_hw(shape[1], shape[2]).expect("zoo conv fits");
+                shape = vec![*cout, oh, ow];
+                tname = out;
+                if *relu {
+                    let out = fresh(&mut t);
+                    nodes.push(Node {
+                        op: Op::Relu,
+                        inputs: vec![tname.clone()],
+                        outputs: vec![out.clone()],
+                    });
+                    tname = out;
+                }
+            }
+            L::Pool { k, s } => {
+                let attrs = PoolAttrs {
+                    kernel: [*k, *k],
+                    strides: [*s, *s],
+                    pads: [0, 0],
+                };
+                let out = fresh(&mut t);
+                nodes.push(Node {
+                    op: Op::MaxPool(attrs),
+                    inputs: vec![tname.clone()],
+                    outputs: vec![out.clone()],
+                });
+                let (oh, ow) = attrs.out_hw(shape[1], shape[2]).expect("zoo pool fits");
+                shape = vec![shape[0], oh, ow];
+                tname = out;
+            }
+            L::Fc { n, relu } => {
+                if shape.len() > 1 {
+                    let out = fresh(&mut t);
+                    nodes.push(Node {
+                        op: Op::Flatten,
+                        inputs: vec![tname.clone()],
+                        outputs: vec![out.clone()],
+                    });
+                    tname = out;
+                    shape = vec![shape.iter().product()];
+                }
+                let kdim = shape[0];
+                let (wname, bname) = (format!("l{li}_w"), format!("l{li}_b"));
+                initializers.insert(
+                    wname.clone(),
+                    Initializer {
+                        info: TensorInfo {
+                            shape: vec![*n, kdim],
+                            dtype: DType::F32,
+                        },
+                        data: with_weights.then(|| rng.he_weights(n * kdim, kdim)),
+                    },
+                );
+                initializers.insert(
+                    bname.clone(),
+                    Initializer {
+                        info: TensorInfo {
+                            shape: vec![*n],
+                            dtype: DType::F32,
+                        },
+                        data: with_weights
+                            .then(|| (0..*n).map(|_| (rng.normal() * 0.05) as f32).collect()),
+                    },
+                );
+                let out = fresh(&mut t);
+                nodes.push(Node {
+                    op: Op::Gemm { trans_b: true },
+                    inputs: vec![tname.clone(), wname, bname],
+                    outputs: vec![out.clone()],
+                });
+                shape = vec![*n];
+                tname = out;
+                if *relu {
+                    let out = fresh(&mut t);
+                    nodes.push(Node {
+                        op: Op::Relu,
+                        inputs: vec![tname.clone()],
+                        outputs: vec![out.clone()],
+                    });
+                    tname = out;
+                }
+            }
+        }
+    }
+    let out = format!("t{t}");
+    nodes.push(Node {
+        op: Op::Softmax,
+        inputs: vec![tname.clone()],
+        outputs: vec![out.clone()],
+    });
+    Some(Graph {
+        name: name.to_string(),
+        input_name: "input".into(),
+        input: TensorInfo {
+            shape: input_shape,
+            dtype: DType::F32,
+        },
+        output_name: out,
+        nodes,
+        initializers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_zoo_models_validate() {
+        for name in names() {
+            let g = build(name, false).unwrap();
+            assert_eq!(g.validate(), Ok(()), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(build("resnet50", false).is_none());
+    }
+
+    #[test]
+    fn weights_are_deterministic() {
+        let a = build("tiny", true).unwrap();
+        let b = build("tiny", true).unwrap();
+        for (k, init) in &a.initializers {
+            assert_eq!(init.data, b.initializers[k].data, "{k}");
+        }
+    }
+
+    #[test]
+    fn param_counts_match_paper() {
+        let alex = build("alexnet", false).unwrap();
+        assert!((alex.param_count() as f64 / 1e6 - 61.1).abs() < 0.5);
+        let vgg = build("vgg16", false).unwrap();
+        assert!((vgg.param_count() as f64 / 1e6 - 138.4).abs() < 0.5);
+    }
+
+    #[test]
+    fn with_weights_fills_every_initializer() {
+        let g = build("lenet5", true).unwrap();
+        assert!(g.has_weights());
+        for init in g.initializers.values() {
+            assert_eq!(init.data.as_ref().unwrap().len(), init.info.numel());
+        }
+    }
+}

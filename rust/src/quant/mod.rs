@@ -1,0 +1,220 @@
+//! Post-training quantization application (paper §4.2).
+//!
+//! "CNN2Gate does not perform quantization itself, however, it can apply
+//! a given value that the user provides for a layer. This value can be
+//! expressed as an (N, m) pair where fixed-point weights/biases values
+//! are represented as N x 2^-m."
+//!
+//! [`QuantSpec`] carries the user-given per-layer (or global) formats;
+//! [`apply`] converts a float [`Graph`]'s initializers to int8 codes and
+//! reports per-tensor error statistics, which the emulation mode uses to
+//! decide whether the chosen m-values are acceptable before synthesis.
+
+use std::collections::HashMap;
+
+use crate::ir::Graph;
+use crate::util::fixed::{quantize_tensor, FixedFormat};
+
+/// Per-layer fixed-point configuration, mirroring the Python DEFAULT_QCFG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerQuant {
+    /// Fractional bits of input activation codes.
+    pub m_in: i8,
+    /// Fractional bits of weight codes.
+    pub m_w: i8,
+    /// Fractional bits of output activation codes.
+    pub m_out: i8,
+}
+
+impl Default for LayerQuant {
+    fn default() -> Self {
+        // matches python/compile/model.py DEFAULT_QCFG
+        LayerQuant {
+            m_in: 4,
+            m_w: 6,
+            m_out: 4,
+        }
+    }
+}
+
+impl LayerQuant {
+    /// Accumulator fractional bits (int32 accumulation).
+    pub fn m_acc(&self) -> i8 {
+        self.m_in + self.m_w
+    }
+}
+
+/// The user-provided quantization for a model: a global default plus
+/// optional per-layer overrides keyed by fused-layer index.
+#[derive(Debug, Clone, Default)]
+pub struct QuantSpec {
+    pub default: LayerQuant,
+    pub per_layer: HashMap<usize, LayerQuant>,
+}
+
+impl QuantSpec {
+    pub fn uniform(q: LayerQuant) -> Self {
+        QuantSpec {
+            default: q,
+            per_layer: HashMap::new(),
+        }
+    }
+
+    pub fn layer(&self, idx: usize) -> LayerQuant {
+        self.per_layer.get(&idx).copied().unwrap_or(self.default)
+    }
+}
+
+/// Quantized tensor + its error statistics.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub name: String,
+    pub codes: Vec<i8>,
+    pub m: i8,
+    pub max_abs_err: f64,
+    pub mean_abs_err: f64,
+    /// Fraction of elements that saturated.
+    pub sat_ratio: f64,
+}
+
+/// Result of applying a QuantSpec to a model's weights.
+#[derive(Debug, Clone)]
+pub struct QuantReport {
+    pub tensors: Vec<QuantizedTensor>,
+}
+
+impl QuantReport {
+    pub fn worst_sat_ratio(&self) -> f64 {
+        self.tensors.iter().map(|t| t.sat_ratio).fold(0.0, f64::max)
+    }
+
+    pub fn worst_abs_err(&self) -> f64 {
+        self.tensors.iter().map(|t| t.max_abs_err).fold(0.0, f64::max)
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&QuantizedTensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+}
+
+/// Quantize one float tensor to int8 with `m` fractional bits + stats.
+pub fn quantize_with_stats(name: &str, data: &[f32], m: i8) -> QuantizedTensor {
+    let fmt = FixedFormat::q8(m);
+    let codes = quantize_tensor(data, m);
+    let mut max_err = 0f64;
+    let mut sum_err = 0f64;
+    let mut saturated = 0usize;
+    for (&x, &c) in data.iter().zip(&codes) {
+        let err = (fmt.dequantize(c as i64) - x).abs() as f64;
+        max_err = max_err.max(err);
+        sum_err += err;
+        if c as i64 == fmt.min_code() || c as i64 == fmt.max_code() {
+            saturated += 1;
+        }
+    }
+    let n = data.len().max(1) as f64;
+    QuantizedTensor {
+        name: name.to_string(),
+        codes,
+        m,
+        max_abs_err: max_err,
+        mean_abs_err: sum_err / n,
+        sat_ratio: saturated as f64 / n,
+    }
+}
+
+/// Apply the spec to every *weight* initializer of a graph (biases go to
+/// the int32 accumulator scale and are kept as widened codes by the
+/// runtime; the 8-bit census here covers the tensors the DSP lanes see).
+///
+/// Weight initializer names follow the zoo/aot convention `l<idx>_w`.
+pub fn apply(g: &Graph, spec: &QuantSpec) -> Result<QuantReport, String> {
+    if !g.has_weights() {
+        return Err(format!(
+            "model '{}' has no resident weights to quantize",
+            g.name
+        ));
+    }
+    let mut tensors = Vec::new();
+    let mut names: Vec<&String> = g.initializers.keys().collect();
+    names.sort(); // deterministic report order
+    for name in names {
+        if !name.ends_with("_w") {
+            continue;
+        }
+        let idx: usize = name
+            .trim_start_matches('l')
+            .trim_end_matches("_w")
+            .parse()
+            .unwrap_or(0);
+        let q = spec.layer(idx);
+        let data = g.initializers[name].data.as_ref().unwrap();
+        tensors.push(quantize_with_stats(name, data, q.m_w));
+    }
+    if tensors.is_empty() {
+        return Err("no weight tensors found (expected l<idx>_w naming)".into());
+    }
+    Ok(QuantReport { tensors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::zoo;
+    use crate::testkit::for_all;
+
+    #[test]
+    fn apply_reports_every_weight_tensor() {
+        let g = zoo::build("lenet5", true).unwrap();
+        let report = apply(&g, &QuantSpec::default()).unwrap();
+        let expected = g.initializers.keys().filter(|k| k.ends_with("_w")).count();
+        assert_eq!(report.tensors.len(), expected);
+        assert!(report.worst_abs_err() <= 0.5 * 2f64.powi(-6) + 1e-9 || report.worst_sat_ratio() > 0.0);
+    }
+
+    #[test]
+    fn apply_requires_weights() {
+        let g = zoo::build("alexnet", false).unwrap();
+        assert!(apply(&g, &QuantSpec::default()).is_err());
+    }
+
+    #[test]
+    fn per_layer_override_wins() {
+        let mut spec = QuantSpec::default();
+        spec.per_layer.insert(
+            2,
+            LayerQuant {
+                m_in: 1,
+                m_w: 2,
+                m_out: 1,
+            },
+        );
+        assert_eq!(spec.layer(2).m_w, 2);
+        assert_eq!(spec.layer(0).m_w, spec.default.m_w);
+    }
+
+    #[test]
+    fn stats_error_bound_property() {
+        for_all("quantize error bounded by half LSB unless saturated", |g| {
+            let m = g.int(0, 7) as i8;
+            let len = g.usize(1, 256);
+            let data = g.tensor(len, 2.0);
+            let t = quantize_with_stats("w", &data, m);
+            let fmt = FixedFormat::q8(m);
+            if t.sat_ratio == 0.0 {
+                assert!(t.max_abs_err <= fmt.max_abs_error() + 1e-9);
+            }
+            assert!(t.mean_abs_err <= t.max_abs_err + 1e-12);
+        });
+    }
+
+    #[test]
+    fn m_acc_is_sum() {
+        let q = LayerQuant {
+            m_in: 3,
+            m_w: 5,
+            m_out: 2,
+        };
+        assert_eq!(q.m_acc(), 8);
+    }
+}

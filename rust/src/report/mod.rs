@@ -1,0 +1,8 @@
+//! Paper-table regeneration: literature baselines (Tables 3-4 columns)
+//! and renderers for Tables 1-4 + Fig. 6.
+
+pub mod baselines;
+pub mod tables;
+
+pub use baselines::BaselineRow;
+pub use tables::{comparison_table, fig6, table1, table2};

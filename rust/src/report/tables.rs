@@ -1,0 +1,214 @@
+//! Renderers that regenerate the paper's tables/figure from live results.
+//!
+//! Each function takes the structs the pipeline computed (SimReport,
+//! SynthReport, DseResult, baselines) and prints the same rows the paper
+//! reports. The benches call these; `cnn2gate report` exposes them on the
+//! CLI.
+
+use crate::dse::DseResult;
+use crate::metrics;
+use crate::sim::SimReport;
+use crate::synth::SynthReport;
+use crate::util::table::{fmt_count, fmt_duration, Table};
+
+use super::baselines::BaselineRow;
+
+/// Table 1: execution times for AlexNet and VGG (batch size = 1).
+/// `rows` = (platform label, resource summary, alexnet_ms, vgg_ms, fmax).
+pub fn table1(rows: &[(String, String, Option<f64>, Option<f64>, Option<f64>)]) -> Table {
+    let mut t = Table::new(
+        "Table 1: Execution times for AlexNet and VGG (batch size = 1)",
+        &["Platform", "Resource Utilization", "AlexNet", "VGG-16", "f_max"],
+    );
+    for (platform, resources, alex, vgg, fmax) in rows {
+        t.row(&[
+            platform.clone(),
+            resources.clone(),
+            alex.map_or("N/A".into(), |ms| fmt_duration(ms / 1e3)),
+            vgg.map_or("N/A".into(), |ms| fmt_duration(ms / 1e3)),
+            fmax.map_or("N/A".into(), |f| format!("{f:.0} MHz")),
+        ]);
+    }
+    t.footnote("resource utilization shown for AlexNet");
+    t
+}
+
+/// Table 2: synthesis and DSE details (AlexNet).
+pub fn table2(reports: &[(&SynthReport, &DseResult, &DseResult)]) -> Table {
+    // reports: (synth report, rl result, bf result) per platform
+    let mut t = Table::new(
+        "Table 2: CNN2Gate Synthesis and Design-Space Exploration Details (AlexNet)",
+        &[
+            "Platform",
+            "RL-DSE time",
+            "BF-DSE time",
+            "Synthesis time",
+            "Resources Consumed",
+            "Hardware Options (Ni,Nl)",
+        ],
+    );
+    for (rep, rl, bf) in reports {
+        let consumed = match &rep.estimate {
+            Some(e) => format!(
+                "ALM: {} DSP: {:.0} RAM: {:.0} Mem: {} bits",
+                fmt_count(e.alms),
+                e.dsps,
+                e.ram_blocks,
+                fmt_count(e.mem_bits)
+            ),
+            None => "Does not fit".into(),
+        };
+        t.row(&[
+            rep.device.to_string(),
+            fmt_duration(rl.modeled_seconds),
+            fmt_duration(bf.modeled_seconds),
+            rep.synthesis_minutes
+                .map_or("N/A".into(), |m| fmt_duration(m * 60.0)),
+            consumed,
+            rep.option()
+                .map_or("N/A".into(), |(ni, nl)| format!("({ni},{nl})")),
+        ]);
+    }
+    t
+}
+
+/// Tables 3/4: comparison to existing works.
+pub fn comparison_table(
+    title: &str,
+    baselines: &[BaselineRow],
+    ours: &SimReport,
+    our_logic: (f64, f64),
+    our_dsp: (f64, f64),
+) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "Work", "FPGA", "Method", "Freq (MHz)", "Logic", "DSP", "Latency (ms)",
+            "Precision", "Perf (GOp/s)", "GOp/s/DSP",
+        ],
+    );
+    for b in baselines {
+        t.row(&[
+            b.work.to_string(),
+            b.fpga.to_string(),
+            b.synthesis_method.to_string(),
+            b.freq_mhz.map_or("-".into(), |f| format!("{f:.0}")),
+            b.logic
+                .map_or("-".into(), |(n, p)| format!("{} ({p:.0}%)", fmt_count(n))),
+            b.dsp
+                .map_or("-".into(), |(n, p)| format!("{n:.0} ({p:.1}%)")),
+            b.latency_ms.map_or("-".into(), |l| format!("{l:.2}")),
+            b.precision.to_string(),
+            format!("{:.2}", b.gops),
+            b.dsp
+                .map_or("-".into(), |(n, _)| format!("{:.3}", metrics::gops_per_dsp(b.gops, n))),
+        ]);
+    }
+    let our_gops = metrics::gops_per_s(ours.gops, ours.total_millis);
+    t.row(&[
+        format!("{} [This work]", ours.model),
+        ours.device.clone(),
+        "OpenCL (sim)".into(),
+        format!("{:.0}", ours.fmax_mhz),
+        format!("{} ({:.0}%)", fmt_count(our_logic.0), our_logic.1),
+        format!("{:.0} ({:.1}%)", our_dsp.0, our_dsp.1),
+        format!("{:.2}", ours.total_millis),
+        "8 fixed".into(),
+        format!("{our_gops:.2}"),
+        format!("{:.3}", metrics::gops_per_dsp(our_gops, our_dsp.0)),
+    ]);
+    t.footnote("batch size = 1; baselines are published numbers from the cited works");
+    t
+}
+
+/// Fig. 6: per-layer execution-time breakdown with ASCII bars.
+pub fn fig6(rep: &SimReport) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Fig. 6: per-layer execution time, {} on {} (Ni,Nl)=({},{})",
+            rep.model, rep.device, rep.ni, rep.nl
+        ),
+        &["Round", "Time (ms)", "MACs (M)", "Bound", "Bar"],
+    );
+    let max_ms = rep
+        .layers
+        .iter()
+        .map(|l| l.millis)
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    for l in &rep.layers {
+        let width = ((l.millis / max_ms) * 40.0).round() as usize;
+        t.row(&[
+            l.label.clone(),
+            format!("{:.3}", l.millis),
+            format!("{:.1}", l.macs as f64 / 1e6),
+            if l.memory_bound { "memory" } else { "compute" }.into(),
+            "#".repeat(width.max(1)),
+        ]);
+    }
+    t.footnote(format!("total {:.2} ms", rep.total_millis));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::device::ARRIA_10_GX1150;
+    use crate::ir::ComputationFlow;
+    use crate::onnx::zoo;
+    use crate::report::baselines;
+    use crate::sim::simulate;
+
+    fn alexnet_sim() -> SimReport {
+        let g = zoo::build("alexnet", false).unwrap();
+        let flow = ComputationFlow::extract(&g).unwrap();
+        simulate(&flow, &ARRIA_10_GX1150, 16, 32)
+    }
+
+    #[test]
+    fn table1_renders() {
+        let t = table1(&[(
+            "Arria 10".into(),
+            "Logic: 30% DSP: 20%".into(),
+            Some(18.0),
+            Some(205.0),
+            Some(199.0),
+        )]);
+        let s = t.render();
+        assert!(s.contains("18.0 ms") && s.contains("205.0 ms"));
+    }
+
+    #[test]
+    fn comparison_table_includes_all_rows() {
+        let sim = alexnet_sim();
+        let t = comparison_table(
+            "Table 3",
+            &baselines::alexnet(),
+            &sim,
+            (129_000.0, 30.0),
+            (300.0, 20.0),
+        );
+        let s = t.render();
+        assert_eq!(t.rows.len(), 5); // 4 baselines + ours
+        assert!(s.contains("This work"));
+        assert!(s.contains("fpgaConvNet"));
+    }
+
+    #[test]
+    fn fig6_bars_monotone_with_time() {
+        let sim = alexnet_sim();
+        let t = fig6(&sim);
+        assert_eq!(t.rows.len(), 8);
+        // the longest round gets the longest bar
+        let bars: Vec<usize> = t.rows.iter().map(|r| r[4].len()).collect();
+        let times: Vec<f64> = sim.layers.iter().map(|l| l.millis).collect();
+        let bar_argmax = bars.iter().enumerate().max_by_key(|(_, &b)| b).unwrap().0;
+        let t_argmax = times
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(bar_argmax, t_argmax);
+    }
+}

@@ -1,0 +1,304 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! (build time) and the Rust runtime (request path).
+//!
+//! `artifacts/manifest.json` indexes one HLO-text module per model
+//! variant plus optional golden dumps (input + params + expected output)
+//! that the integration tests replay bit-for-bit through PJRT.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ir::DType;
+use crate::util::json::Json;
+
+pub const FORMAT: &str = "cnn2gate-artifacts-v1";
+
+/// Shape + dtype of one PJRT parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One array inside a golden dump.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GoldenArray {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub offset: usize,
+}
+
+/// Golden dump descriptor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Golden {
+    pub file: PathBuf,
+    pub nbytes: usize,
+    pub arrays: Vec<GoldenArray>,
+}
+
+/// Decoded golden data: input, params (in declared order), expected output.
+#[derive(Debug, Clone)]
+pub struct GoldenData {
+    pub input: Tensor,
+    pub params: Vec<Tensor>,
+    pub expected: Tensor,
+}
+
+/// A concrete tensor loaded from a golden file (f32 or i32 payload).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(s, _) | Tensor::I32(s, _) => s,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32(_, d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32(_, d) => Some(d),
+            _ => None,
+        }
+    }
+}
+
+/// Manifest entry for one compiled model variant.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub input: ParamSpec,
+    pub params: Vec<ParamSpec>,
+    pub golden: Option<Golden>,
+    /// Quantization config when this is an int8 variant.
+    pub quantization: Option<(i8, i8, i8)>, // (m_in, m_w, m_out)
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub ni: usize,
+    pub nl: usize,
+    pub models: Vec<ModelArtifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        if doc.get("format").as_str() != Some(FORMAT) {
+            bail!("unsupported manifest format {:?}", doc.get("format").as_str());
+        }
+        let mut models = Vec::new();
+        let obj = doc
+            .get("models")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+        for (name, entry) in obj.iter() {
+            models.push(parse_entry(dir, name, entry)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            ni: doc.get("ni").as_usize().unwrap_or(16),
+            nl: doc.get("nl").as_usize().unwrap_or(32),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelArtifact> {
+        self.models.iter().find(|m| m.name == name)
+    }
+}
+
+fn parse_spec(name: &str, v: &Json) -> Result<ParamSpec> {
+    Ok(ParamSpec {
+        name: name.to_string(),
+        shape: v
+            .get("shape")
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("spec '{name}' missing shape"))?,
+        dtype: DType::parse(v.get("dtype").as_str().unwrap_or("float32"))
+            .ok_or_else(|| anyhow!("spec '{name}' bad dtype"))?,
+    })
+}
+
+fn parse_entry(dir: &Path, name: &str, entry: &Json) -> Result<ModelArtifact> {
+    let hlo = entry
+        .get("hlo")
+        .as_str()
+        .ok_or_else(|| anyhow!("model '{name}' missing hlo"))?;
+    let input = parse_spec("input", entry.get("input"))?;
+    let mut params = Vec::new();
+    for p in entry.get("params").as_arr().unwrap_or(&[]) {
+        let pname = p.get("name").as_str().unwrap_or("param");
+        params.push(parse_spec(pname, p)?);
+    }
+    let golden = if entry.get("golden").is_null() {
+        None
+    } else {
+        let g = entry.get("golden");
+        let mut arrays = Vec::new();
+        for a in g.get("arrays").as_arr().unwrap_or(&[]) {
+            arrays.push(GoldenArray {
+                name: a.get("name").as_str().unwrap_or("").to_string(),
+                shape: a.get("shape").as_usize_vec().unwrap_or_default(),
+                dtype: DType::parse(a.get("dtype").as_str().unwrap_or("float32"))
+                    .ok_or_else(|| anyhow!("golden array bad dtype"))?,
+                offset: a.get("offset").as_usize().unwrap_or(0),
+            });
+        }
+        Some(Golden {
+            file: dir.join(g.get("file").as_str().unwrap_or("")),
+            nbytes: g.get("nbytes").as_usize().unwrap_or(0),
+            arrays,
+        })
+    };
+    let quantization = if entry.get("quantization").is_null() {
+        None
+    } else {
+        let q = entry.get("quantization");
+        Some((
+            q.get("m_in").as_i64().unwrap_or(4) as i8,
+            q.get("m_w").as_i64().unwrap_or(6) as i8,
+            q.get("m_out").as_i64().unwrap_or(4) as i8,
+        ))
+    };
+    Ok(ModelArtifact {
+        name: name.to_string(),
+        hlo_path: dir.join(hlo),
+        input,
+        params,
+        golden,
+        quantization,
+    })
+}
+
+/// Load and slice a golden dump into concrete tensors.
+pub fn load_golden(g: &Golden) -> Result<GoldenData> {
+    let bytes = std::fs::read(&g.file)
+        .with_context(|| format!("reading golden {}", g.file.display()))?;
+    if bytes.len() != g.nbytes {
+        bail!(
+            "golden {}: expected {} bytes, found {}",
+            g.file.display(),
+            g.nbytes,
+            bytes.len()
+        );
+    }
+    let mut tensors = Vec::new();
+    for a in &g.arrays {
+        let numel: usize = a.shape.iter().product();
+        let size = numel * a.dtype.size_bytes();
+        let end = a
+            .offset
+            .checked_add(size)
+            .filter(|&e| e <= bytes.len())
+            .ok_or_else(|| anyhow!("golden array '{}' out of bounds", a.name))?;
+        let chunk = &bytes[a.offset..end];
+        let t = match a.dtype {
+            DType::F32 => Tensor::F32(
+                a.shape.clone(),
+                chunk
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            DType::I32 => Tensor::I32(
+                a.shape.clone(),
+                chunk
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            DType::I8 => Tensor::I32(
+                a.shape.clone(),
+                chunk.iter().map(|&b| b as i8 as i32).collect(),
+            ),
+        };
+        tensors.push(t);
+    }
+    if tensors.len() < 2 {
+        bail!("golden must contain at least input and output");
+    }
+    let expected = tensors.pop().unwrap();
+    let input = tensors.remove(0);
+    Ok(GoldenData {
+        input,
+        params: tensors,
+        expected,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_manifest_when_present() {
+        let Some(dir) = repo_artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("tiny").is_some());
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.input.shape, vec![1, 8, 8]);
+        assert!(tiny.hlo_path.exists());
+        assert!(tiny.golden.is_some());
+    }
+
+    #[test]
+    fn golden_roundtrip_when_present() {
+        let Some(dir) = repo_artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let tiny = m.model("tiny").unwrap();
+        let g = load_golden(tiny.golden.as_ref().unwrap()).unwrap();
+        assert_eq!(g.input.shape(), &[1, 8, 8]);
+        assert_eq!(g.params.len(), tiny.params.len());
+        // tiny ends in softmax: expected output sums to 1
+        let out = g.expected.as_f32().unwrap();
+        let sum: f32 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "softmax sum {sum}");
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,207 @@
+//! PJRT execution engine — the emulation-mode substrate (paper §4.2).
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO *text*
+//! is the interchange format (the crate's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos — see /opt/xla-example/README.md).
+//!
+//! Python never runs here: the artifacts were lowered once at build time
+//! and this module is the only thing the request path touches.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ir::DType;
+
+use super::artifacts::{ModelArtifact, Tensor};
+
+/// A PJRT CPU runtime holding the client and compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled model ready to execute.
+pub struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    /// Parameter count expected (input + weights).
+    pub arity: usize,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client (once per process).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text module.
+    pub fn load_hlo_text(&self, path: &Path, name: &str, arity: usize) -> Result<Compiled> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Compiled {
+            exe,
+            arity,
+            name: name.to_string(),
+        })
+    }
+
+    /// Load a model artifact (input + params arity from the manifest).
+    pub fn load_artifact(&self, art: &ModelArtifact) -> Result<Compiled> {
+        self.load_hlo_text(&art.hlo_path, &art.name, 1 + art.params.len())
+    }
+}
+
+/// Build a PJRT literal from a tensor (f32 passthrough; i32 carries int8
+/// codes widened at the AOT boundary — see aot.py).
+pub fn literal_of(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32(_, data) => xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape f32 literal: {e}"))?,
+        Tensor::I32(_, data) => xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape i32 literal: {e}"))?,
+    };
+    Ok(lit)
+}
+
+/// Result of one execution.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    pub tensor: Tensor,
+    pub exec_seconds: f64,
+}
+
+impl Compiled {
+    /// Execute with the given inputs; unwraps the 1-tuple the AOT path
+    /// emits (`return_tuple=True`).
+    pub fn run(&self, inputs: &[Tensor], out_dtype: DType) -> Result<RunOutput> {
+        if inputs.len() != self.arity {
+            bail!(
+                "model '{}' expects {} inputs, got {}",
+                self.name,
+                self.arity,
+                inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(literal_of)
+            .collect::<Result<_>>()
+            .context("building literals")?;
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing '{}': {e}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        let exec_seconds = t0.elapsed().as_secs_f64();
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        let shape = out
+            .array_shape()
+            .map_err(|e| anyhow!("result shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let tensor = match out_dtype {
+            DType::F32 => Tensor::F32(
+                dims,
+                out.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
+            ),
+            DType::I32 | DType::I8 => Tensor::I32(
+                dims,
+                out.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
+            ),
+        };
+        Ok(RunOutput {
+            tensor,
+            exec_seconds,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{load_golden, Manifest};
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn tiny_golden_replays_through_pjrt() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let art = manifest.model("tiny").unwrap();
+        let golden = load_golden(art.golden.as_ref().unwrap()).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let compiled = rt.load_artifact(art).unwrap();
+        let mut inputs = vec![golden.input.clone()];
+        inputs.extend(golden.params.iter().cloned());
+        let out = compiled.run(&inputs, DType::F32).unwrap();
+        let got = out.tensor.as_f32().unwrap();
+        let expect = golden.expected.as_f32().unwrap();
+        assert_eq!(got.len(), expect.len());
+        for (g, e) in got.iter().zip(expect) {
+            assert!((g - e).abs() < 1e-5, "mismatch {g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn tiny_int8_golden_replays_exactly() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let art = manifest.model("tiny_int8").unwrap();
+        let golden = load_golden(art.golden.as_ref().unwrap()).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let compiled = rt.load_artifact(art).unwrap();
+        let mut inputs = vec![golden.input.clone()];
+        inputs.extend(golden.params.iter().cloned());
+        let out = compiled.run(&inputs, DType::I32).unwrap();
+        assert_eq!(
+            out.tensor.as_i32().unwrap(),
+            golden.expected.as_i32().unwrap(),
+            "fixed-point path must be bit-exact"
+        );
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let art = manifest.model("tiny").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let compiled = rt.load_artifact(art).unwrap();
+        let err = compiled
+            .run(&[Tensor::F32(vec![1], vec![0.0])], DType::F32)
+            .unwrap_err();
+        assert!(err.to_string().contains("expects"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Emulation-mode runtime: loads the AOT-compiled JAX/Pallas HLO-text
+//! artifacts and executes them on the PJRT CPU client. Python is never
+//! on this path — `make artifacts` ran once at build time.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{load_golden, GoldenData, Manifest, ModelArtifact, ParamSpec, Tensor};
+pub use engine::{literal_of, Compiled, RunOutput, Runtime};

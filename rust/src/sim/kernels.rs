@@ -1,0 +1,231 @@
+//! Cycle-stepped simulation of one pipelined round (paper Fig. 3c/5).
+//!
+//! Four stages — memory read, conv lane array, pool, memory write —
+//! connected by [`Pipe`]s, stepped one kernel clock at a time in vector
+//! granularity: a token is one `N_i`-wide vector MAC's worth of work on
+//! the conv pipe, one output element per lane elsewhere.
+//!
+//! This stepping model is the ground truth the analytical round model in
+//! [`super::engine`] is validated against (property test: the two agree
+//! within a few percent on randomized small rounds). Table-scale runs use
+//! the analytical model so regenerating the paper's tables stays
+//! interactive; the stepper also feeds the stall/backpressure statistics
+//! reported by `cnn2gate synth --report`.
+
+use crate::estimator::model::PIPE_DEPTH;
+
+use super::pipe::Pipe;
+
+/// Work description of one round at vector granularity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundWork {
+    /// Output pixels (OH*OW for conv rounds, 1 for FC).
+    pub pixels: usize,
+    /// Output-feature groups: ceil(out_features / N_l).
+    pub groups: usize,
+    /// Reduction steps per output: ceil(reduction_dim / N_i).
+    pub red_steps: usize,
+    /// Bytes the memory-read kernel must fetch per reduction step
+    /// (feature vector broadcast + per-lane weight vectors).
+    pub bytes_per_step: usize,
+    /// DDR bytes deliverable per cycle at the kernel clock.
+    pub ddr_bytes_per_cycle: f64,
+    /// Output bytes written per (pixel, group) completion.
+    pub out_bytes: usize,
+}
+
+/// Per-stage cycle/stall census from a stepped run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepReport {
+    pub cycles: u64,
+    pub rd_busy: u64,
+    pub conv_busy: u64,
+    pub wr_busy: u64,
+    pub rd_to_conv_full_stalls: u64,
+    pub conv_to_wr_full_stalls: u64,
+    pub conv_empty_stalls: u64,
+}
+
+impl StepReport {
+    pub fn conv_utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.conv_busy as f64 / self.cycles as f64
+    }
+}
+
+/// Step one round to completion and return the census.
+///
+/// Stage behaviour per cycle:
+/// * mem_read: if DDR credit allows and the feed pipe has room, produce
+///   one vector token (consuming `bytes_per_step` of DDR credit).
+/// * conv: pop one token per cycle; after `red_steps` tokens one output
+///   group-slice (N_l elements) is complete and pushed to the pool pipe.
+/// * pool+write: drain one output token per cycle, consuming DDR write
+///   credit (pool is pass-through at this granularity; its comparators
+///   never run slower than one element/lane/cycle).
+pub fn step_round(work: &RoundWork) -> StepReport {
+    let total_outputs = work.pixels * work.groups; // group-slices to emit
+    let total_steps = total_outputs * work.red_steps; // vector MACs
+    let mut feed = Pipe::new("rd->conv", PIPE_DEPTH.max(1));
+    let mut out = Pipe::new("conv->wr", PIPE_DEPTH.max(1));
+    let mut rep = StepReport::default();
+
+    let mut produced_steps = 0usize; // vectors fetched
+    let mut consumed_steps = 0usize; // vectors MACed
+    let mut emitted = 0usize; // group-slices pushed
+    let mut written = 0usize; // group-slices written back
+    let mut red_progress = 0usize;
+    let mut ddr_credit = 0f64; // bytes available this cycle
+
+    while written < total_outputs {
+        rep.cycles += 1;
+        ddr_credit += work.ddr_bytes_per_cycle;
+
+        // -- memory write (drains DDR credit first: writes have priority
+        //    so the pipeline can always retire) --
+        if !out.is_empty() && ddr_credit >= work.out_bytes as f64 {
+            out.pop();
+            written += 1;
+            ddr_credit -= work.out_bytes as f64;
+            rep.wr_busy += 1;
+        }
+
+        // -- conv lane array --
+        if consumed_steps < total_steps {
+            if let Some(_tok) = feed.pop() {
+                consumed_steps += 1;
+                red_progress += 1;
+                rep.conv_busy += 1;
+                if red_progress == work.red_steps {
+                    red_progress = 0;
+                    if out.push(emitted as u64) {
+                        emitted += 1;
+                    } else {
+                        // output pipe full: the completed slice re-queues
+                        // next cycle by rolling the reduction back one
+                        // step (models the lane array holding its result)
+                        consumed_steps -= 1;
+                        red_progress = work.red_steps - 1;
+                        rep.conv_to_wr_full_stalls += 1;
+                    }
+                }
+            } else {
+                rep.conv_empty_stalls += 1;
+            }
+        }
+
+        // -- memory read --
+        if produced_steps < total_steps && ddr_credit >= work.bytes_per_step as f64 {
+            if feed.push(produced_steps as u64) {
+                produced_steps += 1;
+                ddr_credit -= work.bytes_per_step as f64;
+                rep.rd_busy += 1;
+            } else {
+                rep.rd_to_conv_full_stalls += 1;
+            }
+        }
+
+        // credit does not accumulate indefinitely (DDR can't time-travel),
+        // but the cap must admit the largest single transaction or a slow
+        // bus could never complete it
+        let cap = (work.ddr_bytes_per_cycle * 8.0)
+            .max(2.0 * work.bytes_per_step.max(work.out_bytes) as f64);
+        ddr_credit = ddr_credit.min(cap);
+    }
+    rep
+}
+
+/// The analytical cycle count the engine uses (see engine.rs for the
+/// closed form); exposed here so the property test can compare.
+pub fn analytical_cycles(work: &RoundWork) -> u64 {
+    let total_outputs = (work.pixels * work.groups) as u64;
+    let compute = total_outputs * work.red_steps as u64;
+    let rd_bytes = compute as f64 * work.bytes_per_step as f64;
+    let wr_bytes = total_outputs as f64 * work.out_bytes as f64;
+    let ddr = ((rd_bytes + wr_bytes) / work.ddr_bytes_per_cycle).ceil() as u64;
+    compute.max(ddr) + work.red_steps as u64 + 2 // + pipeline fill
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::for_all;
+
+    #[test]
+    fn compute_bound_round_is_step_limited() {
+        let w = RoundWork {
+            pixels: 64,
+            groups: 2,
+            red_steps: 10,
+            bytes_per_step: 4,
+            ddr_bytes_per_cycle: 1000.0, // DDR never the limit
+            out_bytes: 4,
+        };
+        let rep = step_round(&w);
+        let ideal = (64 * 2 * 10) as u64;
+        assert!(rep.cycles >= ideal);
+        assert!(rep.cycles < ideal + 2 * PIPE_DEPTH as u64);
+        assert!(rep.conv_utilization() > 0.9, "{}", rep.conv_utilization());
+    }
+
+    #[test]
+    fn memory_bound_round_shows_empty_stalls() {
+        let w = RoundWork {
+            pixels: 32,
+            groups: 2,
+            red_steps: 8,
+            bytes_per_step: 64,
+            ddr_bytes_per_cycle: 8.0, // 8x slower than compute needs
+            out_bytes: 8,
+        };
+        let rep = step_round(&w);
+        assert!(rep.conv_empty_stalls > 0);
+        assert!(rep.conv_utilization() < 0.5);
+        // cycles ≈ bytes / bandwidth
+        let bytes = (32 * 2 * 8 * 64 + 32 * 2 * 8) as f64;
+        let expect = bytes / 8.0;
+        let ratio = rep.cycles as f64 / expect;
+        assert!((0.9..1.3).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn analytical_matches_stepped_within_tolerance() {
+        for_all("analytical ≈ stepped cycles", |g| {
+            let w = RoundWork {
+                pixels: g.usize(1, 96),
+                groups: g.usize(1, 8),
+                red_steps: g.usize(1, 64),
+                bytes_per_step: g.usize(1, 128),
+                ddr_bytes_per_cycle: g.f64(1.0, 256.0),
+                out_bytes: g.usize(1, 32),
+            };
+            let stepped = step_round(&w).cycles as f64;
+            let analytical = analytical_cycles(&w) as f64;
+            let rel = (stepped - analytical).abs() / stepped.max(1.0);
+            // tiny rounds are dominated by pipeline fill, so allow an
+            // absolute slack of one fill in addition to the relative band
+            let abs_ok = (stepped - analytical).abs() <= (w.red_steps + 64) as f64;
+            assert!(
+                rel < 0.15 || abs_ok,
+                "stepped {stepped} vs analytical {analytical} (rel {rel:.3}) for {w:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn conservation_all_outputs_written() {
+        let w = RoundWork {
+            pixels: 17,
+            groups: 3,
+            red_steps: 5,
+            bytes_per_step: 12,
+            ddr_bytes_per_cycle: 20.0,
+            out_bytes: 6,
+        };
+        let rep = step_round(&w);
+        assert_eq!(rep.wr_busy as usize, 17 * 3);
+        assert_eq!(rep.conv_busy as usize, 17 * 3 * 5);
+    }
+}

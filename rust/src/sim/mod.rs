@@ -1,0 +1,11 @@
+//! Cycle-level simulator of the deeply pipelined OpenCL kernel
+//! architecture (paper §3.2, Fig. 3c/5) — the stand-in for FPGA
+//! execution that regenerates Table 1 and Fig. 6.
+
+pub mod engine;
+pub mod kernels;
+pub mod pipe;
+
+pub use engine::{simulate, simulate_batched, simulate_layer, BatchReport, LayerTiming, SimReport};
+pub use kernels::{analytical_cycles, step_round, RoundWork, StepReport};
+pub use pipe::Pipe;

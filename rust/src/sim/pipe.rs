@@ -1,0 +1,135 @@
+//! OpenCL pipes as FIFOs (paper §3.2.2, Fig. 3b).
+//!
+//! "In FPGAs, pipes are implemented as FIFOs" — this module is the
+//! cycle-stepped FIFO used by the stage simulator in [`super::kernels`],
+//! with full/empty stall accounting so backpressure between the deeply
+//! pipelined kernels is observable.
+
+use std::collections::VecDeque;
+
+/// A bounded FIFO carrying opaque work tokens, with stall counters.
+#[derive(Debug, Clone)]
+pub struct Pipe {
+    pub name: &'static str,
+    capacity: usize,
+    queue: VecDeque<u64>,
+    /// Cycles a producer wanted to push but the pipe was full.
+    pub full_stalls: u64,
+    /// Cycles a consumer wanted to pop but the pipe was empty.
+    pub empty_stalls: u64,
+    /// Total tokens that transited the pipe.
+    pub transferred: u64,
+    /// High-water mark of occupancy.
+    pub max_occupancy: usize,
+}
+
+impl Pipe {
+    pub fn new(name: &'static str, capacity: usize) -> Self {
+        assert!(capacity > 0, "pipe capacity must be positive");
+        Pipe {
+            name,
+            capacity,
+            queue: VecDeque::with_capacity(capacity),
+            full_stalls: 0,
+            empty_stalls: 0,
+            transferred: 0,
+            max_occupancy: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.queue.len() >= self.capacity
+    }
+
+    /// Try to push a token; on a full pipe, count a stall and refuse.
+    pub fn push(&mut self, token: u64) -> bool {
+        if self.is_full() {
+            self.full_stalls += 1;
+            false
+        } else {
+            self.queue.push_back(token);
+            self.max_occupancy = self.max_occupancy.max(self.queue.len());
+            true
+        }
+    }
+
+    /// Try to pop a token; on an empty pipe, count a stall.
+    pub fn pop(&mut self) -> Option<u64> {
+        match self.queue.pop_front() {
+            Some(t) => {
+                self.transferred += 1;
+                Some(t)
+            }
+            None => {
+                self.empty_stalls += 1;
+                None
+            }
+        }
+    }
+
+    /// Occupancy as a fraction of capacity.
+    pub fn fill_ratio(&self) -> f64 {
+        self.queue.len() as f64 / self.capacity as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::for_all;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut p = Pipe::new("t", 4);
+        for i in 0..4 {
+            assert!(p.push(i));
+        }
+        assert!(!p.push(99)); // full
+        assert_eq!(p.full_stalls, 1);
+        for i in 0..4 {
+            assert_eq!(p.pop(), Some(i));
+        }
+        assert_eq!(p.pop(), None);
+        assert_eq!(p.empty_stalls, 1);
+        assert_eq!(p.transferred, 4);
+    }
+
+    #[test]
+    fn conservation_property() {
+        for_all("tokens in == tokens out + resident", |g| {
+            let cap = g.usize(1, 32);
+            let mut p = Pipe::new("prop", cap);
+            let mut pushed = 0u64;
+            let mut popped = 0u64;
+            for _ in 0..g.usize(1, 500) {
+                if g.bool() {
+                    if p.push(pushed) {
+                        pushed += 1;
+                    }
+                } else if p.pop().is_some() {
+                    popped += 1;
+                }
+            }
+            assert_eq!(pushed, popped + p.len() as u64);
+            assert!(p.max_occupancy <= cap);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be positive")]
+    fn zero_capacity_rejected() {
+        Pipe::new("bad", 0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Automated synthesis workflow orchestrator (paper §4.2, Fig. 4a).
+//!
+//! Ties the full CNN2Gate pipeline together for one model + target:
+//! flow extraction → (optional) quantization application → DSE (RL or
+//! BF) → resource estimate at H_best → synthesis-time model → latency
+//! simulation. Emulation mode instead routes execution through the PJRT
+//! runtime (see [`crate::coordinator`]).
+//!
+//! "CNN2Gate is also capable of building and running the CNN model in
+//! both emulation and full flow mode."
+
+use anyhow::{anyhow, Result};
+
+use crate::dse::{brute, rl, DseResult, RlConfig};
+use crate::estimator::{synthesis_minutes, Device, ResourceEstimate, Thresholds};
+use crate::ir::{ComputationFlow, Graph};
+use crate::quant::{self, QuantReport, QuantSpec};
+use crate::sim::{simulate, SimReport};
+
+/// Which explorer drives the fit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Explorer {
+    BruteForce,
+    Reinforcement,
+}
+
+/// Build mode (paper §4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// CPU verification path (PJRT, seconds to build).
+    Emulation,
+    /// Full FPGA flow (simulated synthesis, hours modeled).
+    FullFlow,
+}
+
+/// Everything the synthesis flow produced for one target.
+#[derive(Debug, Clone)]
+pub struct SynthReport {
+    pub model: String,
+    pub device: &'static str,
+    pub explorer: Explorer,
+    pub dse: DseResult,
+    /// Present when the design fits.
+    pub estimate: Option<ResourceEstimate>,
+    pub synthesis_minutes: Option<f64>,
+    pub sim: Option<SimReport>,
+    pub quant: Option<QuantReport>,
+}
+
+impl SynthReport {
+    pub fn fits(&self) -> bool {
+        self.estimate.is_some()
+    }
+
+    pub fn option(&self) -> Option<(usize, usize)> {
+        self.dse.best
+    }
+
+    pub fn latency_ms(&self) -> Option<f64> {
+        self.sim.as_ref().map(|s| s.total_millis)
+    }
+}
+
+/// Run the flow for `graph` on `device`.
+///
+/// `quant_spec` is the user-given post-training quantization; pass `None`
+/// to skip the application step (models without resident weights).
+pub fn run(
+    graph: &Graph,
+    device: &'static Device,
+    explorer: Explorer,
+    thresholds: Thresholds,
+    quant_spec: Option<&QuantSpec>,
+) -> Result<SynthReport> {
+    let flow = ComputationFlow::extract(graph).map_err(|e| anyhow!("flow extraction: {e}"))?;
+
+    let quant = match quant_spec {
+        Some(spec) => Some(quant::apply(graph, spec).map_err(|e| anyhow!("quantization: {e}"))?),
+        None => None,
+    };
+
+    let dse = match explorer {
+        Explorer::BruteForce => brute::explore(&flow, device, thresholds),
+        Explorer::Reinforcement => rl::explore(&flow, device, thresholds, RlConfig::default()),
+    };
+
+    let (estimate, synth_min, sim) = match (dse.best, &dse.best_estimate) {
+        (Some((ni, nl)), Some(est)) => {
+            let minutes = synthesis_minutes(est, device);
+            let sim = simulate(&flow, device, ni, nl);
+            (Some(est.clone()), Some(minutes), Some(sim))
+        }
+        _ => (None, None, None),
+    };
+
+    Ok(SynthReport {
+        model: graph.name.clone(),
+        device: device.name,
+        explorer,
+        dse,
+        estimate,
+        synthesis_minutes: synth_min,
+        sim,
+        quant,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
+    use crate::onnx::zoo;
+
+    #[test]
+    fn full_flow_alexnet_arria10() {
+        let g = zoo::build("alexnet", true).unwrap();
+        let spec = QuantSpec::default();
+        let rep = run(
+            &g,
+            &ARRIA_10_GX1150,
+            Explorer::BruteForce,
+            Thresholds::default(),
+            Some(&spec),
+        )
+        .unwrap();
+        assert!(rep.fits());
+        assert_eq!(rep.option(), Some((16, 32)));
+        // Table 2: 8.5 hrs synthesis
+        let synth = rep.synthesis_minutes.unwrap();
+        assert!((synth - 510.0).abs() < 40.0, "{synth}");
+        // Table 1: 18 ms
+        let lat = rep.latency_ms().unwrap();
+        assert!((lat - 18.24).abs() < 2.0, "{lat}");
+        assert!(rep.quant.is_some());
+    }
+
+    #[test]
+    fn rl_flow_matches_bf_choice() {
+        let g = zoo::build("alexnet", false).unwrap();
+        let bf = run(&g, &CYCLONE_V_5CSEMA5, Explorer::BruteForce, Thresholds::default(), None)
+            .unwrap();
+        let rl = run(
+            &g,
+            &CYCLONE_V_5CSEMA5,
+            Explorer::Reinforcement,
+            Thresholds::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(bf.option(), rl.option());
+        assert!(rl.dse.queries < bf.dse.queries);
+    }
+
+    #[test]
+    fn no_fit_report_is_complete() {
+        let g = zoo::build("alexnet", false).unwrap();
+        let rep = run(
+            &g,
+            &CYCLONE_V_5CSEMA4,
+            Explorer::BruteForce,
+            Thresholds::default(),
+            None,
+        )
+        .unwrap();
+        assert!(!rep.fits());
+        assert_eq!(rep.latency_ms(), None);
+        assert_eq!(rep.synthesis_minutes, None);
+    }
+
+    #[test]
+    fn quantization_requires_weights() {
+        let g = zoo::build("alexnet", false).unwrap(); // no weights
+        let spec = QuantSpec::default();
+        let err = run(
+            &g,
+            &ARRIA_10_GX1150,
+            Explorer::BruteForce,
+            Thresholds::default(),
+            Some(&spec),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("quantization"));
+    }
+}

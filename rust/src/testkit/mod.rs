@@ -1,0 +1,134 @@
+//! Property-testing kit (the offline image has no `proptest`).
+//!
+//! A deliberately small shrinking-free QuickCheck: seeded generators over
+//! the repo's PRNG + a case runner that reports the failing seed so any
+//! counterexample is reproducible with `PROP_SEED=<n> cargo test`.
+//!
+//! Used by the DSE, simulator and quantizer invariants (DESIGN.md §5.14).
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn cases() -> u64 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5eed_cafe)
+}
+
+/// Run `prop` for `cases()` seeds; panic with the failing seed on error.
+///
+/// ```no_run
+/// # // no_run: doctest binaries lack the xla rpath in this image
+/// use cnn2gate::testkit::{for_all, Gen};
+/// for_all("addition commutes", |g| {
+///     let (a, b) = (g.int(-1000, 1000), g.int(-1000, 1000));
+///     assert_eq!(a + b, b + a);
+/// });
+/// ```
+pub fn for_all(name: &str, prop: impl Fn(&mut Gen)) {
+    let n = cases();
+    let base = base_seed();
+    for case in 0..n {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9e37_79b9));
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed on case {case} (PROP_SEED={seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generator handle passed to properties.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choose(items)
+    }
+
+    /// Vector of `len` draws from `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// A power of two in `[2^lo_exp, 2^hi_exp]`.
+    pub fn pow2(&mut self, lo_exp: u32, hi_exp: u32) -> usize {
+        1usize << self.int(lo_exp as i64, hi_exp as i64)
+    }
+
+    /// f32 tensor with normal(0, scale) entries.
+    pub fn tensor(&mut self, len: usize, scale: f64) -> Vec<f32> {
+        (0..len).map(|_| (self.rng.normal() * scale) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNT: AtomicU64 = AtomicU64::new(0);
+        for_all("counter", |_| {
+            COUNT.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(COUNT.load(Ordering::Relaxed), cases());
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        for_all("bounds", |g| {
+            let v = g.int(-5, 9);
+            assert!((-5..=9).contains(&v));
+            let p = g.pow2(2, 6);
+            assert!(p.is_power_of_two() && (4..=64).contains(&p));
+            let x = g.f64(1.5, 2.5);
+            assert!((1.5..2.5).contains(&x) || x == 2.5);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_propagates() {
+        for_all("always fails", |g| {
+            assert!(g.int(0, 10) > 100);
+        });
+    }
+}

@@ -1,0 +1,140 @@
+//! Fixed-point (N, m) arithmetic — the paper's quantized number format.
+//!
+//! A value is an integer code `N` with implicit scale `2^-m`
+//! (real = N * 2^-m, paper §4.2). This module is the Rust twin of
+//! `python/compile/kernels/ref.py`'s quantize/dequantize/requantize and is
+//! exercised bit-exactly against the golden artifacts in the integration
+//! tests.
+
+/// Per-tensor fixed-point format: `bits` total, `m` fractional bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedFormat {
+    pub bits: u8,
+    pub m: i8,
+}
+
+impl FixedFormat {
+    pub const fn q8(m: i8) -> Self {
+        FixedFormat { bits: 8, m }
+    }
+
+    pub fn min_code(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    pub fn max_code(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// Resolution (LSB value) of this format.
+    pub fn lsb(&self) -> f64 {
+        2f64.powi(-(self.m as i32))
+    }
+
+    /// Float -> code, round-to-nearest, saturating.
+    pub fn quantize(&self, x: f32) -> i64 {
+        let scaled = (x as f64 * 2f64.powi(self.m as i32)).round() as i64;
+        scaled.clamp(self.min_code(), self.max_code())
+    }
+
+    /// Code -> float.
+    pub fn dequantize(&self, code: i64) -> f32 {
+        (code as f64 * self.lsb()) as f32
+    }
+
+    /// Worst-case absolute quantization error inside the representable
+    /// range (half an LSB).
+    pub fn max_abs_error(&self) -> f64 {
+        0.5 * self.lsb()
+    }
+
+    /// Representable real range `[lo, hi]`.
+    pub fn range(&self) -> (f32, f32) {
+        (self.dequantize(self.min_code()), self.dequantize(self.max_code()))
+    }
+}
+
+/// Rescale an accumulator code with `m_acc` fractional bits to a code with
+/// `m_out` fractional bits (arithmetic shift, round-half-up, saturate to
+/// `bits`). Matches `ref.requantize` bit-for-bit — the inter-stage step of
+/// the FPGA datapath.
+pub fn requantize(acc: i64, m_acc: i8, m_out: i8, bits: u8) -> i64 {
+    let shift = m_acc as i32 - m_out as i32;
+    let rounded = if shift > 0 {
+        (acc + (1i64 << (shift - 1))) >> shift
+    } else if shift < 0 {
+        acc << (-shift)
+    } else {
+        acc
+    };
+    let lo = -(1i64 << (bits - 1));
+    let hi = (1i64 << (bits - 1)) - 1;
+    rounded.clamp(lo, hi)
+}
+
+/// Quantize a float tensor to int8 codes.
+pub fn quantize_tensor(xs: &[f32], m: i8) -> Vec<i8> {
+    let f = FixedFormat::q8(m);
+    xs.iter().map(|&x| f.quantize(x) as i8).collect()
+}
+
+/// Dequantize int8 codes back to floats.
+pub fn dequantize_tensor(codes: &[i8], m: i8) -> Vec<f32> {
+    let f = FixedFormat::q8(m);
+    codes.iter().map(|&c| f.dequantize(c as i64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_saturates() {
+        let f = FixedFormat::q8(4);
+        assert_eq!(f.quantize(1000.0), 127);
+        assert_eq!(f.quantize(-1000.0), -128);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let f = FixedFormat::q8(5);
+        for i in -100..100 {
+            let x = i as f32 * 0.037;
+            let (lo, hi) = f.range();
+            if x > lo && x < hi {
+                let err = (f.dequantize(f.quantize(x)) - x).abs() as f64;
+                assert!(err <= f.max_abs_error() + 1e-9, "x={x} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_matches_python_semantics() {
+        // mirrored cases from ref.requantize
+        assert_eq!(requantize(100, 9, 3, 8), 2); // (100 + 32) >> 6
+        assert_eq!(requantize(-100, 9, 3, 8), -2); // arithmetic shift floors
+        assert_eq!(requantize(5, 3, 5, 8), 20); // left shift
+        assert_eq!(requantize(1 << 20, 4, 4, 8), 127); // saturate hi
+        assert_eq!(requantize(-(1 << 20), 4, 4, 8), -128); // saturate lo
+    }
+
+    #[test]
+    fn requantize_monotone() {
+        let mut prev = i64::MIN;
+        for acc in (-5000..5000).step_by(7) {
+            let q = requantize(acc, 10, 2, 8);
+            assert!(q >= prev);
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn tensor_helpers_roundtrip() {
+        let xs = vec![0.0f32, 0.5, -0.25, 3.9, -4.0];
+        let q = quantize_tensor(&xs, 5);
+        let d = dequantize_tensor(&q, 5);
+        for (x, y) in xs.iter().zip(&d) {
+            assert!((x - y).abs() <= 0.5 / 32.0 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Substrate utilities the offline crate set forces in-tree: JSON codec,
+//! PRNG, fixed-point arithmetic, table formatting (see DESIGN.md §2).
+
+pub mod fixed;
+pub mod json;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,149 @@
+//! Plain-text table rendering for reports and the paper-table benches.
+//!
+//! Every bench prints the same rows the paper reports; this module keeps
+//! the formatting in one place so Table 1-4 and Fig. 6 outputs are
+//! uniform and diffable.
+
+/// A simple column-aligned table with a title and optional footnote.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub footnote: Option<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            footnote: None,
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn rows_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn footnote(&mut self, note: impl Into<String>) -> &mut Self {
+        self.footnote = Some(note.into());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        if let Some(note) = &self.footnote {
+            out.push_str(&format!("  note: {note}\n"));
+        }
+        out
+    }
+}
+
+/// Format seconds with an adaptive unit, the way the paper mixes ms/s.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.1} hrs", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{:.2} s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.1} ms", secs * 1e3)
+    } else {
+        format!("{:.1} µs", secs * 1e6)
+    }
+}
+
+/// Format a count with K/M suffix (resource tables: "427 K ALMs").
+pub fn fmt_count(n: f64) -> String {
+    if n >= 1e6 {
+        format!("{:.1} M", n / 1e6)
+    } else if n >= 1e3 {
+        format!("{:.0} K", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.rows_str(&["x", "y"]).rows_str(&["longer", "z"]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + sep + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.rows_str(&["only-one"]);
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(2.0 * 3600.0), "2.0 hrs");
+        assert_eq!(fmt_duration(150.0), "2.5 min");
+        assert_eq!(fmt_duration(1.5), "1.50 s");
+        assert_eq!(fmt_duration(0.018), "18.0 ms");
+        assert_eq!(fmt_duration(5e-6), "5.0 µs");
+    }
+
+    #[test]
+    fn count_units() {
+        assert_eq!(fmt_count(427_000.0), "427 K");
+        assert_eq!(fmt_count(55.5e6), "55.5 M");
+        assert_eq!(fmt_count(83.0), "83");
+    }
+}

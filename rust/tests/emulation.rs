@@ -1,0 +1,140 @@
+//! Emulation-mode integration tests over the PJRT runtime: the contract
+//! between the Python AOT path and the Rust request path, exercised via
+//! goldens and the batched server. These are the tests that prove the
+//! three-layer architecture composes (Pallas kernel → JAX model → HLO →
+//! PJRT → coordinator).
+
+use std::path::{Path, PathBuf};
+
+use cnn2gate::coordinator::pipeline;
+use cnn2gate::coordinator::{InferenceServer, ServerConfig};
+use cnn2gate::ir::DType;
+use cnn2gate::onnx::parser;
+use cnn2gate::runtime::{load_golden, Manifest, Runtime, Tensor};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn all_goldens_replay_through_pjrt() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut replayed = 0;
+    for art in &manifest.models {
+        let Some(golden) = &art.golden else { continue };
+        let golden = load_golden(golden).unwrap();
+        let compiled = rt.load_artifact(art).unwrap();
+        let mut inputs = vec![golden.input.clone()];
+        inputs.extend(golden.params.iter().cloned());
+        let out_dtype = if art.quantization.is_some() {
+            DType::I32
+        } else {
+            DType::F32
+        };
+        let out = compiled.run(&inputs, out_dtype).unwrap();
+        match (&out.tensor, &golden.expected) {
+            (Tensor::F32(_, got), Tensor::F32(_, want)) => {
+                for (g, w) in got.iter().zip(want) {
+                    assert!((g - w).abs() < 1e-4, "{}: {g} vs {w}", art.name);
+                }
+            }
+            (Tensor::I32(_, got), Tensor::I32(_, want)) => {
+                assert_eq!(got, want, "{}: int8 path must be exact", art.name);
+            }
+            _ => panic!("{}: dtype mismatch", art.name),
+        }
+        replayed += 1;
+    }
+    assert!(replayed >= 4, "expected ≥4 goldens, replayed {replayed}");
+}
+
+#[test]
+fn emulation_is_deterministic() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let art = manifest.model("lenet5").unwrap();
+    let golden = load_golden(art.golden.as_ref().unwrap()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let compiled = rt.load_artifact(art).unwrap();
+    let mut inputs = vec![golden.input.clone()];
+    inputs.extend(golden.params.iter().cloned());
+    let a = compiled.run(&inputs, DType::F32).unwrap();
+    let b = compiled.run(&inputs, DType::F32).unwrap();
+    assert_eq!(a.tensor, b.tensor);
+}
+
+#[test]
+fn parsed_weights_equal_golden_weights() {
+    // aot.py exports the ONNX-subset weights with the same seed it used
+    // for the goldens: the two independent paths must agree bit-for-bit.
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let art = manifest.model("lenet5").unwrap();
+    let golden = load_golden(art.golden.as_ref().unwrap()).unwrap();
+    let graph = parser::parse_file(&dir.join("models/lenet5.json")).unwrap();
+    for (spec, gold) in art.params.iter().zip(&golden.params) {
+        let parsed = graph.initializers[&spec.name].data.as_ref().unwrap();
+        assert_eq!(parsed, gold.as_f32().unwrap(), "{}", spec.name);
+    }
+}
+
+#[test]
+fn server_batching_respects_max_batch() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let art = manifest.model("tiny").unwrap();
+    let golden = load_golden(art.golden.as_ref().unwrap()).unwrap();
+    let server = InferenceServer::start(
+        art,
+        golden.params.clone(),
+        ServerConfig {
+            max_batch: 4,
+            queue_depth: 64,
+        },
+    )
+    .unwrap();
+    for _ in 0..16 {
+        server.infer(golden.input.clone()).unwrap();
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 16);
+    // sequential submission can't force batches > max_batch
+    assert!(stats.batches >= 16 / 4);
+}
+
+#[test]
+fn synthetic_emulation_timing_is_positive_and_stable() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let art = manifest.model("lenet5").unwrap();
+    let a = pipeline::time_emulation_synthetic(art, 3).unwrap();
+    assert!(a > 0.0 && a < 5.0, "lenet5 frame {a} s");
+}
+
+#[test]
+fn corrupted_golden_detected() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let art = manifest.model("tiny").unwrap();
+    let mut g = art.golden.clone().unwrap();
+    g.nbytes += 1; // size mismatch must be caught, not mis-sliced
+    assert!(load_golden(&g).is_err());
+    let mut g2 = art.golden.clone().unwrap();
+    g2.arrays[0].offset = usize::MAX - 3;
+    assert!(load_golden(&g2).is_err());
+}

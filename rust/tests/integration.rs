@@ -1,0 +1,190 @@
+//! Cross-module integration tests: the full pipeline over every zoo
+//! model × every device, the artifact contract, and paper-shape
+//! invariants that span estimator + DSE + simulator.
+
+use cnn2gate::dse::{brute, rl, OptionSpace, RlConfig};
+use cnn2gate::estimator::{device, estimate, Thresholds};
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::{parser, zoo};
+use cnn2gate::quant::QuantSpec;
+use cnn2gate::sim::simulate;
+use cnn2gate::synth::{self, Explorer};
+use cnn2gate::testkit::for_all;
+
+#[test]
+fn every_zoo_model_fits_somewhere() {
+    // every model must fit at least the Arria 10 and produce a latency
+    for name in zoo::names() {
+        let g = zoo::build(name, false).unwrap();
+        let dev = device::find("arria10").unwrap();
+        let rep = synth::run(&g, dev, Explorer::BruteForce, Thresholds::default(), None).unwrap();
+        assert!(rep.fits(), "{name} must fit the Arria 10");
+        assert!(rep.latency_ms().unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn full_grid_pipeline_never_panics() {
+    for name in zoo::names() {
+        let g = zoo::build(name, false).unwrap();
+        for dev in device::all() {
+            let rep =
+                synth::run(&g, dev, Explorer::Reinforcement, Thresholds::default(), None).unwrap();
+            // no-fit is a valid outcome; panics/errors are not
+            if let Some(ms) = rep.latency_ms() {
+                assert!(ms.is_finite() && ms > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_synth_flow_for_weighted_models() {
+    for name in ["tiny", "lenet5"] {
+        let g = zoo::build(name, true).unwrap();
+        let dev = device::find("arria10").unwrap();
+        let spec = QuantSpec::default();
+        let rep = synth::run(&g, dev, Explorer::BruteForce, Thresholds::default(), Some(&spec))
+            .unwrap();
+        let q = rep.quant.expect("quant report");
+        assert!(q.worst_sat_ratio() < 0.05, "{name}: saturation too high");
+    }
+}
+
+#[test]
+fn tighter_thresholds_never_pick_bigger_designs() {
+    // DSE invariant: shrinking T_th can only shrink (or keep) H_best
+    let flow = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+    let dev = device::find("arria10").unwrap();
+    let loose = brute::explore(&flow, dev, Thresholds::default());
+    let tight = brute::explore(
+        &flow,
+        dev,
+        Thresholds {
+            lut: 25.0,
+            dsp: 25.0,
+            mem: 35.0,
+            reg: 25.0,
+        },
+    );
+    let f = |r: &cnn2gate::dse::DseResult| r.best.map(|(a, b)| a * b).unwrap_or(0);
+    assert!(f(&tight) <= f(&loose));
+}
+
+#[test]
+fn simulated_latency_decreases_with_parallelism_property() {
+    for_all("latency monotone in lanes", |g| {
+        let model = *g.choice(&["alexnet", "vgg16"]);
+        let flow = ComputationFlow::extract(&zoo::build(model, false).unwrap()).unwrap();
+        let dev = *g.choice(&device::all());
+        let space = OptionSpace::from_flow(&flow);
+        let i = g.usize(0, space.ni.len() - 1);
+        let j = g.usize(0, space.nl.len() - 1);
+        if i + 1 < space.ni.len() {
+            let a = simulate(&flow, dev, space.ni[i], space.nl[j]);
+            let b = simulate(&flow, dev, space.ni[i + 1], space.nl[j]);
+            assert!(
+                b.total_cycles <= a.total_cycles,
+                "{model} on {}: Ni {}->{} raised cycles",
+                dev.name,
+                space.ni[i],
+                space.ni[i + 1]
+            );
+        }
+    });
+}
+
+#[test]
+fn estimator_feasibility_frontier_is_monotone_property() {
+    // if (ni, nl) doesn't fit, nothing larger fits either
+    for_all("infeasibility is upward-closed", |g| {
+        let flow = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+        let dev = *g.choice(&device::all());
+        let th = Thresholds {
+            lut: g.f64(20.0, 101.0),
+            dsp: g.f64(20.0, 101.0),
+            mem: g.f64(20.0, 101.0),
+            reg: g.f64(20.0, 101.0),
+        };
+        let opts = [4usize, 8, 16, 32];
+        let i = g.usize(0, opts.len() - 2);
+        let j = g.usize(0, opts.len() - 2);
+        let small = estimate(&flow, dev, opts[i], opts[j]);
+        let big = estimate(&flow, dev, opts[i + 1], opts[j + 1]);
+        if !small.fits(&th) {
+            assert!(!big.fits(&th), "({},{}) fits but smaller doesn't", opts[i + 1], opts[j + 1]);
+        }
+    });
+}
+
+#[test]
+fn rl_and_bf_agree_across_zoo_and_devices() {
+    let th = Thresholds::default();
+    for name in ["lenet5", "alexnet", "vgg16"] {
+        let flow = ComputationFlow::extract(&zoo::build(name, false).unwrap()).unwrap();
+        for dev in device::all() {
+            let bf = brute::explore(&flow, dev, th);
+            let rl = rl::explore(&flow, dev, th, RlConfig::default());
+            assert_eq!(bf.best, rl.best, "{name} on {}", dev.name);
+        }
+    }
+}
+
+#[test]
+fn exported_models_roundtrip_through_parser() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/models");
+    if !dir.exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    for name in zoo::names() {
+        let path = dir.join(format!("{name}.json"));
+        let parsed = parser::parse_file(&path).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let built = zoo::build(name, false).unwrap();
+        // same fused-round structure and op census on both sides
+        let pf = ComputationFlow::extract(&parsed).unwrap();
+        let bf = ComputationFlow::extract(&built).unwrap();
+        assert_eq!(pf.layers.len(), bf.layers.len(), "{name}");
+        assert_eq!(pf.conv_rounds(), bf.conv_rounds(), "{name}");
+        assert!((pf.gops() - bf.gops()).abs() < 1e-9, "{name}");
+        assert_eq!(parsed.param_count(), built.param_count(), "{name}");
+    }
+}
+
+#[test]
+fn failure_injection_corrupted_model_files() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/models");
+    if !dir.exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let text = std::fs::read_to_string(dir.join("lenet5.json")).unwrap();
+    // truncate: must error, not panic
+    for cut in [10, 100, text.len() / 2] {
+        let broken = &text[..cut];
+        assert!(cnn2gate::util::json::Json::parse(broken).is_err());
+    }
+    // drop a node output name -> graph validation must fail
+    let doc = cnn2gate::util::json::Json::parse(&text).unwrap();
+    let mangled = text.replace("\"Softmax\"", "\"SoftMix\"");
+    let bad = cnn2gate::util::json::Json::parse(&mangled).unwrap();
+    assert!(parser::parse_doc(&bad, None).is_err());
+    drop(doc);
+}
+
+#[test]
+fn paper_headline_numbers_cross_module() {
+    // the single most important reproduction assertion, end to end:
+    // AlexNet 18 ms / VGG 205 ms on the Arria 10 at the DSE-chosen option
+    let dev = device::find("arria10").unwrap();
+    let th = Thresholds::default();
+    let alex = zoo::build("alexnet", false).unwrap();
+    let rep = synth::run(&alex, dev, Explorer::Reinforcement, th, None).unwrap();
+    assert_eq!(rep.option(), Some((16, 32)));
+    let ms = rep.latency_ms().unwrap();
+    assert!((ms - 18.24).abs() / 18.24 < 0.12, "AlexNet {ms} ms");
+    let vgg = zoo::build("vgg16", false).unwrap();
+    let repv = synth::run(&vgg, dev, Explorer::Reinforcement, th, None).unwrap();
+    let msv = repv.latency_ms().unwrap();
+    assert!((msv - 205.0).abs() / 205.0 < 0.17, "VGG {msv} ms");
+}
