@@ -8,7 +8,7 @@
 mod common;
 
 use cnn2gate::coordinator::pipeline;
-use cnn2gate::dse::brute;
+use cnn2gate::dse::{brute, eval, Evaluator, Fidelity};
 use cnn2gate::estimator::device::ARRIA_10_GX1150;
 use cnn2gate::estimator::{estimate, Thresholds};
 use cnn2gate::ir::ComputationFlow;
@@ -28,11 +28,26 @@ fn main() {
     });
     h.check(q < 10e-6, &format!("estimator query {:.2} µs < 10 µs", q * 1e6));
 
-    // full BF sweep
-    let sweep = h.bench("dse/bf_full_sweep", 1000, || {
-        brute::explore(&flow, &ARRIA_10_GX1150, Thresholds::default())
+    // full BF sweep — sequential seed path, the compute reference
+    let sweep = h.bench("dse/bf_full_sweep (seq)", 1000, || {
+        brute::explore_seq(&flow, &ARRIA_10_GX1150, Thresholds::default())
     });
     h.check(sweep < 5.0, "full DSE sweep < 5 s");
+
+    // pooled + memoized sweep: the first call computes each candidate
+    // once, every repeat is served from the eval memo
+    let ev = Evaluator::new(eval::default_threads());
+    brute::explore_with(&ev, &flow, &ARRIA_10_GX1150, Thresholds::default());
+    let warm = h.bench("dse/bf_full_sweep (pool, warm memo)", 1000, || {
+        brute::explore_with(&ev, &flow, &ARRIA_10_GX1150, Thresholds::default())
+    });
+    h.check(warm < 5.0, "warm pooled sweep < 5 s");
+
+    // memo-hit fast path: one lookup + Arc clone, no estimator call
+    let hit = h.bench("eval/cache_hit", 10_000, || {
+        ev.evaluate(&flow, &ARRIA_10_GX1150, 16, 32, Fidelity::Analytical)
+    });
+    h.check(hit < 10e-6, &format!("memo hit {:.2} µs < 10 µs", hit * 1e6));
 
     // stepped simulator throughput
     let work = RoundWork {
@@ -67,7 +82,7 @@ fn main() {
 
     // PJRT dispatch overhead: run tiny model, measure non-execute overhead
     let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
+    if cnn2gate::runtime::Runtime::available() && dir.join("manifest.json").exists() {
         let manifest = Manifest::load(dir).unwrap();
         if let Some(art) = manifest.model("tiny") {
             let per_frame = pipeline::time_emulation_synthetic(art, 50).unwrap();

@@ -32,9 +32,15 @@ fn main() {
     let alex_a10 = simulate(&aflow, &ARRIA_10_GX1150, 16, 32);
     let vgg_a10 = simulate(&vflow, &ARRIA_10_GX1150, 16, 32);
 
-    // --- emulation row (PJRT CPU) when artifacts exist -------------------
+    // --- emulation row (PJRT CPU) when artifacts exist and the real
+    // backend is built (stub builds skip the row) ------------------------
     let dir = std::path::Path::new("artifacts");
-    let emu = Manifest::load(dir).ok().map(|m| {
+    let manifest = if cnn2gate::runtime::Runtime::available() {
+        Manifest::load(dir).ok()
+    } else {
+        None
+    };
+    let emu = manifest.map(|m| {
         let a = m
             .model("alexnet")
             .map(|art| pipeline::time_emulation_synthetic(art, 1).unwrap());
@@ -84,7 +90,10 @@ fn main() {
     h.check_close(alex_cv.total_millis, 153.0, 0.13, "AlexNet CycloneV latency (ms)");
     h.check(
         (2000.0..7000.0).contains(&vgg_cv.total_millis),
-        &format!("VGG CycloneV in the seconds regime ({:.2} s, paper 4.26 s)", vgg_cv.total_millis / 1e3),
+        &format!(
+            "VGG CycloneV in the seconds regime ({:.2} s, paper 4.26 s)",
+            vgg_cv.total_millis / 1e3
+        ),
     );
     h.check(
         alex_a10.total_millis < alex_cv.total_millis / 4.0,

@@ -80,9 +80,10 @@ fn main() -> anyhow::Result<()> {
     let sim = simulate(&flow, &ARRIA_10_GX1150, 16, 32);
     println!("{}", fig6(&sim).render());
 
-    // Emulation mode (Table 1 CPU row) when artifacts exist
+    // Emulation mode (Table 1 CPU row) when artifacts exist and the
+    // real PJRT backend is built (`--features pjrt`)
     let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
+    if cnn2gate::runtime::Runtime::available() && dir.join("manifest.json").exists() {
         let manifest = Manifest::load(dir)?;
         if let Some(art) = manifest.model("alexnet") {
             let secs = cnn2gate::coordinator::pipeline::time_emulation_synthetic(art, 1)?;

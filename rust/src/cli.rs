@@ -55,6 +55,13 @@ impl Args {
         self.flags.get(name).map(String::as_str)
     }
 
+    /// Like [`Args::get`] but mandatory, with a uniform error message —
+    /// the `--model <m>`-style flags every subcommand insists on.
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("--{name} required"))
+    }
+
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
@@ -114,6 +121,14 @@ mod tests {
     fn rejects_missing_value() {
         let err = Args::parse(&sv(&["x", "--model"]), &["model"], &[]).unwrap_err();
         assert!(err.to_string().contains("needs a value"));
+    }
+
+    #[test]
+    fn require_demands_presence() {
+        let a = Args::parse(&sv(&["x", "--model", "alexnet"]), &["model", "device"], &[]).unwrap();
+        assert_eq!(a.require("model").unwrap(), "alexnet");
+        let err = a.require("device").unwrap_err();
+        assert!(err.to_string().contains("--device required"));
     }
 
     #[test]

@@ -9,5 +9,5 @@
 pub mod pipeline;
 pub mod server;
 
-pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
+pub use pipeline::{fit_fleet, run_pipeline, FleetReport, PipelineConfig, PipelineResult};
 pub use server::{InferenceServer, ServerConfig, ServerStats};

@@ -3,11 +3,19 @@
 //! parse (file or zoo) → validate → quantize (when weights are resident)
 //! → DSE + fit on the target device → simulated synthesis + latency →
 //! optional emulation-mode numerics check against the AOT artifacts.
+//!
+//! [`fit_fleet`] is the multi-device variant: one model fitted against
+//! every device in the database concurrently (scoped fan-out via
+//! [`crate::dse::eval::parallel_map`]; the per-device explorers share
+//! the process-wide estimator memo underneath), for the `fit-fleet`
+//! CLI subcommand and the fleet comparison table.
 
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::dse::eval;
 use crate::estimator::{device, Device, Thresholds};
 use crate::ir::Graph;
 use crate::onnx::{parser, zoo};
@@ -98,6 +106,62 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineResult> {
         graph,
         synth,
         emulation,
+    })
+}
+
+/// One model fitted against the whole device database.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub model: String,
+    pub explorer: Explorer,
+    /// One synthesis report per device, in [`device::all`] order.
+    pub entries: Vec<SynthReport>,
+    /// Wall time of the concurrent fleet fit.
+    pub wall_seconds: f64,
+}
+
+impl FleetReport {
+    /// Devices the model fits, best (lowest simulated latency) first.
+    pub fn ranked_fits(&self) -> Vec<&SynthReport> {
+        let mut fits: Vec<&SynthReport> = self.entries.iter().filter(|r| r.fits()).collect();
+        fits.sort_by(|a, b| {
+            let (la, lb) = (a.latency_ms().unwrap_or(f64::MAX), b.latency_ms().unwrap_or(f64::MAX));
+            la.partial_cmp(&lb).expect("latencies are finite")
+        });
+        fits
+    }
+
+    /// The recommended target: the fitting device with the lowest
+    /// simulated latency, if any fits at all.
+    pub fn best(&self) -> Option<&SynthReport> {
+        self.ranked_fits().into_iter().next()
+    }
+}
+
+/// Fit `graph` on every device in [`device::all`] concurrently: each
+/// device gets the full DSE + fit + synthesis-time + latency flow on its
+/// own scoped thread, while all of them score candidates through the
+/// shared estimator memo (so the fleet costs each unique candidate
+/// once). Entries come back in database order.
+pub fn fit_fleet(
+    graph: &Graph,
+    explorer: Explorer,
+    thresholds: Thresholds,
+) -> Result<FleetReport> {
+    let t0 = Instant::now();
+    let devices = device::all();
+    let results = eval::parallel_map(&devices, devices.len(), |&dev| {
+        synth::run(graph, dev, explorer, thresholds, None)
+    });
+    let mut entries = Vec::with_capacity(results.len());
+    for result in results {
+        entries.push(result?);
+    }
+    Ok(FleetReport {
+        model: graph.name.clone(),
+        explorer,
+        entries,
+        wall_seconds: t0.elapsed().as_secs_f64(),
     })
 }
 
@@ -219,6 +283,46 @@ mod tests {
     }
 
     #[test]
+    fn fleet_fit_covers_every_device_and_ranks_fits() {
+        let g = crate::onnx::zoo::build("alexnet", false).unwrap();
+        let rep = fit_fleet(&g, Explorer::BruteForce, Thresholds::default()).unwrap();
+        assert_eq!(rep.entries.len(), device::all().len());
+        // entries preserve database order
+        for (entry, dev) in rep.entries.iter().zip(device::all()) {
+            assert_eq!(entry.device, dev.name);
+        }
+        // paper shape: AlexNet fits the Arria 10 at (16,32), not the 5CSEMA4
+        let by_name = |n: &str| rep.entries.iter().find(|e| e.device.contains(n)).unwrap();
+        assert_eq!(by_name("Arria 10").option(), Some((16, 32)));
+        assert!(!by_name("5CSEMA4").fits());
+        // ranking is by simulated latency, best first
+        let ranked = rep.ranked_fits();
+        assert!(!ranked.is_empty());
+        for pair in ranked.windows(2) {
+            assert!(pair[0].latency_ms().unwrap() <= pair[1].latency_ms().unwrap());
+        }
+        assert_eq!(
+            rep.best().unwrap().device,
+            ranked[0].device,
+            "best() is the top-ranked fit"
+        );
+    }
+
+    #[test]
+    fn fleet_fit_matches_single_device_runs() {
+        // concurrency must not change any per-device outcome
+        let g = crate::onnx::zoo::build("alexnet", false).unwrap();
+        let rep = fit_fleet(&g, Explorer::BruteForce, Thresholds::default()).unwrap();
+        for (entry, dev) in rep.entries.iter().zip(device::all()) {
+            let solo = synth::run(&g, dev, Explorer::BruteForce, Thresholds::default(), None)
+                .unwrap();
+            assert_eq!(entry.option(), solo.option(), "{}", dev.name);
+            assert_eq!(entry.dse.trace, solo.dse.trace, "{}", dev.name);
+            assert_eq!(entry.synthesis_minutes, solo.synthesis_minutes, "{}", dev.name);
+        }
+    }
+
+    #[test]
     fn unknown_model_and_device_error_clearly() {
         assert!(load_model("resnet152", false).is_err());
         assert!(load_device("virtex9").is_err());
@@ -240,6 +344,10 @@ mod tests {
 
     #[test]
     fn emulation_with_goldens_when_present() {
+        if !crate::runtime::Runtime::available() {
+            eprintln!("skipping: pjrt feature disabled");
+            return;
+        }
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !dir.join("manifest.json").exists() {
             eprintln!("skipping: run `make artifacts`");

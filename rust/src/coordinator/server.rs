@@ -205,6 +205,9 @@ mod tests {
     use std::path::Path;
 
     fn artifacts() -> Option<Manifest> {
+        if !crate::runtime::Runtime::available() {
+            return None; // stub build: artifacts exist but can't replay
+        }
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         dir.join("manifest.json")
             .exists()

@@ -4,12 +4,20 @@
 //! N_i and finds the feasible option that maximizes FPGA resource
 //! utilization [= best throughput]. It is simple to execute and it
 //! always finds the best solutions."
+//!
+//! [`explore`] scores the grid through the shared [`super::eval`] core:
+//! candidates fan out across the worker pool and previously seen
+//! (model, device, option) triples come straight from the memo cache.
+//! The reduction over the (order-preserved) results is the sequential
+//! Algorithm-1 pass, so the chosen design is bit-identical to
+//! [`explore_seq`], the seed path kept as reference and bench baseline.
 
 use std::time::Instant;
 
 use crate::estimator::{estimate, query_seconds, Device, ResourceEstimate, Thresholds};
 use crate::ir::ComputationFlow;
 
+use super::eval::{self, Evaluator, Fidelity};
 use super::options::OptionSpace;
 use super::reward::RewardShaper;
 
@@ -20,8 +28,12 @@ pub struct DseResult {
     pub best: Option<(usize, usize)>,
     pub best_estimate: Option<ResourceEstimate>,
     pub f_max: f64,
-    /// Number of estimator queries issued (unique compiler invocations).
+    /// Number of estimator queries issued (unique compiler invocations
+    /// this run would have cost at the Intel-compiler time scale —
+    /// memo-cache hits still count, the cache only saves wall time).
     pub queries: usize,
+    /// How many of those queries were served from the eval memo cache.
+    pub cache_hits: usize,
     /// Actual wall time of the search.
     pub wall_seconds: f64,
     /// Modeled wall time had each query hit the real Intel compiler
@@ -37,12 +49,54 @@ impl DseResult {
     }
 }
 
-/// Exhaustive search over the option grid.
-pub fn explore(
+/// Exhaustive search over the option grid, scored through the
+/// process-wide [`eval::global`] evaluator (parallel + memoized).
+pub fn explore(flow: &ComputationFlow, device: &Device, thresholds: Thresholds) -> DseResult {
+    explore_with(eval::global(), flow, device, thresholds)
+}
+
+/// Exhaustive search through a caller-provided evaluator (isolated
+/// caches for tests/benches, custom worker counts for the CLI).
+pub fn explore_with(
+    evaluator: &Evaluator,
     flow: &ComputationFlow,
     device: &Device,
     thresholds: Thresholds,
 ) -> DseResult {
+    let t0 = Instant::now();
+    let space = OptionSpace::from_flow(flow);
+    let pairs = space.pairs();
+    let grid = evaluator.evaluate_grid(flow, device, &pairs, Fidelity::Analytical);
+
+    let mut shaper = RewardShaper::new(thresholds);
+    let mut trace = Vec::with_capacity(pairs.len());
+    let mut cache_hits = 0usize;
+    for (eval, hit) in &grid {
+        if *hit {
+            cache_hits += 1;
+        }
+        let est = &eval.estimate;
+        let feasible = est.fits(&shaper.thresholds);
+        shaper.eval(est);
+        trace.push((est.ni, est.nl, est.f_avg(), feasible));
+    }
+    let queries = pairs.len();
+    DseResult {
+        best: shaper.h_best,
+        best_estimate: shaper.best_estimate,
+        f_max: shaper.f_max,
+        queries,
+        cache_hits,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        modeled_seconds: queries as f64 * query_seconds(device),
+        trace,
+    }
+}
+
+/// The sequential seed path: one estimator call per candidate, in grid
+/// order, no pool, no cache. Kept as the reference implementation the
+/// parallel explorer is validated against and as the bench baseline.
+pub fn explore_seq(flow: &ComputationFlow, device: &Device, thresholds: Thresholds) -> DseResult {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let mut shaper = RewardShaper::new(thresholds);
@@ -60,6 +114,7 @@ pub fn explore(
         best_estimate: shaper.best_estimate,
         f_max: shaper.f_max,
         queries,
+        cache_hits: 0,
         wall_seconds: t0.elapsed().as_secs_f64(),
         modeled_seconds: queries as f64 * query_seconds(device),
         trace,
@@ -122,5 +177,41 @@ mod tests {
             .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
             .map(|(ni, nl, _, _)| (*ni, *nl));
         assert_eq!(r.best, best_in_trace);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_seed_path_bit_for_bit() {
+        // The satellite contract on the paper fixtures: same best, same
+        // f_max bits, same trace, same query count — on every device,
+        // for AlexNet and VGG-16.
+        for model in ["alexnet", "vgg16"] {
+            let f = flow(model);
+            for dev in [&ARRIA_10_GX1150, &CYCLONE_V_5CSEMA5, &CYCLONE_V_5CSEMA4] {
+                let ev = Evaluator::new(4);
+                let par = explore_with(&ev, &f, dev, Thresholds::default());
+                let seq = explore_seq(&f, dev, Thresholds::default());
+                assert_eq!(par.best, seq.best, "{model} on {}", dev.name);
+                assert_eq!(par.best_estimate, seq.best_estimate);
+                assert_eq!(par.f_max.to_bits(), seq.f_max.to_bits());
+                assert_eq!(par.trace, seq.trace);
+                assert_eq!(par.queries, seq.queries);
+                assert_eq!(par.modeled_seconds, seq.modeled_seconds);
+            }
+        }
+    }
+
+    #[test]
+    fn repeat_exploration_is_served_from_cache() {
+        let f = flow("alexnet");
+        let ev = Evaluator::new(4);
+        let cold = explore_with(&ev, &f, &ARRIA_10_GX1150, Thresholds::default());
+        assert_eq!(cold.cache_hits, 0);
+        let warm = explore_with(&ev, &f, &ARRIA_10_GX1150, Thresholds::default());
+        assert_eq!(warm.cache_hits, warm.queries, "every candidate memoized");
+        assert_eq!(warm.best, cold.best);
+        assert_eq!(warm.trace, cold.trace);
+        // modeled (compiler-scale) cost is unchanged: the cache saves
+        // wall time, not modeled compiler invocations
+        assert_eq!(warm.modeled_seconds, cold.modeled_seconds);
     }
 }

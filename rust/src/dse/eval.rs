@@ -1,0 +1,569 @@
+//! Shared, multi-threaded candidate-evaluation core for the DSE layer.
+//!
+//! Every explorer (BF, RL, joint) ultimately scores `(N_i, N_l)` options
+//! by calling the estimator and the latency simulator — the stand-ins
+//! for the "first stage of the synthesis tool" the paper queries (§4.3).
+//! The seed explorers did this strictly sequentially and re-derived the
+//! same estimates across runs. This module centralizes that work:
+//!
+//! * [`EvalCache`] — a process-wide memo keyed on
+//!   `(model fingerprint, device fingerprint, N_i, N_l)` that
+//!   deduplicates the estimator + simulator calls the RL and joint
+//!   agents revisit constantly (and that repeat across fleet fits);
+//! * [`ThreadPool`] — a plain `std::thread` + channel worker pool (the
+//!   `coordinator::server` idiom; tokio is not in the offline crate
+//!   set) that [`Evaluator::evaluate_grid`] fans candidate scoring out
+//!   across cores while preserving the sequential result order, so
+//!   parallel exploration is bit-identical to the seed path;
+//! * [`parallel_map`] — a scoped fork/join helper used by the fleet-fit
+//!   flow to run whole per-device explorations concurrently (scoped
+//!   threads, not the pool, so explorers running inside it can still
+//!   use the pool without self-deadlock);
+//! * [`Fidelity`] — analytical (closed-form, µs-scale) or stepped
+//!   (cycle-accurate dominant-round simulation, ms-scale) candidate
+//!   latency. Explorers default to analytical; the stepped mode is what
+//!   the `table2_dse` bench uses to demonstrate the parallel speedup on
+//!   an honestly heavy per-candidate workload.
+//!
+//! Deadlock rule: [`Evaluator::evaluate_grid`] must not be called from
+//! inside one of the pool's own workers (a worker waiting on sub-jobs
+//! would starve the queue). Nothing in this crate does; fleet fan-out
+//! deliberately uses [`parallel_map`]'s scoped threads instead.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::estimator::{estimate, Device, ResourceEstimate, Thresholds};
+use crate::ir::ComputationFlow;
+use crate::sim::{dominant_round_work, simulate_with_estimate, step_round, SimReport, StepReport};
+
+/// How much simulation each candidate evaluation buys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Resource estimate + closed-form whole-network latency (default).
+    Analytical,
+    /// Additionally run the cycle-stepped simulator on the flow's
+    /// dominant round — the ground-truth check, ~1000x more expensive.
+    SteppedDominantRound,
+}
+
+/// Everything one estimator/simulator query produces for a candidate.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub ni: usize,
+    pub nl: usize,
+    pub estimate: ResourceEstimate,
+    /// Closed-form latency at this option (computed for every candidate,
+    /// feasible or not — fleet reports rank by it).
+    pub latency: SimReport,
+    /// Cycle-stepped dominant-round census (stepped fidelity only).
+    pub stepped: Option<StepReport>,
+}
+
+impl Evaluation {
+    /// Compute from scratch — the pure function the cache memoizes.
+    pub fn compute(
+        flow: &ComputationFlow,
+        device: &Device,
+        ni: usize,
+        nl: usize,
+        fidelity: Fidelity,
+    ) -> Evaluation {
+        let estimate = estimate(flow, device, ni, nl);
+        // reuse the estimate for the latency model (one estimator call
+        // per candidate, exactly like the sequential seed path)
+        let latency = simulate_with_estimate(flow, device, &estimate);
+        let stepped = match fidelity {
+            Fidelity::Analytical => None,
+            Fidelity::SteppedDominantRound => {
+                dominant_round_work(flow, device, estimate.fmax_mhz, ni, nl)
+                    .map(|work| step_round(&work))
+            }
+        };
+        Evaluation {
+            ni,
+            nl,
+            estimate,
+            latency,
+            stepped,
+        }
+    }
+
+    pub fn f_avg(&self) -> f64 {
+        self.estimate.f_avg()
+    }
+
+    pub fn feasible(&self, thresholds: &Thresholds) -> bool {
+        self.estimate.fits(thresholds)
+    }
+}
+
+/// Cache key: structural fingerprints, not pointers, so equal models
+/// built twice (or the same zoo model across tests) share entries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct EvalKey {
+    model: u64,
+    device: u64,
+    ni: usize,
+    nl: usize,
+    stepped: bool,
+}
+
+impl EvalKey {
+    fn new(
+        flow: &ComputationFlow,
+        device: &Device,
+        ni: usize,
+        nl: usize,
+        fidelity: Fidelity,
+    ) -> EvalKey {
+        EvalKey {
+            model: flow.fingerprint(),
+            device: device.fingerprint(),
+            ni,
+            nl,
+            stepped: matches!(fidelity, Fidelity::SteppedDominantRound),
+        }
+    }
+}
+
+/// Point-in-time cache counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Memoized estimator/simulator results, shared across explorers and
+/// threads. Values are `Arc`ed so a hit is a pointer clone.
+#[derive(Default)]
+pub struct EvalCache {
+    map: Mutex<HashMap<EvalKey, Arc<Evaluation>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    /// Look up or compute one candidate. Returns the evaluation and
+    /// whether it was served from cache. The (potentially heavy)
+    /// compute runs outside the lock so parallel misses don't serialize.
+    pub fn get_or_compute(
+        &self,
+        flow: &ComputationFlow,
+        device: &Device,
+        ni: usize,
+        nl: usize,
+        fidelity: Fidelity,
+    ) -> (Arc<Evaluation>, bool) {
+        let key = EvalKey::new(flow, device, ni, nl, fidelity);
+        self.get_or_compute_keyed(key, flow, device, fidelity)
+    }
+
+    /// Same, with the (loop-invariant) fingerprints already folded into
+    /// `key` — `evaluate_grid` hashes the model/device once per grid,
+    /// not once per candidate.
+    fn get_or_compute_keyed(
+        &self,
+        key: EvalKey,
+        flow: &ComputationFlow,
+        device: &Device,
+        fidelity: Fidelity,
+    ) -> (Arc<Evaluation>, bool) {
+        if let Some(found) = self.map.lock().expect("eval cache poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (Arc::clone(found), true);
+        }
+        let eval = Arc::new(Evaluation::compute(flow, device, key.ni, key.nl, fidelity));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().expect("eval cache poisoned");
+        let entry = map.entry(key).or_insert_with(|| Arc::clone(&eval));
+        (Arc::clone(entry), false)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().expect("eval cache poisoned").len(),
+        }
+    }
+
+    /// Drop all entries and zero the counters (bench isolation).
+    pub fn clear(&self) {
+        self.map.lock().expect("eval cache poisoned").clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Plain worker pool over `std::thread` + mpsc channels (the
+/// `coordinator::server` threading idiom). Workers pull boxed jobs off
+/// a shared queue; dropping the pool closes the queue and joins them.
+/// The submit side is mutex-wrapped so the pool is `Sync` (the global
+/// evaluator lives in a static) on every supported toolchain.
+pub struct ThreadPool {
+    tx: Option<Mutex<mpsc::Sender<Job>>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    // Holding the lock across recv is the standard
+                    // hand-off: the holder parks until a job arrives,
+                    // takes it, releases, and the next worker parks.
+                    let job = rx.lock().expect("pool queue poisoned").recv();
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // queue closed: pool dropped
+                    }
+                })
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(Mutex::new(tx)),
+            workers,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Queue one job. Panics if the pool is shut down (it never is while
+    /// borrowed: shutdown happens in Drop).
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool live")
+            .lock()
+            .expect("pool submit side poisoned")
+            .send(Box::new(job))
+            .expect("pool workers alive");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue; workers drain and exit
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+/// The evaluation core an explorer talks to: a thread pool plus a
+/// (shareable) memo cache.
+pub struct Evaluator {
+    pool: ThreadPool,
+    cache: Arc<EvalCache>,
+}
+
+impl Evaluator {
+    /// Fresh cache, `threads` workers.
+    pub fn new(threads: usize) -> Evaluator {
+        Evaluator::with_cache(threads, Arc::new(EvalCache::new()))
+    }
+
+    /// Share an existing cache (e.g. the global one) with a private pool.
+    pub fn with_cache(threads: usize, cache: Arc<EvalCache>) -> Evaluator {
+        Evaluator {
+            pool: ThreadPool::new(threads),
+            cache,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    pub fn cache(&self) -> &EvalCache {
+        &self.cache
+    }
+
+    /// Evaluate one candidate inline (cache-aware, no pool dispatch) —
+    /// what the inherently sequential RL/joint agents call per step.
+    pub fn evaluate(
+        &self,
+        flow: &ComputationFlow,
+        device: &Device,
+        ni: usize,
+        nl: usize,
+        fidelity: Fidelity,
+    ) -> (Arc<Evaluation>, bool) {
+        self.cache.get_or_compute(flow, device, ni, nl, fidelity)
+    }
+
+    /// Evaluate a whole candidate grid, fanning the misses out across
+    /// the pool. Results come back in `pairs` order, so a sequential
+    /// reduction over them (e.g. Algorithm 1's running max) is
+    /// bit-identical to the sequential seed path. Must not be called
+    /// from inside a pool worker (see module docs).
+    pub fn evaluate_grid(
+        &self,
+        flow: &ComputationFlow,
+        device: &Device,
+        pairs: &[(usize, usize)],
+        fidelity: Fidelity,
+    ) -> Vec<(Arc<Evaluation>, bool)> {
+        // fingerprints are loop-invariant: hash once per grid
+        let (model_fp, device_fp) = (flow.fingerprint(), device.fingerprint());
+        let stepped = matches!(fidelity, Fidelity::SteppedDominantRound);
+        let key_of = |ni: usize, nl: usize| EvalKey {
+            model: model_fp,
+            device: device_fp,
+            ni,
+            nl,
+            stepped,
+        };
+        if pairs.len() < 2 || self.pool.size() < 2 {
+            return pairs
+                .iter()
+                .map(|&(ni, nl)| {
+                    self.cache
+                        .get_or_compute_keyed(key_of(ni, nl), flow, device, fidelity)
+                })
+                .collect();
+        }
+        let flow = Arc::new(flow.clone());
+        let device = Arc::new(device.clone());
+        let (tx, rx) = mpsc::channel();
+        for (idx, &(ni, nl)) in pairs.iter().enumerate() {
+            let key = key_of(ni, nl);
+            let flow = Arc::clone(&flow);
+            let device = Arc::clone(&device);
+            let cache = Arc::clone(&self.cache);
+            let tx = tx.clone();
+            self.pool.execute(move || {
+                let out = cache.get_or_compute_keyed(key, &flow, &device, fidelity);
+                let _ = tx.send((idx, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<(Arc<Evaluation>, bool)>> = vec![None; pairs.len()];
+        for _ in 0..pairs.len() {
+            let (idx, out) = rx.recv().expect("eval pool worker died");
+            slots[idx] = Some(out);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every candidate evaluated"))
+            .collect()
+    }
+}
+
+/// Worker count for the process-wide evaluator: one per core, clamped
+/// to [2, 8] (the option grids are small; more threads only add queue
+/// contention).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8)
+}
+
+static GLOBAL: OnceLock<Evaluator> = OnceLock::new();
+
+/// The process-wide evaluator every explorer uses by default. Its cache
+/// persists for the process lifetime, so repeated explorations of the
+/// same (model, device) — RL episodes, fleet fits, report regeneration —
+/// pay for each unique candidate once.
+pub fn global() -> &'static Evaluator {
+    GLOBAL.get_or_init(|| Evaluator::new(default_threads()))
+}
+
+/// Fork/join map over scoped threads with a shared work queue: applies
+/// `f` to every item on up to `threads` workers and returns results in
+/// input order. Used for coarse-grained fan-out (one job per device in
+/// the fleet fit) where jobs themselves may use the global pool.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let workers = threads.clamp(1, items.len());
+    if workers == 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let next_ref = &next;
+    let f_ref = &f;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let _ = tx.send((i, f_ref(&items[i])));
+            });
+        }
+    });
+    drop(tx);
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    for (i, r) in rx {
+        slots[i] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("scoped worker produced result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::OptionSpace;
+    use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
+    use crate::onnx::zoo;
+
+    fn flow(name: &str) -> ComputationFlow {
+        ComputationFlow::extract(&zoo::build(name, false).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn pool_runs_every_job() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let counter = Arc::clone(&counter);
+            pool.execute(move || {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // joins workers after the queue drains
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..57).collect();
+        let out = parallel_map(&items, 4, |&i| i * i);
+        assert_eq!(out, items.iter().map(|&i| i * i).collect::<Vec<_>>());
+        // degenerate widths
+        assert_eq!(parallel_map(&items, 1, |&i| i + 1).len(), 57);
+        assert!(parallel_map::<usize, usize, _>(&[], 4, |&i| i).is_empty());
+    }
+
+    #[test]
+    fn parallel_grid_is_bit_identical_to_sequential() {
+        // The satellite contract: fanning candidate scoring across the
+        // pool must not change a single bit of any estimate, on either
+        // paper fixture.
+        for model in ["alexnet", "vgg16"] {
+            let f = flow(model);
+            let pairs = OptionSpace::from_flow(&f).pairs();
+            for dev in [&ARRIA_10_GX1150, &CYCLONE_V_5CSEMA5, &CYCLONE_V_5CSEMA4] {
+                let ev = Evaluator::new(4);
+                let grid = ev.evaluate_grid(&f, dev, &pairs, Fidelity::Analytical);
+                assert_eq!(grid.len(), pairs.len());
+                for ((eval, hit), &(ni, nl)) in grid.iter().zip(&pairs) {
+                    assert!(!hit, "fresh cache cannot hit");
+                    let seq = estimate(&f, dev, ni, nl);
+                    assert_eq!(eval.estimate, seq, "{model} {} ({ni},{nl})", dev.name);
+                    assert_eq!(eval.latency.total_cycles, simulate(&f, dev, ni, nl).total_cycles);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_hit_counts_are_deterministic() {
+        let f = flow("alexnet");
+        let pairs = OptionSpace::from_flow(&f).pairs();
+        let run = || {
+            let ev = Evaluator::new(4);
+            ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+            let first = ev.cache().stats();
+            ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+            (first, ev.cache().stats())
+        };
+        let (first_a, second_a) = run();
+        let (first_b, second_b) = run();
+        assert_eq!(first_a, first_b, "cold-run stats must reproduce");
+        assert_eq!(second_a, second_b, "warm-run stats must reproduce");
+        assert_eq!(first_a.misses, pairs.len());
+        assert_eq!(first_a.hits, 0);
+        assert_eq!(second_a.hits, pairs.len());
+        assert_eq!(second_a.misses, pairs.len());
+        assert_eq!(second_a.entries, pairs.len());
+        assert!((second_a.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_discriminates_models_and_devices() {
+        let a = flow("alexnet");
+        let v = flow("vgg16");
+        assert_ne!(a.fingerprint(), v.fingerprint());
+        assert_ne!(
+            ARRIA_10_GX1150.fingerprint(),
+            CYCLONE_V_5CSEMA5.fingerprint()
+        );
+        let ev = Evaluator::new(2);
+        ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical);
+        let (_, hit) = ev.evaluate(&v, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical);
+        assert!(!hit, "different model must miss");
+        let (_, hit) = ev.evaluate(&a, &CYCLONE_V_5CSEMA5, 8, 8, Fidelity::Analytical);
+        assert!(!hit, "different device must miss");
+        let (_, hit) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical);
+        assert!(hit, "same key must hit");
+    }
+
+    #[test]
+    fn stepped_fidelity_runs_the_dominant_round() {
+        let f = flow("tiny");
+        let ev = Evaluator::new(2);
+        let (eval, _) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound);
+        let stepped = eval.stepped.as_ref().expect("stepped census present");
+        assert!(stepped.cycles > 0);
+        // analytical fidelity for the same option is a distinct entry
+        let (eval2, hit) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        assert!(!hit);
+        assert!(eval2.stepped.is_none());
+    }
+
+    #[test]
+    fn shared_cache_spans_evaluators() {
+        let cache = Arc::new(EvalCache::new());
+        let f = flow("alexnet");
+        let a = Evaluator::with_cache(2, Arc::clone(&cache));
+        a.evaluate(&f, &ARRIA_10_GX1150, 16, 32, Fidelity::Analytical);
+        let b = Evaluator::with_cache(2, Arc::clone(&cache));
+        let (_, hit) = b.evaluate(&f, &ARRIA_10_GX1150, 16, 32, Fidelity::Analytical);
+        assert!(hit, "cache shared across evaluator instances");
+        cache.clear();
+        assert_eq!(cache.stats().entries, 0);
+        assert_eq!(cache.stats().hits, 0);
+    }
+}

@@ -26,11 +26,12 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::estimator::{estimate, query_seconds, Device, Thresholds};
+use crate::estimator::{query_seconds, Device, Thresholds};
 use crate::ir::{ComputationFlow, Graph};
 use crate::quant::{self, LayerQuant, QuantSpec};
 use crate::util::rng::Rng;
 
+use super::eval::{self, Evaluator, Fidelity};
 use super::options::OptionSpace;
 
 /// m_w sweep range (8-bit codes admit at most 7 fraction bits).
@@ -71,6 +72,8 @@ pub struct JointResult {
     pub best: Option<(usize, usize, i8)>,
     pub best_score: f64,
     pub queries: usize,
+    /// Hardware queries served by the process-wide eval memo.
+    pub cache_hits: usize,
     pub wall_seconds: f64,
     pub modeled_seconds: f64,
     /// (ni, nl, m, score, feasible) visit trace.
@@ -105,8 +108,20 @@ pub fn quant_error_curve(graph: &Graph) -> Result<Vec<(i8, f64)>, String> {
 
 const N_ACTIONS: usize = 5; // inc nl | inc ni | inc both | inc m | dec m
 
-/// Run the joint exploration.
+/// Run the joint exploration through the process-wide evaluator.
 pub fn explore(
+    graph: &Graph,
+    flow: &ComputationFlow,
+    device: &Device,
+    thresholds: Thresholds,
+    cfg: JointConfig,
+) -> Result<JointResult, String> {
+    explore_with(eval::global(), graph, flow, device, thresholds, cfg)
+}
+
+/// Run the joint exploration through a caller-provided evaluator.
+pub fn explore_with(
+    evaluator: &Evaluator,
     graph: &Graph,
     flow: &ComputationFlow,
     device: &Device,
@@ -122,17 +137,27 @@ pub fn explore(
 
     let mut rng = Rng::new(cfg.seed);
     let mut q = vec![[0f64; N_ACTIONS]; ni_n * nl_n * m_n];
-    let mut cache: HashMap<(usize, usize), f64> = HashMap::new(); // hw queries
+    let mut visited: HashMap<(usize, usize), f64> = HashMap::new(); // hw queries
     let mut queries = 0usize;
+    let mut cache_hits = 0usize;
     let mut best: Option<(usize, usize, i8)> = None;
     let mut best_score = f64::MIN;
     let mut trace = Vec::new();
 
-    let mut visit = |i: usize, j: usize, mi: usize, queries: &mut usize| -> (f64, bool) {
+    let mut visit = |i: usize,
+                     j: usize,
+                     mi: usize,
+                     queries: &mut usize,
+                     cache_hits: &mut usize|
+     -> (f64, bool) {
         let (ni, nl) = (space.ni[i], space.nl[j]);
-        let f_avg = *cache.entry((ni, nl)).or_insert_with(|| {
+        let f_avg = *visited.entry((ni, nl)).or_insert_with(|| {
             *queries += 1;
-            let est = estimate(flow, device, ni, nl);
+            let (eval, hit) = evaluator.evaluate(flow, device, ni, nl, Fidelity::Analytical);
+            if hit {
+                *cache_hits += 1;
+            }
+            let est = &eval.estimate;
             if est.fits(&thresholds) {
                 est.f_avg()
             } else {
@@ -163,7 +188,7 @@ pub fn explore(
                 3 => (i, j, (mi + 1).min(m_n - 1)),
                 _ => (i, j, mi.saturating_sub(1)),
             };
-            let (score, feasible) = visit(i2, j2, m2, &mut queries);
+            let (score, feasible) = visit(i2, j2, m2, &mut queries, &mut cache_hits);
             trace.push((space.ni[i2], space.nl[j2], m_levels[m2], score, feasible));
             let reward = if !feasible {
                 -1.0
@@ -185,6 +210,7 @@ pub fn explore(
         best,
         best_score,
         queries,
+        cache_hits,
         wall_seconds: t0.elapsed().as_secs_f64(),
         modeled_seconds: queries as f64 * query_seconds(device),
         trace,

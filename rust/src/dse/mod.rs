@@ -1,15 +1,25 @@
 //! Hardware-aware design-space exploration (paper §4.3-4.4): option
 //! enumeration, Algorithm-1 reward shaping, brute-force and Q-learning
 //! explorers over the estimator feedback loop.
+//!
+//! All explorers score candidates through [`eval`] — a shared
+//! multi-threaded evaluation core with a process-wide memo cache keyed
+//! on `(model fingerprint, device fingerprint, N_i, N_l)`. Brute force
+//! fans its grid out across the worker pool (bit-identical results to
+//! the sequential path, validated by tests); the sequential RL/joint
+//! agents go through the same cache so revisited candidates — and whole
+//! re-explorations, as in fleet fits — cost one lookup.
 
 pub mod brute;
+pub mod eval;
 pub mod joint;
 pub mod options;
 pub mod reward;
 pub mod rl;
 
 pub use brute::DseResult;
+pub use eval::{CacheStats, EvalCache, Evaluation, Evaluator, Fidelity, ThreadPool};
+pub use joint::{JointConfig, JointResult};
 pub use options::OptionSpace;
 pub use reward::RewardShaper;
-pub use joint::{JointConfig, JointResult};
 pub use rl::RlConfig;

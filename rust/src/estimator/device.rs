@@ -48,6 +48,36 @@ impl Device {
     pub fn registers(&self) -> u64 {
         self.alms * self.regs_per_alm
     }
+
+    /// Stable fingerprint of the full inventory — the device component
+    /// of the [`crate::dse::eval`] cache key. Keyed on every field (not
+    /// just the name) so a hand-edited `Device` never aliases a stock
+    /// one in the estimator memo.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::hash::{fold_bytes, fold_u64, FNV_OFFSET};
+        let mut h = fold_bytes(FNV_OFFSET, self.name.as_bytes());
+        let family = match self.family {
+            Family::CycloneV => 0u64,
+            Family::Arria10 => 1,
+            Family::StratixV => 2,
+        };
+        for word in [
+            family,
+            self.alms,
+            self.dsps,
+            self.ram_blocks,
+            self.mem_bits,
+            self.ram_block_bits,
+            self.regs_per_alm,
+            self.macs_per_dsp,
+            self.base_clock_mhz.to_bits(),
+            self.ddr_gbytes_per_s.to_bits(),
+            self.duty_factor.to_bits(),
+        ] {
+            h = fold_u64(h, word);
+        }
+        h
+    }
 }
 
 /// The boards of the paper's Tables 1-2.

@@ -301,6 +301,33 @@ impl ComputationFlow {
     pub fn total_weights(&self) -> usize {
         self.layers.iter().map(|l| l.weight_elems()).sum()
     }
+
+    /// Stable structural fingerprint (FNV-1a over the layer census) —
+    /// the model component of the [`crate::dse::eval`] cache key. Two
+    /// flows with the same name, input shape and per-round dimensions
+    /// hash identically; any structural difference perturbs it.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::hash::{fold_bytes, fold_u64, FNV_OFFSET};
+        let mut h = fold_bytes(FNV_OFFSET, self.model_name.as_bytes());
+        h = fold_u64(h, self.input_shape.len() as u64);
+        for &d in &self.input_shape {
+            h = fold_u64(h, d as u64);
+        }
+        for l in &self.layers {
+            for word in [
+                l.is_conv() as u64,
+                l.reduction_dim() as u64,
+                l.out_features() as u64,
+                l.out_pixels() as u64,
+                l.input_elems() as u64,
+                l.output_elems() as u64,
+                l.macs(),
+            ] {
+                h = fold_u64(h, word);
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]

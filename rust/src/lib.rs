@@ -10,8 +10,20 @@
 //! model; [`synth`] orchestrates the (simulated) synthesis flow; [`sim`]
 //! executes the deeply pipelined kernel architecture cycle-by-cycle for
 //! latency; [`runtime`] runs the AOT-compiled JAX/Pallas emulation path
-//! on the PJRT CPU client; [`coordinator`] wires it all into the
-//! end-to-end flow the CLI and examples drive.
+//! on the PJRT CPU client (behind the `pjrt` feature; the default build
+//! substitutes an API-identical stub); [`coordinator`] wires it all into
+//! the end-to-end flow the CLI and examples drive.
+//!
+//! Exploration scales through [`dse::eval`], the shared evaluation
+//! core: a `std::thread` + channel worker pool fans candidate scoring
+//! out across cores (bit-identical results to the sequential path) and
+//! a process-wide memo cache keyed on `(model fingerprint, device
+//! fingerprint, N_i, N_l)` deduplicates the estimator + simulator
+//! queries that the RL/joint agents revisit constantly. On top of it,
+//! [`coordinator::pipeline::fit_fleet`] (CLI: `fit-fleet`) fits one
+//! model against every device in [`estimator::device`] concurrently and
+//! renders the comparison via [`report::tables::fleet_table`],
+//! recommending the lowest-latency fitting target.
 
 pub mod cli;
 pub mod coordinator;

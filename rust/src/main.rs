@@ -1,24 +1,25 @@
 //! `cnn2gate` — leader entrypoint + CLI.
 //!
 //! Subcommands mirror the paper's workflow (Fig. 4a):
-//!   info     parse a model, print the extracted computation flow
-//!   dse      design-space exploration on a device (RL or brute force)
-//!   synth    full (simulated) synthesis flow: DSE + fit + latency
-//!   emulate  emulation mode: run the AOT artifacts through PJRT
-//!   serve    batched emulation-inference server demo
-//!   tables   regenerate the paper's Tables 1-4 + Fig. 6
-//!   devices  list the FPGA device database
+//!   info      parse a model, print the extracted computation flow
+//!   dse       design-space exploration on a device (RL or brute force)
+//!   fit-fleet fit one model on every device in the database, in parallel
+//!   synth     full (simulated) synthesis flow: DSE + fit + latency
+//!   emulate   emulation mode: run the AOT artifacts through PJRT
+//!   serve     batched emulation-inference server demo
+//!   tables    regenerate the paper's Tables 1-4 + Fig. 6
+//!   devices   list the FPGA device database
 
 use anyhow::{anyhow, bail, Result};
 
 use cnn2gate::cli::Args;
 use cnn2gate::coordinator::{pipeline, InferenceServer, ServerConfig};
-use cnn2gate::dse::{brute, rl, RlConfig};
+use cnn2gate::dse::{brute, eval, rl, Evaluator, RlConfig};
 use cnn2gate::estimator::{device, estimate, Thresholds};
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
-use cnn2gate::report::{baselines, comparison_table, fig6, table1, table2};
+use cnn2gate::report::{baselines, comparison_table, fig6, fleet_table, table1, table2};
 use cnn2gate::runtime::{load_golden, Manifest, Tensor};
 use cnn2gate::sim::simulate;
 use cnn2gate::synth::{self, Explorer};
@@ -29,12 +30,14 @@ const USAGE: &str = "\
 cnn2gate — CNN2Gate reproduction (Rust + JAX + Pallas)
 
 USAGE:
-  cnn2gate info    --model <zoo|file.json>
-  cnn2gate dse     --model <m> --device <d> [--explorer rl|bf] [--seed N]
-  cnn2gate synth   --model <m> --device <d> [--explorer rl|bf] [--quantize]
-  cnn2gate emulate --model <m> [--artifacts DIR]
-  cnn2gate serve   --model <m> [--artifacts DIR] [--requests N] [--batch B]
-  cnn2gate tables  [--artifacts DIR]
+  cnn2gate info      --model <zoo|file.json>
+  cnn2gate dse       --model <m> --device <d> [--explorer rl|bf] [--seed N]
+                     [--threads N] [--seq]
+  cnn2gate fit-fleet --model <m> [--explorer rl|bf]
+  cnn2gate synth     --model <m> --device <d> [--explorer rl|bf] [--quantize]
+  cnn2gate emulate   --model <m> [--artifacts DIR]
+  cnn2gate serve     --model <m> [--artifacts DIR] [--requests N] [--batch B]
+  cnn2gate tables    [--artifacts DIR]
   cnn2gate devices
 
 MODELS: tiny lenet5 alexnet vgg16 (or a cnn2gate-onnx-subset .json file)
@@ -72,14 +75,15 @@ fn explorer_from(args: &Args) -> Result<Explorer> {
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let flags = [
-        "model", "device", "explorer", "artifacts", "requests", "batch", "seed", "max-lut",
-        "max-dsp", "max-mem", "max-reg",
+        "model", "device", "explorer", "artifacts", "requests", "batch", "seed", "threads",
+        "max-lut", "max-dsp", "max-mem", "max-reg",
     ];
-    let switches = ["quantize", "verbose"];
+    let switches = ["quantize", "verbose", "seq"];
     let args = Args::parse(argv, &flags, &switches)?;
     match args.subcommand.as_str() {
         "info" => cmd_info(&args),
         "dse" => cmd_dse(&args),
+        "fit-fleet" => cmd_fit_fleet(&args),
         "synth" => cmd_synth(&args),
         "emulate" => cmd_emulate(&args),
         "serve" => cmd_serve(&args),
@@ -90,7 +94,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let model = args.require("model")?;
     let g = pipeline::load_model(model, false)?;
     let flow = ComputationFlow::extract(&g).map_err(|e| anyhow!("{e}"))?;
     println!("model: {} (input {:?})", g.name, g.input.shape);
@@ -118,19 +122,30 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_dse(args: &Args) -> Result<()> {
-    let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let model = args.require("model")?;
     let dev = pipeline::load_device(args.get("device").unwrap_or("arria10"))?;
     let g = pipeline::load_model(model, false)?;
     let flow = ComputationFlow::extract(&g).map_err(|e| anyhow!("{e}"))?;
     let th = thresholds_from(args)?;
+    // --threads builds a private evaluator; default shares the global
+    // pool + memo; --seq forces the sequential seed path (baseline).
+    let local = match args.get_usize("threads", 0)? {
+        0 => None,
+        n => Some(Evaluator::new(n)),
+    };
+    let evaluator = local.as_ref().unwrap_or_else(|| eval::global());
     let result = match explorer_from(args)? {
-        Explorer::BruteForce => brute::explore(&flow, dev, th),
+        Explorer::BruteForce if args.has("seq") => brute::explore_seq(&flow, dev, th),
+        Explorer::Reinforcement if args.has("seq") => {
+            bail!("--seq applies to the brute-force explorer (use --explorer bf); RL is inherently sequential")
+        }
+        Explorer::BruteForce => brute::explore_with(evaluator, &flow, dev, th),
         Explorer::Reinforcement => {
             let cfg = RlConfig {
                 seed: args.get_usize("seed", 0xD5E)? as u64,
                 ..RlConfig::default()
             };
-            rl::explore(&flow, dev, th, cfg)
+            rl::explore_with(evaluator, &flow, dev, th, cfg)
         }
     };
     println!("device: {}", dev.name);
@@ -139,8 +154,9 @@ fn cmd_dse(args: &Args) -> Result<()> {
         None => println!("Does not fit"),
     }
     println!(
-        "queries: {}   wall: {}   modeled (Intel compiler scale): {}",
+        "queries: {} ({} cached)   wall: {}   modeled (Intel compiler scale): {}",
         result.queries,
+        result.cache_hits,
         fmt_duration(result.wall_seconds),
         fmt_duration(result.modeled_seconds)
     );
@@ -153,8 +169,35 @@ fn cmd_dse(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fit_fleet(args: &Args) -> Result<()> {
+    let model = args.require("model")?;
+    let g = pipeline::load_model(model, false)?;
+    let rep = pipeline::fit_fleet(&g, explorer_from(args)?, thresholds_from(args)?)?;
+    println!("{}", fleet_table(&rep.model, &rep.entries).render());
+    match rep.best() {
+        Some(best) => {
+            let (ni, nl) = best.option().expect("fitting entry has an option");
+            println!(
+                "recommended: {} at ({ni},{nl}) — {:.2} ms simulated latency",
+                best.device,
+                best.latency_ms().expect("fitting entry has latency")
+            );
+        }
+        None => println!("recommended: none — {model} fits no device in the database"),
+    }
+    let stats = eval::global().cache().stats();
+    println!(
+        "fleet wall: {}   estimator memo: {} entries, {} hits / {} misses",
+        fmt_duration(rep.wall_seconds),
+        stats.entries,
+        stats.hits,
+        stats.misses
+    );
+    Ok(())
+}
+
 fn cmd_synth(args: &Args) -> Result<()> {
-    let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let model = args.require("model")?;
     let dev = pipeline::load_device(args.get("device").unwrap_or("arria10"))?;
     let quantize = args.has("quantize");
     let g = pipeline::load_model(model, quantize)?;
@@ -207,7 +250,7 @@ fn artifacts_dir(args: &Args) -> std::path::PathBuf {
 }
 
 fn cmd_emulate(args: &Args) -> Result<()> {
-    let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let model = args.require("model")?;
     let dir = artifacts_dir(args);
     match pipeline::run_emulation(&dir, model)? {
         Some(res) => {
@@ -288,25 +331,27 @@ fn cmd_tables(args: &Args) -> Result<()> {
     let vflow = ComputationFlow::extract(&vgg).map_err(|e| anyhow!("{e}"))?;
     let th = Thresholds::default();
 
-    // Table 1
+    // Table 1 (the CPU row needs a real PJRT backend — skipped on stub builds)
     let mut rows = Vec::new();
     let dir = artifacts_dir(args);
-    if let Ok(manifest) = Manifest::load(&dir) {
-        let a = manifest
-            .model("alexnet")
-            .map(|art| pipeline::time_emulation_synthetic(art, 1))
-            .transpose()?;
-        let v = manifest
-            .model("vgg16")
-            .map(|art| pipeline::time_emulation_synthetic(art, 1))
-            .transpose()?;
-        rows.push((
-            "CPU (PJRT emulation)".to_string(),
-            "N/A".to_string(),
-            a.map(|s| s * 1e3),
-            v.map(|s| s * 1e3),
-            None,
-        ));
+    if cnn2gate::runtime::Runtime::available() {
+        if let Ok(manifest) = Manifest::load(&dir) {
+            let a = manifest
+                .model("alexnet")
+                .map(|art| pipeline::time_emulation_synthetic(art, 1))
+                .transpose()?;
+            let v = manifest
+                .model("vgg16")
+                .map(|art| pipeline::time_emulation_synthetic(art, 1))
+                .transpose()?;
+            rows.push((
+                "CPU (PJRT emulation)".to_string(),
+                "N/A".to_string(),
+                a.map(|s| s * 1e3),
+                v.map(|s| s * 1e3),
+                None,
+            ));
+        }
     }
     for (dev, ni, nl) in [(&CYCLONE_V_5CSEMA5, 8, 8), (&ARRIA_10_GX1150, 16, 32)] {
         let est = estimate(&aflow, dev, ni, nl);

@@ -26,6 +26,23 @@ pub fn peak_gops_per_s(ni: usize, nl: usize, fmax_mhz: f64) -> f64 {
     2.0 * (ni * nl) as f64 * fmax_mhz * 1e6 / 1e9
 }
 
+/// Wall-clock speedup of a parallel run over its sequential baseline
+/// (the ratio the DSE benches record; ≥ 1 means parallel won).
+pub fn speedup(sequential_seconds: f64, parallel_seconds: f64) -> f64 {
+    if parallel_seconds <= 0.0 {
+        return 0.0;
+    }
+    sequential_seconds / parallel_seconds
+}
+
+/// Evaluation throughput: candidates scored per second (DSE bench axis).
+pub fn candidates_per_s(candidates: usize, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    candidates as f64 / seconds
+}
+
 /// Latency percentile over a sample of seconds (p in [0, 100]).
 pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
     if samples.is_empty() {
@@ -118,5 +135,14 @@ mod tests {
         assert_eq!(gops_per_s(1.0, 0.0), 0.0);
         assert_eq!(gops_per_dsp(1.0, 0.0), 0.0);
         assert_eq!(LatencyStats::from_seconds(&[]).n, 0);
+        assert_eq!(speedup(1.0, 0.0), 0.0);
+        assert_eq!(candidates_per_s(10, 0.0), 0.0);
+    }
+
+    #[test]
+    fn speedup_and_throughput() {
+        assert!((speedup(4.0, 1.0) - 4.0).abs() < 1e-12);
+        assert!((speedup(1.0, 2.0) - 0.5).abs() < 1e-12);
+        assert!((candidates_per_s(12, 0.5) - 24.0).abs() < 1e-12);
     }
 }

@@ -5,4 +5,4 @@ pub mod baselines;
 pub mod tables;
 
 pub use baselines::BaselineRow;
-pub use tables::{comparison_table, fig6, table1, table2};
+pub use tables::{comparison_table, fig6, fleet_table, table1, table2};

@@ -72,6 +72,67 @@ pub fn table2(reports: &[(&SynthReport, &DseResult, &DseResult)]) -> Table {
     t
 }
 
+/// Fleet-fit comparison: one model fitted across the device database
+/// (the `fit-fleet` subcommand's output). `entries` come in database
+/// order from [`crate::coordinator::pipeline::fit_fleet`]-shaped runs;
+/// devices that don't fit render a "Does not fit" row.
+pub fn fleet_table(model: &str, entries: &[SynthReport]) -> Table {
+    let mut t = Table::new(
+        format!("Fleet fit: {model} across the FPGA device database"),
+        &[
+            "Device",
+            "Option (Ni,Nl)",
+            "F_avg",
+            "ALM",
+            "DSP",
+            "RAM",
+            "f_max",
+            "Latency",
+            "GOp/s",
+            "Synthesis",
+            "Queries (cached)",
+        ],
+    );
+    for rep in entries {
+        match (&rep.estimate, &rep.sim) {
+            (Some(est), Some(sim)) => {
+                let gops = metrics::gops_per_s(sim.gops, sim.total_millis);
+                t.row(&[
+                    rep.device.to_string(),
+                    format!("({},{})", est.ni, est.nl),
+                    format!("{:.1}%", est.f_avg()),
+                    format!("{:.0}%", est.p_lut),
+                    format!("{:.0}%", est.p_dsp),
+                    format!("{:.0}%", est.p_mem),
+                    format!("{:.0} MHz", est.fmax_mhz),
+                    format!("{:.2} ms", sim.total_millis),
+                    format!("{gops:.1}"),
+                    rep.synthesis_minutes
+                        .map_or("N/A".into(), |m| fmt_duration(m * 60.0)),
+                    format!("{} ({})", rep.dse.queries, rep.dse.cache_hits),
+                ]);
+            }
+            _ => {
+                t.row(&[
+                    rep.device.to_string(),
+                    "Does not fit".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("{} ({})", rep.dse.queries, rep.dse.cache_hits),
+                ]);
+            }
+        }
+    }
+    t.footnote("devices in database order; latency simulated at batch 1");
+    t
+}
+
 /// Tables 3/4: comparison to existing works.
 pub fn comparison_table(
     title: &str,
@@ -176,6 +237,26 @@ mod tests {
         )]);
         let s = t.render();
         assert!(s.contains("18.0 ms") && s.contains("205.0 ms"));
+    }
+
+    #[test]
+    fn fleet_table_renders_fits_and_no_fits() {
+        use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4};
+        use crate::estimator::Thresholds;
+        use crate::synth::{self, Explorer};
+        let g = zoo::build("alexnet", false).unwrap();
+        let entries = vec![
+            synth::run(&g, &ARRIA_10_GX1150, Explorer::BruteForce, Thresholds::default(), None)
+                .unwrap(),
+            synth::run(&g, &CYCLONE_V_5CSEMA4, Explorer::BruteForce, Thresholds::default(), None)
+                .unwrap(),
+        ];
+        let t = fleet_table("alexnet", &entries);
+        assert_eq!(t.rows.len(), 2);
+        let s = t.render();
+        assert!(s.contains("(16,32)"), "{s}");
+        assert!(s.contains("Does not fit"), "{s}");
+        assert!(s.contains("Arria 10"));
     }
 
     #[test]

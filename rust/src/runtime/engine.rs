@@ -31,6 +31,11 @@ pub struct Compiled {
 }
 
 impl Runtime {
+    /// Whether this build carries a real PJRT backend (`pjrt` feature).
+    pub fn available() -> bool {
+        true
+    }
+
     /// Create the CPU PJRT client (once per process).
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;

@@ -1,0 +1,97 @@
+//! Stub PJRT engine — compiled when the `pjrt` feature is off.
+//!
+//! Mirrors the public surface of `engine.rs` (Runtime, Compiled,
+//! RunOutput, literal_of) so the coordinator, server, CLI and tests
+//! compile unchanged in environments without the `xla` bindings crate.
+//! Every entry point fails with [`UNAVAILABLE`], which callers already
+//! treat the same way as missing artifacts: they skip.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::DType;
+
+use super::artifacts::{ModelArtifact, Tensor};
+
+/// The error every stub entry point returns.
+pub const UNAVAILABLE: &str = "PJRT runtime not built: add the `xla` bindings crate to \
+     rust/Cargo.toml, then rebuild with `--features pjrt` (see README.md §Emulation mode)";
+
+/// Stand-in for the PJRT CPU client. Cannot be constructed.
+pub struct Runtime {
+    _private: (),
+}
+
+/// Stand-in for a compiled executable. Cannot be constructed.
+pub struct Compiled {
+    pub arity: usize,
+    pub name: String,
+    _private: (),
+}
+
+/// Stand-in for `xla::Literal` in the [`literal_of`] signature.
+pub struct Literal {
+    _private: (),
+}
+
+impl Runtime {
+    /// Whether this build carries a real PJRT backend. `false` here:
+    /// artifact-gated tests, benches and table rows check this before
+    /// treating an artifacts directory as runnable.
+    pub fn available() -> bool {
+        false
+    }
+
+    /// Always fails: the emulation backend is not part of this build.
+    pub fn cpu() -> Result<Runtime> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load_hlo_text(&self, _path: &Path, _name: &str, _arity: usize) -> Result<Compiled> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn load_artifact(&self, _art: &ModelArtifact) -> Result<Compiled> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+}
+
+/// Always fails in the stub build.
+pub fn literal_of(_t: &Tensor) -> Result<Literal> {
+    Err(anyhow!(UNAVAILABLE))
+}
+
+/// Result of one execution (same shape as the real engine's).
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    pub tensor: Tensor,
+    pub exec_seconds: f64,
+}
+
+impl Compiled {
+    pub fn run(&self, _inputs: &[Tensor], _out_dtype: DType) -> Result<RunOutput> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = Runtime::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn literal_of_is_total() {
+        let t = Tensor::F32(vec![2], vec![1.0, 2.0]);
+        assert!(literal_of(&t).is_err());
+    }
+}

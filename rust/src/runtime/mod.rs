@@ -1,8 +1,19 @@
 //! Emulation-mode runtime: loads the AOT-compiled JAX/Pallas HLO-text
 //! artifacts and executes them on the PJRT CPU client. Python is never
 //! on this path — `make artifacts` ran once at build time.
+//!
+//! The real PJRT backend needs the `xla` bindings crate from the offline
+//! image and is gated behind the `pjrt` cargo feature; the default build
+//! substitutes an API-identical stub whose `Runtime::cpu()` returns a
+//! descriptive error, so every artifact-dependent test and subcommand
+//! degrades to the same "skipping: run `make artifacts`" path it already
+//! takes when the artifacts directory is absent.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 
 pub use artifacts::{load_golden, GoldenData, Manifest, ModelArtifact, ParamSpec, Tensor};

@@ -141,10 +141,22 @@ pub fn simulate(
     nl: usize,
 ) -> SimReport {
     let est = estimate(flow, device, ni, nl);
+    simulate_with_estimate(flow, device, &est)
+}
+
+/// Simulate reusing an already-computed resource estimate (the option is
+/// the estimate's own (ni, nl)) — lets dse::eval score a candidate with
+/// a single estimator call instead of re-deriving it here.
+pub fn simulate_with_estimate(
+    flow: &ComputationFlow,
+    device: &Device,
+    est: &ResourceEstimate,
+) -> SimReport {
+    let (ni, nl) = (est.ni, est.nl);
     let layers: Vec<LayerTiming> = flow
         .layers
         .iter()
-        .map(|l| simulate_layer(l, device, &est, ni, nl))
+        .map(|l| simulate_layer(l, device, est, ni, nl))
         .collect();
     let total_cycles = layers.iter().map(|l| l.cycles).sum();
     let total_millis = layers.iter().map(|l| l.millis).sum();

@@ -13,6 +13,8 @@
 //! reported by `cnn2gate synth --report`.
 
 use crate::estimator::model::PIPE_DEPTH;
+use crate::estimator::Device;
+use crate::ir::ComputationFlow;
 
 use super::pipe::Pipe;
 
@@ -137,6 +139,30 @@ pub fn step_round(work: &RoundWork) -> StepReport {
     rep
 }
 
+/// Work description of a flow's dominant (most-MAC) round at option
+/// (N_i, N_l) — what [`crate::dse::eval`]'s stepped fidelity mode feeds
+/// the cycle-accurate simulator. One vector step fetches `N_i` feature
+/// bytes broadcast to the lanes plus `N_i × N_l` weight bytes (int8
+/// codes); each completed group-slice retires `N_l` output bytes.
+/// Returns `None` for an empty flow.
+pub fn dominant_round_work(
+    flow: &ComputationFlow,
+    device: &Device,
+    fmax_mhz: f64,
+    ni: usize,
+    nl: usize,
+) -> Option<RoundWork> {
+    let layer = flow.layers.iter().max_by_key(|l| l.macs())?;
+    Some(RoundWork {
+        pixels: layer.out_pixels().max(1),
+        groups: layer.out_features().div_ceil(nl).max(1),
+        red_steps: layer.reduction_dim().div_ceil(ni).max(1),
+        bytes_per_step: ni * (nl + 1),
+        ddr_bytes_per_cycle: device.ddr_gbytes_per_s * 1e9 / (fmax_mhz * 1e6),
+        out_bytes: nl,
+    })
+}
+
 /// The analytical cycle count the engine uses (see engine.rs for the
 /// closed form); exposed here so the property test can compare.
 pub fn analytical_cycles(work: &RoundWork) -> u64 {
@@ -212,6 +238,21 @@ mod tests {
                 "stepped {stepped} vs analytical {analytical} (rel {rel:.3}) for {w:?}"
             );
         });
+    }
+
+    #[test]
+    fn dominant_round_is_alexnet_conv2() {
+        use crate::estimator::device::ARRIA_10_GX1150;
+        use crate::onnx::zoo;
+        let flow = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+        let w = dominant_round_work(&flow, &ARRIA_10_GX1150, 199.0, 16, 32).unwrap();
+        // conv2 carries the most MACs: 27x27 pixels, 192 features over a
+        // 1600-long reduction — the "alexnet-conv2-ish" hotpath workload
+        assert_eq!(w.pixels, 729);
+        assert_eq!(w.groups, 6);
+        assert_eq!(w.red_steps, 100);
+        assert_eq!(w.out_bytes, 32);
+        assert!(w.ddr_bytes_per_cycle > 0.0);
     }
 
     #[test]

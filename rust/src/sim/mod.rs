@@ -6,6 +6,9 @@ pub mod engine;
 pub mod kernels;
 pub mod pipe;
 
-pub use engine::{simulate, simulate_batched, simulate_layer, BatchReport, LayerTiming, SimReport};
-pub use kernels::{analytical_cycles, step_round, RoundWork, StepReport};
+pub use engine::{
+    simulate, simulate_batched, simulate_layer, simulate_with_estimate, BatchReport, LayerTiming,
+    SimReport,
+};
+pub use kernels::{analytical_cycles, dominant_round_work, step_round, RoundWork, StepReport};
 pub use pipe::Pipe;

@@ -1,0 +1,57 @@
+//! Deterministic FNV-1a hashing for structural fingerprints.
+//!
+//! The dse::eval memo cache keys estimator results on (model, device,
+//! N_i, N_l); the model/device components are FNV-1a folds over their
+//! structural census. FNV is used instead of `DefaultHasher` because its
+//! output is stable across processes and std versions, which keeps cache
+//! statistics reproducible in tests and future on-disk cache formats
+//! stable.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one byte into a running FNV-1a hash.
+pub fn fold_byte(hash: u64, byte: u8) -> u64 {
+    (hash ^ byte as u64).wrapping_mul(FNV_PRIME)
+}
+
+/// Fold a byte slice into a running FNV-1a hash.
+pub fn fold_bytes(hash: u64, bytes: &[u8]) -> u64 {
+    bytes.iter().fold(hash, |h, &b| fold_byte(h, b))
+}
+
+/// Fold one little-endian u64 word into a running FNV-1a hash.
+pub fn fold_u64(hash: u64, word: u64) -> u64 {
+    fold_bytes(hash, &word.to_le_bytes())
+}
+
+/// One-shot FNV-1a of a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fold_bytes(FNV_OFFSET, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn word_fold_is_order_sensitive() {
+        let a = fold_u64(fold_u64(FNV_OFFSET, 1), 2);
+        let b = fold_u64(fold_u64(FNV_OFFSET, 2), 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(fnv1a(b"cnn2gate"), fnv1a(b"cnn2gate"));
+    }
+}

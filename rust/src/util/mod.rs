@@ -2,6 +2,7 @@
 //! PRNG, fixed-point arithmetic, table formatting (see DESIGN.md §2).
 
 pub mod fixed;
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,217 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The offline build image has no crates.io registry access, so the
+//! workspace vendors the subset of the `anyhow` 1.x API this repo
+//! actually uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]
+//! macros and the [`Context`] extension trait. Error chains are
+//! flattened into the message at construction time ("context: cause"),
+//! which preserves the `{e}` / `{e:#}` rendering the binaries rely on.
+//!
+//! Swap this for the real crate by pointing the `anyhow` dependency in
+//! `rust/Cargo.toml` back at the registry — no source changes needed.
+
+use std::fmt::{self, Display};
+
+/// A flattened error message, API-compatible with `anyhow::Error` for
+/// the operations this workspace performs on it.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Construct from a concrete error value (mirrors `anyhow::Error::new`).
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error::msg(error)
+    }
+
+    /// Wrap with additional context, outermost first.
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::msg(error)
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::{Display, Error};
+
+    /// Sealed dispatch helper so [`super::Context`] works both for
+    /// `Result<T, E: std::error::Error>` and for `Result<T, Error>`
+    /// (the same trick the real crate uses).
+    pub trait StdError {
+        fn ext_context<C: Display>(self, context: C) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            Error::msg(format!("{context}: {self}"))
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn macro_formats_and_displays() {
+        let n = 3;
+        let e = anyhow!("bad value {n}");
+        assert_eq!(e.to_string(), "bad value 3");
+        assert_eq!(format!("{e:#}"), "bad value 3");
+    }
+
+    #[test]
+    fn bail_early_returns() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope ({})", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "nope (7)");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let e: Result<String, std::io::Error> = Err(io_err());
+            Ok(e?)
+        }
+        assert!(f().unwrap_err().to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn context_wraps_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: missing thing");
+
+        let already: Result<()> = Err(anyhow!("inner"));
+        let e = already.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+
+        let none: Option<u8> = None;
+        assert_eq!(none.context("absent").unwrap_err().to_string(), "absent");
+    }
+}
