@@ -8,7 +8,7 @@
 mod common;
 
 use cnn2gate::coordinator::pipeline;
-use cnn2gate::dse::{brute, eval, Evaluator, Fidelity};
+use cnn2gate::dse::{brute, eval, EvalCache, Evaluator, Fidelity};
 use cnn2gate::estimator::device::ARRIA_10_GX1150;
 use cnn2gate::estimator::{estimate, Thresholds};
 use cnn2gate::ir::ComputationFlow;
@@ -48,6 +48,29 @@ fn main() {
         ev.evaluate(&flow, &ARRIA_10_GX1150, 16, 32, Fidelity::Analytical)
     });
     h.check(hit < 10e-6, &format!("memo hit {:.2} µs < 10 µs", hit * 1e6));
+
+    // persistent memo: save/load a grid-sized cache file and warm-start
+    // an evaluator from it (the `--cache-file` path of dse/fit-fleet/sweep)
+    let cache_path = std::env::temp_dir().join(format!(
+        "cnn2gate-bench-cache-{}.json",
+        std::process::id()
+    ));
+    let entries = ev.cache().stats().entries;
+    let save_t = h.bench("evalcache/save(grid)", 200, || {
+        ev.cache().save(&cache_path).unwrap()
+    });
+    let load_t = h.bench("evalcache/load(grid)", 200, || {
+        EvalCache::load(&cache_path).unwrap()
+    });
+    h.check(save_t < 50e-3, &format!("cache save ({entries} entries) < 50 ms"));
+    h.check(load_t < 50e-3, &format!("cache load ({entries} entries) < 50 ms"));
+    let warm_start = Evaluator::with_cache(
+        eval::default_threads(),
+        std::sync::Arc::new(EvalCache::load(&cache_path).unwrap()),
+    );
+    let (_, disk_hit) = warm_start.evaluate(&flow, &ARRIA_10_GX1150, 16, 32, Fidelity::Analytical);
+    h.check(disk_hit, "disk-loaded cache serves the hot option without recompute");
+    std::fs::remove_file(&cache_path).ok();
 
     // stepped simulator throughput
     let work = RoundWork {

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let flow = ComputationFlow::extract(&graph)?;
 
     // the quantization-error curve the reward consumes
-    let curve = joint::quant_error_curve(&graph).map_err(anyhow::Error::msg)?;
+    let curve = joint::quant_error_curve(&graph)?;
     println!("weight quantization error curve (normalized):");
     for (m, e) in &curve {
         let bar = "#".repeat((e * 40.0).round() as usize);
@@ -46,8 +46,7 @@ fn main() -> anyhow::Result<()> {
                     seed,
                     ..JointConfig::default()
                 };
-                let r = joint::explore(&graph, &flow, dev, Thresholds::default(), cfg)
-                    .map_err(anyhow::Error::msg)?;
+                let r = joint::explore(&graph, &flow, dev, Thresholds::default(), cfg)?;
                 queries += r.queries;
                 modeled += r.modeled_seconds;
                 if let Some(b) = r.best {

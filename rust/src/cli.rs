@@ -66,6 +66,21 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// Comma-separated list flag (`--models alexnet,vgg16`); `default`
+    /// when absent. Entries are trimmed and empty segments dropped, so
+    /// `a,,b` and `a, b` both parse to two entries.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -129,6 +144,19 @@ mod tests {
         assert_eq!(a.require("model").unwrap(), "alexnet");
         let err = a.require("device").unwrap_err();
         assert!(err.to_string().contains("--device required"));
+    }
+
+    #[test]
+    fn list_getter_splits_and_defaults() {
+        let a = Args::parse(
+            &sv(&["x", "--models", "alexnet, vgg16,,tiny"]),
+            &["models"],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.get_list("models", &["lenet5"]), vec!["alexnet", "vgg16", "tiny"]);
+        let b = Args::parse(&sv(&["x"]), &["models"], &[]).unwrap();
+        assert_eq!(b.get_list("models", &["alexnet", "vgg16"]), vec!["alexnet", "vgg16"]);
     }
 
     #[test]

@@ -9,5 +9,8 @@
 pub mod pipeline;
 pub mod server;
 
-pub use pipeline::{fit_fleet, run_pipeline, FleetReport, PipelineConfig, PipelineResult};
+pub use pipeline::{
+    fit_fleet, fit_fleet_with, run_pipeline, sweep_matrix, sweep_matrix_with, FleetReport,
+    PipelineConfig, PipelineResult, SweepReport,
+};
 pub use server::{InferenceServer, ServerConfig, ServerStats};

@@ -9,13 +9,21 @@
 //! [`crate::dse::eval::parallel_map`]; the per-device explorers share
 //! the process-wide estimator memo underneath), for the `fit-fleet`
 //! CLI subcommand and the fleet comparison table.
+//!
+//! [`sweep_matrix`] generalizes the fleet fit to a full model×device
+//! matrix — every model from the fixtures (or any ONNX-subset input)
+//! against every device in the database — for the `sweep` subcommand,
+//! with best-device-per-model / best-model-per-device rankings and a
+//! matrix-wide latency/resource Pareto frontier. Both fan-outs accept a
+//! caller-provided [`Evaluator`], so a disk-seeded estimator memo
+//! (`--cache-file`) warms every pair in the run.
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::dse::eval;
+use crate::dse::{eval, Evaluator};
 use crate::estimator::{device, Device, Thresholds};
 use crate::ir::Graph;
 use crate::onnx::{parser, zoo};
@@ -126,7 +134,7 @@ impl FleetReport {
         let mut fits: Vec<&SynthReport> = self.entries.iter().filter(|r| r.fits()).collect();
         fits.sort_by(|a, b| {
             let (la, lb) = (a.latency_ms().unwrap_or(f64::MAX), b.latency_ms().unwrap_or(f64::MAX));
-            la.partial_cmp(&lb).expect("latencies are finite")
+            la.total_cmp(&lb)
         });
         fits
     }
@@ -148,10 +156,21 @@ pub fn fit_fleet(
     explorer: Explorer,
     thresholds: Thresholds,
 ) -> Result<FleetReport> {
+    fit_fleet_with(eval::global(), graph, explorer, thresholds)
+}
+
+/// [`fit_fleet`] through a caller-provided evaluator (the `--cache-file`
+/// CLI path seeds one from disk so repeat fleet fits start warm).
+pub fn fit_fleet_with(
+    evaluator: &Evaluator,
+    graph: &Graph,
+    explorer: Explorer,
+    thresholds: Thresholds,
+) -> Result<FleetReport> {
     let t0 = Instant::now();
     let devices = device::all();
     let results = eval::parallel_map(&devices, devices.len(), |&dev| {
-        synth::run(graph, dev, explorer, thresholds, None)
+        synth::run_with(evaluator, graph, dev, explorer, thresholds, None)
     });
     let mut entries = Vec::with_capacity(results.len());
     for result in results {
@@ -160,6 +179,137 @@ pub fn fit_fleet(
     Ok(FleetReport {
         model: graph.name.clone(),
         explorer,
+        entries,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Every (model, device) pair explored: the fleet fit generalized to the
+/// full model×device matrix the `sweep` subcommand reports.
+#[derive(Debug)]
+pub struct SweepReport {
+    pub explorer: Explorer,
+    /// Model names in the order given to [`sweep_matrix`].
+    pub models: Vec<String>,
+    /// One synthesis report per (model, device) pair: model-major in
+    /// `models` order, devices in [`device::all`] order within a model.
+    pub entries: Vec<SynthReport>,
+    /// Wall time of the concurrent sweep.
+    pub wall_seconds: f64,
+}
+
+fn latency_key(r: &SynthReport) -> f64 {
+    r.latency_ms().unwrap_or(f64::MAX)
+}
+
+fn resource_key(r: &SynthReport) -> f64 {
+    r.estimate.as_ref().map_or(f64::MAX, |e| e.f_avg())
+}
+
+impl SweepReport {
+    /// The matrix cell for one (model, device) pair, if present.
+    pub fn entry(&self, model: &str, device: &str) -> Option<&SynthReport> {
+        self.entries
+            .iter()
+            .find(|e| e.model == model && e.device == device)
+    }
+
+    /// Best (lowest simulated latency) fitting device per model, in
+    /// model order; `None` when the model fits nothing.
+    pub fn best_device_per_model(&self) -> Vec<(&str, Option<&SynthReport>)> {
+        self.models
+            .iter()
+            .map(|m| {
+                let best = self
+                    .entries
+                    .iter()
+                    .filter(|e| e.model == *m && e.fits())
+                    .min_by(|a, b| latency_key(a).total_cmp(&latency_key(b)));
+                (m.as_str(), best)
+            })
+            .collect()
+    }
+
+    /// Best (lowest simulated latency) fitting model per device, in
+    /// database order; `None` when nothing fits the device.
+    pub fn best_model_per_device(&self) -> Vec<(&'static str, Option<&SynthReport>)> {
+        device::all()
+            .into_iter()
+            .map(|dev| {
+                let best = self
+                    .entries
+                    .iter()
+                    .filter(|e| e.device == dev.name && e.fits())
+                    .min_by(|a, b| latency_key(a).total_cmp(&latency_key(b)));
+                (dev.name, best)
+            })
+            .collect()
+    }
+
+    /// Matrix-wide Pareto frontier over (simulated latency, F_avg):
+    /// the fitting (model, device) points no other fit beats on both
+    /// axes, sorted by latency.
+    pub fn pareto_frontier(&self) -> Vec<&SynthReport> {
+        let mut fits: Vec<&SynthReport> = self.entries.iter().filter(|e| e.fits()).collect();
+        fits.sort_by(|a, b| {
+            latency_key(a)
+                .total_cmp(&latency_key(b))
+                .then(resource_key(a).total_cmp(&resource_key(b)))
+        });
+        let mut frontier: Vec<&SynthReport> = Vec::new();
+        let mut best_resource = f64::INFINITY;
+        for entry in fits {
+            let r = resource_key(entry);
+            if r < best_resource {
+                best_resource = r;
+                frontier.push(entry);
+            }
+        }
+        frontier
+    }
+}
+
+/// Explore every (model, device) pair through the process-wide
+/// evaluator. See [`sweep_matrix_with`].
+pub fn sweep_matrix(
+    graphs: &[Graph],
+    explorer: Explorer,
+    thresholds: Thresholds,
+) -> Result<SweepReport> {
+    sweep_matrix_with(eval::global(), graphs, explorer, thresholds)
+}
+
+/// Explore every (model, device) pair concurrently through `evaluator`
+/// (scoped fan-out via [`eval::parallel_map`]): all pairs share one
+/// estimator memo, so a model's candidate grid is costed once across its
+/// whole device row — and across whole processes when the memo came from
+/// a `--cache-file`. Entries come back model-major in input order.
+pub fn sweep_matrix_with(
+    evaluator: &Evaluator,
+    graphs: &[Graph],
+    explorer: Explorer,
+    thresholds: Thresholds,
+) -> Result<SweepReport> {
+    if graphs.is_empty() {
+        return Err(anyhow!("sweep needs at least one model"));
+    }
+    let t0 = Instant::now();
+    let devices = device::all();
+    let pairs: Vec<(&Graph, &'static Device)> = graphs
+        .iter()
+        .flat_map(|g| devices.iter().map(move |&d| (g, d)))
+        .collect();
+    let width = pairs.len().min(2 * eval::default_threads());
+    let results = eval::parallel_map(&pairs, width, |&(graph, dev)| {
+        synth::run_with(evaluator, graph, dev, explorer, thresholds, None)
+    });
+    let mut entries = Vec::with_capacity(results.len());
+    for result in results {
+        entries.push(result?);
+    }
+    Ok(SweepReport {
+        explorer,
+        models: graphs.iter().map(|g| g.name.clone()).collect(),
         entries,
         wall_seconds: t0.elapsed().as_secs_f64(),
     })
@@ -326,6 +476,122 @@ mod tests {
     fn unknown_model_and_device_error_clearly() {
         assert!(load_model("resnet152", false).is_err());
         assert!(load_device("virtex9").is_err());
+    }
+
+    #[test]
+    fn sweep_matrix_matches_per_pair_seed_exploration() {
+        // the sweep's concurrent fan-out must choose exactly the design
+        // the sequential seed path picks for every (model, device) pair
+        let models = [
+            crate::onnx::zoo::build("alexnet", false).unwrap(),
+            crate::onnx::zoo::build("vgg16", false).unwrap(),
+        ];
+        let rep = sweep_matrix(&models, Explorer::BruteForce, Thresholds::default()).unwrap();
+        assert_eq!(rep.entries.len(), 2 * device::all().len());
+        assert_eq!(rep.models, vec!["alexnet", "vgg16"]);
+        // model-major, database-order layout
+        for (mi, model) in rep.models.iter().enumerate() {
+            for (di, dev) in device::all().iter().enumerate() {
+                let entry = &rep.entries[mi * device::all().len() + di];
+                assert_eq!(entry.model, *model);
+                assert_eq!(entry.device, dev.name);
+            }
+        }
+        for entry in &rep.entries {
+            let g = models.iter().find(|g| g.name == entry.model).unwrap();
+            let flow = ComputationFlow::extract(g).unwrap();
+            let dev = device::find(entry.device).unwrap();
+            let seed = crate::dse::brute::explore_seq(&flow, dev, Thresholds::default());
+            assert_eq!(
+                entry.option(),
+                seed.best,
+                "{} on {}",
+                entry.model,
+                entry.device
+            );
+            assert_eq!(entry.dse.trace, seed.trace, "{} on {}", entry.model, entry.device);
+        }
+    }
+
+    #[test]
+    fn sweep_rankings_and_pareto_are_consistent() {
+        let models = [
+            crate::onnx::zoo::build("alexnet", false).unwrap(),
+            crate::onnx::zoo::build("vgg16", false).unwrap(),
+        ];
+        let rep = sweep_matrix(&models, Explorer::BruteForce, Thresholds::default()).unwrap();
+        // best device per model is the row's latency argmin over fits
+        for (model, best) in rep.best_device_per_model() {
+            let row_min = rep
+                .entries
+                .iter()
+                .filter(|e| e.model == model && e.fits())
+                .map(|e| e.latency_ms().unwrap())
+                .fold(f64::INFINITY, f64::min);
+            match best {
+                Some(b) => assert_eq!(b.latency_ms().unwrap(), row_min, "{model}"),
+                None => assert!(row_min.is_infinite(), "{model}"),
+            }
+        }
+        // paper shape: the Arria 10 is the best target for both fixtures
+        for (model, best) in rep.best_device_per_model() {
+            let b = best.unwrap_or_else(|| panic!("{model} fits nothing"));
+            assert!(b.device.contains("Arria 10"), "{model} best on {}", b.device);
+        }
+        // best model per device: AlexNet (fewer GOp) beats VGG wherever
+        // both fit; the 5CSEMA4 fits neither
+        for (device, best) in rep.best_model_per_device() {
+            if device.contains("5CSEMA4") {
+                assert!(best.is_none(), "nothing fits the 5CSEMA4");
+            } else {
+                assert_eq!(best.unwrap().model, "alexnet", "{device}");
+            }
+        }
+        // pareto frontier: non-empty, latency-sorted, and undominated
+        let frontier = rep.pareto_frontier();
+        assert!(!frontier.is_empty());
+        for w in frontier.windows(2) {
+            assert!(w[0].latency_ms().unwrap() <= w[1].latency_ms().unwrap());
+            assert!(
+                w[0].estimate.as_ref().unwrap().f_avg()
+                    > w[1].estimate.as_ref().unwrap().f_avg(),
+                "frontier must strictly improve on resources as latency grows"
+            );
+        }
+        for p in &frontier {
+            let (pl, pr) = (
+                p.latency_ms().unwrap(),
+                p.estimate.as_ref().unwrap().f_avg(),
+            );
+            for e in rep.entries.iter().filter(|e| e.fits()) {
+                let (el, er) = (
+                    e.latency_ms().unwrap(),
+                    e.estimate.as_ref().unwrap().f_avg(),
+                );
+                let dominates = (el < pl && er <= pr) || (el <= pl && er < pr);
+                assert!(
+                    !dominates,
+                    "{} on {} dominates frontier point {} on {}",
+                    e.model, e.device, p.model, p.device
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_matrix_rejects_empty_model_list() {
+        let err = sweep_matrix(&[], Explorer::BruteForce, Thresholds::default()).unwrap_err();
+        assert!(err.to_string().contains("at least one model"));
+    }
+
+    #[test]
+    fn sweep_entry_lookup_finds_cells() {
+        let models = [crate::onnx::zoo::build("alexnet", false).unwrap()];
+        let rep = sweep_matrix(&models, Explorer::BruteForce, Thresholds::default()).unwrap();
+        let cell = rep.entry("alexnet", "Arria 10 GX 1150").unwrap();
+        assert_eq!(cell.option(), Some((16, 32)));
+        assert!(rep.entry("alexnet", "no-such-device").is_none());
+        assert!(rep.entry("no-such-model", "Arria 10 GX 1150").is_none());
     }
 
     #[test]

@@ -171,20 +171,27 @@ impl InferenceServer {
         reply_rx.recv().map_err(|_| anyhow!("server dropped reply"))?
     }
 
-    /// Stop the worker and collect statistics.
+    /// Stop the worker and collect statistics. A worker that died
+    /// abnormally yields empty statistics (with a warning) instead of
+    /// propagating its panic into the caller.
     pub fn shutdown(mut self) -> ServerStats {
         self.tx.take(); // close the queue; worker loop exits
-        let (exec, e2e, batches) = self
-            .worker
-            .take()
-            .expect("worker present")
-            .join()
-            .expect("worker panicked");
-        ServerStats {
-            served: exec.len(),
-            batches,
-            exec: LatencyStats::from_seconds(&exec),
-            e2e: LatencyStats::from_seconds(&e2e),
+        match self.worker.take().map(JoinHandle::join) {
+            Some(Ok((exec, e2e, batches))) => ServerStats {
+                served: exec.len(),
+                batches,
+                exec: LatencyStats::from_seconds(&exec),
+                e2e: LatencyStats::from_seconds(&e2e),
+            },
+            _ => {
+                eprintln!("warning: inference worker exited abnormally; statistics lost");
+                ServerStats {
+                    served: 0,
+                    batches: 0,
+                    exec: LatencyStats::from_seconds(&[]),
+                    e2e: LatencyStats::from_seconds(&[]),
+                }
+            }
         }
     }
 }

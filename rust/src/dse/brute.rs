@@ -201,6 +201,30 @@ mod tests {
     }
 
     #[test]
+    fn exploration_served_from_disk_cache_matches_cold_run() {
+        // cold run → persist the memo → reload in a fresh evaluator: the
+        // warm exploration must be answered entirely from disk and pick
+        // the identical design with an identical trace
+        use super::eval::EvalCache;
+        use std::sync::Arc;
+        let f = flow("alexnet");
+        let ev = Evaluator::new(2);
+        let cold = explore_with(&ev, &f, &ARRIA_10_GX1150, Thresholds::default());
+        let path = std::env::temp_dir()
+            .join(format!("cnn2gate-brute-cache-{}.json", std::process::id()));
+        ev.cache().save(&path).unwrap();
+        let warm_ev = Evaluator::with_cache(2, Arc::new(EvalCache::load(&path).unwrap()));
+        let warm = explore_with(&warm_ev, &f, &ARRIA_10_GX1150, Thresholds::default());
+        assert_eq!(warm.cache_hits, warm.queries, "every candidate from disk");
+        assert_eq!(warm.best, cold.best);
+        assert_eq!(warm.best_estimate, cold.best_estimate);
+        assert_eq!(warm.f_max.to_bits(), cold.f_max.to_bits());
+        assert_eq!(warm.trace, cold.trace);
+        assert_eq!(warm_ev.cache().stats().misses, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn repeat_exploration_is_served_from_cache() {
         let f = flow("alexnet");
         let ev = Evaluator::new(4);

@@ -31,13 +31,19 @@
 //! deliberately uses [`parallel_map`]'s scoped threads instead.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
+use anyhow::{anyhow, Context};
+
 use crate::estimator::{estimate, Device, ResourceEstimate, Thresholds};
 use crate::ir::ComputationFlow;
-use crate::sim::{dominant_round_work, simulate_with_estimate, step_round, SimReport, StepReport};
+use crate::sim::{
+    dominant_round_work, simulate_with_estimate, step_round, LayerTiming, SimReport, StepReport,
+};
+use crate::util::json::{Json, JsonObj};
 
 /// How much simulation each candidate evaluation buys.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,7 +56,7 @@ pub enum Fidelity {
 }
 
 /// Everything one estimator/simulator query produces for a candidate.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Evaluation {
     pub ni: usize,
     pub nl: usize,
@@ -211,6 +217,407 @@ impl EvalCache {
         self.map.lock().expect("eval cache poisoned").clear();
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// On-disk persistence
+//
+// The FNV fingerprints in EvalKey are process-stable by design (see
+// util::hash), so a memoized evaluation survives across processes: a
+// repeat sweep starts warm instead of re-deriving every estimate. The
+// format is versioned JSON through util::json; loading is strict — any
+// parse failure, schema mismatch or key/payload contradiction rejects
+// the whole file so a corrupt or stale cache can never serve wrong
+// entries — and the CLI falls back to a cold cache with a warning via
+// [`EvalCache::load_or_cold`].
+// ---------------------------------------------------------------------------
+
+/// Format tag of the on-disk cache file.
+pub const CACHE_FORMAT: &str = "cnn2gate-evalcache-v1";
+/// Schema version within the format; bumped on any layout change.
+pub const CACHE_VERSION: i64 = 1;
+/// Largest integer `util::json` round-trips exactly (below 2^53).
+const JSON_MAX_INT: u64 = 9_000_000_000_000_000;
+
+fn hex16(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn parse_hex16(s: &str) -> Result<u64, String> {
+    if s.len() != 16 {
+        return Err(format!("bad fingerprint '{s}' (want 16 hex digits)"));
+    }
+    u64::from_str_radix(s, 16).map_err(|e| format!("bad fingerprint '{s}': {e}"))
+}
+
+fn jf(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .as_f64()
+        .filter(|x| x.is_finite())
+        .ok_or_else(|| format!("missing or non-finite number '{key}'"))
+}
+
+fn ju(v: &Json, key: &str) -> Result<u64, String> {
+    let n = v
+        .get(key)
+        .as_i64()
+        .ok_or_else(|| format!("missing integer '{key}'"))?;
+    u64::try_from(n).map_err(|_| format!("negative '{key}'"))
+}
+
+fn jus(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| format!("missing count '{key}'"))
+}
+
+fn jb(v: &Json, key: &str) -> Result<bool, String> {
+    v.get(key)
+        .as_bool()
+        .ok_or_else(|| format!("missing bool '{key}'"))
+}
+
+fn js(v: &Json, key: &str) -> Result<String, String> {
+    v.get(key)
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string '{key}'"))
+}
+
+/// Whether every integer/float in the evaluation survives a JSON
+/// round-trip bit-for-bit; unsafe entries are skipped on save rather
+/// than persisted lossily.
+fn json_safe(e: &Evaluation) -> bool {
+    let ints_ok = std::iter::once(e.latency.total_cycles)
+        .chain(
+            e.latency
+                .layers
+                .iter()
+                .flat_map(|l| [l.macs, l.compute_cycles, l.ddr_cycles, l.cycles]),
+        )
+        .chain(e.stepped.iter().flat_map(|s| {
+            [
+                s.cycles,
+                s.rd_busy,
+                s.conv_busy,
+                s.wr_busy,
+                s.rd_to_conv_full_stalls,
+                s.conv_to_wr_full_stalls,
+                s.conv_empty_stalls,
+            ]
+        }))
+        .all(|v| v < JSON_MAX_INT);
+    let est = &e.estimate;
+    let floats_ok = [
+        est.alms,
+        est.dsps,
+        est.ram_blocks,
+        est.mem_bits,
+        est.registers,
+        est.p_lut,
+        est.p_dsp,
+        est.p_mem,
+        est.p_reg,
+        est.fmax_mhz,
+        e.latency.fmax_mhz,
+        e.latency.total_millis,
+        e.latency.gops,
+    ]
+    .iter()
+    .all(|v| v.is_finite())
+        && e.latency.layers.iter().all(|l| l.millis.is_finite());
+    ints_ok && floats_ok
+}
+
+fn est_to_json(e: &ResourceEstimate) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("ni", e.ni.into());
+    o.insert("nl", e.nl.into());
+    o.insert("alms", e.alms.into());
+    o.insert("dsps", e.dsps.into());
+    o.insert("ram_blocks", e.ram_blocks.into());
+    o.insert("mem_bits", e.mem_bits.into());
+    o.insert("registers", e.registers.into());
+    o.insert("p_lut", e.p_lut.into());
+    o.insert("p_dsp", e.p_dsp.into());
+    o.insert("p_mem", e.p_mem.into());
+    o.insert("p_reg", e.p_reg.into());
+    o.insert("fmax_mhz", e.fmax_mhz.into());
+    Json::Obj(o)
+}
+
+fn est_from_json(v: &Json) -> Result<ResourceEstimate, String> {
+    Ok(ResourceEstimate {
+        ni: jus(v, "ni")?,
+        nl: jus(v, "nl")?,
+        alms: jf(v, "alms")?,
+        dsps: jf(v, "dsps")?,
+        ram_blocks: jf(v, "ram_blocks")?,
+        mem_bits: jf(v, "mem_bits")?,
+        registers: jf(v, "registers")?,
+        p_lut: jf(v, "p_lut")?,
+        p_dsp: jf(v, "p_dsp")?,
+        p_mem: jf(v, "p_mem")?,
+        p_reg: jf(v, "p_reg")?,
+        fmax_mhz: jf(v, "fmax_mhz")?,
+    })
+}
+
+fn layer_to_json(l: &LayerTiming) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("index", l.index.into());
+    o.insert("label", l.label.as_str().into());
+    o.insert("is_conv", l.is_conv.into());
+    o.insert("macs", Json::Num(l.macs as f64));
+    o.insert("compute_cycles", Json::Num(l.compute_cycles as f64));
+    o.insert("ddr_cycles", Json::Num(l.ddr_cycles as f64));
+    o.insert("cycles", Json::Num(l.cycles as f64));
+    o.insert("millis", l.millis.into());
+    o.insert("memory_bound", l.memory_bound.into());
+    Json::Obj(o)
+}
+
+fn layer_from_json(v: &Json) -> Result<LayerTiming, String> {
+    Ok(LayerTiming {
+        index: jus(v, "index")?,
+        label: js(v, "label")?,
+        is_conv: jb(v, "is_conv")?,
+        macs: ju(v, "macs")?,
+        compute_cycles: ju(v, "compute_cycles")?,
+        ddr_cycles: ju(v, "ddr_cycles")?,
+        cycles: ju(v, "cycles")?,
+        millis: jf(v, "millis")?,
+        memory_bound: jb(v, "memory_bound")?,
+    })
+}
+
+fn sim_to_json(s: &SimReport) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("model", s.model.as_str().into());
+    o.insert("device", s.device.as_str().into());
+    o.insert("ni", s.ni.into());
+    o.insert("nl", s.nl.into());
+    o.insert("fmax_mhz", s.fmax_mhz.into());
+    o.insert("total_cycles", Json::Num(s.total_cycles as f64));
+    o.insert("total_millis", s.total_millis.into());
+    o.insert("gops", s.gops.into());
+    o.insert("layers", Json::Arr(s.layers.iter().map(layer_to_json).collect()));
+    Json::Obj(o)
+}
+
+fn sim_from_json(v: &Json) -> Result<SimReport, String> {
+    let layers = v
+        .get("layers")
+        .as_arr()
+        .ok_or_else(|| "latency missing 'layers'".to_string())?
+        .iter()
+        .map(layer_from_json)
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(SimReport {
+        model: js(v, "model")?,
+        device: js(v, "device")?,
+        ni: jus(v, "ni")?,
+        nl: jus(v, "nl")?,
+        fmax_mhz: jf(v, "fmax_mhz")?,
+        layers,
+        total_cycles: ju(v, "total_cycles")?,
+        total_millis: jf(v, "total_millis")?,
+        gops: jf(v, "gops")?,
+    })
+}
+
+fn step_to_json(s: &StepReport) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("cycles", Json::Num(s.cycles as f64));
+    o.insert("rd_busy", Json::Num(s.rd_busy as f64));
+    o.insert("conv_busy", Json::Num(s.conv_busy as f64));
+    o.insert("wr_busy", Json::Num(s.wr_busy as f64));
+    o.insert("rd_to_conv_full_stalls", Json::Num(s.rd_to_conv_full_stalls as f64));
+    o.insert("conv_to_wr_full_stalls", Json::Num(s.conv_to_wr_full_stalls as f64));
+    o.insert("conv_empty_stalls", Json::Num(s.conv_empty_stalls as f64));
+    Json::Obj(o)
+}
+
+fn step_from_json(v: &Json) -> Result<StepReport, String> {
+    Ok(StepReport {
+        cycles: ju(v, "cycles")?,
+        rd_busy: ju(v, "rd_busy")?,
+        conv_busy: ju(v, "conv_busy")?,
+        wr_busy: ju(v, "wr_busy")?,
+        rd_to_conv_full_stalls: ju(v, "rd_to_conv_full_stalls")?,
+        conv_to_wr_full_stalls: ju(v, "conv_to_wr_full_stalls")?,
+        conv_empty_stalls: ju(v, "conv_empty_stalls")?,
+    })
+}
+
+fn entry_to_json(key: &EvalKey, eval: &Evaluation) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("model", Json::Str(hex16(key.model)));
+    o.insert("device", Json::Str(hex16(key.device)));
+    o.insert("ni", key.ni.into());
+    o.insert("nl", key.nl.into());
+    o.insert("stepped", key.stepped.into());
+    o.insert("estimate", est_to_json(&eval.estimate));
+    o.insert("latency", sim_to_json(&eval.latency));
+    o.insert(
+        "stepped_report",
+        match &eval.stepped {
+            Some(s) => step_to_json(s),
+            None => Json::Null,
+        },
+    );
+    Json::Obj(o)
+}
+
+fn entry_from_json(v: &Json) -> Result<(EvalKey, Evaluation), String> {
+    let key = EvalKey {
+        model: parse_hex16(&js(v, "model")?)?,
+        device: parse_hex16(&js(v, "device")?)?,
+        ni: jus(v, "ni")?,
+        nl: jus(v, "nl")?,
+        stepped: jb(v, "stepped")?,
+    };
+    let estimate = est_from_json(v.get("estimate"))?;
+    let latency = sim_from_json(v.get("latency"))?;
+    let stepped = match v.get("stepped_report") {
+        Json::Null => None,
+        s => Some(step_from_json(s)?),
+    };
+    // fingerprint-collision / tamper paranoia: the payload carries the
+    // option redundantly, so a mis-keyed entry is detectable — reject
+    // the file rather than risk serving a wrong estimate
+    if estimate.ni != key.ni || estimate.nl != key.nl {
+        return Err(format!(
+            "estimate option ({},{}) contradicts key ({},{})",
+            estimate.ni, estimate.nl, key.ni, key.nl
+        ));
+    }
+    if latency.ni != key.ni || latency.nl != key.nl {
+        return Err(format!(
+            "latency option ({},{}) contradicts key ({},{})",
+            latency.ni, latency.nl, key.ni, key.nl
+        ));
+    }
+    if key.stepped != stepped.is_some() {
+        return Err("stepped flag contradicts payload".to_string());
+    }
+    let eval = Evaluation {
+        ni: key.ni,
+        nl: key.nl,
+        estimate,
+        latency,
+        stepped,
+    };
+    Ok((key, eval))
+}
+
+impl EvalCache {
+    /// Serialize every (JSON-safe) entry. Entries are sorted by key so
+    /// repeated saves of the same cache are byte-identical (diff-stable).
+    pub fn to_json(&self) -> Json {
+        let mut entries: Vec<(EvalKey, Arc<Evaluation>)> = self
+            .map
+            .lock()
+            .expect("eval cache poisoned")
+            .iter()
+            .map(|(k, v)| (*k, Arc::clone(v)))
+            .collect();
+        entries.sort_by_key(|(k, _)| (k.model, k.device, k.ni, k.nl, k.stepped));
+        let rows: Vec<Json> = entries
+            .iter()
+            .filter(|(_, e)| json_safe(e))
+            .map(|(k, e)| entry_to_json(k, e))
+            .collect();
+        let mut o = JsonObj::new();
+        o.insert("format", CACHE_FORMAT.into());
+        o.insert("version", CACHE_VERSION.into());
+        o.insert("entries", Json::Arr(rows));
+        Json::Obj(o)
+    }
+
+    /// Deserialize a cache document. Strict: schema mismatches, missing
+    /// fields, duplicate keys and key/payload contradictions all reject
+    /// the whole document. Counters start at zero (a loaded entry counts
+    /// as a hit only when something looks it up).
+    pub fn from_json(doc: &Json) -> Result<EvalCache, String> {
+        match doc.get("format").as_str() {
+            Some(f) if f == CACHE_FORMAT => {}
+            other => {
+                return Err(format!(
+                    "unsupported cache format {other:?} (want {CACHE_FORMAT:?})"
+                ))
+            }
+        }
+        match doc.get("version").as_i64() {
+            Some(CACHE_VERSION) => {}
+            other => {
+                return Err(format!(
+                    "unsupported cache version {other:?} (want {CACHE_VERSION})"
+                ))
+            }
+        }
+        let rows = doc
+            .get("entries")
+            .as_arr()
+            .ok_or_else(|| "missing 'entries' array".to_string())?;
+        let cache = EvalCache::new();
+        {
+            let mut map = cache.map.lock().expect("eval cache poisoned");
+            map.reserve(rows.len());
+            for (i, row) in rows.iter().enumerate() {
+                let (key, eval) = entry_from_json(row).map_err(|e| format!("entry {i}: {e}"))?;
+                if map.insert(key, Arc::new(eval)).is_some() {
+                    return Err(format!("entry {i}: duplicate cache key"));
+                }
+            }
+        }
+        Ok(cache)
+    }
+
+    /// Write the cache to `path` (via a sibling tmp file + rename, so a
+    /// crash mid-write never leaves a truncated cache behind). Returns
+    /// the number of entries written.
+    pub fn save(&self, path: &Path) -> anyhow::Result<usize> {
+        let json = self.to_json();
+        let written = json.get("entries").as_arr().map_or(0, <[Json]>::len);
+        // per-process tmp name: concurrent saves to the same cache file
+        // must never publish each other's half-written tmp via rename
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, json.to_string_pretty())
+            .with_context(|| format!("writing cache file {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("moving cache file into place at {}", path.display()))?;
+        Ok(written)
+    }
+
+    /// Strict load: a missing file, a parse error, a schema mismatch or
+    /// a failed validation is an error (see [`EvalCache::load_or_cold`]
+    /// for the tolerant CLI path).
+    pub fn load(path: &Path) -> anyhow::Result<EvalCache> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading cache file {}", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        EvalCache::from_json(&doc).map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Tolerant load for the CLI: a missing file is a silent cold start;
+    /// a corrupt or stale file falls back to a cold cache with a warning
+    /// message — never a panic, never a suspect entry.
+    pub fn load_or_cold(path: &Path) -> (EvalCache, Option<String>) {
+        if !path.exists() {
+            return (EvalCache::new(), None);
+        }
+        match EvalCache::load(path) {
+            Ok(cache) => (cache, None),
+            Err(e) => (
+                EvalCache::new(),
+                Some(format!(
+                    "ignoring corrupt or stale cache file {} ({e:#}); starting cold",
+                    path.display()
+                )),
+            ),
+        }
     }
 }
 
@@ -447,9 +854,14 @@ mod tests {
     use crate::dse::OptionSpace;
     use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
     use crate::onnx::zoo;
+    use crate::sim::simulate;
 
     fn flow(name: &str) -> ComputationFlow {
         ComputationFlow::extract(&zoo::build(name, false).unwrap()).unwrap()
+    }
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cnn2gate-evalcache-{}-{tag}.json", std::process::id()))
     }
 
     #[test]
@@ -565,5 +977,130 @@ mod tests {
         cache.clear();
         assert_eq!(cache.stats().entries, 0);
         assert_eq!(cache.stats().hits, 0);
+    }
+
+    #[test]
+    fn cache_roundtrips_through_disk_bit_for_bit() {
+        let f = flow("alexnet");
+        let tiny = flow("tiny");
+        let pairs = OptionSpace::from_flow(&f).pairs();
+        let ev = Evaluator::new(2);
+        ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+        ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound);
+        let path = tmp_path("roundtrip");
+        let written = ev.cache().save(&path).unwrap();
+        assert_eq!(written, pairs.len() + 1, "grid plus the stepped entry");
+        let loaded = EvalCache::load(&path).unwrap();
+        assert_eq!(loaded.stats().entries, written);
+        assert_eq!(loaded.stats().hits, 0, "counters start cold");
+        assert_eq!(loaded.stats().misses, 0);
+        // a warm evaluator over the loaded cache: every candidate hits,
+        // and every payload is bit-identical to a fresh computation
+        let warm = Evaluator::with_cache(2, Arc::new(loaded));
+        let grid = warm.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+        assert!(grid.iter().all(|(_, hit)| *hit), "all served from disk");
+        for ((eval, _), &(ni, nl)) in grid.iter().zip(&pairs) {
+            let fresh = Evaluation::compute(&f, &ARRIA_10_GX1150, ni, nl, Fidelity::Analytical);
+            assert_eq!(**eval, fresh, "({ni},{nl}) drifted through the disk format");
+        }
+        let (stepped, hit) =
+            warm.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound);
+        assert!(hit, "stepped entry survives the round trip");
+        assert_eq!(
+            *stepped,
+            Evaluation::compute(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound)
+        );
+        let stats = warm.cache().stats();
+        assert_eq!(stats.hits, pairs.len() + 1);
+        assert_eq!(stats.misses, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_load_save_is_byte_stable() {
+        // hit-count determinism across processes needs the file itself to
+        // be deterministic: save → load → save must be a fixed point
+        let f = flow("alexnet");
+        let pairs = OptionSpace::from_flow(&f).pairs();
+        let ev = Evaluator::new(2);
+        ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+        ev.evaluate_grid(&f, &CYCLONE_V_5CSEMA5, &pairs, Fidelity::Analytical);
+        let (a, b) = (tmp_path("stable-a"), tmp_path("stable-b"));
+        ev.cache().save(&a).unwrap();
+        let reloaded = EvalCache::load(&a).unwrap();
+        reloaded.save(&b).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&a).unwrap(),
+            std::fs::read_to_string(&b).unwrap(),
+            "cache file must be a serialization fixed point"
+        );
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn empty_cache_roundtrip() {
+        let path = tmp_path("empty");
+        let n = EvalCache::new().save(&path).unwrap();
+        assert_eq!(n, 0);
+        assert_eq!(EvalCache::load(&path).unwrap().stats().entries, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_cache_files_fall_back_cold() {
+        let path = tmp_path("corrupt");
+        // truncated JSON
+        std::fs::write(&path, "{\"format\": \"cnn2gate-evalc").unwrap();
+        assert!(EvalCache::load(&path).is_err());
+        let (cold, warn) = EvalCache::load_or_cold(&path);
+        assert_eq!(cold.stats().entries, 0);
+        assert!(warn.is_some(), "corruption must be reported");
+        // wrong format tag
+        std::fs::write(
+            &path,
+            r#"{"format": "something-else", "version": 1, "entries": []}"#,
+        )
+        .unwrap();
+        assert!(EvalCache::load(&path).is_err());
+        // wrong version
+        std::fs::write(
+            &path,
+            format!(r#"{{"format": "{CACHE_FORMAT}", "version": 999, "entries": []}}"#),
+        )
+        .unwrap();
+        assert!(EvalCache::load(&path).is_err());
+        // missing entries array
+        std::fs::write(
+            &path,
+            format!(r#"{{"format": "{CACHE_FORMAT}", "version": {CACHE_VERSION}}}"#),
+        )
+        .unwrap();
+        assert!(EvalCache::load(&path).is_err());
+        // missing file: cold start without a warning
+        std::fs::remove_file(&path).ok();
+        let (cold, warn) = EvalCache::load_or_cold(&path);
+        assert_eq!(cold.stats().entries, 0);
+        assert!(warn.is_none(), "a missing file is not corruption");
+    }
+
+    #[test]
+    fn tampered_entries_are_rejected_not_served() {
+        // flip one entry's ni in the serialized JSON: the key no longer
+        // agrees with its payload, so the whole file is refused
+        let f = flow("tiny");
+        let ev = Evaluator::new(2);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        let path = tmp_path("tamper");
+        ev.cache().save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replacen("\"ni\": 4", "\"ni\": 8", 1);
+        assert_ne!(text, tampered, "tamper must land");
+        std::fs::write(&path, tampered).unwrap();
+        assert!(EvalCache::load(&path).is_err());
+        let (cold, warn) = EvalCache::load_or_cold(&path);
+        assert_eq!(cold.stats().entries, 0, "tampered entries never served");
+        assert!(warn.is_some());
+        std::fs::remove_file(&path).ok();
     }
 }

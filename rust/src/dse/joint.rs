@@ -26,6 +26,8 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
+use anyhow::{anyhow, Result};
+
 use crate::estimator::{query_seconds, Device, Thresholds};
 use crate::ir::{ComputationFlow, Graph};
 use crate::quant::{self, LayerQuant, QuantSpec};
@@ -82,7 +84,7 @@ pub struct JointResult {
 
 /// Precompute the normalized quantization-error curve E_q(m) for the
 /// model's weights (0 = best m in sweep, 1 = worst).
-pub fn quant_error_curve(graph: &Graph) -> Result<Vec<(i8, f64)>, String> {
+pub fn quant_error_curve(graph: &Graph) -> Result<Vec<(i8, f64)>> {
     let mut raw = Vec::new();
     for m in M_MIN..=M_MAX {
         let spec = QuantSpec::uniform(LayerQuant {
@@ -90,7 +92,8 @@ pub fn quant_error_curve(graph: &Graph) -> Result<Vec<(i8, f64)>, String> {
             m_w: m,
             m_out: 4,
         });
-        let rep = quant::apply(graph, &spec)?;
+        let rep = quant::apply(graph, &spec)
+            .map_err(|e| anyhow!("quantization sweep at m_w={m}: {e}"))?;
         let mean = rep.tensors.iter().map(|t| t.mean_abs_err).sum::<f64>()
             / rep.tensors.len() as f64;
         // saturation is worse than rounding: penalize clipped codes hard
@@ -115,7 +118,7 @@ pub fn explore(
     device: &Device,
     thresholds: Thresholds,
     cfg: JointConfig,
-) -> Result<JointResult, String> {
+) -> Result<JointResult> {
     explore_with(eval::global(), graph, flow, device, thresholds, cfg)
 }
 
@@ -127,7 +130,7 @@ pub fn explore_with(
     device: &Device,
     thresholds: Thresholds,
     cfg: JointConfig,
-) -> Result<JointResult, String> {
+) -> Result<JointResult> {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let errs = quant_error_curve(graph)?;

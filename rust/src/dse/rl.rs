@@ -277,6 +277,28 @@ mod tests {
     }
 
     #[test]
+    fn rl_served_from_disk_cache_reproduces_cold_trace() {
+        // the seeded agent revisits the same states whether its hardware
+        // queries are computed or answered from a persisted memo
+        use super::eval::EvalCache;
+        use std::sync::Arc;
+        let f = flow("alexnet");
+        let (th, cfg) = (Thresholds::default(), RlConfig::default());
+        let ev = Evaluator::new(2);
+        let cold = explore_with(&ev, &f, &ARRIA_10_GX1150, th, cfg);
+        let path =
+            std::env::temp_dir().join(format!("cnn2gate-rl-cache-{}.json", std::process::id()));
+        ev.cache().save(&path).unwrap();
+        let warm_ev = Evaluator::with_cache(2, Arc::new(EvalCache::load(&path).unwrap()));
+        let warm = explore_with(&warm_ev, &f, &ARRIA_10_GX1150, th, cfg);
+        assert_eq!(warm.cache_hits, warm.queries, "all unique visits from disk");
+        assert_eq!(warm.best, cold.best);
+        assert_eq!(warm.trace, cold.trace);
+        assert_eq!(warm.queries, cold.queries);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn warm_cache_preserves_result_and_counts_hits() {
         // Seeded RNG + fresh evaluator: hit counts are deterministic.
         let f = flow("alexnet");

@@ -392,7 +392,7 @@ mod tests {
     }
 
     #[test]
-    fn macs_are_positive_and_flow_total(){
+    fn macs_are_positive_and_flow_total() {
         for name in ["tiny", "lenet5", "alexnet", "vgg16"] {
             let g = zoo::build(name, false).unwrap();
             let flow = ComputationFlow::extract(&g).unwrap();

@@ -17,13 +17,19 @@
 //! Exploration scales through [`dse::eval`], the shared evaluation
 //! core: a `std::thread` + channel worker pool fans candidate scoring
 //! out across cores (bit-identical results to the sequential path) and
-//! a process-wide memo cache keyed on `(model fingerprint, device
-//! fingerprint, N_i, N_l)` deduplicates the estimator + simulator
-//! queries that the RL/joint agents revisit constantly. On top of it,
-//! [`coordinator::pipeline::fit_fleet`] (CLI: `fit-fleet`) fits one
-//! model against every device in [`estimator::device`] concurrently and
-//! renders the comparison via [`report::tables::fleet_table`],
-//! recommending the lowest-latency fitting target.
+//! a memo cache keyed on `(model fingerprint, device fingerprint, N_i,
+//! N_l)` deduplicates the estimator + simulator queries that the
+//! RL/joint agents revisit constantly. The memo persists: the FNV
+//! fingerprints are process-stable, so [`dse::EvalCache`] serializes to
+//! a versioned, corruption-tolerant JSON file (`--cache-file` on the
+//! CLI) and repeat explorations across processes start warm. On top of
+//! it, [`coordinator::pipeline::fit_fleet`] (CLI: `fit-fleet`) fits one
+//! model against every device in [`estimator::device`] concurrently,
+//! and [`coordinator::pipeline::sweep_matrix`] (CLI: `sweep`) explores
+//! the full model×device matrix, rendered via
+//! [`report::tables::sweep_table`] with best-device-per-model /
+//! best-model-per-device rankings and the latency/resource Pareto
+//! frontier.
 
 pub mod cli;
 pub mod coordinator;

@@ -4,22 +4,31 @@
 //!   info      parse a model, print the extracted computation flow
 //!   dse       design-space exploration on a device (RL or brute force)
 //!   fit-fleet fit one model on every device in the database, in parallel
+//!   sweep     explore every (model, device) pair: rankings + Pareto frontier
 //!   synth     full (simulated) synthesis flow: DSE + fit + latency
 //!   emulate   emulation mode: run the AOT artifacts through PJRT
 //!   serve     batched emulation-inference server demo
 //!   tables    regenerate the paper's Tables 1-4 + Fig. 6
 //!   devices   list the FPGA device database
+//!
+//! `dse`, `fit-fleet` and `sweep` accept `--cache-file F`: the estimator
+//! memo is seeded from F when it exists (corrupt or stale files warn and
+//! start cold) and written back on success, so repeat explorations across
+//! processes start warm.
 
 use anyhow::{anyhow, bail, Result};
 
 use cnn2gate::cli::Args;
 use cnn2gate::coordinator::{pipeline, InferenceServer, ServerConfig};
-use cnn2gate::dse::{brute, eval, rl, Evaluator, RlConfig};
+use cnn2gate::dse::{brute, eval, rl, EvalCache, Evaluator, RlConfig};
 use cnn2gate::estimator::{device, estimate, Thresholds};
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
-use cnn2gate::report::{baselines, comparison_table, fig6, fleet_table, table1, table2};
+use cnn2gate::report::{
+    baselines, comparison_table, fig6, fleet_table, sweep_best_device_table,
+    sweep_best_model_table, sweep_pareto_table, sweep_table, table1, table2,
+};
 use cnn2gate::runtime::{load_golden, Manifest, Tensor};
 use cnn2gate::sim::simulate;
 use cnn2gate::synth::{self, Explorer};
@@ -32,8 +41,11 @@ cnn2gate — CNN2Gate reproduction (Rust + JAX + Pallas)
 USAGE:
   cnn2gate info      --model <zoo|file.json>
   cnn2gate dse       --model <m> --device <d> [--explorer rl|bf] [--seed N]
-                     [--threads N] [--seq]
-  cnn2gate fit-fleet --model <m> [--explorer rl|bf]
+                     [--threads N] [--seq] [--cache-file F]
+  cnn2gate fit-fleet --model <m> [--explorer rl|bf] [--threads N]
+                     [--cache-file F]
+  cnn2gate sweep     [--models m1,m2,...] [--explorer rl|bf] [--threads N]
+                     [--cache-file F]
   cnn2gate synth     --model <m> --device <d> [--explorer rl|bf] [--quantize]
   cnn2gate emulate   --model <m> [--artifacts DIR]
   cnn2gate serve     --model <m> [--artifacts DIR] [--requests N] [--batch B]
@@ -75,8 +87,8 @@ fn explorer_from(args: &Args) -> Result<Explorer> {
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let flags = [
-        "model", "device", "explorer", "artifacts", "requests", "batch", "seed", "threads",
-        "max-lut", "max-dsp", "max-mem", "max-reg",
+        "model", "models", "device", "explorer", "artifacts", "requests", "batch", "seed",
+        "threads", "cache-file", "max-lut", "max-dsp", "max-mem", "max-reg",
     ];
     let switches = ["quantize", "verbose", "seq"];
     let args = Args::parse(argv, &flags, &switches)?;
@@ -84,12 +96,65 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "info" => cmd_info(&args),
         "dse" => cmd_dse(&args),
         "fit-fleet" => cmd_fit_fleet(&args),
+        "sweep" => cmd_sweep(&args),
         "synth" => cmd_synth(&args),
         "emulate" => cmd_emulate(&args),
         "serve" => cmd_serve(&args),
         "tables" => cmd_tables(&args),
         "devices" => cmd_devices(),
         other => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
+    }
+}
+
+/// The evaluator a subcommand scores candidates through, plus the
+/// optional `--cache-file` it persists the memo back to.
+///
+/// With `--cache-file F` the session gets a private evaluator whose memo
+/// is seeded from F (tolerantly: a missing file starts cold silently, a
+/// corrupt or stale one warns and starts cold — it is never trusted).
+/// With only `--threads N` the pool is private but the memo starts cold;
+/// with neither, the process-global evaluator is shared.
+struct EvalSession {
+    evaluator: Option<Evaluator>,
+    cache_file: Option<std::path::PathBuf>,
+}
+
+impl EvalSession {
+    fn open(args: &Args) -> Result<EvalSession> {
+        let threads = args.get_usize("threads", 0)?;
+        let cache_file = args.get("cache-file").map(std::path::PathBuf::from);
+        let evaluator = match (&cache_file, threads) {
+            (None, 0) => None,
+            (None, n) => Some(Evaluator::new(n)),
+            (Some(path), n) => {
+                let (cache, warning) = EvalCache::load_or_cold(path);
+                if let Some(w) = warning {
+                    eprintln!("warning: {w}");
+                }
+                let n = if n == 0 { eval::default_threads() } else { n };
+                Some(Evaluator::with_cache(n, std::sync::Arc::new(cache)))
+            }
+        };
+        Ok(EvalSession {
+            evaluator,
+            cache_file,
+        })
+    }
+
+    fn evaluator(&self) -> &Evaluator {
+        match &self.evaluator {
+            Some(ev) => ev,
+            None => eval::global(),
+        }
+    }
+
+    /// Persist the memo back to `--cache-file`, when one was given.
+    fn close(&self) -> Result<()> {
+        if let Some(path) = &self.cache_file {
+            let written = self.evaluator().cache().save(path)?;
+            println!("cache: {written} entries saved to {}", path.display());
+        }
+        Ok(())
     }
 }
 
@@ -127,13 +192,11 @@ fn cmd_dse(args: &Args) -> Result<()> {
     let g = pipeline::load_model(model, false)?;
     let flow = ComputationFlow::extract(&g).map_err(|e| anyhow!("{e}"))?;
     let th = thresholds_from(args)?;
-    // --threads builds a private evaluator; default shares the global
-    // pool + memo; --seq forces the sequential seed path (baseline).
-    let local = match args.get_usize("threads", 0)? {
-        0 => None,
-        n => Some(Evaluator::new(n)),
-    };
-    let evaluator = local.as_ref().unwrap_or_else(|| eval::global());
+    // --cache-file / --threads build a private (possibly disk-seeded)
+    // evaluator; the default shares the global pool + memo; --seq forces
+    // the sequential seed path (baseline, bypasses the cache).
+    let session = EvalSession::open(args)?;
+    let evaluator = session.evaluator();
     let result = match explorer_from(args)? {
         Explorer::BruteForce if args.has("seq") => brute::explore_seq(&flow, dev, th),
         Explorer::Reinforcement if args.has("seq") => {
@@ -166,26 +229,31 @@ fn cmd_dse(args: &Args) -> Result<()> {
             if *feasible { "fits" } else { "over budget" }
         );
     }
-    Ok(())
+    session.close()
 }
 
 fn cmd_fit_fleet(args: &Args) -> Result<()> {
     let model = args.require("model")?;
     let g = pipeline::load_model(model, false)?;
-    let rep = pipeline::fit_fleet(&g, explorer_from(args)?, thresholds_from(args)?)?;
+    let session = EvalSession::open(args)?;
+    let rep = pipeline::fit_fleet_with(
+        session.evaluator(),
+        &g,
+        explorer_from(args)?,
+        thresholds_from(args)?,
+    )?;
     println!("{}", fleet_table(&rep.model, &rep.entries).render());
     match rep.best() {
-        Some(best) => {
-            let (ni, nl) = best.option().expect("fitting entry has an option");
-            println!(
-                "recommended: {} at ({ni},{nl}) — {:.2} ms simulated latency",
-                best.device,
-                best.latency_ms().expect("fitting entry has latency")
-            );
-        }
+        Some(best) => match (best.option(), best.latency_ms()) {
+            (Some((ni, nl)), Some(ms)) => println!(
+                "recommended: {} at ({ni},{nl}) — {ms:.2} ms simulated latency",
+                best.device
+            ),
+            _ => println!("recommended: {}", best.device),
+        },
         None => println!("recommended: none — {model} fits no device in the database"),
     }
-    let stats = eval::global().cache().stats();
+    let stats = session.evaluator().cache().stats();
     println!(
         "fleet wall: {}   estimator memo: {} entries, {} hits / {} misses",
         fmt_duration(rep.wall_seconds),
@@ -193,7 +261,35 @@ fn cmd_fit_fleet(args: &Args) -> Result<()> {
         stats.hits,
         stats.misses
     );
-    Ok(())
+    session.close()
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let names = args.get_list("models", &["alexnet", "vgg16"]);
+    let mut graphs = Vec::with_capacity(names.len());
+    for name in &names {
+        graphs.push(pipeline::load_model(name, false)?);
+    }
+    let session = EvalSession::open(args)?;
+    let rep = pipeline::sweep_matrix_with(
+        session.evaluator(),
+        &graphs,
+        explorer_from(args)?,
+        thresholds_from(args)?,
+    )?;
+    println!("{}", sweep_table(&rep).render());
+    println!("{}", sweep_best_device_table(&rep).render());
+    println!("{}", sweep_best_model_table(&rep).render());
+    println!("{}", sweep_pareto_table(&rep).render());
+    let stats = session.evaluator().cache().stats();
+    println!(
+        "sweep wall: {}   estimator memo: {} entries, {} hits / {} misses",
+        fmt_duration(rep.wall_seconds),
+        stats.entries,
+        stats.hits,
+        stats.misses
+    );
+    session.close()
 }
 
 fn cmd_synth(args: &Args) -> Result<()> {
@@ -325,8 +421,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_tables(args: &Args) -> Result<()> {
     use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
-    let alex = zoo::build("alexnet", false).unwrap();
-    let vgg = zoo::build("vgg16", false).unwrap();
+    let alex = zoo::build("alexnet", false).ok_or_else(|| anyhow!("zoo model 'alexnet' missing"))?;
+    let vgg = zoo::build("vgg16", false).ok_or_else(|| anyhow!("zoo model 'vgg16' missing"))?;
     let aflow = ComputationFlow::extract(&alex).map_err(|e| anyhow!("{e}"))?;
     let vflow = ComputationFlow::extract(&vgg).map_err(|e| anyhow!("{e}"))?;
     let th = Thresholds::default();

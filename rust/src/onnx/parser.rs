@@ -140,20 +140,11 @@ pub fn parse_doc(doc: &Json, raw: Option<&[u8]>) -> Result<Graph> {
             .get("op_type")
             .as_str()
             .ok_or_else(|| anyhow!("node {i} missing op_type"))?;
-        let inputs: Vec<String> = n
-            .get("inputs")
-            .as_arr()
-            .unwrap_or(&[])
-            .iter()
-            .filter_map(|v| v.as_str().map(String::from))
-            .collect();
-        let outputs: Vec<String> = n
-            .get("outputs")
-            .as_arr()
-            .unwrap_or(&[])
-            .iter()
-            .filter_map(|v| v.as_str().map(String::from))
-            .collect();
+        // a non-string entry is a malformed model, not an edge to drop
+        // silently — report it instead of failing later with a puzzling
+        // arity or undefined-tensor error
+        let inputs = string_list(n.get("inputs"), &format!("node {i} ({op_type}) inputs"))?;
+        let outputs = string_list(n.get("outputs"), &format!("node {i} ({op_type}) outputs"))?;
         if outputs.is_empty() {
             bail!("node {i} ({op_type}) has no outputs");
         }
@@ -188,6 +179,19 @@ pub fn parse_doc(doc: &Json, raw: Option<&[u8]>) -> Result<Graph> {
     };
     graph.validate().map_err(|e| anyhow!("invalid graph: {e}"))?;
     Ok(graph)
+}
+
+fn string_list(v: &Json, what: &str) -> Result<Vec<String>> {
+    let arr = v.as_arr().unwrap_or(&[]);
+    let mut out = Vec::with_capacity(arr.len());
+    for (j, item) in arr.iter().enumerate() {
+        out.push(
+            item.as_str()
+                .map(String::from)
+                .ok_or_else(|| anyhow!("{what}[{j}] must be a string"))?,
+        );
+    }
+    Ok(out)
 }
 
 fn parse_attrs(a: &Json) -> Attrs {
@@ -316,6 +320,14 @@ mod tests {
         let doc = Json::parse(&minimal_doc(&node)).unwrap();
         let err = format!("{:#}", parse_doc(&doc, None).unwrap_err());
         assert!(err.contains("asymmetric"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_string_node_edges() {
+        let node = CONV.replace(r#"["input", "w", "b"]"#, r#"["input", 7, "b"]"#);
+        let doc = Json::parse(&minimal_doc(&node)).unwrap();
+        let err = format!("{:#}", parse_doc(&doc, None).unwrap_err());
+        assert!(err.contains("must be a string"), "{err}");
     }
 
     #[test]

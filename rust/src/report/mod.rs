@@ -5,4 +5,7 @@ pub mod baselines;
 pub mod tables;
 
 pub use baselines::BaselineRow;
-pub use tables::{comparison_table, fig6, fleet_table, table1, table2};
+pub use tables::{
+    comparison_table, fig6, fleet_table, sweep_best_device_table, sweep_best_model_table,
+    sweep_pareto_table, sweep_table, table1, table2,
+};

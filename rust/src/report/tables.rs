@@ -5,10 +5,11 @@
 //! reports. The benches call these; `cnn2gate report` exposes them on the
 //! CLI.
 
+use crate::coordinator::pipeline::SweepReport;
 use crate::dse::DseResult;
 use crate::metrics;
 use crate::sim::SimReport;
-use crate::synth::SynthReport;
+use crate::synth::{Explorer, SynthReport};
 use crate::util::table::{fmt_count, fmt_duration, Table};
 
 use super::baselines::BaselineRow;
@@ -130,6 +131,164 @@ pub fn fleet_table(model: &str, entries: &[SynthReport]) -> Table {
         }
     }
     t.footnote("devices in database order; latency simulated at batch 1");
+    t
+}
+
+fn explorer_tag(explorer: Explorer) -> &'static str {
+    match explorer {
+        Explorer::BruteForce => "bf",
+        Explorer::Reinforcement => "rl",
+    }
+}
+
+/// (option, F_avg, f_max, latency, GOp/s) cells for a fitting report;
+/// `None` when the design does not fit.
+fn fit_cells(rep: &SynthReport) -> Option<[String; 5]> {
+    match (&rep.estimate, &rep.sim) {
+        (Some(est), Some(sim)) => {
+            let gops = metrics::gops_per_s(sim.gops, sim.total_millis);
+            Some([
+                format!("({},{})", est.ni, est.nl),
+                format!("{:.1}%", est.f_avg()),
+                format!("{:.0} MHz", est.fmax_mhz),
+                format!("{:.2} ms", sim.total_millis),
+                format!("{gops:.1}"),
+            ])
+        }
+        _ => None,
+    }
+}
+
+/// Model×device sweep matrix — the `sweep` subcommand's main table.
+/// Deliberately excludes cache-hit counters, so a warm (`--cache-file`)
+/// re-run renders byte-identically to the cold run; memo statistics are
+/// printed separately.
+pub fn sweep_table(rep: &SweepReport) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Sweep: {} model(s) x {} device(s), {}-dse",
+            rep.models.len(),
+            crate::estimator::device::all().len(),
+            explorer_tag(rep.explorer)
+        ),
+        &[
+            "Model",
+            "Device",
+            "Option (Ni,Nl)",
+            "F_avg",
+            "f_max",
+            "Latency",
+            "GOp/s",
+            "Synthesis",
+        ],
+    );
+    for e in &rep.entries {
+        match fit_cells(e) {
+            Some([option, favg, fmax, latency, gops]) => {
+                t.row(&[
+                    e.model.clone(),
+                    e.device.to_string(),
+                    option,
+                    favg,
+                    fmax,
+                    latency,
+                    gops,
+                    e.synthesis_minutes
+                        .map_or("N/A".into(), |m| fmt_duration(m * 60.0)),
+                ]);
+            }
+            None => {
+                t.row(&[
+                    e.model.clone(),
+                    e.device.to_string(),
+                    "Does not fit".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t.footnote("model-major, devices in database order; latency simulated at batch 1");
+    t
+}
+
+/// Ranking: the lowest-latency fitting device for every model.
+pub fn sweep_best_device_table(rep: &SweepReport) -> Table {
+    let mut t = Table::new(
+        "Best device per model",
+        &["Model", "Device", "Option", "Latency", "F_avg"],
+    );
+    for (model, best) in rep.best_device_per_model() {
+        match best.and_then(|b| fit_cells(b).map(|c| (b, c))) {
+            Some((b, [option, favg, _, latency, _])) => {
+                t.row(&[
+                    model.to_string(),
+                    b.device.to_string(),
+                    option,
+                    latency,
+                    favg,
+                ]);
+            }
+            None => {
+                t.row(&[
+                    model.to_string(),
+                    "none fits".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Ranking: the lowest-latency fitting model for every device.
+pub fn sweep_best_model_table(rep: &SweepReport) -> Table {
+    let mut t = Table::new(
+        "Best model per device",
+        &["Device", "Model", "Option", "Latency", "F_avg"],
+    );
+    for (device, best) in rep.best_model_per_device() {
+        match best.and_then(|b| fit_cells(b).map(|c| (b, c))) {
+            Some((b, [option, favg, _, latency, _])) => {
+                t.row(&[
+                    device.to_string(),
+                    b.model.clone(),
+                    option,
+                    latency,
+                    favg,
+                ]);
+            }
+            None => {
+                t.row(&[
+                    device.to_string(),
+                    "none fits".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// The matrix-wide latency/resource Pareto frontier.
+pub fn sweep_pareto_table(rep: &SweepReport) -> Table {
+    let mut t = Table::new(
+        "Pareto frontier: latency vs resource usage",
+        &["Model", "Device", "Option", "Latency", "F_avg"],
+    );
+    for e in rep.pareto_frontier() {
+        if let Some([option, favg, _, latency, _]) = fit_cells(e) {
+            t.row(&[e.model.clone(), e.device.to_string(), option, latency, favg]);
+        }
+    }
+    t.footnote("fitting (model, device) points no other fit beats on both latency and F_avg");
     t
 }
 
@@ -257,6 +416,38 @@ mod tests {
         assert!(s.contains("(16,32)"), "{s}");
         assert!(s.contains("Does not fit"), "{s}");
         assert!(s.contains("Arria 10"));
+    }
+
+    #[test]
+    fn sweep_tables_render_matrix_rankings_and_frontier() {
+        use crate::coordinator::pipeline::sweep_matrix;
+        use crate::estimator::Thresholds;
+        use crate::synth::Explorer;
+        let models = [
+            zoo::build("alexnet", false).unwrap(),
+            zoo::build("vgg16", false).unwrap(),
+        ];
+        let rep = sweep_matrix(&models, Explorer::BruteForce, Thresholds::default()).unwrap();
+        let matrix = sweep_table(&rep);
+        assert_eq!(matrix.rows.len(), rep.entries.len());
+        let s = matrix.render();
+        assert!(s.contains("alexnet") && s.contains("vgg16"), "{s}");
+        assert!(s.contains("(16,32)") && s.contains("Does not fit"), "{s}");
+        // cache-hit counters must never appear: a warm re-run has to
+        // render byte-identically to the cold run
+        assert!(!s.contains("cached"), "{s}");
+        let best_dev = sweep_best_device_table(&rep);
+        assert_eq!(best_dev.rows.len(), rep.models.len());
+        assert!(best_dev.render().contains("Arria 10"));
+        let best_model = sweep_best_model_table(&rep);
+        assert_eq!(
+            best_model.rows.len(),
+            crate::estimator::device::all().len()
+        );
+        assert!(best_model.render().contains("none fits"), "5CSEMA4 row");
+        let pareto = sweep_pareto_table(&rep);
+        assert_eq!(pareto.rows.len(), rep.pareto_frontier().len());
+        assert!(!pareto.rows.is_empty());
     }
 
     #[test]

@@ -41,7 +41,7 @@ pub struct LayerTiming {
 }
 
 /// Whole-network simulation result.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
     pub model: String,
     pub device: String,

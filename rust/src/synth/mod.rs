@@ -11,11 +11,11 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::dse::{brute, rl, DseResult, RlConfig};
+use crate::dse::{brute, eval, rl, DseResult, Evaluator, Fidelity, RlConfig};
 use crate::estimator::{synthesis_minutes, Device, ResourceEstimate, Thresholds};
 use crate::ir::{ComputationFlow, Graph};
 use crate::quant::{self, QuantReport, QuantSpec};
-use crate::sim::{simulate, SimReport};
+use crate::sim::SimReport;
 
 /// Which explorer drives the fit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,6 +72,20 @@ pub fn run(
     thresholds: Thresholds,
     quant_spec: Option<&QuantSpec>,
 ) -> Result<SynthReport> {
+    run_with(eval::global(), graph, device, explorer, thresholds, quant_spec)
+}
+
+/// Same flow through a caller-provided evaluator — what the fleet/sweep
+/// fan-outs and the `--cache-file` CLI path use, so every explorer in a
+/// run shares one (possibly disk-seeded) estimator memo.
+pub fn run_with(
+    evaluator: &Evaluator,
+    graph: &Graph,
+    device: &'static Device,
+    explorer: Explorer,
+    thresholds: Thresholds,
+    quant_spec: Option<&QuantSpec>,
+) -> Result<SynthReport> {
     let flow = ComputationFlow::extract(graph).map_err(|e| anyhow!("flow extraction: {e}"))?;
 
     let quant = match quant_spec {
@@ -80,15 +94,22 @@ pub fn run(
     };
 
     let dse = match explorer {
-        Explorer::BruteForce => brute::explore(&flow, device, thresholds),
-        Explorer::Reinforcement => rl::explore(&flow, device, thresholds, RlConfig::default()),
+        Explorer::BruteForce => brute::explore_with(evaluator, &flow, device, thresholds),
+        Explorer::Reinforcement => {
+            rl::explore_with(evaluator, &flow, device, thresholds, RlConfig::default())
+        }
     };
 
     let (estimate, synth_min, sim) = match (dse.best, &dse.best_estimate) {
         (Some((ni, nl)), Some(est)) => {
             let minutes = synthesis_minutes(est, device);
-            let sim = simulate(&flow, device, ni, nl);
-            (Some(est.clone()), Some(minutes), Some(sim))
+            // the chosen option was already scored during exploration —
+            // pull its latency report from the shared memo (bit-identical
+            // to simulate(): Evaluation.latency IS simulate_with_estimate
+            // over the same single estimator call) instead of re-deriving
+            // it, so warm cache-file runs recompute nothing
+            let (chosen, _) = evaluator.evaluate(&flow, device, ni, nl, Fidelity::Analytical);
+            (Some(est.clone()), Some(minutes), Some(chosen.latency.clone()))
         }
         _ => (None, None, None),
     };

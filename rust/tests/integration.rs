@@ -173,6 +173,89 @@ fn failure_injection_corrupted_model_files() {
 }
 
 #[test]
+fn sweep_with_cache_file_is_warm_and_bit_identical() {
+    // the PR acceptance shape: a second sweep run against a persisted
+    // --cache-file must report >0 cache hits (and recompute nothing)
+    // while rendering byte-identical ranking tables to the cold run
+    use cnn2gate::coordinator::pipeline::sweep_matrix_with;
+    use cnn2gate::dse::{EvalCache, Evaluator};
+    use cnn2gate::report::{
+        sweep_best_device_table, sweep_best_model_table, sweep_pareto_table, sweep_table,
+    };
+    use std::sync::Arc;
+
+    let models = [
+        zoo::build("alexnet", false).unwrap(),
+        zoo::build("vgg16", false).unwrap(),
+    ];
+    let path = std::env::temp_dir().join(format!(
+        "cnn2gate-sweep-cache-{}.json",
+        std::process::id()
+    ));
+
+    let cold_ev = Evaluator::new(4);
+    let cold = sweep_matrix_with(&cold_ev, &models, Explorer::BruteForce, Thresholds::default())
+        .unwrap();
+    assert_eq!(cold_ev.cache().stats().hits, 0, "fresh memo cannot hit");
+    let written = cold_ev.cache().save(&path).unwrap();
+    assert!(written > 0);
+
+    let (cache, warn) = EvalCache::load_or_cold(&path);
+    assert!(warn.is_none(), "our own file must load cleanly: {warn:?}");
+    let warm_ev = Evaluator::with_cache(4, Arc::new(cache));
+    let warm = sweep_matrix_with(&warm_ev, &models, Explorer::BruteForce, Thresholds::default())
+        .unwrap();
+    let stats = warm_ev.cache().stats();
+    assert!(stats.hits > 0, "warm run must be served from the cache file");
+    assert_eq!(stats.misses, 0, "nothing recomputed on a warm cache");
+
+    assert_eq!(sweep_table(&warm).render(), sweep_table(&cold).render());
+    assert_eq!(
+        sweep_best_device_table(&warm).render(),
+        sweep_best_device_table(&cold).render()
+    );
+    assert_eq!(
+        sweep_best_model_table(&warm).render(),
+        sweep_best_model_table(&cold).render()
+    );
+    assert_eq!(
+        sweep_pareto_table(&warm).render(),
+        sweep_pareto_table(&cold).render()
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fit_fleet_with_cache_file_round_trip() {
+    use cnn2gate::coordinator::pipeline::fit_fleet_with;
+    use cnn2gate::dse::{EvalCache, Evaluator};
+    use std::sync::Arc;
+
+    let g = zoo::build("alexnet", false).unwrap();
+    let path = std::env::temp_dir().join(format!(
+        "cnn2gate-fleet-cache-{}.json",
+        std::process::id()
+    ));
+    let cold_ev = Evaluator::new(4);
+    let cold = fit_fleet_with(&cold_ev, &g, Explorer::BruteForce, Thresholds::default()).unwrap();
+    cold_ev.cache().save(&path).unwrap();
+
+    let warm_ev = Evaluator::with_cache(4, Arc::new(EvalCache::load(&path).unwrap()));
+    let warm = fit_fleet_with(&warm_ev, &g, Explorer::BruteForce, Thresholds::default()).unwrap();
+    assert!(warm_ev.cache().stats().hits > 0);
+    assert_eq!(warm_ev.cache().stats().misses, 0);
+    for (w, c) in warm.entries.iter().zip(&cold.entries) {
+        assert_eq!(w.option(), c.option(), "{}", w.device);
+        assert_eq!(w.dse.trace, c.dse.trace, "{}", w.device);
+    }
+    assert_eq!(
+        warm.best().map(|b| b.device),
+        cold.best().map(|b| b.device)
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn paper_headline_numbers_cross_module() {
     // the single most important reproduction assertion, end to end:
     // AlexNet 18 ms / VGG 205 ms on the Arria 10 at the DSE-chosen option
