@@ -2,20 +2,27 @@
 //!   estimator query        < 10 µs
 //!   full DSE sweep         < 5 s wall (it's actually ~ms)
 //!   simulator              ≥ 10 M simulated cycles/s (stepped mode)
+//!   skip-ahead stepper     ≥ 10x the naive reference on alexnet-conv2
 //!   JSON parse             model-file scale in ms
 //! plus PJRT dispatch overhead when artifacts are present.
+//!
+//! Writes `BENCH_PR3.json` (machine-readable: stepped speedup, stepped
+//! full-network candidates/s, model×device sweep wall-clock) so the perf
+//! trajectory is data, not prose.
 
 mod common;
 
-use cnn2gate::coordinator::pipeline;
-use cnn2gate::dse::{brute, eval, EvalCache, Evaluator, Fidelity};
+use cnn2gate::coordinator::pipeline::{self, sweep_matrix_with};
+use cnn2gate::dse::{brute, eval, EvalCache, Evaluation, Evaluator, Fidelity};
 use cnn2gate::estimator::device::ARRIA_10_GX1150;
 use cnn2gate::estimator::{estimate, Thresholds};
 use cnn2gate::ir::ComputationFlow;
+use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
 use cnn2gate::runtime::Manifest;
-use cnn2gate::sim::{step_round, RoundWork};
-use cnn2gate::util::json::Json;
+use cnn2gate::sim::{dominant_round_work, step_round, step_round_reference, RoundWork};
+use cnn2gate::synth::Explorer;
+use cnn2gate::util::json::{Json, JsonObj};
 use common::Harness;
 
 fn main() {
@@ -72,7 +79,7 @@ fn main() {
     h.check(disk_hit, "disk-loaded cache serves the hot option without recompute");
     std::fs::remove_file(&cache_path).ok();
 
-    // stepped simulator throughput
+    // stepped simulator throughput (skip-ahead engine)
     let work = RoundWork {
         pixels: 729,
         groups: 6,
@@ -82,12 +89,90 @@ fn main() {
         out_bytes: 32,
     };
     let cycles = step_round(&work).cycles as f64;
-    let t = h.bench("sim/step_round(alexnet-conv2-ish)", 20, || step_round(&work));
+    let t = h.bench("sim/step_round(alexnet-conv2-ish)", 200, || step_round(&work));
     let rate = cycles / t;
     h.check(
         rate > 10e6,
         &format!("stepped simulator {:.1} M cycles/s ≥ 10 M", rate / 1e6),
     );
+
+    // naive reference vs epoch skip-ahead on the REAL dominant round the
+    // DSE steps (memory-bound at (16,32): the hard case for skip-ahead)
+    let est = estimate(&flow, &ARRIA_10_GX1150, 16, 32);
+    let conv2 = dominant_round_work(&flow, &ARRIA_10_GX1150, est.fmax_mhz, 16, 32).unwrap();
+    h.check(
+        step_round(&conv2) == step_round_reference(&conv2),
+        "skip-ahead bit-identical to the naive reference on alexnet-conv2",
+    );
+    let t_ref = h.bench("sim/step_round_reference(alexnet-conv2)", 5, || {
+        step_round_reference(&conv2)
+    });
+    let t_fast = h.bench("sim/step_round skip-ahead(alexnet-conv2)", 200, || {
+        step_round(&conv2)
+    });
+    let stepped_speedup = metrics::speedup(t_ref, t_fast);
+    h.check(
+        stepped_speedup >= 10.0,
+        &format!("skip-ahead ≥10x the naive stepper ({stepped_speedup:.0}x)"),
+    );
+
+    // full-network stepped candidate throughput (what SteppedFullNetwork
+    // DSE pays per uncached candidate)
+    let t_cand = h.bench("eval/stepped_full_network(alexnet 16,32)", 20, || {
+        Evaluation::compute(&flow, &ARRIA_10_GX1150, 16, 32, Fidelity::SteppedFullNetwork)
+    });
+    let cand_per_s = metrics::candidates_per_s(1, t_cand);
+    h.check(
+        t_cand < 1.0,
+        &format!("full-network stepped candidate < 1 s ({:.1} ms)", t_cand * 1e3),
+    );
+
+    // model×device sweep wall-clock through the work-stealing scheduler
+    let sweep_models = [
+        zoo::build("alexnet", false).unwrap(),
+        zoo::build("vgg16", false).unwrap(),
+    ];
+    let t0 = std::time::Instant::now();
+    let sweep_rep = sweep_matrix_with(
+        &Evaluator::new(eval::default_threads()),
+        &sweep_models,
+        Explorer::BruteForce,
+        Thresholds::default(),
+        Fidelity::Analytical,
+    )
+    .unwrap();
+    let sweep_s = t0.elapsed().as_secs_f64();
+    println!(
+        "bench sweep/work-stealing(2 models x {} devices) {:>13} {:.3} s wall",
+        sweep_rep.entries.len() / 2,
+        "",
+        sweep_s
+    );
+    h.check(sweep_s < 5.0, "cold work-stealing sweep < 5 s");
+
+    // machine-readable perf record (BENCH_PR3.json)
+    {
+        let mut stepped = JsonObj::new();
+        stepped.insert("reference_seconds", t_ref.into());
+        stepped.insert("skip_ahead_seconds", t_fast.into());
+        stepped.insert("speedup", stepped_speedup.into());
+        stepped.insert("round_cycles", Json::Num(step_round(&conv2).cycles as f64));
+        let mut full = JsonObj::new();
+        full.insert("seconds_per_candidate", t_cand.into());
+        full.insert("candidates_per_s", cand_per_s.into());
+        let mut sweep = JsonObj::new();
+        sweep.insert("models", 2usize.into());
+        sweep.insert("devices", (sweep_rep.entries.len() / 2).into());
+        sweep.insert("wall_seconds", sweep_s.into());
+        let mut doc = JsonObj::new();
+        doc.insert("format", "cnn2gate-bench-pr3".into());
+        doc.insert("stepped_dominant_round", Json::Obj(stepped));
+        doc.insert("stepped_full_network", Json::Obj(full));
+        doc.insert("sweep", Json::Obj(sweep));
+        let path = std::path::Path::new("BENCH_PR3.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).unwrap();
+        println!("perf record written to {}", path.display());
+    }
 
     // zoo build + flow extraction
     h.bench("zoo/alexnet+flow", 500, || {

@@ -1,9 +1,13 @@
 //! Table 2: synthesis + DSE details for AlexNet on the three boards —
 //! RL-DSE vs BF-DSE timing, synthesis-time model, chosen options,
 //! "does not fit" on the 5CSEMA4 — plus the parallel-evaluation section:
-//! sequential seed path vs the `dse::eval` pool at stepped (cycle-
-//! accurate) candidate fidelity, with fresh caches on both sides and a
-//! chosen-design identity check.
+//! sequential seed path vs the `dse::eval` pool at full-network stepped
+//! (cycle-accurate) candidate fidelity, with fresh caches on both sides
+//! and a chosen-design identity check. Since PR 3's epoch skip-ahead
+//! engine, a stepped candidate costs ~ms, not ~s, so the gate here is
+//! interactivity of the whole stepped grid rather than a parallel
+//! speedup ratio (the pool's speedup on heavy workloads is demonstrated
+//! by `hotpath_micro`'s reference-vs-skip-ahead section instead).
 
 mod common;
 
@@ -49,29 +53,29 @@ fn main() {
     });
 
     // --- parallel vs sequential exploration, stepped fidelity -------------
-    // Here each candidate runs the cycle-stepped simulator on AlexNet's
-    // dominant round (the ground-truth latency check) — millisecond-to-
-    // second-scale work per candidate, so wall-clock parallelism is
-    // honest and measurable. Both sides start from a fresh cache.
+    // Here each candidate runs the cycle-stepped simulator on EVERY round
+    // of AlexNet (the ground-truth latency census). The epoch skip-ahead
+    // engine makes that ~ms-scale per candidate, so the whole stepped
+    // grid must stay interactive. Both sides start from a fresh cache.
     let pairs = OptionSpace::from_flow(&flow).pairs();
     let threads = eval::default_threads();
 
     let seq_ev = Evaluator::new(1);
     let t0 = Instant::now();
     let seq_grid =
-        seq_ev.evaluate_grid(&flow, &ARRIA_10_GX1150, &pairs, Fidelity::SteppedDominantRound);
+        seq_ev.evaluate_grid(&flow, &ARRIA_10_GX1150, &pairs, Fidelity::SteppedFullNetwork);
     let seq_s = t0.elapsed().as_secs_f64();
 
     let par_ev = Evaluator::new(threads);
     let t0 = Instant::now();
     let par_grid =
-        par_ev.evaluate_grid(&flow, &ARRIA_10_GX1150, &pairs, Fidelity::SteppedDominantRound);
+        par_ev.evaluate_grid(&flow, &ARRIA_10_GX1150, &pairs, Fidelity::SteppedFullNetwork);
     let par_s = t0.elapsed().as_secs_f64();
 
     let speedup = metrics::speedup(seq_s, par_s);
     println!(
-        "bench dse/bf_stepped/arria10  sequential {seq_s:.2} s  parallel({threads} threads) \
-         {par_s:.2} s  speedup {speedup:.2}x  ({:.1} vs {:.1} candidates/s)",
+        "bench dse/bf_stepped_full/arria10  sequential {seq_s:.3} s  parallel({threads} threads) \
+         {par_s:.3} s  speedup {speedup:.2}x  ({:.1} vs {:.1} candidates/s)",
         metrics::candidates_per_s(pairs.len(), seq_s),
         metrics::candidates_per_s(pairs.len(), par_s)
     );
@@ -84,20 +88,21 @@ fn main() {
         &format!("parallel + sequential + seed paths agree on H_best {par_best:?}"),
     );
     h.check(
-        par_grid
-            .iter()
-            .zip(&seq_grid)
-            .all(|((p, _), (s, _))| p.estimate == s.estimate),
-        "parallel grid estimates bit-identical to sequential",
+        par_grid.iter().zip(&seq_grid).all(|((p, _), (s, _))| {
+            p.estimate == s.estimate && p.stepped_network == s.stepped_network
+        }),
+        "parallel grid estimates + censuses bit-identical to sequential",
     );
-    if threads >= 4 {
-        h.check(
-            speedup >= 2.0,
-            &format!("stepped BF exploration ≥2x faster on {threads} workers ({speedup:.2}x)"),
-        );
-    } else {
-        println!("  - speedup gate skipped: only {threads} workers available (need ≥4)");
-    }
+    h.check(
+        seq_s < 2.0,
+        &format!("full-network stepped grid stays interactive ({seq_s:.3} s sequential)"),
+    );
+    h.check(
+        par_grid.iter().all(|(e, _)| {
+            e.stepped_network.as_ref().is_some_and(|n| n.layers.len() == flow.layers.len())
+        }),
+        "every candidate carries a full per-round census",
+    );
 
     // warm-memo exploration: the second fleet/RL visit of a candidate is
     // a pointer clone, not an estimator + simulator call

@@ -66,6 +66,23 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// Value flag constrained to a closed set, with a uniform error
+    /// listing the legal values (`--explorer rl|bf`,
+    /// `--fidelity analytical|stepped|stepped-full`-style flags).
+    pub fn get_choice<'a>(
+        &'a self,
+        name: &str,
+        allowed: &[&'a str],
+        default: &'a str,
+    ) -> Result<&'a str> {
+        let v = self.get_or(name, default);
+        if allowed.contains(&v) {
+            Ok(v)
+        } else {
+            bail!("--{name} must be one of {allowed:?}, got '{v}'")
+        }
+    }
+
     /// Comma-separated list flag (`--models alexnet,vgg16`); `default`
     /// when absent. Entries are trimmed and empty segments dropped, so
     /// `a,,b` and `a, b` both parse to two entries.
@@ -157,6 +174,26 @@ mod tests {
         assert_eq!(a.get_list("models", &["lenet5"]), vec!["alexnet", "vgg16", "tiny"]);
         let b = Args::parse(&sv(&["x"]), &["models"], &[]).unwrap();
         assert_eq!(b.get_list("models", &["alexnet", "vgg16"]), vec!["alexnet", "vgg16"]);
+    }
+
+    #[test]
+    fn choice_getter_enforces_the_allowed_set() {
+        let a = Args::parse(&sv(&["x", "--fidelity", "stepped-full"]), &["fidelity"], &[]).unwrap();
+        assert_eq!(
+            a.get_choice("fidelity", &["analytical", "stepped", "stepped-full"], "analytical")
+                .unwrap(),
+            "stepped-full"
+        );
+        let b = Args::parse(&sv(&["x"]), &["fidelity"], &[]).unwrap();
+        assert_eq!(
+            b.get_choice("fidelity", &["analytical", "stepped"], "analytical").unwrap(),
+            "analytical"
+        );
+        let c = Args::parse(&sv(&["x", "--fidelity", "bogus"]), &["fidelity"], &[]).unwrap();
+        let err = c
+            .get_choice("fidelity", &["analytical", "stepped"], "analytical")
+            .unwrap_err();
+        assert!(err.to_string().contains("must be one of"), "{err}");
     }
 
     #[test]

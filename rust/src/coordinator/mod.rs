@@ -7,10 +7,12 @@
 //! the request path is pure Rust, Python compiled the artifacts once.
 
 pub mod pipeline;
+pub mod scheduler;
 pub mod server;
 
 pub use pipeline::{
     fit_fleet, fit_fleet_with, run_pipeline, sweep_matrix, sweep_matrix_with, FleetReport,
     PipelineConfig, PipelineResult, SweepReport,
 };
+pub use scheduler::{work_steal_map, work_steal_map_seeded, StealStats};
 pub use server::{InferenceServer, ServerConfig, ServerStats};

@@ -17,15 +17,25 @@
 //! matrix-wide latency/resource Pareto frontier. Both fan-outs accept a
 //! caller-provided [`Evaluator`], so a disk-seeded estimator memo
 //! (`--cache-file`) warms every pair in the run.
+//!
+//! The sweep schedules in two phases: a **work-stealing prewarm** over
+//! `(model, device, candidate-chunk)` items ([`super::scheduler`])
+//! scores every candidate into the shared memo — chunk granularity means
+//! a VGG-16-sized grid next to an AlexNet-sized one no longer parks the
+//! imbalance on one worker, which matters ~100x more at stepped
+//! fidelity — and then the per-pair explorers run in deterministic
+//! model-major order, answered entirely from the memo, so the matrix,
+//! rankings and Pareto tables render byte-identically to a sequential
+//! (or warm-cache) run.
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::dse::{eval, Evaluator};
+use crate::dse::{eval, Evaluator, Fidelity, OptionSpace};
 use crate::estimator::{device, Device, Thresholds};
-use crate::ir::Graph;
+use crate::ir::{ComputationFlow, Graph};
 use crate::onnx::{parser, zoo};
 use crate::quant::QuantSpec;
 use crate::runtime::{load_golden, Manifest, Runtime, Tensor};
@@ -176,6 +186,20 @@ pub fn fit_fleet_with(
     for result in results {
         entries.push(result?);
     }
+    // the concurrent explorers above tick LRU generations in whatever
+    // order the scheduler ran them; re-stamp the touched grids in
+    // database order so the decision-making (highest) stamps — and
+    // therefore --cache-max-entries eviction and the saved cache bytes —
+    // are deterministic. touch_present never computes, so RL fleets
+    // (which visit only a trajectory subset) stay untouched elsewhere.
+    if let Ok(flow) = ComputationFlow::extract(graph) {
+        let pairs = OptionSpace::from_flow(&flow).pairs();
+        for &dev in &devices {
+            evaluator
+                .cache()
+                .touch_present(&flow, dev, &pairs, Fidelity::Analytical);
+        }
+    }
     Ok(FleetReport {
         model: graph.name.clone(),
         explorer,
@@ -270,42 +294,99 @@ impl SweepReport {
 }
 
 /// Explore every (model, device) pair through the process-wide
-/// evaluator. See [`sweep_matrix_with`].
+/// evaluator at analytical fidelity. See [`sweep_matrix_with`].
 pub fn sweep_matrix(
     graphs: &[Graph],
     explorer: Explorer,
     thresholds: Thresholds,
 ) -> Result<SweepReport> {
-    sweep_matrix_with(eval::global(), graphs, explorer, thresholds)
+    sweep_matrix_with(eval::global(), graphs, explorer, thresholds, Fidelity::Analytical)
 }
 
-/// Explore every (model, device) pair concurrently through `evaluator`
-/// (scoped fan-out via [`eval::parallel_map`]): all pairs share one
-/// estimator memo, so a model's candidate grid is costed once across its
-/// whole device row — and across whole processes when the memo came from
-/// a `--cache-file`. Entries come back model-major in input order.
+/// Candidates per work-stealing prewarm item. Small enough that a
+/// VGG-16-sized grid splits across several workers, big enough that the
+/// deque traffic stays negligible against even an analytical candidate.
+const SWEEP_CHUNK: usize = 4;
+
+/// Explore every (model, device) pair through `evaluator` at `fidelity`.
+///
+/// Phase 1 fans a **work-stealing deque** of `(model, device,
+/// candidate-chunk)` items across scoped workers
+/// ([`super::scheduler::work_steal_map`]): every candidate of every
+/// pair's option grid is scored straight into the shared memo, and
+/// skewed model sizes rebalance at chunk granularity instead of leaving
+/// workers idle. Phase 2 runs the per-pair explorers (answered entirely
+/// from the memo) and merges entries model-major in input order, so the
+/// report is byte-identical to a sequential — or disk-warmed
+/// (`--cache-file`) — run.
 pub fn sweep_matrix_with(
     evaluator: &Evaluator,
     graphs: &[Graph],
     explorer: Explorer,
     thresholds: Thresholds,
+    fidelity: Fidelity,
 ) -> Result<SweepReport> {
     if graphs.is_empty() {
         return Err(anyhow!("sweep needs at least one model"));
     }
     let t0 = Instant::now();
     let devices = device::all();
+
+    // phase 1: prewarm the memo over (model, device, candidate-chunk)
+    // work items. One LRU generation for the whole prewarm, so worker
+    // completion order can't perturb the persisted cache stamps. The
+    // prewarm deliberately scores the FULL grid even for the RL
+    // explorer (which visits only a trajectory subset): grids are
+    // capped at 12 options, and full presence is what makes phase 2
+    // hit-only — the source of both the load balancing and the
+    // deterministic-output guarantee. The few untraversed candidates
+    // are the price of that, not an accident.
+    let flows: Vec<ComputationFlow> = graphs
+        .iter()
+        .map(|g| ComputationFlow::extract(g).map_err(|e| anyhow!("flow extraction: {e}")))
+        .collect::<Result<_>>()?;
+    let mut chunks: Vec<(usize, &'static Device, Vec<(usize, usize)>)> = Vec::new();
+    for (mi, flow) in flows.iter().enumerate() {
+        let pairs = OptionSpace::from_flow(flow).pairs();
+        for &dev in &devices {
+            for chunk in pairs.chunks(SWEEP_CHUNK) {
+                chunks.push((mi, dev, chunk.to_vec()));
+            }
+        }
+    }
+    let stamp = evaluator.cache().tick();
+    let width = chunks.len().min(eval::default_threads());
+    super::scheduler::work_steal_map(&chunks, width, |(mi, dev, options)| {
+        for &(ni, nl) in options {
+            evaluator
+                .cache()
+                .get_or_compute_at(stamp, &flows[*mi], dev, ni, nl, fidelity);
+        }
+    });
+
+    // phase 2: per-pair explorers in deterministic model-major order —
+    // every query is a memo hit, so this is report assembly, not work
     let pairs: Vec<(&Graph, &'static Device)> = graphs
         .iter()
         .flat_map(|g| devices.iter().map(move |&d| (g, d)))
         .collect();
     let width = pairs.len().min(2 * eval::default_threads());
     let results = eval::parallel_map(&pairs, width, |&(graph, dev)| {
-        synth::run_with(evaluator, graph, dev, explorer, thresholds, None)
+        synth::run_with_fidelity(evaluator, graph, dev, explorer, thresholds, None, fidelity)
     });
     let mut entries = Vec::with_capacity(results.len());
     for result in results {
         entries.push(result?);
+    }
+    // phase 2's concurrent explorers tick LRU generations in scheduler
+    // order; re-stamp every pair's grid model-major so the final
+    // (decision-making) stamps are deterministic — the prewarm
+    // guarantees every grid entry is present, so this never computes
+    for flow in &flows {
+        let grid = OptionSpace::from_flow(flow).pairs();
+        for &dev in &devices {
+            evaluator.cache().touch_present(flow, dev, &grid, fidelity);
+        }
     }
     Ok(SweepReport {
         explorer,
@@ -575,6 +656,45 @@ mod tests {
                     e.model, e.device, p.model, p.device
                 );
             }
+        }
+    }
+
+    #[test]
+    fn stepped_full_sweep_matches_analytical_and_carries_censuses() {
+        // the work-stealing sweep at full-network stepped fidelity must
+        // pick exactly the analytical designs and attach a per-round
+        // census to every fitting cell
+        let models = [crate::onnx::zoo::build("tiny", false).unwrap()];
+        let analytical =
+            sweep_matrix(&models, Explorer::BruteForce, Thresholds::default()).unwrap();
+        let ev = Evaluator::new(4);
+        let stepped = sweep_matrix_with(
+            &ev,
+            &models,
+            Explorer::BruteForce,
+            Thresholds::default(),
+            Fidelity::SteppedFullNetwork,
+        )
+        .unwrap();
+        assert_eq!(stepped.entries.len(), analytical.entries.len());
+        let flow = ComputationFlow::extract(&models[0]).unwrap();
+        for (s, a) in stepped.entries.iter().zip(&analytical.entries) {
+            assert_eq!(s.option(), a.option(), "{}", s.device);
+            assert_eq!(s.dse.trace, a.dse.trace, "{}", s.device);
+            match (&s.stepped_network, s.fits()) {
+                (Some(net), true) => {
+                    assert_eq!(net.layers.len(), flow.layers.len(), "{}", s.device);
+                    assert!(net.total_cycles() > 0);
+                }
+                (None, false) => {}
+                (census, fits) => panic!(
+                    "{}: census presence {:?} disagrees with fits {}",
+                    s.device,
+                    census.is_some(),
+                    fits
+                ),
+            }
+            assert!(a.stepped_network.is_none(), "analytical sweep carries none");
         }
     }
 

@@ -1,0 +1,186 @@
+//! Work-stealing scheduler for sweep-scale fan-out.
+//!
+//! [`crate::dse::eval::parallel_map`] hands out items from one shared
+//! atomic cursor — fine when items are uniform, but a model×device sweep
+//! mixes VGG-16-sized candidate grids with AlexNet-sized ones, and at
+//! stepped fidelity the spread is ~100x: whoever draws the big item last
+//! leaves every other worker idle. This module schedules over per-worker
+//! deques instead: each worker drains its own queue from the front and,
+//! when empty, steals from the *back* of the fullest victim, so skewed
+//! item costs rebalance automatically while results still come back in
+//! deterministic input order.
+//!
+//! The deques are `Mutex<VecDeque>`s, not lock-free Chase-Lev — the
+//! items here are whole candidate-chunk evaluations (micro- to
+//! milliseconds each), so a mutex pop is noise, and the offline crate
+//! set has no `crossbeam` anyway.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+/// Counters from one [`work_steal_map_seeded`] run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StealStats {
+    /// Items executed (always `items.len()`).
+    pub executed: usize,
+    /// Items a worker took from another worker's deque.
+    pub steals: usize,
+    /// Workers actually spawned.
+    pub workers: usize,
+}
+
+/// Apply `f` to every item on up to `workers` work-stealing workers;
+/// results come back in input order. Items are dealt round-robin.
+pub fn work_steal_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let w = workers.max(1);
+    work_steal_map_seeded(items, workers, |i| i % w, f).0
+}
+
+/// [`work_steal_map`] with an explicit initial placement: item `i`
+/// starts on worker `seed(i) % workers`. Exposed so tests (and callers
+/// that know their skew) can control the starting imbalance.
+pub fn work_steal_map_seeded<T, R, F, S>(
+    items: &[T],
+    workers: usize,
+    seed: S,
+    f: F,
+) -> (Vec<R>, StealStats)
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+    S: Fn(usize) -> usize,
+{
+    if items.is_empty() {
+        return (
+            Vec::new(),
+            StealStats {
+                executed: 0,
+                steals: 0,
+                workers: 0,
+            },
+        );
+    }
+    let workers = workers.clamp(1, items.len());
+    let queues: Vec<Mutex<VecDeque<usize>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for i in 0..items.len() {
+        queues[seed(i) % workers]
+            .lock()
+            .expect("steal queue poisoned")
+            .push_back(i);
+    }
+    let steals = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let queues_ref = &queues;
+    let steals_ref = &steals;
+    let f_ref = &f;
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                // own deque first (front: the order we were dealt)...
+                let own = queues_ref[w].lock().expect("steal queue poisoned").pop_front();
+                if let Some(i) = own {
+                    let _ = tx.send((i, f_ref(&items[i])));
+                    continue;
+                }
+                // ...then steal from the back of the fullest victim
+                let mut victim: Option<(usize, usize)> = None; // (len, idx)
+                for (v, q) in queues_ref.iter().enumerate() {
+                    if v == w {
+                        continue;
+                    }
+                    let len = q.lock().expect("steal queue poisoned").len();
+                    if len > victim.map_or(0, |(best, _)| best) {
+                        victim = Some((len, v));
+                    }
+                }
+                let Some((_, v)) = victim else {
+                    break; // every deque empty: all items claimed
+                };
+                let stolen = queues_ref[v].lock().expect("steal queue poisoned").pop_back();
+                if let Some(i) = stolen {
+                    steals_ref.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send((i, f_ref(&items[i])));
+                }
+                // a raced-away victim just rescans
+            });
+        }
+    });
+    drop(tx);
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    for (i, r) in rx {
+        slots[i] = Some(r);
+    }
+    let results = slots
+        .into_iter()
+        .map(|s| s.expect("work-stealing worker produced result"))
+        .collect();
+    (
+        results,
+        StealStats {
+            executed: items.len(),
+            steals: steals.load(Ordering::Relaxed),
+            workers,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Barrier;
+
+    #[test]
+    fn preserves_input_order_and_runs_everything() {
+        let items: Vec<usize> = (0..57).collect();
+        let (out, stats) = work_steal_map_seeded(&items, 4, |i| i % 4, |&i| i * i);
+        assert_eq!(out, items.iter().map(|&i| i * i).collect::<Vec<_>>());
+        assert_eq!(stats.executed, 57);
+        assert_eq!(stats.workers, 4);
+        // degenerate shapes
+        assert_eq!(work_steal_map(&items, 1, |&i| i + 1).len(), 57);
+        assert!(work_steal_map::<usize, usize, _>(&[], 4, |&i| i).is_empty());
+        let (single, stats1) = work_steal_map_seeded(&[7usize], 8, |_| 0, |&i| i);
+        assert_eq!(single, vec![7]);
+        assert_eq!(stats1.workers, 1, "workers clamp to the item count");
+    }
+
+    #[test]
+    fn idle_workers_steal_from_a_skewed_deque() {
+        // deal every item to worker 0; a barrier inside the first four
+        // executions forces four *distinct* workers to hold an item at
+        // once, which is only possible via stealing — so the skewed
+        // deque provably rebalances (≥ 3 steals), deterministically
+        let items: Vec<usize> = (0..32).collect();
+        let gate = Barrier::new(4);
+        let started = AtomicUsize::new(0);
+        let (out, stats) = work_steal_map_seeded(&items, 4, |_| 0, |&i| {
+            if started.fetch_add(1, Ordering::Relaxed) < 4 {
+                gate.wait();
+            }
+            i + 100
+        });
+        assert_eq!(out, (100..132).collect::<Vec<usize>>());
+        assert!(stats.steals >= 3, "only {} steals", stats.steals);
+        assert_eq!(stats.executed, 32);
+    }
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        let items: Vec<usize> = (0..200).collect();
+        let counts: Vec<AtomicUsize> = (0..200).map(|_| AtomicUsize::new(0)).collect();
+        let counts_ref = &counts;
+        work_steal_map(&items, 6, |&i| {
+            counts_ref[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -63,10 +63,26 @@ pub fn explore_with(
     device: &Device,
     thresholds: Thresholds,
 ) -> DseResult {
+    explore_with_fidelity(evaluator, flow, device, thresholds, Fidelity::Analytical)
+}
+
+/// Exhaustive search at an explicit [`Fidelity`]: stepped modes run the
+/// cycle-accurate simulator on every candidate (the skip-ahead engine
+/// keeps even `SteppedFullNetwork` grids interactive). The chosen design
+/// and trace are fidelity-independent — feasibility and F_avg come from
+/// the estimator — so any fidelity reproduces the seed path's choice;
+/// the stepped censuses ride along in the memo for reporting.
+pub fn explore_with_fidelity(
+    evaluator: &Evaluator,
+    flow: &ComputationFlow,
+    device: &Device,
+    thresholds: Thresholds,
+    fidelity: Fidelity,
+) -> DseResult {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let pairs = space.pairs();
-    let grid = evaluator.evaluate_grid(flow, device, &pairs, Fidelity::Analytical);
+    let grid = evaluator.evaluate_grid(flow, device, &pairs, fidelity);
 
     let mut shaper = RewardShaper::new(thresholds);
     let mut trace = Vec::with_capacity(pairs.len());
@@ -222,6 +238,37 @@ mod tests {
         assert_eq!(warm.trace, cold.trace);
         assert_eq!(warm_ev.cache().stats().misses, 0);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stepped_full_network_grid_picks_the_same_design() {
+        // stepped fidelity buys censuses, never a different answer: the
+        // choice and trace are bit-identical to the analytical grid, and
+        // every candidate carries a full per-round census
+        let f = flow("alexnet");
+        let ev = Evaluator::new(4);
+        let stepped = explore_with_fidelity(
+            &ev,
+            &f,
+            &ARRIA_10_GX1150,
+            Thresholds::default(),
+            Fidelity::SteppedFullNetwork,
+        );
+        let analytical =
+            explore_with(&Evaluator::new(4), &f, &ARRIA_10_GX1150, Thresholds::default());
+        assert_eq!(stepped.best, analytical.best);
+        assert_eq!(stepped.best_estimate, analytical.best_estimate);
+        assert_eq!(stepped.f_max.to_bits(), analytical.f_max.to_bits());
+        assert_eq!(stepped.trace, analytical.trace);
+        // the memo now holds a census for every candidate
+        let pairs = crate::dse::OptionSpace::from_flow(&f).pairs();
+        for (ni, nl) in pairs {
+            let (eval, hit) =
+                ev.evaluate(&f, &ARRIA_10_GX1150, ni, nl, Fidelity::SteppedFullNetwork);
+            assert!(hit, "({ni},{nl}) memoized during the grid");
+            let net = eval.stepped_network.as_ref().expect("census present");
+            assert_eq!(net.layers.len(), f.layers.len());
+        }
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //! same estimates across runs. This module centralizes that work:
 //!
 //! * [`EvalCache`] — a process-wide memo keyed on
-//!   `(model fingerprint, device fingerprint, N_i, N_l)` that
+//!   `(model fingerprint, device fingerprint, N_i, N_l, fidelity)` that
 //!   deduplicates the estimator + simulator calls the RL and joint
-//!   agents revisit constantly (and that repeat across fleet fits);
+//!   agents revisit constantly (and that repeat across fleet fits).
+//!   Entries carry a last-used LRU stamp so oversized disk caches can be
+//!   evicted deterministically ([`EvalCache::evict_lru`]);
 //! * [`ThreadPool`] — a plain `std::thread` + channel worker pool (the
 //!   `coordinator::server` idiom; tokio is not in the offline crate
 //!   set) that [`Evaluator::evaluate_grid`] fans candidate scoring out
@@ -19,11 +21,12 @@
 //!   flow to run whole per-device explorations concurrently (scoped
 //!   threads, not the pool, so explorers running inside it can still
 //!   use the pool without self-deadlock);
-//! * [`Fidelity`] — analytical (closed-form, µs-scale) or stepped
-//!   (cycle-accurate dominant-round simulation, ms-scale) candidate
-//!   latency. Explorers default to analytical; the stepped mode is what
-//!   the `table2_dse` bench uses to demonstrate the parallel speedup on
-//!   an honestly heavy per-candidate workload.
+//! * [`Fidelity`] — analytical (closed-form, µs-scale), stepped dominant
+//!   round (cycle-accurate simulation of the heaviest round), or stepped
+//!   full network (cycle-accurate simulation of *every* round, with a
+//!   per-layer stall/backpressure census). The stepped modes ride the
+//!   epoch skip-ahead engine ([`crate::sim::step_round`]), which is what
+//!   makes whole-network stepped DSE interactive.
 //!
 //! Deadlock rule: [`Evaluator::evaluate_grid`] must not be called from
 //! inside one of the pool's own workers (a worker waiting on sub-jobs
@@ -32,7 +35,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -41,18 +44,48 @@ use anyhow::{anyhow, Context};
 use crate::estimator::{estimate, Device, ResourceEstimate, Thresholds};
 use crate::ir::ComputationFlow;
 use crate::sim::{
-    dominant_round_work, simulate_with_estimate, step_round, LayerTiming, SimReport, StepReport,
+    dominant_round_work, simulate_with_estimate, step_network, step_round, LayerTiming,
+    NetworkStepReport, SimReport, StepReport,
 };
 use crate::util::json::{Json, JsonObj};
 
 /// How much simulation each candidate evaluation buys.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Fidelity {
     /// Resource estimate + closed-form whole-network latency (default).
     Analytical,
     /// Additionally run the cycle-stepped simulator on the flow's
-    /// dominant round — the ground-truth check, ~1000x more expensive.
+    /// dominant round — the classic ground-truth spot check.
     SteppedDominantRound,
+    /// Run the cycle-stepped simulator on *every* round and surface the
+    /// per-layer stall/backpressure census ([`NetworkStepReport`]).
+    SteppedFullNetwork,
+}
+
+fn fidelity_rank(f: Fidelity) -> u8 {
+    match f {
+        Fidelity::Analytical => 0,
+        Fidelity::SteppedDominantRound => 1,
+        Fidelity::SteppedFullNetwork => 2,
+    }
+}
+
+/// Stable on-disk tag for a fidelity mode (cache format v2).
+pub fn fidelity_tag(f: Fidelity) -> &'static str {
+    match f {
+        Fidelity::Analytical => "analytical",
+        Fidelity::SteppedDominantRound => "stepped-dominant-round",
+        Fidelity::SteppedFullNetwork => "stepped-full-network",
+    }
+}
+
+fn parse_fidelity_tag(s: &str) -> Result<Fidelity, String> {
+    match s {
+        "analytical" => Ok(Fidelity::Analytical),
+        "stepped-dominant-round" => Ok(Fidelity::SteppedDominantRound),
+        "stepped-full-network" => Ok(Fidelity::SteppedFullNetwork),
+        other => Err(format!("unknown fidelity tag '{other}'")),
+    }
 }
 
 /// Everything one estimator/simulator query produces for a candidate.
@@ -64,8 +97,10 @@ pub struct Evaluation {
     /// Closed-form latency at this option (computed for every candidate,
     /// feasible or not — fleet reports rank by it).
     pub latency: SimReport,
-    /// Cycle-stepped dominant-round census (stepped fidelity only).
+    /// Cycle-stepped dominant-round census (stepped-dominant fidelity).
     pub stepped: Option<StepReport>,
+    /// Cycle-stepped census of every round (stepped-full fidelity).
+    pub stepped_network: Option<NetworkStepReport>,
 }
 
 impl Evaluation {
@@ -81,12 +116,17 @@ impl Evaluation {
         // reuse the estimate for the latency model (one estimator call
         // per candidate, exactly like the sequential seed path)
         let latency = simulate_with_estimate(flow, device, &estimate);
-        let stepped = match fidelity {
-            Fidelity::Analytical => None,
-            Fidelity::SteppedDominantRound => {
+        let (stepped, stepped_network) = match fidelity {
+            Fidelity::Analytical => (None, None),
+            Fidelity::SteppedDominantRound => (
                 dominant_round_work(flow, device, estimate.fmax_mhz, ni, nl)
-                    .map(|work| step_round(&work))
-            }
+                    .map(|work| step_round(&work)),
+                None,
+            ),
+            Fidelity::SteppedFullNetwork => (
+                None,
+                Some(step_network(flow, device, estimate.fmax_mhz, ni, nl)),
+            ),
         };
         Evaluation {
             ni,
@@ -94,6 +134,7 @@ impl Evaluation {
             estimate,
             latency,
             stepped,
+            stepped_network,
         }
     }
 
@@ -114,7 +155,7 @@ struct EvalKey {
     device: u64,
     ni: usize,
     nl: usize,
-    stepped: bool,
+    fidelity: Fidelity,
 }
 
 impl EvalKey {
@@ -130,8 +171,13 @@ impl EvalKey {
             device: device.fingerprint(),
             ni,
             nl,
-            stepped: matches!(fidelity, Fidelity::SteppedDominantRound),
+            fidelity,
         }
+    }
+
+    /// Deterministic total order for serialization and eviction ties.
+    fn sort_key(&self) -> (u64, u64, usize, usize, u8) {
+        (self.model, self.device, self.ni, self.nl, fidelity_rank(self.fidelity))
     }
 }
 
@@ -154,13 +200,24 @@ impl CacheStats {
     }
 }
 
+/// A memoized evaluation plus its LRU stamp.
+struct CacheEntry {
+    eval: Arc<Evaluation>,
+    /// Logical generation of the last lookup that served this entry
+    /// (one generation per cache *operation*, not per access, so
+    /// parallel grid scoring can't make the stamps nondeterministic).
+    last_used: u64,
+}
+
 /// Memoized estimator/simulator results, shared across explorers and
 /// threads. Values are `Arc`ed so a hit is a pointer clone.
 #[derive(Default)]
 pub struct EvalCache {
-    map: Mutex<HashMap<EvalKey, Arc<Evaluation>>>,
+    map: Mutex<HashMap<EvalKey, CacheEntry>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    /// LRU generation clock; see [`EvalCache::tick`].
+    clock: AtomicU64,
 }
 
 impl EvalCache {
@@ -168,9 +225,16 @@ impl EvalCache {
         EvalCache::default()
     }
 
+    /// Advance and return the LRU generation. One lookup takes one tick;
+    /// schedulers batching many lookups under one logical operation take
+    /// one tick and pass it to [`EvalCache::get_or_compute_at`] so the
+    /// threads' completion order can't perturb the persisted stamps.
+    pub fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
     /// Look up or compute one candidate. Returns the evaluation and
-    /// whether it was served from cache. The (potentially heavy)
-    /// compute runs outside the lock so parallel misses don't serialize.
+    /// whether it was served from cache.
     pub fn get_or_compute(
         &self,
         flow: &ComputationFlow,
@@ -179,8 +243,24 @@ impl EvalCache {
         nl: usize,
         fidelity: Fidelity,
     ) -> (Arc<Evaluation>, bool) {
+        let stamp = self.tick();
+        self.get_or_compute_at(stamp, flow, device, ni, nl, fidelity)
+    }
+
+    /// Same, under a caller-held LRU generation (see [`EvalCache::tick`]).
+    /// The (potentially heavy) compute runs outside the lock so parallel
+    /// misses don't serialize.
+    pub fn get_or_compute_at(
+        &self,
+        stamp: u64,
+        flow: &ComputationFlow,
+        device: &Device,
+        ni: usize,
+        nl: usize,
+        fidelity: Fidelity,
+    ) -> (Arc<Evaluation>, bool) {
         let key = EvalKey::new(flow, device, ni, nl, fidelity);
-        self.get_or_compute_keyed(key, flow, device, fidelity)
+        self.get_or_compute_keyed(key, stamp, flow, device, fidelity)
     }
 
     /// Same, with the (loop-invariant) fingerprints already folded into
@@ -189,19 +269,60 @@ impl EvalCache {
     fn get_or_compute_keyed(
         &self,
         key: EvalKey,
+        stamp: u64,
         flow: &ComputationFlow,
         device: &Device,
         fidelity: Fidelity,
     ) -> (Arc<Evaluation>, bool) {
-        if let Some(found) = self.map.lock().expect("eval cache poisoned").get(&key) {
+        if let Some(found) = self.map.lock().expect("eval cache poisoned").get_mut(&key) {
+            found.last_used = found.last_used.max(stamp);
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return (Arc::clone(found), true);
+            return (Arc::clone(&found.eval), true);
         }
         let eval = Arc::new(Evaluation::compute(flow, device, key.ni, key.nl, fidelity));
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.map.lock().expect("eval cache poisoned");
-        let entry = map.entry(key).or_insert_with(|| Arc::clone(&eval));
-        (Arc::clone(entry), false)
+        let entry = map.entry(key).or_insert_with(|| CacheEntry {
+            eval: Arc::clone(&eval),
+            last_used: 0,
+        });
+        entry.last_used = entry.last_used.max(stamp);
+        (Arc::clone(&entry.eval), false)
+    }
+
+    /// Re-stamp (without ever computing) whichever of `pairs`' entries
+    /// are present, all under one fresh generation; returns how many
+    /// were present. Hit/miss counters are untouched. Fan-outs call
+    /// this per (model, device) in deterministic order *after* their
+    /// racy parallel phase, so the highest (decision-making) LRU stamps
+    /// depend on the work done, not on thread scheduling — which keeps
+    /// `--cache-max-entries` eviction and the saved cache file
+    /// byte-deterministic across identical runs.
+    pub fn touch_present(
+        &self,
+        flow: &ComputationFlow,
+        device: &Device,
+        pairs: &[(usize, usize)],
+        fidelity: Fidelity,
+    ) -> usize {
+        let stamp = self.tick();
+        let (model, device) = (flow.fingerprint(), device.fingerprint());
+        let mut map = self.map.lock().expect("eval cache poisoned");
+        let mut present = 0;
+        for &(ni, nl) in pairs {
+            let key = EvalKey {
+                model,
+                device,
+                ni,
+                nl,
+                fidelity,
+            };
+            if let Some(entry) = map.get_mut(&key) {
+                entry.last_used = entry.last_used.max(stamp);
+                present += 1;
+            }
+        }
+        present
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -212,11 +333,34 @@ impl EvalCache {
         }
     }
 
-    /// Drop all entries and zero the counters (bench isolation).
+    /// Drop all entries and zero the counters + clock (bench isolation).
     pub fn clear(&self) {
         self.map.lock().expect("eval cache poisoned").clear();
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
+        self.clock.store(0, Ordering::Relaxed);
+    }
+
+    /// Evict least-recently-used entries until at most `max_entries`
+    /// remain; returns how many were dropped. Ties on the stamp break by
+    /// key, so eviction (and therefore the saved file) is deterministic.
+    /// The `--cache-max-entries` CLI knob applies this before saving, so
+    /// disk caches stop growing monotonically (ROADMAP follow-up).
+    pub fn evict_lru(&self, max_entries: usize) -> usize {
+        let mut map = self.map.lock().expect("eval cache poisoned");
+        if map.len() <= max_entries {
+            return 0;
+        }
+        let mut by_age: Vec<_> = map
+            .iter()
+            .map(|(k, e)| (e.last_used, k.sort_key(), *k))
+            .collect();
+        by_age.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let evict = map.len() - max_entries;
+        for (_, _, key) in by_age.into_iter().take(evict) {
+            map.remove(&key);
+        }
+        evict
     }
 }
 
@@ -231,12 +375,21 @@ impl EvalCache {
 // the whole file so a corrupt or stale cache can never serve wrong
 // entries — and the CLI falls back to a cold cache with a warning via
 // [`EvalCache::load_or_cold`].
+//
+// v2 (this version) records each entry's fidelity tag and last-used LRU
+// stamp. v1 files still load: their analytical entries carry over with
+// stamp 0 (oldest, first to evict); their stepped entries are *dropped*,
+// because PR 3 changed the stepped semantics (exact whole-byte DDR
+// credit + held-slice rollback), so a v1 stepped census would contradict
+// a fresh computation.
 // ---------------------------------------------------------------------------
 
 /// Format tag of the on-disk cache file.
 pub const CACHE_FORMAT: &str = "cnn2gate-evalcache-v1";
 /// Schema version within the format; bumped on any layout change.
-pub const CACHE_VERSION: i64 = 1;
+pub const CACHE_VERSION: i64 = 2;
+/// Oldest version [`EvalCache::from_json`] still accepts.
+pub const CACHE_VERSION_MIN: i64 = 1;
 /// Largest integer `util::json` round-trips exactly (below 2^53).
 const JSON_MAX_INT: u64 = 9_000_000_000_000_000;
 
@@ -285,28 +438,36 @@ fn js(v: &Json, key: &str) -> Result<String, String> {
         .ok_or_else(|| format!("missing string '{key}'"))
 }
 
+fn step_ints(s: &StepReport) -> [u64; 7] {
+    [
+        s.cycles,
+        s.rd_busy,
+        s.conv_busy,
+        s.wr_busy,
+        s.rd_to_conv_full_stalls,
+        s.conv_to_wr_full_stalls,
+        s.conv_empty_stalls,
+    ]
+}
+
 /// Whether every integer/float in the evaluation survives a JSON
 /// round-trip bit-for-bit; unsafe entries are skipped on save rather
 /// than persisted lossily.
-fn json_safe(e: &Evaluation) -> bool {
+fn json_safe(e: &Evaluation, last_used: u64) -> bool {
     let ints_ok = std::iter::once(e.latency.total_cycles)
+        .chain(std::iter::once(last_used))
         .chain(
             e.latency
                 .layers
                 .iter()
                 .flat_map(|l| [l.macs, l.compute_cycles, l.ddr_cycles, l.cycles]),
         )
-        .chain(e.stepped.iter().flat_map(|s| {
-            [
-                s.cycles,
-                s.rd_busy,
-                s.conv_busy,
-                s.wr_busy,
-                s.rd_to_conv_full_stalls,
-                s.conv_to_wr_full_stalls,
-                s.conv_empty_stalls,
-            ]
-        }))
+        .chain(e.stepped.iter().flat_map(step_ints))
+        .chain(
+            e.stepped_network
+                .iter()
+                .flat_map(|n| n.layers.iter().flat_map(step_ints)),
+        )
         .all(|v| v < JSON_MAX_INT);
     let est = &e.estimate;
     let floats_ok = [
@@ -326,7 +487,8 @@ fn json_safe(e: &Evaluation) -> bool {
     ]
     .iter()
     .all(|v| v.is_finite())
-        && e.latency.layers.iter().all(|l| l.millis.is_finite());
+        && e.latency.layers.iter().all(|l| l.millis.is_finite())
+        && e.stepped_network.iter().all(|n| n.fmax_mhz.is_finite());
     ints_ok && floats_ok
 }
 
@@ -451,13 +613,35 @@ fn step_from_json(v: &Json) -> Result<StepReport, String> {
     })
 }
 
-fn entry_to_json(key: &EvalKey, eval: &Evaluation) -> Json {
+fn net_to_json(n: &NetworkStepReport) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("fmax_mhz", n.fmax_mhz.into());
+    o.insert("layers", Json::Arr(n.layers.iter().map(step_to_json).collect()));
+    Json::Obj(o)
+}
+
+fn net_from_json(v: &Json) -> Result<NetworkStepReport, String> {
+    let layers = v
+        .get("layers")
+        .as_arr()
+        .ok_or_else(|| "stepped_network missing 'layers'".to_string())?
+        .iter()
+        .map(step_from_json)
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(NetworkStepReport {
+        fmax_mhz: jf(v, "fmax_mhz")?,
+        layers,
+    })
+}
+
+fn entry_to_json(key: &EvalKey, eval: &Evaluation, last_used: u64) -> Json {
     let mut o = JsonObj::new();
     o.insert("model", Json::Str(hex16(key.model)));
     o.insert("device", Json::Str(hex16(key.device)));
     o.insert("ni", key.ni.into());
     o.insert("nl", key.nl.into());
-    o.insert("stepped", key.stepped.into());
+    o.insert("fidelity", fidelity_tag(key.fidelity).into());
+    o.insert("last_used", Json::Num(last_used as f64));
     o.insert("estimate", est_to_json(&eval.estimate));
     o.insert("latency", sim_to_json(&eval.latency));
     o.insert(
@@ -467,22 +651,36 @@ fn entry_to_json(key: &EvalKey, eval: &Evaluation) -> Json {
             None => Json::Null,
         },
     );
+    o.insert(
+        "stepped_network",
+        match &eval.stepped_network {
+            Some(n) => net_to_json(n),
+            None => Json::Null,
+        },
+    );
     Json::Obj(o)
 }
 
-fn entry_from_json(v: &Json) -> Result<(EvalKey, Evaluation), String> {
+/// Parse one v2 entry; `Err` rejects the whole file.
+fn entry_from_json_v2(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
+    let fidelity = parse_fidelity_tag(&js(v, "fidelity")?)?;
     let key = EvalKey {
         model: parse_hex16(&js(v, "model")?)?,
         device: parse_hex16(&js(v, "device")?)?,
         ni: jus(v, "ni")?,
         nl: jus(v, "nl")?,
-        stepped: jb(v, "stepped")?,
+        fidelity,
     };
+    let last_used = ju(v, "last_used")?;
     let estimate = est_from_json(v.get("estimate"))?;
     let latency = sim_from_json(v.get("latency"))?;
     let stepped = match v.get("stepped_report") {
         Json::Null => None,
         s => Some(step_from_json(s)?),
+    };
+    let stepped_network = match v.get("stepped_network") {
+        Json::Null => None,
+        n => Some(net_from_json(n)?),
     };
     // fingerprint-collision / tamper paranoia: the payload carries the
     // option redundantly, so a mis-keyed entry is detectable — reject
@@ -499,8 +697,25 @@ fn entry_from_json(v: &Json) -> Result<(EvalKey, Evaluation), String> {
             latency.ni, latency.nl, key.ni, key.nl
         ));
     }
-    if key.stepped != stepped.is_some() {
-        return Err("stepped flag contradicts payload".to_string());
+    let shape_ok = match fidelity {
+        Fidelity::Analytical => stepped.is_none() && stepped_network.is_none(),
+        Fidelity::SteppedDominantRound => stepped.is_some() && stepped_network.is_none(),
+        Fidelity::SteppedFullNetwork => stepped.is_none() && stepped_network.is_some(),
+    };
+    if !shape_ok {
+        return Err(format!(
+            "fidelity '{}' contradicts stepped payload shape",
+            fidelity_tag(fidelity)
+        ));
+    }
+    if let Some(net) = &stepped_network {
+        if net.layers.len() != latency.layers.len() {
+            return Err(format!(
+                "stepped_network has {} rounds but latency has {}",
+                net.layers.len(),
+                latency.layers.len()
+            ));
+        }
     }
     let eval = Evaluation {
         ni: key.ni,
@@ -508,26 +723,69 @@ fn entry_from_json(v: &Json) -> Result<(EvalKey, Evaluation), String> {
         estimate,
         latency,
         stepped,
+        stepped_network,
     };
-    Ok((key, eval))
+    Ok((key, eval, last_used))
+}
+
+/// Parse one v1 entry. `Ok(None)` means a valid-but-dropped entry (v1
+/// stepped censuses predate the exact-credit stepper and are discarded);
+/// `Err` rejects the whole file.
+fn entry_from_json_v1(v: &Json) -> Result<Option<(EvalKey, Evaluation, u64)>, String> {
+    if jb(v, "stepped")? {
+        return Ok(None);
+    }
+    let key = EvalKey {
+        model: parse_hex16(&js(v, "model")?)?,
+        device: parse_hex16(&js(v, "device")?)?,
+        ni: jus(v, "ni")?,
+        nl: jus(v, "nl")?,
+        fidelity: Fidelity::Analytical,
+    };
+    let estimate = est_from_json(v.get("estimate"))?;
+    let latency = sim_from_json(v.get("latency"))?;
+    if estimate.ni != key.ni || estimate.nl != key.nl {
+        return Err(format!(
+            "estimate option ({},{}) contradicts key ({},{})",
+            estimate.ni, estimate.nl, key.ni, key.nl
+        ));
+    }
+    if latency.ni != key.ni || latency.nl != key.nl {
+        return Err(format!(
+            "latency option ({},{}) contradicts key ({},{})",
+            latency.ni, latency.nl, key.ni, key.nl
+        ));
+    }
+    if !v.get("stepped_report").is_null() {
+        return Err("v1 analytical entry carries a stepped payload".to_string());
+    }
+    let eval = Evaluation {
+        ni: key.ni,
+        nl: key.nl,
+        estimate,
+        latency,
+        stepped: None,
+        stepped_network: None,
+    };
+    Ok(Some((key, eval, 0)))
 }
 
 impl EvalCache {
     /// Serialize every (JSON-safe) entry. Entries are sorted by key so
     /// repeated saves of the same cache are byte-identical (diff-stable).
     pub fn to_json(&self) -> Json {
-        let mut entries: Vec<(EvalKey, Arc<Evaluation>)> = self
+        let mut entries: Vec<(EvalKey, Arc<Evaluation>, u64)> = self
             .map
             .lock()
             .expect("eval cache poisoned")
             .iter()
-            .map(|(k, v)| (*k, Arc::clone(v)))
+            .map(|(k, e)| (*k, Arc::clone(&e.eval), e.last_used))
             .collect();
-        entries.sort_by_key(|(k, _)| (k.model, k.device, k.ni, k.nl, k.stepped));
+        entries.sort_by_key(|(k, _, _)| k.sort_key());
         let rows: Vec<Json> = entries
             .iter()
-            .filter(|(_, e)| json_safe(e))
-            .map(|(k, e)| entry_to_json(k, e))
+            .filter(|(_, e, last_used)| json_safe(e, *last_used))
+            .map(|(k, e, last_used)| entry_to_json(k, e, *last_used))
             .collect();
         let mut o = JsonObj::new();
         o.insert("format", CACHE_FORMAT.into());
@@ -536,10 +794,12 @@ impl EvalCache {
         Json::Obj(o)
     }
 
-    /// Deserialize a cache document. Strict: schema mismatches, missing
-    /// fields, duplicate keys and key/payload contradictions all reject
-    /// the whole document. Counters start at zero (a loaded entry counts
-    /// as a hit only when something looks it up).
+    /// Deserialize a cache document (current v2 or legacy v1 — see the
+    /// module docs for the v1 carry-over rules). Strict: schema
+    /// mismatches, missing fields, duplicate keys and key/payload
+    /// contradictions all reject the whole document. Counters start at
+    /// zero (a loaded entry counts as a hit only when something looks it
+    /// up); the LRU clock resumes past the newest loaded stamp.
     pub fn from_json(doc: &Json) -> Result<EvalCache, String> {
         match doc.get("format").as_str() {
             Some(f) if f == CACHE_FORMAT => {}
@@ -549,29 +809,43 @@ impl EvalCache {
                 ))
             }
         }
-        match doc.get("version").as_i64() {
-            Some(CACHE_VERSION) => {}
+        let version = match doc.get("version").as_i64() {
+            Some(v) if (CACHE_VERSION_MIN..=CACHE_VERSION).contains(&v) => v,
             other => {
                 return Err(format!(
-                    "unsupported cache version {other:?} (want {CACHE_VERSION})"
+                    "unsupported cache version {other:?} (want {CACHE_VERSION_MIN}..={CACHE_VERSION})"
                 ))
             }
-        }
+        };
         let rows = doc
             .get("entries")
             .as_arr()
             .ok_or_else(|| "missing 'entries' array".to_string())?;
         let cache = EvalCache::new();
+        let mut newest = 0u64;
         {
             let mut map = cache.map.lock().expect("eval cache poisoned");
             map.reserve(rows.len());
             for (i, row) in rows.iter().enumerate() {
-                let (key, eval) = entry_from_json(row).map_err(|e| format!("entry {i}: {e}"))?;
-                if map.insert(key, Arc::new(eval)).is_some() {
+                let parsed = if version == 1 {
+                    entry_from_json_v1(row).map_err(|e| format!("entry {i}: {e}"))?
+                } else {
+                    Some(entry_from_json_v2(row).map_err(|e| format!("entry {i}: {e}"))?)
+                };
+                let Some((key, eval, last_used)) = parsed else {
+                    continue; // dropped v1 stepped entry
+                };
+                newest = newest.max(last_used);
+                let entry = CacheEntry {
+                    eval: Arc::new(eval),
+                    last_used,
+                };
+                if map.insert(key, entry).is_some() {
                     return Err(format!("entry {i}: duplicate cache key"));
                 }
             }
         }
+        cache.clock.store(newest, Ordering::Relaxed);
         Ok(cache)
     }
 
@@ -738,22 +1012,24 @@ impl Evaluator {
         pairs: &[(usize, usize)],
         fidelity: Fidelity,
     ) -> Vec<(Arc<Evaluation>, bool)> {
-        // fingerprints are loop-invariant: hash once per grid
+        // fingerprints are loop-invariant: hash once per grid; the whole
+        // grid shares one LRU generation so worker completion order
+        // can't perturb the persisted stamps
         let (model_fp, device_fp) = (flow.fingerprint(), device.fingerprint());
-        let stepped = matches!(fidelity, Fidelity::SteppedDominantRound);
+        let stamp = self.cache.tick();
         let key_of = |ni: usize, nl: usize| EvalKey {
             model: model_fp,
             device: device_fp,
             ni,
             nl,
-            stepped,
+            fidelity,
         };
         if pairs.len() < 2 || self.pool.size() < 2 {
             return pairs
                 .iter()
                 .map(|&(ni, nl)| {
                     self.cache
-                        .get_or_compute_keyed(key_of(ni, nl), flow, device, fidelity)
+                        .get_or_compute_keyed(key_of(ni, nl), stamp, flow, device, fidelity)
                 })
                 .collect();
         }
@@ -767,7 +1043,7 @@ impl Evaluator {
             let cache = Arc::clone(&self.cache);
             let tx = tx.clone();
             self.pool.execute(move || {
-                let out = cache.get_or_compute_keyed(key, &flow, &device, fidelity);
+                let out = cache.get_or_compute_keyed(key, stamp, &flow, &device, fidelity);
                 let _ = tx.send((idx, out));
             });
         }
@@ -934,7 +1210,7 @@ mod tests {
     }
 
     #[test]
-    fn cache_discriminates_models_and_devices() {
+    fn cache_discriminates_models_devices_and_fidelities() {
         let a = flow("alexnet");
         let v = flow("vgg16");
         assert_ne!(a.fingerprint(), v.fingerprint());
@@ -950,6 +1226,8 @@ mod tests {
         assert!(!hit, "different device must miss");
         let (_, hit) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical);
         assert!(hit, "same key must hit");
+        let (_, hit) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::SteppedFullNetwork);
+        assert!(!hit, "different fidelity must miss");
     }
 
     #[test]
@@ -959,10 +1237,32 @@ mod tests {
         let (eval, _) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound);
         let stepped = eval.stepped.as_ref().expect("stepped census present");
         assert!(stepped.cycles > 0);
+        assert!(eval.stepped_network.is_none());
         // analytical fidelity for the same option is a distinct entry
         let (eval2, hit) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
         assert!(!hit);
         assert!(eval2.stepped.is_none());
+    }
+
+    #[test]
+    fn full_network_fidelity_steps_every_round() {
+        let f = flow("alexnet");
+        let ev = Evaluator::new(2);
+        let (eval, _) = ev.evaluate(&f, &ARRIA_10_GX1150, 16, 32, Fidelity::SteppedFullNetwork);
+        let net = eval.stepped_network.as_ref().expect("network census");
+        assert_eq!(net.layers.len(), f.layers.len());
+        assert!(eval.stepped.is_none());
+        assert!(net.total_cycles() > 0);
+        // the dominant round's census equals the stepped-dominant run's
+        let (dom, _) = ev.evaluate(&f, &ARRIA_10_GX1150, 16, 32, Fidelity::SteppedDominantRound);
+        let dom_idx = f
+            .layers
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, l)| l.macs())
+            .unwrap()
+            .0;
+        assert_eq!(net.layers[dom_idx], *dom.stepped.as_ref().unwrap());
     }
 
     #[test]
@@ -980,6 +1280,45 @@ mod tests {
     }
 
     #[test]
+    fn lru_eviction_keeps_recently_used_entries() {
+        let f = flow("tiny");
+        let cache = EvalCache::new();
+        // three entries, touched in order (4,4), (4,8), (8,4)
+        cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::Analytical);
+        cache.get_or_compute(&f, &ARRIA_10_GX1150, 8, 4, Fidelity::Analytical);
+        // re-touch the oldest so (4,8) becomes LRU
+        cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        assert_eq!(cache.evict_lru(2), 1);
+        assert_eq!(cache.stats().entries, 2);
+        let (_, hit) = cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        assert!(hit, "recently used survives");
+        let (_, hit) = cache.get_or_compute(&f, &ARRIA_10_GX1150, 8, 4, Fidelity::Analytical);
+        assert!(hit, "recently used survives");
+        let (_, hit) = cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::Analytical);
+        assert!(!hit, "LRU entry was evicted");
+        // no-op when already under the bound
+        assert_eq!(cache.evict_lru(100), 0);
+    }
+
+    #[test]
+    fn eviction_then_save_shrinks_the_file() {
+        let f = flow("alexnet");
+        let pairs = OptionSpace::from_flow(&f).pairs();
+        let ev = Evaluator::new(2);
+        ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+        let path = tmp_path("evict");
+        let full = ev.cache().save(&path).unwrap();
+        assert_eq!(full, pairs.len());
+        let evicted = ev.cache().evict_lru(4);
+        assert_eq!(evicted, pairs.len() - 4);
+        let trimmed = ev.cache().save(&path).unwrap();
+        assert_eq!(trimmed, 4);
+        assert_eq!(EvalCache::load(&path).unwrap().stats().entries, 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn cache_roundtrips_through_disk_bit_for_bit() {
         let f = flow("alexnet");
         let tiny = flow("tiny");
@@ -987,9 +1326,10 @@ mod tests {
         let ev = Evaluator::new(2);
         ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
         ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound);
+        ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedFullNetwork);
         let path = tmp_path("roundtrip");
         let written = ev.cache().save(&path).unwrap();
-        assert_eq!(written, pairs.len() + 1, "grid plus the stepped entry");
+        assert_eq!(written, pairs.len() + 2, "grid plus the two stepped entries");
         let loaded = EvalCache::load(&path).unwrap();
         assert_eq!(loaded.stats().entries, written);
         assert_eq!(loaded.stats().hits, 0, "counters start cold");
@@ -1010,8 +1350,15 @@ mod tests {
             *stepped,
             Evaluation::compute(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound)
         );
+        let (net, hit) =
+            warm.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedFullNetwork);
+        assert!(hit, "full-network entry survives the round trip");
+        assert_eq!(
+            *net,
+            Evaluation::compute(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedFullNetwork)
+        );
         let stats = warm.cache().stats();
-        assert_eq!(stats.hits, pairs.len() + 1);
+        assert_eq!(stats.hits, pairs.len() + 2);
         assert_eq!(stats.misses, 0);
         std::fs::remove_file(&path).ok();
     }
@@ -1020,6 +1367,7 @@ mod tests {
     fn save_load_save_is_byte_stable() {
         // hit-count determinism across processes needs the file itself to
         // be deterministic: save → load → save must be a fixed point
+        // (LRU stamps included)
         let f = flow("alexnet");
         let pairs = OptionSpace::from_flow(&f).pairs();
         let ev = Evaluator::new(2);
@@ -1036,6 +1384,41 @@ mod tests {
         );
         std::fs::remove_file(&a).ok();
         std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn v1_files_load_analytical_entries_and_drop_stepped_ones() {
+        // build a v2 file, rewrite it into the v1 shape, and check the
+        // v1→v2 carry-over rules: analytical entries survive (stamp 0),
+        // stepped entries are dropped, nothing errors
+        let f = flow("tiny");
+        let ev = Evaluator::new(2);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::SteppedDominantRound);
+        let path = tmp_path("v1compat");
+        ev.cache().save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v1 = text
+            .replace("\"version\": 2", "\"version\": 1")
+            .replace("\"fidelity\": \"analytical\"", "\"stepped\": false")
+            .replace(
+                "\"fidelity\": \"stepped-dominant-round\"",
+                "\"stepped\": true",
+            );
+        assert_ne!(text, v1, "rewrite must land");
+        std::fs::write(&path, &v1).unwrap();
+        let loaded = EvalCache::load(&path).unwrap();
+        assert_eq!(loaded.stats().entries, 1, "stepped v1 entry dropped");
+        let warm = Evaluator::with_cache(2, Arc::new(loaded));
+        let (eval, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        assert!(hit, "analytical v1 entry carried over");
+        assert_eq!(
+            *eval,
+            Evaluation::compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical)
+        );
+        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::SteppedDominantRound);
+        assert!(!hit, "dropped stepped entry recomputes");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
@@ -1059,7 +1442,7 @@ mod tests {
         // wrong format tag
         std::fs::write(
             &path,
-            r#"{"format": "something-else", "version": 1, "entries": []}"#,
+            r#"{"format": "something-else", "version": 2, "entries": []}"#,
         )
         .unwrap();
         assert!(EvalCache::load(&path).is_err());
@@ -1101,6 +1484,15 @@ mod tests {
         let (cold, warn) = EvalCache::load_or_cold(&path);
         assert_eq!(cold.stats().entries, 0, "tampered entries never served");
         assert!(warn.is_some());
+        // a fidelity tag contradicting the payload shape is also refused
+        let mangled = text.replacen(
+            "\"fidelity\": \"analytical\"",
+            "\"fidelity\": \"stepped-dominant-round\"",
+            1,
+        );
+        assert_ne!(text, mangled);
+        std::fs::write(&path, mangled).unwrap();
+        assert!(EvalCache::load(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 }

@@ -131,6 +131,22 @@ pub fn explore_with(
     thresholds: Thresholds,
     cfg: JointConfig,
 ) -> Result<JointResult> {
+    explore_with_fidelity(evaluator, graph, flow, device, thresholds, cfg, Fidelity::Analytical)
+}
+
+/// Joint exploration at an explicit [`Fidelity`] for the hardware
+/// queries (the quantization sweep is fidelity-independent). Stepped
+/// modes leave cycle-accurate censuses in the memo for every visited
+/// option without changing the agent's trajectory.
+pub fn explore_with_fidelity(
+    evaluator: &Evaluator,
+    graph: &Graph,
+    flow: &ComputationFlow,
+    device: &Device,
+    thresholds: Thresholds,
+    cfg: JointConfig,
+    fidelity: Fidelity,
+) -> Result<JointResult> {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let errs = quant_error_curve(graph)?;
@@ -156,7 +172,7 @@ pub fn explore_with(
         let (ni, nl) = (space.ni[i], space.nl[j]);
         let f_avg = *visited.entry((ni, nl)).or_insert_with(|| {
             *queries += 1;
-            let (eval, hit) = evaluator.evaluate(flow, device, ni, nl, Fidelity::Analytical);
+            let (eval, hit) = evaluator.evaluate(flow, device, ni, nl, fidelity);
             if hit {
                 *cache_hits += 1;
             }
@@ -299,6 +315,28 @@ mod tests {
         .unwrap();
         assert!(r.best.is_none());
         assert!(r.trace.iter().all(|(_, _, _, _, feas)| !feas));
+    }
+
+    #[test]
+    fn stepped_fidelity_leaves_the_joint_choice_unchanged() {
+        use crate::dse::Evaluator;
+        let (g, f) = setup("lenet5");
+        let cfg = JointConfig::default();
+        let a = explore(&g, &f, &ARRIA_10_GX1150, Thresholds::default(), cfg).unwrap();
+        let ev = Evaluator::new(2);
+        let b = explore_with_fidelity(
+            &ev,
+            &g,
+            &f,
+            &ARRIA_10_GX1150,
+            Thresholds::default(),
+            cfg,
+            crate::dse::Fidelity::SteppedDominantRound,
+        )
+        .unwrap();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.queries, b.queries);
     }
 
     #[test]

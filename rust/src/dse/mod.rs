@@ -4,11 +4,15 @@
 //!
 //! All explorers score candidates through [`eval`] — a shared
 //! multi-threaded evaluation core with a process-wide memo cache keyed
-//! on `(model fingerprint, device fingerprint, N_i, N_l)`. Brute force
-//! fans its grid out across the worker pool (bit-identical results to
-//! the sequential path, validated by tests); the sequential RL/joint
-//! agents go through the same cache so revisited candidates — and whole
-//! re-explorations, as in fleet fits — cost one lookup.
+//! on `(model fingerprint, device fingerprint, N_i, N_l, fidelity)`.
+//! Brute force fans its grid out across the worker pool (bit-identical
+//! results to the sequential path, validated by tests); the sequential
+//! RL/joint agents go through the same cache so revisited candidates —
+//! and whole re-explorations, as in fleet fits — cost one lookup. Every
+//! explorer also runs at an explicit [`Fidelity`]
+//! (`explore_with_fidelity`): the stepped modes attach cycle-accurate
+//! censuses to each scored candidate without changing the chosen design
+//! or trace — feasibility and F_avg come from the estimator either way.
 
 pub mod brute;
 pub mod eval;

@@ -81,6 +81,21 @@ pub fn explore_with(
     thresholds: Thresholds,
     cfg: RlConfig,
 ) -> DseResult {
+    explore_with_fidelity(evaluator, flow, device, thresholds, cfg, Fidelity::Analytical)
+}
+
+/// RL-DSE at an explicit [`Fidelity`]. The agent's trajectory, choice
+/// and query count are fidelity-independent (rewards come from the
+/// estimator); stepped modes additionally leave a cycle-accurate census
+/// in the memo for every state the agent actually visited.
+pub fn explore_with_fidelity(
+    evaluator: &Evaluator,
+    flow: &ComputationFlow,
+    device: &Device,
+    thresholds: Thresholds,
+    cfg: RlConfig,
+    fidelity: Fidelity,
+) -> DseResult {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let (ni_n, nl_n) = (space.ni.len(), space.nl.len());
@@ -107,7 +122,7 @@ pub fn explore_with(
             // Algorithm 1 gives 0 for known-feasible non-improving states
             return if r < 0.0 { -1.0 } else { 0.0 };
         }
-        let (eval, hit) = evaluator.evaluate(flow, device, ni, nl, Fidelity::Analytical);
+        let (eval, hit) = evaluator.evaluate(flow, device, ni, nl, fidelity);
         *queries += 1;
         if hit {
             *cache_hits += 1;
@@ -274,6 +289,33 @@ mod tests {
         assert_eq!(a.best, b.best);
         assert_eq!(a.queries, b.queries);
         assert_eq!(a.trace, b.trace);
+    }
+
+    #[test]
+    fn stepped_fidelity_does_not_change_the_agent() {
+        // the reward signal is the estimator's; stepping every visited
+        // candidate (full-network fidelity) must leave the trajectory,
+        // query count and chosen design bit-identical
+        let f = flow("alexnet");
+        let (th, cfg) = (Thresholds::default(), RlConfig::default());
+        let a = explore_with(&Evaluator::new(2), &f, &ARRIA_10_GX1150, th, cfg);
+        let ev = Evaluator::new(2);
+        let b = explore_with_fidelity(
+            &ev,
+            &f,
+            &ARRIA_10_GX1150,
+            th,
+            cfg,
+            Fidelity::SteppedFullNetwork,
+        );
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.queries, b.queries);
+        // and the visited states' censuses are in the memo
+        let (ni, nl) = b.best.unwrap();
+        let (eval, hit) = ev.evaluate(&f, &ARRIA_10_GX1150, ni, nl, Fidelity::SteppedFullNetwork);
+        assert!(hit);
+        assert!(eval.stepped_network.is_some());
     }
 
     #[test]

@@ -18,15 +18,22 @@
 //! core: a `std::thread` + channel worker pool fans candidate scoring
 //! out across cores (bit-identical results to the sequential path) and
 //! a memo cache keyed on `(model fingerprint, device fingerprint, N_i,
-//! N_l)` deduplicates the estimator + simulator queries that the
-//! RL/joint agents revisit constantly. The memo persists: the FNV
+//! N_l, fidelity)` deduplicates the estimator + simulator queries that
+//! the RL/joint agents revisit constantly. The memo persists: the FNV
 //! fingerprints are process-stable, so [`dse::EvalCache`] serializes to
 //! a versioned, corruption-tolerant JSON file (`--cache-file` on the
-//! CLI) and repeat explorations across processes start warm. On top of
-//! it, [`coordinator::pipeline::fit_fleet`] (CLI: `fit-fleet`) fits one
-//! model against every device in [`estimator::device`] concurrently,
-//! and [`coordinator::pipeline::sweep_matrix`] (CLI: `sweep`) explores
-//! the full model×device matrix, rendered via
+//! CLI, LRU-bounded by `--cache-max-entries`) and repeat explorations
+//! across processes start warm. Ground truth is affordable: the
+//! cycle-stepped simulator's **epoch skip-ahead engine**
+//! ([`sim::step_round`]) fast-forwards steady-state stretches in closed
+//! form — bit-identical to the naive stepper, orders of magnitude
+//! faster — which makes [`dse::Fidelity::SteppedFullNetwork`] (every
+//! round stepped, per-layer stall census) usable inside DSE loops. On
+//! top of it, [`coordinator::pipeline::fit_fleet`] (CLI: `fit-fleet`)
+//! fits one model against every device in [`estimator::device`]
+//! concurrently, and [`coordinator::pipeline::sweep_matrix`] (CLI:
+//! `sweep`) explores the full model×device matrix on a work-stealing
+//! scheduler ([`coordinator::scheduler`]), rendered via
 //! [`report::tables::sweep_table`] with best-device-per-model /
 //! best-model-per-device rankings and the latency/resource Pareto
 //! frontier.

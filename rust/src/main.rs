@@ -20,14 +20,15 @@ use anyhow::{anyhow, bail, Result};
 
 use cnn2gate::cli::Args;
 use cnn2gate::coordinator::{pipeline, InferenceServer, ServerConfig};
-use cnn2gate::dse::{brute, eval, rl, EvalCache, Evaluator, RlConfig};
+use cnn2gate::dse::{brute, eval, rl, EvalCache, Evaluator, Fidelity, RlConfig};
 use cnn2gate::estimator::{device, estimate, Thresholds};
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
 use cnn2gate::report::{
-    baselines, comparison_table, fig6, fleet_table, sweep_best_device_table,
-    sweep_best_model_table, sweep_pareto_table, sweep_table, table1, table2,
+    baselines, comparison_table, fig6, fleet_table, stepped_census_table,
+    sweep_best_device_table, sweep_best_model_table, sweep_pareto_table, sweep_table, table1,
+    table2,
 };
 use cnn2gate::runtime::{load_golden, Manifest, Tensor};
 use cnn2gate::sim::simulate;
@@ -41,12 +42,16 @@ cnn2gate — CNN2Gate reproduction (Rust + JAX + Pallas)
 USAGE:
   cnn2gate info      --model <zoo|file.json>
   cnn2gate dse       --model <m> --device <d> [--explorer rl|bf] [--seed N]
+                     [--fidelity analytical|stepped|stepped-full]
                      [--threads N] [--seq] [--cache-file F]
+                     [--cache-max-entries N]
   cnn2gate fit-fleet --model <m> [--explorer rl|bf] [--threads N]
-                     [--cache-file F]
+                     [--cache-file F] [--cache-max-entries N]
   cnn2gate sweep     [--models m1,m2,...] [--explorer rl|bf] [--threads N]
-                     [--cache-file F]
+                     [--fidelity analytical|stepped|stepped-full]
+                     [--cache-file F] [--cache-max-entries N]
   cnn2gate synth     --model <m> --device <d> [--explorer rl|bf] [--quantize]
+                     [--report]
   cnn2gate emulate   --model <m> [--artifacts DIR]
   cnn2gate serve     --model <m> [--artifacts DIR] [--requests N] [--batch B]
   cnn2gate tables    [--artifacts DIR]
@@ -54,6 +59,11 @@ USAGE:
 
 MODELS: tiny lenet5 alexnet vgg16 (or a cnn2gate-onnx-subset .json file)
 DEVICES: 5csema4 5csema5 arria10 stratixv
+
+`--fidelity stepped` runs the cycle-accurate simulator on each candidate's
+dominant round; `stepped-full` steps every round (epoch skip-ahead engine).
+`synth --report` prints the chosen design's per-layer stall/backpressure
+census. `--cache-max-entries N` LRU-evicts the --cache-file before saving.
 ";
 
 fn main() {
@@ -85,12 +95,27 @@ fn explorer_from(args: &Args) -> Result<Explorer> {
     }
 }
 
+fn fidelity_from(args: &Args) -> Result<Fidelity> {
+    Ok(
+        match args.get_choice(
+            "fidelity",
+            &["analytical", "stepped", "stepped-full"],
+            "analytical",
+        )? {
+            "stepped" => Fidelity::SteppedDominantRound,
+            "stepped-full" => Fidelity::SteppedFullNetwork,
+            _ => Fidelity::Analytical,
+        },
+    )
+}
+
 fn dispatch(argv: &[String]) -> Result<()> {
     let flags = [
-        "model", "models", "device", "explorer", "artifacts", "requests", "batch", "seed",
-        "threads", "cache-file", "max-lut", "max-dsp", "max-mem", "max-reg",
+        "model", "models", "device", "explorer", "fidelity", "artifacts", "requests", "batch",
+        "seed", "threads", "cache-file", "cache-max-entries", "max-lut", "max-dsp", "max-mem",
+        "max-reg",
     ];
-    let switches = ["quantize", "verbose", "seq"];
+    let switches = ["quantize", "verbose", "seq", "report"];
     let args = Args::parse(argv, &flags, &switches)?;
     match args.subcommand.as_str() {
         "info" => cmd_info(&args),
@@ -117,12 +142,16 @@ fn dispatch(argv: &[String]) -> Result<()> {
 struct EvalSession {
     evaluator: Option<Evaluator>,
     cache_file: Option<std::path::PathBuf>,
+    /// `--cache-max-entries`: LRU-evict down to this before saving
+    /// (0 = unlimited).
+    cache_max_entries: usize,
 }
 
 impl EvalSession {
     fn open(args: &Args) -> Result<EvalSession> {
         let threads = args.get_usize("threads", 0)?;
         let cache_file = args.get("cache-file").map(std::path::PathBuf::from);
+        let cache_max_entries = args.get_usize("cache-max-entries", 0)?;
         let evaluator = match (&cache_file, threads) {
             (None, 0) => None,
             (None, n) => Some(Evaluator::new(n)),
@@ -138,6 +167,7 @@ impl EvalSession {
         Ok(EvalSession {
             evaluator,
             cache_file,
+            cache_max_entries,
         })
     }
 
@@ -148,9 +178,19 @@ impl EvalSession {
         }
     }
 
-    /// Persist the memo back to `--cache-file`, when one was given.
+    /// Persist the memo back to `--cache-file`, when one was given,
+    /// LRU-evicting first when `--cache-max-entries` bounds the file.
     fn close(&self) -> Result<()> {
         if let Some(path) = &self.cache_file {
+            if self.cache_max_entries > 0 {
+                let evicted = self.evaluator().cache().evict_lru(self.cache_max_entries);
+                if evicted > 0 {
+                    println!(
+                        "cache: evicted {evicted} least-recently-used entries (--cache-max-entries {})",
+                        self.cache_max_entries
+                    );
+                }
+            }
             let written = self.evaluator().cache().save(path)?;
             println!("cache: {written} entries saved to {}", path.display());
         }
@@ -195,20 +235,26 @@ fn cmd_dse(args: &Args) -> Result<()> {
     // --cache-file / --threads build a private (possibly disk-seeded)
     // evaluator; the default shares the global pool + memo; --seq forces
     // the sequential seed path (baseline, bypasses the cache).
+    let fidelity = fidelity_from(args)?;
     let session = EvalSession::open(args)?;
     let evaluator = session.evaluator();
     let result = match explorer_from(args)? {
-        Explorer::BruteForce if args.has("seq") => brute::explore_seq(&flow, dev, th),
+        Explorer::BruteForce if args.has("seq") => {
+            if fidelity != Fidelity::Analytical {
+                bail!("--seq is the analytical seed path; drop --seq to use --fidelity");
+            }
+            brute::explore_seq(&flow, dev, th)
+        }
         Explorer::Reinforcement if args.has("seq") => {
             bail!("--seq applies to the brute-force explorer (use --explorer bf); RL is inherently sequential")
         }
-        Explorer::BruteForce => brute::explore_with(evaluator, &flow, dev, th),
+        Explorer::BruteForce => brute::explore_with_fidelity(evaluator, &flow, dev, th, fidelity),
         Explorer::Reinforcement => {
             let cfg = RlConfig {
                 seed: args.get_usize("seed", 0xD5E)? as u64,
                 ..RlConfig::default()
             };
-            rl::explore_with(evaluator, &flow, dev, th, cfg)
+            rl::explore_with_fidelity(evaluator, &flow, dev, th, cfg, fidelity)
         }
     };
     println!("device: {}", dev.name);
@@ -276,6 +322,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         &graphs,
         explorer_from(args)?,
         thresholds_from(args)?,
+        fidelity_from(args)?,
     )?;
     println!("{}", sweep_table(&rep).render());
     println!("{}", sweep_best_device_table(&rep).render());
@@ -298,12 +345,21 @@ fn cmd_synth(args: &Args) -> Result<()> {
     let quantize = args.has("quantize");
     let g = pipeline::load_model(model, quantize)?;
     let spec = cnn2gate::quant::QuantSpec::default();
-    let rep = synth::run(
+    // --report upgrades the flow to full-network stepped fidelity so the
+    // chosen design carries its per-layer stall/backpressure census
+    let fidelity = if args.has("report") {
+        Fidelity::SteppedFullNetwork
+    } else {
+        Fidelity::Analytical
+    };
+    let rep = synth::run_with_fidelity(
+        eval::global(),
         &g,
         dev,
         explorer_from(args)?,
         thresholds_from(args)?,
         (quantize && g.has_weights()).then_some(&spec),
+        fidelity,
     )?;
     println!("model: {}   device: {}", rep.model, rep.device);
     match (&rep.estimate, &rep.sim) {
@@ -327,8 +383,14 @@ fn cmd_synth(args: &Args) -> Result<()> {
                 metrics::gops_per_dsp(gops, est.dsps),
                 100.0 * sim.efficiency()
             );
+            if let Some(net) = &rep.stepped_network {
+                println!("{}", stepped_census_table(sim, net).render());
+            }
         }
         _ => println!("Does not fit on {}", rep.device),
+    }
+    if args.has("report") && !rep.fits() {
+        println!("(no stepped census: the design does not fit)");
     }
     if let Some(q) = &rep.quant {
         println!(

@@ -58,7 +58,7 @@ impl SimReport {
     /// Achieved throughput (GOp/s) at batch 1 — the paper's Performance
     /// row in Tables 3-4.
     pub fn gops_per_s(&self) -> f64 {
-        self.gops / (self.total_millis / 1e3) / 1e9 * 1e9 / 1e9 * 1e9
+        crate::metrics::gops_per_s(self.gops, self.total_millis)
     }
 
     /// Peak lane-array throughput at this option/fmax (GOp/s).
@@ -322,6 +322,21 @@ mod tests {
         let a = simulate(&f, &ARRIA_10_GX1150, 8, 8).total_cycles;
         let b = simulate(&f, &ARRIA_10_GX1150, 16, 32).total_cycles;
         assert!(b < a);
+    }
+
+    #[test]
+    fn gops_per_s_unit_chain_regression() {
+        // the seed multiplied and divided by 1e9 three times; the value
+        // is pinned to the plain gops / seconds semantics, bit for bit
+        let rep = simulate(&flow("alexnet"), &ARRIA_10_GX1150, 16, 32);
+        let expect = rep.gops / (rep.total_millis / 1e3);
+        assert_eq!(rep.gops_per_s().to_bits(), expect.to_bits());
+        assert_eq!(
+            rep.gops_per_s().to_bits(),
+            crate::metrics::gops_per_s(rep.gops, rep.total_millis).to_bits()
+        );
+        // paper Table 3 anchor: ~80 GOp/s for AlexNet on the Arria 10
+        assert!((rep.gops_per_s() - 80.0).abs() < 10.0, "{}", rep.gops_per_s());
     }
 
     #[test]

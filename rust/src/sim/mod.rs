@@ -10,5 +10,8 @@ pub use engine::{
     simulate, simulate_batched, simulate_layer, simulate_with_estimate, BatchReport, LayerTiming,
     SimReport,
 };
-pub use kernels::{analytical_cycles, dominant_round_work, step_round, RoundWork, StepReport};
+pub use kernels::{
+    analytical_cycles, ddr_whole_bytes, dominant_round_work, layer_round_work, network_round_work,
+    step_network, step_round, step_round_reference, NetworkStepReport, RoundWork, StepReport,
+};
 pub use pipe::Pipe;

@@ -4,6 +4,12 @@
 //! cycle-stepped FIFO used by the stage simulator in [`super::kernels`],
 //! with full/empty stall accounting so backpressure between the deeply
 //! pipelined kernels is observable.
+//!
+//! Only the naive oracle (`step_round_reference`) steps real token-level
+//! `Pipe`s; the epoch skip-ahead engine models each pipe by its
+//! occupancy alone (tokens are opaque, so occupancy fully determines
+//! full/empty behaviour) — that compact state is what makes steady-state
+//! recurrence detectable and the fast-forward exact.
 
 use std::collections::VecDeque;
 

@@ -15,7 +15,7 @@ use crate::dse::{brute, eval, rl, DseResult, Evaluator, Fidelity, RlConfig};
 use crate::estimator::{synthesis_minutes, Device, ResourceEstimate, Thresholds};
 use crate::ir::{ComputationFlow, Graph};
 use crate::quant::{self, QuantReport, QuantSpec};
-use crate::sim::SimReport;
+use crate::sim::{NetworkStepReport, SimReport};
 
 /// Which explorer drives the fit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +44,10 @@ pub struct SynthReport {
     pub estimate: Option<ResourceEstimate>,
     pub synthesis_minutes: Option<f64>,
     pub sim: Option<SimReport>,
+    /// Per-layer cycle-accurate stall/backpressure census of the chosen
+    /// design (present when the flow ran at
+    /// [`Fidelity::SteppedFullNetwork`] and the design fits).
+    pub stepped_network: Option<NetworkStepReport>,
     pub quant: Option<QuantReport>,
 }
 
@@ -86,6 +90,31 @@ pub fn run_with(
     thresholds: Thresholds,
     quant_spec: Option<&QuantSpec>,
 ) -> Result<SynthReport> {
+    run_with_fidelity(
+        evaluator,
+        graph,
+        device,
+        explorer,
+        thresholds,
+        quant_spec,
+        Fidelity::Analytical,
+    )
+}
+
+/// The full flow at an explicit [`Fidelity`]: stepped modes score every
+/// explored candidate through the cycle-accurate simulator, and
+/// `SteppedFullNetwork` surfaces the chosen design's per-layer
+/// stall/backpressure census on the report (the `synth --report` path).
+/// The chosen design itself is fidelity-independent.
+pub fn run_with_fidelity(
+    evaluator: &Evaluator,
+    graph: &Graph,
+    device: &'static Device,
+    explorer: Explorer,
+    thresholds: Thresholds,
+    quant_spec: Option<&QuantSpec>,
+    fidelity: Fidelity,
+) -> Result<SynthReport> {
     let flow = ComputationFlow::extract(graph).map_err(|e| anyhow!("flow extraction: {e}"))?;
 
     let quant = match quant_spec {
@@ -94,13 +123,20 @@ pub fn run_with(
     };
 
     let dse = match explorer {
-        Explorer::BruteForce => brute::explore_with(evaluator, &flow, device, thresholds),
-        Explorer::Reinforcement => {
-            rl::explore_with(evaluator, &flow, device, thresholds, RlConfig::default())
+        Explorer::BruteForce => {
+            brute::explore_with_fidelity(evaluator, &flow, device, thresholds, fidelity)
         }
+        Explorer::Reinforcement => rl::explore_with_fidelity(
+            evaluator,
+            &flow,
+            device,
+            thresholds,
+            RlConfig::default(),
+            fidelity,
+        ),
     };
 
-    let (estimate, synth_min, sim) = match (dse.best, &dse.best_estimate) {
+    let (estimate, synth_min, sim, stepped_network) = match (dse.best, &dse.best_estimate) {
         (Some((ni, nl)), Some(est)) => {
             let minutes = synthesis_minutes(est, device);
             // the chosen option was already scored during exploration —
@@ -108,10 +144,15 @@ pub fn run_with(
             // to simulate(): Evaluation.latency IS simulate_with_estimate
             // over the same single estimator call) instead of re-deriving
             // it, so warm cache-file runs recompute nothing
-            let (chosen, _) = evaluator.evaluate(&flow, device, ni, nl, Fidelity::Analytical);
-            (Some(est.clone()), Some(minutes), Some(chosen.latency.clone()))
+            let (chosen, _) = evaluator.evaluate(&flow, device, ni, nl, fidelity);
+            (
+                Some(est.clone()),
+                Some(minutes),
+                Some(chosen.latency.clone()),
+                chosen.stepped_network.clone(),
+            )
         }
-        _ => (None, None, None),
+        _ => (None, None, None, None),
     };
 
     Ok(SynthReport {
@@ -122,6 +163,7 @@ pub fn run_with(
         estimate,
         synthesis_minutes: synth_min,
         sim,
+        stepped_network,
         quant,
     })
 }
@@ -186,6 +228,34 @@ mod tests {
         assert!(!rep.fits());
         assert_eq!(rep.latency_ms(), None);
         assert_eq!(rep.synthesis_minutes, None);
+    }
+
+    #[test]
+    fn stepped_full_network_flow_surfaces_the_census() {
+        use crate::dse::Evaluator;
+        let g = zoo::build("alexnet", false).unwrap();
+        let ev = Evaluator::new(4);
+        let rep = run_with_fidelity(
+            &ev,
+            &g,
+            &ARRIA_10_GX1150,
+            Explorer::BruteForce,
+            Thresholds::default(),
+            None,
+            Fidelity::SteppedFullNetwork,
+        )
+        .unwrap();
+        // same design as the analytical flow...
+        let base = run(&g, &ARRIA_10_GX1150, Explorer::BruteForce, Thresholds::default(), None)
+            .unwrap();
+        assert_eq!(rep.option(), base.option());
+        assert_eq!(rep.dse.trace, base.dse.trace);
+        assert_eq!(rep.latency_ms(), base.latency_ms());
+        // ...plus a per-round census aligned with the latency breakdown
+        let net = rep.stepped_network.as_ref().expect("census on the report");
+        assert_eq!(net.layers.len(), rep.sim.as_ref().unwrap().layers.len());
+        assert!(net.total_cycles() > 0);
+        assert!(base.stepped_network.is_none(), "analytical flow carries none");
     }
 
     #[test]

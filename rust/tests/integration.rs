@@ -178,7 +178,7 @@ fn sweep_with_cache_file_is_warm_and_bit_identical() {
     // --cache-file must report >0 cache hits (and recompute nothing)
     // while rendering byte-identical ranking tables to the cold run
     use cnn2gate::coordinator::pipeline::sweep_matrix_with;
-    use cnn2gate::dse::{EvalCache, Evaluator};
+    use cnn2gate::dse::{EvalCache, Evaluator, Fidelity};
     use cnn2gate::report::{
         sweep_best_device_table, sweep_best_model_table, sweep_pareto_table, sweep_table,
     };
@@ -194,17 +194,36 @@ fn sweep_with_cache_file_is_warm_and_bit_identical() {
     ));
 
     let cold_ev = Evaluator::new(4);
-    let cold = sweep_matrix_with(&cold_ev, &models, Explorer::BruteForce, Thresholds::default())
-        .unwrap();
-    assert_eq!(cold_ev.cache().stats().hits, 0, "fresh memo cannot hit");
+    let cold = sweep_matrix_with(
+        &cold_ev,
+        &models,
+        Explorer::BruteForce,
+        Thresholds::default(),
+        Fidelity::Analytical,
+    )
+    .unwrap();
+    // the work-stealing prewarm computes every candidate exactly once;
+    // the explorer phase is then answered from the memo
+    let cold_stats = cold_ev.cache().stats();
+    assert!(cold_stats.misses > 0, "cold run must compute candidates");
+    assert_eq!(
+        cold_stats.misses, cold_stats.entries,
+        "each unique candidate computed once"
+    );
     let written = cold_ev.cache().save(&path).unwrap();
     assert!(written > 0);
 
     let (cache, warn) = EvalCache::load_or_cold(&path);
     assert!(warn.is_none(), "our own file must load cleanly: {warn:?}");
     let warm_ev = Evaluator::with_cache(4, Arc::new(cache));
-    let warm = sweep_matrix_with(&warm_ev, &models, Explorer::BruteForce, Thresholds::default())
-        .unwrap();
+    let warm = sweep_matrix_with(
+        &warm_ev,
+        &models,
+        Explorer::BruteForce,
+        Thresholds::default(),
+        Fidelity::Analytical,
+    )
+    .unwrap();
     let stats = warm_ev.cache().stats();
     assert!(stats.hits > 0, "warm run must be served from the cache file");
     assert_eq!(stats.misses, 0, "nothing recomputed on a warm cache");
@@ -222,6 +241,89 @@ fn sweep_with_cache_file_is_warm_and_bit_identical() {
         sweep_pareto_table(&warm).render(),
         sweep_pareto_table(&cold).render()
     );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sweep_cache_files_are_byte_identical_across_identical_runs() {
+    // eviction determinism needs the stamps themselves to be
+    // deterministic: two identical cold sweeps (racing phase-2
+    // explorers included) must persist byte-identical cache files —
+    // the post-sweep re-stamp pass, not thread scheduling, decides the
+    // final LRU order
+    use cnn2gate::coordinator::pipeline::sweep_matrix_with;
+    use cnn2gate::dse::{Evaluator, Fidelity};
+
+    let models = [
+        zoo::build("alexnet", false).unwrap(),
+        zoo::build("vgg16", false).unwrap(),
+    ];
+    let run = |tag: &str| {
+        let ev = Evaluator::new(4);
+        sweep_matrix_with(
+            &ev,
+            &models,
+            Explorer::BruteForce,
+            Thresholds::default(),
+            Fidelity::Analytical,
+        )
+        .unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "cnn2gate-stamp-det-{}-{tag}.json",
+            std::process::id()
+        ));
+        ev.cache().save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        text
+    };
+    assert_eq!(run("a"), run("b"), "persisted LRU stamps must not depend on scheduling");
+}
+
+#[test]
+fn stepped_full_sweep_round_trips_warm_and_byte_identical() {
+    // PR-3 acceptance shape: the work-stealing sweep at full-network
+    // stepped fidelity, re-run against its own cache file, recomputes
+    // nothing and reproduces every table and every per-round census
+    use cnn2gate::coordinator::pipeline::sweep_matrix_with;
+    use cnn2gate::dse::{EvalCache, Evaluator, Fidelity};
+    use cnn2gate::report::sweep_table;
+    use std::sync::Arc;
+
+    let models = [zoo::build("lenet5", false).unwrap()];
+    let path = std::env::temp_dir().join(format!(
+        "cnn2gate-stepped-sweep-cache-{}.json",
+        std::process::id()
+    ));
+    let cold_ev = Evaluator::new(4);
+    let cold = sweep_matrix_with(
+        &cold_ev,
+        &models,
+        Explorer::BruteForce,
+        Thresholds::default(),
+        Fidelity::SteppedFullNetwork,
+    )
+    .unwrap();
+    cold_ev.cache().save(&path).unwrap();
+
+    let warm_ev = Evaluator::with_cache(4, Arc::new(EvalCache::load(&path).unwrap()));
+    let warm = sweep_matrix_with(
+        &warm_ev,
+        &models,
+        Explorer::BruteForce,
+        Thresholds::default(),
+        Fidelity::SteppedFullNetwork,
+    )
+    .unwrap();
+    assert_eq!(warm_ev.cache().stats().misses, 0, "census served from disk");
+    assert_eq!(sweep_table(&warm).render(), sweep_table(&cold).render());
+    for (w, c) in warm.entries.iter().zip(&cold.entries) {
+        assert_eq!(w.option(), c.option(), "{}", w.device);
+        assert_eq!(w.stepped_network, c.stepped_network, "{}", w.device);
+        if w.fits() {
+            assert!(w.stepped_network.is_some(), "{}", w.device);
+        }
+    }
     std::fs::remove_file(&path).ok();
 }
 
