@@ -12,7 +12,7 @@
 
 mod common;
 
-use cnn2gate::coordinator::pipeline::{self, sweep_matrix_with};
+use cnn2gate::coordinator::pipeline;
 use cnn2gate::dse::{brute, eval, EvalCache, Evaluation, Evaluator, Fidelity};
 use cnn2gate::estimator::device::ARRIA_10_GX1150;
 use cnn2gate::estimator::{estimate, Thresholds};
@@ -20,6 +20,7 @@ use cnn2gate::ir::ComputationFlow;
 use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
 use cnn2gate::runtime::Manifest;
+use cnn2gate::session::{CompileJob, Session};
 use cnn2gate::sim::{dominant_round_work, step_round, step_round_reference, RoundWork};
 use cnn2gate::synth::Explorer;
 use cnn2gate::util::json::{Json, JsonObj};
@@ -127,20 +128,24 @@ fn main() {
         &format!("full-network stepped candidate < 1 s ({:.1} ms)", t_cand * 1e3),
     );
 
-    // model×device sweep wall-clock through the work-stealing scheduler
+    // model×device sweep wall-clock through the session engine's
+    // work-stealing scheduler (an M×N CompileJob)
     let sweep_models = [
         zoo::build("alexnet", false).unwrap(),
         zoo::build("vgg16", false).unwrap(),
     ];
     let t0 = std::time::Instant::now();
-    let sweep_rep = sweep_matrix_with(
-        &Evaluator::new(eval::default_threads()),
-        &sweep_models,
-        Explorer::BruteForce,
-        Thresholds::default(),
-        Fidelity::Analytical,
-    )
-    .unwrap();
+    let session = Session::builder().threads(eval::default_threads()).build();
+    let sweep_rep = session
+        .run(
+            &CompileJob::builder()
+                .models(sweep_models)
+                .all_devices()
+                .explorer(Explorer::BruteForce)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
     let sweep_s = t0.elapsed().as_secs_f64();
     println!(
         "bench sweep/work-stealing(2 models x {} devices) {:>13} {:.3} s wall",

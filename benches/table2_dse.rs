@@ -22,7 +22,8 @@ use cnn2gate::ir::ComputationFlow;
 use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
 use cnn2gate::report::table2;
-use cnn2gate::synth::{self, Explorer};
+use cnn2gate::session::{CompileJob, Session};
+use cnn2gate::synth::Explorer;
 use common::Harness;
 
 /// Algorithm-1 reduction over an evaluated grid (order-preserving, so
@@ -118,9 +119,21 @@ fn main() {
     );
     h.check(wt < 5e-3, "warm exploration stays interactive (<5 ms)");
 
+    // one 1×3 CompileJob supplies the synth column for all three boards
+    let boards = [&CYCLONE_V_5CSEMA4, &CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150];
+    let session = Session::builder().build();
+    let outcome = session
+        .run(
+            &CompileJob::builder()
+                .model(graph)
+                .devices(boards)
+                .explorer(Explorer::BruteForce)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
     let mut reports = Vec::new();
-    for dev in [&CYCLONE_V_5CSEMA4, &CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150] {
-        let rep = synth::run(&graph, dev, Explorer::BruteForce, th, None).unwrap();
+    for (rep, dev) in outcome.entries.into_iter().zip(boards) {
         let rl_res = rl::explore(&flow, dev, th, RlConfig::default());
         let bf_res = brute::explore(&flow, dev, th);
         reports.push((rep, rl_res, bf_res));

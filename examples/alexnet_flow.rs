@@ -15,8 +15,9 @@ use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
 use cnn2gate::report::fig6;
 use cnn2gate::runtime::Manifest;
+use cnn2gate::session::{CompileJob, Session};
 use cnn2gate::sim::simulate;
-use cnn2gate::synth::{self, Explorer};
+use cnn2gate::synth::Explorer;
 use cnn2gate::util::table::fmt_duration;
 
 fn main() -> anyhow::Result<()> {
@@ -29,7 +30,17 @@ fn main() -> anyhow::Result<()> {
         flow.layers.len()
     );
 
-    for dev in [&CYCLONE_V_5CSEMA4, &CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150] {
+    // one session, one 1×3 job: every board's synth report in one run
+    let boards = [&CYCLONE_V_5CSEMA4, &CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150];
+    let session = Session::builder().build();
+    let outcome = session.run(
+        &CompileJob::builder()
+            .model(graph)
+            .devices(boards)
+            .explorer(Explorer::BruteForce)
+            .build()?,
+    )?;
+    for (rep, dev) in outcome.entries.iter().zip(boards) {
         println!("=== {} ===", dev.name);
         let bf = brute::explore(&flow, dev, th);
         let rl = rl::explore(&flow, dev, th, RlConfig::default());
@@ -47,7 +58,6 @@ fn main() -> anyhow::Result<()> {
             rl.queries,
             fmt_duration(rl.modeled_seconds)
         );
-        let rep = synth::run(&graph, dev, Explorer::BruteForce, th, None)?;
         match (&rep.estimate, &rep.sim) {
             (Some(est), Some(sim)) => {
                 println!(

@@ -11,7 +11,9 @@ use cnn2gate::estimator::{device, estimate, synthesis_minutes, Thresholds};
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::onnx::zoo;
 use cnn2gate::quant::{self, QuantSpec};
+use cnn2gate::session::{CompileJob, Session};
 use cnn2gate::sim::simulate;
+use cnn2gate::synth::Explorer;
 
 fn main() -> anyhow::Result<()> {
     // 1. A model: from the zoo here; onnx::parse_file reads the
@@ -66,6 +68,24 @@ fn main() -> anyhow::Result<()> {
         "predicted latency: {:.3} ms/frame ({:.2} GOp/s)",
         sim.total_millis,
         sim.gops / (sim.total_millis / 1e3)
+    );
+
+    // 6. Or all of the above through the one front door: a Session owns
+    //    the evaluator/cache/fidelity machinery, a CompileJob names the
+    //    models × devices, and `run` returns the whole outcome (here a
+    //    1×1 job — the same call scales to fleet fits and M×N sweeps).
+    let session = Session::builder().build();
+    let job = CompileJob::builder()
+        .model(zoo::build("lenet5", true).expect("zoo model"))
+        .device(dev)
+        .explorer(Explorer::BruteForce)
+        .quantize(QuantSpec::default())
+        .build()?;
+    let rep = session.run(&job)?.into_synth_report().expect("1x1 job");
+    println!(
+        "session front door agrees: H_best {:?}, {:.3} ms/frame",
+        rep.option().expect("fits"),
+        rep.latency_ms().expect("fits")
     );
     Ok(())
 }

@@ -4,13 +4,14 @@
 //! Run: `cargo run --release --example vgg_flow`
 
 use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA5};
-use cnn2gate::estimator::{estimate, Thresholds};
+use cnn2gate::estimator::estimate;
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
 use cnn2gate::report::{baselines, comparison_table};
+use cnn2gate::session::{CompileJob, Session};
 use cnn2gate::sim::simulate;
-use cnn2gate::synth::{self, Explorer};
+use cnn2gate::synth::Explorer;
 use cnn2gate::util::table::fmt_duration;
 
 fn main() -> anyhow::Result<()> {
@@ -23,21 +24,29 @@ fn main() -> anyhow::Result<()> {
         flow.fc_rounds()
     );
 
-    for dev in [&CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150] {
-        let rep = synth::run(&graph, dev, Explorer::Reinforcement, Thresholds::default(), None)?;
+    // one session, one 1×2 job: the new front door for the whole flow
+    let session = Session::builder().build();
+    let outcome = session.run(
+        &CompileJob::builder()
+            .model(graph)
+            .devices([&CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150])
+            .explorer(Explorer::Reinforcement)
+            .build()?,
+    )?;
+    for rep in &outcome.entries {
         match (&rep.estimate, &rep.sim) {
             (Some(_est), Some(sim)) => {
                 let gops = metrics::gops_per_s(sim.gops, sim.total_millis);
                 println!(
                     "{}: H_best {:?}  latency {}  {:.1} GOp/s  (efficiency {:.0}% of lane peak)",
-                    dev.name,
+                    rep.device,
                     rep.option().unwrap(),
                     fmt_duration(sim.total_millis / 1e3),
                     gops,
                     100.0 * sim.efficiency()
                 );
             }
-            _ => println!("{}: does not fit", dev.name),
+            _ => println!("{}: does not fit", rep.device),
         }
     }
 

@@ -1,8 +1,9 @@
 //! Hand-rolled CLI argument parsing (no clap in the offline crate set).
 //!
-//! Grammar: `cnn2gate <subcommand> [--flag value]... [--switch]...`
-//! Unknown flags are rejected against a per-subcommand allowlist so typos
-//! fail loudly instead of silently using defaults.
+//! Grammar: `cnn2gate <subcommand> [--flag value | --flag=value]...
+//! [--switch]...` — both value-flag spellings are accepted. Unknown
+//! flags are rejected against a per-subcommand allowlist so typos fail
+//! loudly instead of silently using defaults.
 
 use std::collections::HashMap;
 
@@ -32,16 +33,29 @@ impl Args {
             }
         }
         while let Some(arg) = it.next() {
-            let Some(name) = arg.strip_prefix("--") else {
+            let Some(token) = arg.strip_prefix("--") else {
                 bail!("unexpected positional argument '{arg}'");
             };
+            // `--flag=value` is the inline spelling of `--flag value`;
+            // only the first '=' splits, so values may contain '='
+            let (name, inline) = match token.split_once('=') {
+                Some((name, value)) => (name, Some(value)),
+                None => (token, None),
+            };
             if allowed_switches.contains(&name) {
+                if inline.is_some() {
+                    bail!("switch --{name} takes no value (got --{token})");
+                }
                 out.switches.push(name.to_string());
             } else if allowed.contains(&name) {
-                let value = it
-                    .next()
-                    .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
-                out.flags.insert(name.to_string(), value.clone());
+                let value = match inline {
+                    Some(value) => value.to_string(),
+                    None => it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?
+                        .clone(),
+                };
+                out.flags.insert(name.to_string(), value);
             } else {
                 bail!(
                     "unknown flag --{name} (value flags: {allowed:?}, switches: {allowed_switches:?})"
@@ -147,6 +161,45 @@ mod tests {
     fn rejects_unknown_flag() {
         let err = Args::parse(&sv(&["x", "--bogus", "1"]), &["model"], &[]).unwrap_err();
         assert!(err.to_string().contains("unknown flag"));
+    }
+
+    #[test]
+    fn accepts_equals_spelling_for_value_flags() {
+        let a = Args::parse(
+            &sv(&["synth", "--model=alexnet", "--device", "arria10", "--quantize"]),
+            &["model", "device"],
+            &["quantize"],
+        )
+        .unwrap();
+        assert_eq!(a.get("model"), Some("alexnet"));
+        assert_eq!(a.get("device"), Some("arria10"));
+        assert!(a.has("quantize"));
+        // values may themselves contain '=' (only the first splits)
+        let b = Args::parse(&sv(&["x", "--models=a=b,c"]), &["models"], &[]).unwrap();
+        assert_eq!(b.get("models"), Some("a=b,c"));
+        // an empty inline value is an explicit empty string
+        let c = Args::parse(&sv(&["x", "--model="]), &["model"], &[]).unwrap();
+        assert_eq!(c.get("model"), Some(""));
+        // both spellings agree
+        let d = Args::parse(
+            &sv(&["sweep", "--fidelity=stepped-full"]),
+            &["fidelity"],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(
+            d.get_choice("fidelity", &["analytical", "stepped", "stepped-full"], "analytical")
+                .unwrap(),
+            "stepped-full"
+        );
+    }
+
+    #[test]
+    fn rejects_equals_on_switches_and_unknown_equals_flags() {
+        let err = Args::parse(&sv(&["x", "--quantize=yes"]), &[], &["quantize"]).unwrap_err();
+        assert!(err.to_string().contains("takes no value"), "{err}");
+        let err = Args::parse(&sv(&["x", "--bogus=1"]), &["model"], &[]).unwrap_err();
+        assert!(err.to_string().contains("unknown flag --bogus"), "{err}");
     }
 
     #[test]

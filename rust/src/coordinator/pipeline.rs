@@ -4,43 +4,29 @@
 //! → DSE + fit on the target device → simulated synthesis + latency →
 //! optional emulation-mode numerics check against the AOT artifacts.
 //!
-//! [`fit_fleet`] is the multi-device variant: one model fitted against
-//! every device in the database concurrently (scoped fan-out via
-//! [`crate::dse::eval::parallel_map`]; the per-device explorers share
-//! the process-wide estimator memo underneath), for the `fit-fleet`
-//! CLI subcommand and the fleet comparison table.
-//!
-//! [`sweep_matrix`] generalizes the fleet fit to a full model×device
-//! matrix — every model from the fixtures (or any ONNX-subset input)
-//! against every device in the database — for the `sweep` subcommand,
-//! with best-device-per-model / best-model-per-device rankings and a
-//! matrix-wide latency/resource Pareto frontier. Both fan-outs accept a
-//! caller-provided [`Evaluator`], so a disk-seeded estimator memo
-//! (`--cache-file`) warms every pair in the run.
-//!
-//! The sweep schedules in two phases: a **work-stealing prewarm** over
-//! `(model, device, candidate-chunk)` items ([`super::scheduler`])
-//! scores every candidate into the shared memo — chunk granularity means
-//! a VGG-16-sized grid next to an AlexNet-sized one no longer parks the
-//! imbalance on one worker, which matters ~100x more at stepped
-//! fidelity — and then the per-pair explorers run in deterministic
-//! model-major order, answered entirely from the memo, so the matrix,
-//! rankings and Pareto tables render byte-identically to a sequential
-//! (or warm-cache) run.
+//! The multi-target fan-outs — [`fit_fleet`] (one model × every device)
+//! and [`sweep_matrix`] (models × devices, with rankings and the Pareto
+//! frontier) — are shapes of one job since PR 4: a [`CompileJob`]
+//! executed by [`Session::run`] on the two-phase work-stealing engine
+//! ([`crate::session`]). The free functions here
+//! survive as deprecated shims over that same engine, so they stay
+//! bit-identical to the session path (pinned by the shim tests); the
+//! report structs ([`FleetReport`], [`SweepReport`]) remain the legacy
+//! views an [`Outcome`](crate::session::Outcome) can still render to.
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::dse::{eval, Evaluator, Fidelity, OptionSpace};
+use crate::dse::{eval, Evaluator, Fidelity};
 use crate::estimator::{device, Device, Thresholds};
-use crate::ir::{ComputationFlow, Graph};
+use crate::ir::DType;
+use crate::ir::Graph;
 use crate::onnx::{parser, zoo};
 use crate::quant::QuantSpec;
 use crate::runtime::{load_golden, Manifest, Runtime, Tensor};
-use crate::synth::{self, Explorer, SynthReport};
-use crate::ir::DType;
+use crate::session::{CompileJob, Session};
+use crate::synth::{Explorer, SynthReport};
 
 /// What to run.
 #[derive(Debug, Clone)]
@@ -107,13 +93,28 @@ pub fn load_device(name: &str) -> Result<&'static Device> {
     })
 }
 
-/// Run the full pipeline.
+/// Run the full pipeline: a 1×1 [`CompileJob`] through a default
+/// [`Session`], plus the optional emulation check.
 pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineResult> {
     let graph = load_model(&cfg.model, cfg.quantize)?;
     let dev = load_device(&cfg.device)?;
-    let spec = QuantSpec::default();
-    let quant_spec = (cfg.quantize && graph.has_weights()).then_some(&spec);
-    let synth = synth::run(&graph, dev, cfg.explorer, cfg.thresholds, quant_spec)?;
+    let quantize = cfg.quantize && graph.has_weights();
+    let session = Session::builder().thresholds(cfg.thresholds).build();
+    let mut builder = CompileJob::builder()
+        .model(graph)
+        .device(dev)
+        .explorer(cfg.explorer);
+    if quantize {
+        builder = builder.quantize(QuantSpec::default());
+    }
+    let job = builder.build()?;
+    let synth = session
+        .run(&job)?
+        .into_synth_report()
+        .expect("a 1x1 job yields exactly one report");
+    // the job owned the graph; take it back for the result
+    let CompileJob { mut models, .. } = job;
+    let graph = models.pop().expect("the 1x1 job holds the model");
 
     let emulation = match &cfg.artifacts {
         Some(dir) => run_emulation(dir, &graph.name)?,
@@ -156,56 +157,79 @@ impl FleetReport {
     }
 }
 
-/// Fit `graph` on every device in [`device::all`] concurrently: each
-/// device gets the full DSE + fit + synthesis-time + latency flow on its
-/// own scoped thread, while all of them score candidates through the
-/// shared estimator memo (so the fleet costs each unique candidate
-/// once). Entries come back in database order.
+/// The shared body of the fleet shims: a 1×N job on the session engine.
+fn fleet_via_engine(
+    evaluator: &Evaluator,
+    graph: &Graph,
+    explorer: Explorer,
+    thresholds: Thresholds,
+) -> Result<FleetReport> {
+    let devices = device::all();
+    let run = crate::session::execute(
+        evaluator,
+        std::slice::from_ref(graph),
+        &devices,
+        explorer,
+        thresholds,
+        None,
+        Fidelity::Analytical,
+    )?;
+    Ok(FleetReport {
+        model: graph.name.clone(),
+        explorer,
+        entries: run.entries,
+        wall_seconds: run.wall_seconds,
+    })
+}
+
+/// The shared body of the sweep shims: an M×N job on the session engine.
+fn sweep_via_engine(
+    evaluator: &Evaluator,
+    graphs: &[Graph],
+    explorer: Explorer,
+    thresholds: Thresholds,
+    fidelity: Fidelity,
+) -> Result<SweepReport> {
+    let run = crate::session::execute(
+        evaluator,
+        graphs,
+        &device::all(),
+        explorer,
+        thresholds,
+        None,
+        fidelity,
+    )?;
+    Ok(SweepReport {
+        explorer,
+        models: graphs.iter().map(|g| g.name.clone()).collect(),
+        entries: run.entries,
+        wall_seconds: run.wall_seconds,
+    })
+}
+
+/// Fit `graph` on every device in [`device::all`] concurrently on the
+/// session engine's work-stealing deques; all per-device explorers score
+/// candidates through the shared estimator memo (so the fleet costs each
+/// unique candidate once). Entries come back in database order.
+#[deprecated(note = "use a 1xN cnn2gate::session::CompileJob (all_devices) with Session::run")]
 pub fn fit_fleet(
     graph: &Graph,
     explorer: Explorer,
     thresholds: Thresholds,
 ) -> Result<FleetReport> {
-    fit_fleet_with(eval::global(), graph, explorer, thresholds)
+    fleet_via_engine(eval::global(), graph, explorer, thresholds)
 }
 
 /// [`fit_fleet`] through a caller-provided evaluator (the `--cache-file`
-/// CLI path seeds one from disk so repeat fleet fits start warm).
+/// CLI path used to seed one from disk before sessions owned it).
+#[deprecated(note = "use cnn2gate::session::Session, which owns the evaluator and cache")]
 pub fn fit_fleet_with(
     evaluator: &Evaluator,
     graph: &Graph,
     explorer: Explorer,
     thresholds: Thresholds,
 ) -> Result<FleetReport> {
-    let t0 = Instant::now();
-    let devices = device::all();
-    let results = eval::parallel_map(&devices, devices.len(), |&dev| {
-        synth::run_with(evaluator, graph, dev, explorer, thresholds, None)
-    });
-    let mut entries = Vec::with_capacity(results.len());
-    for result in results {
-        entries.push(result?);
-    }
-    // the concurrent explorers above tick LRU generations in whatever
-    // order the scheduler ran them; re-stamp the touched grids in
-    // database order so the decision-making (highest) stamps — and
-    // therefore --cache-max-entries eviction and the saved cache bytes —
-    // are deterministic. touch_present never computes, so RL fleets
-    // (which visit only a trajectory subset) stay untouched elsewhere.
-    if let Ok(flow) = ComputationFlow::extract(graph) {
-        let pairs = OptionSpace::from_flow(&flow).pairs();
-        for &dev in &devices {
-            evaluator
-                .cache()
-                .touch_present(&flow, dev, &pairs, Fidelity::Analytical);
-        }
-    }
-    Ok(FleetReport {
-        model: graph.name.clone(),
-        explorer,
-        entries,
-        wall_seconds: t0.elapsed().as_secs_f64(),
-    })
+    fleet_via_engine(evaluator, graph, explorer, thresholds)
 }
 
 /// Every (model, device) pair explored: the fleet fit generalized to the
@@ -295,30 +319,19 @@ impl SweepReport {
 
 /// Explore every (model, device) pair through the process-wide
 /// evaluator at analytical fidelity. See [`sweep_matrix_with`].
+#[deprecated(note = "use an MxN cnn2gate::session::CompileJob with Session::run")]
 pub fn sweep_matrix(
     graphs: &[Graph],
     explorer: Explorer,
     thresholds: Thresholds,
 ) -> Result<SweepReport> {
-    sweep_matrix_with(eval::global(), graphs, explorer, thresholds, Fidelity::Analytical)
+    sweep_via_engine(eval::global(), graphs, explorer, thresholds, Fidelity::Analytical)
 }
 
-/// Candidates per work-stealing prewarm item. Small enough that a
-/// VGG-16-sized grid splits across several workers, big enough that the
-/// deque traffic stays negligible against even an analytical candidate.
-const SWEEP_CHUNK: usize = 4;
-
-/// Explore every (model, device) pair through `evaluator` at `fidelity`.
-///
-/// Phase 1 fans a **work-stealing deque** of `(model, device,
-/// candidate-chunk)` items across scoped workers
-/// ([`super::scheduler::work_steal_map`]): every candidate of every
-/// pair's option grid is scored straight into the shared memo, and
-/// skewed model sizes rebalance at chunk granularity instead of leaving
-/// workers idle. Phase 2 runs the per-pair explorers (answered entirely
-/// from the memo) and merges entries model-major in input order, so the
-/// report is byte-identical to a sequential — or disk-warmed
-/// (`--cache-file`) — run.
+/// Explore every (model, device) pair through `evaluator` at `fidelity`
+/// on the session engine (work-stealing prewarm, hit-only explorers,
+/// deterministic model-major entries — see [`crate::session`]).
+#[deprecated(note = "use cnn2gate::session::Session (fidelity + evaluator live on the builder)")]
 pub fn sweep_matrix_with(
     evaluator: &Evaluator,
     graphs: &[Graph],
@@ -326,74 +339,7 @@ pub fn sweep_matrix_with(
     thresholds: Thresholds,
     fidelity: Fidelity,
 ) -> Result<SweepReport> {
-    if graphs.is_empty() {
-        return Err(anyhow!("sweep needs at least one model"));
-    }
-    let t0 = Instant::now();
-    let devices = device::all();
-
-    // phase 1: prewarm the memo over (model, device, candidate-chunk)
-    // work items. One LRU generation for the whole prewarm, so worker
-    // completion order can't perturb the persisted cache stamps. The
-    // prewarm deliberately scores the FULL grid even for the RL
-    // explorer (which visits only a trajectory subset): grids are
-    // capped at 12 options, and full presence is what makes phase 2
-    // hit-only — the source of both the load balancing and the
-    // deterministic-output guarantee. The few untraversed candidates
-    // are the price of that, not an accident.
-    let flows: Vec<ComputationFlow> = graphs
-        .iter()
-        .map(|g| ComputationFlow::extract(g).map_err(|e| anyhow!("flow extraction: {e}")))
-        .collect::<Result<_>>()?;
-    let mut chunks: Vec<(usize, &'static Device, Vec<(usize, usize)>)> = Vec::new();
-    for (mi, flow) in flows.iter().enumerate() {
-        let pairs = OptionSpace::from_flow(flow).pairs();
-        for &dev in &devices {
-            for chunk in pairs.chunks(SWEEP_CHUNK) {
-                chunks.push((mi, dev, chunk.to_vec()));
-            }
-        }
-    }
-    let stamp = evaluator.cache().tick();
-    let width = chunks.len().min(eval::default_threads());
-    super::scheduler::work_steal_map(&chunks, width, |(mi, dev, options)| {
-        for &(ni, nl) in options {
-            evaluator
-                .cache()
-                .get_or_compute_at(stamp, &flows[*mi], dev, ni, nl, fidelity);
-        }
-    });
-
-    // phase 2: per-pair explorers in deterministic model-major order —
-    // every query is a memo hit, so this is report assembly, not work
-    let pairs: Vec<(&Graph, &'static Device)> = graphs
-        .iter()
-        .flat_map(|g| devices.iter().map(move |&d| (g, d)))
-        .collect();
-    let width = pairs.len().min(2 * eval::default_threads());
-    let results = eval::parallel_map(&pairs, width, |&(graph, dev)| {
-        synth::run_with_fidelity(evaluator, graph, dev, explorer, thresholds, None, fidelity)
-    });
-    let mut entries = Vec::with_capacity(results.len());
-    for result in results {
-        entries.push(result?);
-    }
-    // phase 2's concurrent explorers tick LRU generations in scheduler
-    // order; re-stamp every pair's grid model-major so the final
-    // (decision-making) stamps are deterministic — the prewarm
-    // guarantees every grid entry is present, so this never computes
-    for flow in &flows {
-        let grid = OptionSpace::from_flow(flow).pairs();
-        for &dev in &devices {
-            evaluator.cache().touch_present(flow, dev, &grid, fidelity);
-        }
-    }
-    Ok(SweepReport {
-        explorer,
-        models: graphs.iter().map(|g| g.name.clone()).collect(),
-        entries,
-        wall_seconds: t0.elapsed().as_secs_f64(),
-    })
+    sweep_via_engine(evaluator, graphs, explorer, thresholds, fidelity)
 }
 
 /// Emulation mode: run the AOT HLO through PJRT; replay the golden when
@@ -496,8 +442,11 @@ pub fn time_emulation_synthetic(
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shims are exactly what these tests pin
+
     use super::*;
     use crate::ir::ComputationFlow;
+    use crate::synth;
 
     #[test]
     fn zoo_pipeline_runs_end_to_end() {
@@ -511,6 +460,7 @@ mod tests {
         assert!(res.synth.fits());
         assert_eq!(res.synth.option(), Some((16, 32)));
         assert!(res.synth.quant.is_some());
+        assert_eq!(res.graph.name, "alexnet", "the job hands the graph back");
     }
 
     #[test]

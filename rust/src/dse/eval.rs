@@ -492,7 +492,7 @@ fn json_safe(e: &Evaluation, last_used: u64) -> bool {
     ints_ok && floats_ok
 }
 
-fn est_to_json(e: &ResourceEstimate) -> Json {
+pub(crate) fn est_to_json(e: &ResourceEstimate) -> Json {
     let mut o = JsonObj::new();
     o.insert("ni", e.ni.into());
     o.insert("nl", e.nl.into());
@@ -554,7 +554,7 @@ fn layer_from_json(v: &Json) -> Result<LayerTiming, String> {
     })
 }
 
-fn sim_to_json(s: &SimReport) -> Json {
+pub(crate) fn sim_to_json(s: &SimReport) -> Json {
     let mut o = JsonObj::new();
     o.insert("model", s.model.as_str().into());
     o.insert("device", s.device.as_str().into());
@@ -613,7 +613,7 @@ fn step_from_json(v: &Json) -> Result<StepReport, String> {
     })
 }
 
-fn net_to_json(n: &NetworkStepReport) -> Json {
+pub(crate) fn net_to_json(n: &NetworkStepReport) -> Json {
     let mut o = JsonObj::new();
     o.insert("fmax_mhz", n.fmax_mhz.into());
     o.insert("layers", Json::Arr(n.layers.iter().map(step_to_json).collect()));

@@ -4,15 +4,38 @@
 //! FPGA — Ghaffari & Savaria, 2020 — rebuilt as a three-layer Rust + JAX
 //! + Pallas stack with simulated hardware substrates (see DESIGN.md).
 //!
+//! ## The front door: [`session`]
+//!
+//! The whole parse → quantize → DSE → synth flow sits behind one typed
+//! entry point. A [`session::Session`] (built via
+//! [`session::SessionBuilder`]) owns the run-scoped machinery — the
+//! [`dse::Evaluator`] worker pool + estimator memo, the
+//! [`session::CachePolicy`] disk lifecycle, the [`dse::Fidelity`] and
+//! [`estimator::Thresholds`] — and a [`session::CompileJob`] names the
+//! work: models × devices × [`synth::Explorer`] × optional
+//! [`quant::QuantSpec`]. [`session::Session::run`] executes the job on
+//! a two-phase work-stealing engine ([`coordinator::scheduler`]) and
+//! returns a [`session::Outcome`] whose 1×1, 1×N and M×N shapes are the
+//! classic synth report, fleet fit and model×device sweep — plus a
+//! stable machine-readable [`session::Outcome::to_json`] document
+//! (`--json` on the CLI). The pre-session free functions
+//! ([`synth::run`], [`coordinator::pipeline::fit_fleet`],
+//! [`coordinator::pipeline::sweep_matrix`] and their `_with` variants)
+//! survive as deprecated shims over the same engine, pinned
+//! bit-identical by tests.
+//!
+//! ## The layers underneath
+//!
 //! Pipeline: [`onnx`] parses a model into the [`ir`] graph; [`quant`]
 //! applies the user-given fixed-point formats; [`dse`] explores the
 //! `(N_i, N_l)` parallelism options against the [`estimator`]'s resource
-//! model; [`synth`] orchestrates the (simulated) synthesis flow; [`sim`]
+//! model; [`synth`] defines the per-target synthesis report; [`sim`]
 //! executes the deeply pipelined kernel architecture cycle-by-cycle for
 //! latency; [`runtime`] runs the AOT-compiled JAX/Pallas emulation path
 //! on the PJRT CPU client (behind the `pjrt` feature; the default build
-//! substitutes an API-identical stub); [`coordinator`] wires it all into
-//! the end-to-end flow the CLI and examples drive.
+//! substitutes an API-identical stub); [`coordinator`] wires model
+//! loading, the legacy report views and the emulation-inference server
+//! into the end-to-end flow the CLI and examples drive.
 //!
 //! Exploration scales through [`dse::eval`], the shared evaluation
 //! core: a `std::thread` + channel worker pool fans candidate scoring
@@ -28,15 +51,12 @@
 //! ([`sim::step_round`]) fast-forwards steady-state stretches in closed
 //! form — bit-identical to the naive stepper, orders of magnitude
 //! faster — which makes [`dse::Fidelity::SteppedFullNetwork`] (every
-//! round stepped, per-layer stall census) usable inside DSE loops. On
-//! top of it, [`coordinator::pipeline::fit_fleet`] (CLI: `fit-fleet`)
-//! fits one model against every device in [`estimator::device`]
-//! concurrently, and [`coordinator::pipeline::sweep_matrix`] (CLI:
-//! `sweep`) explores the full model×device matrix on a work-stealing
-//! scheduler ([`coordinator::scheduler`]), rendered via
-//! [`report::tables::sweep_table`] with best-device-per-model /
-//! best-model-per-device rankings and the latency/resource Pareto
-//! frontier.
+//! round stepped, per-layer stall census) usable inside DSE loops.
+//! Every session run — fleet fits and the RL agents' episode batches
+//! included — rides [`coordinator::scheduler`]'s work-stealing deques,
+//! rendered via [`report::tables::sweep_table`] with
+//! best-device-per-model / best-model-per-device rankings and the
+//! latency/resource Pareto frontier.
 
 pub mod cli;
 pub mod coordinator;
@@ -48,6 +68,7 @@ pub mod onnx;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod synth;
 pub mod testkit;

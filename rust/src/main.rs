@@ -11,65 +11,233 @@
 //!   tables    regenerate the paper's Tables 1-4 + Fig. 6
 //!   devices   list the FPGA device database
 //!
-//! `dse`, `fit-fleet` and `sweep` accept `--cache-file F`: the estimator
-//! memo is seeded from F when it exists (corrupt or stale files warn and
-//! start cold) and written back on success, so repeat explorations across
-//! processes start warm.
+//! Every subcommand is declared once in [`SUBCOMMANDS`]: its flag
+//! allowlist, its switches and its USAGE line all derive from the same
+//! registry entry, so help text can't drift from what actually parses.
+//! The `synth`/`fit-fleet`/`sweep` flows are thin adapters over
+//! [`cnn2gate::session`]: flags build a [`Session`] + [`CompileJob`],
+//! `session.run(&job)` does the work, and `--json` renders the
+//! [`Outcome`](cnn2gate::session::Outcome) as a stable machine-readable
+//! document instead of tables.
 
 use anyhow::{anyhow, bail, Result};
 
 use cnn2gate::cli::Args;
 use cnn2gate::coordinator::{pipeline, InferenceServer, ServerConfig};
-use cnn2gate::dse::{brute, eval, rl, EvalCache, Evaluator, Fidelity, RlConfig};
-use cnn2gate::estimator::{device, estimate, Thresholds};
+use cnn2gate::dse::{brute, rl, Fidelity, RlConfig};
+use cnn2gate::estimator::{device, estimate};
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
+use cnn2gate::quant::QuantSpec;
 use cnn2gate::report::{
     baselines, comparison_table, fig6, fleet_table, stepped_census_table,
     sweep_best_device_table, sweep_best_model_table, sweep_pareto_table, sweep_table, table1,
     table2,
 };
 use cnn2gate::runtime::{load_golden, Manifest, Tensor};
+use cnn2gate::session::{CompileJob, Session, SessionBuilder};
 use cnn2gate::sim::simulate;
-use cnn2gate::synth::{self, Explorer};
+use cnn2gate::synth::Explorer;
 use cnn2gate::util::rng::Rng;
 use cnn2gate::util::table::fmt_duration;
 
-const USAGE: &str = "\
-cnn2gate — CNN2Gate reproduction (Rust + JAX + Pallas)
+// ---------------------------------------------------------------------------
+// Declarative subcommand registry: one entry per subcommand drives the
+// parser allowlist AND the generated USAGE text.
+// ---------------------------------------------------------------------------
 
-USAGE:
-  cnn2gate info      --model <zoo|file.json>
-  cnn2gate dse       --model <m> --device <d> [--explorer rl|bf] [--seed N]
-                     [--fidelity analytical|stepped|stepped-full]
-                     [--threads N] [--seq] [--cache-file F]
-                     [--cache-max-entries N]
-  cnn2gate fit-fleet --model <m> [--explorer rl|bf] [--threads N]
-                     [--cache-file F] [--cache-max-entries N]
-  cnn2gate sweep     [--models m1,m2,...] [--explorer rl|bf] [--threads N]
-                     [--fidelity analytical|stepped|stepped-full]
-                     [--cache-file F] [--cache-max-entries N]
-  cnn2gate synth     --model <m> --device <d> [--explorer rl|bf] [--quantize]
-                     [--report]
-  cnn2gate emulate   --model <m> [--artifacts DIR]
-  cnn2gate serve     --model <m> [--artifacts DIR] [--requests N] [--batch B]
-  cnn2gate tables    [--artifacts DIR]
-  cnn2gate devices
+/// A value-taking flag: `--name <value>`.
+struct FlagSpec {
+    name: &'static str,
+    /// Placeholder shown in USAGE (e.g. `<m>`, `rl|bf`).
+    value: &'static str,
+    /// Required flags render bare; optional ones render in brackets.
+    required: bool,
+}
 
+const fn req(name: &'static str, value: &'static str) -> FlagSpec {
+    FlagSpec {
+        name,
+        value,
+        required: true,
+    }
+}
+
+const fn opt(name: &'static str, value: &'static str) -> FlagSpec {
+    FlagSpec {
+        name,
+        value,
+        required: false,
+    }
+}
+
+struct Subcommand {
+    name: &'static str,
+    flags: &'static [FlagSpec],
+    switches: &'static [&'static str],
+    run: fn(&Args) -> Result<()>,
+}
+
+static SUBCOMMANDS: &[Subcommand] = &[
+    Subcommand {
+        name: "info",
+        flags: &[req("model", "<zoo|file.json>")],
+        switches: &[],
+        run: cmd_info,
+    },
+    Subcommand {
+        name: "dse",
+        flags: &[
+            req("model", "<m>"),
+            opt("device", "<d>"),
+            opt("explorer", "rl|bf"),
+            opt("fidelity", "analytical|stepped|stepped-full"),
+            opt("seed", "N"),
+            opt("threads", "N"),
+            opt("cache-file", "F"),
+            opt("cache-max-entries", "N"),
+            opt("max-lut", "<pct>"),
+            opt("max-dsp", "<pct>"),
+            opt("max-mem", "<pct>"),
+            opt("max-reg", "<pct>"),
+        ],
+        switches: &["seq"],
+        run: cmd_dse,
+    },
+    Subcommand {
+        name: "fit-fleet",
+        flags: &[
+            req("model", "<m>"),
+            opt("explorer", "rl|bf"),
+            opt("fidelity", "analytical|stepped|stepped-full"),
+            opt("threads", "N"),
+            opt("cache-file", "F"),
+            opt("cache-max-entries", "N"),
+            opt("max-lut", "<pct>"),
+            opt("max-dsp", "<pct>"),
+            opt("max-mem", "<pct>"),
+            opt("max-reg", "<pct>"),
+        ],
+        switches: &["json"],
+        run: cmd_fit_fleet,
+    },
+    Subcommand {
+        name: "sweep",
+        flags: &[
+            opt("models", "m1,m2,..."),
+            opt("explorer", "rl|bf"),
+            opt("fidelity", "analytical|stepped|stepped-full"),
+            opt("threads", "N"),
+            opt("cache-file", "F"),
+            opt("cache-max-entries", "N"),
+            opt("max-lut", "<pct>"),
+            opt("max-dsp", "<pct>"),
+            opt("max-mem", "<pct>"),
+            opt("max-reg", "<pct>"),
+        ],
+        switches: &["json"],
+        run: cmd_sweep,
+    },
+    Subcommand {
+        name: "synth",
+        flags: &[
+            req("model", "<m>"),
+            opt("device", "<d>"),
+            opt("explorer", "rl|bf"),
+            opt("threads", "N"),
+            opt("cache-file", "F"),
+            opt("cache-max-entries", "N"),
+            opt("max-lut", "<pct>"),
+            opt("max-dsp", "<pct>"),
+            opt("max-mem", "<pct>"),
+            opt("max-reg", "<pct>"),
+        ],
+        switches: &["quantize", "report", "json"],
+        run: cmd_synth,
+    },
+    Subcommand {
+        name: "emulate",
+        flags: &[req("model", "<m>"), opt("artifacts", "DIR")],
+        switches: &[],
+        run: cmd_emulate,
+    },
+    Subcommand {
+        name: "serve",
+        flags: &[
+            opt("model", "<m>"),
+            opt("artifacts", "DIR"),
+            opt("requests", "N"),
+            opt("batch", "B"),
+        ],
+        switches: &[],
+        run: cmd_serve,
+    },
+    Subcommand {
+        name: "tables",
+        flags: &[opt("artifacts", "DIR")],
+        switches: &[],
+        run: cmd_tables,
+    },
+    Subcommand {
+        name: "devices",
+        flags: &[],
+        switches: &[],
+        run: cmd_devices,
+    },
+];
+
+const USAGE_FOOTER: &str = "\
 MODELS: tiny lenet5 alexnet vgg16 (or a cnn2gate-onnx-subset .json file)
 DEVICES: 5csema4 5csema5 arria10 stratixv
 
-`--fidelity stepped` runs the cycle-accurate simulator on each candidate's
-dominant round; `stepped-full` steps every round (epoch skip-ahead engine).
-`synth --report` prints the chosen design's per-layer stall/backpressure
-census. `--cache-max-entries N` LRU-evicts the --cache-file before saving.
+Flags accept both `--flag value` and `--flag=value`. `--fidelity stepped`
+runs the cycle-accurate simulator on each candidate's dominant round;
+`stepped-full` steps every round (epoch skip-ahead engine). `synth
+--report` prints the chosen design's per-layer stall/backpressure census.
+`--cache-max-entries N` LRU-evicts the --cache-file before saving.
+`--json` on synth/fit-fleet/sweep emits the stable machine-readable
+outcome document instead of tables.
 ";
+
+/// The USAGE text, generated from [`SUBCOMMANDS`] so it cannot drift
+/// from the flags the parser actually accepts.
+fn usage() -> String {
+    let mut out =
+        String::from("cnn2gate — CNN2Gate reproduction (Rust + JAX + Pallas)\n\nUSAGE:\n");
+    for cmd in SUBCOMMANDS {
+        let prefix = format!("  cnn2gate {:<9}", cmd.name);
+        let indent = " ".repeat(prefix.len() + 1);
+        let mut tokens: Vec<String> = Vec::new();
+        for f in cmd.flags {
+            let t = format!("--{} {}", f.name, f.value);
+            tokens.push(if f.required { t } else { format!("[{t}]") });
+        }
+        for s in cmd.switches {
+            tokens.push(format!("[--{s}]"));
+        }
+        let mut line = prefix;
+        for (i, t) in tokens.iter().enumerate() {
+            if i > 0 && line.len() + 1 + t.len() > 78 {
+                out.push_str(line.trim_end());
+                out.push('\n');
+                line = indent.clone();
+            }
+            line.push(' ');
+            line.push_str(t);
+        }
+        out.push_str(line.trim_end());
+        out.push('\n');
+    }
+    out.push('\n');
+    out.push_str(USAGE_FOOTER);
+    out
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
-        print!("{USAGE}");
+        print!("{}", usage());
         return;
     }
     if let Err(e) = dispatch(&argv) {
@@ -78,125 +246,73 @@ fn main() {
     }
 }
 
-fn thresholds_from(args: &Args) -> Result<Thresholds> {
-    Ok(Thresholds {
-        lut: args.get_f64("max-lut", 101.0)?,
-        dsp: args.get_f64("max-dsp", 101.0)?,
-        mem: args.get_f64("max-mem", 101.0)?,
-        reg: args.get_f64("max-reg", 101.0)?,
-    })
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = SUBCOMMANDS.iter().find(|c| c.name == argv[0]) else {
+        bail!("unknown subcommand '{}'\n\n{}", argv[0], usage());
+    };
+    let flags: Vec<&str> = cmd.flags.iter().map(|f| f.name).collect();
+    let args = Args::parse(argv, &flags, cmd.switches)?;
+    (cmd.run)(&args)
 }
 
-fn explorer_from(args: &Args) -> Result<Explorer> {
-    match args.get_or("explorer", "rl") {
-        "rl" => Ok(Explorer::Reinforcement),
-        "bf" => Ok(Explorer::BruteForce),
-        other => bail!("--explorer must be rl or bf, got '{other}'"),
+// ---------------------------------------------------------------------------
+// Session plumbing shared by the compile-flow subcommands
+// ---------------------------------------------------------------------------
+
+/// Build the session every compile-flow subcommand runs through, from
+/// the same flags ([`SessionBuilder::from_args`]), surfacing any cache
+/// load warning on stderr. `fidelity` overrides the flag-derived value
+/// (the `synth --report` upgrade).
+fn open_session_at(args: &Args, fidelity: Option<Fidelity>) -> Result<Session> {
+    let mut builder = SessionBuilder::from_args(args)?;
+    if let Some(f) = fidelity {
+        builder = builder.fidelity(f);
     }
+    let session = builder.build();
+    if let Some(w) = session.load_warning() {
+        eprintln!("warning: {w}");
+    }
+    Ok(session)
 }
 
-fn fidelity_from(args: &Args) -> Result<Fidelity> {
-    Ok(
-        match args.get_choice(
-            "fidelity",
-            &["analytical", "stepped", "stepped-full"],
-            "analytical",
-        )? {
-            "stepped" => Fidelity::SteppedDominantRound,
-            "stepped-full" => Fidelity::SteppedFullNetwork,
-            _ => Fidelity::Analytical,
-        },
+fn open_session(args: &Args) -> Result<Session> {
+    open_session_at(args, None)
+}
+
+/// Persist the session memo per its cache policy. `json` routes the
+/// human-readable notes to stderr so `--json` keeps stdout parseable.
+fn close_session(session: &Session, json: bool) -> Result<()> {
+    let save = session.close()?;
+    let note = |msg: String| {
+        if json {
+            eprintln!("{msg}");
+        } else {
+            println!("{msg}");
+        }
+    };
+    if save.evicted > 0 {
+        note(format!(
+            "cache: evicted {} least-recently-used entries (--cache-max-entries {})",
+            save.evicted,
+            session.cache_policy().max_entries
+        ));
+    }
+    if let Some((written, path)) = save.written {
+        note(format!("cache: {written} entries saved to {}", path.display()));
+    }
+    Ok(())
+}
+
+fn scheduler_line(outcome: &cnn2gate::session::Outcome) -> String {
+    format!(
+        "scheduler: {} items, {} steals on {} workers",
+        outcome.steals.executed, outcome.steals.steals, outcome.steals.workers
     )
 }
 
-fn dispatch(argv: &[String]) -> Result<()> {
-    let flags = [
-        "model", "models", "device", "explorer", "fidelity", "artifacts", "requests", "batch",
-        "seed", "threads", "cache-file", "cache-max-entries", "max-lut", "max-dsp", "max-mem",
-        "max-reg",
-    ];
-    let switches = ["quantize", "verbose", "seq", "report"];
-    let args = Args::parse(argv, &flags, &switches)?;
-    match args.subcommand.as_str() {
-        "info" => cmd_info(&args),
-        "dse" => cmd_dse(&args),
-        "fit-fleet" => cmd_fit_fleet(&args),
-        "sweep" => cmd_sweep(&args),
-        "synth" => cmd_synth(&args),
-        "emulate" => cmd_emulate(&args),
-        "serve" => cmd_serve(&args),
-        "tables" => cmd_tables(&args),
-        "devices" => cmd_devices(),
-        other => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
-    }
-}
-
-/// The evaluator a subcommand scores candidates through, plus the
-/// optional `--cache-file` it persists the memo back to.
-///
-/// With `--cache-file F` the session gets a private evaluator whose memo
-/// is seeded from F (tolerantly: a missing file starts cold silently, a
-/// corrupt or stale one warns and starts cold — it is never trusted).
-/// With only `--threads N` the pool is private but the memo starts cold;
-/// with neither, the process-global evaluator is shared.
-struct EvalSession {
-    evaluator: Option<Evaluator>,
-    cache_file: Option<std::path::PathBuf>,
-    /// `--cache-max-entries`: LRU-evict down to this before saving
-    /// (0 = unlimited).
-    cache_max_entries: usize,
-}
-
-impl EvalSession {
-    fn open(args: &Args) -> Result<EvalSession> {
-        let threads = args.get_usize("threads", 0)?;
-        let cache_file = args.get("cache-file").map(std::path::PathBuf::from);
-        let cache_max_entries = args.get_usize("cache-max-entries", 0)?;
-        let evaluator = match (&cache_file, threads) {
-            (None, 0) => None,
-            (None, n) => Some(Evaluator::new(n)),
-            (Some(path), n) => {
-                let (cache, warning) = EvalCache::load_or_cold(path);
-                if let Some(w) = warning {
-                    eprintln!("warning: {w}");
-                }
-                let n = if n == 0 { eval::default_threads() } else { n };
-                Some(Evaluator::with_cache(n, std::sync::Arc::new(cache)))
-            }
-        };
-        Ok(EvalSession {
-            evaluator,
-            cache_file,
-            cache_max_entries,
-        })
-    }
-
-    fn evaluator(&self) -> &Evaluator {
-        match &self.evaluator {
-            Some(ev) => ev,
-            None => eval::global(),
-        }
-    }
-
-    /// Persist the memo back to `--cache-file`, when one was given,
-    /// LRU-evicting first when `--cache-max-entries` bounds the file.
-    fn close(&self) -> Result<()> {
-        if let Some(path) = &self.cache_file {
-            if self.cache_max_entries > 0 {
-                let evicted = self.evaluator().cache().evict_lru(self.cache_max_entries);
-                if evicted > 0 {
-                    println!(
-                        "cache: evicted {evicted} least-recently-used entries (--cache-max-entries {})",
-                        self.cache_max_entries
-                    );
-                }
-            }
-            let written = self.evaluator().cache().save(path)?;
-            println!("cache: {written} entries saved to {}", path.display());
-        }
-        Ok(())
-    }
-}
+// ---------------------------------------------------------------------------
+// Subcommands
+// ---------------------------------------------------------------------------
 
 fn cmd_info(args: &Args) -> Result<()> {
     let model = args.require("model")?;
@@ -231,14 +347,14 @@ fn cmd_dse(args: &Args) -> Result<()> {
     let dev = pipeline::load_device(args.get("device").unwrap_or("arria10"))?;
     let g = pipeline::load_model(model, false)?;
     let flow = ComputationFlow::extract(&g).map_err(|e| anyhow!("{e}"))?;
-    let th = thresholds_from(args)?;
     // --cache-file / --threads build a private (possibly disk-seeded)
     // evaluator; the default shares the global pool + memo; --seq forces
     // the sequential seed path (baseline, bypasses the cache).
-    let fidelity = fidelity_from(args)?;
-    let session = EvalSession::open(args)?;
+    let session = open_session(args)?;
+    let th = session.thresholds();
+    let fidelity = session.fidelity();
     let evaluator = session.evaluator();
-    let result = match explorer_from(args)? {
+    let result = match CompileJob::explorer_from_args(args)? {
         Explorer::BruteForce if args.has("seq") => {
             if fidelity != Fidelity::Analytical {
                 bail!("--seq is the analytical seed path; drop --seq to use --fidelity");
@@ -275,39 +391,46 @@ fn cmd_dse(args: &Args) -> Result<()> {
             if *feasible { "fits" } else { "over budget" }
         );
     }
-    session.close()
+    close_session(&session, false)
 }
 
 fn cmd_fit_fleet(args: &Args) -> Result<()> {
     let model = args.require("model")?;
     let g = pipeline::load_model(model, false)?;
-    let session = EvalSession::open(args)?;
-    let rep = pipeline::fit_fleet_with(
-        session.evaluator(),
-        &g,
-        explorer_from(args)?,
-        thresholds_from(args)?,
-    )?;
-    println!("{}", fleet_table(&rep.model, &rep.entries).render());
-    match rep.best() {
-        Some(best) => match (best.option(), best.latency_ms()) {
-            (Some((ni, nl)), Some(ms)) => println!(
-                "recommended: {} at ({ni},{nl}) — {ms:.2} ms simulated latency",
-                best.device
-            ),
-            _ => println!("recommended: {}", best.device),
-        },
-        None => println!("recommended: none — {model} fits no device in the database"),
+    let session = open_session(args)?;
+    let job = CompileJob::builder()
+        .model(g)
+        .all_devices()
+        .explorer(CompileJob::explorer_from_args(args)?)
+        .build()?;
+    let outcome = session.run(&job)?;
+    let json = args.has("json");
+    if json {
+        print!("{}", outcome.to_json().to_string_pretty());
+    } else {
+        let rep = outcome.to_fleet_report().expect("single-model job");
+        println!("{}", fleet_table(&rep.model, &rep.entries).render());
+        match rep.best() {
+            Some(best) => match (best.option(), best.latency_ms()) {
+                (Some((ni, nl)), Some(ms)) => println!(
+                    "recommended: {} at ({ni},{nl}) — {ms:.2} ms simulated latency",
+                    best.device
+                ),
+                _ => println!("recommended: {}", best.device),
+            },
+            None => println!("recommended: none — {model} fits no device in the database"),
+        }
+        let stats = outcome.cache;
+        println!(
+            "fleet wall: {}   estimator memo: {} entries, {} hits / {} misses   {}",
+            fmt_duration(outcome.wall_seconds),
+            stats.entries,
+            stats.hits,
+            stats.misses,
+            scheduler_line(&outcome)
+        );
     }
-    let stats = session.evaluator().cache().stats();
-    println!(
-        "fleet wall: {}   estimator memo: {} entries, {} hits / {} misses",
-        fmt_duration(rep.wall_seconds),
-        stats.entries,
-        stats.hits,
-        stats.misses
-    );
-    session.close()
+    close_session(&session, json)
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
@@ -316,27 +439,33 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     for name in &names {
         graphs.push(pipeline::load_model(name, false)?);
     }
-    let session = EvalSession::open(args)?;
-    let rep = pipeline::sweep_matrix_with(
-        session.evaluator(),
-        &graphs,
-        explorer_from(args)?,
-        thresholds_from(args)?,
-        fidelity_from(args)?,
-    )?;
-    println!("{}", sweep_table(&rep).render());
-    println!("{}", sweep_best_device_table(&rep).render());
-    println!("{}", sweep_best_model_table(&rep).render());
-    println!("{}", sweep_pareto_table(&rep).render());
-    let stats = session.evaluator().cache().stats();
-    println!(
-        "sweep wall: {}   estimator memo: {} entries, {} hits / {} misses",
-        fmt_duration(rep.wall_seconds),
-        stats.entries,
-        stats.hits,
-        stats.misses
-    );
-    session.close()
+    let session = open_session(args)?;
+    let job = CompileJob::builder()
+        .models(graphs)
+        .all_devices()
+        .explorer(CompileJob::explorer_from_args(args)?)
+        .build()?;
+    let outcome = session.run(&job)?;
+    let json = args.has("json");
+    if json {
+        print!("{}", outcome.to_json().to_string_pretty());
+    } else {
+        let rep = outcome.to_sweep_report();
+        println!("{}", sweep_table(&rep).render());
+        println!("{}", sweep_best_device_table(&rep).render());
+        println!("{}", sweep_best_model_table(&rep).render());
+        println!("{}", sweep_pareto_table(&rep).render());
+        let stats = outcome.cache;
+        println!(
+            "sweep wall: {}   estimator memo: {} entries, {} hits / {} misses   {}",
+            fmt_duration(outcome.wall_seconds),
+            stats.entries,
+            stats.hits,
+            stats.misses,
+            scheduler_line(&outcome)
+        );
+    }
+    close_session(&session, json)
 }
 
 fn cmd_synth(args: &Args) -> Result<()> {
@@ -344,7 +473,7 @@ fn cmd_synth(args: &Args) -> Result<()> {
     let dev = pipeline::load_device(args.get("device").unwrap_or("arria10"))?;
     let quantize = args.has("quantize");
     let g = pipeline::load_model(model, quantize)?;
-    let spec = cnn2gate::quant::QuantSpec::default();
+    let wants_quant = quantize && g.has_weights();
     // --report upgrades the flow to full-network stepped fidelity so the
     // chosen design carries its per-layer stall/backpressure census
     let fidelity = if args.has("report") {
@@ -352,15 +481,21 @@ fn cmd_synth(args: &Args) -> Result<()> {
     } else {
         Fidelity::Analytical
     };
-    let rep = synth::run_with_fidelity(
-        eval::global(),
-        &g,
-        dev,
-        explorer_from(args)?,
-        thresholds_from(args)?,
-        (quantize && g.has_weights()).then_some(&spec),
-        fidelity,
-    )?;
+    let session = open_session_at(args, Some(fidelity))?;
+    let mut builder = CompileJob::builder()
+        .model(g)
+        .device(dev)
+        .explorer(CompileJob::explorer_from_args(args)?);
+    if wants_quant {
+        builder = builder.quantize(QuantSpec::default());
+    }
+    let outcome = session.run(&builder.build()?)?;
+    let json = args.has("json");
+    if json {
+        print!("{}", outcome.to_json().to_string_pretty());
+        return close_session(&session, json);
+    }
+    let rep = outcome.synth_report().expect("1x1 job");
     println!("model: {}   device: {}", rep.model, rep.device);
     match (&rep.estimate, &rep.sim) {
         (Some(est), Some(sim)) => {
@@ -400,7 +535,7 @@ fn cmd_synth(args: &Args) -> Result<()> {
             100.0 * q.worst_sat_ratio()
         );
     }
-    Ok(())
+    close_session(&session, json)
 }
 
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
@@ -487,7 +622,6 @@ fn cmd_tables(args: &Args) -> Result<()> {
     let vgg = zoo::build("vgg16", false).ok_or_else(|| anyhow!("zoo model 'vgg16' missing"))?;
     let aflow = ComputationFlow::extract(&alex).map_err(|e| anyhow!("{e}"))?;
     let vflow = ComputationFlow::extract(&vgg).map_err(|e| anyhow!("{e}"))?;
-    let th = Thresholds::default();
 
     // Table 1 (the CPU row needs a real PJRT backend — skipped on stub builds)
     let mut rows = Vec::new();
@@ -528,10 +662,20 @@ fn cmd_tables(args: &Args) -> Result<()> {
     }
     println!("{}", table1(&rows).render());
 
-    // Table 2
+    // Table 2: one 1×3 CompileJob gives the synth column for all three
+    // boards; the explorer timing columns come from the DSE layer
+    let session = Session::builder().build();
+    let boards = [&CYCLONE_V_5CSEMA4, &CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150];
+    let outcome = session.run(
+        &CompileJob::builder()
+            .model(alex.clone())
+            .devices(boards)
+            .explorer(Explorer::BruteForce)
+            .build()?,
+    )?;
+    let th = session.thresholds();
     let mut reports = Vec::new();
-    for dev in [&CYCLONE_V_5CSEMA4, &CYCLONE_V_5CSEMA5, &ARRIA_10_GX1150] {
-        let rep = synth::run(&alex, dev, Explorer::BruteForce, th, None)?;
+    for (rep, dev) in outcome.entries.into_iter().zip(boards) {
         let rl_res = rl::explore(&aflow, dev, th, RlConfig::default());
         let bf_res = brute::explore(&aflow, dev, th);
         reports.push((rep, rl_res, bf_res));
@@ -571,7 +715,7 @@ fn cmd_tables(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_devices() -> Result<()> {
+fn cmd_devices(_args: &Args) -> Result<()> {
     for d in device::all() {
         println!(
             "{:<24} family {:?}  ALM {}  DSP {}  RAM blocks {}  mem {} bits  base {} MHz",
@@ -579,4 +723,60 @@ fn cmd_devices() -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry IS the help text: every flag and switch a
+    /// subcommand accepts appears in the generated USAGE, so adding a
+    /// flag (e.g. `--json`) cannot drift from the documentation.
+    #[test]
+    fn usage_lists_every_registered_flag_and_switch() {
+        let usage = usage();
+        for cmd in SUBCOMMANDS {
+            assert!(usage.contains(cmd.name), "usage missing subcommand {}", cmd.name);
+            for f in cmd.flags {
+                assert!(usage.contains(&format!("--{}", f.name)), "usage missing --{}", f.name);
+            }
+            for s in cmd.switches {
+                assert!(usage.contains(&format!("--{s}")), "usage missing --{s}");
+            }
+        }
+        // the tentpole flag rides the registry like any other
+        for name in ["synth", "fit-fleet", "sweep"] {
+            let cmd = SUBCOMMANDS.iter().find(|c| c.name == name).unwrap();
+            assert!(cmd.switches.contains(&"json"), "{name} must accept --json");
+        }
+    }
+
+    #[test]
+    fn dispatch_rejects_unknown_subcommands_and_flags() {
+        let err = dispatch(&["frobnicate".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("unknown subcommand"), "{err}");
+        // a flag valid on one subcommand is rejected on another
+        let err = dispatch(&["devices".to_string(), "--model".into(), "x".into()]).unwrap_err();
+        assert!(err.to_string().contains("unknown flag --model"), "{err}");
+    }
+
+    #[test]
+    fn registry_allowlists_parse_their_own_usage_flags() {
+        // every registered value flag parses in both spellings
+        for cmd in SUBCOMMANDS {
+            let flags: Vec<&str> = cmd.flags.iter().map(|f| f.name).collect();
+            for f in cmd.flags {
+                let spaced = vec![
+                    cmd.name.to_string(),
+                    format!("--{}", f.name),
+                    "1".to_string(),
+                ];
+                let inline = vec![cmd.name.to_string(), format!("--{}=1", f.name)];
+                for argv in [spaced, inline] {
+                    let parsed = Args::parse(&argv, &flags, cmd.switches).unwrap();
+                    assert_eq!(parsed.get(f.name), Some("1"), "{} --{}", cmd.name, f.name);
+                }
+            }
+        }
+    }
 }

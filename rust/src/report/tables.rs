@@ -423,6 +423,8 @@ pub fn fig6(rep: &SimReport) -> Table {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // fixture reports come from the legacy shims
+
     use super::*;
     use crate::estimator::device::ARRIA_10_GX1150;
     use crate::ir::ComputationFlow;

@@ -1,0 +1,1216 @@
+//! The framework's front door: one typed entry point for the whole
+//! parse → quantize → DSE → synth flow.
+//!
+//! Three PRs of knobs (evaluator sharing, cache files, fidelity,
+//! schedulers) each grew a new positional-arg variant — `synth::run` /
+//! `run_with` / `run_with_fidelity`, `fit_fleet` / `fit_fleet_with`,
+//! `sweep_matrix` / `sweep_matrix_with` — and every CLI subcommand
+//! re-derived the same plumbing by hand. This module replaces that
+//! ladder with two typed values and one verb:
+//!
+//! * [`Session`] owns the run-scoped machinery: the [`Evaluator`]
+//!   (worker pool + estimator memo), the [`CachePolicy`] (`--cache-file`
+//!   load/save lifecycle, `--cache-max-entries` LRU bound), the
+//!   [`Fidelity`] every candidate is scored at, the [`Thresholds`] the
+//!   explorers fit against, and the work-stealing scheduler
+//!   ([`crate::coordinator::scheduler`]) its runs fan out on. Build one
+//!   via [`Session::builder`] (or [`SessionBuilder::from_args`] straight
+//!   from parsed CLI flags) and reuse it across jobs so every
+//!   exploration in the session shares one memo.
+//! * [`CompileJob`] is the work spec: models × devices × [`Explorer`] ×
+//!   optional [`QuantSpec`]. The single-model/single-device synth flow,
+//!   the one-model fleet fit and the full model×device sweep are the
+//!   1×1, 1×N and M×N shapes of the same matrix.
+//! * [`Session::run`] executes the job and returns an [`Outcome`]:
+//!   entries in deterministic model-major order, the legacy
+//!   [`SynthReport`] / [`FleetReport`] / [`SweepReport`] as
+//!   degenerate views, [`StealStats`] from the scheduler, and a stable
+//!   machine-readable [`Outcome::to_json`] document (the CLI's `--json`).
+//!
+//! Every run — synth, fleet, sweep, RL episode batches included —
+//! executes on the same two-phase engine: a **work-stealing prewarm**
+//! over `(model, device, candidate-chunk)` deque items scores every
+//! candidate of every pair's option grid into the shared memo (skewed
+//! grid sizes rebalance at chunk granularity), then the per-pair
+//! explorers run as deque items themselves, answered entirely from the
+//! memo, and entries merge in input order. Results are therefore
+//! bit-identical to the sequential seed paths, and identical runs render
+//! byte-identical tables. The deprecated free functions survive as thin
+//! shims over this same engine, pinned bit-identical by tests.
+//!
+//! ```
+//! # fn main() -> anyhow::Result<()> {
+//! use cnn2gate::session::{CompileJob, Session};
+//! use cnn2gate::synth::Explorer;
+//!
+//! let session = Session::builder().build();
+//! let model = cnn2gate::onnx::zoo::build("tiny", false).unwrap();
+//! let job = CompileJob::builder()
+//!     .model(model)
+//!     .all_devices()
+//!     .explorer(Explorer::BruteForce)
+//!     .build()?;
+//! let outcome = session.run(&job)?;
+//! let devices = cnn2gate::estimator::device::all().len();
+//! assert_eq!(outcome.shape(), (1, devices));
+//! # Ok(())
+//! # }
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cli::Args;
+use crate::coordinator::pipeline::{FleetReport, SweepReport};
+use crate::coordinator::scheduler::{work_steal_map_seeded, StealStats};
+use crate::dse::{
+    brute, eval, rl, CacheStats, EvalCache, Evaluator, Fidelity, OptionSpace, RlConfig,
+};
+use crate::estimator::{device, synthesis_minutes, Device, Thresholds};
+use crate::ir::{ComputationFlow, Graph};
+use crate::quant::{self, QuantReport, QuantSpec};
+use crate::synth::{Explorer, SynthReport};
+use crate::util::json::{Json, JsonObj};
+
+/// Format tag of the [`Outcome::to_json`] document.
+pub const OUTCOME_FORMAT: &str = "cnn2gate-outcome";
+/// Schema version of the [`Outcome::to_json`] document; bumped on any
+/// layout change.
+pub const OUTCOME_VERSION: i64 = 1;
+
+/// Candidates per work-stealing prewarm item. Small enough that a
+/// VGG-16-sized grid splits across several workers, big enough that the
+/// deque traffic stays negligible against even an analytical candidate.
+const CHUNK: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// How the session's estimator memo persists across processes: the
+/// `--cache-file` the memo is seeded from and written back to, and the
+/// `--cache-max-entries` LRU bound applied before saving (0 = unlimited).
+#[derive(Debug, Clone, Default)]
+pub struct CachePolicy {
+    /// Disk home of the memo; `None` keeps the cache in-process only.
+    pub file: Option<PathBuf>,
+    /// LRU-evict down to this many entries before saving (0 = unlimited).
+    pub max_entries: usize,
+}
+
+/// Typed builder for [`Session`]. All knobs default to the paper flow:
+/// shared process-global evaluator, no cache file, analytical fidelity,
+/// threshold-free fitting (101% on every resource).
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    threads: usize,
+    cache: CachePolicy,
+    thresholds: Thresholds,
+    fidelity: Fidelity,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            threads: 0,
+            cache: CachePolicy::default(),
+            thresholds: Thresholds::default(),
+            fidelity: Fidelity::Analytical,
+        }
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Build a session straight from parsed CLI flags — the one place
+    /// `--threads`, `--cache-file`, `--cache-max-entries`, `--fidelity`
+    /// and the `--max-*` thresholds are interpreted (every subcommand
+    /// used to hand-roll its own copies).
+    pub fn from_args(args: &Args) -> Result<SessionBuilder> {
+        Ok(SessionBuilder::new()
+            .threads(args.get_usize("threads", 0)?)
+            .cache_policy(CachePolicy {
+                file: args.get("cache-file").map(PathBuf::from),
+                max_entries: args.get_usize("cache-max-entries", 0)?,
+            })
+            .thresholds(Self::thresholds_from(args)?)
+            .fidelity(Self::fidelity_from(args)?))
+    }
+
+    /// Parse the `--max-lut/--max-dsp/--max-mem/--max-reg` thresholds
+    /// (101% each when absent: "fits" means "fits the chip").
+    pub fn thresholds_from(args: &Args) -> Result<Thresholds> {
+        Ok(Thresholds {
+            lut: args.get_f64("max-lut", 101.0)?,
+            dsp: args.get_f64("max-dsp", 101.0)?,
+            mem: args.get_f64("max-mem", 101.0)?,
+            reg: args.get_f64("max-reg", 101.0)?,
+        })
+    }
+
+    /// Parse `--fidelity analytical|stepped|stepped-full`.
+    pub fn fidelity_from(args: &Args) -> Result<Fidelity> {
+        Ok(
+            match args.get_choice(
+                "fidelity",
+                &["analytical", "stepped", "stepped-full"],
+                "analytical",
+            )? {
+                "stepped" => Fidelity::SteppedDominantRound,
+                "stepped-full" => Fidelity::SteppedFullNetwork,
+                _ => Fidelity::Analytical,
+            },
+        )
+    }
+
+    /// Private worker-pool size; 0 (default) shares the process-global
+    /// evaluator unless a cache file forces a private one.
+    pub fn threads(mut self, threads: usize) -> SessionBuilder {
+        self.threads = threads;
+        self
+    }
+
+    /// Replace the whole [`CachePolicy`].
+    pub fn cache_policy(mut self, cache: CachePolicy) -> SessionBuilder {
+        self.cache = cache;
+        self
+    }
+
+    /// Seed the memo from (and save it back to) this file.
+    pub fn cache_file(mut self, path: impl Into<PathBuf>) -> SessionBuilder {
+        self.cache.file = Some(path.into());
+        self
+    }
+
+    /// LRU bound applied before saving (0 = unlimited).
+    pub fn cache_max_entries(mut self, max_entries: usize) -> SessionBuilder {
+        self.cache.max_entries = max_entries;
+        self
+    }
+
+    pub fn thresholds(mut self, thresholds: Thresholds) -> SessionBuilder {
+        self.thresholds = thresholds;
+        self
+    }
+
+    pub fn fidelity(mut self, fidelity: Fidelity) -> SessionBuilder {
+        self.fidelity = fidelity;
+        self
+    }
+
+    /// Build the session. With a cache file the evaluator is private and
+    /// disk-seeded (tolerantly: a missing file starts cold silently, a
+    /// corrupt or stale one starts cold with a [`Session::load_warning`]
+    /// — it is never trusted); with only `threads` the pool is private
+    /// but cold; with neither, the process-global evaluator is shared.
+    pub fn build(self) -> Session {
+        let mut load_warning = None;
+        let evaluator = match (&self.cache.file, self.threads) {
+            (None, 0) => None,
+            (None, n) => Some(Evaluator::new(n)),
+            (Some(path), n) => {
+                let (cache, warning) = EvalCache::load_or_cold(path);
+                load_warning = warning;
+                let n = if n == 0 { eval::default_threads() } else { n };
+                Some(Evaluator::with_cache(n, Arc::new(cache)))
+            }
+        };
+        Session {
+            evaluator,
+            cache: self.cache,
+            thresholds: self.thresholds,
+            fidelity: self.fidelity,
+            load_warning,
+        }
+    }
+}
+
+/// What [`Session::close`] did: how many memo entries were LRU-evicted
+/// and, when a cache file is configured, how many were written where.
+#[derive(Debug, Clone, Default)]
+pub struct CacheSave {
+    pub evicted: usize,
+    /// `(entries written, path)` when a cache file was configured.
+    pub written: Option<(usize, PathBuf)>,
+}
+
+/// The run-scoped machinery every [`CompileJob`] executes through. See
+/// the [module docs](crate::session) for the full picture.
+pub struct Session {
+    /// `None` shares the process-global evaluator ([`eval::global`]).
+    evaluator: Option<Evaluator>,
+    cache: CachePolicy,
+    thresholds: Thresholds,
+    fidelity: Fidelity,
+    load_warning: Option<String>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// The evaluator this session scores candidates through.
+    pub fn evaluator(&self) -> &Evaluator {
+        match &self.evaluator {
+            Some(ev) => ev,
+            None => eval::global(),
+        }
+    }
+
+    pub fn thresholds(&self) -> Thresholds {
+        self.thresholds
+    }
+
+    pub fn fidelity(&self) -> Fidelity {
+        self.fidelity
+    }
+
+    pub fn cache_policy(&self) -> &CachePolicy {
+        &self.cache
+    }
+
+    /// Set when the configured cache file was corrupt or stale and the
+    /// session fell back to a cold memo.
+    pub fn load_warning(&self) -> Option<&str> {
+        self.load_warning.as_deref()
+    }
+
+    /// Execute `job` on the session's two-phase work-stealing engine and
+    /// return its [`Outcome`]. Entries come back model-major in job
+    /// order; identical jobs produce identical entries (and therefore
+    /// byte-identical rendered tables) regardless of thread scheduling.
+    pub fn run(&self, job: &CompileJob) -> Result<Outcome> {
+        let run = execute(
+            self.evaluator(),
+            &job.models,
+            &job.devices,
+            job.explorer,
+            self.thresholds,
+            job.quant.as_ref(),
+            self.fidelity,
+        )?;
+        Ok(Outcome {
+            explorer: job.explorer,
+            fidelity: self.fidelity,
+            models: job.models.iter().map(|g| g.name.clone()).collect(),
+            devices: job.devices.iter().map(|d| d.name).collect(),
+            entries: run.entries,
+            wall_seconds: run.wall_seconds,
+            steals: run.steals,
+            cache: self.evaluator().cache().stats(),
+        })
+    }
+
+    /// Persist the memo back to the [`CachePolicy`]'s file (when one is
+    /// configured), LRU-evicting first when `max_entries` bounds it.
+    /// A no-op session close (no cache file) returns a default
+    /// [`CacheSave`].
+    pub fn close(&self) -> Result<CacheSave> {
+        let mut out = CacheSave::default();
+        if let Some(path) = &self.cache.file {
+            if self.cache.max_entries > 0 {
+                out.evicted = self.evaluator().cache().evict_lru(self.cache.max_entries);
+            }
+            let written = self.evaluator().cache().save(path)?;
+            out.written = Some((written, path.clone()));
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CompileJob
+// ---------------------------------------------------------------------------
+
+/// The work spec a [`Session`] executes: which models against which
+/// devices, driven by which explorer, with optional post-training
+/// quantization. `1×1` is the classic synth flow, `1×N` the fleet fit,
+/// `M×N` the sweep — all the same matrix.
+#[derive(Debug, Clone)]
+pub struct CompileJob {
+    /// Models, in report order.
+    pub models: Vec<Graph>,
+    /// Targets, in report order (defaults to the whole database).
+    pub devices: Vec<&'static Device>,
+    pub explorer: Explorer,
+    /// Applied per (model, device) pair when present; requires resident
+    /// weights.
+    pub quant: Option<QuantSpec>,
+}
+
+impl CompileJob {
+    pub fn builder() -> CompileJobBuilder {
+        CompileJobBuilder::default()
+    }
+
+    /// Parse `--explorer rl|bf` (default rl, the paper's headline
+    /// agent).
+    pub fn explorer_from_args(args: &Args) -> Result<Explorer> {
+        Ok(match args.get_choice("explorer", &["rl", "bf"], "rl")? {
+            "bf" => Explorer::BruteForce,
+            _ => Explorer::Reinforcement,
+        })
+    }
+}
+
+/// Typed builder for [`CompileJob`].
+#[derive(Debug, Clone)]
+pub struct CompileJobBuilder {
+    models: Vec<Graph>,
+    devices: Vec<&'static Device>,
+    explorer: Explorer,
+    quant: Option<QuantSpec>,
+}
+
+impl Default for CompileJobBuilder {
+    fn default() -> Self {
+        CompileJobBuilder {
+            models: Vec::new(),
+            devices: Vec::new(),
+            explorer: Explorer::Reinforcement,
+            quant: None,
+        }
+    }
+}
+
+impl CompileJobBuilder {
+    /// Add one model.
+    pub fn model(mut self, graph: Graph) -> CompileJobBuilder {
+        self.models.push(graph);
+        self
+    }
+
+    /// Add several models.
+    pub fn models(mut self, graphs: impl IntoIterator<Item = Graph>) -> CompileJobBuilder {
+        self.models.extend(graphs);
+        self
+    }
+
+    /// Add one target device.
+    pub fn device(mut self, device: &'static Device) -> CompileJobBuilder {
+        self.devices.push(device);
+        self
+    }
+
+    /// Add several target devices.
+    pub fn devices(
+        mut self,
+        devices: impl IntoIterator<Item = &'static Device>,
+    ) -> CompileJobBuilder {
+        self.devices.extend(devices);
+        self
+    }
+
+    /// Target every device in the database ([`device::all`]) — also the
+    /// default when no device is named.
+    pub fn all_devices(self) -> CompileJobBuilder {
+        self.devices(device::all())
+    }
+
+    pub fn explorer(mut self, explorer: Explorer) -> CompileJobBuilder {
+        self.explorer = explorer;
+        self
+    }
+
+    /// Apply this post-training quantization spec to every model in the
+    /// job (models must carry resident weights).
+    pub fn quantize(mut self, spec: QuantSpec) -> CompileJobBuilder {
+        self.quant = Some(spec);
+        self
+    }
+
+    /// Validate and build. A job needs at least one model; an empty
+    /// device list targets the whole database.
+    pub fn build(self) -> Result<CompileJob> {
+        if self.models.is_empty() {
+            bail!("compile job needs at least one model");
+        }
+        let devices = if self.devices.is_empty() {
+            device::all()
+        } else {
+            self.devices
+        };
+        Ok(CompileJob {
+            models: self.models,
+            devices,
+            explorer: self.explorer,
+            quant: self.quant,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Outcome
+// ---------------------------------------------------------------------------
+
+/// Everything a [`Session::run`] produced: one [`SynthReport`] per
+/// (model, device) pair in model-major job order, plus run-level
+/// scheduler and memo counters. The legacy report shapes are views:
+/// [`Outcome::synth_report`] (1×1), [`Outcome::to_fleet_report`] (one
+/// model), [`Outcome::to_sweep_report`] (any shape).
+#[derive(Debug)]
+pub struct Outcome {
+    pub explorer: Explorer,
+    pub fidelity: Fidelity,
+    /// Model names in job order.
+    pub models: Vec<String>,
+    /// Device names in job order.
+    pub devices: Vec<&'static str>,
+    /// One report per (model, device) pair: model-major in `models`
+    /// order, devices in `devices` order within a model.
+    pub entries: Vec<SynthReport>,
+    /// Wall time of the whole run (prewarm + exploration).
+    pub wall_seconds: f64,
+    /// Work-stealing scheduler counters across both engine phases.
+    pub steals: StealStats,
+    /// Point-in-time memo counters after the run.
+    pub cache: CacheStats,
+}
+
+fn latency_key(r: &SynthReport) -> f64 {
+    r.latency_ms().unwrap_or(f64::MAX)
+}
+
+fn resource_key(r: &SynthReport) -> f64 {
+    r.estimate.as_ref().map_or(f64::MAX, |e| e.f_avg())
+}
+
+fn explorer_tag(explorer: Explorer) -> &'static str {
+    match explorer {
+        Explorer::BruteForce => "bf",
+        Explorer::Reinforcement => "rl",
+    }
+}
+
+impl Outcome {
+    /// `(models, devices)` — `(1, 1)` is a synth flow, `(1, N)` a fleet
+    /// fit, `(M, N)` a sweep.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.models.len(), self.devices.len())
+    }
+
+    /// The matrix cell for one (model, device) pair, if present.
+    pub fn entry(&self, model: &str, device: &str) -> Option<&SynthReport> {
+        self.entries
+            .iter()
+            .find(|e| e.model == model && e.device == device)
+    }
+
+    /// The single report of a 1×1 job; `None` for larger shapes.
+    pub fn synth_report(&self) -> Option<&SynthReport> {
+        if self.entries.len() == 1 {
+            self.entries.first()
+        } else {
+            None
+        }
+    }
+
+    /// Like [`Outcome::synth_report`], taking ownership.
+    pub fn into_synth_report(mut self) -> Option<SynthReport> {
+        if self.entries.len() == 1 {
+            self.entries.pop()
+        } else {
+            None
+        }
+    }
+
+    /// The legacy fleet view of a single-model job; `None` when the job
+    /// spans several models.
+    pub fn to_fleet_report(&self) -> Option<FleetReport> {
+        if self.models.len() != 1 {
+            return None;
+        }
+        Some(FleetReport {
+            model: self.models[0].clone(),
+            explorer: self.explorer,
+            entries: self.entries.clone(),
+            wall_seconds: self.wall_seconds,
+        })
+    }
+
+    /// The legacy sweep view (any shape). Note the sweep rankings assume
+    /// the full device database; for device subsets use the rankings on
+    /// `Outcome` itself.
+    pub fn to_sweep_report(&self) -> SweepReport {
+        SweepReport {
+            explorer: self.explorer,
+            models: self.models.clone(),
+            entries: self.entries.clone(),
+            wall_seconds: self.wall_seconds,
+        }
+    }
+
+    /// Best (lowest simulated latency) fitting device per model, in job
+    /// order; `None` when the model fits nothing.
+    pub fn best_device_per_model(&self) -> Vec<(&str, Option<&SynthReport>)> {
+        self.models
+            .iter()
+            .map(|m| {
+                let best = self
+                    .entries
+                    .iter()
+                    .filter(|e| e.model == *m && e.fits())
+                    .min_by(|a, b| latency_key(a).total_cmp(&latency_key(b)));
+                (m.as_str(), best)
+            })
+            .collect()
+    }
+
+    /// Best (lowest simulated latency) fitting model per device, in job
+    /// order; `None` when nothing fits the device.
+    pub fn best_model_per_device(&self) -> Vec<(&str, Option<&SynthReport>)> {
+        self.devices
+            .iter()
+            .map(|dev| {
+                let best = self
+                    .entries
+                    .iter()
+                    .filter(|e| e.device == *dev && e.fits())
+                    .min_by(|a, b| latency_key(a).total_cmp(&latency_key(b)));
+                (*dev, best)
+            })
+            .collect()
+    }
+
+    /// Matrix-wide Pareto frontier over (simulated latency, F_avg): the
+    /// fitting (model, device) points no other fit beats on both axes,
+    /// sorted by latency.
+    pub fn pareto_frontier(&self) -> Vec<&SynthReport> {
+        let mut fits: Vec<&SynthReport> = self.entries.iter().filter(|e| e.fits()).collect();
+        fits.sort_by(|a, b| {
+            latency_key(a)
+                .total_cmp(&latency_key(b))
+                .then(resource_key(a).total_cmp(&resource_key(b)))
+        });
+        let mut frontier: Vec<&SynthReport> = Vec::new();
+        let mut best_resource = f64::INFINITY;
+        for entry in fits {
+            let r = resource_key(entry);
+            if r < best_resource {
+                best_resource = r;
+                frontier.push(entry);
+            }
+        }
+        frontier
+    }
+
+    /// Render the outcome as a stable, machine-consumable JSON document
+    /// (the CLI's `--json` on `synth`/`fit-fleet`/`sweep`).
+    ///
+    /// Deliberately **excludes** every volatile field — wall clocks,
+    /// steal counts, memo hit totals — so identical jobs emit
+    /// byte-identical documents across runs, warm or cold (pinned by the
+    /// golden-file test). Numbers round-trip exactly through
+    /// [`crate::util::json`].
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("format", OUTCOME_FORMAT.into());
+        o.insert("version", OUTCOME_VERSION.into());
+        o.insert("explorer", explorer_tag(self.explorer).into());
+        o.insert("fidelity", eval::fidelity_tag(self.fidelity).into());
+        o.insert(
+            "models",
+            Json::Arr(self.models.iter().map(|m| m.as_str().into()).collect()),
+        );
+        o.insert(
+            "devices",
+            Json::Arr(self.devices.iter().map(|d| (*d).into()).collect()),
+        );
+        o.insert(
+            "entries",
+            Json::Arr(self.entries.iter().map(entry_to_json).collect()),
+        );
+        let mut rankings = JsonObj::new();
+        rankings.insert(
+            "best_device_per_model",
+            Json::Arr(
+                self.best_device_per_model()
+                    .into_iter()
+                    .map(|(model, best)| {
+                        let mut r = JsonObj::new();
+                        r.insert("model", model.into());
+                        r.insert("device", best.map_or(Json::Null, |b| b.device.into()));
+                        Json::Obj(r)
+                    })
+                    .collect(),
+            ),
+        );
+        rankings.insert(
+            "best_model_per_device",
+            Json::Arr(
+                self.best_model_per_device()
+                    .into_iter()
+                    .map(|(device, best)| {
+                        let mut r = JsonObj::new();
+                        r.insert("device", device.into());
+                        r.insert("model", best.map_or(Json::Null, |b| b.model.as_str().into()));
+                        Json::Obj(r)
+                    })
+                    .collect(),
+            ),
+        );
+        rankings.insert(
+            "pareto_frontier",
+            Json::Arr(
+                self.pareto_frontier()
+                    .into_iter()
+                    .map(|e| {
+                        let mut r = JsonObj::new();
+                        r.insert("model", e.model.as_str().into());
+                        r.insert("device", e.device.into());
+                        Json::Obj(r)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert("rankings", Json::Obj(rankings));
+        Json::Obj(o)
+    }
+}
+
+/// One (model, device) entry of the JSON document. Every entry carries
+/// the same key set (absent sections are `null`) so consumers — and the
+/// golden schema test — see one shape.
+fn entry_to_json(rep: &SynthReport) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("model", rep.model.as_str().into());
+    o.insert("device", rep.device.into());
+    o.insert("fits", rep.fits().into());
+    o.insert(
+        "option",
+        match rep.option() {
+            Some((ni, nl)) => Json::Arr(vec![ni.into(), nl.into()]),
+            None => Json::Null,
+        },
+    );
+    o.insert("f_max", rep.dse.f_max.into());
+    o.insert("queries", rep.dse.queries.into());
+    o.insert("cache_hits", rep.dse.cache_hits.into());
+    o.insert("modeled_seconds", rep.dse.modeled_seconds.into());
+    o.insert(
+        "trace",
+        Json::Arr(
+            rep.dse
+                .trace
+                .iter()
+                .map(|&(ni, nl, favg, feasible)| {
+                    Json::Arr(vec![ni.into(), nl.into(), favg.into(), feasible.into()])
+                })
+                .collect(),
+        ),
+    );
+    o.insert(
+        "estimate",
+        rep.estimate.as_ref().map_or(Json::Null, eval::est_to_json),
+    );
+    o.insert(
+        "synthesis_minutes",
+        rep.synthesis_minutes.map_or(Json::Null, Json::Num),
+    );
+    o.insert(
+        "latency",
+        rep.sim.as_ref().map_or(Json::Null, eval::sim_to_json),
+    );
+    o.insert(
+        "stepped_network",
+        rep.stepped_network.as_ref().map_or(Json::Null, eval::net_to_json),
+    );
+    o.insert(
+        "quant",
+        match &rep.quant {
+            Some(q) => {
+                let mut r = JsonObj::new();
+                r.insert("tensors", q.tensors.len().into());
+                r.insert("worst_abs_err", q.worst_abs_err().into());
+                r.insert("worst_sat_ratio", q.worst_sat_ratio().into());
+                Json::Obj(r)
+            }
+            None => Json::Null,
+        },
+    );
+    Json::Obj(o)
+}
+
+// ---------------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------------
+
+/// What [`execute`] hands back to [`Session::run`] and the deprecated
+/// shims.
+pub(crate) struct EngineRun {
+    pub entries: Vec<SynthReport>,
+    pub steals: StealStats,
+    pub wall_seconds: f64,
+}
+
+fn merge_steals(a: StealStats, b: StealStats) -> StealStats {
+    StealStats {
+        executed: a.executed + b.executed,
+        steals: a.steals + b.steals,
+        workers: a.workers.max(b.workers),
+    }
+}
+
+/// The two-phase work-stealing engine behind [`Session::run`] (and,
+/// via thin shims, every deprecated `synth::run*` / `fit_fleet*` /
+/// `sweep_matrix*` free function — which is what pins them bit-identical
+/// to the new path).
+///
+/// Phase 1 prewarms the shared memo over `(model, device,
+/// candidate-chunk)` deque items under ONE LRU generation, so worker
+/// completion order can't perturb the persisted cache stamps. The
+/// prewarm deliberately scores the FULL grid even for the RL explorer
+/// (which visits only a trajectory subset): grids cap at 12 options,
+/// and full presence is what makes phase 2 hit-only — the source of
+/// both the load balancing and the deterministic-output guarantee.
+///
+/// Phase 2 runs the per-pair explorers as deque items themselves —
+/// fleet fits and RL episode batches ride the same work-stealing deques
+/// — answered entirely from the memo, and merges entries model-major in
+/// input order. A final [`EvalCache::touch_present`] pass re-stamps
+/// every grid in deterministic order so `--cache-max-entries` eviction
+/// and the saved cache bytes are scheduling-independent.
+pub(crate) fn execute(
+    evaluator: &Evaluator,
+    models: &[Graph],
+    devices: &[&'static Device],
+    explorer: Explorer,
+    thresholds: Thresholds,
+    quant: Option<&QuantSpec>,
+    fidelity: Fidelity,
+) -> Result<EngineRun> {
+    if models.is_empty() {
+        bail!("compile job needs at least one model");
+    }
+    if devices.is_empty() {
+        bail!("compile job needs at least one device");
+    }
+    let t0 = Instant::now();
+    let flows: Vec<ComputationFlow> = models
+        .iter()
+        .map(|g| ComputationFlow::extract(g).map_err(|e| anyhow!("flow extraction: {e}")))
+        .collect::<Result<_>>()?;
+
+    // quantization is device-independent: apply once per model up front
+    // (before any exploration spends work), clone into each pair's report
+    let quants: Vec<Option<QuantReport>> = match quant {
+        Some(spec) => models
+            .iter()
+            .map(|g| {
+                quant::apply(g, spec)
+                    .map(Some)
+                    .map_err(|e| anyhow!("quantization: {e}"))
+            })
+            .collect::<Result<_>>()?,
+        None => vec![None; models.len()],
+    };
+
+    // phase 1: work-stealing prewarm
+    let grids: Vec<Vec<(usize, usize)>> = flows
+        .iter()
+        .map(|f| OptionSpace::from_flow(f).pairs())
+        .collect();
+    let mut chunks: Vec<(usize, &'static Device, Vec<(usize, usize)>)> = Vec::new();
+    for (mi, grid) in grids.iter().enumerate() {
+        for &dev in devices {
+            for chunk in grid.chunks(CHUNK) {
+                chunks.push((mi, dev, chunk.to_vec()));
+            }
+        }
+    }
+    let stamp = evaluator.cache().tick();
+    let prewarm_width = chunks.len().min(eval::default_threads());
+    let (_, prewarm_steals) =
+        work_steal_map_seeded(&chunks, prewarm_width, |i| i, |(mi, dev, options)| {
+            for &(ni, nl) in options {
+                evaluator
+                    .cache()
+                    .get_or_compute_at(stamp, &flows[*mi], dev, ni, nl, fidelity);
+            }
+        });
+
+    // phase 2: per-pair explorers on the same deques, all memo hits
+    let pairs: Vec<(usize, &'static Device)> = (0..models.len())
+        .flat_map(|mi| devices.iter().map(move |&d| (mi, d)))
+        .collect();
+    let explore_width = pairs.len().min(2 * eval::default_threads());
+    let (results, explore_steals) =
+        work_steal_map_seeded(&pairs, explore_width, |i| i, |&(mi, dev)| {
+            compile_pair(
+                evaluator,
+                &models[mi],
+                &flows[mi],
+                dev,
+                explorer,
+                thresholds,
+                quants[mi].as_ref(),
+                fidelity,
+            )
+        });
+    let mut entries = Vec::with_capacity(results.len());
+    for result in results {
+        entries.push(result?);
+    }
+
+    // deterministic re-stamp (see the function docs)
+    for (flow, grid) in flows.iter().zip(&grids) {
+        for &dev in devices {
+            evaluator.cache().touch_present(flow, dev, grid, fidelity);
+        }
+    }
+    Ok(EngineRun {
+        entries,
+        steals: merge_steals(prewarm_steals, explore_steals),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// One (model, device) cell: DSE → estimate at H_best → synthesis-time
+/// model → latency (pulled from the memo; the chosen option was already
+/// scored during exploration, so nothing is recomputed). Exactly the old
+/// `synth::run_with_fidelity` body, minus the per-call flow extraction
+/// and quantization ([`execute`] precomputes both per model).
+#[allow(clippy::too_many_arguments)]
+fn compile_pair(
+    evaluator: &Evaluator,
+    graph: &Graph,
+    flow: &ComputationFlow,
+    device: &'static Device,
+    explorer: Explorer,
+    thresholds: Thresholds,
+    quant: Option<&QuantReport>,
+    fidelity: Fidelity,
+) -> Result<SynthReport> {
+    let dse = match explorer {
+        Explorer::BruteForce => {
+            brute::explore_with_fidelity(evaluator, flow, device, thresholds, fidelity)
+        }
+        Explorer::Reinforcement => rl::explore_with_fidelity(
+            evaluator,
+            flow,
+            device,
+            thresholds,
+            RlConfig::default(),
+            fidelity,
+        ),
+    };
+
+    let (estimate, synth_min, sim, stepped_network) = match (dse.best, &dse.best_estimate) {
+        (Some((ni, nl)), Some(est)) => {
+            let minutes = synthesis_minutes(est, device);
+            let (chosen, _) = evaluator.evaluate(flow, device, ni, nl, fidelity);
+            (
+                Some(est.clone()),
+                Some(minutes),
+                Some(chosen.latency.clone()),
+                chosen.stepped_network.clone(),
+            )
+        }
+        _ => (None, None, None, None),
+    };
+
+    Ok(SynthReport {
+        model: graph.name.clone(),
+        device: device.name,
+        explorer,
+        dse,
+        estimate,
+        synthesis_minutes: synth_min,
+        sim,
+        stepped_network,
+        quant: quant.cloned(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4};
+    use crate::onnx::zoo;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn default_session_shares_the_global_evaluator() {
+        let s = Session::builder().build();
+        assert!(std::ptr::eq(s.evaluator(), eval::global()));
+        assert_eq!(s.fidelity(), Fidelity::Analytical);
+        assert!(s.load_warning().is_none());
+        // explicit threads means a private evaluator
+        let p = Session::builder().threads(3).build();
+        assert!(!std::ptr::eq(p.evaluator(), eval::global()));
+        assert_eq!(p.evaluator().threads(), 3);
+    }
+
+    #[test]
+    fn cache_file_session_is_private_and_warns_on_corruption() {
+        let path = std::env::temp_dir().join(format!(
+            "cnn2gate-session-cache-{}.json",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        // missing file: cold start, no warning
+        let s = Session::builder().cache_file(&path).build();
+        assert!(!std::ptr::eq(s.evaluator(), eval::global()));
+        assert!(s.load_warning().is_none());
+        // corrupt file: cold start with a warning
+        std::fs::write(&path, "{not json").unwrap();
+        let s = Session::builder().cache_file(&path).build();
+        assert!(s.load_warning().is_some());
+        assert_eq!(s.evaluator().cache().stats().entries, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn close_evicts_and_saves_per_policy() {
+        let path = std::env::temp_dir().join(format!(
+            "cnn2gate-session-close-{}.json",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        let session = Session::builder()
+            .cache_file(&path)
+            .cache_max_entries(4)
+            .build();
+        let job = CompileJob::builder()
+            .model(zoo::build("alexnet", false).unwrap())
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        session.run(&job).unwrap();
+        let save = session.close().unwrap();
+        let (written, at) = save.written.expect("cache file configured");
+        assert_eq!(written, 4, "evicted down to --cache-max-entries");
+        assert_eq!(at, path);
+        assert!(save.evicted > 0);
+        assert_eq!(EvalCache::load(&path).unwrap().stats().entries, 4);
+        // a session without a cache file closes as a no-op
+        let plain = Session::builder().build().close().unwrap();
+        assert_eq!(plain.evicted, 0);
+        assert!(plain.written.is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn builder_from_args_reads_all_session_flags() {
+        let args = Args::parse(
+            &sv(&[
+                "sweep",
+                "--threads",
+                "3",
+                "--cache-file",
+                "/tmp/x.json",
+                "--cache-max-entries",
+                "7",
+                "--fidelity",
+                "stepped-full",
+                "--max-lut",
+                "50",
+            ]),
+            &["threads", "cache-file", "cache-max-entries", "fidelity", "max-lut"],
+            &[],
+        )
+        .unwrap();
+        let b = SessionBuilder::from_args(&args).unwrap();
+        assert_eq!(b.threads, 3);
+        assert_eq!(b.cache.file.as_deref(), Some(std::path::Path::new("/tmp/x.json")));
+        assert_eq!(b.cache.max_entries, 7);
+        assert_eq!(b.fidelity, Fidelity::SteppedFullNetwork);
+        assert_eq!(b.thresholds.lut, 50.0);
+        assert_eq!(b.thresholds.dsp, 101.0);
+        // defaults when nothing is given
+        let empty = Args::parse(&sv(&["synth"]), &[], &[]).unwrap();
+        let d = SessionBuilder::from_args(&empty).unwrap();
+        assert_eq!(d.threads, 0);
+        assert!(d.cache.file.is_none());
+        assert_eq!(d.fidelity, Fidelity::Analytical);
+        // explorer parsing lives on the job side
+        let bf = Args::parse(&sv(&["synth", "--explorer", "bf"]), &["explorer"], &[]).unwrap();
+        assert_eq!(CompileJob::explorer_from_args(&bf).unwrap(), Explorer::BruteForce);
+        assert_eq!(CompileJob::explorer_from_args(&empty).unwrap(), Explorer::Reinforcement);
+        let bad = Args::parse(&sv(&["synth", "--explorer", "x"]), &["explorer"], &[]).unwrap();
+        assert!(CompileJob::explorer_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn job_builder_validates_and_defaults() {
+        let err = CompileJob::builder().build().unwrap_err();
+        assert!(err.to_string().contains("at least one model"));
+        let job = CompileJob::builder()
+            .model(zoo::build("tiny", false).unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(job.devices.len(), device::all().len(), "defaults to the database");
+        assert_eq!(job.explorer, Explorer::Reinforcement);
+        assert!(job.quant.is_none());
+    }
+
+    #[test]
+    fn outcome_shapes_and_views() {
+        let session = Session::builder().threads(2).build();
+        // 1×1: synth view
+        let one = session
+            .run(
+                &CompileJob::builder()
+                    .model(zoo::build("alexnet", false).unwrap())
+                    .device(&ARRIA_10_GX1150)
+                    .explorer(Explorer::BruteForce)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(one.shape(), (1, 1));
+        let rep = one.synth_report().expect("1x1 synth view");
+        assert_eq!(rep.option(), Some((16, 32)));
+        assert!(one.to_fleet_report().is_some(), "1×1 is also a 1-model fleet");
+        // 1×N: fleet view
+        let fleet = session
+            .run(
+                &CompileJob::builder()
+                    .model(zoo::build("alexnet", false).unwrap())
+                    .all_devices()
+                    .explorer(Explorer::BruteForce)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(fleet.shape(), (1, device::all().len()));
+        assert!(fleet.synth_report().is_none());
+        let fr = fleet.to_fleet_report().expect("fleet view");
+        assert_eq!(fr.entries.len(), device::all().len());
+        assert_eq!(
+            fr.best().unwrap().device,
+            fleet
+                .best_device_per_model()
+                .first()
+                .and_then(|(_, b)| *b)
+                .unwrap()
+                .device
+        );
+        // M×N: sweep view, model-major entry order
+        let sweep = session
+            .run(
+                &CompileJob::builder()
+                    .models([
+                        zoo::build("alexnet", false).unwrap(),
+                        zoo::build("tiny", false).unwrap(),
+                    ])
+                    .all_devices()
+                    .explorer(Explorer::BruteForce)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(sweep.shape(), (2, device::all().len()));
+        assert!(sweep.to_fleet_report().is_none());
+        for (mi, model) in sweep.models.iter().enumerate() {
+            for (di, dev) in sweep.devices.iter().enumerate() {
+                let entry = &sweep.entries[mi * sweep.devices.len() + di];
+                assert_eq!(entry.model, *model);
+                assert_eq!(entry.device, *dev);
+            }
+        }
+        assert_eq!(
+            sweep.entry("alexnet", "Arria 10 GX 1150").unwrap().option(),
+            Some((16, 32))
+        );
+        // rankings agree with the legacy SweepReport views on the full DB
+        let legacy = sweep.to_sweep_report();
+        let ours: Vec<_> = sweep
+            .best_device_per_model()
+            .into_iter()
+            .map(|(m, b)| (m.to_string(), b.map(|r| r.device)))
+            .collect();
+        let theirs: Vec<_> = legacy
+            .best_device_per_model()
+            .into_iter()
+            .map(|(m, b)| (m.to_string(), b.map(|r| r.device)))
+            .collect();
+        assert_eq!(ours, theirs);
+        let ours: Vec<_> = sweep
+            .pareto_frontier()
+            .into_iter()
+            .map(|r| (r.model.clone(), r.device))
+            .collect();
+        let theirs: Vec<_> = legacy
+            .pareto_frontier()
+            .into_iter()
+            .map(|r| (r.model.clone(), r.device))
+            .collect();
+        assert_eq!(ours, theirs);
+        assert!(sweep.steals.executed > 0);
+        assert!(sweep.steals.workers >= 1);
+    }
+
+    #[test]
+    fn subset_device_rankings_stay_within_the_job() {
+        let session = Session::builder().threads(2).build();
+        let outcome = session
+            .run(
+                &CompileJob::builder()
+                    .model(zoo::build("alexnet", false).unwrap())
+                    .device(&CYCLONE_V_5CSEMA4)
+                    .device(&ARRIA_10_GX1150)
+                    .explorer(Explorer::BruteForce)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        let per_device = outcome.best_model_per_device();
+        assert_eq!(per_device.len(), 2, "only the job's devices are ranked");
+        assert!(per_device[0].1.is_none(), "nothing fits the 5CSEMA4");
+        assert_eq!(per_device[1].1.unwrap().model, "alexnet");
+    }
+
+    #[test]
+    fn quantization_errors_propagate_with_context() {
+        let session = Session::builder().threads(2).build();
+        let job = CompileJob::builder()
+            .model(zoo::build("alexnet", false).unwrap()) // no weights
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .quantize(QuantSpec::default())
+            .build()
+            .unwrap();
+        let err = session.run(&job).unwrap_err();
+        assert!(err.to_string().contains("quantization"));
+    }
+
+    #[test]
+    fn outcome_json_round_trips_and_repeats_byte_identically() {
+        let run = || {
+            let session = Session::builder().threads(2).build();
+            session
+                .run(
+                    &CompileJob::builder()
+                        .model(zoo::build("tiny", false).unwrap())
+                        .all_devices()
+                        .explorer(Explorer::BruteForce)
+                        .build()
+                        .unwrap(),
+                )
+                .unwrap()
+                .to_json()
+        };
+        let doc = run();
+        assert_eq!(doc.get("format").as_str(), Some(OUTCOME_FORMAT));
+        assert_eq!(doc.get("version").as_i64(), Some(OUTCOME_VERSION));
+        let text = doc.to_string_pretty();
+        let parsed = Json::parse(&text).expect("outcome JSON parses");
+        assert_eq!(parsed, doc, "document round-trips through the codec");
+        assert_eq!(parsed.to_string_pretty(), text);
+        // volatile fields (wall clocks, steals, memo counters) are
+        // excluded, so a second independent run emits identical bytes
+        assert_eq!(run().to_string_pretty(), text);
+    }
+}

@@ -8,13 +8,21 @@
 //!
 //! "CNN2Gate is also capable of building and running the CNN model in
 //! both emulation and full flow mode."
+//!
+//! The flow itself now lives in [`crate::session`]: a 1×1
+//! [`CompileJob`](crate::session::CompileJob) run through
+//! [`Session::run`](crate::session::Session::run) is exactly this
+//! module's old `run` ladder. The free functions below survive as
+//! deprecated shims over the same engine — bit-identical by
+//! construction, and pinned so by the shim tests — so existing callers
+//! keep working while new code goes through the session.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use crate::dse::{brute, eval, rl, DseResult, Evaluator, Fidelity, RlConfig};
-use crate::estimator::{synthesis_minutes, Device, ResourceEstimate, Thresholds};
-use crate::ir::{ComputationFlow, Graph};
-use crate::quant::{self, QuantReport, QuantSpec};
+use crate::dse::{eval, DseResult, Evaluator, Fidelity};
+use crate::estimator::{Device, ResourceEstimate, Thresholds};
+use crate::ir::Graph;
+use crate::quant::{QuantReport, QuantSpec};
 use crate::sim::{NetworkStepReport, SimReport};
 
 /// Which explorer drives the fit.
@@ -65,10 +73,38 @@ impl SynthReport {
     }
 }
 
+/// One (model, device) pair through the session engine — the shared
+/// body of every shim below.
+fn one_pair(
+    evaluator: &Evaluator,
+    graph: &Graph,
+    device: &'static Device,
+    explorer: Explorer,
+    thresholds: Thresholds,
+    quant_spec: Option<&QuantSpec>,
+    fidelity: Fidelity,
+) -> Result<SynthReport> {
+    let run = crate::session::execute(
+        evaluator,
+        std::slice::from_ref(graph),
+        &[device],
+        explorer,
+        thresholds,
+        quant_spec,
+        fidelity,
+    )?;
+    Ok(run
+        .entries
+        .into_iter()
+        .next()
+        .expect("a 1x1 job yields exactly one report"))
+}
+
 /// Run the flow for `graph` on `device`.
 ///
 /// `quant_spec` is the user-given post-training quantization; pass `None`
 /// to skip the application step (models without resident weights).
+#[deprecated(note = "use a 1x1 cnn2gate::session::CompileJob with Session::run")]
 pub fn run(
     graph: &Graph,
     device: &'static Device,
@@ -76,12 +112,21 @@ pub fn run(
     thresholds: Thresholds,
     quant_spec: Option<&QuantSpec>,
 ) -> Result<SynthReport> {
-    run_with(eval::global(), graph, device, explorer, thresholds, quant_spec)
+    one_pair(
+        eval::global(),
+        graph,
+        device,
+        explorer,
+        thresholds,
+        quant_spec,
+        Fidelity::Analytical,
+    )
 }
 
 /// Same flow through a caller-provided evaluator — what the fleet/sweep
-/// fan-outs and the `--cache-file` CLI path use, so every explorer in a
-/// run shares one (possibly disk-seeded) estimator memo.
+/// fan-outs and the `--cache-file` CLI path used before sessions owned
+/// the evaluator.
+#[deprecated(note = "use cnn2gate::session::Session, which owns the evaluator")]
 pub fn run_with(
     evaluator: &Evaluator,
     graph: &Graph,
@@ -90,7 +135,7 @@ pub fn run_with(
     thresholds: Thresholds,
     quant_spec: Option<&QuantSpec>,
 ) -> Result<SynthReport> {
-    run_with_fidelity(
+    one_pair(
         evaluator,
         graph,
         device,
@@ -106,6 +151,7 @@ pub fn run_with(
 /// `SteppedFullNetwork` surfaces the chosen design's per-layer
 /// stall/backpressure census on the report (the `synth --report` path).
 /// The chosen design itself is fidelity-independent.
+#[deprecated(note = "set the fidelity on cnn2gate::session::SessionBuilder instead")]
 pub fn run_with_fidelity(
     evaluator: &Evaluator,
     graph: &Graph,
@@ -115,61 +161,15 @@ pub fn run_with_fidelity(
     quant_spec: Option<&QuantSpec>,
     fidelity: Fidelity,
 ) -> Result<SynthReport> {
-    let flow = ComputationFlow::extract(graph).map_err(|e| anyhow!("flow extraction: {e}"))?;
-
-    let quant = match quant_spec {
-        Some(spec) => Some(quant::apply(graph, spec).map_err(|e| anyhow!("quantization: {e}"))?),
-        None => None,
-    };
-
-    let dse = match explorer {
-        Explorer::BruteForce => {
-            brute::explore_with_fidelity(evaluator, &flow, device, thresholds, fidelity)
-        }
-        Explorer::Reinforcement => rl::explore_with_fidelity(
-            evaluator,
-            &flow,
-            device,
-            thresholds,
-            RlConfig::default(),
-            fidelity,
-        ),
-    };
-
-    let (estimate, synth_min, sim, stepped_network) = match (dse.best, &dse.best_estimate) {
-        (Some((ni, nl)), Some(est)) => {
-            let minutes = synthesis_minutes(est, device);
-            // the chosen option was already scored during exploration —
-            // pull its latency report from the shared memo (bit-identical
-            // to simulate(): Evaluation.latency IS simulate_with_estimate
-            // over the same single estimator call) instead of re-deriving
-            // it, so warm cache-file runs recompute nothing
-            let (chosen, _) = evaluator.evaluate(&flow, device, ni, nl, fidelity);
-            (
-                Some(est.clone()),
-                Some(minutes),
-                Some(chosen.latency.clone()),
-                chosen.stepped_network.clone(),
-            )
-        }
-        _ => (None, None, None, None),
-    };
-
-    Ok(SynthReport {
-        model: graph.name.clone(),
-        device: device.name,
-        explorer,
-        dse,
-        estimate,
-        synthesis_minutes: synth_min,
-        sim,
-        stepped_network,
-        quant,
-    })
+    one_pair(
+        evaluator, graph, device, explorer, thresholds, quant_spec, fidelity,
+    )
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shims are exactly what these tests pin
+
     use super::*;
     use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
     use crate::onnx::zoo;

@@ -1,6 +1,11 @@
 //! Cross-module integration tests: the full pipeline over every zoo
 //! model × every device, the artifact contract, and paper-shape
 //! invariants that span estimator + DSE + simulator.
+//!
+//! Several tests intentionally exercise the deprecated `synth::run*` /
+//! `fit_fleet*` / `sweep_matrix*` shims: they pin the seed behavior the
+//! session engine must reproduce (see also `tests/session.rs`).
+#![allow(deprecated)]
 
 use cnn2gate::dse::{brute, rl, OptionSpace, RlConfig};
 use cnn2gate::estimator::{device, estimate, Thresholds};

@@ -1,0 +1,423 @@
+//! Session-engine integration tests: the deprecated free-function shims
+//! must stay bit-identical to [`cnn2gate::session::Session::run`] (cold
+//! AND cache-warm), outcomes must be scheduling-independent, and the
+//! `--json` document must be stable, round-trip-parseable and match the
+//! committed golden schema.
+#![allow(deprecated)] // the shims are one side of every identity check
+
+use std::collections::BTreeSet;
+use std::path::Path;
+use std::sync::Arc;
+
+use cnn2gate::coordinator::pipeline::{self, FleetReport, SweepReport};
+use cnn2gate::dse::{EvalCache, Evaluator, Fidelity, OptionSpace};
+use cnn2gate::estimator::{device, Thresholds};
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::zoo;
+use cnn2gate::quant::QuantSpec;
+use cnn2gate::report::{
+    fig6, fleet_table, stepped_census_table, sweep_best_device_table, sweep_best_model_table,
+    sweep_pareto_table, sweep_table,
+};
+use cnn2gate::session::{CompileJob, Outcome, Session};
+use cnn2gate::synth::{self, Explorer, SynthReport};
+use cnn2gate::util::json::Json;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cnn2gate-session-it-{}-{tag}.json", std::process::id()))
+}
+
+/// Field-by-field identity of two synthesis reports (every
+/// deterministic field; wall clocks excluded by construction).
+fn assert_report_identity(old: &SynthReport, new: &SynthReport, ctx: &str) {
+    assert_eq!(old.model, new.model, "{ctx}");
+    assert_eq!(old.device, new.device, "{ctx}");
+    assert_eq!(old.option(), new.option(), "{ctx}");
+    assert_eq!(old.dse.trace, new.dse.trace, "{ctx}: DSE traces");
+    assert_eq!(old.dse.queries, new.dse.queries, "{ctx}");
+    assert_eq!(old.dse.cache_hits, new.dse.cache_hits, "{ctx}");
+    assert_eq!(old.dse.f_max.to_bits(), new.dse.f_max.to_bits(), "{ctx}");
+    assert_eq!(old.dse.modeled_seconds, new.dse.modeled_seconds, "{ctx}");
+    assert_eq!(old.estimate, new.estimate, "{ctx}");
+    assert_eq!(old.synthesis_minutes, new.synthesis_minutes, "{ctx}");
+    assert_eq!(old.sim, new.sim, "{ctx}");
+    assert_eq!(old.stepped_network, new.stepped_network, "{ctx}");
+}
+
+#[test]
+fn shim_synth_bit_identity_cold_and_warm() {
+    let g = zoo::build("alexnet", false).unwrap();
+    let th = Thresholds::default();
+    let fidelity = Fidelity::SteppedFullNetwork;
+
+    // cold: old free function vs a fresh session
+    let old_ev = Evaluator::new(4);
+    let old = synth::run_with_fidelity(
+        &old_ev,
+        &g,
+        &device::ARRIA_10_GX1150,
+        Explorer::BruteForce,
+        th,
+        None,
+        fidelity,
+    )
+    .unwrap();
+    let session = Session::builder().threads(4).fidelity(fidelity).build();
+    let job = CompileJob::builder()
+        .model(g.clone())
+        .device(&device::ARRIA_10_GX1150)
+        .explorer(Explorer::BruteForce)
+        .build()
+        .unwrap();
+    let new = session.run(&job).unwrap().into_synth_report().unwrap();
+    assert_report_identity(&old, &new, "cold synth");
+    // rendered output is byte-identical too
+    assert_eq!(
+        fig6(old.sim.as_ref().unwrap()).render(),
+        fig6(new.sim.as_ref().unwrap()).render()
+    );
+    assert_eq!(
+        stepped_census_table(old.sim.as_ref().unwrap(), old.stepped_network.as_ref().unwrap())
+            .render(),
+        stepped_census_table(new.sim.as_ref().unwrap(), new.stepped_network.as_ref().unwrap())
+            .render()
+    );
+
+    // warm: persist the memo, reload on both sides, nothing recomputes
+    let path = tmp("synth");
+    old_ev.cache().save(&path).unwrap();
+    let warm_ev = Evaluator::with_cache(4, Arc::new(EvalCache::load(&path).unwrap()));
+    let old_warm = synth::run_with_fidelity(
+        &warm_ev,
+        &g,
+        &device::ARRIA_10_GX1150,
+        Explorer::BruteForce,
+        th,
+        None,
+        fidelity,
+    )
+    .unwrap();
+    let warm_session = Session::builder().cache_file(&path).fidelity(fidelity).build();
+    assert!(warm_session.load_warning().is_none());
+    let new_warm = warm_session.run(&job).unwrap().into_synth_report().unwrap();
+    assert_eq!(warm_ev.cache().stats().misses, 0, "old warm path recomputed");
+    assert_eq!(
+        warm_session.evaluator().cache().stats().misses,
+        0,
+        "new warm path recomputed"
+    );
+    assert_report_identity(&old_warm, &old, "old warm vs cold");
+    assert_report_identity(&new_warm, &new, "new warm vs cold");
+    std::fs::remove_file(&path).ok();
+}
+
+fn fleet_tables(rep: &FleetReport) -> String {
+    fleet_table(&rep.model, &rep.entries).render()
+}
+
+#[test]
+fn shim_fleet_bit_identity_cold_and_warm() {
+    let g = zoo::build("alexnet", false).unwrap();
+    let th = Thresholds::default();
+
+    let old_ev = Evaluator::new(4);
+    let old = pipeline::fit_fleet_with(&old_ev, &g, Explorer::BruteForce, th).unwrap();
+    let session = Session::builder().threads(4).build();
+    let job = CompileJob::builder()
+        .model(g.clone())
+        .all_devices()
+        .explorer(Explorer::BruteForce)
+        .build()
+        .unwrap();
+    let outcome = session.run(&job).unwrap();
+    let new = outcome.to_fleet_report().unwrap();
+    assert_eq!(old.entries.len(), new.entries.len());
+    for (o, n) in old.entries.iter().zip(&new.entries) {
+        assert_report_identity(o, n, "cold fleet");
+    }
+    assert_eq!(fleet_tables(&old), fleet_tables(&new), "fleet tables byte-identical");
+
+    // warm on both sides from the same persisted memo
+    let path = tmp("fleet");
+    old_ev.cache().save(&path).unwrap();
+    let warm_ev = Evaluator::with_cache(4, Arc::new(EvalCache::load(&path).unwrap()));
+    let old_warm = pipeline::fit_fleet_with(&warm_ev, &g, Explorer::BruteForce, th).unwrap();
+    let warm_session = Session::builder().cache_file(&path).build();
+    let new_warm = warm_session.run(&job).unwrap().to_fleet_report().unwrap();
+    assert_eq!(warm_ev.cache().stats().misses, 0);
+    assert_eq!(warm_session.evaluator().cache().stats().misses, 0);
+    assert_eq!(fleet_tables(&old_warm), fleet_tables(&old), "old warm drifted");
+    assert_eq!(fleet_tables(&new_warm), fleet_tables(&new), "new warm drifted");
+    std::fs::remove_file(&path).ok();
+}
+
+fn sweep_tables(rep: &SweepReport) -> String {
+    format!(
+        "{}{}{}{}",
+        sweep_table(rep).render(),
+        sweep_best_device_table(rep).render(),
+        sweep_best_model_table(rep).render(),
+        sweep_pareto_table(rep).render()
+    )
+}
+
+#[test]
+fn shim_sweep_bit_identity_cold_and_warm() {
+    let models = [
+        zoo::build("alexnet", false).unwrap(),
+        zoo::build("vgg16", false).unwrap(),
+    ];
+    let th = Thresholds::default();
+
+    let old_ev = Evaluator::new(4);
+    let old = pipeline::sweep_matrix_with(
+        &old_ev,
+        &models,
+        Explorer::BruteForce,
+        th,
+        Fidelity::Analytical,
+    )
+    .unwrap();
+    let session = Session::builder().threads(4).build();
+    let job = CompileJob::builder()
+        .models(models.clone())
+        .all_devices()
+        .explorer(Explorer::BruteForce)
+        .build()
+        .unwrap();
+    let outcome = session.run(&job).unwrap();
+    let new = outcome.to_sweep_report();
+    assert_eq!(old.entries.len(), new.entries.len());
+    for (o, n) in old.entries.iter().zip(&new.entries) {
+        assert_report_identity(o, n, "cold sweep");
+    }
+    assert_eq!(sweep_tables(&old), sweep_tables(&new), "all four sweep tables");
+
+    let path = tmp("sweep");
+    old_ev.cache().save(&path).unwrap();
+    let warm_ev = Evaluator::with_cache(4, Arc::new(EvalCache::load(&path).unwrap()));
+    let old_warm = pipeline::sweep_matrix_with(
+        &warm_ev,
+        &models,
+        Explorer::BruteForce,
+        th,
+        Fidelity::Analytical,
+    )
+    .unwrap();
+    let warm_session = Session::builder().cache_file(&path).build();
+    let new_warm = warm_session.run(&job).unwrap().to_sweep_report();
+    assert_eq!(warm_ev.cache().stats().misses, 0);
+    assert_eq!(warm_session.evaluator().cache().stats().misses, 0);
+    assert_eq!(sweep_tables(&old_warm), sweep_tables(&old));
+    assert_eq!(sweep_tables(&new_warm), sweep_tables(&new));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fleet_and_rl_batches_ride_the_scheduler_deterministically() {
+    // acceptance shape: fleet fits and RL episode batches execute on the
+    // work-stealing deques (StealStats surfaced in the Outcome) while
+    // results stay input-order deterministic — byte-identical tables
+    // across runs
+    let flow = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+    let grid = OptionSpace::from_flow(&flow).pairs().len();
+    let n_dev = device::all().len();
+    // chunked prewarm items (CHUNK=4) + one explorer item per pair
+    let expected_items = grid.div_ceil(4) * n_dev + n_dev;
+    let run = |explorer: Explorer| {
+        let session = Session::builder().threads(4).build();
+        let job = CompileJob::builder()
+            .model(zoo::build("alexnet", false).unwrap())
+            .all_devices()
+            .explorer(explorer)
+            .build()
+            .unwrap();
+        let outcome = session.run(&job).unwrap();
+        assert_eq!(
+            outcome.steals.executed, expected_items,
+            "every prewarm chunk and every per-pair explorer is a deque item"
+        );
+        assert!(outcome.steals.workers >= 1);
+        let rep = outcome.to_fleet_report().unwrap();
+        // database order preserved regardless of who stole what
+        for (entry, dev) in rep.entries.iter().zip(device::all()) {
+            assert_eq!(entry.device, dev.name);
+        }
+        fleet_tables(&rep)
+    };
+    assert_eq!(run(Explorer::BruteForce), run(Explorer::BruteForce));
+    assert_eq!(run(Explorer::Reinforcement), run(Explorer::Reinforcement));
+}
+
+// ---------------------------------------------------------------------------
+// --json document: stability + golden schema
+// ---------------------------------------------------------------------------
+
+fn analytical_outcome() -> Outcome {
+    let session = Session::builder().threads(4).build();
+    session
+        .run(
+            &CompileJob::builder()
+                .model(zoo::build("alexnet", false).unwrap())
+                .all_devices()
+                .explorer(Explorer::BruteForce)
+                .build()
+                .unwrap(),
+        )
+        .unwrap()
+}
+
+fn quantized_stepped_outcome() -> Outcome {
+    let session = Session::builder()
+        .threads(4)
+        .fidelity(Fidelity::SteppedFullNetwork)
+        .build();
+    session
+        .run(
+            &CompileJob::builder()
+                .model(zoo::build("lenet5", true).unwrap())
+                .device(&device::ARRIA_10_GX1150)
+                .explorer(Explorer::BruteForce)
+                .quantize(QuantSpec::default())
+                .build()
+                .unwrap(),
+        )
+        .unwrap()
+}
+
+#[test]
+fn outcome_json_is_stable_across_cold_and_warm_runs() {
+    let cold = analytical_outcome().to_json().to_string_pretty();
+    // a warm run from a persisted cache must emit the same bytes: the
+    // document carries no wall clocks, steal counts or memo counters
+    let path = tmp("json-warm");
+    let session = Session::builder().cache_file(&path).build();
+    let job = CompileJob::builder()
+        .model(zoo::build("alexnet", false).unwrap())
+        .all_devices()
+        .explorer(Explorer::BruteForce)
+        .build()
+        .unwrap();
+    session.run(&job).unwrap();
+    session.close().unwrap();
+    let warm_session = Session::builder().cache_file(&path).build();
+    let warm = warm_session.run(&job).unwrap().to_json().to_string_pretty();
+    assert_eq!(warm_session.evaluator().cache().stats().misses, 0);
+    assert_eq!(cold, warm, "--json output must not depend on cache state");
+    // and it round-trips through the codec byte-for-byte
+    let doc = Json::parse(&cold).expect("outcome JSON parses");
+    assert_eq!(doc.to_string_pretty(), cold);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Collect every key path of a JSON document: object keys join with
+/// `.`, array elements with `[]`; leaves (and empty containers) record
+/// their path.
+fn collect_paths(v: &Json, prefix: &str, out: &mut BTreeSet<String>) {
+    match v {
+        Json::Obj(o) => {
+            if o.is_empty() {
+                out.insert(prefix.to_string());
+            }
+            for (k, child) in o.iter() {
+                let p = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                collect_paths(child, &p, out);
+            }
+        }
+        Json::Arr(a) => {
+            let p = format!("{prefix}[]");
+            if a.is_empty() {
+                out.insert(p.clone());
+            }
+            for child in a {
+                collect_paths(child, &p, out);
+            }
+        }
+        _ => {
+            out.insert(prefix.to_string());
+        }
+    }
+}
+
+#[test]
+fn outcome_json_matches_the_golden_schema() {
+    // union of the fitting/non-fitting analytical sweep (nulls, option
+    // arrays, rankings) and a quantized stepped-full 1×1 (quant +
+    // stepped_network sections): together they exercise every key the
+    // v1 schema can emit
+    let mut got = BTreeSet::new();
+    collect_paths(&analytical_outcome().to_json(), "", &mut got);
+    collect_paths(&quantized_stepped_outcome().to_json(), "", &mut got);
+
+    let golden_path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/outcome_v1_paths.txt");
+    if std::env::var("CNN2GATE_UPDATE_GOLDENS").is_ok() {
+        let mut text = String::from(
+            "# Key paths of the cnn2gate-outcome v1 JSON document (--json).\n\
+             # Regenerate with CNN2GATE_UPDATE_GOLDENS=1 cargo test outcome_json_matches.\n",
+        );
+        for p in &got {
+            text.push_str(p);
+            text.push('\n');
+        }
+        std::fs::write(&golden_path, text).unwrap();
+    }
+    let want: BTreeSet<String> = std::fs::read_to_string(&golden_path)
+        .expect("golden schema file committed at rust/tests/golden/outcome_v1_paths.txt")
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(String::from)
+        .collect();
+    let missing: Vec<&String> = want.difference(&got).collect();
+    let extra: Vec<&String> = got.difference(&want).collect();
+    assert!(
+        missing.is_empty() && extra.is_empty(),
+        "outcome schema drift\n  in golden but not emitted: {missing:?}\n  emitted but not in golden: {extra:?}\n  (CNN2GATE_UPDATE_GOLDENS=1 regenerates the golden)"
+    );
+}
+
+#[test]
+fn outcome_json_carries_the_acceptance_payload() {
+    let doc = analytical_outcome().to_json();
+    assert_eq!(doc.get("format").as_str(), Some("cnn2gate-outcome"));
+    assert_eq!(doc.get("version").as_i64(), Some(1));
+    assert_eq!(doc.get("explorer").as_str(), Some("bf"));
+    assert_eq!(doc.get("fidelity").as_str(), Some("analytical"));
+    let entries = doc.get("entries").as_arr().unwrap();
+    assert_eq!(entries.len(), device::all().len());
+    // the Arria 10 cell carries the paper's design
+    let arria = entries
+        .iter()
+        .find(|e| e.get("device").as_str() == Some("Arria 10 GX 1150"))
+        .unwrap();
+    assert_eq!(arria.get("fits").as_bool(), Some(true));
+    assert_eq!(arria.get("option").as_usize_vec(), Some(vec![16, 32]));
+    assert!(arria.get("latency").get("total_millis").as_f64().unwrap() > 0.0);
+    assert_eq!(arria.get("trace").as_arr().unwrap().len(), 12);
+    // the 5CSEMA4 cell is an explicit no-fit, not an absent row
+    let cyclone = entries
+        .iter()
+        .find(|e| e.get("device").as_str() == Some("Cyclone V SoC 5CSEMA4"))
+        .unwrap();
+    assert_eq!(cyclone.get("fits").as_bool(), Some(false));
+    assert!(cyclone.get("option").is_null());
+    assert!(cyclone.get("estimate").is_null());
+    // rankings present
+    let rankings = doc.get("rankings");
+    assert_eq!(
+        rankings.get("best_device_per_model").as_arr().unwrap().len(),
+        1
+    );
+    assert!(!rankings.get("pareto_frontier").as_arr().unwrap().is_empty());
+    // the stepped/quantized shape carries its sections
+    let stepped = quantized_stepped_outcome().to_json();
+    let entry = stepped.get("entries").idx(0);
+    assert!(!entry.get("stepped_network").is_null());
+    assert!(entry.get("quant").get("tensors").as_usize().unwrap() > 0);
+    assert_eq!(stepped.get("fidelity").as_str(), Some("stepped-full-network"));
+}
