@@ -7,13 +7,14 @@
 //! plus PJRT dispatch overhead when artifacts are present.
 //!
 //! Writes `BENCH_PR3.json` (machine-readable: stepped speedup, stepped
-//! full-network candidates/s, model×device sweep wall-clock) so the perf
-//! trajectory is data, not prose.
+//! full-network candidates/s, model×device sweep wall-clock) and
+//! `BENCH_PR5.json` (specialization-pass wall time + cycle gain) so the
+//! perf trajectory is data, not prose.
 
 mod common;
 
 use cnn2gate::coordinator::pipeline;
-use cnn2gate::dse::{brute, eval, EvalCache, Evaluation, Evaluator, Fidelity};
+use cnn2gate::dse::{brute, eval, specialize, EvalCache, Evaluation, Evaluator, Fidelity};
 use cnn2gate::estimator::device::ARRIA_10_GX1150;
 use cnn2gate::estimator::{estimate, Thresholds};
 use cnn2gate::ir::ComputationFlow;
@@ -175,6 +176,44 @@ fn main() {
         doc.insert("stepped_full_network", Json::Obj(full));
         doc.insert("sweep", Json::Obj(sweep));
         let path = std::path::Path::new("BENCH_PR3.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).unwrap();
+        println!("perf record written to {}", path.display());
+    }
+
+    // per-layer specialization pass on the uniform stepped-full winner
+    // (the PR-5 tentpole): wall time of the greedy re-fold, plus THE
+    // acceptance gate — ≥5% fewer stepped-full total cycles than the
+    // uniform (Ni,Nl) winner on AlexNet / Arria 10
+    let spec_est = estimate(&flow, &ARRIA_10_GX1150, 16, 32);
+    let census = cnn2gate::sim::step_network(&flow, &ARRIA_10_GX1150, spec_est.fmax_mhz, 16, 32);
+    let th = Thresholds::default();
+    let t_spec = h.bench("dse/specialize(alexnet a10)", 20, || {
+        specialize::specialize(&flow, &ARRIA_10_GX1150, &th, &spec_est, &census)
+    });
+    let spec = specialize::specialize(&flow, &ARRIA_10_GX1150, &th, &spec_est, &census);
+    let cyc_uniform = spec.uniform_total_cycles();
+    let cyc_spec = spec.specialized_total_cycles();
+    h.check(
+        cyc_spec as f64 <= 0.95 * cyc_uniform as f64,
+        &format!(
+            "specialized alexnet/a10 ≥5% fewer stepped-full cycles ({:.1}% gain)",
+            100.0 * spec.gain_fraction()
+        ),
+    );
+    h.check(t_spec < 2.0, "specialization pass stays interactive (< 2 s)");
+
+    // machine-readable PR-5 perf record
+    {
+        let mut s = JsonObj::new();
+        s.insert("pass_seconds", t_spec.into());
+        s.insert("uniform_total_cycles", Json::Num(cyc_uniform as f64));
+        s.insert("specialized_total_cycles", Json::Num(cyc_spec as f64));
+        s.insert("gain_fraction", spec.gain_fraction().into());
+        s.insert("specialized_rounds", spec.specialized_rounds().into());
+        let mut doc = JsonObj::new();
+        doc.insert("format", "cnn2gate-bench-pr5".into());
+        doc.insert("specialization", Json::Obj(s));
+        let path = std::path::Path::new("BENCH_PR5.json");
         std::fs::write(path, Json::Obj(doc).to_string_pretty()).unwrap();
         println!("perf record written to {}", path.display());
     }

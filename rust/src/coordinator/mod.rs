@@ -11,7 +11,5 @@ pub mod scheduler;
 pub mod server;
 
 pub use pipeline::{run_pipeline, FleetReport, PipelineConfig, PipelineResult, SweepReport};
-#[allow(deprecated)] // re-exported for the migration window; see crate::session
-pub use pipeline::{fit_fleet, fit_fleet_with, sweep_matrix, sweep_matrix_with};
 pub use scheduler::{work_steal_map, work_steal_map_seeded, StealStats};
 pub use server::{InferenceServer, ServerConfig, ServerStats};

@@ -4,21 +4,21 @@
 //! → DSE + fit on the target device → simulated synthesis + latency →
 //! optional emulation-mode numerics check against the AOT artifacts.
 //!
-//! The multi-target fan-outs — [`fit_fleet`] (one model × every device)
-//! and [`sweep_matrix`] (models × devices, with rankings and the Pareto
+//! The multi-target fan-outs — the fleet fit (one model × every device)
+//! and the sweep (models × devices, with rankings and the Pareto
 //! frontier) — are shapes of one job since PR 4: a [`CompileJob`]
 //! executed by [`Session::run`] on the two-phase work-stealing engine
-//! ([`crate::session`]). The free functions here
-//! survive as deprecated shims over that same engine, so they stay
-//! bit-identical to the session path (pinned by the shim tests); the
+//! ([`crate::session`]). The PR-4 deprecated shims (`fit_fleet[_with]`,
+//! `sweep_matrix[_with]`) are gone now that nothing cites them; the
 //! report structs ([`FleetReport`], [`SweepReport`]) remain the legacy
-//! views an [`Outcome`](crate::session::Outcome) can still render to.
+//! views an [`Outcome`](crate::session::Outcome) renders to, and their
+//! rankings run over the devices the job actually evaluated (a device
+//! subset is ranked as a subset, never against the whole database).
 
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::dse::{eval, Evaluator, Fidelity};
 use crate::estimator::{device, Device, Thresholds};
 use crate::ir::DType;
 use crate::ir::Graph;
@@ -157,90 +157,16 @@ impl FleetReport {
     }
 }
 
-/// The shared body of the fleet shims: a 1×N job on the session engine.
-fn fleet_via_engine(
-    evaluator: &Evaluator,
-    graph: &Graph,
-    explorer: Explorer,
-    thresholds: Thresholds,
-) -> Result<FleetReport> {
-    let devices = device::all();
-    let run = crate::session::execute(
-        evaluator,
-        std::slice::from_ref(graph),
-        &devices,
-        explorer,
-        thresholds,
-        None,
-        Fidelity::Analytical,
-    )?;
-    Ok(FleetReport {
-        model: graph.name.clone(),
-        explorer,
-        entries: run.entries,
-        wall_seconds: run.wall_seconds,
-    })
-}
-
-/// The shared body of the sweep shims: an M×N job on the session engine.
-fn sweep_via_engine(
-    evaluator: &Evaluator,
-    graphs: &[Graph],
-    explorer: Explorer,
-    thresholds: Thresholds,
-    fidelity: Fidelity,
-) -> Result<SweepReport> {
-    let run = crate::session::execute(
-        evaluator,
-        graphs,
-        &device::all(),
-        explorer,
-        thresholds,
-        None,
-        fidelity,
-    )?;
-    Ok(SweepReport {
-        explorer,
-        models: graphs.iter().map(|g| g.name.clone()).collect(),
-        entries: run.entries,
-        wall_seconds: run.wall_seconds,
-    })
-}
-
-/// Fit `graph` on every device in [`device::all`] concurrently on the
-/// session engine's work-stealing deques; all per-device explorers score
-/// candidates through the shared estimator memo (so the fleet costs each
-/// unique candidate once). Entries come back in database order.
-#[deprecated(note = "use a 1xN cnn2gate::session::CompileJob (all_devices) with Session::run")]
-pub fn fit_fleet(
-    graph: &Graph,
-    explorer: Explorer,
-    thresholds: Thresholds,
-) -> Result<FleetReport> {
-    fleet_via_engine(eval::global(), graph, explorer, thresholds)
-}
-
-/// [`fit_fleet`] through a caller-provided evaluator (the `--cache-file`
-/// CLI path used to seed one from disk before sessions owned it).
-#[deprecated(note = "use cnn2gate::session::Session, which owns the evaluator and cache")]
-pub fn fit_fleet_with(
-    evaluator: &Evaluator,
-    graph: &Graph,
-    explorer: Explorer,
-    thresholds: Thresholds,
-) -> Result<FleetReport> {
-    fleet_via_engine(evaluator, graph, explorer, thresholds)
-}
-
 /// Every (model, device) pair explored: the fleet fit generalized to the
-/// full model×device matrix the `sweep` subcommand reports.
+/// full model×device matrix the `sweep` subcommand reports. Produced by
+/// [`Outcome::to_sweep_report`](crate::session::Outcome::to_sweep_report).
 #[derive(Debug)]
 pub struct SweepReport {
     pub explorer: Explorer,
-    /// Model names in the order given to [`sweep_matrix`].
+    /// Model names in job order.
     pub models: Vec<String>,
     /// One synthesis report per (model, device) pair: model-major in
-    /// `models` order, devices in [`device::all`] order within a model.
+    /// `models` order, devices in the job's device order within a model.
     pub entries: Vec<SynthReport>,
     /// Wall time of the concurrent sweep.
     pub wall_seconds: f64,
@@ -278,18 +204,33 @@ impl SweepReport {
             .collect()
     }
 
-    /// Best (lowest simulated latency) fitting model per device, in
-    /// database order; `None` when nothing fits the device.
+    /// The devices this sweep actually evaluated, in job order (first
+    /// occurrence across the model-major entries).
+    pub fn devices(&self) -> Vec<&'static str> {
+        let mut seen: Vec<&'static str> = Vec::new();
+        for e in &self.entries {
+            if !seen.contains(&e.device) {
+                seen.push(e.device);
+            }
+        }
+        seen
+    }
+
+    /// Best (lowest simulated latency) fitting model per device, over
+    /// the job's OWN device set in job order; `None` when nothing fits
+    /// the device. (This used to iterate the full device database, so a
+    /// subset sweep grew spurious "none fits" rows for devices the job
+    /// never evaluated — ROADMAP follow-up (f).)
     pub fn best_model_per_device(&self) -> Vec<(&'static str, Option<&SynthReport>)> {
-        device::all()
+        self.devices()
             .into_iter()
             .map(|dev| {
                 let best = self
                     .entries
                     .iter()
-                    .filter(|e| e.device == dev.name && e.fits())
+                    .filter(|e| e.device == dev && e.fits())
                     .min_by(|a, b| latency_key(a).total_cmp(&latency_key(b)));
-                (dev.name, best)
+                (dev, best)
             })
             .collect()
     }
@@ -315,31 +256,6 @@ impl SweepReport {
         }
         frontier
     }
-}
-
-/// Explore every (model, device) pair through the process-wide
-/// evaluator at analytical fidelity. See [`sweep_matrix_with`].
-#[deprecated(note = "use an MxN cnn2gate::session::CompileJob with Session::run")]
-pub fn sweep_matrix(
-    graphs: &[Graph],
-    explorer: Explorer,
-    thresholds: Thresholds,
-) -> Result<SweepReport> {
-    sweep_via_engine(eval::global(), graphs, explorer, thresholds, Fidelity::Analytical)
-}
-
-/// Explore every (model, device) pair through `evaluator` at `fidelity`
-/// on the session engine (work-stealing prewarm, hit-only explorers,
-/// deterministic model-major entries — see [`crate::session`]).
-#[deprecated(note = "use cnn2gate::session::Session (fidelity + evaluator live on the builder)")]
-pub fn sweep_matrix_with(
-    evaluator: &Evaluator,
-    graphs: &[Graph],
-    explorer: Explorer,
-    thresholds: Thresholds,
-    fidelity: Fidelity,
-) -> Result<SweepReport> {
-    sweep_via_engine(evaluator, graphs, explorer, thresholds, fidelity)
 }
 
 /// Emulation mode: run the AOT HLO through PJRT; replay the golden when
@@ -442,11 +358,45 @@ pub fn time_emulation_synthetic(
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the shims are exactly what these tests pin
-
     use super::*;
+    use crate::dse::Fidelity;
     use crate::ir::ComputationFlow;
-    use crate::synth;
+
+    /// 1×N fleet through the session front door.
+    fn fleet(model: &str, explorer: Explorer) -> FleetReport {
+        let session = Session::builder().threads(4).build();
+        let job = CompileJob::builder()
+            .model(zoo::build(model, false).unwrap())
+            .all_devices()
+            .explorer(explorer)
+            .build()
+            .unwrap();
+        session.run(&job).unwrap().to_fleet_report().unwrap()
+    }
+
+    /// M×N sweep through the session front door.
+    fn sweep(models: &[&str], explorer: Explorer, fidelity: Fidelity) -> SweepReport {
+        let session = Session::builder().threads(4).fidelity(fidelity).build();
+        let job = CompileJob::builder()
+            .models(models.iter().map(|m| zoo::build(m, false).unwrap()))
+            .all_devices()
+            .explorer(explorer)
+            .build()
+            .unwrap();
+        session.run(&job).unwrap().to_sweep_report()
+    }
+
+    /// 1×1 synth through the session front door.
+    fn solo(model: &str, device: &'static Device) -> SynthReport {
+        let session = Session::builder().threads(2).build();
+        let job = CompileJob::builder()
+            .model(zoo::build(model, false).unwrap())
+            .device(device)
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        session.run(&job).unwrap().into_synth_report().unwrap()
+    }
 
     #[test]
     fn zoo_pipeline_runs_end_to_end() {
@@ -465,8 +415,7 @@ mod tests {
 
     #[test]
     fn fleet_fit_covers_every_device_and_ranks_fits() {
-        let g = crate::onnx::zoo::build("alexnet", false).unwrap();
-        let rep = fit_fleet(&g, Explorer::BruteForce, Thresholds::default()).unwrap();
+        let rep = fleet("alexnet", Explorer::BruteForce);
         assert_eq!(rep.entries.len(), device::all().len());
         // entries preserve database order
         for (entry, dev) in rep.entries.iter().zip(device::all()) {
@@ -492,14 +441,12 @@ mod tests {
     #[test]
     fn fleet_fit_matches_single_device_runs() {
         // concurrency must not change any per-device outcome
-        let g = crate::onnx::zoo::build("alexnet", false).unwrap();
-        let rep = fit_fleet(&g, Explorer::BruteForce, Thresholds::default()).unwrap();
+        let rep = fleet("alexnet", Explorer::BruteForce);
         for (entry, dev) in rep.entries.iter().zip(device::all()) {
-            let solo = synth::run(&g, dev, Explorer::BruteForce, Thresholds::default(), None)
-                .unwrap();
-            assert_eq!(entry.option(), solo.option(), "{}", dev.name);
-            assert_eq!(entry.dse.trace, solo.dse.trace, "{}", dev.name);
-            assert_eq!(entry.synthesis_minutes, solo.synthesis_minutes, "{}", dev.name);
+            let one = solo("alexnet", dev);
+            assert_eq!(entry.option(), one.option(), "{}", dev.name);
+            assert_eq!(entry.dse.trace, one.dse.trace, "{}", dev.name);
+            assert_eq!(entry.synthesis_minutes, one.synthesis_minutes, "{}", dev.name);
         }
     }
 
@@ -513,13 +460,10 @@ mod tests {
     fn sweep_matrix_matches_per_pair_seed_exploration() {
         // the sweep's concurrent fan-out must choose exactly the design
         // the sequential seed path picks for every (model, device) pair
-        let models = [
-            crate::onnx::zoo::build("alexnet", false).unwrap(),
-            crate::onnx::zoo::build("vgg16", false).unwrap(),
-        ];
-        let rep = sweep_matrix(&models, Explorer::BruteForce, Thresholds::default()).unwrap();
+        let rep = sweep(&["alexnet", "vgg16"], Explorer::BruteForce, Fidelity::Analytical);
         assert_eq!(rep.entries.len(), 2 * device::all().len());
         assert_eq!(rep.models, vec!["alexnet", "vgg16"]);
+        assert_eq!(rep.devices().len(), device::all().len());
         // model-major, database-order layout
         for (mi, model) in rep.models.iter().enumerate() {
             for (di, dev) in device::all().iter().enumerate() {
@@ -529,8 +473,8 @@ mod tests {
             }
         }
         for entry in &rep.entries {
-            let g = models.iter().find(|g| g.name == entry.model).unwrap();
-            let flow = ComputationFlow::extract(g).unwrap();
+            let g = zoo::build(&entry.model, false).unwrap();
+            let flow = ComputationFlow::extract(&g).unwrap();
             let dev = device::find(entry.device).unwrap();
             let seed = crate::dse::brute::explore_seq(&flow, dev, Thresholds::default());
             assert_eq!(
@@ -546,11 +490,7 @@ mod tests {
 
     #[test]
     fn sweep_rankings_and_pareto_are_consistent() {
-        let models = [
-            crate::onnx::zoo::build("alexnet", false).unwrap(),
-            crate::onnx::zoo::build("vgg16", false).unwrap(),
-        ];
-        let rep = sweep_matrix(&models, Explorer::BruteForce, Thresholds::default()).unwrap();
+        let rep = sweep(&["alexnet", "vgg16"], Explorer::BruteForce, Fidelity::Analytical);
         // best device per model is the row's latency argmin over fits
         for (model, best) in rep.best_device_per_model() {
             let row_min = rep
@@ -614,20 +554,10 @@ mod tests {
         // the work-stealing sweep at full-network stepped fidelity must
         // pick exactly the analytical designs and attach a per-round
         // census to every fitting cell
-        let models = [crate::onnx::zoo::build("tiny", false).unwrap()];
-        let analytical =
-            sweep_matrix(&models, Explorer::BruteForce, Thresholds::default()).unwrap();
-        let ev = Evaluator::new(4);
-        let stepped = sweep_matrix_with(
-            &ev,
-            &models,
-            Explorer::BruteForce,
-            Thresholds::default(),
-            Fidelity::SteppedFullNetwork,
-        )
-        .unwrap();
+        let analytical = sweep(&["tiny"], Explorer::BruteForce, Fidelity::Analytical);
+        let stepped = sweep(&["tiny"], Explorer::BruteForce, Fidelity::SteppedFullNetwork);
         assert_eq!(stepped.entries.len(), analytical.entries.len());
-        let flow = ComputationFlow::extract(&models[0]).unwrap();
+        let flow = ComputationFlow::extract(&zoo::build("tiny", false).unwrap()).unwrap();
         for (s, a) in stepped.entries.iter().zip(&analytical.entries) {
             assert_eq!(s.option(), a.option(), "{}", s.device);
             assert_eq!(s.dse.trace, a.dse.trace, "{}", s.device);
@@ -649,19 +579,61 @@ mod tests {
     }
 
     #[test]
-    fn sweep_matrix_rejects_empty_model_list() {
-        let err = sweep_matrix(&[], Explorer::BruteForce, Thresholds::default()).unwrap_err();
-        assert!(err.to_string().contains("at least one model"));
-    }
-
-    #[test]
     fn sweep_entry_lookup_finds_cells() {
-        let models = [crate::onnx::zoo::build("alexnet", false).unwrap()];
-        let rep = sweep_matrix(&models, Explorer::BruteForce, Thresholds::default()).unwrap();
+        let rep = sweep(&["alexnet"], Explorer::BruteForce, Fidelity::Analytical);
         let cell = rep.entry("alexnet", "Arria 10 GX 1150").unwrap();
         assert_eq!(cell.option(), Some((16, 32)));
         assert!(rep.entry("alexnet", "no-such-device").is_none());
         assert!(rep.entry("no-such-model", "Arria 10 GX 1150").is_none());
+    }
+
+    #[test]
+    fn subset_sweep_ranks_only_the_jobs_devices() {
+        // ROADMAP follow-up (f): with a device subset the per-device
+        // ranking must cover exactly the job's devices — no spurious
+        // "none fits" rows for devices that were never evaluated
+        use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA5};
+        let session = Session::builder().threads(2).build();
+        let job = CompileJob::builder()
+            .models([
+                zoo::build("alexnet", false).unwrap(),
+                zoo::build("tiny", false).unwrap(),
+            ])
+            .device(&CYCLONE_V_5CSEMA5)
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        let rep = session.run(&job).unwrap().to_sweep_report();
+        assert_eq!(
+            rep.devices(),
+            vec![CYCLONE_V_5CSEMA5.name, ARRIA_10_GX1150.name],
+            "job order, job devices only"
+        );
+        let ranked = rep.best_model_per_device();
+        assert_eq!(ranked.len(), 2, "one row per job device, not per database device");
+        for (dev, best) in &ranked {
+            assert!(
+                *dev == CYCLONE_V_5CSEMA5.name || *dev == ARRIA_10_GX1150.name,
+                "ranked a device outside the job: {dev}"
+            );
+            let b = best.unwrap_or_else(|| panic!("{dev}: something fits both job devices"));
+            assert_eq!(b.model, "tiny", "tiny's latency beats alexnet's wherever both fit");
+        }
+        // and a genuinely unfittable device inside the job still shows
+        // its honest none-fits row
+        use crate::estimator::device::CYCLONE_V_5CSEMA4;
+        let job = CompileJob::builder()
+            .model(zoo::build("alexnet", false).unwrap())
+            .device(&CYCLONE_V_5CSEMA4)
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        let rep = session.run(&job).unwrap().to_sweep_report();
+        let ranked = rep.best_model_per_device();
+        assert_eq!(ranked.len(), 1);
+        assert_eq!(ranked[0].0, CYCLONE_V_5CSEMA4.name);
+        assert!(ranked[0].1.is_none(), "alexnet really does not fit the 5CSEMA4");
     }
 
     #[test]

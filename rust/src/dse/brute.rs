@@ -63,28 +63,34 @@ pub fn explore_with(
     device: &Device,
     thresholds: Thresholds,
 ) -> DseResult {
-    explore_with_fidelity(evaluator, flow, device, thresholds, Fidelity::Analytical)
+    explore_with_fidelity(evaluator, flow, device, thresholds, Fidelity::Analytical, 0.0)
 }
 
-/// Exhaustive search at an explicit [`Fidelity`]: stepped modes run the
-/// cycle-accurate simulator on every candidate (the skip-ahead engine
-/// keeps even `SteppedFullNetwork` grids interactive). The chosen design
-/// and trace are fidelity-independent — feasibility and F_avg come from
-/// the estimator — so any fidelity reproduces the seed path's choice;
-/// the stepped censuses ride along in the memo for reporting.
+/// Exhaustive search at an explicit [`Fidelity`] and census-reward γ:
+/// stepped modes run the cycle-accurate simulator on every candidate
+/// (the skip-ahead engine keeps even `SteppedFullNetwork` grids
+/// interactive). With `census_gamma == 0` the chosen design and trace
+/// are fidelity-independent — feasibility and F_avg come from the
+/// estimator — so any fidelity reproduces the seed path's choice and
+/// the stepped censuses just ride along in the memo for reporting. With
+/// γ > 0 under `SteppedFullNetwork`, Algorithm 1's improvement test
+/// runs on the shaped score `β·F_avg − γ·bottleneck_stall_fraction`
+/// (see [`RewardShaper::eval_censused`]), so the explorer can trade a
+/// little silicon utilization for a less-stalled bottleneck round.
 pub fn explore_with_fidelity(
     evaluator: &Evaluator,
     flow: &ComputationFlow,
     device: &Device,
     thresholds: Thresholds,
     fidelity: Fidelity,
+    census_gamma: f64,
 ) -> DseResult {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let pairs = space.pairs();
-    let grid = evaluator.evaluate_grid(flow, device, &pairs, fidelity);
+    let grid = evaluator.evaluate_grid_shaped(flow, device, &pairs, fidelity, census_gamma);
 
-    let mut shaper = RewardShaper::new(thresholds);
+    let mut shaper = RewardShaper::with_census(thresholds, census_gamma);
     let mut trace = Vec::with_capacity(pairs.len());
     let mut cache_hits = 0usize;
     for (eval, hit) in &grid {
@@ -93,7 +99,7 @@ pub fn explore_with_fidelity(
         }
         let est = &eval.estimate;
         let feasible = est.fits(&shaper.thresholds);
-        shaper.eval(est);
+        shaper.eval_censused(est, eval.stepped_network.as_ref());
         trace.push((est.ni, est.nl, est.f_avg(), feasible));
     }
     let queries = pairs.len();
@@ -253,6 +259,7 @@ mod tests {
             &ARRIA_10_GX1150,
             Thresholds::default(),
             Fidelity::SteppedFullNetwork,
+            0.0,
         );
         let analytical =
             explore_with(&Evaluator::new(4), &f, &ARRIA_10_GX1150, Thresholds::default());
@@ -269,6 +276,64 @@ mod tests {
             let net = eval.stepped_network.as_ref().expect("census present");
             assert_eq!(net.layers.len(), f.layers.len());
         }
+    }
+
+    #[test]
+    fn census_guided_reward_is_deterministic_and_argmax_of_shaped_score() {
+        // γ > 0 under stepped-full fidelity: the explorer maximizes
+        // β·F_avg − γ·bottleneck_stall_fraction, deterministically
+        let f = flow("alexnet");
+        let gamma = 0.5;
+        let run = || {
+            let ev = Evaluator::new(4);
+            explore_with_fidelity(
+                &ev,
+                &f,
+                &ARRIA_10_GX1150,
+                Thresholds::default(),
+                Fidelity::SteppedFullNetwork,
+                gamma,
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.f_max.to_bits(), b.f_max.to_bits());
+        assert!(a.best.is_some(), "alexnet fits the Arria 10");
+        // the chosen design is the grid argmax of the shaped score
+        // (first-wins on ties, like the shaper's strict improvement)
+        let ev = Evaluator::new(2);
+        let mut best: Option<(f64, (usize, usize))> = None;
+        for (ni, nl) in OptionSpace::from_flow(&f).pairs() {
+            let (e, _) = ev.evaluate_shaped(
+                &f,
+                &ARRIA_10_GX1150,
+                ni,
+                nl,
+                Fidelity::SteppedFullNetwork,
+                gamma,
+            );
+            if !e.estimate.fits(&Thresholds::default()) {
+                continue;
+            }
+            let stall = e
+                .stepped_network
+                .as_ref()
+                .expect("stepped-full census")
+                .bottleneck_stall_fraction();
+            let score = crate::dse::reward::BETA * e.estimate.f_avg() - gamma * stall;
+            let better = match best {
+                Some((s, _)) => score > s,
+                None => true,
+            };
+            if better {
+                best = Some((score, (ni, nl)));
+            }
+        }
+        assert_eq!(a.best, best.map(|(_, o)| o));
+        // the trace format is unchanged: (ni, nl, F_avg, feasible)
+        assert_eq!(a.trace.len(), a.queries);
     }
 
     #[test]

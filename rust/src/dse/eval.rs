@@ -148,7 +148,13 @@ impl Evaluation {
 }
 
 /// Cache key: structural fingerprints, not pointers, so equal models
-/// built twice (or the same zoo model across tests) share entries.
+/// built twice (or the same zoo model across tests) share entries. The
+/// census-reward γ participates (as its exact f64 bits) even though the
+/// memoized payload itself is γ-independent: a run's cached working set
+/// is then keyed on the reward configuration that produced it, so a
+/// warm cache can never mix entries across differently-shaped
+/// explorations (and `--cache-max-entries` eviction ages the γ-spaces
+/// independently).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct EvalKey {
     model: u64,
@@ -156,6 +162,16 @@ struct EvalKey {
     ni: usize,
     nl: usize,
     fidelity: Fidelity,
+    /// `f64::to_bits` of the run's census γ (0.0 for unshaped runs).
+    census_gamma: u64,
+}
+
+/// The γ component of the memo key: exact f64 bits, with -0.0
+/// normalized to +0.0 so the unshaped key is unique (JSON cannot tell
+/// the zeros apart, and neither can the reward). Every key construction
+/// site goes through this one helper.
+fn gamma_key_bits(census_gamma: f64) -> u64 {
+    (census_gamma + 0.0).to_bits()
 }
 
 impl EvalKey {
@@ -165,6 +181,7 @@ impl EvalKey {
         ni: usize,
         nl: usize,
         fidelity: Fidelity,
+        census_gamma: f64,
     ) -> EvalKey {
         EvalKey {
             model: flow.fingerprint(),
@@ -172,12 +189,14 @@ impl EvalKey {
             ni,
             nl,
             fidelity,
+            census_gamma: gamma_key_bits(census_gamma),
         }
     }
 
     /// Deterministic total order for serialization and eviction ties.
-    fn sort_key(&self) -> (u64, u64, usize, usize, u8) {
-        (self.model, self.device, self.ni, self.nl, fidelity_rank(self.fidelity))
+    fn sort_key(&self) -> (u64, u64, usize, usize, u8, u64) {
+        let rank = fidelity_rank(self.fidelity);
+        (self.model, self.device, self.ni, self.nl, rank, self.census_gamma)
     }
 }
 
@@ -233,8 +252,8 @@ impl EvalCache {
         self.clock.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    /// Look up or compute one candidate. Returns the evaluation and
-    /// whether it was served from cache.
+    /// Look up or compute one candidate (γ = 0 key space). Returns the
+    /// evaluation and whether it was served from cache.
     pub fn get_or_compute(
         &self,
         flow: &ComputationFlow,
@@ -243,13 +262,28 @@ impl EvalCache {
         nl: usize,
         fidelity: Fidelity,
     ) -> (Arc<Evaluation>, bool) {
+        self.get_or_compute_shaped(flow, device, ni, nl, fidelity, 0.0)
+    }
+
+    /// Same, under an explicit census-reward γ (the memo key's sixth
+    /// component).
+    pub fn get_or_compute_shaped(
+        &self,
+        flow: &ComputationFlow,
+        device: &Device,
+        ni: usize,
+        nl: usize,
+        fidelity: Fidelity,
+        census_gamma: f64,
+    ) -> (Arc<Evaluation>, bool) {
         let stamp = self.tick();
-        self.get_or_compute_at(stamp, flow, device, ni, nl, fidelity)
+        self.get_or_compute_at(stamp, flow, device, ni, nl, fidelity, census_gamma)
     }
 
     /// Same, under a caller-held LRU generation (see [`EvalCache::tick`]).
     /// The (potentially heavy) compute runs outside the lock so parallel
     /// misses don't serialize.
+    #[allow(clippy::too_many_arguments)]
     pub fn get_or_compute_at(
         &self,
         stamp: u64,
@@ -258,8 +292,9 @@ impl EvalCache {
         ni: usize,
         nl: usize,
         fidelity: Fidelity,
+        census_gamma: f64,
     ) -> (Arc<Evaluation>, bool) {
-        let key = EvalKey::new(flow, device, ni, nl, fidelity);
+        let key = EvalKey::new(flow, device, ni, nl, fidelity, census_gamma);
         self.get_or_compute_keyed(key, stamp, flow, device, fidelity)
     }
 
@@ -304,6 +339,7 @@ impl EvalCache {
         device: &Device,
         pairs: &[(usize, usize)],
         fidelity: Fidelity,
+        census_gamma: f64,
     ) -> usize {
         let stamp = self.tick();
         let (model, device) = (flow.fingerprint(), device.fingerprint());
@@ -316,6 +352,7 @@ impl EvalCache {
                 ni,
                 nl,
                 fidelity,
+                census_gamma: gamma_key_bits(census_gamma),
             };
             if let Some(entry) = map.get_mut(&key) {
                 entry.last_used = entry.last_used.max(stamp);
@@ -376,18 +413,23 @@ impl EvalCache {
 // entries — and the CLI falls back to a cold cache with a warning via
 // [`EvalCache::load_or_cold`].
 //
-// v2 (this version) records each entry's fidelity tag and last-used LRU
-// stamp. v1 files still load: their analytical entries carry over with
-// stamp 0 (oldest, first to evict); their stepped entries are *dropped*,
-// because PR 3 changed the stepped semantics (exact whole-byte DDR
-// credit + held-slice rollback), so a v1 stepped census would contradict
-// a fresh computation.
+// v3 (this version) additionally records each entry's census-reward γ
+// (an exact f64, part of the key). Older files still load:
+//
+// * v2 analytical entries carry over (keyed at γ = 0); v2 *stepped*
+//   entries are dropped, because this version replaced the whole-byte
+//   DDR credit with the exact fractional-rational model
+//   (`sim::ddr_credit_rate`), so a v2 stepped census would contradict a
+//   fresh computation.
+// * v1 analytical entries carry over with stamp 0 (oldest, first to
+//   evict); v1 stepped entries are dropped (PR 3 changed the stepped
+//   semantics first: whole-byte credit + held-slice rollback).
 // ---------------------------------------------------------------------------
 
 /// Format tag of the on-disk cache file.
 pub const CACHE_FORMAT: &str = "cnn2gate-evalcache-v1";
 /// Schema version within the format; bumped on any layout change.
-pub const CACHE_VERSION: i64 = 2;
+pub const CACHE_VERSION: i64 = 3;
 /// Oldest version [`EvalCache::from_json`] still accepts.
 pub const CACHE_VERSION_MIN: i64 = 1;
 /// Largest integer `util::json` round-trips exactly (below 2^53).
@@ -641,6 +683,7 @@ fn entry_to_json(key: &EvalKey, eval: &Evaluation, last_used: u64) -> Json {
     o.insert("ni", key.ni.into());
     o.insert("nl", key.nl.into());
     o.insert("fidelity", fidelity_tag(key.fidelity).into());
+    o.insert("census_gamma", Json::Num(f64::from_bits(key.census_gamma)));
     o.insert("last_used", Json::Num(last_used as f64));
     o.insert("estimate", est_to_json(&eval.estimate));
     o.insert("latency", sim_to_json(&eval.latency));
@@ -661,8 +704,28 @@ fn entry_to_json(key: &EvalKey, eval: &Evaluation, last_used: u64) -> Json {
     Json::Obj(o)
 }
 
-/// Parse one v2 entry; `Err` rejects the whole file.
-fn entry_from_json_v2(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
+/// Parse one v3 entry; `Err` rejects the whole file.
+fn entry_from_json_v3(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
+    let census_gamma = jf(v, "census_gamma")?;
+    entry_from_json_tagged(v, census_gamma)
+}
+
+/// Parse one v2 entry. `Ok(None)` means a valid-but-dropped entry (v2
+/// stepped censuses predate the fractional-credit stepper and are
+/// discarded); carried analytical entries key at γ = 0. `Err` rejects
+/// the whole file.
+fn entry_from_json_v2(v: &Json) -> Result<Option<(EvalKey, Evaluation, u64)>, String> {
+    if parse_fidelity_tag(&js(v, "fidelity")?)? != Fidelity::Analytical {
+        return Ok(None);
+    }
+    entry_from_json_tagged(v, 0.0).map(Some)
+}
+
+/// The shared v2/v3 entry body (v3 carries the γ field, v2 keys at 0).
+fn entry_from_json_tagged(
+    v: &Json,
+    census_gamma: f64,
+) -> Result<(EvalKey, Evaluation, u64), String> {
     let fidelity = parse_fidelity_tag(&js(v, "fidelity")?)?;
     let key = EvalKey {
         model: parse_hex16(&js(v, "model")?)?,
@@ -670,6 +733,7 @@ fn entry_from_json_v2(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
         ni: jus(v, "ni")?,
         nl: jus(v, "nl")?,
         fidelity,
+        census_gamma: gamma_key_bits(census_gamma),
     };
     let last_used = ju(v, "last_used")?;
     let estimate = est_from_json(v.get("estimate"))?;
@@ -741,6 +805,7 @@ fn entry_from_json_v1(v: &Json) -> Result<Option<(EvalKey, Evaluation, u64)>, St
         ni: jus(v, "ni")?,
         nl: jus(v, "nl")?,
         fidelity: Fidelity::Analytical,
+        census_gamma: 0f64.to_bits(),
     };
     let estimate = est_from_json(v.get("estimate"))?;
     let latency = sim_from_json(v.get("latency"))?;
@@ -784,7 +849,9 @@ impl EvalCache {
         entries.sort_by_key(|(k, _, _)| k.sort_key());
         let rows: Vec<Json> = entries
             .iter()
-            .filter(|(_, e, last_used)| json_safe(e, *last_used))
+            .filter(|(k, e, last_used)| {
+                json_safe(e, *last_used) && f64::from_bits(k.census_gamma).is_finite()
+            })
             .map(|(k, e, last_used)| entry_to_json(k, e, *last_used))
             .collect();
         let mut o = JsonObj::new();
@@ -794,8 +861,8 @@ impl EvalCache {
         Json::Obj(o)
     }
 
-    /// Deserialize a cache document (current v2 or legacy v1 — see the
-    /// module docs for the v1 carry-over rules). Strict: schema
+    /// Deserialize a cache document (current v3 or legacy v1/v2 — see
+    /// the module docs for the carry-over rules). Strict: schema
     /// mismatches, missing fields, duplicate keys and key/payload
     /// contradictions all reject the whole document. Counters start at
     /// zero (a loaded entry counts as a hit only when something looks it
@@ -827,13 +894,13 @@ impl EvalCache {
             let mut map = cache.map.lock().expect("eval cache poisoned");
             map.reserve(rows.len());
             for (i, row) in rows.iter().enumerate() {
-                let parsed = if version == 1 {
-                    entry_from_json_v1(row).map_err(|e| format!("entry {i}: {e}"))?
-                } else {
-                    Some(entry_from_json_v2(row).map_err(|e| format!("entry {i}: {e}"))?)
+                let parsed = match version {
+                    1 => entry_from_json_v1(row).map_err(|e| format!("entry {i}: {e}"))?,
+                    2 => entry_from_json_v2(row).map_err(|e| format!("entry {i}: {e}"))?,
+                    _ => Some(entry_from_json_v3(row).map_err(|e| format!("entry {i}: {e}"))?),
                 };
                 let Some((key, eval, last_used)) = parsed else {
-                    continue; // dropped v1 stepped entry
+                    continue; // dropped legacy stepped entry
                 };
                 newest = newest.max(last_used);
                 let entry = CacheEntry {
@@ -989,6 +1056,7 @@ impl Evaluator {
 
     /// Evaluate one candidate inline (cache-aware, no pool dispatch) —
     /// what the inherently sequential RL/joint agents call per step.
+    /// γ = 0 key space; see [`Evaluator::evaluate_shaped`].
     pub fn evaluate(
         &self,
         flow: &ComputationFlow,
@@ -997,20 +1065,47 @@ impl Evaluator {
         nl: usize,
         fidelity: Fidelity,
     ) -> (Arc<Evaluation>, bool) {
-        self.cache.get_or_compute(flow, device, ni, nl, fidelity)
+        self.evaluate_shaped(flow, device, ni, nl, fidelity, 0.0)
+    }
+
+    /// [`Evaluator::evaluate`] under an explicit census-reward γ (keyed
+    /// separately in the memo).
+    pub fn evaluate_shaped(
+        &self,
+        flow: &ComputationFlow,
+        device: &Device,
+        ni: usize,
+        nl: usize,
+        fidelity: Fidelity,
+        census_gamma: f64,
+    ) -> (Arc<Evaluation>, bool) {
+        self.cache
+            .get_or_compute_shaped(flow, device, ni, nl, fidelity, census_gamma)
     }
 
     /// Evaluate a whole candidate grid, fanning the misses out across
     /// the pool. Results come back in `pairs` order, so a sequential
     /// reduction over them (e.g. Algorithm 1's running max) is
     /// bit-identical to the sequential seed path. Must not be called
-    /// from inside a pool worker (see module docs).
+    /// from inside a pool worker (see module docs). γ = 0 key space.
     pub fn evaluate_grid(
         &self,
         flow: &ComputationFlow,
         device: &Device,
         pairs: &[(usize, usize)],
         fidelity: Fidelity,
+    ) -> Vec<(Arc<Evaluation>, bool)> {
+        self.evaluate_grid_shaped(flow, device, pairs, fidelity, 0.0)
+    }
+
+    /// [`Evaluator::evaluate_grid`] under an explicit census-reward γ.
+    pub fn evaluate_grid_shaped(
+        &self,
+        flow: &ComputationFlow,
+        device: &Device,
+        pairs: &[(usize, usize)],
+        fidelity: Fidelity,
+        census_gamma: f64,
     ) -> Vec<(Arc<Evaluation>, bool)> {
         // fingerprints are loop-invariant: hash once per grid; the whole
         // grid shares one LRU generation so worker completion order
@@ -1023,6 +1118,7 @@ impl Evaluator {
             ni,
             nl,
             fidelity,
+            census_gamma: gamma_key_bits(census_gamma),
         };
         if pairs.len() < 2 || self.pool.size() < 2 {
             return pairs
@@ -1228,6 +1324,16 @@ mod tests {
         assert!(hit, "same key must hit");
         let (_, hit) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::SteppedFullNetwork);
         assert!(!hit, "different fidelity must miss");
+        // the census-reward γ is the key's sixth component: a shaped run
+        // can never be served another γ-space's working set
+        let (shaped, hit) =
+            ev.evaluate_shaped(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical, 0.25);
+        assert!(!hit, "different census γ must miss");
+        let (_, hit) = ev.evaluate_shaped(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical, 0.25);
+        assert!(hit, "same γ hits");
+        // ... while the payload itself is γ-independent
+        let (plain, _) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical);
+        assert_eq!(*shaped, *plain);
     }
 
     #[test]
@@ -1327,9 +1433,14 @@ mod tests {
         ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
         ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound);
         ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedFullNetwork);
+        ev.evaluate_shaped(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical, 0.25);
         let path = tmp_path("roundtrip");
         let written = ev.cache().save(&path).unwrap();
-        assert_eq!(written, pairs.len() + 2, "grid plus the two stepped entries");
+        assert_eq!(
+            written,
+            pairs.len() + 3,
+            "grid plus the two stepped entries plus the γ-shaped one"
+        );
         let loaded = EvalCache::load(&path).unwrap();
         assert_eq!(loaded.stats().entries, written);
         assert_eq!(loaded.stats().hits, 0, "counters start cold");
@@ -1357,9 +1468,15 @@ mod tests {
             *net,
             Evaluation::compute(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedFullNetwork)
         );
+        let (_, hit) =
+            warm.evaluate_shaped(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical, 0.25);
+        assert!(hit, "γ-shaped entry survives with its exact γ bits");
+        let (_, hit) =
+            warm.evaluate_shaped(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical, 0.75);
+        assert!(!hit, "a different γ never borrows it");
         let stats = warm.cache().stats();
-        assert_eq!(stats.hits, pairs.len() + 2);
-        assert_eq!(stats.misses, 0);
+        assert_eq!(stats.hits, pairs.len() + 3);
+        assert_eq!(stats.misses, 1, "only the γ=0.75 probe recomputed");
         std::fs::remove_file(&path).ok();
     }
 
@@ -1399,7 +1516,7 @@ mod tests {
         ev.cache().save(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let v1 = text
-            .replace("\"version\": 2", "\"version\": 1")
+            .replace("\"version\": 3", "\"version\": 1")
             .replace("\"fidelity\": \"analytical\"", "\"stepped\": false")
             .replace(
                 "\"fidelity\": \"stepped-dominant-round\"",
@@ -1417,6 +1534,37 @@ mod tests {
             Evaluation::compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical)
         );
         let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::SteppedDominantRound);
+        assert!(!hit, "dropped stepped entry recomputes");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_files_load_analytical_entries_and_drop_stepped_ones() {
+        // v2 files predate both the census-γ key component and the
+        // fractional-credit stepper: analytical entries carry over at
+        // γ = 0, stepped entries are dropped (their censuses would
+        // contradict a fresh computation)
+        let f = flow("tiny");
+        let ev = Evaluator::new(2);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::SteppedFullNetwork);
+        let path = tmp_path("v2compat");
+        ev.cache().save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // a v2 entry is the v3 shape minus the census_gamma field
+        let v2 = text
+            .replace("\"version\": 3", "\"version\": 2")
+            .replace("\"census_gamma\": 0,", "");
+        assert_ne!(text, v2, "rewrite must land");
+        std::fs::write(&path, &v2).unwrap();
+        let loaded = EvalCache::load(&path).unwrap();
+        assert_eq!(loaded.stats().entries, 1, "stepped v2 entry dropped");
+        let warm = Evaluator::with_cache(2, Arc::new(loaded));
+        let (eval, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        assert!(hit, "analytical v2 entry carried over at γ = 0");
+        let fresh = Evaluation::compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        assert_eq!(*eval, fresh);
+        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::SteppedFullNetwork);
         assert!(!hit, "dropped stepped entry recomputes");
         std::fs::remove_file(&path).ok();
     }

@@ -131,13 +131,26 @@ pub fn explore_with(
     thresholds: Thresholds,
     cfg: JointConfig,
 ) -> Result<JointResult> {
-    explore_with_fidelity(evaluator, graph, flow, device, thresholds, cfg, Fidelity::Analytical)
+    explore_with_fidelity(
+        evaluator,
+        graph,
+        flow,
+        device,
+        thresholds,
+        cfg,
+        Fidelity::Analytical,
+        0.0,
+    )
 }
 
-/// Joint exploration at an explicit [`Fidelity`] for the hardware
-/// queries (the quantization sweep is fidelity-independent). Stepped
-/// modes leave cycle-accurate censuses in the memo for every visited
-/// option without changing the agent's trajectory.
+/// Joint exploration at an explicit [`Fidelity`] and census-reward γ
+/// for the hardware queries (the quantization sweep is
+/// fidelity-independent). With γ = 0, stepped modes leave
+/// cycle-accurate censuses in the memo for every visited option without
+/// changing the agent's trajectory; with γ > 0 under
+/// `SteppedFullNetwork` the composite score gains the census term:
+/// `β·F_avg − λ·E_q(m_w) − γ·bottleneck_stall_fraction`.
+#[allow(clippy::too_many_arguments)]
 pub fn explore_with_fidelity(
     evaluator: &Evaluator,
     graph: &Graph,
@@ -146,6 +159,7 @@ pub fn explore_with_fidelity(
     thresholds: Thresholds,
     cfg: JointConfig,
     fidelity: Fidelity,
+    census_gamma: f64,
 ) -> Result<JointResult> {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
@@ -156,7 +170,7 @@ pub fn explore_with_fidelity(
 
     let mut rng = Rng::new(cfg.seed);
     let mut q = vec![[0f64; N_ACTIONS]; ni_n * nl_n * m_n];
-    let mut visited: HashMap<(usize, usize), f64> = HashMap::new(); // hw queries
+    let mut visited: HashMap<(usize, usize), (f64, f64)> = HashMap::new(); // hw queries
     let mut queries = 0usize;
     let mut cache_hits = 0usize;
     let mut best: Option<(usize, usize, i8)> = None;
@@ -170,23 +184,31 @@ pub fn explore_with_fidelity(
                      cache_hits: &mut usize|
      -> (f64, bool) {
         let (ni, nl) = (space.ni[i], space.nl[j]);
-        let f_avg = *visited.entry((ni, nl)).or_insert_with(|| {
+        // per (ni, nl): (F_avg, bottleneck stall fraction); NaN F_avg
+        // marks infeasible
+        let (f_avg, stall) = *visited.entry((ni, nl)).or_insert_with(|| {
             *queries += 1;
-            let (eval, hit) = evaluator.evaluate(flow, device, ni, nl, fidelity);
+            let (eval, hit) =
+                evaluator.evaluate_shaped(flow, device, ni, nl, fidelity, census_gamma);
             if hit {
                 *cache_hits += 1;
             }
             let est = &eval.estimate;
+            let stall = eval
+                .stepped_network
+                .as_ref()
+                .map_or(0.0, |n| n.bottleneck_stall_fraction());
             if est.fits(&thresholds) {
-                est.f_avg()
+                (est.f_avg(), stall)
             } else {
-                f64::NAN // infeasible marker
+                (f64::NAN, stall) // infeasible marker
             }
         });
         if f_avg.is_nan() {
             return (-1.0, false);
         }
-        let score = super::reward::BETA * f_avg - cfg.lambda * err_of(mi);
+        let score =
+            super::reward::BETA * f_avg - cfg.lambda * err_of(mi) - census_gamma * stall;
         (score, true)
     };
 
@@ -332,11 +354,38 @@ mod tests {
             Thresholds::default(),
             cfg,
             crate::dse::Fidelity::SteppedDominantRound,
+            0.0,
         )
         .unwrap();
         assert_eq!(a.best, b.best);
         assert_eq!(a.trace, b.trace);
         assert_eq!(a.queries, b.queries);
+    }
+
+    #[test]
+    fn census_gamma_joins_the_composite_score_deterministically() {
+        // the joint score gains the census term under stepped-full
+        // fidelity; the seeded agent stays deterministic and feasible
+        let (g, f) = setup("lenet5");
+        let run = || {
+            let ev = crate::dse::Evaluator::new(2);
+            explore_with_fidelity(
+                &ev,
+                &g,
+                &f,
+                &ARRIA_10_GX1150,
+                Thresholds::default(),
+                JointConfig::default(),
+                crate::dse::Fidelity::SteppedFullNetwork,
+                0.5,
+            )
+            .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.trace, b.trace);
+        assert!(a.best.is_some(), "lenet5 fits");
     }
 
     #[test]

@@ -9,10 +9,15 @@
 //! results to the sequential path, validated by tests); the sequential
 //! RL/joint agents go through the same cache so revisited candidates —
 //! and whole re-explorations, as in fleet fits — cost one lookup. Every
-//! explorer also runs at an explicit [`Fidelity`]
-//! (`explore_with_fidelity`): the stepped modes attach cycle-accurate
-//! censuses to each scored candidate without changing the chosen design
-//! or trace — feasibility and F_avg come from the estimator either way.
+//! explorer also runs at an explicit [`Fidelity`] and census-reward γ
+//! (`explore_with_fidelity`): with γ = 0 the stepped modes attach
+//! cycle-accurate censuses to each scored candidate without changing the
+//! chosen design or trace — feasibility and F_avg come from the
+//! estimator either way — while γ > 0 under `SteppedFullNetwork` feeds
+//! the census back into Algorithm 1 as a bottleneck-stall penalty
+//! ([`reward::RewardShaper::eval_censused`]). The [`specialize()`](specialize::specialize) pass
+//! then converts the winner's census into per-layer (N_i, N_l) options
+//! and weight schedules ([`SpecializationReport`]).
 
 pub mod brute;
 pub mod eval;
@@ -20,6 +25,7 @@ pub mod joint;
 pub mod options;
 pub mod reward;
 pub mod rl;
+pub mod specialize;
 
 pub use brute::DseResult;
 pub use eval::{CacheStats, EvalCache, Evaluation, Evaluator, Fidelity, ThreadPool};
@@ -27,3 +33,4 @@ pub use joint::{JointConfig, JointResult};
 pub use options::OptionSpace;
 pub use reward::RewardShaper;
 pub use rl::RlConfig;
+pub use specialize::{specialize, LayerSpecialization, SpecializationReport};

@@ -1,39 +1,84 @@
-//! Reward shaping — paper Algorithm 1, verbatim.
+//! Reward shaping — paper Algorithm 1, plus the optional census term.
 //!
-//! Feasible option improving the running max usage factor: `β·F_avg`;
-//! feasible but not improving: `0`; any quota over threshold: `-1`.
-//! β = 0.01 rescales percentages into [0, 1] (paper §4.4).
+//! Feasible option improving the running max score: `β·F_avg −
+//! γ·bottleneck_stall_fraction`; feasible but not improving: `0`; any
+//! quota over threshold: `-1`. β = 0.01 rescales percentages into
+//! [0, 1] (paper §4.4).
+//!
+//! With `census_gamma == 0` (the default) this is EXACTLY Algorithm 1 —
+//! the improvement comparison runs on the raw usage factor, so explorer
+//! choices and traces are bit-identical to the pre-census code. With
+//! γ > 0 and a [`NetworkStepReport`] census attached (the
+//! `Fidelity::SteppedFullNetwork` grids), the shaped score additionally
+//! penalizes candidates whose bottleneck round idles its lane array —
+//! the ROADMAP follow-up that feeds the PR-3 stepped census back into
+//! Algorithm 1 instead of only reporting it.
 
 use crate::estimator::{ResourceEstimate, Thresholds};
+use crate::sim::NetworkStepReport;
 
 pub const BETA: f64 = 0.01;
 
-/// Stateful reward shaper: tracks `F_max` and `H_best` across the
+/// Stateful reward shaper: tracks the best score and `H_best` across the
 /// exploration exactly like Algorithm 1's outputs.
 #[derive(Debug, Clone)]
 pub struct RewardShaper {
     pub thresholds: Thresholds,
+    /// γ: weight of the bottleneck stall fraction. 0 (default) is the
+    /// paper's Algorithm 1, bit for bit.
+    pub census_gamma: f64,
+    /// Usage factor of the current `H_best` (Algorithm 1's `F_max`).
+    /// Under γ > 0 this is the F_avg of the best *shaped* candidate,
+    /// not necessarily the max F_avg visited.
     pub f_max: f64,
+    /// Shaped score of the current `H_best` (`β·f_max` when γ = 0).
+    pub best_score: f64,
     pub h_best: Option<(usize, usize)>,
     pub best_estimate: Option<ResourceEstimate>,
 }
 
 impl RewardShaper {
     pub fn new(thresholds: Thresholds) -> Self {
+        RewardShaper::with_census(thresholds, 0.0)
+    }
+
+    /// Shaper with a census term of weight `census_gamma`.
+    pub fn with_census(thresholds: Thresholds, census_gamma: f64) -> Self {
         RewardShaper {
             thresholds,
+            census_gamma,
             f_max: 0.0,
+            best_score: 0.0,
             h_best: None,
             best_estimate: None,
         }
     }
 
-    /// Algorithm 1. Returns the shaped reward for this estimate.
+    /// Algorithm 1 without a census (equivalent to
+    /// [`RewardShaper::eval_censused`] with `None`).
     pub fn eval(&mut self, est: &ResourceEstimate) -> f64 {
-        if est.fits(&self.thresholds) {
-            let f_avg = est.f_avg();
+        self.eval_censused(est, None)
+    }
+
+    /// Algorithm 1 with the optional census term. Returns the shaped
+    /// reward for this candidate. The census is only available on
+    /// stepped-full-network evaluations; analytical/stepped-dominant
+    /// candidates score with a zero stall term (γ is inert there).
+    pub fn eval_censused(
+        &mut self,
+        est: &ResourceEstimate,
+        census: Option<&NetworkStepReport>,
+    ) -> f64 {
+        if !est.fits(&self.thresholds) {
+            return -1.0;
+        }
+        let f_avg = est.f_avg();
+        if self.census_gamma == 0.0 {
+            // γ = 0 pins the seed path: compare raw usage factors so the
+            // pre-census explorers' choices reproduce bit for bit
             if f_avg > self.f_max {
                 self.f_max = f_avg;
+                self.best_score = BETA * f_avg;
                 self.h_best = Some((est.ni, est.nl));
                 self.best_estimate = Some(est.clone());
                 BETA * f_avg
@@ -41,7 +86,34 @@ impl RewardShaper {
                 0.0
             }
         } else {
-            -1.0
+            let stall = census.map_or(0.0, NetworkStepReport::bottleneck_stall_fraction);
+            let score = BETA * f_avg - self.census_gamma * stall;
+            // the first feasible candidate always becomes H_best, even
+            // at a negative shaped score — Algorithm 1 never reports
+            // "does not fit" while something fits
+            if self.h_best.is_none() || score > self.best_score {
+                // the returned reward is the shaped-score IMPROVEMENT
+                // over the previous best (clamped at 0 for the first
+                // feasible candidate), not the raw score: a shaped
+                // score is routinely negative (γ·stall can exceed
+                // β·F_avg), and a negative reward for the new best
+                // would rank it below known non-improving states
+                // (which earn 0) in the RL agent's Q-function —
+                // inverting Algorithm 1's improvement > no-improvement
+                // > infeasible ordering
+                let reward = if self.h_best.is_none() {
+                    score.max(0.0)
+                } else {
+                    score - self.best_score
+                };
+                self.f_max = f_avg;
+                self.best_score = score;
+                self.h_best = Some((est.ni, est.nl));
+                self.best_estimate = Some(est.clone());
+                reward
+            } else {
+                0.0
+            }
         }
     }
 }
@@ -49,14 +121,23 @@ impl RewardShaper {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::estimator::{estimate, device::ARRIA_10_GX1150, Thresholds};
+    use crate::estimator::device::ARRIA_10_GX1150;
+    use crate::estimator::{estimate, Thresholds};
     use crate::ir::ComputationFlow;
     use crate::onnx::zoo;
+    use crate::sim::step_network;
 
     fn est(ni: usize, nl: usize) -> ResourceEstimate {
         let g = zoo::build("alexnet", false).unwrap();
         let flow = ComputationFlow::extract(&g).unwrap();
         estimate(&flow, &ARRIA_10_GX1150, ni, nl)
+    }
+
+    fn census(ni: usize, nl: usize) -> crate::sim::NetworkStepReport {
+        let g = zoo::build("alexnet", false).unwrap();
+        let flow = ComputationFlow::extract(&g).unwrap();
+        let e = estimate(&flow, &ARRIA_10_GX1150, ni, nl);
+        step_network(&flow, &ARRIA_10_GX1150, e.fmax_mhz, ni, nl)
     }
 
     #[test]
@@ -95,5 +176,75 @@ mod tests {
         let mut rs = RewardShaper::new(Thresholds::default());
         let r = rs.eval(&est(64, 64));
         assert!(r <= 1.0 && r > -1.0 - 1e-12);
+    }
+
+    #[test]
+    fn gamma_zero_is_bit_identical_to_algorithm_1_with_or_without_census() {
+        // the γ=0 pin of the acceptance criteria: attaching a census
+        // changes NOTHING — rewards, best, f_max all bit-identical
+        let options = [(4, 4), (16, 32), (8, 8), (16, 4), (4, 32)];
+        let mut plain = RewardShaper::new(Thresholds::default());
+        let mut censused = RewardShaper::with_census(Thresholds::default(), 0.0);
+        for &(ni, nl) in &options {
+            let e = est(ni, nl);
+            let c = census(ni, nl);
+            let a = plain.eval(&e);
+            let b = censused.eval_censused(&e, Some(&c));
+            assert_eq!(a.to_bits(), b.to_bits(), "({ni},{nl})");
+        }
+        assert_eq!(plain.h_best, censused.h_best);
+        assert_eq!(plain.f_max.to_bits(), censused.f_max.to_bits());
+        assert_eq!(plain.best_score.to_bits(), censused.best_score.to_bits());
+    }
+
+    #[test]
+    fn census_term_shapes_the_reward_under_positive_gamma() {
+        let e = est(16, 32);
+        let c = census(16, 32);
+        let stall = c.bottleneck_stall_fraction();
+        assert!(stall > 0.0, "alexnet at (16,32) is DDR-starved");
+        let mut rs = RewardShaper::with_census(Thresholds::default(), 0.5);
+        let r = rs.eval_censused(&e, Some(&c));
+        let score = BETA * e.f_avg() - 0.5 * stall;
+        // the improvement reward never goes negative (ordering:
+        // improvement ≥ non-improvement 0 > infeasible -1), while the
+        // tracked best_score is the raw shaped score
+        assert_eq!(r.to_bits(), score.max(0.0).to_bits());
+        assert_eq!(rs.h_best, Some((16, 32)), "first feasible still wins");
+        assert_eq!(rs.best_score.to_bits(), score.to_bits());
+        // a second candidate with a non-improving shaped score gets 0
+        // and does not displace H_best
+        let r2 = rs.eval_censused(&e, Some(&c));
+        assert_eq!(r2, 0.0);
+        // without a census the stall term is zero (γ inert), and the
+        // shaper starts fresh: reward = β·F_avg exactly
+        let mut rs2 = RewardShaper::with_census(Thresholds::default(), 0.5);
+        let r3 = rs2.eval_censused(&e, None);
+        assert_eq!(r3.to_bits(), (BETA * e.f_avg()).to_bits());
+        // an actual improvement earns the (positive) score gain
+        let small = est(4, 4);
+        let small_c = census(4, 4);
+        let mut rs3 = RewardShaper::with_census(Thresholds::default(), 1e-6);
+        rs3.eval_censused(&small, Some(&small_c));
+        let prev = rs3.best_score;
+        let gain = rs3.eval_censused(&e, Some(&c));
+        assert!(gain > 0.0, "improvement reward must be positive");
+        assert_eq!(gain.to_bits(), (rs3.best_score - prev).to_bits());
+    }
+
+    #[test]
+    fn negative_shaped_score_still_selects_a_feasible_best() {
+        // a huge γ drives every score negative; the shaper must still
+        // name a feasible H_best rather than reporting no fit, and the
+        // first-feasible reward clamps at 0 (never an infeasible-like
+        // negative signal for a feasible state)
+        let e = est(16, 32);
+        let c = census(16, 32);
+        let mut rs = RewardShaper::with_census(Thresholds::default(), 1e3);
+        let r = rs.eval_censused(&e, Some(&c));
+        assert_eq!(r, 0.0);
+        assert!(rs.best_score < 0.0);
+        assert_eq!(rs.h_best, Some((16, 32)));
+        assert!(rs.best_estimate.is_some());
     }
 }

@@ -81,13 +81,18 @@ pub fn explore_with(
     thresholds: Thresholds,
     cfg: RlConfig,
 ) -> DseResult {
-    explore_with_fidelity(evaluator, flow, device, thresholds, cfg, Fidelity::Analytical)
+    explore_with_fidelity(evaluator, flow, device, thresholds, cfg, Fidelity::Analytical, 0.0)
 }
 
-/// RL-DSE at an explicit [`Fidelity`]. The agent's trajectory, choice
-/// and query count are fidelity-independent (rewards come from the
-/// estimator); stepped modes additionally leave a cycle-accurate census
-/// in the memo for every state the agent actually visited.
+/// RL-DSE at an explicit [`Fidelity`] and census-reward γ. With
+/// `census_gamma == 0` the agent's trajectory, choice and query count
+/// are fidelity-independent (rewards come from the estimator); stepped
+/// modes additionally leave a cycle-accurate census in the memo for
+/// every state the agent actually visited. With γ > 0 under
+/// `SteppedFullNetwork` the Q-learning reward becomes the shaped
+/// `β·F_avg − γ·bottleneck_stall_fraction` of Algorithm 1's census
+/// extension ([`RewardShaper::eval_censused`]).
+#[allow(clippy::too_many_arguments)]
 pub fn explore_with_fidelity(
     evaluator: &Evaluator,
     flow: &ComputationFlow,
@@ -95,14 +100,18 @@ pub fn explore_with_fidelity(
     thresholds: Thresholds,
     cfg: RlConfig,
     fidelity: Fidelity,
+    census_gamma: f64,
 ) -> DseResult {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let (ni_n, nl_n) = (space.ni.len(), space.nl.len());
     let mut rng = Rng::new(cfg.seed);
     let mut q = vec![[0f64; N_ACTIONS]; ni_n * nl_n];
-    let mut shaper = RewardShaper::new(thresholds);
-    let mut visited: HashMap<(usize, usize), f64> = HashMap::new();
+    let mut shaper = RewardShaper::with_census(thresholds, census_gamma);
+    // per visited state: was it feasible? (tracked explicitly — under
+    // γ > 0 a feasible state's shaped reward can be negative, so the
+    // sign of the stored reward no longer implies infeasibility)
+    let mut visited: HashMap<(usize, usize), bool> = HashMap::new();
     let mut trace = Vec::new();
     let mut queries = 0usize;
     let mut cache_hits = 0usize;
@@ -117,21 +126,23 @@ pub fn explore_with_fidelity(
                      trace: &mut Vec<(usize, usize, f64, bool)>|
      -> f64 {
         let (ni, nl) = (space.ni[i], space.nl[j]);
-        if let Some(&r) = visited.get(&(ni, nl)) {
+        if let Some(&was_feasible) = visited.get(&(ni, nl)) {
             // revisits replay the shaped outcome without a compiler call;
             // Algorithm 1 gives 0 for known-feasible non-improving states
-            return if r < 0.0 { -1.0 } else { 0.0 };
+            // and -1 for known-infeasible ones
+            return if was_feasible { 0.0 } else { -1.0 };
         }
-        let (eval, hit) = evaluator.evaluate(flow, device, ni, nl, fidelity);
+        let (eval, hit) =
+            evaluator.evaluate_shaped(flow, device, ni, nl, fidelity, census_gamma);
         *queries += 1;
         if hit {
             *cache_hits += 1;
         }
         let est = &eval.estimate;
         let feasible = est.fits(&shaper.thresholds);
-        let r = shaper.eval(est);
+        let r = shaper.eval_censused(est, eval.stepped_network.as_ref());
         trace.push((ni, nl, est.f_avg(), feasible));
-        visited.insert((ni, nl), r);
+        visited.insert((ni, nl), feasible);
         r
     };
 
@@ -307,6 +318,7 @@ mod tests {
             th,
             cfg,
             Fidelity::SteppedFullNetwork,
+            0.0,
         );
         assert_eq!(a.best, b.best);
         assert_eq!(a.trace, b.trace);
@@ -316,6 +328,35 @@ mod tests {
         let (eval, hit) = ev.evaluate(&f, &ARRIA_10_GX1150, ni, nl, Fidelity::SteppedFullNetwork);
         assert!(hit);
         assert!(eval.stepped_network.is_some());
+    }
+
+    #[test]
+    fn census_gamma_shapes_the_agent_deterministically() {
+        // γ > 0 at stepped-full fidelity: the seeded agent remains
+        // deterministic, its H_best stays feasible, and the (ni, nl,
+        // F_avg, feasible) trace format is unchanged
+        let f = flow("alexnet");
+        let (th, cfg) = (Thresholds::default(), RlConfig::default());
+        let run = || {
+            let ev = Evaluator::new(2);
+            explore_with_fidelity(
+                &ev,
+                &f,
+                &ARRIA_10_GX1150,
+                th,
+                cfg,
+                Fidelity::SteppedFullNetwork,
+                0.5,
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.queries, b.queries);
+        if let Some(est) = &a.best_estimate {
+            assert!(est.fits(&th));
+        }
     }
 
     #[test]

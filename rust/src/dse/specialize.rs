@@ -1,0 +1,407 @@
+//! Per-layer (N_i, N_l) specialization — the census-to-hardware payoff.
+//!
+//! The paper's flow (and PR 1-4 of this repo) picks ONE uniform
+//! `(N_i, N_l)` fold for the whole network: the option grid is
+//! gcd-constrained across layers, and every fused round executes on the
+//! same generic kernel configuration. The FPGA-toolflow survey (Venieris
+//! et al.) identifies exactly this as what separates uniform-fold
+//! single-engine flows from latency-optimal per-stage ones
+//! (fpgaConvNet-style): each stage wants its own fold and its own
+//! memory schedule.
+//!
+//! [`specialize`] converts the stepped per-layer census of the uniform
+//! winner ([`NetworkStepReport`], `Fidelity::SteppedFullNetwork`) into
+//! such a per-stage tailoring. Starting from the uniform winner it
+//! walks the rounds bottleneck-first (descending stepped cycles) and
+//! greedily re-folds each round to the per-layer option + weight
+//! schedule that minimizes that round's stepped cycles, subject to:
+//!
+//! * the per-LAYER divisor constraints (N_i divides the round's own
+//!   reduction dim, N_l its own feature count — the gcd across layers is
+//!   gone, which is the point), within the same hardware caps
+//!   ([`MAX_NI`], [`MAX_NL`]) as the uniform grid; the
+//!   uniform option itself is always admissible, so the pass can never
+//!   regress a round;
+//! * the estimator: whenever a candidate would grow the resource
+//!   envelope (the componentwise max option any round uses), the
+//!   envelope estimate must still fit the thresholds AND hold the
+//!   uniform winner's kernel clock — the pass never trades fmax for
+//!   cycles, so the before/after cycle counts always share one clock
+//!   and the gain is a real latency gain;
+//! * the weight budget: [`WeightSchedule::SliceResident`] — the
+//!   per-round memory schedule the specialized kernel generation
+//!   unlocks — is only offered when the round's weight slice fits the
+//!   family's double-buffered weight-buffer budget
+//!   ([`crate::sim::slice_resident_allowed`]).
+//!
+//! The pass is a pure deterministic function of its inputs (grid order,
+//! strict tie-breaks), so repeated runs — cold or cache-warm — produce
+//! identical [`SpecializationReport`]s. On AlexNet / Arria 10 the
+//! headline effect is the DDR-starved conv rounds flipping to the
+//! slice-resident schedule and becoming compute-bound: total
+//! stepped-full cycles drop by far more than the 5% the perf gate
+//! demands (see the tests and `benches/hotpath_micro.rs`).
+
+use std::collections::HashMap;
+
+use crate::estimator::{estimate, Device, ResourceEstimate, Thresholds};
+use crate::ir::ComputationFlow;
+use crate::sim::{
+    scheduled_round_work, slice_resident_allowed, step_round, NetworkStepReport, WeightSchedule,
+};
+
+use super::options::{MAX_NI, MAX_NL, MIN_OPT};
+
+/// One round's specialization outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpecialization {
+    /// Index into `flow.layers`.
+    pub index: usize,
+    /// Round label (matches the latency/census tables).
+    pub label: String,
+    /// The per-layer option the round runs at.
+    pub ni: usize,
+    pub nl: usize,
+    /// The round's weight schedule.
+    pub schedule: WeightSchedule,
+    /// Stepped cycles under the uniform winner (the census's numbers).
+    pub uniform_cycles: u64,
+    /// Stepped cycles under the specialization.
+    pub cycles: u64,
+}
+
+impl LayerSpecialization {
+    /// Whether the pass changed anything about this round.
+    pub fn specialized(&self) -> bool {
+        self.schedule != WeightSchedule::Streamed || self.cycles != self.uniform_cycles
+    }
+}
+
+/// What [`specialize`] produced: per-round options/schedules plus the
+/// resource envelope they imply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecializationReport {
+    /// The uniform winner the pass started from.
+    pub uniform: (usize, usize),
+    /// Componentwise max option across the specialized rounds — what the
+    /// lane array / fetch vector must be provisioned for.
+    pub envelope: (usize, usize),
+    /// Kernel clock the cycle counts (both sides) are measured at —
+    /// always the uniform winner's fmax: envelope growth is only
+    /// admitted while the clock holds, so before/after cycles are
+    /// directly comparable.
+    pub fmax_mhz: f64,
+    /// Estimate at the envelope option — diff against the uniform
+    /// winner's estimate for the resource delta.
+    pub envelope_estimate: ResourceEstimate,
+    /// One row per fused round, in flow order.
+    pub layers: Vec<LayerSpecialization>,
+}
+
+impl SpecializationReport {
+    /// Total stepped cycles of the uniform baseline.
+    pub fn uniform_total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.uniform_cycles).sum()
+    }
+
+    /// Total stepped cycles after specialization.
+    pub fn specialized_total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+
+    /// Fraction of the uniform cycles the specialization removed.
+    pub fn gain_fraction(&self) -> f64 {
+        let before = self.uniform_total_cycles();
+        if before == 0 {
+            return 0.0;
+        }
+        1.0 - self.specialized_total_cycles() as f64 / before as f64
+    }
+
+    /// Specialized total latency at the report's kernel clock.
+    pub fn specialized_millis(&self) -> f64 {
+        self.specialized_total_cycles() as f64 / (self.fmax_mhz * 1e6) * 1e3
+    }
+
+    /// How many rounds the pass actually changed.
+    pub fn specialized_rounds(&self) -> usize {
+        self.layers.iter().filter(|l| l.specialized()).count()
+    }
+}
+
+/// Power-of-two values in `[MIN_OPT, cap]`.
+fn pow2_options(cap: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut v = MIN_OPT;
+    while v <= cap {
+        out.push(v);
+        v *= 2;
+    }
+    out
+}
+
+/// Candidate rank: strictly fewer cycles wins; ties prefer the uniform
+/// option, then the streamed schedule, then the smaller fold — so the
+/// pass only reports a specialization when it actually buys cycles.
+type CandidateKey = (u64, u8, u8, usize, usize, usize);
+
+fn candidate_key(
+    cycles: u64,
+    uniform: (usize, usize),
+    ni: usize,
+    nl: usize,
+    schedule: WeightSchedule,
+) -> CandidateKey {
+    (
+        cycles,
+        u8::from((ni, nl) != uniform),
+        u8::from(schedule != WeightSchedule::Streamed),
+        ni * nl,
+        nl,
+        ni,
+    )
+}
+
+/// Greedy per-layer specialization of `flow`'s rounds, starting from
+/// the `uniform` winner whose stepped-full census is `census`. See the
+/// module docs for the exact constraints and guarantees.
+pub fn specialize(
+    flow: &ComputationFlow,
+    device: &Device,
+    thresholds: &Thresholds,
+    uniform: &ResourceEstimate,
+    census: &NetworkStepReport,
+) -> SpecializationReport {
+    let uniform_opt = (uniform.ni, uniform.nl);
+    let rounds = flow.layers.len().min(census.layers.len());
+    let first_conv = flow.layers.iter().position(|l| l.is_conv());
+
+    // bottleneck-first: descending uniform cycles, index breaks ties
+    let mut order: Vec<usize> = (0..rounds).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(census.layers[i].cycles), i));
+
+    let mut chosen: Vec<(usize, usize, WeightSchedule, u64)> = (0..rounds)
+        .map(|i| (uniform_opt.0, uniform_opt.1, WeightSchedule::Streamed, census.layers[i].cycles))
+        .collect();
+    let mut envelope = uniform_opt;
+    // memo over candidate envelopes: each unique grown option is priced
+    // by the estimator once, not once per (round, candidate)
+    let mut admissible: HashMap<(usize, usize), bool> = HashMap::new();
+
+    for &li in &order {
+        let layer = &flow.layers[li];
+        let mut best: Option<(CandidateKey, (usize, usize, WeightSchedule, u64))> = None;
+        for &ni in &pow2_options(MAX_NI) {
+            for &nl in &pow2_options(MAX_NL) {
+                // per-layer divisor constraints, mirroring the uniform
+                // OptionSpace: only conv rounds are divisor-constrained
+                // (FC rounds pad via div_ceil, as they always have), and
+                // the uniform option is always admissible regardless —
+                // it is what the flow already runs, padding included
+                if (ni, nl) != uniform_opt {
+                    let conv = layer.is_conv();
+                    if conv && Some(li) != first_conv && layer.reduction_dim() % ni != 0 {
+                        continue;
+                    }
+                    if conv && layer.out_features() % nl != 0 {
+                        continue;
+                    }
+                }
+                // growing the envelope must keep the estimator feasible
+                // at the SAME kernel clock: trading fmax for cycles
+                // would make the before/after comparison mix clocks
+                let grown = (envelope.0.max(ni), envelope.1.max(nl));
+                let grown_ok = grown == envelope
+                    || *admissible.entry(grown).or_insert_with(|| {
+                        let est = estimate(flow, device, grown.0, grown.1);
+                        est.fits(thresholds) && est.fmax_mhz == uniform.fmax_mhz
+                    });
+                if !grown_ok {
+                    continue;
+                }
+                for schedule in [WeightSchedule::Streamed, WeightSchedule::SliceResident] {
+                    if schedule == WeightSchedule::SliceResident
+                        && !slice_resident_allowed(layer, device, ni, nl)
+                    {
+                        continue;
+                    }
+                    let work =
+                        scheduled_round_work(layer, device, uniform.fmax_mhz, ni, nl, schedule);
+                    let cycles = step_round(&work).cycles;
+                    let key = candidate_key(cycles, uniform_opt, ni, nl, schedule);
+                    let better = match &best {
+                        Some((k, _)) => key < *k,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((key, (ni, nl, schedule, cycles)));
+                    }
+                }
+            }
+        }
+        let (_, pick) = best.expect("the uniform option is always a candidate");
+        envelope = (envelope.0.max(pick.0), envelope.1.max(pick.1));
+        chosen[li] = pick;
+    }
+
+    // the envelope estimate prices the specialized design; by
+    // construction (the same-clock admission rule above) its fmax is
+    // the uniform winner's, so every cycle count in the report shares
+    // one clock
+    let envelope_estimate = if envelope == uniform_opt {
+        uniform.clone()
+    } else {
+        estimate(flow, device, envelope.0, envelope.1)
+    };
+
+    let layers = chosen
+        .into_iter()
+        .enumerate()
+        .map(|(i, (ni, nl, schedule, cycles))| LayerSpecialization {
+            index: i,
+            label: flow.layers[i].label(),
+            ni,
+            nl,
+            schedule,
+            uniform_cycles: census.layers[i].cycles,
+            cycles,
+        })
+        .collect();
+
+    SpecializationReport {
+        uniform: uniform_opt,
+        envelope,
+        fmax_mhz: uniform.fmax_mhz,
+        envelope_estimate,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA5};
+    use crate::onnx::zoo;
+    use crate::sim::step_network;
+
+    fn setup(
+        model: &str,
+        device: &'static Device,
+    ) -> (ComputationFlow, ResourceEstimate, NetworkStepReport) {
+        let flow = ComputationFlow::extract(&zoo::build(model, false).unwrap()).unwrap();
+        let dse = crate::dse::brute::explore(&flow, device, Thresholds::default());
+        let est = dse.best_estimate.expect("fits");
+        let census = step_network(&flow, device, est.fmax_mhz, est.ni, est.nl);
+        (flow, est, census)
+    }
+
+    #[test]
+    fn alexnet_arria10_specialization_beats_uniform_by_5_percent() {
+        // THE acceptance gate: specialized AlexNet on the Arria 10 must
+        // shave ≥5% of the uniform winner's stepped-full total cycles
+        // (the slice-resident refolds of the DDR-starved conv rounds
+        // actually shave far more)
+        let (flow, est, census) = setup("alexnet", &ARRIA_10_GX1150);
+        assert_eq!((est.ni, est.nl), (16, 32));
+        let rep = specialize(&flow, &ARRIA_10_GX1150, &Thresholds::default(), &est, &census);
+        assert_eq!(rep.uniform, (16, 32));
+        assert_eq!(rep.envelope, (16, 32), "no envelope growth on the A10");
+        assert_eq!(rep.fmax_mhz, est.fmax_mhz);
+        assert_eq!(rep.envelope_estimate, est, "zero resource delta");
+        assert_eq!(rep.uniform_total_cycles(), census.total_cycles());
+        assert!(
+            rep.specialized_total_cycles() as f64 <= 0.95 * rep.uniform_total_cycles() as f64,
+            "only {:.1}% gain",
+            100.0 * rep.gain_fraction()
+        );
+        // every conv round flips to the slice-resident schedule and goes
+        // compute-bound; the FC rounds (zero weight reuse at batch 1)
+        // stay exactly at the uniform baseline
+        for (l, layer) in rep.layers.iter().zip(&flow.layers) {
+            if layer.is_conv() {
+                assert_eq!(l.schedule, WeightSchedule::SliceResident, "{}", l.label);
+                assert!(l.cycles < l.uniform_cycles, "{}", l.label);
+            } else {
+                assert_eq!(l.schedule, WeightSchedule::Streamed, "{}", l.label);
+                assert_eq!((l.ni, l.nl), rep.uniform, "{}", l.label);
+                assert_eq!(l.cycles, l.uniform_cycles, "{}", l.label);
+                assert!(!l.specialized());
+            }
+        }
+        assert_eq!(rep.specialized_rounds(), flow.conv_rounds());
+        assert!(rep.specialized_millis() > 0.0);
+    }
+
+    #[test]
+    fn specialization_is_deterministic_across_runs() {
+        let (flow, est, census) = setup("alexnet", &ARRIA_10_GX1150);
+        let a = specialize(&flow, &ARRIA_10_GX1150, &Thresholds::default(), &est, &census);
+        let b = specialize(&flow, &ARRIA_10_GX1150, &Thresholds::default(), &est, &census);
+        assert_eq!(a, b, "pure function of its inputs");
+    }
+
+    #[test]
+    fn specialization_never_regresses_any_round() {
+        // the uniform option is always in each round's candidate set, so
+        // no round can get slower — on any model/device pair that fits
+        for (model, device) in [
+            ("alexnet", &ARRIA_10_GX1150),
+            ("alexnet", &CYCLONE_V_5CSEMA5),
+            ("lenet5", &ARRIA_10_GX1150),
+            ("tiny", &CYCLONE_V_5CSEMA5),
+            ("vgg16", &ARRIA_10_GX1150),
+        ] {
+            let (flow, est, census) = setup(model, device);
+            let rep = specialize(&flow, device, &Thresholds::default(), &est, &census);
+            assert_eq!(rep.layers.len(), flow.layers.len());
+            for l in &rep.layers {
+                assert!(
+                    l.cycles <= l.uniform_cycles,
+                    "{model} on {}: {} regressed",
+                    device.name,
+                    l.label
+                );
+                assert!(l.ni <= MAX_NI && l.nl <= MAX_NL);
+                assert!(l.ni >= MIN_OPT && l.nl >= MIN_OPT);
+            }
+            assert!(rep.gain_fraction() >= 0.0);
+            // the envelope estimate always fits the thresholds, at the
+            // uniform winner's clock (never traded for cycles)
+            assert!(rep.envelope_estimate.fits(&Thresholds::default()));
+            assert_eq!(rep.fmax_mhz, est.fmax_mhz, "{model} on {}", device.name);
+            assert_eq!(rep.envelope_estimate.fmax_mhz, est.fmax_mhz);
+            assert!(rep.envelope.0 >= est.ni && rep.envelope.1 >= est.nl);
+        }
+    }
+
+    #[test]
+    fn lenet5_uniform_fallback_option_stays_admissible() {
+        // lenet5's uniform grid fell back to N_l = 4, which does NOT
+        // divide its first conv round's 6 features — the pass must keep
+        // the uniform option admissible (padding and all) rather than
+        // strand the round without candidates
+        let (flow, est, census) = setup("lenet5", &ARRIA_10_GX1150);
+        assert_eq!(est.nl % 4, 0);
+        let rep = specialize(&flow, &ARRIA_10_GX1150, &Thresholds::default(), &est, &census);
+        assert_eq!(rep.layers.len(), flow.layers.len());
+        for l in &rep.layers {
+            assert!(l.cycles <= l.uniform_cycles);
+        }
+    }
+
+    /// CI perf-smoke gate (run with `--ignored` in release mode): the
+    /// PR-5 acceptance criterion, as a cycle-count (deterministic,
+    /// runner-noise-free) comparison.
+    #[test]
+    #[ignore = "perf gate; run in release via CI perf-smoke"]
+    fn perf_smoke_specialized_alexnet_5pct_fewer_cycles() {
+        let (flow, est, census) = setup("alexnet", &ARRIA_10_GX1150);
+        let rep = specialize(&flow, &ARRIA_10_GX1150, &Thresholds::default(), &est, &census);
+        let (before, after) = (rep.uniform_total_cycles(), rep.specialized_total_cycles());
+        assert!(
+            after as f64 <= 0.95 * before as f64,
+            "specialized {after} vs uniform {before} cycles ({:.1}% gain < 5%)",
+            100.0 * rep.gain_fraction()
+        );
+    }
+}

@@ -123,6 +123,22 @@ impl FusedLayer {
     pub fn is_conv(&self) -> bool {
         matches!(self.kind, LayerKind::ConvPool { .. })
     }
+
+    /// Human-readable round label ("L2 conv+pool", "L6 fc") — shared by
+    /// the latency breakdown, the stepped census and the specialization
+    /// table so their rows align textually.
+    pub fn label(&self) -> String {
+        match &self.kind {
+            LayerKind::ConvPool { pool, .. } => {
+                if pool.is_some() {
+                    format!("L{} conv+pool", self.index + 1)
+                } else {
+                    format!("L{} conv", self.index + 1)
+                }
+            }
+            LayerKind::Fc { .. } => format!("L{} fc", self.index + 1),
+        }
+    }
 }
 
 /// The extracted computation flow of a model.

@@ -18,11 +18,10 @@
 //! returns a [`session::Outcome`] whose 1×1, 1×N and M×N shapes are the
 //! classic synth report, fleet fit and model×device sweep — plus a
 //! stable machine-readable [`session::Outcome::to_json`] document
-//! (`--json` on the CLI). The pre-session free functions
-//! ([`synth::run`], [`coordinator::pipeline::fit_fleet`],
-//! [`coordinator::pipeline::sweep_matrix`] and their `_with` variants)
-//! survive as deprecated shims over the same engine, pinned
-//! bit-identical by tests.
+//! (`--json` on the CLI, pinned byte-for-byte by process-level golden
+//! tests). The PR-4 deprecated free-function shims are gone; the
+//! session is the only entry point, and `rust/tests/session.rs` pins
+//! its determinism run-vs-run, cold and cache-warm.
 //!
 //! ## The layers underneath
 //!
@@ -41,22 +40,30 @@
 //! core: a `std::thread` + channel worker pool fans candidate scoring
 //! out across cores (bit-identical results to the sequential path) and
 //! a memo cache keyed on `(model fingerprint, device fingerprint, N_i,
-//! N_l, fidelity)` deduplicates the estimator + simulator queries that
-//! the RL/joint agents revisit constantly. The memo persists: the FNV
-//! fingerprints are process-stable, so [`dse::EvalCache`] serializes to
-//! a versioned, corruption-tolerant JSON file (`--cache-file` on the
-//! CLI, LRU-bounded by `--cache-max-entries`) and repeat explorations
-//! across processes start warm. Ground truth is affordable: the
-//! cycle-stepped simulator's **epoch skip-ahead engine**
-//! ([`sim::step_round`]) fast-forwards steady-state stretches in closed
-//! form — bit-identical to the naive stepper, orders of magnitude
-//! faster — which makes [`dse::Fidelity::SteppedFullNetwork`] (every
-//! round stepped, per-layer stall census) usable inside DSE loops.
-//! Every session run — fleet fits and the RL agents' episode batches
-//! included — rides [`coordinator::scheduler`]'s work-stealing deques,
-//! rendered via [`report::tables::sweep_table`] with
-//! best-device-per-model / best-model-per-device rankings and the
-//! latency/resource Pareto frontier.
+//! N_l, fidelity, census γ)` deduplicates the estimator + simulator
+//! queries that the RL/joint agents revisit constantly. The memo
+//! persists: the FNV fingerprints are process-stable, so
+//! [`dse::EvalCache`] serializes to a versioned, corruption-tolerant
+//! JSON file (`--cache-file` on the CLI, LRU-bounded by
+//! `--cache-max-entries`) and repeat explorations across processes
+//! start warm. Ground truth is affordable: the cycle-stepped
+//! simulator's **epoch skip-ahead engine** ([`sim::step_round`], exact
+//! u128 fixed-point fractional DDR credit via [`sim::ddr_credit_rate`])
+//! fast-forwards steady-state stretches in closed form — bit-identical
+//! to the naive stepper, orders of magnitude faster — which makes
+//! [`dse::Fidelity::SteppedFullNetwork`] (every round stepped,
+//! per-layer stall census) usable inside DSE loops. The census is an
+//! *input* now, not just a report: `--census-gamma` shapes every
+//! explorer's Algorithm-1 reward with the bottleneck round's stall
+//! fraction ([`dse::RewardShaper`]), and [`mod@dse::specialize`] re-folds
+//! the uniform winner to per-layer `(N_i, N_l)` options and weight
+//! schedules (`synth --specialize`,
+//! [`report::tables::specialization_table`]). Every session run —
+//! fleet fits and the RL agents' episode batches included — rides
+//! [`coordinator::scheduler`]'s work-stealing deques, rendered via
+//! [`report::tables::sweep_table`] with best-device-per-model /
+//! best-model-per-device rankings and the latency/resource Pareto
+//! frontier.
 
 pub mod cli;
 pub mod coordinator;

@@ -31,7 +31,7 @@ use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
 use cnn2gate::quant::QuantSpec;
 use cnn2gate::report::{
-    baselines, comparison_table, fig6, fleet_table, stepped_census_table,
+    baselines, comparison_table, fig6, fleet_table, specialization_table, stepped_census_table,
     sweep_best_device_table, sweep_best_model_table, sweep_pareto_table, sweep_table, table1,
     table2,
 };
@@ -93,6 +93,7 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("device", "<d>"),
             opt("explorer", "rl|bf"),
             opt("fidelity", "analytical|stepped|stepped-full"),
+            opt("census-gamma", "<g>"),
             opt("seed", "N"),
             opt("threads", "N"),
             opt("cache-file", "F"),
@@ -111,6 +112,7 @@ static SUBCOMMANDS: &[Subcommand] = &[
             req("model", "<m>"),
             opt("explorer", "rl|bf"),
             opt("fidelity", "analytical|stepped|stepped-full"),
+            opt("census-gamma", "<g>"),
             opt("threads", "N"),
             opt("cache-file", "F"),
             opt("cache-max-entries", "N"),
@@ -128,6 +130,7 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("models", "m1,m2,..."),
             opt("explorer", "rl|bf"),
             opt("fidelity", "analytical|stepped|stepped-full"),
+            opt("census-gamma", "<g>"),
             opt("threads", "N"),
             opt("cache-file", "F"),
             opt("cache-max-entries", "N"),
@@ -145,6 +148,7 @@ static SUBCOMMANDS: &[Subcommand] = &[
             req("model", "<m>"),
             opt("device", "<d>"),
             opt("explorer", "rl|bf"),
+            opt("census-gamma", "<g>"),
             opt("threads", "N"),
             opt("cache-file", "F"),
             opt("cache-max-entries", "N"),
@@ -153,7 +157,7 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("max-mem", "<pct>"),
             opt("max-reg", "<pct>"),
         ],
-        switches: &["quantize", "report", "json"],
+        switches: &["quantize", "report", "specialize", "json"],
         run: cmd_synth,
     },
     Subcommand {
@@ -194,10 +198,15 @@ DEVICES: 5csema4 5csema5 arria10 stratixv
 Flags accept both `--flag value` and `--flag=value`. `--fidelity stepped`
 runs the cycle-accurate simulator on each candidate's dominant round;
 `stepped-full` steps every round (epoch skip-ahead engine). `synth
---report` prints the chosen design's per-layer stall/backpressure census.
-`--cache-max-entries N` LRU-evicts the --cache-file before saving.
-`--json` on synth/fit-fleet/sweep emits the stable machine-readable
-outcome document instead of tables.
+--report` prints the chosen design's per-layer stall/backpressure census;
+`synth --specialize` additionally re-folds each round to its own (Ni,Nl)
+and weight schedule (both switches imply stepped-full fidelity).
+`--census-gamma g` shapes every explorer reward with the stepped
+census's bottleneck stall fraction (0 = the paper's Algorithm 1; the
+stall term is live under stepped-full fidelity). `--cache-max-entries N`
+LRU-evicts the --cache-file before saving. `--json` on
+synth/fit-fleet/sweep emits the stable machine-readable outcome document
+instead of tables.
 ";
 
 /// The USAGE text, generated from [`SUBCOMMANDS`] so it cannot drift
@@ -353,24 +362,30 @@ fn cmd_dse(args: &Args) -> Result<()> {
     let session = open_session(args)?;
     let th = session.thresholds();
     let fidelity = session.fidelity();
+    let census_gamma = session.census_gamma();
     let evaluator = session.evaluator();
     let result = match CompileJob::explorer_from_args(args)? {
         Explorer::BruteForce if args.has("seq") => {
             if fidelity != Fidelity::Analytical {
                 bail!("--seq is the analytical seed path; drop --seq to use --fidelity");
             }
+            if census_gamma != 0.0 {
+                bail!("--seq is the plain Algorithm-1 seed path; drop --seq to use --census-gamma");
+            }
             brute::explore_seq(&flow, dev, th)
         }
         Explorer::Reinforcement if args.has("seq") => {
             bail!("--seq applies to the brute-force explorer (use --explorer bf); RL is inherently sequential")
         }
-        Explorer::BruteForce => brute::explore_with_fidelity(evaluator, &flow, dev, th, fidelity),
+        Explorer::BruteForce => {
+            brute::explore_with_fidelity(evaluator, &flow, dev, th, fidelity, census_gamma)
+        }
         Explorer::Reinforcement => {
             let cfg = RlConfig {
                 seed: args.get_usize("seed", 0xD5E)? as u64,
                 ..RlConfig::default()
             };
-            rl::explore_with_fidelity(evaluator, &flow, dev, th, cfg, fidelity)
+            rl::explore_with_fidelity(evaluator, &flow, dev, th, cfg, fidelity, census_gamma)
         }
     };
     println!("device: {}", dev.name);
@@ -474,9 +489,10 @@ fn cmd_synth(args: &Args) -> Result<()> {
     let quantize = args.has("quantize");
     let g = pipeline::load_model(model, quantize)?;
     let wants_quant = quantize && g.has_weights();
-    // --report upgrades the flow to full-network stepped fidelity so the
-    // chosen design carries its per-layer stall/backpressure census
-    let fidelity = if args.has("report") {
+    // --report and --specialize upgrade the flow to full-network stepped
+    // fidelity: the census is what both the report and the
+    // specialization pass consume
+    let fidelity = if args.has("report") || args.has("specialize") {
         Fidelity::SteppedFullNetwork
     } else {
         Fidelity::Analytical
@@ -488,6 +504,9 @@ fn cmd_synth(args: &Args) -> Result<()> {
         .explorer(CompileJob::explorer_from_args(args)?);
     if wants_quant {
         builder = builder.quantize(QuantSpec::default());
+    }
+    if args.has("specialize") {
+        builder = builder.specialize();
     }
     let outcome = session.run(&builder.build()?)?;
     let json = args.has("json");
@@ -521,10 +540,13 @@ fn cmd_synth(args: &Args) -> Result<()> {
             if let Some(net) = &rep.stepped_network {
                 println!("{}", stepped_census_table(sim, net).render());
             }
+            if let Some(spec) = &rep.specialization {
+                println!("{}", specialization_table(rep, spec).render());
+            }
         }
         _ => println!("Does not fit on {}", rep.device),
     }
-    if args.has("report") && !rep.fits() {
+    if (args.has("report") || args.has("specialize")) && !rep.fits() {
         println!("(no stepped census: the design does not fit)");
     }
     if let Some(q) = &rep.quant {

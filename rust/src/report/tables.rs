@@ -74,9 +74,10 @@ pub fn table2(reports: &[(&SynthReport, &DseResult, &DseResult)]) -> Table {
 }
 
 /// Fleet-fit comparison: one model fitted across the device database
-/// (the `fit-fleet` subcommand's output). `entries` come in database
-/// order from [`crate::coordinator::pipeline::fit_fleet`]-shaped runs;
-/// devices that don't fit render a "Does not fit" row.
+/// (the `fit-fleet` subcommand's output). `entries` come in job order
+/// from a 1×N session run's
+/// [`FleetReport`](crate::coordinator::pipeline::FleetReport); devices
+/// that don't fit render a "Does not fit" row.
 pub fn fleet_table(model: &str, entries: &[SynthReport]) -> Table {
     let mut t = Table::new(
         format!("Fleet fit: {model} across the FPGA device database"),
@@ -168,7 +169,7 @@ pub fn sweep_table(rep: &SweepReport) -> Table {
         format!(
             "Sweep: {} model(s) x {} device(s), {}-dse",
             rep.models.len(),
-            crate::estimator::device::all().len(),
+            rep.devices().len(),
             explorer_tag(rep.explorer)
         ),
         &[
@@ -211,7 +212,7 @@ pub fn sweep_table(rep: &SweepReport) -> Table {
             }
         }
     }
-    t.footnote("model-major, devices in database order; latency simulated at batch 1");
+    t.footnote("model-major, devices in job order; latency simulated at batch 1");
     t
 }
 
@@ -343,6 +344,62 @@ pub fn stepped_census_table(sim: &SimReport, net: &NetworkStepReport) -> Table {
     t
 }
 
+/// Per-layer specialization table (the `synth --specialize` path): one
+/// row per fused round with its specialized option, weight schedule and
+/// cycles before/after, plus the totals and the resource delta of the
+/// envelope in the footnote.
+pub fn specialization_table(
+    rep: &SynthReport,
+    spec: &crate::dse::SpecializationReport,
+) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Per-layer specialization: {} on {} from uniform ({},{})",
+            rep.model, rep.device, spec.uniform.0, spec.uniform.1
+        ),
+        &[
+            "Round",
+            "Option (Ni,Nl)",
+            "Schedule",
+            "Cycles (uniform)",
+            "Cycles (specialized)",
+            "Gain",
+        ],
+    );
+    for l in &spec.layers {
+        let gain = if l.uniform_cycles == 0 {
+            0.0
+        } else {
+            100.0 * (1.0 - l.cycles as f64 / l.uniform_cycles as f64)
+        };
+        t.row(&[
+            l.label.clone(),
+            format!("({},{})", l.ni, l.nl),
+            crate::sim::schedule_tag(l.schedule).to_string(),
+            fmt_count(l.uniform_cycles as f64),
+            fmt_count(l.cycles as f64),
+            if l.specialized() {
+                format!("{gain:.1}%")
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    let delta_alms = spec.envelope_estimate.alms
+        - rep.estimate.as_ref().map_or(spec.envelope_estimate.alms, |e| e.alms);
+    t.footnote(format!(
+        "total {} -> {} cycles ({:.1}% fewer) at {:.0} MHz; envelope ({},{}), resource delta {:+.0} ALMs",
+        fmt_count(spec.uniform_total_cycles() as f64),
+        fmt_count(spec.specialized_total_cycles() as f64),
+        100.0 * spec.gain_fraction(),
+        spec.fmax_mhz,
+        spec.envelope.0,
+        spec.envelope.1,
+        delta_alms,
+    ));
+    t
+}
+
 /// Tables 3/4: comparison to existing works.
 pub fn comparison_table(
     title: &str,
@@ -423,19 +480,42 @@ pub fn fig6(rep: &SimReport) -> Table {
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // fixture reports come from the legacy shims
-
     use super::*;
+    use crate::dse::Fidelity;
     use crate::estimator::device::ARRIA_10_GX1150;
+    use crate::estimator::Device;
     use crate::ir::ComputationFlow;
     use crate::onnx::zoo;
     use crate::report::baselines;
+    use crate::session::{CompileJob, Session};
     use crate::sim::simulate;
 
     fn alexnet_sim() -> SimReport {
         let g = zoo::build("alexnet", false).unwrap();
         let flow = ComputationFlow::extract(&g).unwrap();
         simulate(&flow, &ARRIA_10_GX1150, 16, 32)
+    }
+
+    fn solo(model: &str, device: &'static Device) -> SynthReport {
+        let session = Session::builder().threads(2).build();
+        let job = CompileJob::builder()
+            .model(zoo::build(model, false).unwrap())
+            .device(device)
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        session.run(&job).unwrap().into_synth_report().unwrap()
+    }
+
+    fn full_sweep(models: &[&str]) -> SweepReport {
+        let session = Session::builder().threads(4).build();
+        let job = CompileJob::builder()
+            .models(models.iter().map(|m| zoo::build(m, false).unwrap()))
+            .all_devices()
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        session.run(&job).unwrap().to_sweep_report()
     }
 
     #[test]
@@ -454,14 +534,9 @@ mod tests {
     #[test]
     fn fleet_table_renders_fits_and_no_fits() {
         use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4};
-        use crate::estimator::Thresholds;
-        use crate::synth::{self, Explorer};
-        let g = zoo::build("alexnet", false).unwrap();
         let entries = vec![
-            synth::run(&g, &ARRIA_10_GX1150, Explorer::BruteForce, Thresholds::default(), None)
-                .unwrap(),
-            synth::run(&g, &CYCLONE_V_5CSEMA4, Explorer::BruteForce, Thresholds::default(), None)
-                .unwrap(),
+            solo("alexnet", &ARRIA_10_GX1150),
+            solo("alexnet", &CYCLONE_V_5CSEMA4),
         ];
         let t = fleet_table("alexnet", &entries);
         assert_eq!(t.rows.len(), 2);
@@ -473,14 +548,7 @@ mod tests {
 
     #[test]
     fn sweep_tables_render_matrix_rankings_and_frontier() {
-        use crate::coordinator::pipeline::sweep_matrix;
-        use crate::estimator::Thresholds;
-        use crate::synth::Explorer;
-        let models = [
-            zoo::build("alexnet", false).unwrap(),
-            zoo::build("vgg16", false).unwrap(),
-        ];
-        let rep = sweep_matrix(&models, Explorer::BruteForce, Thresholds::default()).unwrap();
+        let rep = full_sweep(&["alexnet", "vgg16"]);
         let matrix = sweep_table(&rep);
         assert_eq!(matrix.rows.len(), rep.entries.len());
         let s = matrix.render();
@@ -501,6 +569,57 @@ mod tests {
         let pareto = sweep_pareto_table(&rep);
         assert_eq!(pareto.rows.len(), rep.pareto_frontier().len());
         assert!(!pareto.rows.is_empty());
+    }
+
+    #[test]
+    fn subset_sweep_tables_cover_only_the_jobs_devices() {
+        // ROADMAP follow-up (f) at the renderer level: a subset sweep's
+        // tables must neither count nor rank devices outside the job
+        let session = Session::builder().threads(2).build();
+        let job = CompileJob::builder()
+            .model(zoo::build("alexnet", false).unwrap())
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        let rep = session.run(&job).unwrap().to_sweep_report();
+        let matrix = sweep_table(&rep);
+        assert!(
+            matrix.render().contains("1 model(s) x 1 device(s)"),
+            "title counts the job's devices, not the database's"
+        );
+        let best_model = sweep_best_model_table(&rep);
+        assert_eq!(best_model.rows.len(), 1, "one row per job device");
+        let s = best_model.render();
+        assert!(s.contains("Arria 10"), "{s}");
+        assert!(
+            !s.contains("none fits"),
+            "no spurious rows for devices the job never evaluated: {s}"
+        );
+    }
+
+    #[test]
+    fn specialization_table_renders_rounds_and_totals() {
+        let session = Session::builder()
+            .threads(4)
+            .fidelity(Fidelity::SteppedFullNetwork)
+            .build();
+        let job = CompileJob::builder()
+            .model(zoo::build("alexnet", false).unwrap())
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .specialize()
+            .build()
+            .unwrap();
+        let rep = session.run(&job).unwrap().into_synth_report().unwrap();
+        let spec = rep.specialization.clone().expect("specialization present");
+        let t = specialization_table(&rep, &spec);
+        assert_eq!(t.rows.len(), rep.sim.as_ref().unwrap().layers.len());
+        let s = t.render();
+        assert!(s.contains("slice-resident"), "{s}");
+        assert!(s.contains("streamed"), "{s}");
+        assert!(s.contains("L1 conv+pool"), "{s}");
+        assert!(s.contains("fewer"), "{s}");
     }
 
     #[test]

@@ -35,8 +35,16 @@
 //! explorers run as deque items themselves, answered entirely from the
 //! memo, and entries merge in input order. Results are therefore
 //! bit-identical to the sequential seed paths, and identical runs render
-//! byte-identical tables. The deprecated free functions survive as thin
-//! shims over this same engine, pinned bit-identical by tests.
+//! byte-identical tables — pinned by the Session-vs-Session determinism
+//! tests in `rust/tests/session.rs` (the PR-4 deprecated free-function
+//! shims are gone; the session IS the only entry point now).
+//!
+//! Two census-era knobs ride the same machinery: the builder's
+//! [`SessionBuilder::census_gamma`] shapes every explorer's reward with
+//! the stepped census's bottleneck stall fraction, and
+//! [`CompileJobBuilder::specialize`] runs the per-layer (N_i, N_l)
+//! specialization pass ([`mod@crate::dse::specialize`]) on each fitting
+//! cell.
 //!
 //! ```
 //! # fn main() -> anyhow::Result<()> {
@@ -78,8 +86,9 @@ use crate::util::json::{Json, JsonObj};
 /// Format tag of the [`Outcome::to_json`] document.
 pub const OUTCOME_FORMAT: &str = "cnn2gate-outcome";
 /// Schema version of the [`Outcome::to_json`] document; bumped on any
-/// layout change.
-pub const OUTCOME_VERSION: i64 = 1;
+/// layout change (v2: top-level `census_gamma`, per-entry
+/// `specialization`).
+pub const OUTCOME_VERSION: i64 = 2;
 
 /// Candidates per work-stealing prewarm item. Small enough that a
 /// VGG-16-sized grid splits across several workers, big enough that the
@@ -110,6 +119,7 @@ pub struct SessionBuilder {
     cache: CachePolicy,
     thresholds: Thresholds,
     fidelity: Fidelity,
+    census_gamma: f64,
 }
 
 impl Default for SessionBuilder {
@@ -119,6 +129,7 @@ impl Default for SessionBuilder {
             cache: CachePolicy::default(),
             thresholds: Thresholds::default(),
             fidelity: Fidelity::Analytical,
+            census_gamma: 0.0,
         }
     }
 }
@@ -140,7 +151,18 @@ impl SessionBuilder {
                 max_entries: args.get_usize("cache-max-entries", 0)?,
             })
             .thresholds(Self::thresholds_from(args)?)
-            .fidelity(Self::fidelity_from(args)?))
+            .fidelity(Self::fidelity_from(args)?)
+            .census_gamma(Self::census_gamma_from(args)?))
+    }
+
+    /// Parse `--census-gamma` (the shaped-reward γ; 0 = Algorithm 1).
+    /// Rejects negative and non-finite weights.
+    pub fn census_gamma_from(args: &Args) -> Result<f64> {
+        let gamma = args.get_f64("census-gamma", 0.0)?;
+        if !gamma.is_finite() || gamma < 0.0 {
+            bail!("--census-gamma must be a finite non-negative number, got {gamma}");
+        }
+        Ok(gamma)
     }
 
     /// Parse the `--max-lut/--max-dsp/--max-mem/--max-reg` thresholds
@@ -204,6 +226,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Census-reward γ: every explorer in the session scores candidates
+    /// with `β·F_avg − γ·bottleneck_stall_fraction` (the stall term is
+    /// live under [`Fidelity::SteppedFullNetwork`], inert elsewhere).
+    /// 0 (default) is the paper's Algorithm 1, bit for bit.
+    pub fn census_gamma(mut self, census_gamma: f64) -> SessionBuilder {
+        self.census_gamma = census_gamma;
+        self
+    }
+
     /// Build the session. With a cache file the evaluator is private and
     /// disk-seeded (tolerantly: a missing file starts cold silently, a
     /// corrupt or stale one starts cold with a [`Session::load_warning`]
@@ -226,6 +257,7 @@ impl SessionBuilder {
             cache: self.cache,
             thresholds: self.thresholds,
             fidelity: self.fidelity,
+            census_gamma: self.census_gamma,
             load_warning,
         }
     }
@@ -248,6 +280,7 @@ pub struct Session {
     cache: CachePolicy,
     thresholds: Thresholds,
     fidelity: Fidelity,
+    census_gamma: f64,
     load_warning: Option<String>,
 }
 
@@ -272,6 +305,11 @@ impl Session {
         self.fidelity
     }
 
+    /// The census-reward γ every exploration in this session runs at.
+    pub fn census_gamma(&self) -> f64 {
+        self.census_gamma
+    }
+
     pub fn cache_policy(&self) -> &CachePolicy {
         &self.cache
     }
@@ -287,6 +325,13 @@ impl Session {
     /// order; identical jobs produce identical entries (and therefore
     /// byte-identical rendered tables) regardless of thread scheduling.
     pub fn run(&self, job: &CompileJob) -> Result<Outcome> {
+        if job.specialize && self.fidelity != Fidelity::SteppedFullNetwork {
+            bail!(
+                "per-layer specialization consumes the stepped-full census: \
+                 set Fidelity::SteppedFullNetwork on the SessionBuilder \
+                 (the CLI's --specialize does this automatically)"
+            );
+        }
         let run = execute(
             self.evaluator(),
             &job.models,
@@ -295,10 +340,13 @@ impl Session {
             self.thresholds,
             job.quant.as_ref(),
             self.fidelity,
+            self.census_gamma,
+            job.specialize,
         )?;
         Ok(Outcome {
             explorer: job.explorer,
             fidelity: self.fidelity,
+            census_gamma: self.census_gamma,
             models: job.models.iter().map(|g| g.name.clone()).collect(),
             devices: job.devices.iter().map(|d| d.name).collect(),
             entries: run.entries,
@@ -343,6 +391,9 @@ pub struct CompileJob {
     /// Applied per (model, device) pair when present; requires resident
     /// weights.
     pub quant: Option<QuantSpec>,
+    /// Run the per-layer (N_i, N_l) specialization pass on every fitting
+    /// cell (requires the session's `Fidelity::SteppedFullNetwork`).
+    pub specialize: bool,
 }
 
 impl CompileJob {
@@ -367,6 +418,7 @@ pub struct CompileJobBuilder {
     devices: Vec<&'static Device>,
     explorer: Explorer,
     quant: Option<QuantSpec>,
+    specialize: bool,
 }
 
 impl Default for CompileJobBuilder {
@@ -376,6 +428,7 @@ impl Default for CompileJobBuilder {
             devices: Vec::new(),
             explorer: Explorer::Reinforcement,
             quant: None,
+            specialize: false,
         }
     }
 }
@@ -426,6 +479,15 @@ impl CompileJobBuilder {
         self
     }
 
+    /// Run the per-layer (N_i, N_l) specialization pass on every fitting
+    /// cell ([`mod@crate::dse::specialize`]). The session must score at
+    /// [`Fidelity::SteppedFullNetwork`] — the pass consumes the chosen
+    /// design's stepped census.
+    pub fn specialize(mut self) -> CompileJobBuilder {
+        self.specialize = true;
+        self
+    }
+
     /// Validate and build. A job needs at least one model; an empty
     /// device list targets the whole database.
     pub fn build(self) -> Result<CompileJob> {
@@ -442,6 +504,7 @@ impl CompileJobBuilder {
             devices,
             explorer: self.explorer,
             quant: self.quant,
+            specialize: self.specialize,
         })
     }
 }
@@ -459,6 +522,8 @@ impl CompileJobBuilder {
 pub struct Outcome {
     pub explorer: Explorer,
     pub fidelity: Fidelity,
+    /// Census-reward γ the explorations ran at (0 = plain Algorithm 1).
+    pub census_gamma: f64,
     /// Model names in job order.
     pub models: Vec<String>,
     /// Device names in job order.
@@ -535,9 +600,9 @@ impl Outcome {
         })
     }
 
-    /// The legacy sweep view (any shape). Note the sweep rankings assume
-    /// the full device database; for device subsets use the rankings on
-    /// `Outcome` itself.
+    /// The legacy sweep view (any shape). Its rankings run over the
+    /// devices its entries actually cover (the job's device set), same
+    /// as the rankings on `Outcome` itself.
     pub fn to_sweep_report(&self) -> SweepReport {
         SweepReport {
             explorer: self.explorer,
@@ -615,6 +680,7 @@ impl Outcome {
         o.insert("version", OUTCOME_VERSION.into());
         o.insert("explorer", explorer_tag(self.explorer).into());
         o.insert("fidelity", eval::fidelity_tag(self.fidelity).into());
+        o.insert("census_gamma", self.census_gamma.into());
         o.insert(
             "models",
             Json::Arr(self.models.iter().map(|m| m.as_str().into()).collect()),
@@ -722,6 +788,7 @@ fn entry_to_json(rep: &SynthReport) -> Json {
         "stepped_network",
         rep.stepped_network.as_ref().map_or(Json::Null, eval::net_to_json),
     );
+    o.insert("specialization", rep.specialization.as_ref().map_or(Json::Null, spec_to_json));
     o.insert(
         "quant",
         match &rep.quant {
@@ -734,6 +801,37 @@ fn entry_to_json(rep: &SynthReport) -> Json {
             }
             None => Json::Null,
         },
+    );
+    Json::Obj(o)
+}
+
+/// The specialization section of one entry (schema v2).
+fn spec_to_json(spec: &crate::dse::SpecializationReport) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("uniform", Json::Arr(vec![spec.uniform.0.into(), spec.uniform.1.into()]));
+    o.insert("envelope", Json::Arr(vec![spec.envelope.0.into(), spec.envelope.1.into()]));
+    o.insert("fmax_mhz", spec.fmax_mhz.into());
+    o.insert("uniform_total_cycles", Json::Num(spec.uniform_total_cycles() as f64));
+    o.insert("specialized_total_cycles", Json::Num(spec.specialized_total_cycles() as f64));
+    o.insert("envelope_estimate", eval::est_to_json(&spec.envelope_estimate));
+    o.insert(
+        "layers",
+        Json::Arr(
+            spec.layers
+                .iter()
+                .map(|l| {
+                    let mut r = JsonObj::new();
+                    r.insert("index", l.index.into());
+                    r.insert("label", l.label.as_str().into());
+                    r.insert("ni", l.ni.into());
+                    r.insert("nl", l.nl.into());
+                    r.insert("schedule", crate::sim::schedule_tag(l.schedule).into());
+                    r.insert("uniform_cycles", Json::Num(l.uniform_cycles as f64));
+                    r.insert("cycles", Json::Num(l.cycles as f64));
+                    Json::Obj(r)
+                })
+                .collect(),
+        ),
     );
     Json::Obj(o)
 }
@@ -758,10 +856,7 @@ fn merge_steals(a: StealStats, b: StealStats) -> StealStats {
     }
 }
 
-/// The two-phase work-stealing engine behind [`Session::run`] (and,
-/// via thin shims, every deprecated `synth::run*` / `fit_fleet*` /
-/// `sweep_matrix*` free function — which is what pins them bit-identical
-/// to the new path).
+/// The two-phase work-stealing engine behind [`Session::run`].
 ///
 /// Phase 1 prewarms the shared memo over `(model, device,
 /// candidate-chunk)` deque items under ONE LRU generation, so worker
@@ -777,6 +872,7 @@ fn merge_steals(a: StealStats, b: StealStats) -> StealStats {
 /// input order. A final [`EvalCache::touch_present`] pass re-stamps
 /// every grid in deterministic order so `--cache-max-entries` eviction
 /// and the saved cache bytes are scheduling-independent.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn execute(
     evaluator: &Evaluator,
     models: &[Graph],
@@ -785,6 +881,8 @@ pub(crate) fn execute(
     thresholds: Thresholds,
     quant: Option<&QuantSpec>,
     fidelity: Fidelity,
+    census_gamma: f64,
+    specialize: bool,
 ) -> Result<EngineRun> {
     if models.is_empty() {
         bail!("compile job needs at least one model");
@@ -830,9 +928,15 @@ pub(crate) fn execute(
     let (_, prewarm_steals) =
         work_steal_map_seeded(&chunks, prewarm_width, |i| i, |(mi, dev, options)| {
             for &(ni, nl) in options {
-                evaluator
-                    .cache()
-                    .get_or_compute_at(stamp, &flows[*mi], dev, ni, nl, fidelity);
+                evaluator.cache().get_or_compute_at(
+                    stamp,
+                    &flows[*mi],
+                    dev,
+                    ni,
+                    nl,
+                    fidelity,
+                    census_gamma,
+                );
             }
         });
 
@@ -852,6 +956,8 @@ pub(crate) fn execute(
                 thresholds,
                 quants[mi].as_ref(),
                 fidelity,
+                census_gamma,
+                specialize,
             )
         });
     let mut entries = Vec::with_capacity(results.len());
@@ -862,7 +968,9 @@ pub(crate) fn execute(
     // deterministic re-stamp (see the function docs)
     for (flow, grid) in flows.iter().zip(&grids) {
         for &dev in devices {
-            evaluator.cache().touch_present(flow, dev, grid, fidelity);
+            evaluator
+                .cache()
+                .touch_present(flow, dev, grid, fidelity, census_gamma);
         }
     }
     Ok(EngineRun {
@@ -874,9 +982,8 @@ pub(crate) fn execute(
 
 /// One (model, device) cell: DSE → estimate at H_best → synthesis-time
 /// model → latency (pulled from the memo; the chosen option was already
-/// scored during exploration, so nothing is recomputed). Exactly the old
-/// `synth::run_with_fidelity` body, minus the per-call flow extraction
-/// and quantization ([`execute`] precomputes both per model).
+/// scored during exploration, so nothing is recomputed) → optional
+/// per-layer specialization of the chosen design.
 #[allow(clippy::too_many_arguments)]
 fn compile_pair(
     evaluator: &Evaluator,
@@ -887,11 +994,18 @@ fn compile_pair(
     thresholds: Thresholds,
     quant: Option<&QuantReport>,
     fidelity: Fidelity,
+    census_gamma: f64,
+    specialize: bool,
 ) -> Result<SynthReport> {
     let dse = match explorer {
-        Explorer::BruteForce => {
-            brute::explore_with_fidelity(evaluator, flow, device, thresholds, fidelity)
-        }
+        Explorer::BruteForce => brute::explore_with_fidelity(
+            evaluator,
+            flow,
+            device,
+            thresholds,
+            fidelity,
+            census_gamma,
+        ),
         Explorer::Reinforcement => rl::explore_with_fidelity(
             evaluator,
             flow,
@@ -899,22 +1013,36 @@ fn compile_pair(
             thresholds,
             RlConfig::default(),
             fidelity,
+            census_gamma,
         ),
     };
 
-    let (estimate, synth_min, sim, stepped_network) = match (dse.best, &dse.best_estimate) {
-        (Some((ni, nl)), Some(est)) => {
-            let minutes = synthesis_minutes(est, device);
-            let (chosen, _) = evaluator.evaluate(flow, device, ni, nl, fidelity);
-            (
-                Some(est.clone()),
-                Some(minutes),
-                Some(chosen.latency.clone()),
-                chosen.stepped_network.clone(),
-            )
-        }
-        _ => (None, None, None, None),
-    };
+    let (estimate, synth_min, sim, stepped_network, specialization) =
+        match (dse.best, &dse.best_estimate) {
+            (Some((ni, nl)), Some(est)) => {
+                let minutes = synthesis_minutes(est, device);
+                let (chosen, _) =
+                    evaluator.evaluate_shaped(flow, device, ni, nl, fidelity, census_gamma);
+                let specialization = match (&chosen.stepped_network, specialize) {
+                    (Some(census), true) => Some(crate::dse::specialize::specialize(
+                        flow,
+                        device,
+                        &thresholds,
+                        est,
+                        census,
+                    )),
+                    _ => None,
+                };
+                (
+                    Some(est.clone()),
+                    Some(minutes),
+                    Some(chosen.latency.clone()),
+                    chosen.stepped_network.clone(),
+                    specialization,
+                )
+            }
+            _ => (None, None, None, None, None),
+        };
 
     Ok(SynthReport {
         model: graph.name.clone(),
@@ -925,6 +1053,7 @@ fn compile_pair(
         synthesis_minutes: synth_min,
         sim,
         stepped_network,
+        specialization,
         quant: quant.cloned(),
     })
 }
@@ -1014,10 +1143,19 @@ mod tests {
                 "7",
                 "--fidelity",
                 "stepped-full",
+                "--census-gamma",
+                "0.25",
                 "--max-lut",
                 "50",
             ]),
-            &["threads", "cache-file", "cache-max-entries", "fidelity", "max-lut"],
+            &[
+                "threads",
+                "cache-file",
+                "cache-max-entries",
+                "fidelity",
+                "census-gamma",
+                "max-lut",
+            ],
             &[],
         )
         .unwrap();
@@ -1026,14 +1164,22 @@ mod tests {
         assert_eq!(b.cache.file.as_deref(), Some(std::path::Path::new("/tmp/x.json")));
         assert_eq!(b.cache.max_entries, 7);
         assert_eq!(b.fidelity, Fidelity::SteppedFullNetwork);
+        assert_eq!(b.census_gamma, 0.25);
         assert_eq!(b.thresholds.lut, 50.0);
         assert_eq!(b.thresholds.dsp, 101.0);
+        // a negative or non-finite γ is rejected
+        for bad in ["-1", "NaN", "inf"] {
+            let a =
+                Args::parse(&sv(&["dse", "--census-gamma", bad]), &["census-gamma"], &[]).unwrap();
+            assert!(SessionBuilder::from_args(&a).is_err(), "γ={bad} must be rejected");
+        }
         // defaults when nothing is given
         let empty = Args::parse(&sv(&["synth"]), &[], &[]).unwrap();
         let d = SessionBuilder::from_args(&empty).unwrap();
         assert_eq!(d.threads, 0);
         assert!(d.cache.file.is_none());
         assert_eq!(d.fidelity, Fidelity::Analytical);
+        assert_eq!(d.census_gamma, 0.0);
         // explorer parsing lives on the job side
         let bf = Args::parse(&sv(&["synth", "--explorer", "bf"]), &["explorer"], &[]).unwrap();
         assert_eq!(CompileJob::explorer_from_args(&bf).unwrap(), Explorer::BruteForce);
@@ -1053,6 +1199,28 @@ mod tests {
         assert_eq!(job.devices.len(), device::all().len(), "defaults to the database");
         assert_eq!(job.explorer, Explorer::Reinforcement);
         assert!(job.quant.is_none());
+        assert!(!job.specialize);
+    }
+
+    #[test]
+    fn specialize_requires_stepped_full_fidelity() {
+        let session = Session::builder().threads(2).build(); // analytical
+        let job = CompileJob::builder()
+            .model(zoo::build("tiny", false).unwrap())
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .specialize()
+            .build()
+            .unwrap();
+        let err = session.run(&job).unwrap_err();
+        assert!(err.to_string().contains("stepped-full"), "{err}");
+        // at the right fidelity the same job carries the report
+        let stepped = Session::builder().threads(2).fidelity(Fidelity::SteppedFullNetwork).build();
+        let outcome = stepped.run(&job).unwrap();
+        let rep = outcome.synth_report().unwrap();
+        let spec = rep.specialization.as_ref().expect("specialization present");
+        assert_eq!(spec.uniform, rep.option().unwrap());
+        assert!(spec.specialized_total_cycles() <= spec.uniform_total_cycles());
     }
 
     #[test]

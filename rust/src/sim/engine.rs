@@ -86,16 +86,10 @@ pub fn simulate_layer(
     let groups = out_f.div_ceil(nl) as u64;
     let red_steps = red.div_ceil(ni) as u64;
 
-    let (rows, label) = match &layer.kind {
-        LayerKind::ConvPool { conv_out_hw, pool, .. } => (
-            conv_out_hw.0 as u64,
-            if pool.is_some() {
-                format!("L{} conv+pool", layer.index + 1)
-            } else {
-                format!("L{} conv", layer.index + 1)
-            },
-        ),
-        LayerKind::Fc { .. } => (1, format!("L{} fc", layer.index + 1)),
+    let label = layer.label();
+    let rows = match &layer.kind {
+        LayerKind::ConvPool { conv_out_hw, .. } => conv_out_hw.0 as u64,
+        LayerKind::Fc { .. } => 1,
     };
 
     // -- compute stream ----------------------------------------------------

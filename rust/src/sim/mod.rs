@@ -11,7 +11,8 @@ pub use engine::{
     SimReport,
 };
 pub use kernels::{
-    analytical_cycles, ddr_whole_bytes, dominant_round_work, layer_round_work, network_round_work,
-    step_network, step_round, step_round_reference, NetworkStepReport, RoundWork, StepReport,
+    analytical_cycles, ddr_credit_rate, dominant_round_work, layer_round_work, network_round_work,
+    schedule_tag, scheduled_round_work, slice_resident_allowed, step_network, step_round,
+    step_round_reference, NetworkStepReport, RoundWork, StepReport, WeightSchedule,
 };
 pub use pipe::Pipe;

@@ -3,26 +3,25 @@
 //! Ties the full CNN2Gate pipeline together for one model + target:
 //! flow extraction → (optional) quantization application → DSE (RL or
 //! BF) → resource estimate at H_best → synthesis-time model → latency
-//! simulation. Emulation mode instead routes execution through the PJRT
-//! runtime (see [`crate::coordinator`]).
+//! simulation → (optional) per-layer specialization. Emulation mode
+//! instead routes execution through the PJRT runtime (see
+//! [`crate::coordinator`]).
 //!
 //! "CNN2Gate is also capable of building and running the CNN model in
 //! both emulation and full flow mode."
 //!
-//! The flow itself now lives in [`crate::session`]: a 1×1
+//! The flow itself lives in [`crate::session`]: a 1×1
 //! [`CompileJob`](crate::session::CompileJob) run through
-//! [`Session::run`](crate::session::Session::run) is exactly this
-//! module's old `run` ladder. The free functions below survive as
-//! deprecated shims over the same engine — bit-identical by
-//! construction, and pinned so by the shim tests — so existing callers
-//! keep working while new code goes through the session.
+//! [`Session::run`](crate::session::Session::run) is this module's old
+//! `run` ladder. The deprecated free-function shims that used to live
+//! here (`run`, `run_with`, `run_with_fidelity`) were removed once
+//! nothing cited them; `rust/tests/session.rs` now pins
+//! Session-vs-Session determinism instead of shim identity. This module
+//! keeps the report types the session produces.
 
-use anyhow::Result;
-
-use crate::dse::{eval, DseResult, Evaluator, Fidelity};
-use crate::estimator::{Device, ResourceEstimate, Thresholds};
-use crate::ir::Graph;
-use crate::quant::{QuantReport, QuantSpec};
+use crate::dse::{DseResult, SpecializationReport};
+use crate::estimator::ResourceEstimate;
+use crate::quant::QuantReport;
 use crate::sim::{NetworkStepReport, SimReport};
 
 /// Which explorer drives the fit.
@@ -54,8 +53,14 @@ pub struct SynthReport {
     pub sim: Option<SimReport>,
     /// Per-layer cycle-accurate stall/backpressure census of the chosen
     /// design (present when the flow ran at
-    /// [`Fidelity::SteppedFullNetwork`] and the design fits).
+    /// [`Fidelity::SteppedFullNetwork`](crate::dse::Fidelity) and the
+    /// design fits).
     pub stepped_network: Option<NetworkStepReport>,
+    /// Per-layer (N_i, N_l) + weight-schedule specialization of the
+    /// chosen design (present when the job asked for it — `synth
+    /// --specialize` — the flow ran at stepped-full fidelity, and the
+    /// design fits).
+    pub specialization: Option<SpecializationReport>,
     pub quant: Option<QuantReport>,
 }
 
@@ -73,119 +78,55 @@ impl SynthReport {
     }
 }
 
-/// One (model, device) pair through the session engine — the shared
-/// body of every shim below.
-fn one_pair(
-    evaluator: &Evaluator,
-    graph: &Graph,
-    device: &'static Device,
-    explorer: Explorer,
-    thresholds: Thresholds,
-    quant_spec: Option<&QuantSpec>,
-    fidelity: Fidelity,
-) -> Result<SynthReport> {
-    let run = crate::session::execute(
-        evaluator,
-        std::slice::from_ref(graph),
-        &[device],
-        explorer,
-        thresholds,
-        quant_spec,
-        fidelity,
-    )?;
-    Ok(run
-        .entries
-        .into_iter()
-        .next()
-        .expect("a 1x1 job yields exactly one report"))
-}
-
-/// Run the flow for `graph` on `device`.
-///
-/// `quant_spec` is the user-given post-training quantization; pass `None`
-/// to skip the application step (models without resident weights).
-#[deprecated(note = "use a 1x1 cnn2gate::session::CompileJob with Session::run")]
-pub fn run(
-    graph: &Graph,
-    device: &'static Device,
-    explorer: Explorer,
-    thresholds: Thresholds,
-    quant_spec: Option<&QuantSpec>,
-) -> Result<SynthReport> {
-    one_pair(
-        eval::global(),
-        graph,
-        device,
-        explorer,
-        thresholds,
-        quant_spec,
-        Fidelity::Analytical,
-    )
-}
-
-/// Same flow through a caller-provided evaluator — what the fleet/sweep
-/// fan-outs and the `--cache-file` CLI path used before sessions owned
-/// the evaluator.
-#[deprecated(note = "use cnn2gate::session::Session, which owns the evaluator")]
-pub fn run_with(
-    evaluator: &Evaluator,
-    graph: &Graph,
-    device: &'static Device,
-    explorer: Explorer,
-    thresholds: Thresholds,
-    quant_spec: Option<&QuantSpec>,
-) -> Result<SynthReport> {
-    one_pair(
-        evaluator,
-        graph,
-        device,
-        explorer,
-        thresholds,
-        quant_spec,
-        Fidelity::Analytical,
-    )
-}
-
-/// The full flow at an explicit [`Fidelity`]: stepped modes score every
-/// explored candidate through the cycle-accurate simulator, and
-/// `SteppedFullNetwork` surfaces the chosen design's per-layer
-/// stall/backpressure census on the report (the `synth --report` path).
-/// The chosen design itself is fidelity-independent.
-#[deprecated(note = "set the fidelity on cnn2gate::session::SessionBuilder instead")]
-pub fn run_with_fidelity(
-    evaluator: &Evaluator,
-    graph: &Graph,
-    device: &'static Device,
-    explorer: Explorer,
-    thresholds: Thresholds,
-    quant_spec: Option<&QuantSpec>,
-    fidelity: Fidelity,
-) -> Result<SynthReport> {
-    one_pair(
-        evaluator, graph, device, explorer, thresholds, quant_spec, fidelity,
-    )
-}
-
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the shims are exactly what these tests pin
-
     use super::*;
+    use crate::dse::Fidelity;
     use crate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
+    use crate::estimator::Thresholds;
     use crate::onnx::zoo;
+    use crate::quant::QuantSpec;
+    use crate::session::{CompileJob, Session};
+
+    /// 1×1 session run — the flow every test here exercises.
+    fn run_one(
+        model: &str,
+        with_weights: bool,
+        device: &'static crate::estimator::Device,
+        explorer: Explorer,
+        quantize: bool,
+        fidelity: Fidelity,
+        specialize: bool,
+    ) -> SynthReport {
+        let session = Session::builder()
+            .threads(4)
+            .thresholds(Thresholds::default())
+            .fidelity(fidelity)
+            .build();
+        let mut builder = CompileJob::builder()
+            .model(zoo::build(model, with_weights).unwrap())
+            .device(device)
+            .explorer(explorer);
+        if quantize {
+            builder = builder.quantize(QuantSpec::default());
+        }
+        if specialize {
+            builder = builder.specialize();
+        }
+        session.run(&builder.build().unwrap()).unwrap().into_synth_report().unwrap()
+    }
 
     #[test]
     fn full_flow_alexnet_arria10() {
-        let g = zoo::build("alexnet", true).unwrap();
-        let spec = QuantSpec::default();
-        let rep = run(
-            &g,
+        let rep = run_one(
+            "alexnet",
+            true,
             &ARRIA_10_GX1150,
             Explorer::BruteForce,
-            Thresholds::default(),
-            Some(&spec),
-        )
-        .unwrap();
+            true,
+            Fidelity::Analytical,
+            false,
+        );
         assert!(rep.fits());
         assert_eq!(rep.option(), Some((16, 32)));
         // Table 2: 8.5 hrs synthesis
@@ -195,59 +136,72 @@ mod tests {
         let lat = rep.latency_ms().unwrap();
         assert!((lat - 18.24).abs() < 2.0, "{lat}");
         assert!(rep.quant.is_some());
+        assert!(rep.specialization.is_none(), "not requested");
     }
 
     #[test]
     fn rl_flow_matches_bf_choice() {
-        let g = zoo::build("alexnet", false).unwrap();
-        let bf = run(&g, &CYCLONE_V_5CSEMA5, Explorer::BruteForce, Thresholds::default(), None)
-            .unwrap();
-        let rl = run(
-            &g,
+        let bf = run_one(
+            "alexnet",
+            false,
+            &CYCLONE_V_5CSEMA5,
+            Explorer::BruteForce,
+            false,
+            Fidelity::Analytical,
+            false,
+        );
+        let rl = run_one(
+            "alexnet",
+            false,
             &CYCLONE_V_5CSEMA5,
             Explorer::Reinforcement,
-            Thresholds::default(),
-            None,
-        )
-        .unwrap();
+            false,
+            Fidelity::Analytical,
+            false,
+        );
         assert_eq!(bf.option(), rl.option());
         assert!(rl.dse.queries < bf.dse.queries);
     }
 
     #[test]
     fn no_fit_report_is_complete() {
-        let g = zoo::build("alexnet", false).unwrap();
-        let rep = run(
-            &g,
+        let rep = run_one(
+            "alexnet",
+            false,
             &CYCLONE_V_5CSEMA4,
             Explorer::BruteForce,
-            Thresholds::default(),
-            None,
-        )
-        .unwrap();
+            false,
+            Fidelity::SteppedFullNetwork,
+            true,
+        );
         assert!(!rep.fits());
         assert_eq!(rep.latency_ms(), None);
         assert_eq!(rep.synthesis_minutes, None);
+        assert!(rep.stepped_network.is_none());
+        assert!(rep.specialization.is_none(), "nothing fits, nothing to specialize");
     }
 
     #[test]
     fn stepped_full_network_flow_surfaces_the_census() {
-        use crate::dse::Evaluator;
-        let g = zoo::build("alexnet", false).unwrap();
-        let ev = Evaluator::new(4);
-        let rep = run_with_fidelity(
-            &ev,
-            &g,
+        let rep = run_one(
+            "alexnet",
+            false,
             &ARRIA_10_GX1150,
             Explorer::BruteForce,
-            Thresholds::default(),
-            None,
+            false,
             Fidelity::SteppedFullNetwork,
-        )
-        .unwrap();
+            false,
+        );
         // same design as the analytical flow...
-        let base = run(&g, &ARRIA_10_GX1150, Explorer::BruteForce, Thresholds::default(), None)
-            .unwrap();
+        let base = run_one(
+            "alexnet",
+            false,
+            &ARRIA_10_GX1150,
+            Explorer::BruteForce,
+            false,
+            Fidelity::Analytical,
+            false,
+        );
         assert_eq!(rep.option(), base.option());
         assert_eq!(rep.dse.trace, base.dse.trace);
         assert_eq!(rep.latency_ms(), base.latency_ms());
@@ -259,17 +213,41 @@ mod tests {
     }
 
     #[test]
-    fn quantization_requires_weights() {
-        let g = zoo::build("alexnet", false).unwrap(); // no weights
-        let spec = QuantSpec::default();
-        let err = run(
-            &g,
+    fn specialized_flow_carries_the_specialization_report() {
+        let rep = run_one(
+            "alexnet",
+            false,
             &ARRIA_10_GX1150,
             Explorer::BruteForce,
-            Thresholds::default(),
-            Some(&spec),
-        )
-        .unwrap_err();
+            false,
+            Fidelity::SteppedFullNetwork,
+            true,
+        );
+        let spec = rep.specialization.as_ref().expect("specialization report");
+        assert_eq!(spec.uniform, rep.option().unwrap());
+        assert_eq!(spec.layers.len(), rep.sim.as_ref().unwrap().layers.len());
+        // the acceptance relation, end to end through the session
+        assert!(
+            spec.specialized_total_cycles() as f64 <= 0.95 * spec.uniform_total_cycles() as f64
+        );
+        // the pass consumed exactly the report's own census
+        assert_eq!(
+            spec.uniform_total_cycles(),
+            rep.stepped_network.as_ref().unwrap().total_cycles()
+        );
+    }
+
+    #[test]
+    fn quantization_requires_weights() {
+        let session = Session::builder().threads(2).build();
+        let job = CompileJob::builder()
+            .model(zoo::build("alexnet", false).unwrap()) // no weights
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .quantize(QuantSpec::default())
+            .build()
+            .unwrap();
+        let err = session.run(&job).unwrap_err();
         assert!(err.to_string().contains("quantization"));
     }
 }

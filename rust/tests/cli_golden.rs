@@ -1,0 +1,108 @@
+//! CLI-process-level golden tests (ROADMAP follow-up (e)): spawn the
+//! built `cnn2gate` binary for `synth --json` and `sweep --json` and pin
+//! its stdout BYTES two ways:
+//!
+//! 1. against the in-process [`Outcome::to_json`] document for the
+//!    equivalent job — which pins the CLI adapter layer (flag parsing,
+//!    session construction, the `print!` path, stderr/stdout routing)
+//!    that the Outcome-level golden in `tests/session.rs` cannot see;
+//! 2. against committed golden files, regenerable with
+//!    `CNN2GATE_UPDATE_GOLDENS=1 cargo test --test cli_golden`.
+//!
+//! The tiny zoo model keeps the documents small and the runs fast; the
+//! `--explorer bf` grid keeps them free of RNG state.
+
+use std::path::Path;
+use std::process::Command;
+
+use cnn2gate::estimator::device;
+use cnn2gate::onnx::zoo;
+use cnn2gate::session::{CompileJob, Session};
+use cnn2gate::synth::Explorer;
+use cnn2gate::util::json::Json;
+
+fn run_cli(args: &[&str]) -> (String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_cnn2gate"))
+        .args(args)
+        .output()
+        .expect("spawn the cnn2gate binary");
+    assert!(
+        out.status.success(),
+        "cnn2gate {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (
+        String::from_utf8(out.stdout).expect("stdout is UTF-8"),
+        String::from_utf8(out.stderr).expect("stderr is UTF-8"),
+    )
+}
+
+/// Compare against (or regenerate) a committed golden file.
+fn check_golden(name: &str, got: &str) {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name);
+    if std::env::var("CNN2GATE_UPDATE_GOLDENS").is_ok() {
+        std::fs::write(&path, got).unwrap();
+    }
+    let want = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("golden file {name} must be committed: {e}"));
+    assert_eq!(
+        got, want,
+        "{name} drifted (CNN2GATE_UPDATE_GOLDENS=1 regenerates the goldens)"
+    );
+}
+
+#[test]
+fn synth_json_process_output_is_the_outcome_document() {
+    let (stdout, stderr) = run_cli(&[
+        "synth",
+        "--model",
+        "tiny",
+        "--device",
+        "arria10",
+        "--explorer",
+        "bf",
+        "--json",
+    ]);
+    assert!(stderr.is_empty(), "no notes expected without a cache file: {stderr}");
+    // the adapter pin: the process's stdout is EXACTLY the in-process
+    // outcome document for the equivalent job, byte for byte
+    let session = Session::builder().build();
+    let job = CompileJob::builder()
+        .model(zoo::build("tiny", false).unwrap())
+        .device(&device::ARRIA_10_GX1150)
+        .explorer(Explorer::BruteForce)
+        .build()
+        .unwrap();
+    let expected = session.run(&job).unwrap().to_json().to_string_pretty();
+    assert_eq!(stdout, expected, "CLI adapter drifted from Outcome::to_json");
+    // stdout stays machine-parseable on its own
+    Json::parse(&stdout).expect("CLI stdout parses as JSON");
+    check_golden("synth_tiny_arria10.json", &stdout);
+}
+
+#[test]
+fn sweep_json_process_output_is_the_outcome_document() {
+    let (stdout, stderr) = run_cli(&["sweep", "--models", "tiny", "--explorer", "bf", "--json"]);
+    assert!(stderr.is_empty(), "no notes expected without a cache file: {stderr}");
+    let session = Session::builder().build();
+    let job = CompileJob::builder()
+        .model(zoo::build("tiny", false).unwrap())
+        .all_devices()
+        .explorer(Explorer::BruteForce)
+        .build()
+        .unwrap();
+    let expected = session.run(&job).unwrap().to_json().to_string_pretty();
+    assert_eq!(stdout, expected, "CLI adapter drifted from Outcome::to_json");
+    check_golden("sweep_tiny.json", &stdout);
+}
+
+#[test]
+fn cli_json_runs_are_byte_deterministic_across_processes() {
+    // two independent processes (separate memo, separate scheduler
+    // timing) must emit identical bytes — the cold/warm stability the
+    // --json contract promises, at process granularity
+    let args = ["sweep", "--models", "tiny", "--explorer", "bf", "--json"];
+    let (a, _) = run_cli(&args);
+    let (b, _) = run_cli(&args);
+    assert_eq!(a, b);
+}

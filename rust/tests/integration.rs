@@ -1,28 +1,38 @@
 //! Cross-module integration tests: the full pipeline over every zoo
 //! model × every device, the artifact contract, and paper-shape
-//! invariants that span estimator + DSE + simulator.
-//!
-//! Several tests intentionally exercise the deprecated `synth::run*` /
-//! `fit_fleet*` / `sweep_matrix*` shims: they pin the seed behavior the
-//! session engine must reproduce (see also `tests/session.rs`).
-#![allow(deprecated)]
+//! invariants that span estimator + DSE + simulator — all driven
+//! through the [`cnn2gate::session`] front door (the only entry point
+//! since the PR-4 shims were removed).
 
-use cnn2gate::dse::{brute, rl, OptionSpace, RlConfig};
-use cnn2gate::estimator::{device, estimate, Thresholds};
+use cnn2gate::dse::{brute, rl, Fidelity, OptionSpace, RlConfig};
+use cnn2gate::estimator::{device, estimate, Device, Thresholds};
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::onnx::{parser, zoo};
 use cnn2gate::quant::QuantSpec;
+use cnn2gate::session::{CompileJob, Session};
 use cnn2gate::sim::simulate;
-use cnn2gate::synth::{self, Explorer};
+use cnn2gate::synth::{Explorer, SynthReport};
 use cnn2gate::testkit::for_all;
+
+/// One (model, device) pair through a fresh session.
+fn solo(model: &str, with_weights: bool, dev: &'static Device, explorer: Explorer) -> SynthReport {
+    let session = Session::builder().threads(2).build();
+    let mut builder = CompileJob::builder()
+        .model(zoo::build(model, with_weights).unwrap())
+        .device(dev)
+        .explorer(explorer);
+    if with_weights {
+        builder = builder.quantize(QuantSpec::default());
+    }
+    session.run(&builder.build().unwrap()).unwrap().into_synth_report().unwrap()
+}
 
 #[test]
 fn every_zoo_model_fits_somewhere() {
     // every model must fit at least the Arria 10 and produce a latency
     for name in zoo::names() {
-        let g = zoo::build(name, false).unwrap();
         let dev = device::find("arria10").unwrap();
-        let rep = synth::run(&g, dev, Explorer::BruteForce, Thresholds::default(), None).unwrap();
+        let rep = solo(name, false, dev, Explorer::BruteForce);
         assert!(rep.fits(), "{name} must fit the Arria 10");
         assert!(rep.latency_ms().unwrap() > 0.0);
     }
@@ -31,10 +41,8 @@ fn every_zoo_model_fits_somewhere() {
 #[test]
 fn full_grid_pipeline_never_panics() {
     for name in zoo::names() {
-        let g = zoo::build(name, false).unwrap();
         for dev in device::all() {
-            let rep =
-                synth::run(&g, dev, Explorer::Reinforcement, Thresholds::default(), None).unwrap();
+            let rep = solo(name, false, dev, Explorer::Reinforcement);
             // no-fit is a valid outcome; panics/errors are not
             if let Some(ms) = rep.latency_ms() {
                 assert!(ms.is_finite() && ms > 0.0);
@@ -46,11 +54,8 @@ fn full_grid_pipeline_never_panics() {
 #[test]
 fn quantized_synth_flow_for_weighted_models() {
     for name in ["tiny", "lenet5"] {
-        let g = zoo::build(name, true).unwrap();
         let dev = device::find("arria10").unwrap();
-        let spec = QuantSpec::default();
-        let rep = synth::run(&g, dev, Explorer::BruteForce, Thresholds::default(), Some(&spec))
-            .unwrap();
+        let rep = solo(name, true, dev, Explorer::BruteForce);
         let q = rep.quant.expect("quant report");
         assert!(q.worst_sat_ratio() < 0.05, "{name}: saturation too high");
     }
@@ -177,75 +182,51 @@ fn failure_injection_corrupted_model_files() {
     drop(doc);
 }
 
+fn sweep_job(models: &[&str]) -> CompileJob {
+    CompileJob::builder()
+        .models(models.iter().map(|m| zoo::build(m, false).unwrap()))
+        .all_devices()
+        .explorer(Explorer::BruteForce)
+        .build()
+        .unwrap()
+}
+
 #[test]
 fn sweep_with_cache_file_is_warm_and_bit_identical() {
-    // the PR acceptance shape: a second sweep run against a persisted
+    // the acceptance shape: a second sweep session against a persisted
     // --cache-file must report >0 cache hits (and recompute nothing)
     // while rendering byte-identical ranking tables to the cold run
-    use cnn2gate::coordinator::pipeline::sweep_matrix_with;
-    use cnn2gate::dse::{EvalCache, Evaluator, Fidelity};
     use cnn2gate::report::{
         sweep_best_device_table, sweep_best_model_table, sweep_pareto_table, sweep_table,
     };
-    use std::sync::Arc;
 
-    let models = [
-        zoo::build("alexnet", false).unwrap(),
-        zoo::build("vgg16", false).unwrap(),
-    ];
+    let job = sweep_job(&["alexnet", "vgg16"]);
     let path = std::env::temp_dir().join(format!(
         "cnn2gate-sweep-cache-{}.json",
         std::process::id()
     ));
 
-    let cold_ev = Evaluator::new(4);
-    let cold = sweep_matrix_with(
-        &cold_ev,
-        &models,
-        Explorer::BruteForce,
-        Thresholds::default(),
-        Fidelity::Analytical,
-    )
-    .unwrap();
+    let cold_session = Session::builder().threads(4).cache_file(&path).build();
+    let cold = cold_session.run(&job).unwrap().to_sweep_report();
     // the work-stealing prewarm computes every candidate exactly once;
     // the explorer phase is then answered from the memo
-    let cold_stats = cold_ev.cache().stats();
+    let cold_stats = cold_session.evaluator().cache().stats();
     assert!(cold_stats.misses > 0, "cold run must compute candidates");
-    assert_eq!(
-        cold_stats.misses, cold_stats.entries,
-        "each unique candidate computed once"
-    );
-    let written = cold_ev.cache().save(&path).unwrap();
-    assert!(written > 0);
+    assert_eq!(cold_stats.misses, cold_stats.entries, "each unique candidate computed once");
+    let save = cold_session.close().unwrap();
+    assert!(save.written.unwrap().0 > 0);
 
-    let (cache, warn) = EvalCache::load_or_cold(&path);
-    assert!(warn.is_none(), "our own file must load cleanly: {warn:?}");
-    let warm_ev = Evaluator::with_cache(4, Arc::new(cache));
-    let warm = sweep_matrix_with(
-        &warm_ev,
-        &models,
-        Explorer::BruteForce,
-        Thresholds::default(),
-        Fidelity::Analytical,
-    )
-    .unwrap();
-    let stats = warm_ev.cache().stats();
+    let warm_session = Session::builder().threads(4).cache_file(&path).build();
+    assert!(warm_session.load_warning().is_none(), "our own file must load cleanly");
+    let warm = warm_session.run(&job).unwrap().to_sweep_report();
+    let stats = warm_session.evaluator().cache().stats();
     assert!(stats.hits > 0, "warm run must be served from the cache file");
     assert_eq!(stats.misses, 0, "nothing recomputed on a warm cache");
 
     assert_eq!(sweep_table(&warm).render(), sweep_table(&cold).render());
-    assert_eq!(
-        sweep_best_device_table(&warm).render(),
-        sweep_best_device_table(&cold).render()
-    );
-    assert_eq!(
-        sweep_best_model_table(&warm).render(),
-        sweep_best_model_table(&cold).render()
-    );
-    assert_eq!(
-        sweep_pareto_table(&warm).render(),
-        sweep_pareto_table(&cold).render()
-    );
+    assert_eq!(sweep_best_device_table(&warm).render(), sweep_best_device_table(&cold).render());
+    assert_eq!(sweep_best_model_table(&warm).render(), sweep_best_model_table(&cold).render());
+    assert_eq!(sweep_pareto_table(&warm).render(), sweep_pareto_table(&cold).render());
     std::fs::remove_file(&path).ok();
 }
 
@@ -256,28 +237,15 @@ fn sweep_cache_files_are_byte_identical_across_identical_runs() {
     // explorers included) must persist byte-identical cache files —
     // the post-sweep re-stamp pass, not thread scheduling, decides the
     // final LRU order
-    use cnn2gate::coordinator::pipeline::sweep_matrix_with;
-    use cnn2gate::dse::{Evaluator, Fidelity};
-
-    let models = [
-        zoo::build("alexnet", false).unwrap(),
-        zoo::build("vgg16", false).unwrap(),
-    ];
+    let job = sweep_job(&["alexnet", "vgg16"]);
     let run = |tag: &str| {
-        let ev = Evaluator::new(4);
-        sweep_matrix_with(
-            &ev,
-            &models,
-            Explorer::BruteForce,
-            Thresholds::default(),
-            Fidelity::Analytical,
-        )
-        .unwrap();
         let path = std::env::temp_dir().join(format!(
             "cnn2gate-stamp-det-{}-{tag}.json",
             std::process::id()
         ));
-        ev.cache().save(&path).unwrap();
+        let session = Session::builder().threads(4).cache_file(&path).build();
+        session.run(&job).unwrap();
+        session.close().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).ok();
         text
@@ -287,40 +255,31 @@ fn sweep_cache_files_are_byte_identical_across_identical_runs() {
 
 #[test]
 fn stepped_full_sweep_round_trips_warm_and_byte_identical() {
-    // PR-3 acceptance shape: the work-stealing sweep at full-network
-    // stepped fidelity, re-run against its own cache file, recomputes
-    // nothing and reproduces every table and every per-round census
-    use cnn2gate::coordinator::pipeline::sweep_matrix_with;
-    use cnn2gate::dse::{EvalCache, Evaluator, Fidelity};
+    // the work-stealing sweep at full-network stepped fidelity, re-run
+    // against its own cache file, recomputes nothing and reproduces
+    // every table and every per-round census
     use cnn2gate::report::sweep_table;
-    use std::sync::Arc;
 
-    let models = [zoo::build("lenet5", false).unwrap()];
+    let job = sweep_job(&["lenet5"]);
     let path = std::env::temp_dir().join(format!(
         "cnn2gate-stepped-sweep-cache-{}.json",
         std::process::id()
     ));
-    let cold_ev = Evaluator::new(4);
-    let cold = sweep_matrix_with(
-        &cold_ev,
-        &models,
-        Explorer::BruteForce,
-        Thresholds::default(),
-        Fidelity::SteppedFullNetwork,
-    )
-    .unwrap();
-    cold_ev.cache().save(&path).unwrap();
+    let cold_session = Session::builder()
+        .threads(4)
+        .fidelity(Fidelity::SteppedFullNetwork)
+        .cache_file(&path)
+        .build();
+    let cold = cold_session.run(&job).unwrap().to_sweep_report();
+    cold_session.close().unwrap();
 
-    let warm_ev = Evaluator::with_cache(4, Arc::new(EvalCache::load(&path).unwrap()));
-    let warm = sweep_matrix_with(
-        &warm_ev,
-        &models,
-        Explorer::BruteForce,
-        Thresholds::default(),
-        Fidelity::SteppedFullNetwork,
-    )
-    .unwrap();
-    assert_eq!(warm_ev.cache().stats().misses, 0, "census served from disk");
+    let warm_session = Session::builder()
+        .threads(4)
+        .fidelity(Fidelity::SteppedFullNetwork)
+        .cache_file(&path)
+        .build();
+    let warm = warm_session.run(&job).unwrap().to_sweep_report();
+    assert_eq!(warm_session.evaluator().cache().stats().misses, 0, "census served from disk");
     assert_eq!(sweep_table(&warm).render(), sweep_table(&cold).render());
     for (w, c) in warm.entries.iter().zip(&cold.entries) {
         assert_eq!(w.option(), c.option(), "{}", w.device);
@@ -333,32 +292,30 @@ fn stepped_full_sweep_round_trips_warm_and_byte_identical() {
 }
 
 #[test]
-fn fit_fleet_with_cache_file_round_trip() {
-    use cnn2gate::coordinator::pipeline::fit_fleet_with;
-    use cnn2gate::dse::{EvalCache, Evaluator};
-    use std::sync::Arc;
-
-    let g = zoo::build("alexnet", false).unwrap();
+fn fleet_with_cache_file_round_trip() {
+    let job = CompileJob::builder()
+        .model(zoo::build("alexnet", false).unwrap())
+        .all_devices()
+        .explorer(Explorer::BruteForce)
+        .build()
+        .unwrap();
     let path = std::env::temp_dir().join(format!(
         "cnn2gate-fleet-cache-{}.json",
         std::process::id()
     ));
-    let cold_ev = Evaluator::new(4);
-    let cold = fit_fleet_with(&cold_ev, &g, Explorer::BruteForce, Thresholds::default()).unwrap();
-    cold_ev.cache().save(&path).unwrap();
+    let cold_session = Session::builder().threads(4).cache_file(&path).build();
+    let cold = cold_session.run(&job).unwrap().to_fleet_report().unwrap();
+    cold_session.close().unwrap();
 
-    let warm_ev = Evaluator::with_cache(4, Arc::new(EvalCache::load(&path).unwrap()));
-    let warm = fit_fleet_with(&warm_ev, &g, Explorer::BruteForce, Thresholds::default()).unwrap();
-    assert!(warm_ev.cache().stats().hits > 0);
-    assert_eq!(warm_ev.cache().stats().misses, 0);
+    let warm_session = Session::builder().threads(4).cache_file(&path).build();
+    let warm = warm_session.run(&job).unwrap().to_fleet_report().unwrap();
+    assert!(warm_session.evaluator().cache().stats().hits > 0);
+    assert_eq!(warm_session.evaluator().cache().stats().misses, 0);
     for (w, c) in warm.entries.iter().zip(&cold.entries) {
         assert_eq!(w.option(), c.option(), "{}", w.device);
         assert_eq!(w.dse.trace, c.dse.trace, "{}", w.device);
     }
-    assert_eq!(
-        warm.best().map(|b| b.device),
-        cold.best().map(|b| b.device)
-    );
+    assert_eq!(warm.best().map(|b| b.device), cold.best().map(|b| b.device));
     std::fs::remove_file(&path).ok();
 }
 
@@ -367,14 +324,11 @@ fn paper_headline_numbers_cross_module() {
     // the single most important reproduction assertion, end to end:
     // AlexNet 18 ms / VGG 205 ms on the Arria 10 at the DSE-chosen option
     let dev = device::find("arria10").unwrap();
-    let th = Thresholds::default();
-    let alex = zoo::build("alexnet", false).unwrap();
-    let rep = synth::run(&alex, dev, Explorer::Reinforcement, th, None).unwrap();
+    let rep = solo("alexnet", false, dev, Explorer::Reinforcement);
     assert_eq!(rep.option(), Some((16, 32)));
     let ms = rep.latency_ms().unwrap();
     assert!((ms - 18.24).abs() / 18.24 < 0.12, "AlexNet {ms} ms");
-    let vgg = zoo::build("vgg16", false).unwrap();
-    let repv = synth::run(&vgg, dev, Explorer::Reinforcement, th, None).unwrap();
+    let repv = solo("vgg16", false, dev, Explorer::Reinforcement);
     let msv = repv.latency_ms().unwrap();
     assert!((msv - 205.0).abs() / 205.0 < 0.17, "VGG {msv} ms");
 }

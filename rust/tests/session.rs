@@ -1,26 +1,26 @@
-//! Session-engine integration tests: the deprecated free-function shims
-//! must stay bit-identical to [`cnn2gate::session::Session::run`] (cold
-//! AND cache-warm), outcomes must be scheduling-independent, and the
-//! `--json` document must be stable, round-trip-parseable and match the
-//! committed golden schema.
-#![allow(deprecated)] // the shims are one side of every identity check
+//! Session-engine integration tests: [`cnn2gate::session::Session`] is
+//! the single entry point now (the PR-4 deprecated shims are gone), so
+//! these tests pin Session-vs-Session determinism — two independent
+//! sessions running the same job must agree field-by-field and
+//! byte-for-byte, cold AND cache-warm — plus scheduling-independence,
+//! the census-γ=0 compatibility guarantee, and the stability of the
+//! `--json` document against its committed golden schema.
 
 use std::collections::BTreeSet;
 use std::path::Path;
-use std::sync::Arc;
 
-use cnn2gate::coordinator::pipeline::{self, FleetReport, SweepReport};
-use cnn2gate::dse::{EvalCache, Evaluator, Fidelity, OptionSpace};
-use cnn2gate::estimator::{device, Thresholds};
+use cnn2gate::coordinator::pipeline::{FleetReport, SweepReport};
+use cnn2gate::dse::{Fidelity, OptionSpace};
+use cnn2gate::estimator::device;
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::onnx::zoo;
 use cnn2gate::quant::QuantSpec;
 use cnn2gate::report::{
-    fig6, fleet_table, stepped_census_table, sweep_best_device_table, sweep_best_model_table,
-    sweep_pareto_table, sweep_table,
+    fig6, fleet_table, specialization_table, stepped_census_table, sweep_best_device_table,
+    sweep_best_model_table, sweep_pareto_table, sweep_table,
 };
-use cnn2gate::session::{CompileJob, Outcome, Session};
-use cnn2gate::synth::{self, Explorer, SynthReport};
+use cnn2gate::session::{CompileJob, Outcome, Session, SessionBuilder};
+use cnn2gate::synth::{Explorer, SynthReport};
 use cnn2gate::util::json::Json;
 
 fn tmp(tag: &str) -> std::path::PathBuf {
@@ -29,85 +29,74 @@ fn tmp(tag: &str) -> std::path::PathBuf {
 
 /// Field-by-field identity of two synthesis reports (every
 /// deterministic field; wall clocks excluded by construction).
-fn assert_report_identity(old: &SynthReport, new: &SynthReport, ctx: &str) {
-    assert_eq!(old.model, new.model, "{ctx}");
-    assert_eq!(old.device, new.device, "{ctx}");
-    assert_eq!(old.option(), new.option(), "{ctx}");
-    assert_eq!(old.dse.trace, new.dse.trace, "{ctx}: DSE traces");
-    assert_eq!(old.dse.queries, new.dse.queries, "{ctx}");
-    assert_eq!(old.dse.cache_hits, new.dse.cache_hits, "{ctx}");
-    assert_eq!(old.dse.f_max.to_bits(), new.dse.f_max.to_bits(), "{ctx}");
-    assert_eq!(old.dse.modeled_seconds, new.dse.modeled_seconds, "{ctx}");
-    assert_eq!(old.estimate, new.estimate, "{ctx}");
-    assert_eq!(old.synthesis_minutes, new.synthesis_minutes, "{ctx}");
-    assert_eq!(old.sim, new.sim, "{ctx}");
-    assert_eq!(old.stepped_network, new.stepped_network, "{ctx}");
+fn assert_report_identity(a: &SynthReport, b: &SynthReport, ctx: &str) {
+    assert_eq!(a.model, b.model, "{ctx}");
+    assert_eq!(a.device, b.device, "{ctx}");
+    assert_eq!(a.option(), b.option(), "{ctx}");
+    assert_eq!(a.dse.trace, b.dse.trace, "{ctx}: DSE traces");
+    assert_eq!(a.dse.queries, b.dse.queries, "{ctx}");
+    assert_eq!(a.dse.cache_hits, b.dse.cache_hits, "{ctx}");
+    assert_eq!(a.dse.f_max.to_bits(), b.dse.f_max.to_bits(), "{ctx}");
+    assert_eq!(a.dse.modeled_seconds, b.dse.modeled_seconds, "{ctx}");
+    assert_eq!(a.estimate, b.estimate, "{ctx}");
+    assert_eq!(a.synthesis_minutes, b.synthesis_minutes, "{ctx}");
+    assert_eq!(a.sim, b.sim, "{ctx}");
+    assert_eq!(a.stepped_network, b.stepped_network, "{ctx}");
+    assert_eq!(a.specialization, b.specialization, "{ctx}");
+}
+
+fn synth_job(specialize: bool) -> CompileJob {
+    let mut builder = CompileJob::builder()
+        .model(zoo::build("alexnet", false).unwrap())
+        .device(&device::ARRIA_10_GX1150)
+        .explorer(Explorer::BruteForce);
+    if specialize {
+        builder = builder.specialize();
+    }
+    builder.build().unwrap()
+}
+
+fn stepped_builder() -> SessionBuilder {
+    Session::builder().threads(4).fidelity(Fidelity::SteppedFullNetwork)
 }
 
 #[test]
-fn shim_synth_bit_identity_cold_and_warm() {
-    let g = zoo::build("alexnet", false).unwrap();
-    let th = Thresholds::default();
-    let fidelity = Fidelity::SteppedFullNetwork;
+fn session_synth_determinism_cold_and_warm() {
+    let job = synth_job(true);
 
-    // cold: old free function vs a fresh session
-    let old_ev = Evaluator::new(4);
-    let old = synth::run_with_fidelity(
-        &old_ev,
-        &g,
-        &device::ARRIA_10_GX1150,
-        Explorer::BruteForce,
-        th,
-        None,
-        fidelity,
-    )
-    .unwrap();
-    let session = Session::builder().threads(4).fidelity(fidelity).build();
-    let job = CompileJob::builder()
-        .model(g.clone())
-        .device(&device::ARRIA_10_GX1150)
-        .explorer(Explorer::BruteForce)
-        .build()
-        .unwrap();
-    let new = session.run(&job).unwrap().into_synth_report().unwrap();
-    assert_report_identity(&old, &new, "cold synth");
-    // rendered output is byte-identical too
+    // two independent cold sessions: field-identical reports,
+    // byte-identical rendered tables
+    let first_session = stepped_builder().build();
+    let first = first_session.run(&job).unwrap().into_synth_report().unwrap();
+    let second = stepped_builder().build().run(&job).unwrap().into_synth_report().unwrap();
+    assert_report_identity(&first, &second, "cold synth run-vs-run");
     assert_eq!(
-        fig6(old.sim.as_ref().unwrap()).render(),
-        fig6(new.sim.as_ref().unwrap()).render()
+        fig6(first.sim.as_ref().unwrap()).render(),
+        fig6(second.sim.as_ref().unwrap()).render()
     );
     assert_eq!(
-        stepped_census_table(old.sim.as_ref().unwrap(), old.stepped_network.as_ref().unwrap())
+        stepped_census_table(first.sim.as_ref().unwrap(), first.stepped_network.as_ref().unwrap())
             .render(),
-        stepped_census_table(new.sim.as_ref().unwrap(), new.stepped_network.as_ref().unwrap())
-            .render()
+        stepped_census_table(
+            second.sim.as_ref().unwrap(),
+            second.stepped_network.as_ref().unwrap()
+        )
+        .render()
+    );
+    assert_eq!(
+        specialization_table(&first, first.specialization.as_ref().unwrap()).render(),
+        specialization_table(&second, second.specialization.as_ref().unwrap()).render()
     );
 
-    // warm: persist the memo, reload on both sides, nothing recomputes
+    // warm: persist the first session's memo, replay from disk — nothing
+    // recomputes and every field reproduces
     let path = tmp("synth");
-    old_ev.cache().save(&path).unwrap();
-    let warm_ev = Evaluator::with_cache(4, Arc::new(EvalCache::load(&path).unwrap()));
-    let old_warm = synth::run_with_fidelity(
-        &warm_ev,
-        &g,
-        &device::ARRIA_10_GX1150,
-        Explorer::BruteForce,
-        th,
-        None,
-        fidelity,
-    )
-    .unwrap();
-    let warm_session = Session::builder().cache_file(&path).fidelity(fidelity).build();
+    first_session.evaluator().cache().save(&path).unwrap();
+    let warm_session = stepped_builder().threads(0).cache_file(&path).build();
     assert!(warm_session.load_warning().is_none());
-    let new_warm = warm_session.run(&job).unwrap().into_synth_report().unwrap();
-    assert_eq!(warm_ev.cache().stats().misses, 0, "old warm path recomputed");
-    assert_eq!(
-        warm_session.evaluator().cache().stats().misses,
-        0,
-        "new warm path recomputed"
-    );
-    assert_report_identity(&old_warm, &old, "old warm vs cold");
-    assert_report_identity(&new_warm, &new, "new warm vs cold");
+    let warm = warm_session.run(&job).unwrap().into_synth_report().unwrap();
+    assert_eq!(warm_session.evaluator().cache().stats().misses, 0, "warm path recomputed");
+    assert_report_identity(&warm, &first, "warm vs cold");
     std::fs::remove_file(&path).ok();
 }
 
@@ -115,39 +104,39 @@ fn fleet_tables(rep: &FleetReport) -> String {
     fleet_table(&rep.model, &rep.entries).render()
 }
 
-#[test]
-fn shim_fleet_bit_identity_cold_and_warm() {
-    let g = zoo::build("alexnet", false).unwrap();
-    let th = Thresholds::default();
-
-    let old_ev = Evaluator::new(4);
-    let old = pipeline::fit_fleet_with(&old_ev, &g, Explorer::BruteForce, th).unwrap();
-    let session = Session::builder().threads(4).build();
-    let job = CompileJob::builder()
-        .model(g.clone())
+fn fleet_job() -> CompileJob {
+    CompileJob::builder()
+        .model(zoo::build("alexnet", false).unwrap())
         .all_devices()
         .explorer(Explorer::BruteForce)
         .build()
-        .unwrap();
-    let outcome = session.run(&job).unwrap();
-    let new = outcome.to_fleet_report().unwrap();
-    assert_eq!(old.entries.len(), new.entries.len());
-    for (o, n) in old.entries.iter().zip(&new.entries) {
-        assert_report_identity(o, n, "cold fleet");
-    }
-    assert_eq!(fleet_tables(&old), fleet_tables(&new), "fleet tables byte-identical");
+        .unwrap()
+}
 
-    // warm on both sides from the same persisted memo
+#[test]
+fn session_fleet_determinism_cold_and_warm() {
+    let job = fleet_job();
+    let first_session = Session::builder().threads(4).build();
+    let first = first_session.run(&job).unwrap().to_fleet_report().unwrap();
+    let second = Session::builder()
+        .threads(4)
+        .build()
+        .run(&job)
+        .unwrap()
+        .to_fleet_report()
+        .unwrap();
+    assert_eq!(first.entries.len(), second.entries.len());
+    for (a, b) in first.entries.iter().zip(&second.entries) {
+        assert_report_identity(a, b, "cold fleet run-vs-run");
+    }
+    assert_eq!(fleet_tables(&first), fleet_tables(&second), "fleet tables byte-identical");
+
     let path = tmp("fleet");
-    old_ev.cache().save(&path).unwrap();
-    let warm_ev = Evaluator::with_cache(4, Arc::new(EvalCache::load(&path).unwrap()));
-    let old_warm = pipeline::fit_fleet_with(&warm_ev, &g, Explorer::BruteForce, th).unwrap();
+    first_session.evaluator().cache().save(&path).unwrap();
     let warm_session = Session::builder().cache_file(&path).build();
-    let new_warm = warm_session.run(&job).unwrap().to_fleet_report().unwrap();
-    assert_eq!(warm_ev.cache().stats().misses, 0);
+    let warm = warm_session.run(&job).unwrap().to_fleet_report().unwrap();
     assert_eq!(warm_session.evaluator().cache().stats().misses, 0);
-    assert_eq!(fleet_tables(&old_warm), fleet_tables(&old), "old warm drifted");
-    assert_eq!(fleet_tables(&new_warm), fleet_tables(&new), "new warm drifted");
+    assert_eq!(fleet_tables(&warm), fleet_tables(&first), "warm fleet drifted");
     std::fs::remove_file(&path).ok();
 }
 
@@ -162,63 +151,97 @@ fn sweep_tables(rep: &SweepReport) -> String {
 }
 
 #[test]
-fn shim_sweep_bit_identity_cold_and_warm() {
-    let models = [
-        zoo::build("alexnet", false).unwrap(),
-        zoo::build("vgg16", false).unwrap(),
-    ];
-    let th = Thresholds::default();
-
-    let old_ev = Evaluator::new(4);
-    let old = pipeline::sweep_matrix_with(
-        &old_ev,
-        &models,
-        Explorer::BruteForce,
-        th,
-        Fidelity::Analytical,
-    )
-    .unwrap();
-    let session = Session::builder().threads(4).build();
+fn session_sweep_determinism_cold_and_warm() {
     let job = CompileJob::builder()
-        .models(models.clone())
+        .models([
+            zoo::build("alexnet", false).unwrap(),
+            zoo::build("vgg16", false).unwrap(),
+        ])
         .all_devices()
         .explorer(Explorer::BruteForce)
         .build()
         .unwrap();
-    let outcome = session.run(&job).unwrap();
-    let new = outcome.to_sweep_report();
-    assert_eq!(old.entries.len(), new.entries.len());
-    for (o, n) in old.entries.iter().zip(&new.entries) {
-        assert_report_identity(o, n, "cold sweep");
+
+    let first_session = Session::builder().threads(4).build();
+    let first = first_session.run(&job).unwrap().to_sweep_report();
+    let second = Session::builder().threads(4).build().run(&job).unwrap().to_sweep_report();
+    assert_eq!(first.entries.len(), second.entries.len());
+    for (a, b) in first.entries.iter().zip(&second.entries) {
+        assert_report_identity(a, b, "cold sweep run-vs-run");
     }
-    assert_eq!(sweep_tables(&old), sweep_tables(&new), "all four sweep tables");
+    assert_eq!(sweep_tables(&first), sweep_tables(&second), "all four sweep tables");
 
     let path = tmp("sweep");
-    old_ev.cache().save(&path).unwrap();
-    let warm_ev = Evaluator::with_cache(4, Arc::new(EvalCache::load(&path).unwrap()));
-    let old_warm = pipeline::sweep_matrix_with(
-        &warm_ev,
-        &models,
-        Explorer::BruteForce,
-        th,
-        Fidelity::Analytical,
-    )
-    .unwrap();
+    first_session.evaluator().cache().save(&path).unwrap();
     let warm_session = Session::builder().cache_file(&path).build();
-    let new_warm = warm_session.run(&job).unwrap().to_sweep_report();
-    assert_eq!(warm_ev.cache().stats().misses, 0);
+    let warm = warm_session.run(&job).unwrap().to_sweep_report();
     assert_eq!(warm_session.evaluator().cache().stats().misses, 0);
-    assert_eq!(sweep_tables(&old_warm), sweep_tables(&old));
-    assert_eq!(sweep_tables(&new_warm), sweep_tables(&new));
+    assert_eq!(sweep_tables(&warm), sweep_tables(&first));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn census_gamma_zero_sessions_match_unshaped_sessions_at_any_fidelity() {
+    // the acceptance pin: γ = 0 explorer choices and traces are
+    // bit-identical to the unshaped path across all fidelities
+    let job = synth_job(false);
+    for fidelity in [
+        Fidelity::Analytical,
+        Fidelity::SteppedDominantRound,
+        Fidelity::SteppedFullNetwork,
+    ] {
+        let plain = Session::builder()
+            .threads(4)
+            .fidelity(fidelity)
+            .build()
+            .run(&job)
+            .unwrap()
+            .into_synth_report()
+            .unwrap();
+        let shaped = Session::builder()
+            .threads(4)
+            .fidelity(fidelity)
+            .census_gamma(0.0)
+            .build()
+            .run(&job)
+            .unwrap()
+            .into_synth_report()
+            .unwrap();
+        assert_report_identity(&plain, &shaped, "γ=0 vs unshaped");
+    }
+}
+
+#[test]
+fn shaped_sessions_are_deterministic_and_key_their_own_cache_space() {
+    // a γ > 0 stepped-full session is deterministic cold and cache-warm,
+    // and its persisted memo answers a same-γ session without recompute
+    let job = synth_job(false);
+    let build = || stepped_builder().census_gamma(0.4).build();
+    let first_session = build();
+    let first = first_session.run(&job).unwrap().into_synth_report().unwrap();
+    let second = build().run(&job).unwrap().into_synth_report().unwrap();
+    assert_report_identity(&first, &second, "shaped run-vs-run");
+
+    let path = tmp("shaped");
+    first_session.evaluator().cache().save(&path).unwrap();
+    let warm_session = stepped_builder().threads(0).census_gamma(0.4).cache_file(&path).build();
+    let warm = warm_session.run(&job).unwrap().into_synth_report().unwrap();
+    assert_eq!(warm_session.evaluator().cache().stats().misses, 0);
+    assert_report_identity(&warm, &first, "shaped warm vs cold");
+
+    // a different γ deliberately misses that working set (the γ is part
+    // of the memo fingerprint) and recomputes its own
+    let other = stepped_builder().threads(0).census_gamma(0.7).cache_file(&path).build();
+    other.run(&job).unwrap();
+    assert!(other.evaluator().cache().stats().misses > 0, "γ=0.7 must not borrow γ=0.4 entries");
     std::fs::remove_file(&path).ok();
 }
 
 #[test]
 fn fleet_and_rl_batches_ride_the_scheduler_deterministically() {
-    // acceptance shape: fleet fits and RL episode batches execute on the
-    // work-stealing deques (StealStats surfaced in the Outcome) while
-    // results stay input-order deterministic — byte-identical tables
-    // across runs
+    // fleet fits and RL episode batches execute on the work-stealing
+    // deques (StealStats surfaced in the Outcome) while results stay
+    // input-order deterministic — byte-identical tables across runs
     let flow = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
     let grid = OptionSpace::from_flow(&flow).pairs().len();
     let n_dev = device::all().len();
@@ -279,6 +302,7 @@ fn quantized_stepped_outcome() -> Outcome {
                 .device(&device::ARRIA_10_GX1150)
                 .explorer(Explorer::BruteForce)
                 .quantize(QuantSpec::default())
+                .specialize()
                 .build()
                 .unwrap(),
         )
@@ -346,18 +370,18 @@ fn collect_paths(v: &Json, prefix: &str, out: &mut BTreeSet<String>) {
 #[test]
 fn outcome_json_matches_the_golden_schema() {
     // union of the fitting/non-fitting analytical sweep (nulls, option
-    // arrays, rankings) and a quantized stepped-full 1×1 (quant +
-    // stepped_network sections): together they exercise every key the
-    // v1 schema can emit
+    // arrays, rankings) and a quantized+specialized stepped-full 1×1
+    // (quant + stepped_network + specialization sections): together they
+    // exercise every key the v2 schema can emit
     let mut got = BTreeSet::new();
     collect_paths(&analytical_outcome().to_json(), "", &mut got);
     collect_paths(&quantized_stepped_outcome().to_json(), "", &mut got);
 
     let golden_path =
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/outcome_v1_paths.txt");
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/outcome_v2_paths.txt");
     if std::env::var("CNN2GATE_UPDATE_GOLDENS").is_ok() {
         let mut text = String::from(
-            "# Key paths of the cnn2gate-outcome v1 JSON document (--json).\n\
+            "# Key paths of the cnn2gate-outcome v2 JSON document (--json).\n\
              # Regenerate with CNN2GATE_UPDATE_GOLDENS=1 cargo test outcome_json_matches.\n",
         );
         for p in &got {
@@ -367,7 +391,7 @@ fn outcome_json_matches_the_golden_schema() {
         std::fs::write(&golden_path, text).unwrap();
     }
     let want: BTreeSet<String> = std::fs::read_to_string(&golden_path)
-        .expect("golden schema file committed at rust/tests/golden/outcome_v1_paths.txt")
+        .expect("golden schema file committed at rust/tests/golden/outcome_v2_paths.txt")
         .lines()
         .map(str::trim)
         .filter(|l| !l.is_empty() && !l.starts_with('#'))
@@ -385,9 +409,10 @@ fn outcome_json_matches_the_golden_schema() {
 fn outcome_json_carries_the_acceptance_payload() {
     let doc = analytical_outcome().to_json();
     assert_eq!(doc.get("format").as_str(), Some("cnn2gate-outcome"));
-    assert_eq!(doc.get("version").as_i64(), Some(1));
+    assert_eq!(doc.get("version").as_i64(), Some(2));
     assert_eq!(doc.get("explorer").as_str(), Some("bf"));
     assert_eq!(doc.get("fidelity").as_str(), Some("analytical"));
+    assert_eq!(doc.get("census_gamma").as_f64(), Some(0.0));
     let entries = doc.get("entries").as_arr().unwrap();
     assert_eq!(entries.len(), device::all().len());
     // the Arria 10 cell carries the paper's design
@@ -399,6 +424,7 @@ fn outcome_json_carries_the_acceptance_payload() {
     assert_eq!(arria.get("option").as_usize_vec(), Some(vec![16, 32]));
     assert!(arria.get("latency").get("total_millis").as_f64().unwrap() > 0.0);
     assert_eq!(arria.get("trace").as_arr().unwrap().len(), 12);
+    assert!(arria.get("specialization").is_null(), "not requested");
     // the 5CSEMA4 cell is an explicit no-fit, not an absent row
     let cyclone = entries
         .iter()
@@ -409,15 +435,24 @@ fn outcome_json_carries_the_acceptance_payload() {
     assert!(cyclone.get("estimate").is_null());
     // rankings present
     let rankings = doc.get("rankings");
-    assert_eq!(
-        rankings.get("best_device_per_model").as_arr().unwrap().len(),
-        1
-    );
+    assert_eq!(rankings.get("best_device_per_model").as_arr().unwrap().len(), 1);
     assert!(!rankings.get("pareto_frontier").as_arr().unwrap().is_empty());
-    // the stepped/quantized shape carries its sections
+    // the stepped/quantized/specialized shape carries its sections
     let stepped = quantized_stepped_outcome().to_json();
     let entry = stepped.get("entries").idx(0);
     assert!(!entry.get("stepped_network").is_null());
     assert!(entry.get("quant").get("tensors").as_usize().unwrap() > 0);
     assert_eq!(stepped.get("fidelity").as_str(), Some("stepped-full-network"));
+    let spec = entry.get("specialization");
+    assert!(!spec.is_null(), "specialize() was requested");
+    assert_eq!(spec.get("uniform").as_usize_vec(), entry.get("option").as_usize_vec());
+    let (before, after) = (
+        spec.get("uniform_total_cycles").as_f64().unwrap(),
+        spec.get("specialized_total_cycles").as_f64().unwrap(),
+    );
+    assert!(after <= before, "specialization never regresses");
+    assert_eq!(
+        spec.get("layers").as_arr().unwrap().len(),
+        entry.get("latency").get("layers").as_arr().unwrap().len()
+    );
 }
