@@ -14,7 +14,9 @@
 mod common;
 
 use cnn2gate::coordinator::pipeline;
-use cnn2gate::dse::{brute, eval, specialize, EvalCache, Evaluation, Evaluator, Fidelity};
+use cnn2gate::dse::{
+    brute, eval, specialize, EvalCache, EvalRequest, Evaluation, Evaluator, Fidelity,
+};
 use cnn2gate::estimator::device::ARRIA_10_GX1150;
 use cnn2gate::estimator::{estimate, Thresholds};
 use cnn2gate::ir::ComputationFlow;
@@ -54,7 +56,7 @@ fn main() {
 
     // memo-hit fast path: one lookup + Arc clone, no estimator call
     let hit = h.bench("eval/cache_hit", 10_000, || {
-        ev.evaluate(&flow, &ARRIA_10_GX1150, 16, 32, Fidelity::Analytical)
+        ev.evaluate(&flow, &ARRIA_10_GX1150, 16, 32, EvalRequest::at(Fidelity::Analytical))
     });
     h.check(hit < 10e-6, &format!("memo hit {:.2} µs < 10 µs", hit * 1e6));
 
@@ -77,7 +79,8 @@ fn main() {
         eval::default_threads(),
         std::sync::Arc::new(EvalCache::load(&cache_path).unwrap()),
     );
-    let (_, disk_hit) = warm_start.evaluate(&flow, &ARRIA_10_GX1150, 16, 32, Fidelity::Analytical);
+    let (_, disk_hit) =
+        warm_start.evaluate(&flow, &ARRIA_10_GX1150, 16, 32, EvalRequest::at(Fidelity::Analytical));
     h.check(disk_hit, "disk-loaded cache serves the hot option without recompute");
     std::fs::remove_file(&cache_path).ok();
 

@@ -1,0 +1,176 @@
+//! Compile-service load bench (the PR-6 tentpole's perf gate): one
+//! daemon, thousands of queued jobs, mixed tiny/huge models across
+//! three tenants, all multiplexed onto the shared evaluator.
+//!
+//! Gates (recorded via the harness, fatal at finish()):
+//!   * wall clock — the whole mixed backlog drains in bounded time;
+//!   * p99 tail latency of the TINY (interactive) jobs — the fairness
+//!     policy's cost priority must keep them from queueing behind the
+//!     fleet-sized jobs that share the daemon;
+//!   * cross-tenant fairness — per-tenant mean finish rank (from the
+//!     reducer's replayable event log) stays balanced even though every
+//!     tenant floods the queue at once.
+//!
+//! Writes `BENCH_PR6.json` (machine-readable: wall, sojourn
+//! distribution, tiny-job tail, fairness ratio) for cross-commit
+//! comparison. Deterministic outcomes are pinned by `tests/service.rs`;
+//! this file only measures.
+
+mod common;
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use cnn2gate::coordinator::service::Event;
+use cnn2gate::coordinator::{CompileService, JobSpec, ServiceConfig};
+use cnn2gate::dse::TenantId;
+use cnn2gate::estimator::device::ARRIA_10_GX1150;
+use cnn2gate::metrics::LatencyStats;
+use cnn2gate::onnx::zoo;
+use cnn2gate::session::CompileJob;
+use cnn2gate::synth::Explorer;
+use cnn2gate::util::json::{Json, JsonObj};
+use common::Harness;
+
+const TENANTS: &[&str] = &["acme", "zen", "bolt"];
+/// Jobs per tenant; every `HUGE_EVERY`-th is a fleet-sized job.
+const PER_TENANT: usize = 400;
+const HUGE_EVERY: usize = 40;
+
+fn job(huge: bool) -> CompileJob {
+    let builder = if huge {
+        // "huge": a full device-database fleet fit of AlexNet
+        CompileJob::builder().model(zoo::build("alexnet", false).unwrap()).all_devices()
+    } else {
+        CompileJob::builder().model(zoo::build("tiny", false).unwrap()).device(&ARRIA_10_GX1150)
+    };
+    builder.explorer(Explorer::BruteForce).build().unwrap()
+}
+
+fn main() {
+    let mut h = Harness::new();
+    let total = TENANTS.len() * PER_TENANT;
+    let service = CompileService::start(ServiceConfig {
+        workers: 4,
+        queue_capacity: total + 8,
+        threads: 0,
+        ..ServiceConfig::default()
+    });
+
+    // flood: every tenant submits its whole backlog up front,
+    // interleaved so the queue is genuinely mixed
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(total);
+    for i in 0..PER_TENANT {
+        for tenant in TENANTS {
+            let huge = i % HUGE_EVERY == HUGE_EVERY - 1;
+            let spec = JobSpec::new(job(huge)).tenant(TenantId::of(tenant));
+            let ticket = service.submit(spec).expect("admission: queue sized for the backlog");
+            tickets.push((ticket, huge, t0.elapsed().as_secs_f64()));
+        }
+    }
+    let submit_s = t0.elapsed().as_secs_f64();
+    println!(
+        "bench service/submit({total} jobs, {} tenants) {:>13} {:.3} s wall",
+        TENANTS.len(),
+        "",
+        submit_s
+    );
+
+    // drain: within a tenant equal-cost jobs finish FIFO and tiny jobs
+    // jump huge ones, so draining in submission order observes each
+    // completion close to when it actually happened
+    let mut sojourn = Vec::with_capacity(total);
+    let mut tiny_sojourn = Vec::new();
+    for (ticket, huge, submitted_s) in &tickets {
+        loop {
+            let event = ticket.recv().expect("service dropped a stream");
+            match event {
+                Event::Finished { .. } => break,
+                e => assert!(!e.is_terminal(), "job died under load: {e:?}"),
+            }
+        }
+        let s = t0.elapsed().as_secs_f64() - submitted_s;
+        sojourn.push(s);
+        if !huge {
+            tiny_sojourn.push(s);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let report = service.shutdown();
+    println!(
+        "bench service/drain({total} jobs: {} huge) {:>16} {:.3} s wall",
+        total / HUGE_EVERY,
+        "",
+        wall_s
+    );
+
+    let all = LatencyStats::from_seconds(&sojourn);
+    let tiny = LatencyStats::from_seconds(&tiny_sojourn);
+    println!(
+        "  sojourn p50 {:.1} ms p99 {:.1} ms max {:.1} ms | tiny p99 {:.1} ms",
+        all.p50_ms, all.p99_ms, all.max_ms, tiny.p99_ms
+    );
+
+    // cross-tenant fairness: mean finish rank per tenant from the
+    // reducer's log (Finished events, in emission order)
+    let mut rank = 0usize;
+    let mut sums: HashMap<u64, (usize, usize)> = HashMap::new();
+    for event in report.reducer.log() {
+        if let Event::Finished { job, .. } = event {
+            let tenant = report.reducer.get(*job).expect("logged job").tenant.as_u64();
+            let e = sums.entry(tenant).or_insert((0, 0));
+            e.0 += rank;
+            e.1 += 1;
+            rank += 1;
+        }
+    }
+    let means: Vec<f64> = sums.values().map(|&(sum, n)| sum as f64 / n as f64).collect();
+    let best = means.iter().cloned().fold(f64::INFINITY, f64::min);
+    let worst = means.iter().cloned().fold(0.0f64, f64::max);
+    let fairness = worst / best.max(1.0);
+    println!("  fairness: mean finish rank worst/best = {fairness:.3}");
+
+    h.check(report.reducer.open_jobs() == 0, "every job reached a terminal state");
+    h.check(
+        report.reducer.jobs().count() == total,
+        &format!("all {total} jobs admitted and recorded"),
+    );
+    h.check(wall_s < 60.0, &format!("mixed backlog drains < 60 s (took {wall_s:.1} s)"));
+    h.check(
+        tiny.p99_ms < 30_000.0,
+        &format!("tiny-job p99 sojourn {:.0} ms < 30 s (cost priority holds)", tiny.p99_ms),
+    );
+    h.check(
+        fairness < 1.5,
+        &format!("cross-tenant mean finish rank ratio {fairness:.3} < 1.5"),
+    );
+
+    // machine-readable PR-6 perf record
+    {
+        let mut load = JsonObj::new();
+        load.insert("jobs", total.into());
+        load.insert("tenants", TENANTS.len().into());
+        load.insert("huge_jobs", (total / HUGE_EVERY).into());
+        load.insert("workers", 4usize.into());
+        load.insert("submit_seconds", submit_s.into());
+        load.insert("wall_seconds", wall_s.into());
+        let mut lat = JsonObj::new();
+        lat.insert("p50_ms", all.p50_ms.into());
+        lat.insert("p99_ms", all.p99_ms.into());
+        lat.insert("max_ms", all.max_ms.into());
+        lat.insert("tiny_p99_ms", tiny.p99_ms.into());
+        let mut fair = JsonObj::new();
+        fair.insert("mean_rank_ratio", fairness.into());
+        let mut doc = JsonObj::new();
+        doc.insert("format", "cnn2gate-bench-pr6".into());
+        doc.insert("load", Json::Obj(load));
+        doc.insert("sojourn", Json::Obj(lat));
+        doc.insert("fairness", Json::Obj(fair));
+        let path = std::path::Path::new("BENCH_PR6.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).unwrap();
+        println!("perf record written to {}", path.display());
+    }
+
+    h.finish();
+}

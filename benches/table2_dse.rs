@@ -14,7 +14,7 @@ mod common;
 use std::sync::Arc;
 use std::time::Instant;
 
-use cnn2gate::dse::{brute, eval, rl, Evaluation, Evaluator, Fidelity, RlConfig};
+use cnn2gate::dse::{brute, eval, rl, EvalRequest, Evaluation, Evaluator, Fidelity, RlConfig};
 use cnn2gate::dse::{OptionSpace, RewardShaper};
 use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA4, CYCLONE_V_5CSEMA5};
 use cnn2gate::estimator::Thresholds;
@@ -61,16 +61,15 @@ fn main() {
     let pairs = OptionSpace::from_flow(&flow).pairs();
     let threads = eval::default_threads();
 
+    let stepped = EvalRequest::at(Fidelity::SteppedFullNetwork);
     let seq_ev = Evaluator::new(1);
     let t0 = Instant::now();
-    let seq_grid =
-        seq_ev.evaluate_grid(&flow, &ARRIA_10_GX1150, &pairs, Fidelity::SteppedFullNetwork);
+    let seq_grid = seq_ev.evaluate_grid(&flow, &ARRIA_10_GX1150, &pairs, stepped);
     let seq_s = t0.elapsed().as_secs_f64();
 
     let par_ev = Evaluator::new(threads);
     let t0 = Instant::now();
-    let par_grid =
-        par_ev.evaluate_grid(&flow, &ARRIA_10_GX1150, &pairs, Fidelity::SteppedFullNetwork);
+    let par_grid = par_ev.evaluate_grid(&flow, &ARRIA_10_GX1150, &pairs, stepped);
     let par_s = t0.elapsed().as_secs_f64();
 
     let speedup = metrics::speedup(seq_s, par_s);
@@ -108,7 +107,7 @@ fn main() {
     // warm-memo exploration: the second fleet/RL visit of a candidate is
     // a pointer clone, not an estimator + simulator call
     let warm = Evaluator::new(threads);
-    warm.evaluate_grid(&flow, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+    warm.evaluate_grid(&flow, &ARRIA_10_GX1150, &pairs, EvalRequest::at(Fidelity::Analytical));
     let wt = h.bench("dse/bf/arria10 (private warm memo)", 200, || {
         brute::explore_with(&warm, &flow, &ARRIA_10_GX1150, th)
     });

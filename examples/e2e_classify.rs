@@ -16,7 +16,7 @@
 
 use anyhow::{anyhow, Context, Result};
 
-use cnn2gate::coordinator::{InferenceServer, ServerConfig};
+use cnn2gate::coordinator::{InferenceServer, ServiceConfig};
 use cnn2gate::dse::brute;
 use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA5};
 use cnn2gate::estimator::Thresholds;
@@ -122,7 +122,7 @@ fn main() -> Result<()> {
             init.data.clone().unwrap(),
         ));
     }
-    let server = InferenceServer::start(art, parsed_weights.clone(), ServerConfig::default())?;
+    let server = InferenceServer::start(art, parsed_weights.clone(), ServiceConfig::default())?;
     let reply = server.infer(golden.input.clone())?;
     let max_err = reply
         .output
@@ -143,7 +143,7 @@ fn main() -> Result<()> {
         .model("lenet5_int8")
         .ok_or_else(|| anyhow!("lenet5_int8 artifact"))?;
     let golden8 = load_golden(art8.golden.as_ref().unwrap())?;
-    let server8 = InferenceServer::start(art8, golden8.params.clone(), ServerConfig::default())?;
+    let server8 = InferenceServer::start(art8, golden8.params.clone(), ServiceConfig::default())?;
 
     // classify the synthetic dataset on both datapaths
     let mut rng = Rng::new(2024);

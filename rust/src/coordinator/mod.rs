@@ -1,15 +1,21 @@
-//! L3 coordinator: the end-to-end CNN2Gate pipeline (paper Fig. 4a) and
-//! the batched emulation-inference server.
+//! L3 coordinator: the end-to-end CNN2Gate pipeline (paper Fig. 4a),
+//! the compile-service daemon, and the batched emulation-inference
+//! lane.
 //!
 //! `pipeline` wires front-end parsing → quantization → DSE → synthesis
-//! (simulated) → emulation (PJRT); `server` owns the compiled executable
-//! on a worker thread and serves inference requests over channels —
-//! the request path is pure Rust, Python compiled the artifacts once.
+//! (simulated) → emulation (PJRT); `service` is the long-lived daemon
+//! multiplexing concurrent compile jobs and classify requests onto one
+//! shared evaluator with admission control, per-tenant fairness and
+//! streamed progress events; `server` is the thin legacy adapter that
+//! keeps the old `InferenceServer` API alive on top of the service's
+//! inference lane.
 
 pub mod pipeline;
 pub mod scheduler;
 pub mod server;
+pub mod service;
 
 pub use pipeline::{run_pipeline, FleetReport, PipelineConfig, PipelineResult, SweepReport};
 pub use scheduler::{work_steal_map, work_steal_map_seeded, StealStats};
-pub use server::{InferenceServer, ServerConfig, ServerStats};
+pub use server::InferenceServer;
+pub use service::{CompileService, JobSpec, ServiceConfig, ServiceReport};

@@ -1,207 +1,67 @@
-//! Batched emulation-inference server.
+//! Legacy inference-server adapter over the compile service.
 //!
-//! The OpenCL host program of the paper owns the FPGA command queues; our
-//! analogue owns the compiled PJRT executable on a dedicated worker
-//! thread and serves requests over channels (std::thread + mpsc — tokio
-//! is not in the offline crate set, and PJRT's client types are !Send, so
-//! a single-owner worker loop is the only sound threading model anyway:
-//! the client is created and compiled *inside* the worker).
+//! The seed's `InferenceServer` owned its own worker thread, channel
+//! protocol and config struct. All of that now lives in the compile
+//! service's inference lane ([`service`](super::service)); this module
+//! keeps the old surface alive as a thin adapter so existing callers
+//! (the `serve` demo, the emulation tests, `examples/e2e_classify`)
+//! migrate by swapping `ServerConfig` for [`ServiceConfig`] — the old
+//! `max_batch` / `queue_depth` knobs are now
+//! [`ServiceConfig::max_batch`] / [`ServiceConfig::infer_queue_depth`].
 //!
-//! Requests are micro-batched: the worker drains up to `max_batch`
-//! queued requests before executing them back-to-back, which amortizes
-//! dispatch overhead the same way the FPGA host amortizes DMA setup.
+//! The adapter also inherits the lane's startup fix: when the worker
+//! dies before reporting readiness, its `JoinHandle` is joined instead
+//! of leaked (the seed dropped it un-joined on that path).
 
-use std::sync::mpsc;
-use std::thread::JoinHandle;
-use std::time::Instant;
-
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::ir::DType;
-use crate::metrics::LatencyStats;
-use crate::runtime::{ModelArtifact, Runtime, Tensor};
+use crate::runtime::{ModelArtifact, Tensor};
 
-/// Server tuning knobs.
-#[derive(Debug, Clone)]
-pub struct ServerConfig {
-    /// Max requests drained per batch.
-    pub max_batch: usize,
-    /// Queue capacity before submitters block.
-    pub queue_depth: usize,
-}
+use super::service::{CompileService, ServiceConfig};
 
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig {
-            max_batch: 8,
-            queue_depth: 64,
-        }
-    }
-}
+pub use super::service::{InferReply as Reply, InferStats as ServerStats};
 
-struct Request {
-    input: Tensor,
-    enqueued: Instant,
-    reply: mpsc::Sender<Result<Reply>>,
-}
-
-/// One served inference.
-#[derive(Debug, Clone)]
-pub struct Reply {
-    pub output: Tensor,
-    /// Pure PJRT execute time.
-    pub exec_seconds: f64,
-    /// Queue + batch + execute time, as the client saw it.
-    pub e2e_seconds: f64,
-}
-
-/// Aggregate statistics over the server's lifetime.
-#[derive(Debug, Clone)]
-pub struct ServerStats {
-    pub served: usize,
-    pub batches: usize,
-    pub exec: LatencyStats,
-    pub e2e: LatencyStats,
-}
-
-/// A running server bound to one model variant.
+/// A running server bound to one model variant: a [`CompileService`]
+/// with only its inference lane exercised. Compile jobs can still be
+/// submitted through [`InferenceServer::service`] — there is one
+/// submit path, not two.
 pub struct InferenceServer {
-    tx: Option<mpsc::SyncSender<Request>>,
-    worker: Option<JoinHandle<(Vec<f64>, Vec<f64>, usize)>>,
-    out_dtype: DType,
+    service: CompileService,
 }
 
 impl InferenceServer {
-    /// Start the worker: it creates the PJRT client, compiles the
-    /// artifact, reports readiness, then serves. Weights are fixed at
-    /// startup (they are part of the served model), so requests carry
-    /// only the image tensor.
-    pub fn start(art: &ModelArtifact, weights: Vec<Tensor>, cfg: ServerConfig) -> Result<Self> {
-        if weights.len() != art.params.len() {
-            return Err(anyhow!(
-                "expected {} weight tensors, got {}",
-                art.params.len(),
-                weights.len()
-            ));
-        }
-        let out_dtype = if art.quantization.is_some() {
-            DType::I32
-        } else {
-            DType::F32
-        };
-        let hlo_path = art.hlo_path.clone();
-        let name = art.name.clone();
-        let arity = 1 + art.params.len();
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let max_batch = cfg.max_batch.max(1);
-        let worker = std::thread::spawn(move || {
-            let mut exec_samples = Vec::new();
-            let mut e2e_samples = Vec::new();
-            let mut batches = 0usize;
-            // PJRT client + executable live entirely on this thread
-            let setup = Runtime::cpu()
-                .and_then(|rt| rt.load_hlo_text(&hlo_path, &name, arity).map(|c| (rt, c)));
-            let (_rt, compiled) = match setup {
-                Ok(pair) => {
-                    let _ = ready_tx.send(Ok(()));
-                    pair
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return (exec_samples, e2e_samples, batches);
-                }
-            };
-            while let Ok(first) = rx.recv() {
-                // drain a micro-batch
-                let mut batch = vec![first];
-                while batch.len() < max_batch {
-                    match rx.try_recv() {
-                        Ok(req) => batch.push(req),
-                        Err(_) => break,
-                    }
-                }
-                batches += 1;
-                for req in batch {
-                    let mut inputs = vec![req.input.clone()];
-                    inputs.extend(weights.iter().cloned());
-                    let result = compiled.run(&inputs, out_dtype).map(|out| {
-                        let e2e = req.enqueued.elapsed().as_secs_f64();
-                        exec_samples.push(out.exec_seconds);
-                        e2e_samples.push(e2e);
-                        Reply {
-                            output: out.tensor,
-                            exec_seconds: out.exec_seconds,
-                            e2e_seconds: e2e,
-                        }
-                    });
-                    let _ = req.reply.send(result);
-                }
-            }
-            (exec_samples, e2e_samples, batches)
-        });
-        match ready_rx.recv() {
-            Ok(Ok(())) => Ok(InferenceServer {
-                tx: Some(tx),
-                worker: Some(worker),
-                out_dtype,
-            }),
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                Err(e)
-            }
-            Err(_) => Err(anyhow!("server worker died during startup")),
-        }
+    /// Start the service's inference lane on `art` with fixed
+    /// `weights` (one tensor per artifact parameter).
+    pub fn start(art: &ModelArtifact, weights: Vec<Tensor>, cfg: ServiceConfig) -> Result<Self> {
+        let service = CompileService::start_with_inference(cfg, art, weights)?;
+        Ok(InferenceServer { service })
     }
 
+    /// Output dtype the lane produces (I32 quantized, F32 float).
     pub fn out_dtype(&self) -> DType {
-        self.out_dtype
+        self.service
+            .out_dtype()
+            .expect("adapter always starts the inference lane")
     }
 
     /// Submit one image and wait for the reply (blocking client call).
     pub fn infer(&self, input: Tensor) -> Result<Reply> {
-        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("server stopped"))?;
-        let (reply_tx, reply_rx) = mpsc::channel();
-        tx.send(Request {
-            input,
-            enqueued: Instant::now(),
-            reply: reply_tx,
-        })
-        .map_err(|_| anyhow!("server stopped"))?;
-        reply_rx.recv().map_err(|_| anyhow!("server dropped reply"))?
+        self.service.infer(input)
     }
 
-    /// Stop the worker and collect statistics. A worker that died
-    /// abnormally yields empty statistics (with a warning) instead of
-    /// propagating its panic into the caller.
-    pub fn shutdown(mut self) -> ServerStats {
-        self.tx.take(); // close the queue; worker loop exits
-        match self.worker.take().map(JoinHandle::join) {
-            Some(Ok((exec, e2e, batches))) => ServerStats {
-                served: exec.len(),
-                batches,
-                exec: LatencyStats::from_seconds(&exec),
-                e2e: LatencyStats::from_seconds(&e2e),
-            },
-            _ => {
-                eprintln!("warning: inference worker exited abnormally; statistics lost");
-                ServerStats {
-                    served: 0,
-                    batches: 0,
-                    exec: LatencyStats::from_seconds(&[]),
-                    e2e: LatencyStats::from_seconds(&[]),
-                }
-            }
-        }
+    /// The service underneath, for callers that also want to submit
+    /// compile jobs over the same daemon.
+    pub fn service(&self) -> &CompileService {
+        &self.service
     }
-}
 
-impl Drop for InferenceServer {
-    fn drop(&mut self) {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+    /// Stop the lane and collect its statistics.
+    pub fn shutdown(self) -> ServerStats {
+        self.service
+            .shutdown()
+            .infer
+            .expect("adapter always starts the inference lane")
     }
 }
 
@@ -230,7 +90,7 @@ mod tests {
         let art = manifest.model("tiny").unwrap();
         let golden = load_golden(art.golden.as_ref().unwrap()).unwrap();
         let server =
-            InferenceServer::start(art, golden.params.clone(), ServerConfig::default()).unwrap();
+            InferenceServer::start(art, golden.params.clone(), ServiceConfig::default()).unwrap();
         let n = 12;
         for _ in 0..n {
             let reply = server.infer(golden.input.clone()).unwrap();
@@ -252,7 +112,7 @@ mod tests {
             return;
         };
         let art = manifest.model("tiny").unwrap();
-        let err = match InferenceServer::start(art, vec![], ServerConfig::default()) {
+        let err = match InferenceServer::start(art, vec![], ServiceConfig::default()) {
             Err(e) => e,
             Ok(_) => panic!("arity mismatch accepted"),
         };
@@ -268,7 +128,7 @@ mod tests {
         let mut art = manifest.model("tiny").unwrap().clone();
         art.hlo_path = "/nonexistent/x.hlo.txt".into();
         let golden = load_golden(manifest.model("tiny").unwrap().golden.as_ref().unwrap()).unwrap();
-        assert!(InferenceServer::start(&art, golden.params, ServerConfig::default()).is_err());
+        assert!(InferenceServer::start(&art, golden.params, ServiceConfig::default()).is_err());
     }
 
     #[test]
@@ -280,7 +140,7 @@ mod tests {
         let art = manifest.model("tiny").unwrap();
         let golden = load_golden(art.golden.as_ref().unwrap()).unwrap();
         let server = std::sync::Arc::new(
-            InferenceServer::start(art, golden.params.clone(), ServerConfig::default()).unwrap(),
+            InferenceServer::start(art, golden.params.clone(), ServiceConfig::default()).unwrap(),
         );
         let mut handles = Vec::new();
         for _ in 0..4 {

@@ -1,0 +1,232 @@
+//! The service's pure decision core: job-state transitions and the
+//! admission/fairness policy, as plain functions over plain data — no
+//! channels, no threads, no clocks — so every scheduling decision the
+//! orchestrator makes is unit-testable in isolation.
+
+use std::collections::HashMap;
+
+use crate::dse::{OptionSpace, TenantId};
+use crate::ir::ComputationFlow;
+use crate::session::CompileJob;
+
+use super::ports::{Event, JobId};
+
+/// Where one job is in its lifecycle. Transitions are driven purely by
+/// [`Event`]s via [`step`]; [`Rejected`](JobState::Rejected),
+/// [`Finished`](JobState::Finished), [`Failed`](JobState::Failed) and
+/// [`Cancelled`](JobState::Cancelled) are terminal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting for a worker slot.
+    Queued,
+    /// Executing on the shared evaluator.
+    Running,
+    /// Completed with an outcome document.
+    Finished,
+    /// Errored.
+    Failed,
+    /// Cancelled while queued or running.
+    Cancelled,
+    /// Turned away by admission control.
+    Rejected,
+}
+
+impl JobState {
+    /// True once no further transition is possible.
+    pub fn is_terminal(self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
+}
+
+/// The pure transition function: the state a job is in after `event`,
+/// given it was in `state`. Progress events and out-of-order lifecycle
+/// events leave the state unchanged, so replaying any event log is
+/// total (never panics) and idempotent on terminal states.
+pub fn step(state: JobState, event: &Event) -> JobState {
+    match (state, event) {
+        (_, Event::Accepted { .. }) => JobState::Queued,
+        (_, Event::Rejected { .. }) => JobState::Rejected,
+        (JobState::Queued, Event::Started { .. }) => JobState::Running,
+        (JobState::Running, Event::Finished { .. }) => JobState::Finished,
+        (JobState::Running, Event::Failed { .. }) => JobState::Failed,
+        (JobState::Queued | JobState::Running, Event::Cancelled { .. }) => JobState::Cancelled,
+        (state, _) => state,
+    }
+}
+
+/// What the fairness policy sees of one queued job.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueView {
+    /// Admission order (the [`JobId`] sequence number).
+    pub seq: u64,
+    /// Tenant the job will run under.
+    pub tenant: TenantId,
+    /// Estimated work ([`job_cost`]).
+    pub cost: u64,
+}
+
+/// Pick the queued job to launch next, or `None` on an empty queue.
+///
+/// Cross-tenant fairness first, size second, age last: minimize
+/// `(running jobs of the tenant, jobs already served for the tenant,
+/// estimated cost, admission order)`. A tenant that floods the queue
+/// therefore cannot starve others — each completion advances its
+/// `served` count and hands the next slot to the least-served tenant —
+/// and within a tenant small (interactive) jobs jump big ones while
+/// equal-cost jobs stay FIFO. Deterministic for a given queue + counts.
+pub fn pick_next(
+    queue: &[QueueView],
+    running: &HashMap<u64, usize>,
+    served: &HashMap<u64, usize>,
+) -> Option<usize> {
+    queue
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, q)| {
+            let tenant = q.tenant.as_u64();
+            (
+                running.get(&tenant).copied().unwrap_or(0),
+                served.get(&tenant).copied().unwrap_or(0),
+                q.cost,
+                q.seq,
+            )
+        })
+        .map(|(i, _)| i)
+}
+
+/// Estimated work of a job: Σ over its models of the option-grid size,
+/// times the device count — the number of candidate evaluations the
+/// engine will prewarm, which is what actually costs time. Models whose
+/// flow cannot be extracted sort last (they fail fast at run time, so
+/// deprioritizing them keeps real work flowing).
+pub fn job_cost(job: &CompileJob) -> u64 {
+    let grids: u64 = job
+        .models
+        .iter()
+        .map(|g| match ComputationFlow::extract(g) {
+            Ok(flow) => OptionSpace::from_flow(&flow).pairs().len() as u64,
+            Err(_) => 1 << 20,
+        })
+        .sum();
+    grids.saturating_mul(job.devices.len().max(1) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::device::ARRIA_10_GX1150;
+    use crate::onnx::zoo;
+    use crate::synth::Explorer;
+
+    fn ev_started(id: u64) -> Event {
+        Event::Started { job: JobId(id) }
+    }
+
+    #[test]
+    fn step_walks_the_lifecycle_and_absorbs_noise() {
+        let job = JobId(7);
+        let accepted = Event::Accepted {
+            job,
+            tenant: TenantId::DEFAULT,
+            queue_depth: 0,
+        };
+        let finished = Event::Finished {
+            job,
+            outcome_json: "{}".into(),
+        };
+        let failed = Event::Failed {
+            job,
+            error: "boom".into(),
+        };
+        let cancelled = Event::Cancelled { job };
+        let progress = Event::Progress {
+            job,
+            scored: 1,
+            total: 2,
+        };
+
+        let s = step(JobState::Queued, &ev_started(7));
+        assert_eq!(s, JobState::Running);
+        assert_eq!(step(s, &finished), JobState::Finished);
+        assert_eq!(step(s, &failed), JobState::Failed);
+        assert_eq!(step(s, &cancelled), JobState::Cancelled);
+        assert_eq!(step(JobState::Queued, &cancelled), JobState::Cancelled);
+        // progress never changes state; terminal states absorb everything
+        assert_eq!(step(s, &progress), s);
+        for terminal in [JobState::Finished, JobState::Failed, JobState::Cancelled] {
+            assert!(terminal.is_terminal());
+            assert_eq!(step(terminal, &ev_started(7)), terminal);
+            assert_eq!(step(terminal, &cancelled), terminal);
+        }
+        // a fresh accept always lands in Queued, a reject in Rejected
+        assert_eq!(step(JobState::Queued, &accepted), JobState::Queued);
+        let rejected = Event::Rejected {
+            job,
+            tenant: TenantId::DEFAULT,
+            reason: "queue full".into(),
+        };
+        assert_eq!(step(JobState::Queued, &rejected), JobState::Rejected);
+        assert!(JobState::Rejected.is_terminal());
+        assert!(!JobState::Queued.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+    }
+
+    fn view(seq: u64, tenant: &str, cost: u64) -> QueueView {
+        QueueView {
+            seq,
+            tenant: TenantId::of(tenant),
+            cost,
+        }
+    }
+
+    #[test]
+    fn pick_next_balances_tenants_before_size_before_age() {
+        let acme = TenantId::of("acme").as_u64();
+        let zen = TenantId::of("zen").as_u64();
+        let queue = [view(0, "acme", 10), view(1, "acme", 10), view(2, "zen", 10)];
+        // nothing running, nothing served: FIFO
+        assert_eq!(pick_next(&queue, &HashMap::new(), &HashMap::new()), Some(0));
+        // acme already has a job running: zen's job jumps the queue
+        let running = HashMap::from([(acme, 1)]);
+        assert_eq!(pick_next(&queue, &running, &HashMap::new()), Some(2));
+        // equal running, but acme has been served more: zen goes first
+        let served = HashMap::from([(acme, 5), (zen, 1)]);
+        assert_eq!(pick_next(&queue, &HashMap::new(), &served), Some(2));
+        // within one tenant, the small job jumps the big one
+        let queue = [view(0, "acme", 100), view(1, "acme", 4)];
+        assert_eq!(pick_next(&queue, &HashMap::new(), &HashMap::new()), Some(1));
+        // ... and equal costs stay FIFO
+        let queue = [view(3, "acme", 4), view(4, "acme", 4)];
+        assert_eq!(pick_next(&queue, &HashMap::new(), &HashMap::new()), Some(0));
+        assert_eq!(pick_next(&[], &HashMap::new(), &HashMap::new()), None);
+    }
+
+    #[test]
+    fn job_cost_scales_with_grid_and_devices() {
+        let tiny = CompileJob::builder()
+            .model(zoo::build("tiny", false).unwrap())
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        let vgg = CompileJob::builder()
+            .model(zoo::build("vgg16", false).unwrap())
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        let vgg_fleet = CompileJob::builder()
+            .model(zoo::build("vgg16", false).unwrap())
+            .all_devices()
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        assert!(job_cost(&tiny) >= 1);
+        assert!(job_cost(&vgg) >= job_cost(&tiny), "bigger model, bigger cost");
+        assert_eq!(
+            job_cost(&vgg_fleet),
+            job_cost(&vgg) * crate::estimator::device::all().len() as u64,
+            "cost is per-device"
+        );
+    }
+}

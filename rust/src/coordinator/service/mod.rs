@@ -1,0 +1,372 @@
+//! The compile service: a long-lived in-process daemon that accepts
+//! concurrent [`CompileJob`](crate::session::CompileJob)s — and,
+//! optionally, classify requests against a compiled artifact —
+//! multiplexed onto ONE shared [`Evaluator`] / work-stealing scheduler,
+//! streaming typed progress events to each client.
+//!
+//! Layering (each layer only knows the one below):
+//!
+//! * [`ports`] — the typed [`Command`]/[`Event`] vocabulary and the
+//!   client handles ([`ServiceClient`], [`JobTicket`]).
+//! * [`kernel`] — pure state transitions and the admission/fairness
+//!   policy (no channels, no threads; unit-tested in isolation).
+//! * `orchestrator` — the daemon thread: bounded-queue admission,
+//!   per-tenant fair launch order, job runners on the shared evaluator,
+//!   and the PJRT inference lane.
+//! * [`reducer`] — the reducer-owned job-state store with a replayable
+//!   event log ([`Reducer::replay`] reconstructs the exact final store).
+//!
+//! Sharing one evaluator means every job — regardless of tenant — funds
+//! the same memo: two tenants compiling the same model at the same
+//! fidelity still occupy distinct cache namespaces (the tenant id is
+//! folded into the evaluation memo key's fingerprint), so
+//! eviction pressure and persistence are shared while lookups never
+//! cross tenants. Because the engine prewarms a job's FULL option grid
+//! before exploring, concurrent jobs interleaved on the shared cache
+//! still render outcome documents byte-identical to a solo
+//! [`Session::run`](crate::session::Session::run) — the property the
+//! service determinism tests pin.
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use cnn2gate::coordinator::service::{CompileService, JobSpec, ServiceConfig};
+//! use cnn2gate::onnx::zoo;
+//! use cnn2gate::session::CompileJob;
+//!
+//! let service = CompileService::start(ServiceConfig::default());
+//! let job = CompileJob::builder().model(zoo::build("tiny", false)?).build()?;
+//! let ticket = service.submit(JobSpec::new(job))?;
+//! let completion = ticket.wait()?;
+//! println!("{:?}", completion.outcome_json());
+//! let report = service.shutdown();
+//! assert_eq!(report.reducer.open_jobs(), 0);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod kernel;
+mod orchestrator;
+pub mod ports;
+pub mod reducer;
+
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::dse::{eval, Evaluator};
+use crate::ir::DType;
+use crate::runtime::{ModelArtifact, Tensor};
+
+use orchestrator::{InferLane, Msg};
+
+pub use kernel::JobState;
+pub use ports::{
+    Command, Completion, Event, InferReply, InferStats, JobId, JobSpec, JobTicket, ServiceClient,
+};
+pub use reducer::{JobRecord, Reducer};
+
+/// Service sizing knobs (admission control + the shared evaluator +
+/// the optional inference lane).
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Compile jobs allowed to run concurrently (worker slots).
+    pub workers: usize,
+    /// Bounded admission queue: submissions beyond this many *queued*
+    /// jobs are [`Event::Rejected`] instead of enqueued.
+    pub queue_capacity: usize,
+    /// Threads for the shared evaluator pool (0 = one per core).
+    pub threads: usize,
+    /// Most inference requests fused into one PJRT dispatch.
+    pub max_batch: usize,
+    /// Bounded inference queue depth (back-pressure on classify
+    /// clients).
+    pub infer_queue_depth: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 64,
+            threads: 0,
+            max_batch: 8,
+            infer_queue_depth: 64,
+        }
+    }
+}
+
+/// What [`CompileService::shutdown`] returns: the reducer's final state
+/// (event log + job records) and, when the inference lane ran, its
+/// latency statistics.
+#[derive(Debug)]
+pub struct ServiceReport {
+    /// Final job store; `Reducer::replay(report.reducer.log())`
+    /// reconstructs it exactly.
+    pub reducer: Reducer,
+    /// Inference-lane statistics, when one was started.
+    pub infer: Option<InferStats>,
+}
+
+/// The running service: owns the daemon thread, the shared evaluator,
+/// and (optionally) the inference lane. Dropping it shuts everything
+/// down; call [`CompileService::shutdown`] instead to keep the final
+/// [`ServiceReport`].
+pub struct CompileService {
+    tx: mpsc::Sender<Msg>,
+    daemon: Option<JoinHandle<()>>,
+    evaluator: Arc<Evaluator>,
+    infer: Option<InferLane>,
+}
+
+impl CompileService {
+    /// Start the daemon with compile lanes only.
+    pub fn start(cfg: ServiceConfig) -> CompileService {
+        let threads = if cfg.threads == 0 {
+            eval::default_threads()
+        } else {
+            cfg.threads
+        };
+        let evaluator = Arc::new(Evaluator::new(threads));
+        let (tx, daemon) = orchestrator::spawn(cfg, Arc::clone(&evaluator));
+        CompileService {
+            tx,
+            daemon: Some(daemon),
+            evaluator,
+            infer: None,
+        }
+    }
+
+    /// Start the daemon AND the emulation-inference lane serving
+    /// `art` with fixed `weights` (one tensor per artifact parameter).
+    /// Fails when the artifact cannot be compiled — with the worker
+    /// joined, not leaked, on the failure path.
+    pub fn start_with_inference(
+        cfg: ServiceConfig,
+        art: &ModelArtifact,
+        weights: Vec<Tensor>,
+    ) -> Result<CompileService> {
+        let lane = InferLane::start(&cfg, art, weights)?;
+        let mut service = CompileService::start(cfg);
+        service.infer = Some(lane);
+        Ok(service)
+    }
+
+    /// A cheap, cloneable submission handle (for client threads).
+    pub fn client(&self) -> ServiceClient {
+        ServiceClient { tx: self.tx.clone() }
+    }
+
+    /// Submit a job and block until the admission decision (see
+    /// [`ServiceClient::submit`]).
+    pub fn submit(&self, spec: JobSpec) -> Result<JobTicket> {
+        self.client().submit(spec)
+    }
+
+    /// Request cancellation of a queued or running job.
+    pub fn cancel(&self, job: JobId) -> Result<()> {
+        self.client().cancel(job)
+    }
+
+    /// Classify one input on the inference lane (blocking).
+    pub fn infer(&self, input: Tensor) -> Result<InferReply> {
+        self.infer
+            .as_ref()
+            .ok_or_else(|| anyhow!("inference lane not started (use start_with_inference)"))?
+            .infer(input)
+    }
+
+    /// Output dtype the inference lane produces, when one is running
+    /// (I32 for quantized artifacts, F32 otherwise).
+    pub fn out_dtype(&self) -> Option<DType> {
+        self.infer.as_ref().map(InferLane::out_dtype)
+    }
+
+    /// The shared evaluator every compile job runs on (e.g. to persist
+    /// its memo with [`EvalCache::save`](crate::dse::EvalCache::save)).
+    pub fn evaluator(&self) -> &Evaluator {
+        &self.evaluator
+    }
+
+    /// Graceful shutdown: stop admitting, cancel queued jobs, drain
+    /// running ones, stop the inference lane, and return the final
+    /// [`ServiceReport`].
+    pub fn shutdown(mut self) -> ServiceReport {
+        let reducer = self.stop_daemon();
+        let infer = self.infer.take().map(InferLane::shutdown);
+        ServiceReport { reducer, infer }
+    }
+
+    /// Send `Shutdown`, wait for the reducer snapshot, join the daemon.
+    fn stop_daemon(&mut self) -> Reducer {
+        let Some(daemon) = self.daemon.take() else {
+            return Reducer::new();
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Command(Command::Shutdown { reply: reply_tx }));
+        let reducer = reply_rx.recv().unwrap_or_default();
+        let _ = daemon.join();
+        reducer
+    }
+}
+
+impl Drop for CompileService {
+    fn drop(&mut self) {
+        if self.daemon.is_some() {
+            let _ = self.stop_daemon();
+        }
+        // InferLane's own Drop closes and joins its worker
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::TenantId;
+    use crate::estimator::device::ARRIA_10_GX1150;
+    use crate::onnx::zoo;
+    use crate::session::CompileJob;
+    use crate::synth::Explorer;
+    use std::time::Instant;
+
+    fn spec_for(model: &str, tenant: &str) -> JobSpec {
+        let job = CompileJob::builder()
+            .model(zoo::build(model, false).unwrap())
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .build()
+            .unwrap();
+        JobSpec::new(job).tenant(TenantId::of(tenant))
+    }
+
+    fn tiny_spec(tenant: &str) -> JobSpec {
+        spec_for("tiny", tenant)
+    }
+
+    fn small_cfg() -> ServiceConfig {
+        ServiceConfig {
+            workers: 2,
+            threads: 2,
+            ..ServiceConfig::default()
+        }
+    }
+
+    #[test]
+    fn service_runs_jobs_and_streams_ordered_events() {
+        let service = CompileService::start(small_cfg());
+        let a = service.submit(tiny_spec("acme")).unwrap();
+        let b = service.submit(tiny_spec("zen")).unwrap();
+        assert_ne!(a.id(), b.id(), "ids are unique");
+
+        // drain a's stream by hand: Started, Progress (monotone, ending
+        // at total), then exactly one terminal
+        let mut saw_started = false;
+        let mut last = 0usize;
+        let mut total = 0usize;
+        loop {
+            let event = a.recv().unwrap();
+            assert_eq!(event.job(), a.id(), "stream carries only this job's events");
+            match event {
+                Event::Started { .. } => saw_started = true,
+                Event::Progress { scored, total: t, .. } => {
+                    assert!(saw_started, "progress only after start");
+                    assert!(scored > last, "progress is monotone");
+                    last = scored;
+                    total = t;
+                }
+                Event::Finished { outcome_json, .. } => {
+                    assert!(saw_started);
+                    assert_eq!(last, total, "final progress covered the whole grid");
+                    assert!(outcome_json.contains("\"models\""), "terminal carries the document");
+                    break;
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert!(matches!(b.wait().unwrap(), Completion::Finished { .. }));
+
+        let report = service.shutdown();
+        assert!(report.infer.is_none());
+        let reducer = &report.reducer;
+        assert_eq!(reducer.open_jobs(), 0);
+        assert_eq!(reducer.jobs().count(), 2);
+        assert!(reducer.jobs().all(|(_, r)| r.state == JobState::Finished));
+        assert_eq!(&Reducer::replay(reducer.log()), reducer);
+    }
+
+    #[test]
+    fn shutdown_cancels_queued_jobs_and_drop_is_clean() {
+        // one worker, so the second submission is still queued when
+        // shutdown arrives (vgg16's grid keeps the worker busy)
+        let cfg = ServiceConfig {
+            workers: 1,
+            threads: 2,
+            ..ServiceConfig::default()
+        };
+        let service = CompileService::start(cfg);
+        let running = service.submit(spec_for("vgg16", "acme")).unwrap();
+        let queued = service.submit(tiny_spec("acme")).unwrap();
+        let report = service.shutdown();
+        // the running job drained to completion; the queued one was
+        // cancelled without ever starting
+        assert!(matches!(running.wait().unwrap(), Completion::Finished { .. }));
+        assert_eq!(queued.wait().unwrap(), Completion::Cancelled);
+        let record = report.reducer.get(queued.id()).unwrap();
+        assert_eq!(record.state, JobState::Cancelled);
+        assert!(record.outcome_json.is_none());
+
+        // dropping without shutdown must not hang or leak
+        let service = CompileService::start(small_cfg());
+        let _ = service.submit(tiny_spec("zen")).unwrap();
+        drop(service);
+    }
+
+    /// CI perf gate (`perf_smoke` name filter): a flood of queued tiny
+    /// jobs across three tenants must drain promptly AND fairly — no
+    /// tenant's jobs systematically finish later than another's.
+    #[test]
+    #[ignore]
+    fn perf_smoke_service_drains_mixed_tenants_fairly() {
+        const JOBS: usize = 120;
+        let tenants = ["acme", "zen", "inst"];
+        let cfg = ServiceConfig {
+            workers: 4,
+            queue_capacity: JOBS + 8,
+            threads: 2,
+            ..ServiceConfig::default()
+        };
+        let service = CompileService::start(cfg);
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..JOBS)
+            .map(|i| service.submit(tiny_spec(tenants[i % tenants.len()])).unwrap())
+            .collect();
+        for t in &tickets {
+            assert!(matches!(t.wait().unwrap(), Completion::Finished { .. }));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(wall < 60.0, "{JOBS} tiny jobs drained in {wall:.1} s (gate: 60 s)");
+
+        // fairness: completion order from the reducer log — each
+        // tenant's mean finish rank should be close to the middle
+        let report = service.shutdown();
+        let mut rank = 0usize;
+        let mut sums = std::collections::HashMap::new();
+        for event in report.reducer.log() {
+            if let Event::Finished { job, .. } = event {
+                rank += 1;
+                let tenant = report.reducer.get(*job).unwrap().tenant.as_u64();
+                let (sum, n) = sums.entry(tenant).or_insert((0usize, 0usize));
+                *sum += rank;
+                *n += 1;
+            }
+        }
+        assert_eq!(rank, JOBS, "every job finished");
+        let means: Vec<f64> = sums.values().map(|(sum, n)| *sum as f64 / *n as f64).collect();
+        let worst = means.iter().cloned().fold(f64::MIN, f64::max);
+        let best = means.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(
+            worst / best < 1.5,
+            "per-tenant mean finish ranks stay balanced ({best:.1} vs {worst:.1})"
+        );
+    }
+}

@@ -1,0 +1,481 @@
+//! The service daemon: one plain thread owning all mutable scheduling
+//! state, driven by a single typed channel (std `mpsc` has no `select`,
+//! so client commands and job-runner completions share one [`Msg`]
+//! enum — the same single-owner pattern as the PJRT inference lane).
+//!
+//! Scheduling is a thin imperative shell over [`kernel`]: admission
+//! checks the bounded queue, launch picks [`kernel::pick_next`]'s
+//! choice whenever a worker slot is free, and every lifecycle event is
+//! routed through the [`Reducer`] before it reaches the client, so the
+//! replay log and the client's view can never disagree.
+//!
+//! Job runners are plain `std::thread`s calling the session engine
+//! ([`session::execute`]) on the one shared [`Evaluator`] — NOT
+//! evaluator-pool workers, so the engine's own fan-out (prewarm deques,
+//! `evaluate_grid`) keeps its no-nesting invariant. Each runner streams
+//! [`Event::Progress`] straight to its client (bypassing the daemon —
+//! progress is volume) and reports completion back as [`Msg::Done`].
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dse::{EvalRequest, Evaluator, Fidelity};
+use crate::ir::DType;
+use crate::metrics::LatencyStats;
+use crate::runtime::{ModelArtifact, Runtime, Tensor};
+use crate::session::{self, ExecHooks, Outcome};
+
+use super::kernel::{self, QueueView};
+use super::ports::{Command, Event, InferReply, InferStats, JobId, JobSpec};
+use super::reducer::Reducer;
+use super::ServiceConfig;
+
+/// Everything the daemon can receive: client commands and job-runner
+/// completions, multiplexed onto one channel.
+#[derive(Debug)]
+pub(crate) enum Msg {
+    /// A client command ([`ServiceClient`](super::ServiceClient)).
+    Command(Command),
+    /// A job runner finished: the rendered outcome document, or the
+    /// rendered error chain.
+    Done {
+        job: JobId,
+        result: std::result::Result<String, String>,
+    },
+}
+
+/// Spawn the daemon; returns the command channel and the join handle.
+pub(crate) fn spawn(
+    cfg: ServiceConfig,
+    evaluator: Arc<Evaluator>,
+) -> (mpsc::Sender<Msg>, JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let self_tx = tx.clone();
+    let daemon = std::thread::spawn(move || {
+        Orchestrator {
+            cfg,
+            evaluator,
+            rx,
+            self_tx,
+            queue: VecDeque::new(),
+            running: HashMap::new(),
+            served: HashMap::new(),
+            reducer: Reducer::new(),
+            next_id: 0,
+            shutdown_reply: None,
+        }
+        .run()
+    });
+    (tx, daemon)
+}
+
+/// One admitted, not-yet-launched job.
+struct Queued {
+    id: JobId,
+    spec: JobSpec,
+    events: mpsc::Sender<Event>,
+    cost: u64,
+}
+
+/// One launched job.
+struct Running {
+    tenant: u64,
+    events: mpsc::Sender<Event>,
+    cancel: Arc<AtomicBool>,
+    handle: JoinHandle<()>,
+}
+
+struct Orchestrator {
+    cfg: ServiceConfig,
+    evaluator: Arc<Evaluator>,
+    rx: mpsc::Receiver<Msg>,
+    /// Cloned into runners so completions come back on the same channel.
+    self_tx: mpsc::Sender<Msg>,
+    queue: VecDeque<Queued>,
+    running: HashMap<JobId, Running>,
+    /// Per-tenant completed-job counts (the fairness history).
+    served: HashMap<u64, usize>,
+    reducer: Reducer,
+    next_id: u64,
+    /// Set once [`Command::Shutdown`] arrives; replied to when drained.
+    shutdown_reply: Option<mpsc::Sender<Reducer>>,
+}
+
+impl Orchestrator {
+    fn run(mut self) {
+        while let Ok(msg) = self.rx.recv() {
+            match msg {
+                Msg::Command(Command::Submit { spec, events }) => self.admit(spec, events),
+                Msg::Command(Command::Cancel { job }) => self.cancel(job),
+                Msg::Command(Command::Shutdown { reply }) => {
+                    self.shutdown_reply = Some(reply);
+                    // queued jobs never ran: cancel them deterministically
+                    while let Some(q) = self.queue.pop_front() {
+                        self.reducer.apply(&Event::Cancelled { job: q.id });
+                        let _ = q.events.send(Event::Cancelled { job: q.id });
+                    }
+                }
+                Msg::Done { job, result } => self.finish(job, result),
+            }
+            self.launch_ready();
+            if let Some(reply) = &self.shutdown_reply {
+                if self.running.is_empty() && self.queue.is_empty() {
+                    let _ = reply.send(self.reducer.clone());
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Record a lifecycle event in the reducer AND stream it to the
+    /// job's client — one call site, so the two views cannot diverge.
+    fn emit(&mut self, events: &mpsc::Sender<Event>, event: Event) {
+        self.reducer.apply(&event);
+        let _ = events.send(event);
+    }
+
+    fn admit(&mut self, spec: JobSpec, events: mpsc::Sender<Event>) {
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        let tenant = spec.tenant;
+        if self.shutdown_reply.is_some() {
+            let reason = "service shutting down".to_string();
+            let rejected = Event::Rejected {
+                job: id,
+                tenant,
+                reason,
+            };
+            self.emit(&events, rejected);
+            return;
+        }
+        if self.queue.len() >= self.cfg.queue_capacity.max(1) {
+            let reason = format!("admission queue full ({} jobs)", self.queue.len());
+            let rejected = Event::Rejected {
+                job: id,
+                tenant,
+                reason,
+            };
+            self.emit(&events, rejected);
+            return;
+        }
+        let accepted = Event::Accepted {
+            job: id,
+            tenant,
+            queue_depth: self.queue.len(),
+        };
+        self.emit(&events, accepted);
+        let cost = kernel::job_cost(&spec.job);
+        self.queue.push_back(Queued {
+            id,
+            spec,
+            events,
+            cost,
+        });
+    }
+
+    fn cancel(&mut self, job: JobId) {
+        if let Some(pos) = self.queue.iter().position(|q| q.id == job) {
+            let q = self.queue.remove(pos).expect("position just found");
+            self.emit(&q.events, Event::Cancelled { job });
+        } else if let Some(running) = self.running.get(&job) {
+            // cooperative: the engine checks per chunk / per pair and
+            // bails; the Done handler converts that into Cancelled
+            running.cancel.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Launch queued jobs while worker slots are free, in the order the
+    /// fairness kernel dictates.
+    fn launch_ready(&mut self) {
+        while self.shutdown_reply.is_none()
+            && self.running.len() < self.cfg.workers.max(1)
+            && !self.queue.is_empty()
+        {
+            let mut running_counts: HashMap<u64, usize> = HashMap::new();
+            for r in self.running.values() {
+                *running_counts.entry(r.tenant).or_insert(0) += 1;
+            }
+            let view: Vec<QueueView> = self
+                .queue
+                .iter()
+                .map(|q| QueueView {
+                    seq: q.id.0,
+                    tenant: q.spec.tenant,
+                    cost: q.cost,
+                })
+                .collect();
+            let Some(pick) = kernel::pick_next(&view, &running_counts, &self.served) else {
+                return;
+            };
+            let q = self.queue.remove(pick).expect("pick is in bounds");
+            self.launch(q);
+        }
+    }
+
+    fn launch(&mut self, q: Queued) {
+        self.emit(&q.events, Event::Started { job: q.id });
+        let cancel = Arc::new(AtomicBool::new(false));
+        let runner_cancel = Arc::clone(&cancel);
+        let evaluator = Arc::clone(&self.evaluator);
+        let done = self.self_tx.clone();
+        let events = q.events.clone();
+        let (id, spec) = (q.id, q.spec);
+        let tenant = spec.tenant.as_u64();
+        let handle = std::thread::spawn(move || {
+            let result = run_job(&evaluator, &spec, id, &events, &runner_cancel)
+                .map_err(|e| format!("{e:#}"));
+            let _ = done.send(Msg::Done { job: id, result });
+        });
+        let running = Running {
+            tenant,
+            events: q.events,
+            cancel,
+            handle,
+        };
+        self.running.insert(id, running);
+    }
+
+    fn finish(&mut self, job: JobId, result: std::result::Result<String, String>) {
+        let Some(run) = self.running.remove(&job) else {
+            return;
+        };
+        let _ = run.handle.join();
+        *self.served.entry(run.tenant).or_insert(0) += 1;
+        let event = match result {
+            Ok(outcome_json) => Event::Finished { job, outcome_json },
+            Err(_) if run.cancel.load(Ordering::Relaxed) => Event::Cancelled { job },
+            Err(error) if error.contains("cancelled") => Event::Cancelled { job },
+            Err(error) => Event::Failed { job, error },
+        };
+        self.emit(&run.events, event);
+    }
+}
+
+/// One job on the shared evaluator: the same engine call, outcome
+/// assembly and JSON rendering as a solo
+/// [`Session::run`](crate::session::Session::run), so the `Finished`
+/// document is byte-identical to the solo path (pinned by
+/// `rust/tests/service.rs`).
+fn run_job(
+    evaluator: &Evaluator,
+    spec: &JobSpec,
+    id: JobId,
+    events: &mpsc::Sender<Event>,
+    cancel: &AtomicBool,
+) -> Result<String> {
+    if spec.job.specialize && spec.fidelity != Fidelity::SteppedFullNetwork {
+        bail!(
+            "per-layer specialization consumes the stepped-full census: \
+             set JobSpec::fidelity to Fidelity::SteppedFullNetwork"
+        );
+    }
+    let req = EvalRequest::shaped(spec.fidelity, spec.census_gamma).tenant(spec.tenant);
+    // mpsc senders are Send but not Sync; the progress hook runs on the
+    // engine's worker threads, so serialize sends through a mutex
+    let progress_tx = Mutex::new(events.clone());
+    let progress = move |scored: usize, total: usize| {
+        if let Ok(tx) = progress_tx.lock() {
+            let _ = tx.send(Event::Progress {
+                job: id,
+                scored,
+                total,
+            });
+        }
+    };
+    let hooks = ExecHooks {
+        cancel: Some(cancel),
+        progress: Some(&progress),
+    };
+    let run = session::execute(
+        evaluator,
+        &spec.job.models,
+        &spec.job.devices,
+        spec.job.explorer,
+        spec.thresholds,
+        spec.job.quant.as_ref(),
+        req,
+        spec.job.specialize,
+        &hooks,
+    )?;
+    let outcome = Outcome {
+        explorer: spec.job.explorer,
+        fidelity: spec.fidelity,
+        census_gamma: spec.census_gamma,
+        models: spec.job.models.iter().map(|g| g.name.clone()).collect(),
+        devices: spec.job.devices.iter().map(|d| d.name).collect(),
+        entries: run.entries,
+        wall_seconds: run.wall_seconds,
+        steals: run.steals,
+        cache: evaluator.cache().stats(),
+    };
+    Ok(outcome.to_json().to_string_pretty())
+}
+
+// ---------------------------------------------------------------------------
+// Inference lane
+// ---------------------------------------------------------------------------
+
+struct InferRequest {
+    input: Tensor,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<InferReply>>,
+}
+
+/// The emulation-inference lane: the compiled PJRT executable on a
+/// single-owner worker thread (PJRT client types are `!Send`, so the
+/// client is created and compiled *inside* the worker), serving
+/// micro-batched requests over a bounded channel — the paper's OpenCL
+/// host-program analogue, now one lane of the compile service.
+pub(crate) struct InferLane {
+    tx: Option<mpsc::SyncSender<InferRequest>>,
+    worker: Option<JoinHandle<(Vec<f64>, Vec<f64>, usize)>>,
+    out_dtype: DType,
+}
+
+impl InferLane {
+    /// Start the worker: it creates the PJRT client, compiles the
+    /// artifact, reports readiness, then serves. Weights are fixed at
+    /// startup (they are part of the served model), so requests carry
+    /// only the image tensor.
+    pub(crate) fn start(
+        cfg: &ServiceConfig,
+        art: &ModelArtifact,
+        weights: Vec<Tensor>,
+    ) -> Result<InferLane> {
+        if weights.len() != art.params.len() {
+            return Err(anyhow!(
+                "expected {} weight tensors, got {}",
+                art.params.len(),
+                weights.len()
+            ));
+        }
+        let out_dtype = if art.quantization.is_some() {
+            DType::I32
+        } else {
+            DType::F32
+        };
+        let hlo_path = art.hlo_path.clone();
+        let name = art.name.clone();
+        let arity = 1 + art.params.len();
+        let (tx, rx) = mpsc::sync_channel::<InferRequest>(cfg.infer_queue_depth.max(1));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let max_batch = cfg.max_batch.max(1);
+        let worker = std::thread::spawn(move || {
+            let mut exec_samples = Vec::new();
+            let mut e2e_samples = Vec::new();
+            let mut batches = 0usize;
+            // PJRT client + executable live entirely on this thread
+            let setup = Runtime::cpu()
+                .and_then(|rt| rt.load_hlo_text(&hlo_path, &name, arity).map(|c| (rt, c)));
+            let (_rt, compiled) = match setup {
+                Ok(pair) => {
+                    let _ = ready_tx.send(Ok(()));
+                    pair
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return (exec_samples, e2e_samples, batches);
+                }
+            };
+            while let Ok(first) = rx.recv() {
+                // drain a micro-batch
+                let mut batch = vec![first];
+                while batch.len() < max_batch {
+                    match rx.try_recv() {
+                        Ok(req) => batch.push(req),
+                        Err(_) => break,
+                    }
+                }
+                batches += 1;
+                for req in batch {
+                    let mut inputs = vec![req.input.clone()];
+                    inputs.extend(weights.iter().cloned());
+                    let result = compiled.run(&inputs, out_dtype).map(|out| {
+                        let e2e = req.enqueued.elapsed().as_secs_f64();
+                        exec_samples.push(out.exec_seconds);
+                        e2e_samples.push(e2e);
+                        InferReply {
+                            output: out.tensor,
+                            exec_seconds: out.exec_seconds,
+                            e2e_seconds: e2e,
+                        }
+                    });
+                    let _ = req.reply.send(result);
+                }
+            }
+            (exec_samples, e2e_samples, batches)
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(InferLane {
+                tx: Some(tx),
+                worker: Some(worker),
+                out_dtype,
+            }),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => {
+                // the worker panicked before reporting readiness: join
+                // it (don't leak the handle) before surfacing the error
+                let _ = worker.join();
+                Err(anyhow!("inference worker died during startup"))
+            }
+        }
+    }
+
+    pub(crate) fn out_dtype(&self) -> DType {
+        self.out_dtype
+    }
+
+    /// Submit one image and wait for the reply (blocking client call).
+    pub(crate) fn infer(&self, input: Tensor) -> Result<InferReply> {
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("inference lane stopped"))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(InferRequest {
+            input,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        })
+        .map_err(|_| anyhow!("inference lane stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("inference lane dropped reply"))?
+    }
+
+    /// Stop the worker and collect statistics. A worker that died
+    /// abnormally yields empty statistics (with a warning) instead of
+    /// propagating its panic into the caller.
+    pub(crate) fn shutdown(mut self) -> InferStats {
+        self.tx.take(); // close the queue; worker loop exits
+        match self.worker.take().map(JoinHandle::join) {
+            Some(Ok((exec, e2e, batches))) => InferStats {
+                served: exec.len(),
+                batches,
+                exec: LatencyStats::from_seconds(&exec),
+                e2e: LatencyStats::from_seconds(&e2e),
+            },
+            _ => {
+                eprintln!("warning: inference worker exited abnormally; statistics lost");
+                InferStats {
+                    served: 0,
+                    batches: 0,
+                    exec: LatencyStats::from_seconds(&[]),
+                    e2e: LatencyStats::from_seconds(&[]),
+                }
+            }
+        }
+    }
+}
+
+impl Drop for InferLane {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(worker) = self.worker.take() {
+            let _ = worker.join();
+        }
+    }
+}

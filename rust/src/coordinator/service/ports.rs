@@ -1,0 +1,364 @@
+//! The compile service's typed vocabulary: the [`Command`]s a client
+//! can issue, the [`Event`]s the service streams back per job, and the
+//! client-side handles ([`ServiceClient`], [`JobTicket`]) that wrap the
+//! channel plumbing in a typed API.
+//!
+//! The protocol is deliberately small and explicit:
+//!
+//! * [`ServiceClient::submit`] sends [`Command::Submit`] and blocks
+//!   until the admission decision — the FIRST event on the job's stream
+//!   is always [`Event::Accepted`] or [`Event::Rejected`], so admission
+//!   is synchronous even though execution is not.
+//! * An accepted job streams [`Event::Started`], zero or more
+//!   [`Event::Progress`] updates (one per engine work item scored), and
+//!   exactly one terminal event: [`Event::Finished`] carrying the
+//!   byte-stable [`Outcome::to_json`](crate::session::Outcome::to_json)
+//!   document, [`Event::Failed`], or [`Event::Cancelled`].
+//! * [`JobTicket::wait`] folds that stream into a [`Completion`].
+//!
+//! Everything here is transport-free (std `mpsc` channels, in-process);
+//! the orchestrator behind the channel is
+//! [`CompileService`](super::CompileService).
+
+use std::fmt;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use crate::dse::{Fidelity, TenantId};
+use crate::estimator::Thresholds;
+use crate::metrics::LatencyStats;
+use crate::runtime::Tensor;
+use crate::session::CompileJob;
+
+use super::orchestrator::Msg;
+use super::reducer::Reducer;
+
+/// Service-assigned job identity: a monotonically increasing sequence
+/// number, unique for the service's lifetime (it doubles as the
+/// admission-order tie-breaker in the fairness policy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job {}", self.0)
+    }
+}
+
+/// Everything one compile job runs under: the [`CompileJob`] work spec
+/// plus the per-job session knobs a [`Session`](crate::session::Session)
+/// would carry (fidelity, census γ, thresholds) and the [`TenantId`]
+/// cache namespace. Defaults mirror `Session::builder()`: analytical
+/// fidelity, γ = 0, threshold-free fitting, default tenant.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Cache namespace the job's evaluations are keyed under.
+    pub tenant: TenantId,
+    /// The models × devices × explorer work spec.
+    pub job: CompileJob,
+    /// Fidelity every candidate is scored at.
+    pub fidelity: Fidelity,
+    /// Census-reward γ (0 = the paper's Algorithm 1).
+    pub census_gamma: f64,
+    /// Resource thresholds the explorers fit against.
+    pub thresholds: Thresholds,
+}
+
+impl JobSpec {
+    /// A spec with the default session knobs around `job`.
+    pub fn new(job: CompileJob) -> JobSpec {
+        JobSpec {
+            tenant: TenantId::DEFAULT,
+            job,
+            fidelity: Fidelity::Analytical,
+            census_gamma: 0.0,
+            thresholds: Thresholds::default(),
+        }
+    }
+
+    /// Run under this tenant's cache namespace.
+    pub fn tenant(mut self, tenant: TenantId) -> JobSpec {
+        self.tenant = tenant;
+        self
+    }
+
+    /// Score candidates at this fidelity.
+    pub fn fidelity(mut self, fidelity: Fidelity) -> JobSpec {
+        self.fidelity = fidelity;
+        self
+    }
+
+    /// Shape explorer rewards with this census γ.
+    pub fn census_gamma(mut self, census_gamma: f64) -> JobSpec {
+        self.census_gamma = census_gamma;
+        self
+    }
+
+    /// Fit against these resource thresholds.
+    pub fn thresholds(mut self, thresholds: Thresholds) -> JobSpec {
+        self.thresholds = thresholds;
+        self
+    }
+}
+
+/// One client request to the service daemon.
+#[derive(Debug)]
+pub enum Command {
+    /// Submit a compile job. The admission decision and every
+    /// subsequent lifecycle/progress update arrive on `events`; the
+    /// first event is always [`Event::Accepted`] or [`Event::Rejected`].
+    Submit {
+        /// The job and its session knobs.
+        spec: JobSpec,
+        /// Per-job event stream back to the client.
+        events: mpsc::Sender<Event>,
+    },
+    /// Cancel a queued or running job. Queued jobs are removed
+    /// immediately; running jobs stop cooperatively at the next engine
+    /// checkpoint. Unknown or already-terminal ids are ignored.
+    Cancel {
+        /// The job to cancel.
+        job: JobId,
+    },
+    /// Stop admitting, cancel the queue, drain running jobs, then reply
+    /// with the reducer's final state (event log + job records).
+    Shutdown {
+        /// Receives the final [`Reducer`] snapshot.
+        reply: mpsc::Sender<Reducer>,
+    },
+}
+
+/// One typed progress/lifecycle update on a job's event stream. Every
+/// variant names its job, so streams can be multiplexed or logged
+/// as-is; the reducer records every variant except [`Event::Progress`]
+/// (volume) and can replay the log into the exact final job store.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// The job passed admission control and is queued.
+    Accepted {
+        /// The service-assigned id.
+        job: JobId,
+        /// The tenant it will run under.
+        tenant: TenantId,
+        /// Jobs already queued ahead of it at admission time.
+        queue_depth: usize,
+    },
+    /// Admission control turned the job away (bounded queue, shutdown).
+    Rejected {
+        /// The id the submission would have had.
+        job: JobId,
+        /// The tenant that submitted it.
+        tenant: TenantId,
+        /// Why it was turned away.
+        reason: String,
+    },
+    /// The job left the queue and is executing on the shared evaluator.
+    Started {
+        /// The job that started.
+        job: JobId,
+    },
+    /// Engine progress: `scored` of `total` work items (prewarm chunks +
+    /// explored pairs) are done.
+    Progress {
+        /// The job making progress.
+        job: JobId,
+        /// Work items completed so far.
+        scored: usize,
+        /// Total work items in the job.
+        total: usize,
+    },
+    /// Terminal: the job completed; `outcome_json` is the byte-stable
+    /// [`Outcome::to_json`](crate::session::Outcome::to_json) document —
+    /// identical bytes to a solo [`Session::run`](crate::session::Session::run)
+    /// of the same spec.
+    Finished {
+        /// The job that finished.
+        job: JobId,
+        /// The rendered outcome document.
+        outcome_json: String,
+    },
+    /// Terminal: the job errored (flow extraction, quantization, ...).
+    Failed {
+        /// The job that failed.
+        job: JobId,
+        /// The rendered error chain.
+        error: String,
+    },
+    /// Terminal: the job was cancelled (while queued or mid-run).
+    Cancelled {
+        /// The job that was cancelled.
+        job: JobId,
+    },
+}
+
+impl Event {
+    /// The job this event is about.
+    pub fn job(&self) -> JobId {
+        match self {
+            Event::Accepted { job, .. }
+            | Event::Rejected { job, .. }
+            | Event::Started { job }
+            | Event::Progress { job, .. }
+            | Event::Finished { job, .. }
+            | Event::Failed { job, .. }
+            | Event::Cancelled { job } => *job,
+        }
+    }
+
+    /// True for the three stream-ending variants.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            Event::Rejected { .. }
+                | Event::Finished { .. }
+                | Event::Failed { .. }
+                | Event::Cancelled { .. }
+        )
+    }
+
+    /// One-line human rendering (the CLI's `serve` progress log).
+    pub fn describe(&self) -> String {
+        match self {
+            Event::Accepted { job, tenant, queue_depth } => format!(
+                "{job}: accepted (tenant {:016x}, {queue_depth} queued ahead)",
+                tenant.as_u64()
+            ),
+            Event::Rejected { job, reason, .. } => format!("{job}: rejected — {reason}"),
+            Event::Started { job } => format!("{job}: started"),
+            Event::Progress { job, scored, total } => format!("{job}: {scored}/{total} scored"),
+            Event::Finished { job, .. } => format!("{job}: finished"),
+            Event::Failed { job, error } => format!("{job}: failed — {error}"),
+            Event::Cancelled { job } => format!("{job}: cancelled"),
+        }
+    }
+}
+
+/// How a [`JobTicket::wait`] ended.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Completion {
+    /// The job ran to completion.
+    Finished {
+        /// The byte-stable outcome document.
+        outcome_json: String,
+    },
+    /// The job errored.
+    Failed {
+        /// The rendered error chain.
+        error: String,
+    },
+    /// The job was cancelled before finishing.
+    Cancelled,
+}
+
+impl Completion {
+    /// The outcome document, when the job finished.
+    pub fn outcome_json(&self) -> Option<&str> {
+        match self {
+            Completion::Finished { outcome_json } => Some(outcome_json),
+            _ => None,
+        }
+    }
+}
+
+/// A cheap, cloneable handle for submitting work to a running
+/// [`CompileService`](super::CompileService) — hand clones to as many
+/// client threads as needed.
+#[derive(Clone)]
+pub struct ServiceClient {
+    pub(crate) tx: mpsc::Sender<Msg>,
+}
+
+impl ServiceClient {
+    /// Send a raw [`Command`]. Most callers want [`ServiceClient::submit`]
+    /// or [`ServiceClient::cancel`] instead.
+    pub fn send(&self, command: Command) -> Result<()> {
+        self.tx
+            .send(Msg::Command(command))
+            .map_err(|_| anyhow!("compile service stopped"))
+    }
+
+    /// Submit a job and block until the admission decision: `Ok` with a
+    /// live [`JobTicket`] when accepted, `Err` naming the reason when
+    /// admission control turns it away.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobTicket> {
+        let (events_tx, events) = mpsc::channel();
+        self.send(Command::Submit {
+            spec,
+            events: events_tx,
+        })?;
+        match events.recv() {
+            Ok(Event::Accepted { job, .. }) => Ok(JobTicket { job, events }),
+            Ok(Event::Rejected { reason, .. }) => Err(anyhow!("job rejected: {reason}")),
+            Ok(other) => Err(anyhow!("protocol error: {} before admission", other.describe())),
+            Err(_) => Err(anyhow!("compile service dropped the submission")),
+        }
+    }
+
+    /// Request cancellation of a queued or running job (fire and
+    /// forget; the job's own event stream reports the outcome).
+    pub fn cancel(&self, job: JobId) -> Result<()> {
+        self.send(Command::Cancel { job })
+    }
+}
+
+/// The client's end of one accepted job: its id plus the live event
+/// stream ([`Event::Accepted`] has already been consumed by admission).
+pub struct JobTicket {
+    pub(crate) job: JobId,
+    pub(crate) events: mpsc::Receiver<Event>,
+}
+
+impl JobTicket {
+    /// The service-assigned id (usable with
+    /// [`ServiceClient::cancel`]).
+    pub fn id(&self) -> JobId {
+        self.job
+    }
+
+    /// Block for the next event on this job's stream.
+    pub fn recv(&self) -> Result<Event> {
+        self.events
+            .recv()
+            .map_err(|_| anyhow!("compile service dropped the event stream"))
+    }
+
+    /// Drain the stream to its terminal event and fold it into a
+    /// [`Completion`], discarding progress updates along the way.
+    pub fn wait(&self) -> Result<Completion> {
+        loop {
+            match self.recv()? {
+                Event::Finished { outcome_json, .. } => {
+                    return Ok(Completion::Finished { outcome_json })
+                }
+                Event::Failed { error, .. } => return Ok(Completion::Failed { error }),
+                Event::Cancelled { .. } => return Ok(Completion::Cancelled),
+                _ => {}
+            }
+        }
+    }
+}
+
+/// One served inference (the emulation lane's reply).
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    /// The model's output tensor.
+    pub output: Tensor,
+    /// Pure PJRT execute time.
+    pub exec_seconds: f64,
+    /// Queue + batch + execute time, as the client saw it.
+    pub e2e_seconds: f64,
+}
+
+/// Aggregate statistics over the inference lane's lifetime.
+#[derive(Debug, Clone)]
+pub struct InferStats {
+    /// Requests served.
+    pub served: usize,
+    /// Micro-batches executed.
+    pub batches: usize,
+    /// Pure execute-time distribution.
+    pub exec: LatencyStats,
+    /// End-to-end latency distribution.
+    pub e2e: LatencyStats,
+}

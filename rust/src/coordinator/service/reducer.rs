@@ -1,0 +1,187 @@
+//! The reducer-owned job-state store: every lifecycle event the
+//! orchestrator emits is folded through [`kernel::step`] into one
+//! [`JobRecord`] per job AND appended to a replayable log. The log is
+//! the source of truth — [`Reducer::replay`] over [`Reducer::log`]
+//! reconstructs the exact final store (pinned by the service tests) —
+//! so the store can never drift from the events clients observed.
+//!
+//! Progress events are deliberately kept out of the reducer: they are
+//! volume (one per engine work item), they never change job state
+//! ([`kernel::step`] ignores them), and logging them would make the
+//! replay log size depend on grid sizes rather than job count.
+
+use std::collections::BTreeMap;
+
+use crate::dse::TenantId;
+
+use super::kernel::{self, JobState};
+use super::ports::{Event, JobId};
+
+/// The reducer's materialized view of one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    /// Tenant the job was submitted under.
+    pub tenant: TenantId,
+    /// Current lifecycle state.
+    pub state: JobState,
+    /// The outcome document, once [`JobState::Finished`].
+    pub outcome_json: Option<String>,
+    /// The error chain, once [`JobState::Failed`] (or the admission
+    /// reason, once [`JobState::Rejected`]).
+    pub error: Option<String>,
+}
+
+/// Event log + job store. [`Reducer::apply`] is the only mutation path,
+/// so `replay(r.log()) == r` holds by construction — the equality the
+/// service determinism tests assert end-to-end.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Reducer {
+    log: Vec<Event>,
+    jobs: BTreeMap<u64, JobRecord>,
+}
+
+impl Reducer {
+    /// An empty store.
+    pub fn new() -> Reducer {
+        Reducer::default()
+    }
+
+    /// Fold one event into the store and append it to the log.
+    pub fn apply(&mut self, event: &Event) {
+        self.log.push(event.clone());
+        match event {
+            Event::Accepted { job, tenant, .. } => {
+                self.jobs.insert(
+                    job.0,
+                    JobRecord {
+                        tenant: *tenant,
+                        state: JobState::Queued,
+                        outcome_json: None,
+                        error: None,
+                    },
+                );
+            }
+            Event::Rejected { job, tenant, reason } => {
+                self.jobs.insert(
+                    job.0,
+                    JobRecord {
+                        tenant: *tenant,
+                        state: JobState::Rejected,
+                        outcome_json: None,
+                        error: Some(reason.clone()),
+                    },
+                );
+            }
+            _ => {
+                let Some(record) = self.jobs.get_mut(&event.job().0) else {
+                    return; // event for a job we never admitted: ignore
+                };
+                let next = kernel::step(record.state, event);
+                match (next, event) {
+                    (JobState::Finished, Event::Finished { outcome_json, .. }) => {
+                        record.outcome_json = Some(outcome_json.clone());
+                    }
+                    (JobState::Failed, Event::Failed { error, .. }) => {
+                        record.error = Some(error.clone());
+                    }
+                    _ => {}
+                }
+                record.state = next;
+            }
+        }
+    }
+
+    /// Rebuild a store from scratch by replaying an event log.
+    pub fn replay(events: &[Event]) -> Reducer {
+        let mut reducer = Reducer::new();
+        for event in events {
+            reducer.apply(event);
+        }
+        reducer
+    }
+
+    /// The append-only event log, in emission order.
+    pub fn log(&self) -> &[Event] {
+        &self.log
+    }
+
+    /// The record for one job, if it was ever admitted or rejected.
+    pub fn get(&self, job: JobId) -> Option<&JobRecord> {
+        self.jobs.get(&job.0)
+    }
+
+    /// All job records in id order.
+    pub fn jobs(&self) -> impl Iterator<Item = (JobId, &JobRecord)> {
+        self.jobs.iter().map(|(&id, record)| (JobId(id), record))
+    }
+
+    /// Jobs currently in a non-terminal state.
+    pub fn open_jobs(&self) -> usize {
+        self.jobs.values().filter(|r| !r.state.is_terminal()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn accepted(id: u64, tenant: &str) -> Event {
+        Event::Accepted {
+            job: JobId(id),
+            tenant: TenantId::of(tenant),
+            queue_depth: 0,
+        }
+    }
+
+    #[test]
+    fn reducer_folds_a_lifecycle_and_replays_exactly() {
+        let mut r = Reducer::new();
+        r.apply(&accepted(0, "acme"));
+        r.apply(&accepted(1, "zen"));
+        r.apply(&Event::Started { job: JobId(0) });
+        r.apply(&Event::Finished {
+            job: JobId(0),
+            outcome_json: "{\"ok\":true}".into(),
+        });
+        r.apply(&Event::Cancelled { job: JobId(1) });
+        r.apply(&Event::Rejected {
+            job: JobId(2),
+            tenant: TenantId::of("acme"),
+            reason: "queue full".into(),
+        });
+
+        let done = r.get(JobId(0)).unwrap();
+        assert_eq!(done.state, JobState::Finished);
+        assert_eq!(done.outcome_json.as_deref(), Some("{\"ok\":true}"));
+        assert_eq!(done.tenant, TenantId::of("acme"));
+        assert_eq!(r.get(JobId(1)).unwrap().state, JobState::Cancelled);
+        let rejected = r.get(JobId(2)).unwrap();
+        assert_eq!(rejected.state, JobState::Rejected);
+        assert_eq!(rejected.error.as_deref(), Some("queue full"));
+        assert_eq!(r.open_jobs(), 0);
+        assert_eq!(r.jobs().count(), 3);
+
+        // the log IS the store: replaying it reconstructs equality
+        assert_eq!(Reducer::replay(r.log()), r);
+        assert_eq!(r.log().len(), 6);
+    }
+
+    #[test]
+    fn reducer_ignores_events_for_unknown_jobs_and_late_events() {
+        let mut r = Reducer::new();
+        r.apply(&Event::Started { job: JobId(9) }); // never admitted
+        assert!(r.get(JobId(9)).is_none());
+        r.apply(&accepted(3, "acme"));
+        r.apply(&Event::Started { job: JobId(3) });
+        r.apply(&Event::Cancelled { job: JobId(3) });
+        // a straggler Finished after cancellation changes nothing
+        r.apply(&Event::Finished {
+            job: JobId(3),
+            outcome_json: "{}".into(),
+        });
+        let rec = r.get(JobId(3)).unwrap();
+        assert_eq!(rec.state, JobState::Cancelled);
+        assert!(rec.outcome_json.is_none());
+        assert_eq!(Reducer::replay(r.log()), r);
+    }
+}

@@ -17,7 +17,7 @@ use std::time::Instant;
 use crate::estimator::{estimate, query_seconds, Device, ResourceEstimate, Thresholds};
 use crate::ir::ComputationFlow;
 
-use super::eval::{self, Evaluator, Fidelity};
+use super::eval::{self, EvalRequest, Evaluator, Fidelity};
 use super::options::OptionSpace;
 use super::reward::RewardShaper;
 
@@ -63,14 +63,20 @@ pub fn explore_with(
     device: &Device,
     thresholds: Thresholds,
 ) -> DseResult {
-    explore_with_fidelity(evaluator, flow, device, thresholds, Fidelity::Analytical, 0.0)
+    explore_with_fidelity(
+        evaluator,
+        flow,
+        device,
+        thresholds,
+        EvalRequest::at(Fidelity::Analytical),
+    )
 }
 
-/// Exhaustive search at an explicit [`Fidelity`] and census-reward γ:
-/// stepped modes run the cycle-accurate simulator on every candidate
-/// (the skip-ahead engine keeps even `SteppedFullNetwork` grids
-/// interactive). With `census_gamma == 0` the chosen design and trace
-/// are fidelity-independent — feasibility and F_avg come from the
+/// Exhaustive search under an explicit [`EvalRequest`]: stepped
+/// fidelities run the cycle-accurate simulator on every candidate (the
+/// skip-ahead engine keeps even `SteppedFullNetwork` grids
+/// interactive). With `req.census_gamma == 0` the chosen design and
+/// trace are fidelity-independent — feasibility and F_avg come from the
 /// estimator — so any fidelity reproduces the seed path's choice and
 /// the stepped censuses just ride along in the memo for reporting. With
 /// γ > 0 under `SteppedFullNetwork`, Algorithm 1's improvement test
@@ -82,15 +88,14 @@ pub fn explore_with_fidelity(
     flow: &ComputationFlow,
     device: &Device,
     thresholds: Thresholds,
-    fidelity: Fidelity,
-    census_gamma: f64,
+    req: EvalRequest,
 ) -> DseResult {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let pairs = space.pairs();
-    let grid = evaluator.evaluate_grid_shaped(flow, device, &pairs, fidelity, census_gamma);
+    let grid = evaluator.evaluate_grid(flow, device, &pairs, req);
 
-    let mut shaper = RewardShaper::with_census(thresholds, census_gamma);
+    let mut shaper = RewardShaper::with_census(thresholds, req.census_gamma);
     let mut trace = Vec::with_capacity(pairs.len());
     let mut cache_hits = 0usize;
     for (eval, hit) in &grid {
@@ -258,8 +263,7 @@ mod tests {
             &f,
             &ARRIA_10_GX1150,
             Thresholds::default(),
-            Fidelity::SteppedFullNetwork,
-            0.0,
+            EvalRequest::at(Fidelity::SteppedFullNetwork),
         );
         let analytical =
             explore_with(&Evaluator::new(4), &f, &ARRIA_10_GX1150, Thresholds::default());
@@ -270,8 +274,13 @@ mod tests {
         // the memo now holds a census for every candidate
         let pairs = crate::dse::OptionSpace::from_flow(&f).pairs();
         for (ni, nl) in pairs {
-            let (eval, hit) =
-                ev.evaluate(&f, &ARRIA_10_GX1150, ni, nl, Fidelity::SteppedFullNetwork);
+            let (eval, hit) = ev.evaluate(
+                &f,
+                &ARRIA_10_GX1150,
+                ni,
+                nl,
+                EvalRequest::at(Fidelity::SteppedFullNetwork),
+            );
             assert!(hit, "({ni},{nl}) memoized during the grid");
             let net = eval.stepped_network.as_ref().expect("census present");
             assert_eq!(net.layers.len(), f.layers.len());
@@ -291,8 +300,7 @@ mod tests {
                 &f,
                 &ARRIA_10_GX1150,
                 Thresholds::default(),
-                Fidelity::SteppedFullNetwork,
-                gamma,
+                EvalRequest::shaped(Fidelity::SteppedFullNetwork, gamma),
             )
         };
         let a = run();
@@ -306,13 +314,12 @@ mod tests {
         let ev = Evaluator::new(2);
         let mut best: Option<(f64, (usize, usize))> = None;
         for (ni, nl) in OptionSpace::from_flow(&f).pairs() {
-            let (e, _) = ev.evaluate_shaped(
+            let (e, _) = ev.evaluate(
                 &f,
                 &ARRIA_10_GX1150,
                 ni,
                 nl,
-                Fidelity::SteppedFullNetwork,
-                gamma,
+                EvalRequest::shaped(Fidelity::SteppedFullNetwork, gamma),
             );
             if !e.estimate.fits(&Thresholds::default()) {
                 continue;

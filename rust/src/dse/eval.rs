@@ -7,11 +7,16 @@
 //! same estimates across runs. This module centralizes that work:
 //!
 //! * [`EvalCache`] — a process-wide memo keyed on
-//!   `(model fingerprint, device fingerprint, N_i, N_l, fidelity)` that
-//!   deduplicates the estimator + simulator calls the RL and joint
-//!   agents revisit constantly (and that repeat across fleet fits).
-//!   Entries carry a last-used LRU stamp so oversized disk caches can be
-//!   evicted deterministically ([`EvalCache::evict_lru`]);
+//!   `(model fingerprint, device fingerprint, N_i, N_l, fidelity,
+//!   census γ, tenant)` that deduplicates the estimator + simulator
+//!   calls the RL and joint agents revisit constantly (and that repeat
+//!   across fleet fits). Entries carry a last-used LRU stamp so
+//!   oversized disk caches can be evicted deterministically
+//!   ([`EvalCache::evict_lru`]);
+//! * [`EvalRequest`] — the params struct naming what one evaluation
+//!   runs under: a [`Fidelity`], the census-reward γ, and the
+//!   [`TenantId`] cache namespace. [`EvalRequest::at`] is the γ = 0,
+//!   default-tenant convenience constructor unshaped callers use;
 //! * [`ThreadPool`] — a plain `std::thread` + channel worker pool (the
 //!   `coordinator::server` idiom; tokio is not in the offline crate
 //!   set) that [`Evaluator::evaluate_grid`] fans candidate scoring out
@@ -88,6 +93,75 @@ fn parse_fidelity_tag(s: &str) -> Result<Fidelity, String> {
     }
 }
 
+/// Cache namespace a request evaluates under. The compile service gives
+/// every tenant its own namespace (folded into the memo key as a stable
+/// FNV-1a fingerprint of the tenant name), so tenants can neither
+/// poison nor age out each other's cached working sets. Single-tenant
+/// flows use [`TenantId::DEFAULT`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TenantId(u64);
+
+impl TenantId {
+    /// The default (single-tenant) namespace.
+    pub const DEFAULT: TenantId = TenantId(0);
+
+    /// Namespace for a named tenant; the empty name maps to the default
+    /// namespace.
+    pub fn of(name: &str) -> TenantId {
+        if name.is_empty() {
+            TenantId::DEFAULT
+        } else {
+            TenantId(crate::util::hash::fnv1a(name.as_bytes()))
+        }
+    }
+
+    /// The raw memo-key component (0 for the default namespace).
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+}
+
+/// Everything that parameterizes one evaluation besides the candidate
+/// itself: the [`Fidelity`], the census-reward γ the exploration runs
+/// under (part of the memo key even though the payload is
+/// γ-independent) and the [`TenantId`] cache namespace. This params
+/// struct replaced the `evaluate`/`evaluate_shaped`/
+/// `evaluate_grid_shaped`/`get_or_compute_shaped` method ladder:
+/// [`EvalRequest::at`] is the γ = 0, default-tenant convenience
+/// constructor, [`EvalRequest::shaped`] sets γ, and
+/// [`EvalRequest::tenant`] moves the request into a tenant namespace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalRequest {
+    pub fidelity: Fidelity,
+    /// Census-reward γ (exact f64; -0.0 normalizes to +0.0 in the key).
+    pub census_gamma: f64,
+    pub tenant: TenantId,
+}
+
+impl EvalRequest {
+    /// Unshaped request: γ = 0, default tenant.
+    pub fn at(fidelity: Fidelity) -> EvalRequest {
+        EvalRequest {
+            fidelity,
+            census_gamma: 0.0,
+            tenant: TenantId::DEFAULT,
+        }
+    }
+
+    /// γ-shaped request in the default tenant namespace.
+    pub fn shaped(fidelity: Fidelity, census_gamma: f64) -> EvalRequest {
+        EvalRequest {
+            census_gamma,
+            ..EvalRequest::at(fidelity)
+        }
+    }
+
+    /// The same request in `tenant`'s cache namespace.
+    pub fn tenant(self, tenant: TenantId) -> EvalRequest {
+        EvalRequest { tenant, ..self }
+    }
+}
+
 /// Everything one estimator/simulator query produces for a candidate.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Evaluation {
@@ -154,7 +228,9 @@ impl Evaluation {
 /// is then keyed on the reward configuration that produced it, so a
 /// warm cache can never mix entries across differently-shaped
 /// explorations (and `--cache-max-entries` eviction ages the γ-spaces
-/// independently).
+/// independently). The tenant namespace participates the same way: the
+/// compile service folds each job's [`TenantId`] into the key, so one
+/// tenant's working set can neither poison nor age out another's.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct EvalKey {
     model: u64,
@@ -164,6 +240,8 @@ struct EvalKey {
     fidelity: Fidelity,
     /// `f64::to_bits` of the run's census γ (0.0 for unshaped runs).
     census_gamma: u64,
+    /// The request's [`TenantId`] (0 for the default namespace).
+    tenant: u64,
 }
 
 /// The γ component of the memo key: exact f64 bits, with -0.0
@@ -180,23 +258,23 @@ impl EvalKey {
         device: &Device,
         ni: usize,
         nl: usize,
-        fidelity: Fidelity,
-        census_gamma: f64,
+        req: EvalRequest,
     ) -> EvalKey {
         EvalKey {
             model: flow.fingerprint(),
             device: device.fingerprint(),
             ni,
             nl,
-            fidelity,
-            census_gamma: gamma_key_bits(census_gamma),
+            fidelity: req.fidelity,
+            census_gamma: gamma_key_bits(req.census_gamma),
+            tenant: req.tenant.as_u64(),
         }
     }
 
     /// Deterministic total order for serialization and eviction ties.
-    fn sort_key(&self) -> (u64, u64, usize, usize, u8, u64) {
+    fn sort_key(&self) -> (u64, u64, usize, usize, u8, u64, u64) {
         let rank = fidelity_rank(self.fidelity);
-        (self.model, self.device, self.ni, self.nl, rank, self.census_gamma)
+        (self.model, self.device, self.ni, self.nl, rank, self.census_gamma, self.tenant)
     }
 }
 
@@ -252,38 +330,24 @@ impl EvalCache {
         self.clock.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    /// Look up or compute one candidate (γ = 0 key space). Returns the
-    /// evaluation and whether it was served from cache.
+    /// Look up or compute one candidate under `req`'s fidelity, census γ
+    /// and tenant namespace. Returns the evaluation and whether it was
+    /// served from cache.
     pub fn get_or_compute(
         &self,
         flow: &ComputationFlow,
         device: &Device,
         ni: usize,
         nl: usize,
-        fidelity: Fidelity,
-    ) -> (Arc<Evaluation>, bool) {
-        self.get_or_compute_shaped(flow, device, ni, nl, fidelity, 0.0)
-    }
-
-    /// Same, under an explicit census-reward γ (the memo key's sixth
-    /// component).
-    pub fn get_or_compute_shaped(
-        &self,
-        flow: &ComputationFlow,
-        device: &Device,
-        ni: usize,
-        nl: usize,
-        fidelity: Fidelity,
-        census_gamma: f64,
+        req: EvalRequest,
     ) -> (Arc<Evaluation>, bool) {
         let stamp = self.tick();
-        self.get_or_compute_at(stamp, flow, device, ni, nl, fidelity, census_gamma)
+        self.get_or_compute_at(stamp, flow, device, ni, nl, req)
     }
 
     /// Same, under a caller-held LRU generation (see [`EvalCache::tick`]).
     /// The (potentially heavy) compute runs outside the lock so parallel
     /// misses don't serialize.
-    #[allow(clippy::too_many_arguments)]
     pub fn get_or_compute_at(
         &self,
         stamp: u64,
@@ -291,11 +355,10 @@ impl EvalCache {
         device: &Device,
         ni: usize,
         nl: usize,
-        fidelity: Fidelity,
-        census_gamma: f64,
+        req: EvalRequest,
     ) -> (Arc<Evaluation>, bool) {
-        let key = EvalKey::new(flow, device, ni, nl, fidelity, census_gamma);
-        self.get_or_compute_keyed(key, stamp, flow, device, fidelity)
+        let key = EvalKey::new(flow, device, ni, nl, req);
+        self.get_or_compute_keyed(key, stamp, flow, device, req.fidelity)
     }
 
     /// Same, with the (loop-invariant) fingerprints already folded into
@@ -338,8 +401,7 @@ impl EvalCache {
         flow: &ComputationFlow,
         device: &Device,
         pairs: &[(usize, usize)],
-        fidelity: Fidelity,
-        census_gamma: f64,
+        req: EvalRequest,
     ) -> usize {
         let stamp = self.tick();
         let (model, device) = (flow.fingerprint(), device.fingerprint());
@@ -351,8 +413,9 @@ impl EvalCache {
                 device,
                 ni,
                 nl,
-                fidelity,
-                census_gamma: gamma_key_bits(census_gamma),
+                fidelity: req.fidelity,
+                census_gamma: gamma_key_bits(req.census_gamma),
+                tenant: req.tenant.as_u64(),
             };
             if let Some(entry) = map.get_mut(&key) {
                 entry.last_used = entry.last_used.max(stamp);
@@ -413,11 +476,15 @@ impl EvalCache {
 // entries — and the CLI falls back to a cold cache with a warning via
 // [`EvalCache::load_or_cold`].
 //
-// v3 (this version) additionally records each entry's census-reward γ
-// (an exact f64, part of the key). Older files still load:
+// v4 (this version) additionally records each entry's tenant namespace
+// (a 16-hex-digit fingerprint, part of the key). Older files still
+// load:
 //
-// * v2 analytical entries carry over (keyed at γ = 0); v2 *stepped*
-//   entries are dropped, because this version replaced the whole-byte
+// * v3 entries carry over unchanged into the tenant-0 (default)
+//   namespace — the payload layout is identical, only the namespace
+//   component is new.
+// * v2 analytical entries carry over (keyed at γ = 0, tenant 0); v2
+//   *stepped* entries are dropped, because v3 replaced the whole-byte
 //   DDR credit with the exact fractional-rational model
 //   (`sim::ddr_credit_rate`), so a v2 stepped census would contradict a
 //   fresh computation.
@@ -429,7 +496,7 @@ impl EvalCache {
 /// Format tag of the on-disk cache file.
 pub const CACHE_FORMAT: &str = "cnn2gate-evalcache-v1";
 /// Schema version within the format; bumped on any layout change.
-pub const CACHE_VERSION: i64 = 3;
+pub const CACHE_VERSION: i64 = 4;
 /// Oldest version [`EvalCache::from_json`] still accepts.
 pub const CACHE_VERSION_MIN: i64 = 1;
 /// Largest integer `util::json` round-trips exactly (below 2^53).
@@ -684,6 +751,7 @@ fn entry_to_json(key: &EvalKey, eval: &Evaluation, last_used: u64) -> Json {
     o.insert("nl", key.nl.into());
     o.insert("fidelity", fidelity_tag(key.fidelity).into());
     o.insert("census_gamma", Json::Num(f64::from_bits(key.census_gamma)));
+    o.insert("tenant", Json::Str(hex16(key.tenant)));
     o.insert("last_used", Json::Num(last_used as f64));
     o.insert("estimate", est_to_json(&eval.estimate));
     o.insert("latency", sim_to_json(&eval.latency));
@@ -704,27 +772,37 @@ fn entry_to_json(key: &EvalKey, eval: &Evaluation, last_used: u64) -> Json {
     Json::Obj(o)
 }
 
-/// Parse one v3 entry; `Err` rejects the whole file.
+/// Parse one v4 entry; `Err` rejects the whole file.
+fn entry_from_json_v4(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
+    let census_gamma = jf(v, "census_gamma")?;
+    let tenant = parse_hex16(&js(v, "tenant")?)?;
+    entry_from_json_tagged(v, census_gamma, tenant)
+}
+
+/// Parse one v3 entry (no tenant field; carries into the default
+/// namespace); `Err` rejects the whole file.
 fn entry_from_json_v3(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
     let census_gamma = jf(v, "census_gamma")?;
-    entry_from_json_tagged(v, census_gamma)
+    entry_from_json_tagged(v, census_gamma, 0)
 }
 
 /// Parse one v2 entry. `Ok(None)` means a valid-but-dropped entry (v2
 /// stepped censuses predate the fractional-credit stepper and are
-/// discarded); carried analytical entries key at γ = 0. `Err` rejects
-/// the whole file.
+/// discarded); carried analytical entries key at γ = 0, tenant 0. `Err`
+/// rejects the whole file.
 fn entry_from_json_v2(v: &Json) -> Result<Option<(EvalKey, Evaluation, u64)>, String> {
     if parse_fidelity_tag(&js(v, "fidelity")?)? != Fidelity::Analytical {
         return Ok(None);
     }
-    entry_from_json_tagged(v, 0.0).map(Some)
+    entry_from_json_tagged(v, 0.0, 0).map(Some)
 }
 
-/// The shared v2/v3 entry body (v3 carries the γ field, v2 keys at 0).
+/// The shared v2/v3/v4 entry body (v4 carries both the γ and tenant
+/// fields, v3 the γ field only, v2 neither).
 fn entry_from_json_tagged(
     v: &Json,
     census_gamma: f64,
+    tenant: u64,
 ) -> Result<(EvalKey, Evaluation, u64), String> {
     let fidelity = parse_fidelity_tag(&js(v, "fidelity")?)?;
     let key = EvalKey {
@@ -734,6 +812,7 @@ fn entry_from_json_tagged(
         nl: jus(v, "nl")?,
         fidelity,
         census_gamma: gamma_key_bits(census_gamma),
+        tenant,
     };
     let last_used = ju(v, "last_used")?;
     let estimate = est_from_json(v.get("estimate"))?;
@@ -806,6 +885,7 @@ fn entry_from_json_v1(v: &Json) -> Result<Option<(EvalKey, Evaluation, u64)>, St
         nl: jus(v, "nl")?,
         fidelity: Fidelity::Analytical,
         census_gamma: 0f64.to_bits(),
+        tenant: 0,
     };
     let estimate = est_from_json(v.get("estimate"))?;
     let latency = sim_from_json(v.get("latency"))?;
@@ -861,8 +941,8 @@ impl EvalCache {
         Json::Obj(o)
     }
 
-    /// Deserialize a cache document (current v3 or legacy v1/v2 — see
-    /// the module docs for the carry-over rules). Strict: schema
+    /// Deserialize a cache document (current v4 or legacy v1/v2/v3 —
+    /// see the module docs for the carry-over rules). Strict: schema
     /// mismatches, missing fields, duplicate keys and key/payload
     /// contradictions all reject the whole document. Counters start at
     /// zero (a loaded entry counts as a hit only when something looks it
@@ -897,7 +977,8 @@ impl EvalCache {
                 let parsed = match version {
                     1 => entry_from_json_v1(row).map_err(|e| format!("entry {i}: {e}"))?,
                     2 => entry_from_json_v2(row).map_err(|e| format!("entry {i}: {e}"))?,
-                    _ => Some(entry_from_json_v3(row).map_err(|e| format!("entry {i}: {e}"))?),
+                    3 => Some(entry_from_json_v3(row).map_err(|e| format!("entry {i}: {e}"))?),
+                    _ => Some(entry_from_json_v4(row).map_err(|e| format!("entry {i}: {e}"))?),
                 };
                 let Some((key, eval, last_used)) = parsed else {
                     continue; // dropped legacy stepped entry
@@ -1056,69 +1137,43 @@ impl Evaluator {
 
     /// Evaluate one candidate inline (cache-aware, no pool dispatch) —
     /// what the inherently sequential RL/joint agents call per step.
-    /// γ = 0 key space; see [`Evaluator::evaluate_shaped`].
     pub fn evaluate(
         &self,
         flow: &ComputationFlow,
         device: &Device,
         ni: usize,
         nl: usize,
-        fidelity: Fidelity,
+        req: EvalRequest,
     ) -> (Arc<Evaluation>, bool) {
-        self.evaluate_shaped(flow, device, ni, nl, fidelity, 0.0)
-    }
-
-    /// [`Evaluator::evaluate`] under an explicit census-reward γ (keyed
-    /// separately in the memo).
-    pub fn evaluate_shaped(
-        &self,
-        flow: &ComputationFlow,
-        device: &Device,
-        ni: usize,
-        nl: usize,
-        fidelity: Fidelity,
-        census_gamma: f64,
-    ) -> (Arc<Evaluation>, bool) {
-        self.cache
-            .get_or_compute_shaped(flow, device, ni, nl, fidelity, census_gamma)
+        self.cache.get_or_compute(flow, device, ni, nl, req)
     }
 
     /// Evaluate a whole candidate grid, fanning the misses out across
     /// the pool. Results come back in `pairs` order, so a sequential
     /// reduction over them (e.g. Algorithm 1's running max) is
     /// bit-identical to the sequential seed path. Must not be called
-    /// from inside a pool worker (see module docs). γ = 0 key space.
+    /// from inside a pool worker (see module docs).
     pub fn evaluate_grid(
         &self,
         flow: &ComputationFlow,
         device: &Device,
         pairs: &[(usize, usize)],
-        fidelity: Fidelity,
-    ) -> Vec<(Arc<Evaluation>, bool)> {
-        self.evaluate_grid_shaped(flow, device, pairs, fidelity, 0.0)
-    }
-
-    /// [`Evaluator::evaluate_grid`] under an explicit census-reward γ.
-    pub fn evaluate_grid_shaped(
-        &self,
-        flow: &ComputationFlow,
-        device: &Device,
-        pairs: &[(usize, usize)],
-        fidelity: Fidelity,
-        census_gamma: f64,
+        req: EvalRequest,
     ) -> Vec<(Arc<Evaluation>, bool)> {
         // fingerprints are loop-invariant: hash once per grid; the whole
         // grid shares one LRU generation so worker completion order
         // can't perturb the persisted stamps
         let (model_fp, device_fp) = (flow.fingerprint(), device.fingerprint());
         let stamp = self.cache.tick();
+        let fidelity = req.fidelity;
         let key_of = |ni: usize, nl: usize| EvalKey {
             model: model_fp,
             device: device_fp,
             ni,
             nl,
             fidelity,
-            census_gamma: gamma_key_bits(census_gamma),
+            census_gamma: gamma_key_bits(req.census_gamma),
+            tenant: req.tenant.as_u64(),
         };
         if pairs.len() < 2 || self.pool.size() < 2 {
             return pairs
@@ -1236,6 +1291,11 @@ mod tests {
         std::env::temp_dir().join(format!("cnn2gate-evalcache-{}-{tag}.json", std::process::id()))
     }
 
+    /// Shorthand for the unshaped, default-tenant request.
+    fn req(fidelity: Fidelity) -> EvalRequest {
+        EvalRequest::at(fidelity)
+    }
+
     #[test]
     fn pool_runs_every_job() {
         let pool = ThreadPool::new(3);
@@ -1270,7 +1330,7 @@ mod tests {
             let pairs = OptionSpace::from_flow(&f).pairs();
             for dev in [&ARRIA_10_GX1150, &CYCLONE_V_5CSEMA5, &CYCLONE_V_5CSEMA4] {
                 let ev = Evaluator::new(4);
-                let grid = ev.evaluate_grid(&f, dev, &pairs, Fidelity::Analytical);
+                let grid = ev.evaluate_grid(&f, dev, &pairs, req(Fidelity::Analytical));
                 assert_eq!(grid.len(), pairs.len());
                 for ((eval, hit), &(ni, nl)) in grid.iter().zip(&pairs) {
                     assert!(!hit, "fresh cache cannot hit");
@@ -1288,9 +1348,9 @@ mod tests {
         let pairs = OptionSpace::from_flow(&f).pairs();
         let run = || {
             let ev = Evaluator::new(4);
-            ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+            ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, req(Fidelity::Analytical));
             let first = ev.cache().stats();
-            ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+            ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, req(Fidelity::Analytical));
             (first, ev.cache().stats())
         };
         let (first_a, second_a) = run();
@@ -1315,24 +1375,24 @@ mod tests {
             CYCLONE_V_5CSEMA5.fingerprint()
         );
         let ev = Evaluator::new(2);
-        ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical);
-        let (_, hit) = ev.evaluate(&v, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical);
+        ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, req(Fidelity::Analytical));
+        let (_, hit) = ev.evaluate(&v, &ARRIA_10_GX1150, 8, 8, req(Fidelity::Analytical));
         assert!(!hit, "different model must miss");
-        let (_, hit) = ev.evaluate(&a, &CYCLONE_V_5CSEMA5, 8, 8, Fidelity::Analytical);
+        let (_, hit) = ev.evaluate(&a, &CYCLONE_V_5CSEMA5, 8, 8, req(Fidelity::Analytical));
         assert!(!hit, "different device must miss");
-        let (_, hit) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical);
+        let (_, hit) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, req(Fidelity::Analytical));
         assert!(hit, "same key must hit");
-        let (_, hit) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::SteppedFullNetwork);
+        let (_, hit) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, req(Fidelity::SteppedFullNetwork));
         assert!(!hit, "different fidelity must miss");
-        // the census-reward γ is the key's sixth component: a shaped run
-        // can never be served another γ-space's working set
-        let (shaped, hit) =
-            ev.evaluate_shaped(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical, 0.25);
+        // the census-reward γ is a key component: a shaped run can
+        // never be served another γ-space's working set
+        let shaped_req = EvalRequest::shaped(Fidelity::Analytical, 0.25);
+        let (shaped, hit) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, shaped_req);
         assert!(!hit, "different census γ must miss");
-        let (_, hit) = ev.evaluate_shaped(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical, 0.25);
+        let (_, hit) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, shaped_req);
         assert!(hit, "same γ hits");
         // ... while the payload itself is γ-independent
-        let (plain, _) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, Fidelity::Analytical);
+        let (plain, _) = ev.evaluate(&a, &ARRIA_10_GX1150, 8, 8, req(Fidelity::Analytical));
         assert_eq!(*shaped, *plain);
     }
 
@@ -1340,12 +1400,13 @@ mod tests {
     fn stepped_fidelity_runs_the_dominant_round() {
         let f = flow("tiny");
         let ev = Evaluator::new(2);
-        let (eval, _) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound);
+        let (eval, _) =
+            ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::SteppedDominantRound));
         let stepped = eval.stepped.as_ref().expect("stepped census present");
         assert!(stepped.cycles > 0);
         assert!(eval.stepped_network.is_none());
         // analytical fidelity for the same option is a distinct entry
-        let (eval2, hit) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        let (eval2, hit) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
         assert!(!hit);
         assert!(eval2.stepped.is_none());
     }
@@ -1354,13 +1415,15 @@ mod tests {
     fn full_network_fidelity_steps_every_round() {
         let f = flow("alexnet");
         let ev = Evaluator::new(2);
-        let (eval, _) = ev.evaluate(&f, &ARRIA_10_GX1150, 16, 32, Fidelity::SteppedFullNetwork);
+        let (eval, _) =
+            ev.evaluate(&f, &ARRIA_10_GX1150, 16, 32, req(Fidelity::SteppedFullNetwork));
         let net = eval.stepped_network.as_ref().expect("network census");
         assert_eq!(net.layers.len(), f.layers.len());
         assert!(eval.stepped.is_none());
         assert!(net.total_cycles() > 0);
         // the dominant round's census equals the stepped-dominant run's
-        let (dom, _) = ev.evaluate(&f, &ARRIA_10_GX1150, 16, 32, Fidelity::SteppedDominantRound);
+        let (dom, _) =
+            ev.evaluate(&f, &ARRIA_10_GX1150, 16, 32, req(Fidelity::SteppedDominantRound));
         let dom_idx = f
             .layers
             .iter()
@@ -1376,9 +1439,9 @@ mod tests {
         let cache = Arc::new(EvalCache::new());
         let f = flow("alexnet");
         let a = Evaluator::with_cache(2, Arc::clone(&cache));
-        a.evaluate(&f, &ARRIA_10_GX1150, 16, 32, Fidelity::Analytical);
+        a.evaluate(&f, &ARRIA_10_GX1150, 16, 32, req(Fidelity::Analytical));
         let b = Evaluator::with_cache(2, Arc::clone(&cache));
-        let (_, hit) = b.evaluate(&f, &ARRIA_10_GX1150, 16, 32, Fidelity::Analytical);
+        let (_, hit) = b.evaluate(&f, &ARRIA_10_GX1150, 16, 32, req(Fidelity::Analytical));
         assert!(hit, "cache shared across evaluator instances");
         cache.clear();
         assert_eq!(cache.stats().entries, 0);
@@ -1390,18 +1453,18 @@ mod tests {
         let f = flow("tiny");
         let cache = EvalCache::new();
         // three entries, touched in order (4,4), (4,8), (8,4)
-        cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
-        cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::Analytical);
-        cache.get_or_compute(&f, &ARRIA_10_GX1150, 8, 4, Fidelity::Analytical);
+        cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
+        cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 8, req(Fidelity::Analytical));
+        cache.get_or_compute(&f, &ARRIA_10_GX1150, 8, 4, req(Fidelity::Analytical));
         // re-touch the oldest so (4,8) becomes LRU
-        cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
         assert_eq!(cache.evict_lru(2), 1);
         assert_eq!(cache.stats().entries, 2);
-        let (_, hit) = cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        let (_, hit) = cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
         assert!(hit, "recently used survives");
-        let (_, hit) = cache.get_or_compute(&f, &ARRIA_10_GX1150, 8, 4, Fidelity::Analytical);
+        let (_, hit) = cache.get_or_compute(&f, &ARRIA_10_GX1150, 8, 4, req(Fidelity::Analytical));
         assert!(hit, "recently used survives");
-        let (_, hit) = cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::Analytical);
+        let (_, hit) = cache.get_or_compute(&f, &ARRIA_10_GX1150, 4, 8, req(Fidelity::Analytical));
         assert!(!hit, "LRU entry was evicted");
         // no-op when already under the bound
         assert_eq!(cache.evict_lru(100), 0);
@@ -1412,7 +1475,7 @@ mod tests {
         let f = flow("alexnet");
         let pairs = OptionSpace::from_flow(&f).pairs();
         let ev = Evaluator::new(2);
-        ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+        ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, req(Fidelity::Analytical));
         let path = tmp_path("evict");
         let full = ev.cache().save(&path).unwrap();
         assert_eq!(full, pairs.len());
@@ -1430,16 +1493,19 @@ mod tests {
         let tiny = flow("tiny");
         let pairs = OptionSpace::from_flow(&f).pairs();
         let ev = Evaluator::new(2);
-        ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
-        ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound);
-        ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedFullNetwork);
-        ev.evaluate_shaped(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical, 0.25);
+        ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, req(Fidelity::Analytical));
+        ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, req(Fidelity::SteppedDominantRound));
+        ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, req(Fidelity::SteppedFullNetwork));
+        let shaped_req = EvalRequest::shaped(Fidelity::Analytical, 0.25);
+        ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, shaped_req);
+        let acme = req(Fidelity::Analytical).tenant(TenantId::of("acme"));
+        ev.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, acme);
         let path = tmp_path("roundtrip");
         let written = ev.cache().save(&path).unwrap();
         assert_eq!(
             written,
-            pairs.len() + 3,
-            "grid plus the two stepped entries plus the γ-shaped one"
+            pairs.len() + 4,
+            "grid plus the two stepped entries, the γ-shaped one and the tenant one"
         );
         let loaded = EvalCache::load(&path).unwrap();
         assert_eq!(loaded.stats().entries, written);
@@ -1448,34 +1514,35 @@ mod tests {
         // a warm evaluator over the loaded cache: every candidate hits,
         // and every payload is bit-identical to a fresh computation
         let warm = Evaluator::with_cache(2, Arc::new(loaded));
-        let grid = warm.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
+        let grid = warm.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, req(Fidelity::Analytical));
         assert!(grid.iter().all(|(_, hit)| *hit), "all served from disk");
         for ((eval, _), &(ni, nl)) in grid.iter().zip(&pairs) {
             let fresh = Evaluation::compute(&f, &ARRIA_10_GX1150, ni, nl, Fidelity::Analytical);
             assert_eq!(**eval, fresh, "({ni},{nl}) drifted through the disk format");
         }
         let (stepped, hit) =
-            warm.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound);
+            warm.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, req(Fidelity::SteppedDominantRound));
         assert!(hit, "stepped entry survives the round trip");
         assert_eq!(
             *stepped,
             Evaluation::compute(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedDominantRound)
         );
         let (net, hit) =
-            warm.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedFullNetwork);
+            warm.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, req(Fidelity::SteppedFullNetwork));
         assert!(hit, "full-network entry survives the round trip");
         assert_eq!(
             *net,
             Evaluation::compute(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::SteppedFullNetwork)
         );
-        let (_, hit) =
-            warm.evaluate_shaped(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical, 0.25);
+        let (_, hit) = warm.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, shaped_req);
         assert!(hit, "γ-shaped entry survives with its exact γ bits");
-        let (_, hit) =
-            warm.evaluate_shaped(&tiny, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical, 0.75);
+        let hotter = EvalRequest::shaped(Fidelity::Analytical, 0.75);
+        let (_, hit) = warm.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, hotter);
         assert!(!hit, "a different γ never borrows it");
+        let (_, hit) = warm.evaluate(&tiny, &ARRIA_10_GX1150, 4, 4, acme);
+        assert!(hit, "tenant entry survives with its namespace intact");
         let stats = warm.cache().stats();
-        assert_eq!(stats.hits, pairs.len() + 3);
+        assert_eq!(stats.hits, pairs.len() + 4);
         assert_eq!(stats.misses, 1, "only the γ=0.75 probe recomputed");
         std::fs::remove_file(&path).ok();
     }
@@ -1488,8 +1555,8 @@ mod tests {
         let f = flow("alexnet");
         let pairs = OptionSpace::from_flow(&f).pairs();
         let ev = Evaluator::new(2);
-        ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, Fidelity::Analytical);
-        ev.evaluate_grid(&f, &CYCLONE_V_5CSEMA5, &pairs, Fidelity::Analytical);
+        ev.evaluate_grid(&f, &ARRIA_10_GX1150, &pairs, req(Fidelity::Analytical));
+        ev.evaluate_grid(&f, &CYCLONE_V_5CSEMA5, &pairs, req(Fidelity::Analytical));
         let (a, b) = (tmp_path("stable-a"), tmp_path("stable-b"));
         ev.cache().save(&a).unwrap();
         let reloaded = EvalCache::load(&a).unwrap();
@@ -1505,18 +1572,19 @@ mod tests {
 
     #[test]
     fn v1_files_load_analytical_entries_and_drop_stepped_ones() {
-        // build a v2 file, rewrite it into the v1 shape, and check the
-        // v1→v2 carry-over rules: analytical entries survive (stamp 0),
-        // stepped entries are dropped, nothing errors
+        // build a current file, rewrite it into the v1 shape, and check
+        // the v1 carry-over rules: analytical entries survive (stamp 0),
+        // stepped entries are dropped, nothing errors (the v1 parser
+        // ignores the post-v1 census_gamma/tenant fields)
         let f = flow("tiny");
         let ev = Evaluator::new(2);
-        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
-        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::SteppedDominantRound);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 8, req(Fidelity::SteppedDominantRound));
         let path = tmp_path("v1compat");
         ev.cache().save(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let v1 = text
-            .replace("\"version\": 3", "\"version\": 1")
+            .replace("\"version\": 4", "\"version\": 1")
             .replace("\"fidelity\": \"analytical\"", "\"stepped\": false")
             .replace(
                 "\"fidelity\": \"stepped-dominant-round\"",
@@ -1527,13 +1595,14 @@ mod tests {
         let loaded = EvalCache::load(&path).unwrap();
         assert_eq!(loaded.stats().entries, 1, "stepped v1 entry dropped");
         let warm = Evaluator::with_cache(2, Arc::new(loaded));
-        let (eval, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        let (eval, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
         assert!(hit, "analytical v1 entry carried over");
         assert_eq!(
             *eval,
             Evaluation::compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical)
         );
-        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::SteppedDominantRound);
+        let (_, hit) =
+            warm.evaluate(&f, &ARRIA_10_GX1150, 4, 8, req(Fidelity::SteppedDominantRound));
         assert!(!hit, "dropped stepped entry recomputes");
         std::fs::remove_file(&path).ok();
     }
@@ -1546,26 +1615,92 @@ mod tests {
         // contradict a fresh computation)
         let f = flow("tiny");
         let ev = Evaluator::new(2);
-        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
-        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::SteppedFullNetwork);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 8, req(Fidelity::SteppedFullNetwork));
         let path = tmp_path("v2compat");
         ev.cache().save(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        // a v2 entry is the v3 shape minus the census_gamma field
+        // a v2 entry is the v4 shape minus the census_gamma and tenant
+        // fields
         let v2 = text
-            .replace("\"version\": 3", "\"version\": 2")
-            .replace("\"census_gamma\": 0,", "");
+            .replace("\"version\": 4", "\"version\": 2")
+            .replace("\"census_gamma\": 0,", "")
+            .replace("\"tenant\": \"0000000000000000\",", "");
         assert_ne!(text, v2, "rewrite must land");
         std::fs::write(&path, &v2).unwrap();
         let loaded = EvalCache::load(&path).unwrap();
         assert_eq!(loaded.stats().entries, 1, "stepped v2 entry dropped");
         let warm = Evaluator::with_cache(2, Arc::new(loaded));
-        let (eval, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        let (eval, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
         assert!(hit, "analytical v2 entry carried over at γ = 0");
         let fresh = Evaluation::compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
         assert_eq!(*eval, fresh);
-        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 8, Fidelity::SteppedFullNetwork);
+        let (_, hit) =
+            warm.evaluate(&f, &ARRIA_10_GX1150, 4, 8, req(Fidelity::SteppedFullNetwork));
         assert!(!hit, "dropped stepped entry recomputes");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v3_files_carry_every_entry_into_the_default_namespace() {
+        // v3 files predate only the tenant key component; analytical,
+        // stepped and γ-shaped entries all carry over into tenant 0
+        let f = flow("tiny");
+        let ev = Evaluator::new(2);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 8, req(Fidelity::SteppedFullNetwork));
+        let shaped_req = EvalRequest::shaped(Fidelity::Analytical, 0.25);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 8, 4, shaped_req);
+        let path = tmp_path("v3compat");
+        ev.cache().save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // a v3 entry is the v4 shape minus the tenant field
+        let v3 = text
+            .replace("\"version\": 4", "\"version\": 3")
+            .replace("\"tenant\": \"0000000000000000\",", "");
+        assert_ne!(text, v3, "rewrite must land");
+        std::fs::write(&path, &v3).unwrap();
+        let loaded = EvalCache::load(&path).unwrap();
+        assert_eq!(loaded.stats().entries, 3, "every v3 entry carries over");
+        let warm = Evaluator::with_cache(2, Arc::new(loaded));
+        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
+        assert!(hit, "analytical v3 entry carried over");
+        let (_, hit) =
+            warm.evaluate(&f, &ARRIA_10_GX1150, 4, 8, req(Fidelity::SteppedFullNetwork));
+        assert!(hit, "stepped v3 entry carried over");
+        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 8, 4, shaped_req);
+        assert!(hit, "γ-shaped v3 entry carried over with its exact γ");
+        let other = req(Fidelity::Analytical).tenant(TenantId::of("acme"));
+        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, other);
+        assert!(!hit, "v3 entries land in the default namespace only");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tenants_namespace_the_cache_and_survive_disk() {
+        let f = flow("tiny");
+        let ev = Evaluator::new(2);
+        let base = req(Fidelity::Analytical);
+        let acme = base.tenant(TenantId::of("acme"));
+        let zenith = base.tenant(TenantId::of("zenith"));
+        assert_eq!(TenantId::of(""), TenantId::DEFAULT);
+        assert_ne!(TenantId::of("acme"), TenantId::of("zenith"));
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, base);
+        let (acme_eval, hit) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, acme);
+        assert!(!hit, "another tenant's namespace must miss");
+        let (_, hit) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, acme);
+        assert!(hit, "same tenant hits its own namespace");
+        // the payload itself is tenant-independent
+        let (default_eval, _) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, base);
+        assert_eq!(*acme_eval, *default_eval);
+        // namespaces round-trip through disk intact
+        let path = tmp_path("tenant");
+        assert_eq!(ev.cache().save(&path).unwrap(), 2);
+        let warm = Evaluator::with_cache(2, Arc::new(EvalCache::load(&path).unwrap()));
+        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, acme);
+        assert!(hit, "tenant entry survives the round trip");
+        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, zenith);
+        assert!(!hit, "a third tenant still misses");
         std::fs::remove_file(&path).ok();
     }
 
@@ -1621,7 +1756,7 @@ mod tests {
         // agrees with its payload, so the whole file is refused
         let f = flow("tiny");
         let ev = Evaluator::new(2);
-        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
         let path = tmp_path("tamper");
         ev.cache().save(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();

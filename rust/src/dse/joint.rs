@@ -33,7 +33,7 @@ use crate::ir::{ComputationFlow, Graph};
 use crate::quant::{self, LayerQuant, QuantSpec};
 use crate::util::rng::Rng;
 
-use super::eval::{self, Evaluator, Fidelity};
+use super::eval::{self, EvalRequest, Evaluator, Fidelity};
 use super::options::OptionSpace;
 
 /// m_w sweep range (8-bit codes admit at most 7 fraction bits).
@@ -138,19 +138,16 @@ pub fn explore_with(
         device,
         thresholds,
         cfg,
-        Fidelity::Analytical,
-        0.0,
+        EvalRequest::at(Fidelity::Analytical),
     )
 }
 
-/// Joint exploration at an explicit [`Fidelity`] and census-reward γ
-/// for the hardware queries (the quantization sweep is
-/// fidelity-independent). With γ = 0, stepped modes leave
-/// cycle-accurate censuses in the memo for every visited option without
-/// changing the agent's trajectory; with γ > 0 under
-/// `SteppedFullNetwork` the composite score gains the census term:
-/// `β·F_avg − λ·E_q(m_w) − γ·bottleneck_stall_fraction`.
-#[allow(clippy::too_many_arguments)]
+/// Joint exploration under an explicit [`EvalRequest`] for the hardware
+/// queries (the quantization sweep is fidelity-independent). With γ = 0,
+/// stepped modes leave cycle-accurate censuses in the memo for every
+/// visited option without changing the agent's trajectory; with γ > 0
+/// under `SteppedFullNetwork` the composite score gains the census
+/// term: `β·F_avg − λ·E_q(m_w) − γ·bottleneck_stall_fraction`.
 pub fn explore_with_fidelity(
     evaluator: &Evaluator,
     graph: &Graph,
@@ -158,8 +155,7 @@ pub fn explore_with_fidelity(
     device: &Device,
     thresholds: Thresholds,
     cfg: JointConfig,
-    fidelity: Fidelity,
-    census_gamma: f64,
+    req: EvalRequest,
 ) -> Result<JointResult> {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
@@ -188,8 +184,7 @@ pub fn explore_with_fidelity(
         // marks infeasible
         let (f_avg, stall) = *visited.entry((ni, nl)).or_insert_with(|| {
             *queries += 1;
-            let (eval, hit) =
-                evaluator.evaluate_shaped(flow, device, ni, nl, fidelity, census_gamma);
+            let (eval, hit) = evaluator.evaluate(flow, device, ni, nl, req);
             if hit {
                 *cache_hits += 1;
             }
@@ -208,7 +203,7 @@ pub fn explore_with_fidelity(
             return (-1.0, false);
         }
         let score =
-            super::reward::BETA * f_avg - cfg.lambda * err_of(mi) - census_gamma * stall;
+            super::reward::BETA * f_avg - cfg.lambda * err_of(mi) - req.census_gamma * stall;
         (score, true)
     };
 
@@ -353,8 +348,7 @@ mod tests {
             &ARRIA_10_GX1150,
             Thresholds::default(),
             cfg,
-            crate::dse::Fidelity::SteppedDominantRound,
-            0.0,
+            EvalRequest::at(crate::dse::Fidelity::SteppedDominantRound),
         )
         .unwrap();
         assert_eq!(a.best, b.best);
@@ -376,8 +370,7 @@ mod tests {
                 &ARRIA_10_GX1150,
                 Thresholds::default(),
                 JointConfig::default(),
-                crate::dse::Fidelity::SteppedFullNetwork,
-                0.5,
+                EvalRequest::shaped(crate::dse::Fidelity::SteppedFullNetwork, 0.5),
             )
             .unwrap()
         };

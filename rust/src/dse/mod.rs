@@ -4,13 +4,15 @@
 //!
 //! All explorers score candidates through [`eval`] — a shared
 //! multi-threaded evaluation core with a process-wide memo cache keyed
-//! on `(model fingerprint, device fingerprint, N_i, N_l, fidelity)`.
-//! Brute force fans its grid out across the worker pool (bit-identical
-//! results to the sequential path, validated by tests); the sequential
-//! RL/joint agents go through the same cache so revisited candidates —
-//! and whole re-explorations, as in fleet fits — cost one lookup. Every
-//! explorer also runs at an explicit [`Fidelity`] and census-reward γ
-//! (`explore_with_fidelity`): with γ = 0 the stepped modes attach
+//! on `(model fingerprint, device fingerprint, N_i, N_l, fidelity,
+//! census γ, tenant)`. Brute force fans its grid out across the worker
+//! pool (bit-identical results to the sequential path, validated by
+//! tests); the sequential RL/joint agents go through the same cache so
+//! revisited candidates — and whole re-explorations, as in fleet fits —
+//! cost one lookup. Every explorer also runs under an explicit
+//! [`EvalRequest`] naming the [`Fidelity`], census-reward γ and
+//! [`TenantId`] namespace (`explore_with_fidelity`): with γ = 0 the
+//! stepped modes attach
 //! cycle-accurate censuses to each scored candidate without changing the
 //! chosen design or trace — feasibility and F_avg come from the
 //! estimator either way — while γ > 0 under `SteppedFullNetwork` feeds
@@ -28,7 +30,9 @@ pub mod rl;
 pub mod specialize;
 
 pub use brute::DseResult;
-pub use eval::{CacheStats, EvalCache, Evaluation, Evaluator, Fidelity, ThreadPool};
+pub use eval::{
+    CacheStats, EvalCache, EvalRequest, Evaluation, Evaluator, Fidelity, TenantId, ThreadPool,
+};
 pub use joint::{JointConfig, JointResult};
 pub use options::OptionSpace;
 pub use reward::RewardShaper;

@@ -25,7 +25,7 @@ use crate::ir::ComputationFlow;
 use crate::util::rng::Rng;
 
 use super::brute::DseResult;
-use super::eval::{self, Evaluator, Fidelity};
+use super::eval::{self, EvalRequest, Evaluator, Fidelity};
 use super::options::OptionSpace;
 use super::reward::RewardShaper;
 
@@ -81,33 +81,38 @@ pub fn explore_with(
     thresholds: Thresholds,
     cfg: RlConfig,
 ) -> DseResult {
-    explore_with_fidelity(evaluator, flow, device, thresholds, cfg, Fidelity::Analytical, 0.0)
+    explore_with_fidelity(
+        evaluator,
+        flow,
+        device,
+        thresholds,
+        cfg,
+        EvalRequest::at(Fidelity::Analytical),
+    )
 }
 
-/// RL-DSE at an explicit [`Fidelity`] and census-reward γ. With
-/// `census_gamma == 0` the agent's trajectory, choice and query count
-/// are fidelity-independent (rewards come from the estimator); stepped
+/// RL-DSE under an explicit [`EvalRequest`]. With `req.census_gamma ==
+/// 0` the agent's trajectory, choice and query count are
+/// fidelity-independent (rewards come from the estimator); stepped
 /// modes additionally leave a cycle-accurate census in the memo for
 /// every state the agent actually visited. With γ > 0 under
 /// `SteppedFullNetwork` the Q-learning reward becomes the shaped
 /// `β·F_avg − γ·bottleneck_stall_fraction` of Algorithm 1's census
 /// extension ([`RewardShaper::eval_censused`]).
-#[allow(clippy::too_many_arguments)]
 pub fn explore_with_fidelity(
     evaluator: &Evaluator,
     flow: &ComputationFlow,
     device: &Device,
     thresholds: Thresholds,
     cfg: RlConfig,
-    fidelity: Fidelity,
-    census_gamma: f64,
+    req: EvalRequest,
 ) -> DseResult {
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let (ni_n, nl_n) = (space.ni.len(), space.nl.len());
     let mut rng = Rng::new(cfg.seed);
     let mut q = vec![[0f64; N_ACTIONS]; ni_n * nl_n];
-    let mut shaper = RewardShaper::with_census(thresholds, census_gamma);
+    let mut shaper = RewardShaper::with_census(thresholds, req.census_gamma);
     // per visited state: was it feasible? (tracked explicitly — under
     // γ > 0 a feasible state's shaped reward can be negative, so the
     // sign of the stored reward no longer implies infeasibility)
@@ -132,8 +137,7 @@ pub fn explore_with_fidelity(
             // and -1 for known-infeasible ones
             return if was_feasible { 0.0 } else { -1.0 };
         }
-        let (eval, hit) =
-            evaluator.evaluate_shaped(flow, device, ni, nl, fidelity, census_gamma);
+        let (eval, hit) = evaluator.evaluate(flow, device, ni, nl, req);
         *queries += 1;
         if hit {
             *cache_hits += 1;
@@ -317,15 +321,20 @@ mod tests {
             &ARRIA_10_GX1150,
             th,
             cfg,
-            Fidelity::SteppedFullNetwork,
-            0.0,
+            EvalRequest::at(Fidelity::SteppedFullNetwork),
         );
         assert_eq!(a.best, b.best);
         assert_eq!(a.trace, b.trace);
         assert_eq!(a.queries, b.queries);
         // and the visited states' censuses are in the memo
         let (ni, nl) = b.best.unwrap();
-        let (eval, hit) = ev.evaluate(&f, &ARRIA_10_GX1150, ni, nl, Fidelity::SteppedFullNetwork);
+        let (eval, hit) = ev.evaluate(
+            &f,
+            &ARRIA_10_GX1150,
+            ni,
+            nl,
+            EvalRequest::at(Fidelity::SteppedFullNetwork),
+        );
         assert!(hit);
         assert!(eval.stepped_network.is_some());
     }
@@ -345,8 +354,7 @@ mod tests {
                 &ARRIA_10_GX1150,
                 th,
                 cfg,
-                Fidelity::SteppedFullNetwork,
-                0.5,
+                EvalRequest::shaped(Fidelity::SteppedFullNetwork, 0.5),
             )
         };
         let a = run();

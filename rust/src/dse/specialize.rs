@@ -47,7 +47,8 @@ use std::collections::HashMap;
 use crate::estimator::{estimate, Device, ResourceEstimate, Thresholds};
 use crate::ir::ComputationFlow;
 use crate::sim::{
-    scheduled_round_work, slice_resident_allowed, step_round, NetworkStepReport, WeightSchedule,
+    scheduled_round_work, simulate_layer, slice_resident_allowed, step_round, NetworkStepReport,
+    SimReport, WeightSchedule,
 };
 
 use super::options::{MAX_NI, MAX_NL, MIN_OPT};
@@ -126,6 +127,40 @@ impl SpecializationReport {
     /// How many rounds the pass actually changed.
     pub fn specialized_rounds(&self) -> usize {
         self.layers.iter().filter(|l| l.specialized()).count()
+    }
+
+    /// Per-layer latency breakdown of the specialized network under the
+    /// *analytical* simulator: each round re-simulated at its own
+    /// specialized option, priced at the envelope estimate (whose clock
+    /// is the uniform winner's, by construction). The report's
+    /// `(ni, nl)` is the envelope — what the lane array must be
+    /// provisioned for — so
+    /// [`fig6_specialized`](crate::report::fig6_specialized) renders
+    /// the specialized network the same way Fig. 6 renders a uniform
+    /// design. The cycle counts here are the analytical model's, not
+    /// the stepped census's ([`LayerSpecialization::cycles`]); the two
+    /// columns answer different questions (closed-form breakdown vs
+    /// cycle-stepped ground truth) and the tables label them as such.
+    pub fn analytical_breakdown(&self, flow: &ComputationFlow, device: &Device) -> SimReport {
+        let layers: Vec<_> = self
+            .layers
+            .iter()
+            .zip(&flow.layers)
+            .map(|(l, layer)| simulate_layer(layer, device, &self.envelope_estimate, l.ni, l.nl))
+            .collect();
+        let total_cycles = layers.iter().map(|l| l.cycles).sum();
+        let total_millis = layers.iter().map(|l| l.millis).sum();
+        SimReport {
+            model: flow.model_name.clone(),
+            device: device.name.to_string(),
+            ni: self.envelope.0,
+            nl: self.envelope.1,
+            fmax_mhz: self.fmax_mhz,
+            layers,
+            total_cycles,
+            total_millis,
+            gops: flow.gops(),
+        }
     }
 }
 
@@ -386,6 +421,28 @@ mod tests {
         assert_eq!(rep.layers.len(), flow.layers.len());
         for l in &rep.layers {
             assert!(l.cycles <= l.uniform_cycles);
+        }
+    }
+
+    #[test]
+    fn analytical_breakdown_renders_the_specialized_network() {
+        let (flow, est, census) = setup("alexnet", &ARRIA_10_GX1150);
+        let rep = specialize(&flow, &ARRIA_10_GX1150, &Thresholds::default(), &est, &census);
+        let sim = rep.analytical_breakdown(&flow, &ARRIA_10_GX1150);
+        assert_eq!(sim.layers.len(), rep.layers.len());
+        assert_eq!((sim.ni, sim.nl), rep.envelope);
+        assert_eq!(sim.fmax_mhz, rep.fmax_mhz);
+        assert_eq!(sim.model, flow.model_name);
+        assert!(sim.total_millis > 0.0);
+        assert_eq!(sim.total_cycles, sim.layers.iter().map(|l| l.cycles).sum::<u64>());
+        // rounds the pass left at the uniform option reproduce the
+        // uniform analytical breakdown exactly (alexnet/A10 has zero
+        // envelope growth, so the estimates — and clocks — coincide)
+        let uniform = crate::sim::simulate(&flow, &ARRIA_10_GX1150, est.ni, est.nl);
+        for ((s, u), l) in sim.layers.iter().zip(&uniform.layers).zip(&rep.layers) {
+            if (l.ni, l.nl) == rep.uniform {
+                assert_eq!(s.cycles, u.cycles, "{}", l.label);
+            }
         }
     }
 

@@ -33,15 +33,23 @@
 //! latency; [`runtime`] runs the AOT-compiled JAX/Pallas emulation path
 //! on the PJRT CPU client (behind the `pjrt` feature; the default build
 //! substitutes an API-identical stub); [`coordinator`] wires model
-//! loading, the legacy report views and the emulation-inference server
-//! into the end-to-end flow the CLI and examples drive.
+//! loading and the legacy report views into the end-to-end flow the CLI
+//! and examples drive, and hosts [`coordinator::service`] — the
+//! long-lived compile-service daemon that multiplexes concurrent
+//! [`coordinator::service::JobSpec`] submissions and batched inference
+//! requests onto one shared evaluator, with admission control,
+//! per-tenant fairness, streamed [`coordinator::service::Event`]s and a
+//! replayable reducer log (`serve` on the CLI).
 //!
 //! Exploration scales through [`dse::eval`], the shared evaluation
 //! core: a `std::thread` + channel worker pool fans candidate scoring
 //! out across cores (bit-identical results to the sequential path) and
 //! a memo cache keyed on `(model fingerprint, device fingerprint, N_i,
-//! N_l, fidelity, census γ)` deduplicates the estimator + simulator
-//! queries that the RL/joint agents revisit constantly. The memo
+//! N_l, fidelity, census γ, tenant)` — scoring knobs travel as one
+//! [`dse::EvalRequest`], and the [`dse::TenantId`] namespace keeps
+//! multi-tenant service traffic from cross-contaminating memo entries —
+//! deduplicates the estimator + simulator queries that the RL/joint
+//! agents revisit constantly. The memo
 //! persists: the FNV fingerprints are process-stable, so
 //! [`dse::EvalCache`] serializes to a versioned, corruption-tolerant
 //! JSON file (`--cache-file` on the CLI, LRU-bounded by

@@ -7,7 +7,7 @@
 //!   sweep     explore every (model, device) pair: rankings + Pareto frontier
 //!   synth     full (simulated) synthesis flow: DSE + fit + latency
 //!   emulate   emulation mode: run the AOT artifacts through PJRT
-//!   serve     batched emulation-inference server demo
+//!   serve     compile-service daemon demo: compile jobs + inference lane
 //!   tables    regenerate the paper's Tables 1-4 + Fig. 6
 //!   devices   list the FPGA device database
 //!
@@ -23,7 +23,8 @@
 use anyhow::{anyhow, bail, Result};
 
 use cnn2gate::cli::Args;
-use cnn2gate::coordinator::{pipeline, InferenceServer, ServerConfig};
+use cnn2gate::coordinator::service::{Event, JobState};
+use cnn2gate::coordinator::{pipeline, CompileService, JobSpec, ServiceConfig};
 use cnn2gate::dse::{brute, rl, Fidelity, RlConfig};
 use cnn2gate::estimator::{device, estimate};
 use cnn2gate::ir::ComputationFlow;
@@ -31,9 +32,9 @@ use cnn2gate::metrics;
 use cnn2gate::onnx::zoo;
 use cnn2gate::quant::QuantSpec;
 use cnn2gate::report::{
-    baselines, comparison_table, fig6, fleet_table, specialization_table, stepped_census_table,
-    sweep_best_device_table, sweep_best_model_table, sweep_pareto_table, sweep_table, table1,
-    table2,
+    baselines, comparison_table, fig6, fig6_specialized, fleet_table, specialization_table,
+    stepped_census_table, sweep_best_device_table, sweep_best_model_table, sweep_pareto_table,
+    sweep_table, table1, table2,
 };
 use cnn2gate::runtime::{load_golden, Manifest, Tensor};
 use cnn2gate::session::{CompileJob, Session, SessionBuilder};
@@ -173,6 +174,9 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("artifacts", "DIR"),
             opt("requests", "N"),
             opt("batch", "B"),
+            opt("workers", "N"),
+            opt("queue", "N"),
+            opt("compile-models", "m1,m2,..."),
         ],
         switches: &[],
         run: cmd_serve,
@@ -206,7 +210,11 @@ census's bottleneck stall fraction (0 = the paper's Algorithm 1; the
 stall term is live under stepped-full fidelity). `--cache-max-entries N`
 LRU-evicts the --cache-file before saving. `--json` on
 synth/fit-fleet/sweep emits the stable machine-readable outcome document
-instead of tables.
+instead of tables. `serve` runs the in-process compile-service daemon:
+`--compile-models m1,m2` submits fleet compile jobs that stream typed
+admission/progress events (`--workers`/`--queue` bound concurrency and
+admission), while `--requests N` inferences ride the same daemon's
+batched emulation lane when PJRT artifacts exist.
 ";
 
 /// The USAGE text, generated from [`SUBCOMMANDS`] so it cannot drift
@@ -361,15 +369,14 @@ fn cmd_dse(args: &Args) -> Result<()> {
     // the sequential seed path (baseline, bypasses the cache).
     let session = open_session(args)?;
     let th = session.thresholds();
-    let fidelity = session.fidelity();
-    let census_gamma = session.census_gamma();
+    let req = session.request();
     let evaluator = session.evaluator();
     let result = match CompileJob::explorer_from_args(args)? {
         Explorer::BruteForce if args.has("seq") => {
-            if fidelity != Fidelity::Analytical {
+            if req.fidelity != Fidelity::Analytical {
                 bail!("--seq is the analytical seed path; drop --seq to use --fidelity");
             }
-            if census_gamma != 0.0 {
+            if req.census_gamma != 0.0 {
                 bail!("--seq is the plain Algorithm-1 seed path; drop --seq to use --census-gamma");
             }
             brute::explore_seq(&flow, dev, th)
@@ -377,15 +384,13 @@ fn cmd_dse(args: &Args) -> Result<()> {
         Explorer::Reinforcement if args.has("seq") => {
             bail!("--seq applies to the brute-force explorer (use --explorer bf); RL is inherently sequential")
         }
-        Explorer::BruteForce => {
-            brute::explore_with_fidelity(evaluator, &flow, dev, th, fidelity, census_gamma)
-        }
+        Explorer::BruteForce => brute::explore_with_fidelity(evaluator, &flow, dev, th, req),
         Explorer::Reinforcement => {
             let cfg = RlConfig {
                 seed: args.get_usize("seed", 0xD5E)? as u64,
                 ..RlConfig::default()
             };
-            rl::explore_with_fidelity(evaluator, &flow, dev, th, cfg, fidelity, census_gamma)
+            rl::explore_with_fidelity(evaluator, &flow, dev, th, cfg, req)
         }
     };
     println!("device: {}", dev.name);
@@ -542,6 +547,12 @@ fn cmd_synth(args: &Args) -> Result<()> {
             }
             if let Some(spec) = &rep.specialization {
                 println!("{}", specialization_table(rep, spec).render());
+                // Fig. 6 again, at the specialized design: the
+                // analytical breakdown with each round at its own option
+                let flow = ComputationFlow::extract(&pipeline::load_model(model, quantize)?)
+                    .map_err(|e| anyhow!("{e}"))?;
+                let sdim = spec.analytical_breakdown(&flow, dev);
+                println!("{}", fig6_specialized(&sdim, spec).render());
             }
         }
         _ => println!("Does not fit on {}", rep.device),
@@ -594,10 +605,14 @@ fn cmd_emulate(args: &Args) -> Result<()> {
     }
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let model = args.get("model").unwrap_or("lenet5");
-    let dir = artifacts_dir(args);
-    let manifest = Manifest::load(&dir)?;
+/// Start the compile service with its inference lane bound to
+/// `model`'s artifact, returning the input shape the demo feeds it.
+fn start_infer_service(
+    dir: &std::path::Path,
+    model: &str,
+    cfg: ServiceConfig,
+) -> Result<(CompileService, Vec<usize>)> {
+    let manifest = Manifest::load(dir)?;
     let art = manifest
         .model(model)
         .ok_or_else(|| anyhow!("model '{model}' not in manifest"))?;
@@ -605,36 +620,110 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(g) => load_golden(g)?.params,
         None => pipeline::synthetic_weights(art, 7),
     };
-    let n = args.get_usize("requests", 32)?;
-    let cfg = ServerConfig {
+    let service = CompileService::start_with_inference(cfg, art, weights)?;
+    Ok((service, art.input.shape.clone()))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = ServiceConfig {
+        workers: args.get_usize("workers", 2)?,
+        queue_capacity: args.get_usize("queue", 64)?,
         max_batch: args.get_usize("batch", 8)?,
-        ..ServerConfig::default()
+        ..ServiceConfig::default()
     };
-    let server = InferenceServer::start(art, weights, cfg)?;
-    let mut rng = Rng::new(11);
-    let numel: usize = art.input.shape.iter().product();
-    for _ in 0..n {
-        let input = match server.out_dtype() {
-            cnn2gate::ir::DType::F32 => {
-                Tensor::F32(art.input.shape.clone(), rng.tensor_f32(numel))
-            }
-            _ => Tensor::I32(
-                art.input.shape.clone(),
-                (0..numel).map(|_| rng.range_i64(-128, 127) as i32).collect(),
-            ),
-        };
-        server.infer(input)?;
+    let compile_models = args.get_list("compile-models", &[]);
+    let model = args.get("model").unwrap_or("lenet5");
+    let dir = artifacts_dir(args);
+
+    // One daemon serves both lanes. Without --compile-models the
+    // inference lane is the whole demo, so its startup errors stay
+    // fatal (the seed's behavior); with compile work queued the lane
+    // is best-effort and the daemon comes up without it.
+    let (service, input_shape) = match start_infer_service(&dir, model, cfg) {
+        Ok((service, shape)) => (service, Some(shape)),
+        Err(e) if compile_models.is_empty() => return Err(e),
+        Err(e) => {
+            eprintln!("note: inference lane disabled — {e:#}");
+            (CompileService::start(cfg), None)
+        }
+    };
+
+    // Compile lane: submit every --compile-models entry through the
+    // shared daemon, then stream each job's typed lifecycle events
+    // (progress throttled to every tenth of the grid).
+    let mut tickets = Vec::with_capacity(compile_models.len());
+    for name in &compile_models {
+        let job = CompileJob::builder()
+            .model(pipeline::load_model(name, false)?)
+            .all_devices()
+            .explorer(Explorer::BruteForce)
+            .build()?;
+        let ticket = service.submit(JobSpec::new(job))?;
+        println!("{}: accepted (compile {name}, fleet)", ticket.id());
+        tickets.push(ticket);
     }
-    let stats = server.shutdown();
-    println!(
-        "served {} requests in {} batches: exec p50 {:.2} ms p99 {:.2} ms | e2e p50 {:.2} ms p99 {:.2} ms",
-        stats.served,
-        stats.batches,
-        stats.exec.p50_ms,
-        stats.exec.p99_ms,
-        stats.e2e.p50_ms,
-        stats.e2e.p99_ms
-    );
+    for ticket in &tickets {
+        let mut last_decile = 0;
+        loop {
+            let event = ticket.recv()?;
+            match &event {
+                Event::Progress { scored, total, .. } => {
+                    let decile = 10 * scored / (*total).max(1);
+                    if decile > last_decile {
+                        last_decile = decile;
+                        println!("{}", event.describe());
+                    }
+                }
+                _ => println!("{}", event.describe()),
+            }
+            if event.is_terminal() {
+                break;
+            }
+        }
+    }
+
+    // Inference lane: push synthetic frames through the same daemon.
+    if let Some(shape) = input_shape {
+        let n = args.get_usize("requests", 32)?;
+        let numel: usize = shape.iter().product();
+        let mut rng = Rng::new(11);
+        for _ in 0..n {
+            let input = match service.out_dtype() {
+                Some(cnn2gate::ir::DType::F32) => Tensor::F32(shape.clone(), rng.tensor_f32(numel)),
+                _ => Tensor::I32(
+                    shape.clone(),
+                    (0..numel).map(|_| rng.range_i64(-128, 127) as i32).collect(),
+                ),
+            };
+            service.infer(input)?;
+        }
+    }
+
+    let report = service.shutdown();
+    if !tickets.is_empty() {
+        let finished = report
+            .reducer
+            .jobs()
+            .filter(|(_, r)| r.state == JobState::Finished)
+            .count();
+        println!(
+            "compile lane: {} jobs, {} finished, {} events logged",
+            report.reducer.jobs().count(),
+            finished,
+            report.reducer.log().len()
+        );
+    }
+    if let Some(stats) = report.infer {
+        println!(
+            "served {} requests in {} batches: exec p50 {:.2} ms p99 {:.2} ms | e2e p50 {:.2} ms p99 {:.2} ms",
+            stats.served,
+            stats.batches,
+            stats.exec.p50_ms,
+            stats.exec.p99_ms,
+            stats.e2e.p50_ms,
+            stats.e2e.p99_ms
+        );
+    }
     Ok(())
 }
 

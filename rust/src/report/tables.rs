@@ -478,6 +478,47 @@ pub fn fig6(rep: &SimReport) -> Table {
     t
 }
 
+/// Fig. 6 at the specialized design (the `synth --specialize` path):
+/// the per-layer breakdown of
+/// [`analytical_breakdown`](crate::dse::SpecializationReport::analytical_breakdown)
+/// with each round's own option and weight schedule alongside the bars,
+/// so the figure renders the specialized network rather than the
+/// uniform winner.
+pub fn fig6_specialized(
+    rep: &SimReport,
+    spec: &crate::dse::SpecializationReport,
+) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Fig. 6 (specialized): per-layer execution time, {} on {} from uniform ({},{})",
+            rep.model, rep.device, spec.uniform.0, spec.uniform.1
+        ),
+        &["Round", "Option (Ni,Nl)", "Schedule", "Time (ms)", "Bound", "Bar"],
+    );
+    let max_ms = rep
+        .layers
+        .iter()
+        .map(|l| l.millis)
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    for (l, s) in rep.layers.iter().zip(&spec.layers) {
+        let width = ((l.millis / max_ms) * 40.0).round() as usize;
+        t.row(&[
+            l.label.clone(),
+            format!("({},{})", s.ni, s.nl),
+            crate::sim::schedule_tag(s.schedule).to_string(),
+            format!("{:.3}", l.millis),
+            if l.memory_bound { "memory" } else { "compute" }.into(),
+            "#".repeat(width.max(1)),
+        ]);
+    }
+    t.footnote(format!(
+        "total {:.2} ms at {:.0} MHz; envelope ({},{})",
+        rep.total_millis, rep.fmax_mhz, rep.ni, rep.nl
+    ));
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -657,6 +698,28 @@ mod tests {
         assert_eq!(t.rows.len(), 5); // 4 baselines + ours
         assert!(s.contains("This work"));
         assert!(s.contains("fpgaConvNet"));
+    }
+
+    #[test]
+    fn fig6_specialized_renders_per_round_options_and_schedules() {
+        use crate::dse::specialize::specialize;
+        use crate::estimator::Thresholds;
+        use crate::sim::step_network;
+        let g = zoo::build("alexnet", false).unwrap();
+        let flow = ComputationFlow::extract(&g).unwrap();
+        let dse = crate::dse::brute::explore(&flow, &ARRIA_10_GX1150, Thresholds::default());
+        let est = dse.best_estimate.expect("fits");
+        let census = step_network(&flow, &ARRIA_10_GX1150, est.fmax_mhz, est.ni, est.nl);
+        let spec = specialize(&flow, &ARRIA_10_GX1150, &Thresholds::default(), &est, &census);
+        let sim = spec.analytical_breakdown(&flow, &ARRIA_10_GX1150);
+        let t = fig6_specialized(&sim, &spec);
+        assert_eq!(t.rows.len(), sim.layers.len());
+        let s = t.render();
+        assert!(s.contains("Fig. 6 (specialized)"), "{s}");
+        assert!(s.contains("slice-resident"), "{s}");
+        assert!(s.contains("streamed"), "{s}");
+        assert!(s.contains("envelope"), "{s}");
+        assert!(s.contains('#'), "{s}");
     }
 
     #[test]

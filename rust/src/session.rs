@@ -66,6 +66,7 @@
 //! ```
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -75,7 +76,8 @@ use crate::cli::Args;
 use crate::coordinator::pipeline::{FleetReport, SweepReport};
 use crate::coordinator::scheduler::{work_steal_map_seeded, StealStats};
 use crate::dse::{
-    brute, eval, rl, CacheStats, EvalCache, Evaluator, Fidelity, OptionSpace, RlConfig,
+    brute, eval, rl, CacheStats, EvalCache, EvalRequest, Evaluator, Fidelity, OptionSpace,
+    RlConfig, TenantId,
 };
 use crate::estimator::{device, synthesis_minutes, Device, Thresholds};
 use crate::ir::{ComputationFlow, Graph};
@@ -120,6 +122,7 @@ pub struct SessionBuilder {
     thresholds: Thresholds,
     fidelity: Fidelity,
     census_gamma: f64,
+    tenant: TenantId,
 }
 
 impl Default for SessionBuilder {
@@ -130,6 +133,7 @@ impl Default for SessionBuilder {
             thresholds: Thresholds::default(),
             fidelity: Fidelity::Analytical,
             census_gamma: 0.0,
+            tenant: TenantId::DEFAULT,
         }
     }
 }
@@ -235,6 +239,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Cache namespace every evaluation in the session is keyed under.
+    /// Defaults to [`TenantId::DEFAULT`] — the single-tenant namespace
+    /// the whole CLI runs in; the compile service sets a per-client
+    /// tenant so co-resident clients never share memo entries.
+    pub fn tenant(mut self, tenant: TenantId) -> SessionBuilder {
+        self.tenant = tenant;
+        self
+    }
+
     /// Build the session. With a cache file the evaluator is private and
     /// disk-seeded (tolerantly: a missing file starts cold silently, a
     /// corrupt or stale one starts cold with a [`Session::load_warning`]
@@ -258,6 +271,7 @@ impl SessionBuilder {
             thresholds: self.thresholds,
             fidelity: self.fidelity,
             census_gamma: self.census_gamma,
+            tenant: self.tenant,
             load_warning,
         }
     }
@@ -281,6 +295,7 @@ pub struct Session {
     thresholds: Thresholds,
     fidelity: Fidelity,
     census_gamma: f64,
+    tenant: TenantId,
     load_warning: Option<String>,
 }
 
@@ -308,6 +323,18 @@ impl Session {
     /// The census-reward γ every exploration in this session runs at.
     pub fn census_gamma(&self) -> f64 {
         self.census_gamma
+    }
+
+    /// The cache namespace this session's evaluations are keyed under.
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
+    }
+
+    /// The [`EvalRequest`] every evaluation in this session runs under:
+    /// the builder's fidelity, census γ and tenant namespace, as one
+    /// value.
+    pub fn request(&self) -> EvalRequest {
+        EvalRequest::shaped(self.fidelity, self.census_gamma).tenant(self.tenant)
     }
 
     pub fn cache_policy(&self) -> &CachePolicy {
@@ -339,9 +366,9 @@ impl Session {
             job.explorer,
             self.thresholds,
             job.quant.as_ref(),
-            self.fidelity,
-            self.census_gamma,
+            self.request(),
             job.specialize,
+            &ExecHooks::default(),
         )?;
         Ok(Outcome {
             explorer: job.explorer,
@@ -840,8 +867,36 @@ fn spec_to_json(spec: &crate::dse::SpecializationReport) -> Json {
 // The engine
 // ---------------------------------------------------------------------------
 
-/// What [`execute`] hands back to [`Session::run`] and the deprecated
-/// shims.
+/// Service-side hooks into [`execute`]: a cooperative cancel flag and a
+/// progress callback. Both default to absent — [`Session::run`] passes
+/// `ExecHooks::default()` and behaves exactly as before.
+///
+/// The cancel flag is checked once per prewarm chunk and once per
+/// explored pair; a set flag makes the run bail with an error whose
+/// message contains `"cancelled"`. The progress callback is invoked as
+/// `(done, total)` where `total` counts the engine's work items
+/// (prewarm chunks + explored pairs) — it runs on worker threads, so it
+/// must be `Sync`.
+#[derive(Default)]
+pub(crate) struct ExecHooks<'a> {
+    pub cancel: Option<&'a AtomicBool>,
+    pub progress: Option<&'a (dyn Fn(usize, usize) + Sync)>,
+}
+
+impl ExecHooks<'_> {
+    fn cancelled(&self) -> bool {
+        self.cancel.is_some_and(|flag| flag.load(Ordering::Relaxed))
+    }
+
+    fn report(&self, done: usize, total: usize) {
+        if let Some(notify) = self.progress {
+            notify(done, total);
+        }
+    }
+}
+
+/// What [`execute`] hands back to [`Session::run`] and the compile
+/// service's job runners.
 pub(crate) struct EngineRun {
     pub entries: Vec<SynthReport>,
     pub steals: StealStats,
@@ -872,6 +927,10 @@ fn merge_steals(a: StealStats, b: StealStats) -> StealStats {
 /// input order. A final [`EvalCache::touch_present`] pass re-stamps
 /// every grid in deterministic order so `--cache-max-entries` eviction
 /// and the saved cache bytes are scheduling-independent.
+///
+/// `req` names the [`Fidelity`], census γ and tenant namespace every
+/// candidate is scored under; `hooks` carries the compile service's
+/// cancel flag and progress callback (see [`ExecHooks`]).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn execute(
     evaluator: &Evaluator,
@@ -880,9 +939,9 @@ pub(crate) fn execute(
     explorer: Explorer,
     thresholds: Thresholds,
     quant: Option<&QuantSpec>,
-    fidelity: Fidelity,
-    census_gamma: f64,
+    req: EvalRequest,
     specialize: bool,
+    hooks: &ExecHooks,
 ) -> Result<EngineRun> {
     if models.is_empty() {
         bail!("compile job needs at least one model");
@@ -923,31 +982,38 @@ pub(crate) fn execute(
             }
         }
     }
+    // phase 2's work items, listed up front so progress totals span both
+    // phases
+    let pairs: Vec<(usize, &'static Device)> = (0..models.len())
+        .flat_map(|mi| devices.iter().map(move |&d| (mi, d)))
+        .collect();
+    let total = chunks.len() + pairs.len();
+    let done = AtomicUsize::new(0);
+
     let stamp = evaluator.cache().tick();
     let prewarm_width = chunks.len().min(eval::default_threads());
     let (_, prewarm_steals) =
         work_steal_map_seeded(&chunks, prewarm_width, |i| i, |(mi, dev, options)| {
-            for &(ni, nl) in options {
-                evaluator.cache().get_or_compute_at(
-                    stamp,
-                    &flows[*mi],
-                    dev,
-                    ni,
-                    nl,
-                    fidelity,
-                    census_gamma,
-                );
+            if hooks.cancelled() {
+                return;
             }
+            for &(ni, nl) in options {
+                evaluator.cache().get_or_compute_at(stamp, &flows[*mi], dev, ni, nl, req);
+            }
+            hooks.report(done.fetch_add(1, Ordering::Relaxed) + 1, total);
         });
+    if hooks.cancelled() {
+        bail!("compile job cancelled during prewarm");
+    }
 
     // phase 2: per-pair explorers on the same deques, all memo hits
-    let pairs: Vec<(usize, &'static Device)> = (0..models.len())
-        .flat_map(|mi| devices.iter().map(move |&d| (mi, d)))
-        .collect();
     let explore_width = pairs.len().min(2 * eval::default_threads());
     let (results, explore_steals) =
         work_steal_map_seeded(&pairs, explore_width, |i| i, |&(mi, dev)| {
-            compile_pair(
+            if hooks.cancelled() {
+                bail!("compile job cancelled");
+            }
+            let entry = compile_pair(
                 evaluator,
                 &models[mi],
                 &flows[mi],
@@ -955,10 +1021,11 @@ pub(crate) fn execute(
                 explorer,
                 thresholds,
                 quants[mi].as_ref(),
-                fidelity,
-                census_gamma,
+                req,
                 specialize,
-            )
+            )?;
+            hooks.report(done.fetch_add(1, Ordering::Relaxed) + 1, total);
+            Ok(entry)
         });
     let mut entries = Vec::with_capacity(results.len());
     for result in results {
@@ -968,9 +1035,7 @@ pub(crate) fn execute(
     // deterministic re-stamp (see the function docs)
     for (flow, grid) in flows.iter().zip(&grids) {
         for &dev in devices {
-            evaluator
-                .cache()
-                .touch_present(flow, dev, grid, fidelity, census_gamma);
+            evaluator.cache().touch_present(flow, dev, grid, req);
         }
     }
     Ok(EngineRun {
@@ -993,36 +1058,23 @@ fn compile_pair(
     explorer: Explorer,
     thresholds: Thresholds,
     quant: Option<&QuantReport>,
-    fidelity: Fidelity,
-    census_gamma: f64,
+    req: EvalRequest,
     specialize: bool,
 ) -> Result<SynthReport> {
     let dse = match explorer {
-        Explorer::BruteForce => brute::explore_with_fidelity(
-            evaluator,
-            flow,
-            device,
-            thresholds,
-            fidelity,
-            census_gamma,
-        ),
-        Explorer::Reinforcement => rl::explore_with_fidelity(
-            evaluator,
-            flow,
-            device,
-            thresholds,
-            RlConfig::default(),
-            fidelity,
-            census_gamma,
-        ),
+        Explorer::BruteForce => {
+            brute::explore_with_fidelity(evaluator, flow, device, thresholds, req)
+        }
+        Explorer::Reinforcement => {
+            rl::explore_with_fidelity(evaluator, flow, device, thresholds, RlConfig::default(), req)
+        }
     };
 
     let (estimate, synth_min, sim, stepped_network, specialization) =
         match (dse.best, &dse.best_estimate) {
             (Some((ni, nl)), Some(est)) => {
                 let minutes = synthesis_minutes(est, device);
-                let (chosen, _) =
-                    evaluator.evaluate_shaped(flow, device, ni, nl, fidelity, census_gamma);
+                let (chosen, _) = evaluator.evaluate(flow, device, ni, nl, req);
                 let specialization = match (&chosen.stepped_network, specialize) {
                     (Some(census), true) => Some(crate::dse::specialize::specialize(
                         flow,

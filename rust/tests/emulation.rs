@@ -7,7 +7,7 @@
 use std::path::{Path, PathBuf};
 
 use cnn2gate::coordinator::pipeline;
-use cnn2gate::coordinator::{InferenceServer, ServerConfig};
+use cnn2gate::coordinator::{InferenceServer, ServiceConfig};
 use cnn2gate::ir::DType;
 use cnn2gate::onnx::parser;
 use cnn2gate::runtime::{load_golden, Manifest, Runtime, Tensor};
@@ -105,9 +105,9 @@ fn server_batching_respects_max_batch() {
     let server = InferenceServer::start(
         art,
         golden.params.clone(),
-        ServerConfig {
+        ServiceConfig {
             max_batch: 4,
-            queue_depth: 64,
+            ..ServiceConfig::default()
         },
     )
     .unwrap();

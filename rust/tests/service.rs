@@ -1,0 +1,262 @@
+//! Compile-service integration tests — the PR-6 acceptance gates, from
+//! the public API only:
+//!
+//! 1. **Byte-identity under concurrency**: ≥8 mixed jobs (tiny→vgg16,
+//!    brute-force and RL, three tenants, single-device and fleet)
+//!    submitted to one daemon produce `Outcome::to_json` documents
+//!    byte-identical to solo [`Session::run`]s of the same specs.
+//! 2. **Cancellation coherence**: cancelling a job mid-run (and while
+//!    queued) leaves the shared cache loadable with a strict
+//!    [`EvalCache::load`], and a session warmed from that file
+//!    reproduces a cold run byte-for-byte.
+//! 3. **Admission control**: a full bounded queue rejects synchronously
+//!    with a reasoned error, recorded by the reducer.
+//! 4. **Replayable log**: the reducer's event log replays into the
+//!    exact final job store across mixed finished/failed outcomes.
+
+use cnn2gate::coordinator::service::{Completion, Event, JobState, Reducer};
+use cnn2gate::coordinator::{CompileService, JobSpec, ServiceConfig};
+use cnn2gate::dse::{EvalCache, Fidelity, TenantId};
+use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA5};
+use cnn2gate::onnx::zoo;
+use cnn2gate::session::{CompileJob, Session};
+use cnn2gate::synth::Explorer;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cnn2gate-service-it-{}-{tag}.json", std::process::id()))
+}
+
+/// One mixed-workload row: (model, fleet?, explorer, tenant).
+type Mix = (&'static str, bool, Explorer, &'static str);
+
+const MIX: &[Mix] = &[
+    ("tiny", false, Explorer::BruteForce, "acme"),
+    ("tiny", false, Explorer::Reinforcement, "zen"),
+    ("lenet5", true, Explorer::BruteForce, "acme"),
+    ("alexnet", false, Explorer::BruteForce, "bolt"),
+    ("alexnet", false, Explorer::Reinforcement, "zen"),
+    ("vgg16", false, Explorer::BruteForce, "bolt"),
+    ("lenet5", false, Explorer::Reinforcement, "acme"),
+    ("tiny", true, Explorer::BruteForce, "zen"),
+];
+
+fn mix_job(&(model, fleet, explorer, _): &Mix) -> CompileJob {
+    let builder = CompileJob::builder().model(zoo::build(model, false).unwrap()).explorer(explorer);
+    let builder = if fleet {
+        builder.all_devices()
+    } else {
+        builder.device(&ARRIA_10_GX1150)
+    };
+    builder.build().unwrap()
+}
+
+#[test]
+fn concurrent_mixed_jobs_match_solo_sessions_byte_for_byte() {
+    let service = CompileService::start(ServiceConfig {
+        workers: 4,
+        threads: 2,
+        ..ServiceConfig::default()
+    });
+    let tickets: Vec<_> = MIX
+        .iter()
+        .map(|row| {
+            let spec = JobSpec::new(mix_job(row)).tenant(TenantId::of(row.3));
+            service.submit(spec).unwrap()
+        })
+        .collect();
+
+    for (row, ticket) in MIX.iter().zip(&tickets) {
+        let completion = ticket.wait().unwrap();
+        let served = completion.outcome_json().unwrap_or_else(|| {
+            panic!("{:?} did not finish: {completion:?}", row);
+        });
+        // the solo reference: an independent session, same spec
+        let solo_session = Session::builder().threads(2).tenant(TenantId::of(row.3)).build();
+        let solo = solo_session.run(&mix_job(row)).unwrap().to_json().to_string_pretty();
+        assert_eq!(served, solo, "{row:?}: service vs solo outcome bytes");
+    }
+
+    let report = service.shutdown();
+    assert_eq!(report.reducer.open_jobs(), 0);
+    assert_eq!(report.reducer.jobs().count(), MIX.len());
+    for (id, record) in report.reducer.jobs() {
+        assert_eq!(record.state, JobState::Finished, "{id}");
+    }
+}
+
+#[test]
+fn cancellation_leaves_the_shared_cache_loadable_and_warm_correct() {
+    let slow_spec = || {
+        JobSpec::new(
+            CompileJob::builder()
+                .model(zoo::build("vgg16", false).unwrap())
+                .device(&ARRIA_10_GX1150)
+                .explorer(Explorer::BruteForce)
+                .build()
+                .unwrap(),
+        )
+        .fidelity(Fidelity::SteppedFullNetwork)
+        .tenant(TenantId::of("acme"))
+    };
+    let service = CompileService::start(ServiceConfig {
+        workers: 1,
+        threads: 2,
+        ..ServiceConfig::default()
+    });
+
+    // cancel mid-run: wait for the engine to report progress so some —
+    // but not all — of the grid is already in the shared cache
+    let running = service.submit(slow_spec()).unwrap();
+    loop {
+        match running.recv().unwrap() {
+            Event::Progress { .. } => break,
+            e => assert!(!e.is_terminal(), "terminal before progress: {e:?}"),
+        }
+    }
+    service.cancel(running.id()).unwrap();
+    assert_eq!(running.wait().unwrap(), Completion::Cancelled);
+
+    // cancel while queued: the single worker is busy with another slow
+    // job, so the second submission never starts
+    let blocker = service.submit(slow_spec()).unwrap();
+    let queued = service.submit(slow_spec()).unwrap();
+    service.cancel(queued.id()).unwrap();
+    assert_eq!(queued.wait().unwrap(), Completion::Cancelled);
+    service.cancel(blocker.id()).unwrap();
+    assert_eq!(blocker.wait().unwrap(), Completion::Cancelled);
+
+    // the partially-warmed cache must save and strict-load cleanly
+    let path = tmp("cancel");
+    service.evaluator().cache().save(&path).unwrap();
+    EvalCache::load(&path).unwrap_or_else(|e| {
+        panic!("cache written by a cancelled run must strict-load: {e:#}");
+    });
+    let report = service.shutdown();
+    assert_eq!(report.reducer.open_jobs(), 0);
+
+    // warm-correct: a session seeded from that file reproduces a cold
+    // run byte-for-byte — cancelled entries are real entries, not junk
+    let job = CompileJob::builder()
+        .model(zoo::build("vgg16", false).unwrap())
+        .device(&ARRIA_10_GX1150)
+        .explorer(Explorer::BruteForce)
+        .build()
+        .unwrap();
+    let builder = || {
+        Session::builder()
+            .threads(2)
+            .fidelity(Fidelity::SteppedFullNetwork)
+            .tenant(TenantId::of("acme"))
+    };
+    let cold = builder().build().run(&job).unwrap().to_json().to_string_pretty();
+    let warm_session = builder().cache_file(&path).build();
+    assert!(warm_session.load_warning().is_none(), "{:?}", warm_session.load_warning());
+    let warm = warm_session.run(&job).unwrap().to_json().to_string_pretty();
+    assert_eq!(warm, cold, "warm-from-cancelled vs cold outcome bytes");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn admission_control_rejects_when_the_bounded_queue_is_full() {
+    let slow_spec = || {
+        JobSpec::new(
+            CompileJob::builder()
+                .model(zoo::build("vgg16", false).unwrap())
+                .device(&ARRIA_10_GX1150)
+                .explorer(Explorer::BruteForce)
+                .build()
+                .unwrap(),
+        )
+        .fidelity(Fidelity::SteppedFullNetwork)
+        .tenant(TenantId::of("flood"))
+    };
+    let service = CompileService::start(ServiceConfig {
+        workers: 1,
+        queue_capacity: 1,
+        threads: 2,
+        ..ServiceConfig::default()
+    });
+    // first fills the single worker slot, second fills the whole queue
+    let running = service.submit(slow_spec()).unwrap();
+    let queued = service.submit(slow_spec()).unwrap();
+    let err = service.submit(slow_spec()).unwrap_err();
+    assert!(err.to_string().contains("rejected"), "{err:#}");
+    assert!(err.to_string().contains("queue full"), "{err:#}");
+
+    service.cancel(queued.id()).unwrap();
+    service.cancel(running.id()).unwrap();
+    assert_eq!(queued.wait().unwrap(), Completion::Cancelled);
+    assert_eq!(running.wait().unwrap(), Completion::Cancelled);
+
+    let report = service.shutdown();
+    let rejected: Vec<_> = report
+        .reducer
+        .jobs()
+        .filter(|(_, r)| r.state == JobState::Rejected)
+        .collect();
+    assert_eq!(rejected.len(), 1);
+    assert!(rejected[0].1.error.as_deref().unwrap().contains("queue full"));
+}
+
+#[test]
+fn reducer_log_replays_into_the_exact_final_store_across_mixed_outcomes() {
+    let service = CompileService::start(ServiceConfig {
+        workers: 2,
+        threads: 2,
+        ..ServiceConfig::default()
+    });
+    let ok_job = |tenant: &str| {
+        JobSpec::new(
+            CompileJob::builder()
+                .model(zoo::build("tiny", false).unwrap())
+                .device(&CYCLONE_V_5CSEMA5)
+                .explorer(Explorer::BruteForce)
+                .build()
+                .unwrap(),
+        )
+        .tenant(TenantId::of(tenant))
+    };
+    // a job that deterministically fails fast: --specialize consumes
+    // the stepped-full census, which analytical fidelity never produces
+    let bad_job = JobSpec::new(
+        CompileJob::builder()
+            .model(zoo::build("tiny", false).unwrap())
+            .device(&CYCLONE_V_5CSEMA5)
+            .explorer(Explorer::BruteForce)
+            .specialize()
+            .build()
+            .unwrap(),
+    )
+    .tenant(TenantId::of("zen"));
+
+    let a = service.submit(ok_job("acme")).unwrap();
+    let b = service.submit(ok_job("zen")).unwrap();
+    let c = service.submit(bad_job).unwrap();
+    assert!(a.wait().unwrap().outcome_json().is_some());
+    assert!(b.wait().unwrap().outcome_json().is_some());
+    let failure = match c.wait().unwrap() {
+        Completion::Failed { error } => error,
+        other => panic!("expected failure, got {other:?}"),
+    };
+    assert!(failure.contains("specialization"), "{failure}");
+
+    let report = service.shutdown();
+    let reducer = &report.reducer;
+    assert_eq!(reducer.jobs().count(), 3);
+    assert_eq!(reducer.open_jobs(), 0);
+    let failed = reducer.get(c.id()).unwrap();
+    assert_eq!(failed.state, JobState::Failed);
+    assert!(failed.outcome_json.is_none());
+    assert!(failed.error.as_deref().unwrap().contains("specialization"));
+    assert_eq!(failed.tenant, TenantId::of("zen"));
+    for id in [a.id(), b.id()] {
+        let rec = reducer.get(id).unwrap();
+        assert_eq!(rec.state, JobState::Finished);
+        assert!(rec.outcome_json.is_some());
+    }
+    // the log IS the store: replay reconstructs it exactly, and holds
+    // only lifecycle events (progress volume is deliberately excluded)
+    assert_eq!(&Reducer::replay(reducer.log()), reducer);
+    assert_eq!(reducer.log().len(), 3 + 3 + 3, "accepted + started + terminal per job");
+    assert!(reducer.log().iter().all(|e| !matches!(e, Event::Progress { .. })));
+}
