@@ -27,10 +27,8 @@ impl Args {
     ) -> Result<Args> {
         let mut out = Args::default();
         let mut it = argv.iter().peekable();
-        if let Some(first) = it.peek() {
-            if !first.starts_with("--") {
-                out.subcommand = it.next().unwrap().clone();
-            }
+        if let Some(first) = it.next_if(|a| !a.starts_with("--")) {
+            out.subcommand = first.clone();
         }
         while let Some(arg) = it.next() {
             let Some(token) = arg.strip_prefix("--") else {

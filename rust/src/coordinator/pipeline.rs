@@ -111,10 +111,12 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineResult> {
     let synth = session
         .run(&job)?
         .into_synth_report()
-        .expect("a 1x1 job yields exactly one report");
+        .ok_or_else(|| anyhow!("a 1x1 job yielded no synthesis report"))?;
     // the job owned the graph; take it back for the result
     let CompileJob { mut models, .. } = job;
-    let graph = models.pop().expect("the 1x1 job holds the model");
+    let graph = models
+        .pop()
+        .ok_or_else(|| anyhow!("the 1x1 job no longer holds its model"))?;
 
     let emulation = match &cfg.artifacts {
         Some(dir) => run_emulation(dir, &graph.name)?,

@@ -15,6 +15,7 @@
 //! milliseconds each), so a mutex pop is noise, and the offline crate
 //! set has no `crossbeam` anyway.
 
+use crate::util::sync::locked;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
@@ -71,10 +72,7 @@ where
     let queues: Vec<Mutex<VecDeque<usize>>> =
         (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
     for i in 0..items.len() {
-        queues[seed(i) % workers]
-            .lock()
-            .expect("steal queue poisoned")
-            .push_back(i);
+        locked(&queues[seed(i) % workers]).push_back(i);
     }
     let steals = AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<(usize, R)>();
@@ -86,7 +84,7 @@ where
             let tx = tx.clone();
             s.spawn(move || loop {
                 // own deque first (front: the order we were dealt)...
-                let own = queues_ref[w].lock().expect("steal queue poisoned").pop_front();
+                let own = locked(&queues_ref[w]).pop_front();
                 if let Some(i) = own {
                     let _ = tx.send((i, f_ref(&items[i])));
                     continue;
@@ -97,7 +95,7 @@ where
                     if v == w {
                         continue;
                     }
-                    let len = q.lock().expect("steal queue poisoned").len();
+                    let len = locked(q).len();
                     if len > victim.map_or(0, |(best, _)| best) {
                         victim = Some((len, v));
                     }
@@ -105,7 +103,7 @@ where
                 let Some((_, v)) = victim else {
                     break; // every deque empty: all items claimed
                 };
-                let stolen = queues_ref[v].lock().expect("steal queue poisoned").pop_back();
+                let stolen = locked(&queues_ref[v]).pop_back();
                 if let Some(i) = stolen {
                     steals_ref.fetch_add(1, Ordering::Relaxed);
                     let _ = tx.send((i, f_ref(&items[i])));
@@ -121,6 +119,7 @@ where
     }
     let results = slots
         .into_iter()
+        // analysis: allow(panic, every index is dealt to exactly one deque and executed once; a hole means `f` itself panicked in a worker thread)
         .map(|s| s.expect("work-stealing worker produced result"))
         .collect();
     (

@@ -42,6 +42,7 @@ impl InferenceServer {
     pub fn out_dtype(&self) -> DType {
         self.service
             .out_dtype()
+            // analysis: allow(panic, start() is the only constructor and it always starts the inference lane)
             .expect("adapter always starts the inference lane")
     }
 
@@ -61,6 +62,7 @@ impl InferenceServer {
         self.service
             .shutdown()
             .infer
+            // analysis: allow(panic, start() is the only constructor and it always starts the inference lane)
             .expect("adapter always starts the inference lane")
     }
 }

@@ -180,8 +180,9 @@ impl Orchestrator {
 
     fn cancel(&mut self, job: JobId) {
         if let Some(pos) = self.queue.iter().position(|q| q.id == job) {
-            let q = self.queue.remove(pos).expect("position just found");
-            self.emit(&q.events, Event::Cancelled { job });
+            if let Some(q) = self.queue.remove(pos) {
+                self.emit(&q.events, Event::Cancelled { job });
+            }
         } else if let Some(running) = self.running.get(&job) {
             // cooperative: the engine checks per chunk / per pair and
             // bails; the Done handler converts that into Cancelled
@@ -212,7 +213,9 @@ impl Orchestrator {
             let Some(pick) = kernel::pick_next(&view, &running_counts, &self.served) else {
                 return;
             };
-            let q = self.queue.remove(pick).expect("pick is in bounds");
+            let Some(q) = self.queue.remove(pick) else {
+                return; // pick_next only returns indices into `view`
+            };
             self.launch(q);
         }
     }

@@ -90,6 +90,7 @@ pub fn explore_with_fidelity(
     thresholds: Thresholds,
     req: EvalRequest,
 ) -> DseResult {
+    // analysis: allow(nondet, wall-clock feeds only the volatile wall_seconds field, never ranking or rendered bytes)
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let pairs = space.pairs();
@@ -124,6 +125,7 @@ pub fn explore_with_fidelity(
 /// order, no pool, no cache. Kept as the reference implementation the
 /// parallel explorer is validated against and as the bench baseline.
 pub fn explore_seq(flow: &ComputationFlow, device: &Device, thresholds: Thresholds) -> DseResult {
+    // analysis: allow(nondet, wall-clock feeds only the volatile wall_seconds field, never ranking or rendered bytes)
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let mut shaper = RewardShaper::new(thresholds);

@@ -38,6 +38,7 @@
 //! would starve the queue). Nothing in this crate does; fleet fan-out
 //! deliberately uses [`parallel_map`]'s scoped threads instead.
 
+// analysis: allow(nondet, the memo map is keyed lookup only; every iteration that feeds output is sorted by EvalKey::sort_key first)
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -53,6 +54,7 @@ use crate::sim::{
     NetworkStepReport, SimReport, StepReport,
 };
 use crate::util::json::{Json, JsonObj};
+use crate::util::sync::locked;
 
 /// How much simulation each candidate evaluation buys.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -310,6 +312,7 @@ struct CacheEntry {
 /// threads. Values are `Arc`ed so a hit is a pointer clone.
 #[derive(Default)]
 pub struct EvalCache {
+    // analysis: allow(nondet, keyed lookups only; to_json sorts entries before serialization)
     map: Mutex<HashMap<EvalKey, CacheEntry>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
@@ -372,14 +375,14 @@ impl EvalCache {
         device: &Device,
         fidelity: Fidelity,
     ) -> (Arc<Evaluation>, bool) {
-        if let Some(found) = self.map.lock().expect("eval cache poisoned").get_mut(&key) {
+        if let Some(found) = locked(&self.map).get_mut(&key) {
             found.last_used = found.last_used.max(stamp);
             self.hits.fetch_add(1, Ordering::Relaxed);
             return (Arc::clone(&found.eval), true);
         }
         let eval = Arc::new(Evaluation::compute(flow, device, key.ni, key.nl, fidelity));
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.map.lock().expect("eval cache poisoned");
+        let mut map = locked(&self.map);
         let entry = map.entry(key).or_insert_with(|| CacheEntry {
             eval: Arc::clone(&eval),
             last_used: 0,
@@ -405,7 +408,7 @@ impl EvalCache {
     ) -> usize {
         let stamp = self.tick();
         let (model, device) = (flow.fingerprint(), device.fingerprint());
-        let mut map = self.map.lock().expect("eval cache poisoned");
+        let mut map = locked(&self.map);
         let mut present = 0;
         for &(ni, nl) in pairs {
             let key = EvalKey {
@@ -429,13 +432,13 @@ impl EvalCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.map.lock().expect("eval cache poisoned").len(),
+            entries: locked(&self.map).len(),
         }
     }
 
     /// Drop all entries and zero the counters + clock (bench isolation).
     pub fn clear(&self) {
-        self.map.lock().expect("eval cache poisoned").clear();
+        locked(&self.map).clear();
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
         self.clock.store(0, Ordering::Relaxed);
@@ -447,7 +450,7 @@ impl EvalCache {
     /// The `--cache-max-entries` CLI knob applies this before saving, so
     /// disk caches stop growing monotonically (ROADMAP follow-up).
     pub fn evict_lru(&self, max_entries: usize) -> usize {
-        let mut map = self.map.lock().expect("eval cache poisoned");
+        let mut map = locked(&self.map);
         if map.len() <= max_entries {
             return 0;
         }
@@ -919,10 +922,7 @@ impl EvalCache {
     /// Serialize every (JSON-safe) entry. Entries are sorted by key so
     /// repeated saves of the same cache are byte-identical (diff-stable).
     pub fn to_json(&self) -> Json {
-        let mut entries: Vec<(EvalKey, Arc<Evaluation>, u64)> = self
-            .map
-            .lock()
-            .expect("eval cache poisoned")
+        let mut entries: Vec<(EvalKey, Arc<Evaluation>, u64)> = locked(&self.map)
             .iter()
             .map(|(k, e)| (*k, Arc::clone(&e.eval), e.last_used))
             .collect();
@@ -971,7 +971,7 @@ impl EvalCache {
         let cache = EvalCache::new();
         let mut newest = 0u64;
         {
-            let mut map = cache.map.lock().expect("eval cache poisoned");
+            let mut map = locked(&cache.map);
             map.reserve(rows.len());
             for (i, row) in rows.iter().enumerate() {
                 let parsed = match version {
@@ -1066,7 +1066,7 @@ impl ThreadPool {
                     // Holding the lock across recv is the standard
                     // hand-off: the holder parks until a job arrives,
                     // takes it, releases, and the next worker parks.
-                    let job = rx.lock().expect("pool queue poisoned").recv();
+                    let job = locked(&rx).recv();
                     match job {
                         Ok(job) => job(),
                         Err(_) => break, // queue closed: pool dropped
@@ -1084,16 +1084,15 @@ impl ThreadPool {
         self.workers.len()
     }
 
-    /// Queue one job. Panics if the pool is shut down (it never is while
-    /// borrowed: shutdown happens in Drop).
+    /// Queue one job. The sender is `Some` for the pool's whole borrowed
+    /// lifetime (it is only taken in `Drop`), and a failed `send` means
+    /// every worker already panicked — the job is dropped and the
+    /// caller's result loop observes the closed channel instead.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx
-            .as_ref()
-            .expect("pool live")
-            .lock()
-            .expect("pool submit side poisoned")
-            .send(Box::new(job))
-            .expect("pool workers alive");
+        let Some(tx) = self.tx.as_ref() else {
+            return; // unreachable outside Drop, which holds &mut self
+        };
+        let _ = locked(tx).send(Box::new(job));
     }
 }
 
@@ -1200,12 +1199,12 @@ impl Evaluator {
         }
         drop(tx);
         let mut slots: Vec<Option<(Arc<Evaluation>, bool)>> = vec![None; pairs.len()];
-        for _ in 0..pairs.len() {
-            let (idx, out) = rx.recv().expect("eval pool worker died");
+        while let Ok((idx, out)) = rx.recv() {
             slots[idx] = Some(out);
         }
         slots
             .into_iter()
+            // analysis: allow(panic, a hole means a pool worker panicked inside Evaluation::compute — an unrecoverable bug, not a fallible path)
             .map(|s| s.expect("every candidate evaluated"))
             .collect()
     }
@@ -1271,6 +1270,7 @@ where
     }
     slots
         .into_iter()
+        // analysis: allow(panic, the shared-cursor loop claims every index exactly once; a hole means `f` itself panicked in a worker)
         .map(|s| s.expect("scoped worker produced result"))
         .collect()
 }

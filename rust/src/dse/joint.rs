@@ -157,6 +157,7 @@ pub fn explore_with_fidelity(
     cfg: JointConfig,
     req: EvalRequest,
 ) -> Result<JointResult> {
+    // analysis: allow(nondet, wall-clock feeds only the volatile wall_seconds field, never ranking or rendered bytes)
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let errs = quant_error_curve(graph)?;
@@ -166,6 +167,7 @@ pub fn explore_with_fidelity(
 
     let mut rng = Rng::new(cfg.seed);
     let mut q = vec![[0f64; N_ACTIONS]; ni_n * nl_n * m_n];
+    // analysis: allow(nondet, run-local memo; keyed lookups only, never iterated into output)
     let mut visited: HashMap<(usize, usize), (f64, f64)> = HashMap::new(); // hw queries
     let mut queries = 0usize;
     let mut cache_hits = 0usize;

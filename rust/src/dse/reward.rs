@@ -73,6 +73,7 @@ impl RewardShaper {
             return -1.0;
         }
         let f_avg = est.f_avg();
+        // analysis: allow(float-eq, γ = 0.0 is the exact unshaped seed-path sentinel, never a computed value)
         if self.census_gamma == 0.0 {
             // γ = 0 pins the seed path: compare raw usage factors so the
             // pre-census explorers' choices reproduce bit for bit

@@ -107,6 +107,7 @@ pub fn explore_with_fidelity(
     cfg: RlConfig,
     req: EvalRequest,
 ) -> DseResult {
+    // analysis: allow(nondet, wall-clock feeds only the volatile wall_seconds field, never ranking or rendered bytes)
     let t0 = Instant::now();
     let space = OptionSpace::from_flow(flow);
     let (ni_n, nl_n) = (space.ni.len(), space.nl.len());
@@ -116,6 +117,7 @@ pub fn explore_with_fidelity(
     // per visited state: was it feasible? (tracked explicitly — under
     // γ > 0 a feasible state's shaped reward can be negative, so the
     // sign of the stored reward no longer implies infeasibility)
+    // analysis: allow(nondet, run-local memo; keyed lookups only, never iterated into output)
     let mut visited: HashMap<(usize, usize), bool> = HashMap::new();
     let mut trace = Vec::new();
     let mut queries = 0usize;

@@ -221,6 +221,7 @@ pub fn specialize(
     let mut envelope = uniform_opt;
     // memo over candidate envelopes: each unique grown option is priced
     // by the estimator once, not once per (round, candidate)
+    // analysis: allow(nondet, run-local memo; keyed lookups only, never iterated into output)
     let mut admissible: HashMap<(usize, usize), bool> = HashMap::new();
 
     for &li in &order {
@@ -274,6 +275,7 @@ pub fn specialize(
                 }
             }
         }
+        // analysis: allow(panic, the uniform option bypasses every admission filter, so the candidate loop always sets `best`)
         let (_, pick) = best.expect("the uniform option is always a candidate");
         envelope = (envelope.0.max(pick.0), envelope.1.max(pick.1));
         chosen[li] = pick;

@@ -376,6 +376,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
             if req.fidelity != Fidelity::Analytical {
                 bail!("--seq is the analytical seed path; drop --seq to use --fidelity");
             }
+            // analysis: allow(float-eq, γ = 0.0 is the exact unshaped default, not a computed value)
             if req.census_gamma != 0.0 {
                 bail!("--seq is the plain Algorithm-1 seed path; drop --seq to use --census-gamma");
             }
@@ -428,7 +429,9 @@ fn cmd_fit_fleet(args: &Args) -> Result<()> {
     if json {
         print!("{}", outcome.to_json().to_string_pretty());
     } else {
-        let rep = outcome.to_fleet_report().expect("single-model job");
+        let rep = outcome
+            .to_fleet_report()
+            .ok_or_else(|| anyhow!("fit-fleet outcome rendered no fleet view for {model}"))?;
         println!("{}", fleet_table(&rep.model, &rep.entries).render());
         match rep.best() {
             Some(best) => match (best.option(), best.latency_ms()) {
@@ -519,7 +522,9 @@ fn cmd_synth(args: &Args) -> Result<()> {
         print!("{}", outcome.to_json().to_string_pretty());
         return close_session(&session, json);
     }
-    let rep = outcome.synth_report().expect("1x1 job");
+    let rep = outcome
+        .synth_report()
+        .ok_or_else(|| anyhow!("synth outcome rendered no 1x1 report"))?;
     println!("model: {}   device: {}", rep.model, rep.device);
     match (&rep.estimate, &rep.sim) {
         (Some(est), Some(sim)) => {

@@ -163,7 +163,7 @@ pub fn build(name: &str, with_weights: bool) -> Option<Graph> {
                     inputs: vec![tname.clone(), wname, bname],
                     outputs: vec![out.clone()],
                 });
-                let (oh, ow) = attrs.out_hw(shape[1], shape[2]).expect("zoo conv fits");
+                let (oh, ow) = attrs.out_hw(shape[1], shape[2])?;
                 shape = vec![*cout, oh, ow];
                 tname = out;
                 if *relu {
@@ -188,7 +188,7 @@ pub fn build(name: &str, with_weights: bool) -> Option<Graph> {
                     inputs: vec![tname.clone()],
                     outputs: vec![out.clone()],
                 });
-                let (oh, ow) = attrs.out_hw(shape[1], shape[2]).expect("zoo pool fits");
+                let (oh, ow) = attrs.out_hw(shape[1], shape[2])?;
                 shape = vec![shape[0], oh, ow];
                 tname = out;
             }

@@ -148,7 +148,9 @@ pub fn apply(g: &Graph, spec: &QuantSpec) -> Result<QuantReport, String> {
             .parse()
             .unwrap_or(0);
         let q = spec.layer(idx);
-        let data = g.initializers[name].data.as_ref().unwrap();
+        let Some(data) = g.initializers.get(name).and_then(|init| init.data.as_ref()) else {
+            return Err(format!("weight initializer '{name}' carries no data"));
+        };
         tensors.push(quantize_with_stats(name, data, q.m_w));
     }
     if tensors.is_empty() {

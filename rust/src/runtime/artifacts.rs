@@ -244,10 +244,12 @@ pub fn load_golden(g: &Golden) -> Result<GoldenData> {
         };
         tensors.push(t);
     }
-    if tensors.len() < 2 {
+    let Some(expected) = tensors.pop() else {
+        bail!("golden must contain at least input and output");
+    };
+    if tensors.is_empty() {
         bail!("golden must contain at least input and output");
     }
-    let expected = tensors.pop().unwrap();
     let input = tensors.remove(0);
     Ok(GoldenData {
         input,

@@ -949,6 +949,7 @@ pub(crate) fn execute(
     if devices.is_empty() {
         bail!("compile job needs at least one device");
     }
+    // analysis: allow(nondet, wall-clock feeds only the volatile wall_seconds field, never the byte-stable document body)
     let t0 = Instant::now();
     let flows: Vec<ComputationFlow> = models
         .iter()

@@ -142,6 +142,7 @@ pub fn ddr_credit_rate(work: &RoundWork) -> (u64, u64) {
             best = Some((err, num, den));
         }
     }
+    // analysis: allow(panic, the 1..=SNAP_GROUPS_MAX loop always runs at least once, so `best` is always set)
     let (_, num, den) = best.expect("snap loop ran");
     (num, den)
 }
@@ -185,6 +186,7 @@ pub fn step_round(work: &RoundWork) -> StepReport {
     let mut out_len = 0u64;
     let mut credit = 0u128;
 
+    // analysis: allow(nondet, the epoch-recurrence memo is keyed lookup only; census counters never iterate it)
     let mut seen: HashMap<EpochKey, EpochSnap> = HashMap::new();
 
     while written < total_outputs {

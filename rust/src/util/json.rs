@@ -102,6 +102,7 @@ impl Json {
 
     pub fn as_i64(&self) -> Option<i64> {
         match self {
+            // analysis: allow(float-eq, fract() == 0.0 is an exact integrality test, not a tolerance comparison)
             Json::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => Some(*n as i64),
             _ => None,
         }
@@ -171,6 +172,7 @@ impl Json {
         let mut p = Parser {
             bytes: src.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.ws();
         let v = p.value()?;
@@ -290,6 +292,7 @@ fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
 fn write_num(out: &mut String, n: f64) {
     if n.is_nan() || n.is_infinite() {
         out.push_str("null"); // JSON has no NaN/Inf; degrade loudly-enough
+    // analysis: allow(float-eq, fract() == 0.0 is an exact integrality test, not a tolerance comparison)
     } else if n.fract() == 0.0 && n.abs() < 9e15 {
         out.push_str(&format!("{}", n as i64));
     } else {
@@ -313,9 +316,16 @@ fn write_str(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Hostile documents may nest arbitrarily deep; the recursive-descent
+/// `value()` would otherwise translate attacker-controlled input depth
+/// into native stack depth. 128 is far beyond any schema we emit
+/// (reports nest < 10 deep) and far below any stack limit.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -344,12 +354,23 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+    fn eat(&mut self, b: u8) -> Result<(), JsonError> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
         } else {
             Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    /// Bump the container-nesting depth, rejecting hostile documents
+    /// before recursion can overflow the native stack.
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            Err(self.err("nesting too deep"))
+        } else {
+            Ok(())
         }
     }
 
@@ -377,7 +398,14 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.enter()?;
+        let v = self.array_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn array_body(&mut self) -> Result<Json, JsonError> {
+        self.eat(b'[')?;
         let mut out = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
@@ -397,7 +425,14 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.enter()?;
+        let v = self.object_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn object_body(&mut self) -> Result<Json, JsonError> {
+        self.eat(b'{')?;
         let mut out = JsonObj::new();
         self.ws();
         if self.peek() == Some(b'}') {
@@ -408,7 +443,7 @@ impl<'a> Parser<'a> {
             self.ws();
             let key = self.string()?;
             self.ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             self.ws();
             let val = self.value()?;
             out.insert(key, val);
@@ -422,7 +457,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut out = String::new();
         loop {
             match self.bump() {
@@ -571,5 +606,23 @@ mod tests {
     fn get_chains_total() {
         let v = Json::parse("{}").unwrap();
         assert!(v.get("missing").get("deeper").idx(3).is_null());
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        // comfortably inside the limit: parses fine
+        let deep_ok = format!("{}null{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep_ok).is_ok());
+        // past the limit: a clean error, not a stack overflow
+        let deep_arr = format!("{}null{}", "[".repeat(100_000), "]".repeat(100_000));
+        let err = Json::parse(&deep_arr).unwrap_err();
+        assert!(err.message.contains("nesting too deep"), "{err}");
+        let deep_obj = format!("{}0{}", "{\"k\":".repeat(100_000), "}".repeat(100_000));
+        let err = Json::parse(&deep_obj).unwrap_err();
+        assert!(err.message.contains("nesting too deep"), "{err}");
+        // depth counts *nesting*, not total container count: a long flat
+        // array of shallow objects is fine at any length
+        let flat = format!("[{}{{}}]", "{},".repeat(500));
+        assert!(Json::parse(&flat).is_ok());
     }
 }

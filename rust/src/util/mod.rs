@@ -5,4 +5,5 @@ pub mod fixed;
 pub mod hash;
 pub mod json;
 pub mod rng;
+pub mod sync;
 pub mod table;

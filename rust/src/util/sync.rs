@@ -1,0 +1,38 @@
+//! Poison-tolerant mutex acquisition for the crate's internal locks.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Acquire `m`, recovering the guard if a previous holder panicked.
+///
+/// Every mutex in this crate guards plain data (work-stealing deques,
+/// the evaluation memo map, channel senders) whose invariants are
+/// restored before the guard drops, so a poisoned lock only ever means
+/// "some unrelated worker panicked mid-job". Propagating that panic
+/// into the next caller — the service daemon, a clean sweep sharing the
+/// cache — would turn one bad job into a crashed process, so we take
+/// the data as-is instead. This is also what keeps lock acquisition
+/// panic-free under the repo lint (`cargo run -p analysis`).
+pub fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_a_poisoned_lock() {
+        let m = Mutex::new(41usize);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        *locked(&m) += 1;
+        assert_eq!(*locked(&m), 42);
+    }
+}

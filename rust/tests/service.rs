@@ -14,7 +14,8 @@
 //! 4. **Replayable log**: the reducer's event log replays into the
 //!    exact final job store across mixed finished/failed outcomes.
 
-use cnn2gate::coordinator::service::{Completion, Event, JobState, Reducer};
+use cnn2gate::coordinator::service::kernel::{pick_next, QueueView};
+use cnn2gate::coordinator::service::{Completion, Event, JobId, JobState, Reducer};
 use cnn2gate::coordinator::{CompileService, JobSpec, ServiceConfig};
 use cnn2gate::dse::{EvalCache, Fidelity, TenantId};
 use cnn2gate::estimator::device::{ARRIA_10_GX1150, CYCLONE_V_5CSEMA5};
@@ -259,4 +260,106 @@ fn reducer_log_replays_into_the_exact_final_store_across_mixed_outcomes() {
     assert_eq!(&Reducer::replay(reducer.log()), reducer);
     assert_eq!(reducer.log().len(), 3 + 3 + 3, "accepted + started + terminal per job");
     assert!(reducer.log().iter().all(|e| !matches!(e, Event::Progress { .. })));
+}
+
+// ---------------------------------------------------------------------------
+// Regression shapes pinned by the analysis suite's bounded model checker
+// (`cargo run -p analysis mc`). Each test replays the *smallest* event
+// sequence of a behavior class the checker explores, at the pure
+// kernel/Reducer level, so a future kernel change that breaks one fails
+// here with a readable trace long before the exhaustive run does.
+// ---------------------------------------------------------------------------
+
+fn accepted(id: u64, tenant: &str, depth: usize) -> Event {
+    Event::Accepted { job: JobId(id), tenant: TenantId::of(tenant), queue_depth: depth }
+}
+
+/// mc shape: Submit, Submit, Submit against capacity 2 — the third
+/// admission must reject, and the rejection is a terminal record that
+/// never re-enters the queue.
+#[test]
+fn mc_shape_queue_bound_third_submit_rejects() {
+    let mut r = Reducer::new();
+    r.apply(&accepted(0, "acme", 0));
+    r.apply(&accepted(1, "acme", 1));
+    r.apply(&Event::Rejected {
+        job: JobId(2),
+        tenant: TenantId::of("acme"),
+        reason: "admission queue full (2 jobs)".into(),
+    });
+    assert_eq!(r.open_jobs(), 2, "rejected job must not count as open");
+    let rec = r.get(JobId(2)).unwrap();
+    assert_eq!(rec.state, JobState::Rejected);
+    assert!(rec.state.is_terminal());
+    assert!(rec.error.as_deref().unwrap().contains("queue full"));
+    // a straggler Started for the rejected job must not resurrect it
+    r.apply(&Event::Started { job: JobId(2) });
+    assert_eq!(r.get(JobId(2)).unwrap().state, JobState::Rejected);
+}
+
+/// mc shape: Submit, Start, CancelRunning, DoneOk — a cancel flag that
+/// loses the race to a successful completion is absorbed: the result is
+/// real and the job finishes. The queued-cancel variant stays Cancelled
+/// even if a late Finished arrives.
+#[test]
+fn mc_shape_cancel_coherence_late_events_are_absorbed() {
+    // running-cancel raced by success: Finished wins
+    let mut r = Reducer::new();
+    r.apply(&accepted(0, "acme", 0));
+    r.apply(&Event::Started { job: JobId(0) });
+    r.apply(&Event::Finished { job: JobId(0), outcome_json: "{}".into() });
+    assert_eq!(r.get(JobId(0)).unwrap().state, JobState::Finished);
+
+    // queued-cancel with a straggler completion: Cancelled is terminal
+    r.apply(&accepted(1, "zen", 0));
+    r.apply(&Event::Cancelled { job: JobId(1) });
+    r.apply(&Event::Finished { job: JobId(1), outcome_json: "{}".into() });
+    let rec = r.get(JobId(1)).unwrap();
+    assert_eq!(rec.state, JobState::Cancelled);
+    assert!(rec.outcome_json.is_none(), "cancelled job must not keep a straggler outcome");
+    assert_eq!(r.open_jobs(), 0);
+}
+
+/// mc shape: the exact-replay leaf invariant on an adversarial log —
+/// interleaved jobs, duplicate terminals, and events for unknown ids.
+/// `Reducer::replay` of the log must equal the live reducer.
+#[test]
+fn mc_shape_replay_exactness_on_adversarial_log() {
+    let mut live = Reducer::new();
+    for e in [
+        accepted(0, "acme", 0),
+        accepted(1, "zen", 1),
+        Event::Started { job: JobId(0) },
+        Event::Started { job: JobId(99) }, // unknown id
+        Event::Cancelled { job: JobId(1) },
+        Event::Failed { job: JobId(0), error: "boom".into() },
+        Event::Failed { job: JobId(0), error: "boom again".into() }, // duplicate terminal
+        accepted(2, "bolt", 0),
+        Event::Started { job: JobId(2) },
+        Event::Finished { job: JobId(2), outcome_json: "{}".into() },
+    ] {
+        live.apply(&e);
+    }
+    assert_eq!(Reducer::replay(live.log()), live);
+    assert_eq!(live.open_jobs(), 0);
+    assert_eq!(live.get(JobId(0)).unwrap().state, JobState::Failed);
+    assert_eq!(live.get(JobId(1)).unwrap().state, JobState::Cancelled);
+    assert_eq!(live.get(JobId(2)).unwrap().state, JobState::Finished);
+}
+
+/// mc shape: the fairness key — with tenant "busy" already served, a
+/// newer, costlier job from the starved tenant must launch first.
+#[test]
+fn mc_shape_pick_next_prefers_the_starved_tenant() {
+    let queue = [
+        QueueView { seq: 0, tenant: TenantId::of("busy"), cost: 1 },
+        QueueView { seq: 1, tenant: TenantId::of("starved"), cost: 5 },
+    ];
+    let running = std::collections::HashMap::new();
+    let mut served = std::collections::HashMap::new();
+    served.insert(TenantId::of("busy").as_u64(), 3);
+    assert_eq!(pick_next(&queue, &running, &served), Some(1));
+    // all else equal, lower cost then lower seq wins
+    served.clear();
+    assert_eq!(pick_next(&queue, &running, &served), Some(0));
 }

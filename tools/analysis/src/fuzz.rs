@@ -1,0 +1,487 @@
+//! Hostile-input fuzz harnesses for the repo's three parsing surfaces:
+//! [`Json::parse`], [`onnx::parse_doc`] and [`EvalCache::from_json`].
+//!
+//! Everything is deterministic: inputs come from the repo's own
+//! [`util::rng`](cnn2gate::util::rng) xoshiro generator seeded per
+//! harness, so a failure report (`seed`, iteration) replays exactly.
+//! Each iteration builds a hostile input by one of several strategies —
+//! raw byte noise, structural-character soup, byte-level mutation of a
+//! known-valid document, structural mutation of a parsed tree, nesting
+//! bombs around the parser's depth limit, and number torture — and
+//! feeds it to the target under `catch_unwind`.
+//!
+//! The contract is uniform: the parser may accept or reject, but it
+//! must never panic, and acceptance must be coherent (for JSON:
+//! render-then-reparse reproduces the same tree, modulo the documented
+//! NaN/Inf→null degradation).
+
+use std::panic::{self, AssertUnwindSafe};
+
+use cnn2gate::dse::{EvalCache, EvalRequest, Evaluator, Fidelity};
+use cnn2gate::estimator::device::ARRIA_10_GX1150;
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::{parse_doc, zoo};
+use cnn2gate::util::json::Json;
+use cnn2gate::util::rng::Rng;
+
+/// What one harness run saw.
+#[derive(Debug, Clone, Copy)]
+pub struct FuzzOutcome {
+    pub target: &'static str,
+    pub inputs: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+}
+
+/// Run `f` with panics captured instead of unwinding into the harness.
+/// Returns `Err` with the panic payload text if the target panicked.
+fn shielded<T>(f: impl FnOnce() -> T) -> Result<T, String> {
+    panic::catch_unwind(AssertUnwindSafe(f)).map_err(|payload| {
+        if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        }
+    })
+}
+
+/// Install a silent panic hook for the duration of `f` so expected
+/// catch_unwind captures don't spray backtraces over the output.
+fn hushed<T>(f: impl FnOnce() -> T) -> T {
+    let prev = panic::take_hook();
+    panic::set_hook(Box::new(|_| {}));
+    let out = f();
+    panic::set_hook(prev);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// input generators
+// ---------------------------------------------------------------------------
+
+const JSON_SOUP: &[u8] = br#"{}[],:".0123456789eE+-truefalsn \t\n\\u"#;
+
+fn random_bytes(rng: &mut Rng, max_len: u64) -> Vec<u8> {
+    let len = rng.below(max_len) as usize;
+    (0..len).map(|_| rng.below(256) as u8).collect()
+}
+
+fn soup_string(rng: &mut Rng, max_len: u64) -> String {
+    let len = rng.below(max_len) as usize;
+    (0..len).map(|_| *rng.choose(JSON_SOUP) as char).collect()
+}
+
+/// Flip, insert, delete or splice a handful of bytes in a valid text.
+fn byte_mutate(rng: &mut Rng, base: &str) -> String {
+    let mut bytes = base.as_bytes().to_vec();
+    let edits = 1 + rng.below(8);
+    for _ in 0..edits {
+        if bytes.is_empty() {
+            break;
+        }
+        let at = rng.below(bytes.len() as u64) as usize;
+        match rng.below(4) {
+            0 => bytes[at] = rng.below(256) as u8,
+            1 => bytes.insert(at, *rng.choose(JSON_SOUP)),
+            2 => {
+                bytes.remove(at);
+            }
+            _ => {
+                let upto = (at + 1 + rng.below(16) as usize).min(bytes.len());
+                bytes.drain(at..upto);
+            }
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// `[[[...1...]]]` with depth hovering around the parser's
+/// `MAX_DEPTH = 128` limit, alternating arrays and objects.
+fn nesting_bomb(rng: &mut Rng) -> String {
+    let depth = 100 + rng.below(80) as usize;
+    let mut open = String::new();
+    let mut close = String::new();
+    for i in 0..depth {
+        if (i + rng.below(2) as usize) % 2 == 0 {
+            open.push('[');
+            close.insert(0, ']');
+        } else {
+            open.push_str("{\"k\":");
+            close.insert(0, '}');
+        }
+    }
+    format!("{open}1{close}")
+}
+
+fn number_torture(rng: &mut Rng) -> String {
+    let cases = [
+        "1e999",
+        "-1e999",
+        "1e-999",
+        "-0.0",
+        "0.000000000000000000000000000001",
+        "9007199254740993",
+        "-9223372036854775809",
+        "1.7976931348623157e308",
+        "2.2250738585072011e-308",
+        "0.1e",
+        "--1",
+        "1.",
+        ".5",
+        "+1",
+        "0x10",
+        "1_000",
+        "01",
+        "NaN",
+        "Infinity",
+    ];
+    let n = *rng.choose(&cases);
+    match rng.below(3) {
+        0 => n.to_string(),
+        1 => format!("[{n}, {n}]"),
+        _ => format!("{{\"v\": {n}}}"),
+    }
+}
+
+/// A random well-formed tree (finite numbers only, so the roundtrip
+/// equality invariant is exact).
+fn random_tree(rng: &mut Rng, depth: usize) -> Json {
+    let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => match rng.below(3) {
+            0 => Json::Num(rng.range_i64(-1_000_000, 1_000_000) as f64),
+            1 => Json::Num(rng.next_f64() * 1e6 - 5e5),
+            _ => Json::Num(rng.next_f32() as f64),
+        },
+        3 => Json::Str(soup_string(rng, 24)),
+        4 => {
+            let n = rng.below(4) as usize;
+            Json::Arr((0..n).map(|_| random_tree(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.below(4) as usize;
+            Json::from_iter_obj(
+                (0..n).map(|i| (format!("k{i}_{}", rng.below(10)), random_tree(rng, depth - 1))),
+            )
+        }
+    }
+}
+
+/// Structurally mutate one node of a parsed tree: retype it, drop an
+/// object key, duplicate or truncate an array, poison a string or
+/// number. Keeps numbers finite (the hostile non-finite path is covered
+/// by text-level number torture).
+fn mutate_tree(rng: &mut Rng, doc: &Json) -> Json {
+    if rng.below(3) == 0 {
+        return match rng.below(6) {
+            0 => Json::Null,
+            1 => Json::Bool(true),
+            2 => Json::Num(-(rng.below(1 << 40) as f64)),
+            3 => Json::Str(soup_string(rng, 40)),
+            4 => Json::Arr(vec![doc.clone()]),
+            _ => Json::from_iter_obj([("zzz".to_string(), doc.clone())]),
+        };
+    }
+    match doc {
+        Json::Arr(items) if !items.is_empty() => {
+            let at = rng.below(items.len() as u64) as usize;
+            let mut out = items.clone();
+            match rng.below(3) {
+                0 => out[at] = mutate_tree(rng, &items[at]),
+                1 => out.push(items[at].clone()), // duplicate an element
+                _ => out.truncate(at),
+            }
+            Json::Arr(out)
+        }
+        Json::Obj(o) if !o.is_empty() => {
+            let victim = rng.below(o.len() as u64) as usize;
+            match rng.below(3) {
+                // drop a key (JsonObj has no remove; rebuild without it)
+                0 => Json::from_iter_obj(
+                    o.iter()
+                        .enumerate()
+                        .filter(|(i, _)| *i != victim)
+                        .map(|(_, (k, v))| (k.clone(), v.clone())),
+                ),
+                // mutate the value under a key
+                1 => Json::from_iter_obj(o.iter().enumerate().map(|(i, (k, v))| {
+                    if i == victim {
+                        (k.clone(), mutate_tree(rng, v))
+                    } else {
+                        (k.clone(), v.clone())
+                    }
+                })),
+                // add an unexpected key
+                _ => {
+                    let mut pairs: Vec<(String, Json)> =
+                        o.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+                    pairs.push((soup_string(rng, 12), random_tree(rng, 1)));
+                    Json::from_iter_obj(pairs)
+                }
+            }
+        }
+        Json::Num(n) => Json::Num(match rng.below(4) {
+            0 => -n,
+            1 => n * 1e9,
+            2 => n + 0.5,
+            _ => 0.0,
+        }),
+        Json::Str(_) => Json::Str(soup_string(rng, 40)),
+        other => other.clone(),
+    }
+}
+
+fn tree_is_finite(doc: &Json) -> bool {
+    match doc {
+        Json::Num(n) => n.is_finite(),
+        Json::Arr(items) => items.iter().all(tree_is_finite),
+        Json::Obj(o) => o.iter().all(|(_, v)| tree_is_finite(v)),
+        _ => true,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// harnesses
+// ---------------------------------------------------------------------------
+
+const ONNX_CONV_DOC: &str = r#"{
+  "format": "cnn2gate-onnx-subset-v1",
+  "name": "m",
+  "input": {"name": "input", "shape": [1, 4, 4], "dtype": "float32"},
+  "output": {"name": "y"},
+  "nodes": [{"op_type": "Conv", "inputs": ["input", "w", "b"], "outputs": ["y"],
+    "attrs": {"kernel_shape": [3, 3], "strides": [1, 1], "pads": [1, 1, 1, 1], "dilations": [1, 1]}}],
+  "initializers": [
+    {"name": "w", "shape": [2, 1, 3, 3], "dtype": "float32", "offset": 0, "nbytes": 72},
+    {"name": "b", "shape": [2], "dtype": "float32", "offset": 72, "nbytes": 8}
+  ],
+  "external_data": null
+}"#;
+
+const ONNX_CHAIN_DOC: &str = r#"{
+  "format": "cnn2gate-onnx-subset-v1",
+  "name": "m2",
+  "input": {"name": "input", "shape": [2, 4, 4], "dtype": "float32"},
+  "output": {"name": "out"},
+  "nodes": [
+    {"op_type": "MaxPool", "inputs": ["input"], "outputs": ["p"],
+     "attrs": {"kernel_shape": [2, 2], "strides": [2, 2], "pads": [0, 0, 0, 0]}},
+    {"op_type": "Flatten", "inputs": ["p"], "outputs": ["f"], "attrs": {}},
+    {"op_type": "Gemm", "inputs": ["f", "w", "b"], "outputs": ["g"], "attrs": {"transB": 1}},
+    {"op_type": "Softmax", "inputs": ["g"], "outputs": ["out"], "attrs": {}}
+  ],
+  "initializers": [
+    {"name": "w", "shape": [3, 8], "dtype": "float32", "offset": 0, "nbytes": 96},
+    {"name": "b", "shape": [3], "dtype": "float32", "offset": 96, "nbytes": 12}
+  ],
+  "external_data": null
+}"#;
+
+/// Fuzz [`Json::parse`]. Invariant: never panics; on accept, the tree
+/// renders and reparses to an equal tree (exact when all numbers are
+/// finite — NaN/Inf degrade to `null` by design).
+pub fn fuzz_json(seed: u64, iters: u64) -> Result<FuzzOutcome, String> {
+    let mut rng = Rng::new(seed ^ 0x6a73_6f6e);
+    let mut out = FuzzOutcome {
+        target: "util::json::Json::parse",
+        inputs: 0,
+        accepted: 0,
+        rejected: 0,
+    };
+    for i in 0..iters {
+        let input = match rng.below(7) {
+            0 => String::from_utf8_lossy(&random_bytes(&mut rng, 200)).into_owned(),
+            1 => soup_string(&mut rng, 200),
+            2 => byte_mutate(&mut rng, ONNX_CONV_DOC),
+            3 => nesting_bomb(&mut rng),
+            4 => number_torture(&mut rng),
+            5 => random_tree(&mut rng, 4).to_string_pretty(),
+            _ => mutate_tree(&mut rng, &Json::parse(ONNX_CHAIN_DOC).unwrap()).to_string_pretty(),
+        };
+        out.inputs += 1;
+        let parsed = shielded(|| Json::parse(&input))
+            .map_err(|p| format!("json seed={seed} iter={i}: panicked: {p}\ninput: {input:?}"))?;
+        match parsed {
+            Err(_) => out.rejected += 1,
+            Ok(doc) => {
+                out.accepted += 1;
+                let rendered = shielded(|| doc.to_string_pretty()).map_err(|p| {
+                    format!("json seed={seed} iter={i}: render panicked: {p}\ninput: {input:?}")
+                })?;
+                match Json::parse(&rendered) {
+                    Err(e) => {
+                        return Err(format!(
+                            "json seed={seed} iter={i}: accepted input re-rendered unparseable \
+                             ({}): {rendered:?}",
+                            e.message
+                        ))
+                    }
+                    Ok(again) if tree_is_finite(&doc) && again != doc => {
+                        return Err(format!(
+                            "json seed={seed} iter={i}: roundtrip diverged\nfirst:  {doc:?}\n\
+                             second: {again:?}"
+                        ))
+                    }
+                    Ok(_) => {}
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Fuzz [`onnx::parse_doc`] with mutated model documents and hostile
+/// weight blobs. Invariant: never panics; malformed docs come back as
+/// `Err`, not aborts — offsets/nbytes out of range must be caught.
+pub fn fuzz_onnx(seed: u64, iters: u64) -> Result<FuzzOutcome, String> {
+    let mut rng = Rng::new(seed ^ 0x6f6e_6e78);
+    let conv = Json::parse(ONNX_CONV_DOC).map_err(|e| e.message)?;
+    let chain = Json::parse(ONNX_CHAIN_DOC).map_err(|e| e.message)?;
+    let mut out = FuzzOutcome {
+        target: "onnx::parse_doc",
+        inputs: 0,
+        accepted: 0,
+        rejected: 0,
+    };
+    for i in 0..iters {
+        let base = if rng.below(2) == 0 { &conv } else { &chain };
+        let doc = match rng.below(4) {
+            0 | 1 => mutate_tree(&mut rng, base),
+            2 => {
+                // double mutation reaches deeper invalid shapes
+                let once = mutate_tree(&mut rng, base);
+                mutate_tree(&mut rng, &once)
+            }
+            _ => match Json::parse(&byte_mutate(&mut rng, ONNX_CONV_DOC)) {
+                Ok(d) => d,
+                Err(_) => base.clone(), // mutation broke the JSON layer; exercise the base
+            },
+        };
+        let blob = match rng.below(3) {
+            0 => None,
+            1 => Some(random_bytes(&mut rng, 64)), // usually too small
+            _ => Some(random_bytes(&mut rng, 256)),
+        };
+        out.inputs += 1;
+        let parsed = shielded(|| parse_doc(&doc, blob.as_deref())).map_err(|p| {
+            format!(
+                "onnx seed={seed} iter={i}: panicked: {p}\ndoc: {}",
+                doc.to_string_pretty()
+            )
+        })?;
+        match parsed {
+            Ok(_) => out.accepted += 1,
+            Err(_) => out.rejected += 1,
+        }
+    }
+    Ok(out)
+}
+
+/// Build a real populated cache document to mutate: two analytical
+/// evaluations of the `tiny` zoo model.
+fn cache_template() -> Result<Json, String> {
+    let graph = zoo::build("tiny", false).ok_or("zoo model 'tiny' missing")?;
+    let flow = ComputationFlow::extract(&graph).map_err(|e| format!("{e:?}"))?;
+    let ev = Evaluator::new(2);
+    ev.evaluate(&flow, &ARRIA_10_GX1150, 4, 4, EvalRequest::at(Fidelity::Analytical));
+    ev.evaluate(&flow, &ARRIA_10_GX1150, 8, 4, EvalRequest::at(Fidelity::Analytical));
+    Ok(ev.cache().to_json())
+}
+
+/// Fuzz [`EvalCache::from_json`]. Invariant: never panics; anything
+/// that is not a well-formed cache document is rejected with `Err`.
+pub fn fuzz_cache(seed: u64, iters: u64) -> Result<FuzzOutcome, String> {
+    let mut rng = Rng::new(seed ^ 0x6361_6368);
+    let template = cache_template()?;
+    let rendered = template.to_string_pretty();
+    let mut out = FuzzOutcome {
+        target: "dse::EvalCache::from_json",
+        inputs: 0,
+        accepted: 0,
+        rejected: 0,
+    };
+    for i in 0..iters {
+        let doc = match rng.below(5) {
+            0 | 1 => mutate_tree(&mut rng, &template),
+            2 => {
+                let once = mutate_tree(&mut rng, &template);
+                mutate_tree(&mut rng, &once)
+            }
+            3 => match Json::parse(&byte_mutate(&mut rng, &rendered)) {
+                Ok(d) => d,
+                Err(_) => template.clone(),
+            },
+            _ => random_tree(&mut rng, 3),
+        };
+        out.inputs += 1;
+        let parsed = shielded(|| EvalCache::from_json(&doc)).map_err(|p| {
+            format!(
+                "cache seed={seed} iter={i}: panicked: {p}\ndoc: {}",
+                doc.to_string_pretty()
+            )
+        })?;
+        match parsed {
+            Ok(_) => out.accepted += 1,
+            Err(_) => out.rejected += 1,
+        }
+    }
+    Ok(out)
+}
+
+/// Run all three harnesses at `scale`× the fast-tier budget (scale 1 =
+/// 12 000 inputs total, past the 10k acceptance gate). Returns per-
+/// target outcomes or the first failure with its replay coordinates.
+pub fn run(seed: u64, scale: u64) -> Result<Vec<FuzzOutcome>, String> {
+    hushed(|| {
+        Ok(vec![
+            fuzz_json(seed, 6_000 * scale)?,
+            fuzz_onnx(seed, 3_000 * scale)?,
+            fuzz_cache(seed, 3_000 * scale)?,
+        ])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_harness_accepts_and_rejects() {
+        let out = hushed(|| fuzz_json(7, 1_500)).expect("no panics");
+        assert_eq!(out.inputs, 1_500);
+        assert!(out.accepted > 0, "valid-tree strategy must accept");
+        assert!(out.rejected > 0, "byte noise must reject");
+    }
+
+    #[test]
+    fn onnx_harness_accepts_and_rejects() {
+        let out = hushed(|| fuzz_onnx(7, 600)).expect("no panics");
+        assert_eq!(out.inputs, 600);
+        assert!(out.rejected > 0, "mutations must produce invalid docs");
+    }
+
+    #[test]
+    fn cache_harness_accepts_and_rejects() {
+        let out = hushed(|| fuzz_cache(7, 600)).expect("no panics");
+        assert_eq!(out.inputs, 600);
+        assert!(out.rejected > 0, "mutations must produce invalid docs");
+    }
+
+    #[test]
+    fn cache_template_is_itself_valid() {
+        let doc = cache_template().unwrap();
+        let cache = EvalCache::from_json(&doc).expect("unmutated template must load");
+        assert!(cache.to_json().to_string_pretty().len() > 2);
+    }
+
+    #[test]
+    fn determinism_same_seed_same_outcome() {
+        let a = hushed(|| fuzz_json(42, 300)).unwrap();
+        let b = hushed(|| fuzz_json(42, 300)).unwrap();
+        assert_eq!((a.accepted, a.rejected), (b.accepted, b.rejected));
+    }
+}

@@ -1,0 +1,69 @@
+//! In-repo analysis suite for the CNN2Gate workspace.
+//!
+//! Four offline passes, zero dependencies beyond the workspace itself,
+//! all runnable as `cargo run -p analysis` (see `src/main.rs`):
+//!
+//! * [`lints`] — custom source lints over `rust/src/**`: no
+//!   panic-capable calls in non-test library code, no nondeterminism
+//!   sources inside the byte-identity layers, no float `==` against
+//!   literals. Waivable per site with
+//!   `// analysis: allow(<class>, <reason>)`.
+//! * [`locks`] — static lock-order checking: every Mutex acquisition in
+//!   the threaded modules must resolve to a lock declared in
+//!   `tools/analysis/lock_order.toml`, and every *nested* acquisition
+//!   must be declared there and respect the manifest's total order.
+//! * [`mc`] — a bounded model checker that drives the real
+//!   [`kernel`](cnn2gate::coordinator::service::kernel) transition
+//!   functions and [`Reducer`](cnn2gate::coordinator::service::Reducer)
+//!   through every Submit/Cancel/Shutdown/completion interleaving up to
+//!   a depth bound, asserting the service invariants at every node.
+//! * [`fuzz`] — deterministic structure-aware fuzz harnesses that feed
+//!   hostile inputs to the ONNX parser, the JSON parser and the
+//!   evaluation-cache loader; every input must be accepted or rejected
+//!   gracefully, never by panic.
+//!
+//! The passes live in a library so both the `analysis` binary and the
+//! crate's own tests (including the seeded-violation self-tests) share
+//! one implementation.
+
+use std::fmt;
+
+pub mod fuzz;
+pub mod lints;
+pub mod locks;
+pub mod mc;
+pub mod scan;
+
+/// One violation reported by the lint or lock pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the scanned root (e.g. `dse/eval.rs`).
+    pub file: String,
+    /// 1-indexed source line.
+    pub line: usize,
+    /// Lint class: `panic`, `nondet`, `float-eq` or `lock-order`.
+    pub class: &'static str,
+    /// Human-readable description with source context.
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(file: &str, line: usize, class: &'static str, message: String) -> Finding {
+        Finding {
+            file: file.to_string(),
+            line,
+            class,
+            message,
+        }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.class, self.message
+        )
+    }
+}

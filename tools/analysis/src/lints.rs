@@ -1,0 +1,379 @@
+//! Custom source lints over `rust/src/**`.
+//!
+//! Three classes, each waivable per site with
+//! `// analysis: allow(<class>, <reason>)` on the same line or the line
+//! directly above:
+//!
+//! * `panic` — no `.unwrap()` / `.expect(` / `panic!` / `unreachable!`
+//!   / `todo!` / `unimplemented!` in non-`#[cfg(test)]` library code.
+//!   Library code returns `Result`; a panic in the service tears down a
+//!   worker and poisons shared state.
+//! * `nondet` — no nondeterminism sources inside the byte-identity
+//!   layers (`sim/`, `dse/`, `report/`, `session.rs`, `util/json.rs`):
+//!   wall clocks (`Instant::now`, `SystemTime`), thread-local RNGs, and
+//!   `HashMap`/`HashSet` (whose iteration order could leak into
+//!   rendered output; `BTreeMap` is the house type there). `use` lines
+//!   are exempt so a wildcard import does not need a waiver.
+//! * `float-eq` — no `==`/`!=` where either adjacent token is a float
+//!   literal or a `.fract()` call. This is a token-level heuristic: it
+//!   catches comparisons against literals (`x == 0.5`, sentinel checks)
+//!   and fract-style integrality tests, not variable-vs-variable float
+//!   comparisons — those need human eyes, which is exactly what the
+//!   waiver reason forces at the sites the lint does see.
+
+use std::path::Path;
+
+use crate::scan::{walk_sources, SourceFile};
+use crate::Finding;
+
+pub const PANIC_PATTERNS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+pub const NONDET_PATTERNS: &[&str] = &[
+    "Instant::now",
+    "SystemTime",
+    "thread_rng",
+    "ThreadRng",
+    "rand::",
+];
+
+pub const NONDET_COLLECTIONS: &[&str] = &["HashMap", "HashSet"];
+
+/// The byte-identity layers: modules whose rendered output must be
+/// byte-stable across runs and thread interleavings.
+pub fn nondet_scope(rel: &str) -> bool {
+    rel.starts_with("sim/")
+        || rel.starts_with("dse/")
+        || rel.starts_with("report/")
+        || rel == "session.rs"
+        || rel == "util/json.rs"
+}
+
+fn context_of(line: &str) -> String {
+    line.trim().chars().take(110).collect()
+}
+
+/// `pat` present in `line` with non-identifier characters on both sides.
+fn contains_word(line: &str, pat: &str) -> bool {
+    let chars: Vec<char> = line.chars().collect();
+    let p: Vec<char> = pat.chars().collect();
+    if chars.len() < p.len() {
+        return false;
+    }
+    let ident = |c: char| c.is_alphanumeric() || c == '_';
+    for i in 0..=chars.len() - p.len() {
+        if chars[i..i + p.len()] == p[..]
+            && (i == 0 || !ident(chars[i - 1]))
+            && (i + p.len() == chars.len() || !ident(chars[i + p.len()]))
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// Matches `\d+\.\d*` with an optional exponent, end-anchored.
+fn float_with_point(s: &[char]) -> bool {
+    let mut i = 0usize;
+    let start = i;
+    while i < s.len() && s[i].is_ascii_digit() {
+        i += 1;
+    }
+    if i == start || i >= s.len() || s[i] != '.' {
+        return false;
+    }
+    i += 1;
+    while i < s.len() && s[i].is_ascii_digit() {
+        i += 1;
+    }
+    if i == s.len() {
+        return true;
+    }
+    exponent_to_end(s, i)
+}
+
+/// Matches `\d+(\.\d*)?` followed by a mandatory exponent, end-anchored.
+fn float_with_exponent(s: &[char]) -> bool {
+    let mut i = 0usize;
+    let start = i;
+    while i < s.len() && s[i].is_ascii_digit() {
+        i += 1;
+    }
+    if i == start {
+        return false;
+    }
+    if i < s.len() && s[i] == '.' {
+        i += 1;
+        while i < s.len() && s[i].is_ascii_digit() {
+            i += 1;
+        }
+    }
+    exponent_to_end(s, i)
+}
+
+fn exponent_to_end(s: &[char], mut i: usize) -> bool {
+    if i >= s.len() || (s[i] != 'e' && s[i] != 'E') {
+        return false;
+    }
+    i += 1;
+    if i < s.len() && (s[i] == '+' || s[i] == '-') {
+        i += 1;
+    }
+    let start = i;
+    while i < s.len() && s[i].is_ascii_digit() {
+        i += 1;
+    }
+    i > start && i == s.len()
+}
+
+/// Matches `\d[\d_]*(\.\d*)?(f32|f64)`, end-anchored.
+fn float_with_suffix(s: &[char]) -> bool {
+    let mut i = 0usize;
+    if s.is_empty() || !s[0].is_ascii_digit() {
+        return false;
+    }
+    i += 1;
+    while i < s.len() && (s[i].is_ascii_digit() || s[i] == '_') {
+        i += 1;
+    }
+    if i < s.len() && s[i] == '.' {
+        i += 1;
+        while i < s.len() && s[i].is_ascii_digit() {
+            i += 1;
+        }
+    }
+    let rest: String = s[i..].iter().collect();
+    rest == "f32" || rest == "f64"
+}
+
+/// True when some suffix of `tok` is a float literal, or `tok` carries
+/// a `.fract()` call.
+fn is_floaty_token(tok: &str) -> bool {
+    if tok.contains(".fract()") {
+        return true;
+    }
+    let chars: Vec<char> = tok.chars().collect();
+    (0..chars.len()).any(|i| {
+        float_with_point(&chars[i..])
+            || float_with_exponent(&chars[i..])
+            || float_with_suffix(&chars[i..])
+    })
+}
+
+/// Contexts of `==`/`!=` comparisons on `line` where an adjacent token
+/// is floaty. Compound operators (`<=`, `>=`, `=>`, `+=`, …) and
+/// pattern-ish `===` sequences are skipped.
+fn float_eq_hits(line: &str) -> Vec<String> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut hits = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < chars.len() {
+        let op = (chars[i], chars[i + 1]);
+        if op != ('=', '=') && op != ('!', '=') {
+            i += 1;
+            continue;
+        }
+        let (s, e) = (i, i + 2);
+        i += 2; // finditer-style: never re-match inside this operator
+        if s > 0 && "=<>!+-*/%&|^".contains(chars[s - 1]) {
+            continue;
+        }
+        if e < chars.len() && chars[e] == '=' {
+            continue;
+        }
+        let token = |c: char| c.is_alphanumeric() || c == '_' || c == '.';
+        let mut ls = s;
+        while ls > 0 && chars[ls - 1].is_whitespace() {
+            ls -= 1;
+        }
+        let mut lstart = ls;
+        while lstart > 0 && token(chars[lstart - 1]) {
+            lstart -= 1;
+        }
+        let ltok: String = chars[lstart..ls].iter().collect();
+        let mut rs = e;
+        while rs < chars.len() && chars[rs].is_whitespace() {
+            rs += 1;
+        }
+        let mut rend = rs;
+        while rend < chars.len() && token(chars[rend]) {
+            rend += 1;
+        }
+        let rtok: String = chars[rs..rend].iter().collect();
+        if is_floaty_token(&ltok) || is_floaty_token(&rtok) {
+            hits.push(context_of(line));
+        }
+    }
+    hits
+}
+
+/// Lint one file (already-loaded text). `rel` is the path relative to
+/// `rust/src`, which selects the nondet scope.
+pub fn lint_file(rel: &str, text: &str) -> Vec<Finding> {
+    let sf = SourceFile::parse(rel, text);
+    let mut out = Vec::new();
+    for (idx, line) in sf.code.iter().enumerate() {
+        if sf.in_test[idx] {
+            continue;
+        }
+        let lineno = idx + 1;
+        for pat in PANIC_PATTERNS {
+            if line.contains(pat) && !sf.is_waived(idx, "panic") {
+                out.push(Finding::new(
+                    rel,
+                    lineno,
+                    "panic",
+                    format!("{pat} in non-test library code | {}", context_of(line)),
+                ));
+            }
+        }
+        if nondet_scope(rel) {
+            for pat in NONDET_PATTERNS {
+                if line.contains(pat) && !sf.is_waived(idx, "nondet") {
+                    out.push(Finding::new(
+                        rel,
+                        lineno,
+                        "nondet",
+                        format!("{pat} in a byte-identity layer | {}", context_of(line)),
+                    ));
+                }
+            }
+            if !line.trim_start().starts_with("use ") {
+                for pat in NONDET_COLLECTIONS {
+                    if contains_word(line, pat) && !sf.is_waived(idx, "nondet") {
+                        out.push(Finding::new(
+                            rel,
+                            lineno,
+                            "nondet",
+                            format!(
+                                "{pat} in a byte-identity layer (iteration order can leak \
+                                 into output; use BTreeMap/BTreeSet or waive with the why) | {}",
+                                context_of(line)
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        for ctx in float_eq_hits(line) {
+            if !sf.is_waived(idx, "float-eq") {
+                out.push(Finding::new(
+                    rel,
+                    lineno,
+                    "float-eq",
+                    format!("float comparison with == | {ctx}"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Lint every `.rs` file under `src_root` (normally `rust/src`).
+pub fn run(src_root: &Path) -> anyhow::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for (rel, text) in walk_sources(src_root)? {
+        findings.extend(lint_file(&rel, &text));
+    }
+    Ok(findings)
+}
+
+/// A synthetic source that must trip the given lint class — used by
+/// `analysis --seed <class>` and the self-tests to prove the pass
+/// actually fails the build on a violation.
+pub fn seeded_violation(class: &str) -> Option<(&'static str, &'static str)> {
+    match class {
+        "panic" => Some((
+            "seeded/panic.rs",
+            "pub fn first(xs: &[u8]) -> u8 {\n    *xs.first().unwrap()\n}\n",
+        )),
+        "nondet" => Some((
+            "dse/seeded_nondet.rs",
+            "pub fn stamp() -> std::time::Instant {\n    std::time::Instant::now()\n}\n",
+        )),
+        "float-eq" => Some((
+            "sim/seeded_float.rs",
+            "pub fn is_half(x: f64) -> bool {\n    x == 0.5\n}\n",
+        )),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn each_seeded_violation_is_caught() {
+        for class in ["panic", "nondet", "float-eq"] {
+            let (rel, text) = seeded_violation(class).unwrap();
+            let findings = lint_file(rel, text);
+            assert!(
+                findings.iter().any(|f| f.class == class),
+                "{class}: {findings:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn panics_in_strings_comments_and_tests_are_ignored() {
+        let src = r#"
+pub fn ok() -> String {
+    // .unwrap() would panic! here
+    format!("never .unwrap() in messages")
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        Some(1).unwrap();
+    }
+}
+"#;
+        assert!(lint_file("m.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waiver_suppresses_exactly_its_class_and_site() {
+        let src = "pub fn f(x: Option<u8>) -> u8 {\n    // analysis: allow(panic, caller guarantees Some)\n    x.unwrap()\n}\npub fn g(y: Option<u8>) -> u8 {\n    y.unwrap()\n}\n";
+        let findings = lint_file("m.rs", src);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].line, 6);
+    }
+
+    #[test]
+    fn nondet_scope_is_path_sensitive() {
+        let src = "pub fn now() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+        assert!(lint_file("cli_helpers.rs", src).is_empty());
+        assert_eq!(lint_file("sim/clock.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn hashmap_is_flagged_in_scope_but_not_on_use_lines() {
+        let src = "use std::collections::HashMap;\npub struct S {\n    pub m: HashMap<u8, u8>,\n}\n";
+        let findings = lint_file("report/x.rs", src);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].line, 3);
+        // identifier boundaries: MyHashMapLike must not match
+        assert!(!contains_word("let x: MyHashMapLike = y;", "HashMap"));
+    }
+
+    #[test]
+    fn float_eq_catches_literals_and_fract_not_compound_ops() {
+        assert_eq!(float_eq_hits("if x == 0.5 {").len(), 1);
+        assert_eq!(float_eq_hits("if 1e3 != y {").len(), 1);
+        assert_eq!(float_eq_hits("if x == 2f64 {").len(), 1);
+        assert_eq!(float_eq_hits("if n.fract() == 0.0 {").len(), 1);
+        assert!(float_eq_hits("if x <= 0.5 {").is_empty());
+        assert!(float_eq_hits("let f = |a: f64| a >= 1.0;").is_empty());
+        assert!(float_eq_hits("if count == 5 {").is_empty());
+        // documented limit: variable-vs-variable comparisons pass
+        assert!(float_eq_hits("if a.fmax == b.fmax {").is_empty());
+    }
+}

@@ -1,0 +1,832 @@
+//! Static lock-order checking against `tools/analysis/lock_order.toml`.
+//!
+//! The pass extracts every Mutex acquisition — `receiver.lock()` or the
+//! house poison-recovering form `locked(&receiver)` — from the scoped
+//! files, resolves each receiver to a declared lock via the manifest's
+//! alias table, and infers which acquisitions are *nested* (taken while
+//! another guard is live). Violations:
+//!
+//! * an acquisition whose receiver resolves to no declared lock;
+//! * a nested pair absent from the manifest's `nestings` list;
+//! * a nested pair that inverts the manifest's total `order`;
+//! * a lock nested inside itself (guaranteed self-deadlock with
+//!   `std::sync::Mutex`);
+//! * any cycle in the union of declared and observed nestings.
+//!
+//! Guard liveness is inferred conservatively from the token stream:
+//! a `let`-bound acquisition whose trailing call chain is only
+//! `.unwrap()` / `.expect(…)` / `?` holds its guard to the end of the
+//! enclosing block; a statement head that ends in `{` (`if let` /
+//! `while let` / `match` scrutinees) holds any guard it takes for that
+//! block, matching Rust's temporary-lifetime extension; everything
+//! else is a statement-scoped temporary. Over-approximation is fine —
+//! it can only surface a nesting for review, never hide one.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::scan::strip;
+use crate::Finding;
+
+/// Files the checker covers, relative to `rust/src`.
+pub const SCOPED_FILES: &[&str] = &[
+    "coordinator/scheduler.rs",
+    "coordinator/service/orchestrator.rs",
+    "dse/eval.rs",
+];
+
+/// One declared lock: a canonical name plus the receiver spellings that
+/// refer to it in source.
+#[derive(Debug, Clone)]
+pub struct LockDecl {
+    pub name: String,
+    pub aliases: Vec<String>,
+}
+
+/// The parsed `lock_order.toml`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub locks: Vec<LockDecl>,
+    pub order: Vec<String>,
+    pub nestings: Vec<(String, String)>,
+}
+
+impl Manifest {
+    /// Canonical lock name for a normalized receiver, if declared.
+    pub fn resolve(&self, receiver: &str) -> Option<&str> {
+        self.locks
+            .iter()
+            .find(|l| l.name == receiver || l.aliases.iter().any(|a| a == receiver))
+            .map(|l| l.name.as_str())
+    }
+
+    fn order_index(&self, name: &str) -> Option<usize> {
+        self.order.iter().position(|n| n == name)
+    }
+}
+
+/// Hand-rolled parser for the small TOML subset the manifest uses:
+/// `[[lock]]` tables with `name`/`aliases`, and top-level `order` /
+/// `nestings` single-line string arrays. No dependency needed.
+pub fn parse_manifest(text: &str) -> Result<Manifest, String> {
+    let mut m = Manifest::default();
+    let mut in_lock = false;
+    for (no, raw) in text.lines().enumerate() {
+        let line = strip_toml_comment(raw);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |what: &str| format!("lock_order.toml:{}: {what}", no + 1);
+        if line == "[[lock]]" {
+            m.locks.push(LockDecl {
+                name: String::new(),
+                aliases: Vec::new(),
+            });
+            in_lock = true;
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err("expected `key = value`"))?;
+        let (key, value) = (key.trim(), value.trim());
+        match key {
+            "name" if in_lock => {
+                let name = parse_toml_string(value).ok_or_else(|| err("bad string"))?;
+                m.locks.last_mut().expect("inside [[lock]]").name = name;
+            }
+            "aliases" if in_lock => {
+                let list = parse_toml_list(value).ok_or_else(|| err("bad string array"))?;
+                m.locks.last_mut().expect("inside [[lock]]").aliases = list;
+            }
+            "order" => {
+                in_lock = false;
+                m.order = parse_toml_list(value).ok_or_else(|| err("bad string array"))?;
+            }
+            "nestings" => {
+                in_lock = false;
+                for item in parse_toml_list(value).ok_or_else(|| err("bad string array"))? {
+                    let (a, b) = item
+                        .split_once("->")
+                        .ok_or_else(|| err("nesting entries are \"outer -> inner\""))?;
+                    m.nestings
+                        .push((a.trim().to_string(), b.trim().to_string()));
+                }
+            }
+            other => return Err(err(&format!("unknown key '{other}'"))),
+        }
+    }
+    // self-consistency
+    let mut seen = BTreeSet::new();
+    for l in &m.locks {
+        if l.name.is_empty() {
+            return Err("lock_order.toml: a [[lock]] is missing its name".into());
+        }
+        if !seen.insert(l.name.clone()) {
+            return Err(format!("lock_order.toml: duplicate lock '{}'", l.name));
+        }
+    }
+    for l in &m.locks {
+        if m.order_index(&l.name).is_none() {
+            return Err(format!(
+                "lock_order.toml: lock '{}' missing from `order`",
+                l.name
+            ));
+        }
+    }
+    for name in &m.order {
+        if !seen.contains(name) {
+            return Err(format!("lock_order.toml: `order` names unknown lock '{name}'"));
+        }
+    }
+    for (a, b) in &m.nestings {
+        if !seen.contains(a) || !seen.contains(b) {
+            return Err(format!(
+                "lock_order.toml: nesting '{a} -> {b}' names an undeclared lock"
+            ));
+        }
+    }
+    Ok(m)
+}
+
+fn strip_toml_comment(line: &str) -> String {
+    let mut out = String::new();
+    let mut in_str = false;
+    for c in line.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => break,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn parse_toml_string(v: &str) -> Option<String> {
+    let v = v.trim();
+    let inner = v.strip_prefix('"')?.strip_suffix('"')?;
+    Some(inner.to_string())
+}
+
+fn parse_toml_list(v: &str) -> Option<Vec<String>> {
+    let inner = v.trim().strip_prefix('[')?.strip_suffix(']')?.trim();
+    if inner.is_empty() {
+        return Some(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty()) // tolerate a trailing comma
+        .map(parse_toml_string)
+        .collect()
+}
+
+/// One Mutex acquisition site in a scanned file.
+#[derive(Debug, Clone)]
+pub struct Acquisition {
+    /// Char offset of the site (ordering within a statement).
+    pub pos: usize,
+    /// Char offset just past the call (start of any trailing chain).
+    pub end: usize,
+    /// 1-indexed source line.
+    pub line: usize,
+    /// Normalized receiver (`&`, `mut`, index/call arguments stripped).
+    pub receiver: String,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Strip `&` / `mut ` and drop bracketed segments: `queues[seed(i) % w]`
+/// → `queues`, `&self.map` → `self.map`.
+fn normalize_receiver(raw: &str) -> String {
+    let mut s = raw.trim();
+    while let Some(rest) = s.strip_prefix('&') {
+        s = rest.trim_start();
+    }
+    if let Some(rest) = s.strip_prefix("mut ") {
+        s = rest.trim_start();
+    }
+    let mut out = String::new();
+    let mut depth = 0usize;
+    for c in s.chars() {
+        match c {
+            '[' | '(' => depth += 1,
+            ']' | ')' => depth = depth.saturating_sub(1),
+            _ if depth == 0 => out.push(c),
+            _ => {}
+        }
+    }
+    out.trim_matches(|c: char| c == '.' || c.is_whitespace())
+        .to_string()
+}
+
+/// Walk back from `end` (exclusive) over an expression tail: identifier
+/// chars, `.`, and balanced `[...]` / `(...)` groups. Returns the start.
+fn expr_start(t: &[char], end: usize) -> usize {
+    let mut k = end;
+    while k > 0 {
+        let c = t[k - 1];
+        if is_ident(c) || c == '.' {
+            k -= 1;
+        } else if c == ']' || c == ')' {
+            let open = if c == ']' { '[' } else { '(' };
+            let mut depth = 1usize;
+            let mut j = k - 1;
+            while j > 0 && depth > 0 {
+                j -= 1;
+                if t[j] == c {
+                    depth += 1;
+                } else if t[j] == open {
+                    depth -= 1;
+                }
+            }
+            if depth != 0 {
+                break;
+            }
+            k = j;
+        } else {
+            break;
+        }
+    }
+    k
+}
+
+fn matching_close(t: &[char], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (i, &c) in t.iter().enumerate().skip(open) {
+        if c == '(' {
+            depth += 1;
+        } else if c == ')' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+/// Find every acquisition in stripped code (flattened to chars).
+pub fn find_acquisitions(t: &[char], line_of: &[usize]) -> Vec<Acquisition> {
+    let mut out = Vec::new();
+    let dot_lock: Vec<char> = ".lock()".chars().collect();
+    let locked: Vec<char> = "locked(".chars().collect();
+    let mut i = 0usize;
+    while i < t.len() {
+        if i + dot_lock.len() <= t.len() && t[i..i + dot_lock.len()] == dot_lock[..] {
+            let start = expr_start(t, i);
+            let raw: String = t[start..i].iter().collect();
+            let receiver = normalize_receiver(&raw);
+            if !receiver.is_empty() {
+                out.push(Acquisition {
+                    pos: i,
+                    end: i + dot_lock.len(),
+                    line: line_of[i] + 1,
+                    receiver,
+                });
+            }
+            i += dot_lock.len();
+        } else if i + locked.len() <= t.len()
+            && t[i..i + locked.len()] == locked[..]
+            && (i == 0 || (!is_ident(t[i - 1]) && t[i - 1] != '.'))
+        {
+            let open = i + locked.len() - 1;
+            if let Some(close) = matching_close(t, open) {
+                let raw: String = t[open + 1..close].iter().collect();
+                let receiver = normalize_receiver(&raw);
+                if !receiver.is_empty() {
+                    out.push(Acquisition {
+                        pos: i,
+                        end: close + 1,
+                        line: line_of[i] + 1,
+                        receiver,
+                    });
+                }
+                i = open + 1; // keep scanning inside the argument too
+            } else {
+                i += locked.len();
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out.sort_by_key(|a| a.pos);
+    out
+}
+
+/// A nesting observed in source: `inner` acquired at `line` while
+/// `outer` was held.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct NestedPair {
+    pub outer: String,
+    pub inner: String,
+    pub file: String,
+    pub line: usize,
+}
+
+/// True when the chars after an acquisition, up to the statement end,
+/// are only `.unwrap()` / `.expect(…)` / `?` chains (guard survives the
+/// statement).
+fn chain_is_guard_clean(t: &[char], mut i: usize, end: usize) -> bool {
+    loop {
+        while i < end && t[i].is_whitespace() {
+            i += 1;
+        }
+        if i >= end || t[i] == ';' {
+            return true;
+        }
+        if t[i] == '?' {
+            i += 1;
+            continue;
+        }
+        if starts_with_at(t, i, ".unwrap()") {
+            i += ".unwrap()".len();
+            continue;
+        }
+        if starts_with_at(t, i, ".expect(") {
+            match matching_close(t, i + ".expect(".len() - 1) {
+                Some(close) if close < end => i = close + 1,
+                _ => return false,
+            }
+            continue;
+        }
+        return false;
+    }
+}
+
+fn starts_with_at(t: &[char], i: usize, pat: &str) -> bool {
+    let p: Vec<char> = pat.chars().collect();
+    i + p.len() <= t.len() && t[i..i + p.len()] == p[..]
+}
+
+/// Extract observed nestings (and recursive acquisitions, as findings)
+/// from one file. Returns (nested pairs, findings for unresolvable or
+/// recursive sites).
+pub fn analyze_file(
+    rel: &str,
+    text: &str,
+    manifest: &Manifest,
+) -> (Vec<NestedPair>, Vec<Finding>) {
+    let stripped = strip(text);
+    let code = stripped.code.join("\n");
+    let t: Vec<char> = code.chars().collect();
+    let mut line_of = Vec::with_capacity(t.len());
+    let mut ln = 0usize;
+    for &c in &t {
+        line_of.push(ln);
+        if c == '\n' {
+            ln += 1;
+        }
+    }
+    let acqs = find_acquisitions(&t, &line_of);
+
+    let mut findings = Vec::new();
+    // resolve every receiver first; unknown sites are findings and drop
+    // out of nesting inference
+    let resolved: Vec<Option<String>> = acqs
+        .iter()
+        .map(|a| match manifest.resolve(&a.receiver) {
+            Some(name) => Some(name.to_string()),
+            None => {
+                findings.push(Finding::new(
+                    rel,
+                    a.line,
+                    "lock-order",
+                    format!(
+                        "acquisition of undeclared lock '{}' (add it to tools/analysis/lock_order.toml)",
+                        a.receiver
+                    ),
+                ));
+                None
+            }
+        })
+        .collect();
+
+    // statement segmentation with brace scoping; a held guard is
+    // (lock name, brace depth it dies below)
+    let mut pairs = Vec::new();
+    let mut held: Vec<(String, usize)> = Vec::new();
+    let mut brace_depth = 0usize;
+    let mut stmt_start = 0usize;
+    let mut ai = 0usize; // next acquisition index ≥ stmt_start
+    let process = |start: usize,
+                       end: usize,
+                       opens_block: bool,
+                       depth: usize,
+                       ai: &mut usize,
+                       held: &mut Vec<(String, usize)>,
+                       pairs: &mut Vec<NestedPair>,
+                       findings: &mut Vec<Finding>| {
+        let mut in_stmt: Vec<usize> = Vec::new();
+        while *ai < acqs.len() && acqs[*ai].pos < end {
+            if acqs[*ai].pos >= start {
+                in_stmt.push(*ai);
+            }
+            *ai += 1;
+        }
+        if in_stmt.is_empty() {
+            return;
+        }
+        let stmt: String = t[start..end].iter().collect();
+        let has_let = stmt_has_let(&stmt, acqs[in_stmt[0]].pos - start);
+        for (k, &idx) in in_stmt.iter().enumerate() {
+            let Some(name) = &resolved[idx] else { continue };
+            let a = &acqs[idx];
+            // against live block-scoped guards
+            for (outer, _) in held.iter() {
+                push_pair(outer, name, rel, a.line, pairs, findings);
+            }
+            // against earlier acquisitions in the same statement (their
+            // temporaries live to the statement end)
+            for &prev in &in_stmt[..k] {
+                if let Some(outer) = &resolved[prev] {
+                    push_pair(outer, name, rel, a.line, pairs, findings);
+                }
+            }
+        }
+        // register guards that outlive the statement
+        for &idx in &in_stmt {
+            let Some(name) = &resolved[idx] else { continue };
+            let a = &acqs[idx];
+            if opens_block {
+                // if/while-let or match head: temporaries extend over
+                // the block that follows
+                held.push((name.clone(), depth + 1));
+            } else if has_let && chain_is_guard_clean(&t, a.end, end) {
+                held.push((name.clone(), depth));
+            }
+        }
+    };
+    let mut i = 0usize;
+    while i < t.len() {
+        match t[i] {
+            '{' => {
+                process(
+                    stmt_start,
+                    i,
+                    true,
+                    brace_depth,
+                    &mut ai,
+                    &mut held,
+                    &mut pairs,
+                    &mut findings,
+                );
+                brace_depth += 1;
+                stmt_start = i + 1;
+            }
+            '}' => {
+                process(
+                    stmt_start,
+                    i,
+                    false,
+                    brace_depth,
+                    &mut ai,
+                    &mut held,
+                    &mut pairs,
+                    &mut findings,
+                );
+                brace_depth = brace_depth.saturating_sub(1);
+                held.retain(|(_, scope)| *scope <= brace_depth);
+                stmt_start = i + 1;
+            }
+            ';' => {
+                process(
+                    stmt_start,
+                    i + 1,
+                    false,
+                    brace_depth,
+                    &mut ai,
+                    &mut held,
+                    &mut pairs,
+                    &mut findings,
+                );
+                stmt_start = i + 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    process(
+        stmt_start,
+        t.len(),
+        false,
+        brace_depth,
+        &mut ai,
+        &mut held,
+        &mut pairs,
+        &mut findings,
+    );
+    (pairs, findings)
+}
+
+fn stmt_has_let(stmt: &str, before: usize) -> bool {
+    let chars: Vec<char> = stmt.chars().collect();
+    let limit = before.min(chars.len());
+    let p: Vec<char> = "let ".chars().collect();
+    (0..limit.saturating_sub(p.len() - 1)).any(|i| {
+        chars[i..i + p.len()] == p[..] && (i == 0 || !is_ident(chars[i - 1]))
+    })
+}
+
+fn push_pair(
+    outer: &str,
+    inner: &str,
+    rel: &str,
+    line: usize,
+    pairs: &mut Vec<NestedPair>,
+    findings: &mut Vec<Finding>,
+) {
+    if outer == inner {
+        findings.push(Finding::new(
+            rel,
+            line,
+            "lock-order",
+            format!("'{inner}' acquired while already held (std::sync::Mutex self-deadlock)"),
+        ));
+    } else {
+        pairs.push(NestedPair {
+            outer: outer.to_string(),
+            inner: inner.to_string(),
+            file: rel.to_string(),
+            line,
+        });
+    }
+}
+
+/// Check a set of already-loaded sources against a manifest.
+pub fn check_sources(manifest: &Manifest, sources: &[(&str, &str)]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut observed: Vec<NestedPair> = Vec::new();
+    for (rel, text) in sources {
+        let (pairs, mut f) = analyze_file(rel, text, manifest);
+        findings.append(&mut f);
+        observed.extend(pairs);
+    }
+    observed.sort();
+    observed.dedup();
+    for p in &observed {
+        let declared = manifest
+            .nestings
+            .iter()
+            .any(|(a, b)| *a == p.outer && *b == p.inner);
+        if !declared {
+            findings.push(Finding::new(
+                &p.file,
+                p.line,
+                "lock-order",
+                format!(
+                    "undeclared nesting: '{}' acquired while holding '{}' \
+                     (declare it in lock_order.toml nestings)",
+                    p.inner, p.outer
+                ),
+            ));
+        }
+        if let (Some(oi), Some(ii)) = (
+            manifest.order_index(&p.outer),
+            manifest.order_index(&p.inner),
+        ) {
+            if oi >= ii {
+                findings.push(Finding::new(
+                    &p.file,
+                    p.line,
+                    "lock-order",
+                    format!(
+                        "nesting '{}' -> '{}' inverts the declared total order",
+                        p.outer, p.inner
+                    ),
+                ));
+            }
+        }
+    }
+    // cycle check over declared ∪ observed edges
+    let mut edges: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (a, b) in &manifest.nestings {
+        edges.entry(a).or_default().insert(b);
+    }
+    for p in &observed {
+        edges.entry(&p.outer).or_default().insert(&p.inner);
+    }
+    if let Some(cycle) = find_cycle(&edges) {
+        findings.push(Finding::new(
+            "lock_order.toml",
+            0,
+            "lock-order",
+            format!("nesting graph has a cycle: {}", cycle.join(" -> ")),
+        ));
+    }
+    findings
+}
+
+fn find_cycle<'a>(edges: &BTreeMap<&'a str, BTreeSet<&'a str>>) -> Option<Vec<String>> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Mark {
+        White,
+        Grey,
+        Black,
+    }
+    fn visit<'a>(
+        n: &'a str,
+        edges: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+        marks: &mut BTreeMap<&'a str, Mark>,
+        path: &mut Vec<&'a str>,
+    ) -> bool {
+        match marks.get(n).copied().unwrap_or(Mark::White) {
+            Mark::Black => return false,
+            Mark::Grey => {
+                path.push(n);
+                return true;
+            }
+            Mark::White => {}
+        }
+        marks.insert(n, Mark::Grey);
+        path.push(n);
+        if let Some(next) = edges.get(n) {
+            for m in next {
+                if visit(m, edges, marks, path) {
+                    return true;
+                }
+            }
+        }
+        marks.insert(n, Mark::Black);
+        path.pop();
+        false
+    }
+    let mut marks = BTreeMap::new();
+    for &n in edges.keys() {
+        let mut path = Vec::new();
+        if visit(n, edges, &mut marks, &mut path) {
+            return Some(path.iter().map(|s| s.to_string()).collect());
+        }
+    }
+    None
+}
+
+/// Run the pass against the real tree: load the manifest and the scoped
+/// files under `repo_root`.
+pub fn run(repo_root: &Path) -> Result<Vec<Finding>> {
+    let manifest_path = repo_root.join("tools/analysis/lock_order.toml");
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let manifest = parse_manifest(&text).map_err(anyhow::Error::msg)?;
+    let mut loaded = Vec::new();
+    for rel in SCOPED_FILES {
+        let path = repo_root.join("rust/src").join(rel);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        loaded.push((*rel, text));
+    }
+    let sources: Vec<(&str, &str)> = loaded.iter().map(|(r, t)| (*r, t.as_str())).collect();
+    Ok(check_sources(&manifest, &sources))
+}
+
+/// A synthetic source nesting two declared locks without a declaration
+/// — used by `analysis --seed lock-order` and the self-tests.
+pub const SEEDED_VIOLATION: (&str, &str) = (
+    "seeded/lock_order.rs",
+    "pub fn seeded(queues: &[std::sync::Mutex<Vec<u8>>]) {\n    \
+     let held = locked(&queues[0]);\n    \
+     let inner = locked(&queues[1]).len();\n    \
+     drop(held);\n    \
+     let _ = inner;\n}\n",
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        parse_manifest(
+            r#"
+[[lock]]
+name = "a"
+aliases = ["alpha", "self.alpha"]
+
+[[lock]]
+name = "b"
+aliases = ["beta"]
+
+order = ["a", "b"]
+nestings = ["a -> b"]
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn manifest_parses_and_resolves_aliases() {
+        let m = manifest();
+        assert_eq!(m.resolve("alpha"), Some("a"));
+        assert_eq!(m.resolve("self.alpha"), Some("a"));
+        assert_eq!(m.resolve("a"), Some("a"));
+        assert_eq!(m.resolve("gamma"), None);
+        assert_eq!(m.nestings, vec![("a".to_string(), "b".to_string())]);
+    }
+
+    #[test]
+    fn manifest_rejects_inconsistency() {
+        assert!(parse_manifest("[[lock]]\nname = \"a\"\norder = []\n").is_err());
+        assert!(parse_manifest("order = [\"ghost\"]\n").is_err());
+        assert!(parse_manifest("nestings = [\"x -> y\"]\n").is_err());
+    }
+
+    #[test]
+    fn declared_nesting_in_order_passes() {
+        let src = "fn f() {\n    let g = locked(&alpha);\n    let n = locked(&beta).len();\n    drop(g);\n}\n";
+        let findings = check_sources(&manifest(), &[("m.rs", src)]);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn inverted_nesting_is_flagged() {
+        let src = "fn f() {\n    let g = locked(&beta);\n    let n = locked(&alpha).len();\n    drop(g);\n}\n";
+        let findings = check_sources(&manifest(), &[("m.rs", src)]);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.message.contains("undeclared nesting")),
+            "{findings:?}"
+        );
+        assert!(
+            findings.iter().any(|f| f.message.contains("cycle")),
+            "b -> a plus declared a -> b must close a cycle: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn recursive_acquisition_is_flagged() {
+        let src = "fn f() {\n    let g = locked(&alpha);\n    let h = self.alpha.lock().unwrap();\n}\n";
+        let findings = check_sources(&manifest(), &[("m.rs", src)]);
+        assert!(
+            findings.iter().any(|f| f.message.contains("self-deadlock")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn unknown_receiver_is_flagged() {
+        let src = "fn f() {\n    let g = mystery.lock().unwrap();\n}\n";
+        let findings = check_sources(&manifest(), &[("m.rs", src)]);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("undeclared lock 'mystery'"));
+    }
+
+    #[test]
+    fn statement_temporaries_do_not_leak_guards() {
+        // back-to-back temporary acquisitions never nest
+        let src =
+            "fn f() {\n    let x = locked(&alpha).pop();\n    let y = locked(&beta).pop();\n}\n";
+        let findings = check_sources(&manifest(), &[("m.rs", src)]);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn same_statement_nesting_is_observed() {
+        // beta taken while alpha's temporary is still live (same stmt):
+        // declared a -> b, so clean...
+        let ok = "fn f() {\n    let x = locked(&alpha).merge(locked(&beta).take());\n}\n";
+        assert!(check_sources(&manifest(), &[("m.rs", ok)]).is_empty());
+        // ... but the inverse direction is a violation
+        let bad = "fn f() {\n    let x = locked(&beta).merge(locked(&alpha).take());\n}\n";
+        assert!(!check_sources(&manifest(), &[("m.rs", bad)]).is_empty());
+    }
+
+    #[test]
+    fn if_let_heads_hold_their_guard_over_the_block() {
+        let src = "fn f() {\n    if let Ok(g) = beta.lock() {\n        let n = locked(&alpha).len();\n    }\n}\n";
+        let findings = check_sources(&manifest(), &[("m.rs", src)]);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.message.contains("undeclared nesting")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn brace_scope_releases_guards() {
+        let src = "fn f() {\n    {\n        let g = locked(&beta);\n    }\n    let n = locked(&alpha).len();\n}\n";
+        let findings = check_sources(&manifest(), &[("m.rs", src)]);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn seeded_violation_fails_against_the_real_manifest() {
+        let text = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/lock_order.toml"
+        ))
+        .unwrap();
+        let m = parse_manifest(&text).unwrap();
+        let (rel, src) = SEEDED_VIOLATION;
+        let findings = check_sources(&m, &[(rel, src)]);
+        assert!(
+            findings.iter().any(|f| f.message.contains("self-deadlock")),
+            "{findings:?}"
+        );
+    }
+}

@@ -1,0 +1,184 @@
+//! Driver for the in-repo analysis suite.
+//!
+//! ```text
+//! cargo run -p analysis --release              # all passes
+//! cargo run -p analysis --release lints        # custom source lints only
+//! cargo run -p analysis --release locks        # static lock-order check only
+//! cargo run -p analysis --release mc           # kernel bounded model checker
+//! cargo run -p analysis --release fuzz         # hostile-input fuzz (fast tier)
+//! cargo run -p analysis --release -- --seed panic
+//! ```
+//!
+//! `--seed <panic|nondet|float-eq|lock-order>` injects a synthetic
+//! violating source into the corresponding pass and must exit nonzero —
+//! CI uses this to prove the suite still *fails* on real violations
+//! (an analysis pass that always passes is dead weight).
+//!
+//! Exit code: 0 when every requested pass is clean, 1 otherwise.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use analysis::{fuzz, lints, locks, mc, Finding};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+fn report(pass: &str, findings: &[Finding]) -> bool {
+    if findings.is_empty() {
+        println!("analysis: {pass}: clean");
+        return true;
+    }
+    for f in findings {
+        println!("{f}");
+    }
+    println!("analysis: {pass}: {} finding(s)", findings.len());
+    false
+}
+
+fn run_lints(root: &Path) -> bool {
+    match lints::run(&root.join("rust/src")) {
+        Ok(findings) => report("lints", &findings),
+        Err(e) => {
+            println!("analysis: lints: error: {e:#}");
+            false
+        }
+    }
+}
+
+fn run_locks(root: &Path) -> bool {
+    match locks::run(root) {
+        Ok(findings) => report("locks", &findings),
+        Err(e) => {
+            println!("analysis: locks: error: {e:#}");
+            false
+        }
+    }
+}
+
+fn run_mc() -> bool {
+    let cfg = mc::McConfig::default();
+    match mc::explore(&cfg) {
+        Ok(stats) => {
+            println!(
+                "analysis: mc: clean — {} interleavings ({} nodes) at depth {}, \
+                 coverage: {} finished / {} failed / {} rejected / {} queued-cancels / \
+                 {} running-cancels / {} shutdown-drains",
+                stats.leaves,
+                stats.nodes,
+                cfg.depth,
+                stats.finished,
+                stats.failed,
+                stats.rejected,
+                stats.cancelled_queued,
+                stats.cancelled_running,
+                stats.shutdown_drains,
+            );
+            true
+        }
+        Err(e) => {
+            println!("analysis: mc: VIOLATION\n{e}");
+            false
+        }
+    }
+}
+
+fn run_fuzz(scale: u64) -> bool {
+    match fuzz::run(0xC2A7_2026, scale) {
+        Ok(outcomes) => {
+            for o in &outcomes {
+                println!(
+                    "analysis: fuzz: {}: clean — {} inputs ({} accepted, {} rejected)",
+                    o.target, o.inputs, o.accepted, o.rejected
+                );
+            }
+            true
+        }
+        Err(e) => {
+            println!("analysis: fuzz: FAILURE\n{e}");
+            false
+        }
+    }
+}
+
+fn run_seeded(root: &Path, class: &str) -> Result<bool, String> {
+    if class == "lock-order" {
+        let manifest_text = std::fs::read_to_string(root.join("tools/analysis/lock_order.toml"))
+            .map_err(|e| format!("reading lock_order.toml: {e}"))?;
+        let manifest = locks::parse_manifest(&manifest_text)?;
+        let (rel, text) = locks::SEEDED_VIOLATION;
+        return Ok(report("locks[seeded]", &locks::check_sources(&manifest, &[(rel, text)])));
+    }
+    let (rel, text) = lints::seeded_violation(class)
+        .ok_or_else(|| format!("unknown seed class '{class}' (panic|nondet|float-eq|lock-order)"))?;
+    Ok(report("lints[seeded]", &lints::lint_file(rel, text)))
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let root = repo_root();
+
+    // seeded-violation mode: the pass must FIND something, so a clean
+    // report here still exits nonzero (that is the point of the mode)
+    if let Some(pos) = args.iter().position(|a| a == "--seed") {
+        let Some(class) = args.get(pos + 1) else {
+            println!("analysis: --seed requires a class (panic|nondet|float-eq|lock-order)");
+            return ExitCode::FAILURE;
+        };
+        return match run_seeded(&root, class) {
+            Ok(clean) => {
+                if clean {
+                    println!("analysis: seeded '{class}' violation was NOT caught");
+                }
+                ExitCode::from(u8::from(!clean))
+            }
+            Err(e) => {
+                println!("analysis: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let mut scale = 1;
+    let mut pass = String::from("all");
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        if arg == "--fuzz-scale" {
+            match it.next().and_then(|v| v.parse().ok()) {
+                Some(v) if v > 0 => scale = v,
+                _ => {
+                    println!("analysis: --fuzz-scale requires a positive integer");
+                    return ExitCode::FAILURE;
+                }
+            }
+        } else if !arg.starts_with("--") {
+            pass = arg.clone();
+        }
+    }
+    let pass = pass.as_str();
+
+    let ok = match pass {
+        "all" => {
+            let a = run_lints(&root);
+            let b = run_locks(&root);
+            let c = run_mc();
+            let d = run_fuzz(scale);
+            a && b && c && d
+        }
+        "lints" => run_lints(&root),
+        "locks" => run_locks(&root),
+        "mc" => run_mc(),
+        "fuzz" => run_fuzz(scale),
+        other => {
+            println!("analysis: unknown pass '{other}' (all|lints|locks|mc|fuzz)");
+            false
+        }
+    };
+    if ok {
+        println!("analysis: all requested passes clean");
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

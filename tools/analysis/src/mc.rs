@@ -1,0 +1,525 @@
+//! Bounded model checker for the compile-service kernel.
+//!
+//! The service splits into a pure decision core
+//! ([`kernel`](cnn2gate::coordinator::service::kernel) +
+//! [`Reducer`](cnn2gate::coordinator::service::Reducer)) and a threaded
+//! shell (the orchestrator). This checker exhaustively enumerates every
+//! interleaving of the shell's observable actions — Submit, Cancel (of
+//! a queued or running job), worker completion (success and failure)
+//! and Shutdown — up to a depth bound, driving the *real* kernel
+//! functions and the *real* reducer, and asserts the service invariants
+//! at every node:
+//!
+//! * the admission queue never exceeds its capacity;
+//! * running jobs never exceed the worker slots;
+//! * the reducer's job states stay coherent with the queue/running sets
+//!   (no lost jobs, no duplicated jobs, terminal means gone);
+//! * launches are fair: the launched job minimizes the documented
+//!   `(running-of-tenant, served-of-tenant, cost, seq)` key, checked
+//!   against an independent re-derivation, so [`pick_next`] cannot
+//!   silently regress into a starvation policy;
+//! * after Shutdown the queue is drained (every queued job cancelled)
+//!   and new submissions are rejected;
+//! * at every leaf, [`Reducer::replay`] of the event log reconstructs
+//!   the live reducer exactly, and every per-job event stream is a
+//!   legal lifecycle (admission first, at most one terminal event,
+//!   nothing after it).
+//!
+//! With the default bound (2 workers, capacity 2, 5 submissions, depth
+//! 6) the tree has ~212k leaves — comfortably past the 10k-interleaving
+//! gate — and still runs in seconds because each step is pure data.
+//! Five submissions (not four) make the queue-full rejection reachable:
+//! two launch immediately, two fill the queue, the fifth bounces.
+
+use std::collections::HashMap;
+
+use cnn2gate::coordinator::service::kernel::{pick_next, QueueView};
+use cnn2gate::coordinator::service::{Event, JobId, JobState, Reducer};
+use cnn2gate::dse::TenantId;
+
+/// Exploration bounds.
+#[derive(Debug, Clone, Copy)]
+pub struct McConfig {
+    pub workers: usize,
+    pub capacity: usize,
+    pub max_submits: usize,
+    pub depth: usize,
+}
+
+impl Default for McConfig {
+    fn default() -> Self {
+        McConfig {
+            workers: 2,
+            capacity: 2,
+            max_submits: 5,
+            depth: 6,
+        }
+    }
+}
+
+/// What the exploration saw. `leaves` is the number of complete
+/// interleavings checked end-to-end.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct McStats {
+    pub nodes: u64,
+    pub leaves: u64,
+    pub rejected: u64,
+    pub cancelled_queued: u64,
+    pub cancelled_running: u64,
+    pub shutdown_drains: u64,
+    pub finished: u64,
+    pub failed: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Action {
+    Submit { tenant: u8, cost: u64 },
+    CancelQueued(u64),
+    CancelRunning(u64),
+    DoneOk(u64),
+    DoneErr(u64),
+    Shutdown,
+}
+
+#[derive(Clone)]
+struct QueuedJob {
+    id: u64,
+    tenant: TenantId,
+    cost: u64,
+}
+
+#[derive(Clone)]
+struct RunningJob {
+    id: u64,
+    tenant: TenantId,
+    cancel_flag: bool,
+}
+
+/// The orchestrator shell modeled over the real kernel + reducer: the
+/// same admission, drain, launch and completion rules as
+/// `orchestrator.rs`, minus threads and channels.
+#[derive(Clone)]
+struct Model {
+    reducer: Reducer,
+    queue: Vec<QueuedJob>,
+    running: Vec<RunningJob>,
+    running_counts: HashMap<u64, usize>,
+    served: HashMap<u64, usize>,
+    next_id: u64,
+    submits: usize,
+    shutdown: bool,
+}
+
+fn tenant_of(tag: u8) -> TenantId {
+    if tag == 0 {
+        TenantId::DEFAULT
+    } else {
+        TenantId::of("acme")
+    }
+}
+
+impl Model {
+    fn new() -> Model {
+        Model {
+            reducer: Reducer::new(),
+            queue: Vec::new(),
+            running: Vec::new(),
+            running_counts: HashMap::new(),
+            served: HashMap::new(),
+            next_id: 0,
+            submits: 0,
+            shutdown: false,
+        }
+    }
+
+    fn actions(&self, cfg: &McConfig) -> Vec<Action> {
+        let mut out = Vec::new();
+        if self.submits < cfg.max_submits {
+            for tenant in 0..2u8 {
+                for cost in [1, 5] {
+                    out.push(Action::Submit { tenant, cost });
+                }
+            }
+        }
+        for q in &self.queue {
+            out.push(Action::CancelQueued(q.id));
+        }
+        for r in &self.running {
+            if !r.cancel_flag {
+                out.push(Action::CancelRunning(r.id));
+            }
+        }
+        for r in &self.running {
+            out.push(Action::DoneOk(r.id));
+            out.push(Action::DoneErr(r.id));
+        }
+        if !self.shutdown {
+            out.push(Action::Shutdown);
+        }
+        out
+    }
+
+    fn apply(&mut self, action: &Action, cfg: &McConfig, stats: &mut McStats) -> Result<(), String> {
+        match *action {
+            Action::Submit { tenant, cost } => {
+                let job = JobId(self.next_id);
+                self.next_id += 1;
+                self.submits += 1;
+                let tenant = tenant_of(tenant);
+                if self.shutdown {
+                    stats.rejected += 1;
+                    self.reducer.apply(&Event::Rejected {
+                        job,
+                        tenant,
+                        reason: "service shutting down".into(),
+                    });
+                } else if self.queue.len() >= cfg.capacity.max(1) {
+                    stats.rejected += 1;
+                    self.reducer.apply(&Event::Rejected {
+                        job,
+                        tenant,
+                        reason: format!("admission queue full ({} jobs)", self.queue.len()),
+                    });
+                } else {
+                    self.reducer.apply(&Event::Accepted {
+                        job,
+                        tenant,
+                        queue_depth: self.queue.len(),
+                    });
+                    self.queue.push(QueuedJob {
+                        id: job.0,
+                        tenant,
+                        cost,
+                    });
+                    self.launch_ready(cfg)?;
+                }
+            }
+            Action::CancelQueued(id) => {
+                let pos = self
+                    .queue
+                    .iter()
+                    .position(|q| q.id == id)
+                    .ok_or_else(|| format!("cancel of unqueued job {id}"))?;
+                self.queue.remove(pos);
+                stats.cancelled_queued += 1;
+                self.reducer.apply(&Event::Cancelled { job: JobId(id) });
+            }
+            Action::CancelRunning(id) => {
+                let r = self
+                    .running
+                    .iter_mut()
+                    .find(|r| r.id == id)
+                    .ok_or_else(|| format!("cancel of non-running job {id}"))?;
+                r.cancel_flag = true;
+            }
+            Action::DoneOk(id) => {
+                self.finish(id, true, cfg, stats)?;
+            }
+            Action::DoneErr(id) => {
+                self.finish(id, false, cfg, stats)?;
+            }
+            Action::Shutdown => {
+                self.shutdown = true;
+                if !self.queue.is_empty() {
+                    stats.shutdown_drains += 1;
+                }
+                for q in std::mem::take(&mut self.queue) {
+                    self.reducer.apply(&Event::Cancelled { job: JobId(q.id) });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Completion: the orchestrator counts the tenant as served, then
+    /// reports Finished on success (even when a cancel raced in late —
+    /// the result is real), Cancelled on a flagged failure, Failed
+    /// otherwise; the freed slot immediately launches more work.
+    fn finish(
+        &mut self,
+        id: u64,
+        ok: bool,
+        cfg: &McConfig,
+        stats: &mut McStats,
+    ) -> Result<(), String> {
+        let pos = self
+            .running
+            .iter()
+            .position(|r| r.id == id)
+            .ok_or_else(|| format!("completion of non-running job {id}"))?;
+        let r = self.running.remove(pos);
+        let t = r.tenant.as_u64();
+        *self.served.entry(t).or_insert(0) += 1;
+        let slot = self
+            .running_counts
+            .get_mut(&t)
+            .ok_or_else(|| format!("running count missing for tenant {t}"))?;
+        *slot = slot.saturating_sub(1);
+        let event = if ok {
+            stats.finished += 1;
+            Event::Finished {
+                job: JobId(id),
+                outcome_json: "{}".into(),
+            }
+        } else if r.cancel_flag {
+            stats.cancelled_running += 1;
+            Event::Cancelled { job: JobId(id) }
+        } else {
+            stats.failed += 1;
+            Event::Failed {
+                job: JobId(id),
+                error: "boom".into(),
+            }
+        };
+        self.reducer.apply(&event);
+        self.launch_ready(cfg)
+    }
+
+    /// Fill free worker slots via the real [`pick_next`], re-deriving
+    /// the fairness key independently to pin the policy.
+    fn launch_ready(&mut self, cfg: &McConfig) -> Result<(), String> {
+        while !self.shutdown
+            && self.running.len() < cfg.workers.max(1)
+            && !self.queue.is_empty()
+        {
+            let views: Vec<QueueView> = self
+                .queue
+                .iter()
+                .map(|q| QueueView {
+                    seq: q.id,
+                    tenant: q.tenant,
+                    cost: q.cost,
+                })
+                .collect();
+            let pick = pick_next(&views, &self.running_counts, &self.served)
+                .ok_or("pick_next returned None for a non-empty queue")?;
+            let key = |v: &QueueView| {
+                let t = v.tenant.as_u64();
+                (
+                    self.running_counts.get(&t).copied().unwrap_or(0),
+                    self.served.get(&t).copied().unwrap_or(0),
+                    v.cost,
+                    v.seq,
+                )
+            };
+            let min_key = views.iter().map(key).min().ok_or("empty views")?;
+            if key(&views[pick]) != min_key {
+                return Err(format!(
+                    "fairness violation: pick_next chose {:?} but the minimum key is {min_key:?}",
+                    key(&views[pick])
+                ));
+            }
+            let q = self.queue.remove(pick);
+            self.reducer.apply(&Event::Started { job: JobId(q.id) });
+            *self.running_counts.entry(q.tenant.as_u64()).or_insert(0) += 1;
+            self.running.push(RunningJob {
+                id: q.id,
+                tenant: q.tenant,
+                cancel_flag: false,
+            });
+        }
+        Ok(())
+    }
+
+    /// Invariants checked at every node.
+    fn check(&self, cfg: &McConfig) -> Result<(), String> {
+        if self.queue.len() > cfg.capacity.max(1) {
+            return Err(format!(
+                "queue bound broken: {} queued > capacity {}",
+                self.queue.len(),
+                cfg.capacity
+            ));
+        }
+        if self.running.len() > cfg.workers.max(1) {
+            return Err(format!(
+                "worker bound broken: {} running > workers {}",
+                self.running.len(),
+                cfg.workers
+            ));
+        }
+        if self.shutdown && !self.queue.is_empty() {
+            return Err("shutdown left jobs in the queue".into());
+        }
+        // reducer coherence: exactly the queue is Queued, exactly the
+        // running set is Running, everything else is terminal
+        for q in &self.queue {
+            match self.reducer.get(JobId(q.id)) {
+                Some(rec) if rec.state == JobState::Queued => {}
+                other => return Err(format!("queued job {} recorded as {other:?}", q.id)),
+            }
+        }
+        for r in &self.running {
+            match self.reducer.get(JobId(r.id)) {
+                Some(rec) if rec.state == JobState::Running => {}
+                other => return Err(format!("running job {} recorded as {other:?}", r.id)),
+            }
+        }
+        for (job, rec) in self.reducer.jobs() {
+            let queued = self.queue.iter().any(|q| q.id == job.0);
+            let running = self.running.iter().any(|r| r.id == job.0);
+            let want = match rec.state {
+                JobState::Queued => (true, false),
+                JobState::Running => (false, true),
+                _ => (false, false),
+            };
+            if (queued, running) != want {
+                return Err(format!(
+                    "job {} in state {:?} but (queued, running) = {:?}",
+                    job.0,
+                    rec.state,
+                    (queued, running)
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Leaf-only checks: replay exactness and per-job stream legality.
+    fn check_leaf(&self) -> Result<(), String> {
+        if Reducer::replay(self.reducer.log()) != self.reducer {
+            return Err("replay of the event log diverged from the live reducer".into());
+        }
+        // stream legality, tracked independently of kernel::step
+        #[derive(PartialEq, Debug, Clone, Copy)]
+        enum Phase {
+            Queued,
+            Running,
+            Terminal,
+        }
+        let mut phases: HashMap<u64, Phase> = HashMap::new();
+        for event in self.reducer.log() {
+            let id = event.job().0;
+            let cur = phases.get(&id).copied();
+            let next = match (cur, event) {
+                (None, Event::Accepted { .. }) => Phase::Queued,
+                (None, Event::Rejected { .. }) => Phase::Terminal,
+                (Some(Phase::Queued), Event::Started { .. }) => Phase::Running,
+                (Some(Phase::Queued), Event::Cancelled { .. }) => Phase::Terminal,
+                (Some(Phase::Running), Event::Finished { .. })
+                | (Some(Phase::Running), Event::Failed { .. })
+                | (Some(Phase::Running), Event::Cancelled { .. }) => Phase::Terminal,
+                (Some(Phase::Running), Event::Progress { .. }) => Phase::Running,
+                (cur, e) => {
+                    return Err(format!(
+                        "illegal event for job {id} in phase {cur:?}: {e:?}"
+                    ))
+                }
+            };
+            phases.insert(id, next);
+        }
+        Ok(())
+    }
+}
+
+fn dfs(
+    model: &Model,
+    depth: usize,
+    cfg: &McConfig,
+    stats: &mut McStats,
+    trace: &mut Vec<String>,
+) -> Result<(), String> {
+    stats.nodes += 1;
+    let actions = model.actions(cfg);
+    if depth == cfg.depth || actions.is_empty() {
+        stats.leaves += 1;
+        return model
+            .check_leaf()
+            .map_err(|e| format!("{e}\n  after: {}", trace.join(", ")));
+    }
+    for action in actions {
+        let mut child = model.clone();
+        trace.push(format!("{action:?}"));
+        let step = child
+            .apply(&action, cfg, stats)
+            .and_then(|()| child.check(cfg));
+        step.map_err(|e| format!("{e}\n  after: {}", trace.join(", ")))?;
+        dfs(&child, depth + 1, cfg, stats, trace)?;
+        trace.pop();
+    }
+    Ok(())
+}
+
+/// Exhaustively explore every interleaving up to `cfg.depth`. `Err`
+/// carries the invariant violation plus the smallest action trace that
+/// reaches it (DFS order visits shorter prefixes first).
+pub fn explore(cfg: &McConfig) -> Result<McStats, String> {
+    let mut stats = McStats::default();
+    let mut trace = Vec::new();
+    dfs(&Model::new(), 0, cfg, &mut stats, &mut trace)?;
+    // the bound must actually exercise every behavior class, otherwise
+    // the invariants above are vacuous
+    let covered = [
+        ("rejection", stats.rejected),
+        ("queued-cancel", stats.cancelled_queued),
+        ("running-cancel", stats.cancelled_running),
+        ("shutdown-drain", stats.shutdown_drains),
+        ("success", stats.finished),
+        ("failure", stats.failed),
+    ];
+    for (what, count) in covered {
+        if count == 0 {
+            return Err(format!(
+                "bound too shallow: no {what} interleaving was explored"
+            ));
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_exploration_holds_all_invariants() {
+        // depth 5 keeps the debug-profile test fast (~23k leaves); the
+        // binary runs the full depth-6 bound (~212k) in release
+        let cfg = McConfig {
+            depth: 5,
+            ..McConfig::default()
+        };
+        let stats = explore(&cfg).expect("invariants must hold");
+        assert!(
+            stats.leaves >= 10_000,
+            "need >= 10k interleavings, got {}",
+            stats.leaves
+        );
+        assert!(stats.nodes > stats.leaves);
+    }
+
+    #[test]
+    fn a_planted_unfair_policy_would_be_caught() {
+        // sanity-check the independent fairness oracle: feed launch_ready
+        // a served table that makes the documented key disagree with a
+        // naive FIFO choice, and confirm the model follows the key
+        let cfg = McConfig::default();
+        let mut m = Model::new();
+        // two tenants; tenant 1 heavily served, so tenant 0 must win
+        // even though tenant 1's job is older and cheaper
+        m.queue.push(QueuedJob {
+            id: 0,
+            tenant: tenant_of(1),
+            cost: 1,
+        });
+        m.queue.push(QueuedJob {
+            id: 1,
+            tenant: tenant_of(0),
+            cost: 5,
+        });
+        m.reducer.apply(&Event::Accepted {
+            job: JobId(0),
+            tenant: tenant_of(1),
+            queue_depth: 0,
+        });
+        m.reducer.apply(&Event::Accepted {
+            job: JobId(1),
+            tenant: tenant_of(0),
+            queue_depth: 1,
+        });
+        m.served.insert(tenant_of(1).as_u64(), 7);
+        m.launch_ready(&cfg).unwrap();
+        // both launch (2 workers), but the starved tenant goes first
+        assert_eq!(m.running[0].id, 1, "least-served tenant launches first");
+        m.check(&cfg).unwrap();
+    }
+}

@@ -1,0 +1,445 @@
+//! Comment/string-aware source scanning shared by the lint and
+//! lock-order passes.
+//!
+//! [`strip`] splits a Rust source into two aligned views: `code` lines
+//! (comment and string/char-literal text blanked to spaces) and
+//! `comments` lines (only comment text kept). Pattern checks run on the
+//! code view, so `panic!` inside a doc comment or an error-message
+//! string never trips a lint; waiver scanning runs on the comment view,
+//! so a waiver can never hide inside a string literal. Both views keep
+//! every newline, so line numbers match the original file exactly.
+//!
+//! This is a token-level scanner, not a Rust parser: it understands
+//! line/nested-block comments, plain and raw (`r"…"`, `r#"…"#`, with a
+//! `b` prefix) strings, escapes, and char-vs-lifetime ticks — enough to
+//! make substring lints sound on real code — and nothing more.
+
+use std::collections::{BTreeSet, HashMap};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A source file split into blanked code lines and comment lines.
+#[derive(Debug)]
+pub struct Stripped {
+    pub code: Vec<String>,
+    pub comments: Vec<String>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// True when the `r` at `i` starts a raw string rather than ending an
+/// identifier (`var`, or a `b` prefix that itself ends one).
+fn raw_string_starts(t: &[char], i: usize) -> bool {
+    if i == 0 || !is_ident(t[i - 1]) {
+        return true;
+    }
+    t[i - 1] == 'b' && (i < 2 || !is_ident(t[i - 2]))
+}
+
+/// Blank comments and string/char literals out of `text`; collect the
+/// comment text separately. Both outputs are split into lines.
+pub fn strip(text: &str) -> Stripped {
+    #[derive(PartialEq)]
+    enum State {
+        Code,
+        LineComment,
+        BlockComment,
+        Str,
+        RawStr,
+        Char,
+    }
+    let t: Vec<char> = text.chars().collect();
+    let n = t.len();
+    let mut code = String::with_capacity(n);
+    let mut comments = String::with_capacity(n);
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let mut state = State::Code;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = t[i];
+        let nxt = if i + 1 < n { t[i + 1] } else { '\0' };
+        match state {
+            State::Code => {
+                if c == '/' && nxt == '/' {
+                    state = State::LineComment;
+                    comments.push_str("//");
+                    code.push_str("  ");
+                    i += 1;
+                } else if c == '/' && nxt == '*' {
+                    state = State::BlockComment;
+                    block_depth = 1;
+                    comments.push_str("/*");
+                    code.push_str("  ");
+                    i += 1;
+                } else if c == '"' {
+                    state = State::Str;
+                    code.push('"');
+                    comments.push(' ');
+                } else if c == 'r' && (nxt == '"' || nxt == '#') && raw_string_starts(&t, i) {
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while j < n && t[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && t[j] == '"' {
+                        code.push('r');
+                        comments.push(' ');
+                        for &k in t.iter().take(j + 1).skip(i + 1) {
+                            code.push(blank(k));
+                            comments.push(blank(k));
+                        }
+                        i = j;
+                        raw_hashes = hashes;
+                        state = State::RawStr;
+                    } else {
+                        code.push(c);
+                        comments.push(' ');
+                    }
+                } else if c == '\'' {
+                    if nxt == '\\' {
+                        state = State::Char;
+                        code.push(' ');
+                        comments.push(' ');
+                    } else if i + 2 < n && t[i + 2] == '\'' && nxt != '\'' {
+                        // plain char literal 'x'
+                        code.push(' ');
+                        comments.push(' ');
+                        code.push(blank(nxt));
+                        comments.push(blank(nxt));
+                        code.push(' ');
+                        comments.push(' ');
+                        i += 2;
+                    } else {
+                        // lifetime tick
+                        code.push(c);
+                        comments.push(' ');
+                    }
+                } else {
+                    code.push(c);
+                    comments.push(blank(c));
+                }
+            }
+            State::LineComment => {
+                if c == '\n' {
+                    state = State::Code;
+                    code.push('\n');
+                    comments.push('\n');
+                } else {
+                    code.push(' ');
+                    comments.push(c);
+                }
+            }
+            State::BlockComment => {
+                if c == '/' && nxt == '*' {
+                    block_depth += 1;
+                    comments.push_str("/*");
+                    code.push_str("  ");
+                    i += 1;
+                } else if c == '*' && nxt == '/' {
+                    block_depth -= 1;
+                    comments.push_str("*/");
+                    code.push_str("  ");
+                    i += 1;
+                    if block_depth == 0 {
+                        state = State::Code;
+                    }
+                } else {
+                    code.push(blank(c));
+                    comments.push(if c == '\n' { '\n' } else { c });
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    comments.push(' ');
+                    if nxt != '\0' {
+                        i += 1;
+                        code.push(blank(nxt));
+                        comments.push(blank(nxt));
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    comments.push(' ');
+                    state = State::Code;
+                } else {
+                    code.push(blank(c));
+                    comments.push(blank(c));
+                }
+            }
+            State::RawStr => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while j < n && t[j] == '#' && hashes < raw_hashes {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if hashes == raw_hashes {
+                        for &k in t.iter().take(j).skip(i) {
+                            code.push(blank(k));
+                            comments.push(blank(k));
+                        }
+                        i = j - 1;
+                        state = State::Code;
+                    } else {
+                        code.push(' ');
+                        comments.push(' ');
+                    }
+                } else {
+                    code.push(blank(c));
+                    comments.push(blank(c));
+                }
+            }
+            State::Char => {
+                if c == '\'' {
+                    state = State::Code;
+                }
+                code.push(blank(c));
+                comments.push(blank(c));
+            }
+        }
+        i += 1;
+    }
+    let lines = |s: String| s.split('\n').map(String::from).collect();
+    Stripped {
+        code: lines(code),
+        comments: lines(comments),
+    }
+}
+
+/// Per-line flags: true for every line covered by a `#[cfg(test)]` item
+/// (attribute line through the item's matching closing brace).
+pub fn test_region_lines(code: &[String]) -> Vec<bool> {
+    let mut covered = vec![false; code.len()];
+    let text: Vec<char> = code.join("\n").chars().collect();
+    if text.is_empty() {
+        return covered;
+    }
+    // line index of each char position (= newlines before it)
+    let mut line_of = Vec::with_capacity(text.len());
+    let mut ln = 0usize;
+    for &c in &text {
+        line_of.push(ln);
+        if c == '\n' {
+            ln += 1;
+        }
+    }
+    let needle: Vec<char> = "#[cfg(test)]".chars().collect();
+    let mut pos = 0usize;
+    while pos + needle.len() <= text.len() {
+        if text[pos..pos + needle.len()] != needle[..] {
+            pos += 1;
+            continue;
+        }
+        let mut i = pos + needle.len();
+        let mut depth = 0i64;
+        let mut started = false;
+        while i < text.len() {
+            match text[i] {
+                ';' if !started => break,
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if started && depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        let start_line = line_of[pos];
+        let end_line = line_of[i.min(text.len() - 1)];
+        for flag in covered.iter_mut().take(end_line + 1).skip(start_line) {
+            *flag = true;
+        }
+        pos += needle.len();
+    }
+    covered
+}
+
+/// Waiver classes granted per comment line:
+/// `// analysis: allow(<class>, <reason>)`. The reason is mandatory —
+/// a waiver without one does not register.
+pub fn waivers(comments: &[String]) -> HashMap<usize, BTreeSet<String>> {
+    let mut out: HashMap<usize, BTreeSet<String>> = HashMap::new();
+    for (idx, line) in comments.iter().enumerate() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut from = 0usize;
+        while let Some(at) = find_from(&chars, from, "analysis:") {
+            from = at + 1;
+            let mut i = at + "analysis:".len();
+            i = skip_ws(&chars, i);
+            if !starts_at(&chars, i, "allow(") {
+                continue;
+            }
+            i += "allow(".len();
+            i = skip_ws(&chars, i);
+            let start = i;
+            while i < chars.len() && (chars[i].is_ascii_lowercase() || chars[i] == '-') {
+                i += 1;
+            }
+            if i == start {
+                continue;
+            }
+            let class: String = chars[start..i].iter().collect();
+            i = skip_ws(&chars, i);
+            if i >= chars.len() || chars[i] != ',' {
+                continue;
+            }
+            i = skip_ws(&chars, i + 1);
+            if i >= chars.len() || chars[i] == ')' {
+                continue; // empty reason: the waiver does not count
+            }
+            out.entry(idx).or_default().insert(class);
+        }
+    }
+    out
+}
+
+fn skip_ws(chars: &[char], mut i: usize) -> usize {
+    while i < chars.len() && chars[i].is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+fn starts_at(chars: &[char], i: usize, pat: &str) -> bool {
+    let p: Vec<char> = pat.chars().collect();
+    i + p.len() <= chars.len() && chars[i..i + p.len()] == p[..]
+}
+
+fn find_from(chars: &[char], from: usize, pat: &str) -> Option<usize> {
+    let p: Vec<char> = pat.chars().collect();
+    if p.is_empty() || chars.len() < p.len() {
+        return None;
+    }
+    (from..=chars.len() - p.len()).find(|&i| chars[i..i + p.len()] == p[..])
+}
+
+/// A parsed source file ready for lint checks.
+pub struct SourceFile {
+    pub rel: String,
+    pub code: Vec<String>,
+    pub comments: Vec<String>,
+    pub in_test: Vec<bool>,
+    waived: HashMap<usize, BTreeSet<String>>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let stripped = strip(text);
+        let in_test = test_region_lines(&stripped.code);
+        let waived = waivers(&stripped.comments);
+        SourceFile {
+            rel: rel.to_string(),
+            code: stripped.code,
+            comments: stripped.comments,
+            in_test,
+            waived,
+        }
+    }
+
+    /// A waiver applies on its own line or the line directly above.
+    pub fn is_waived(&self, idx: usize, class: &str) -> bool {
+        let has = |i: usize| self.waived.get(&i).is_some_and(|s| s.contains(class));
+        has(idx) || (idx > 0 && has(idx - 1))
+    }
+}
+
+/// All `.rs` files under `root`, as (relative path, contents), sorted
+/// by path for deterministic reports.
+pub fn walk_sources(root: &Path) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&dir).with_context(|| format!("reading {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading {}", path.display()))?;
+                out.push((rel, text));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked_but_lines_hold() {
+        let src = "let a = \"panic!\"; // panic! here\nlet b = 1;\n/* panic!\n spans */ let c;\n";
+        let s = strip(src);
+        assert_eq!(s.code.len(), s.comments.len());
+        assert!(!s.code.join("\n").contains("panic!"));
+        assert!(s.comments[0].contains("panic! here"));
+        assert!(s.comments[2].contains("panic!"));
+        assert!(s.code[3].contains("let c;"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_are_blanked() {
+        let src = "let a = r#\"x.unwrap()\"#; let b = b\"y\"; let c = '\\n'; let d: &'a u8;";
+        let s = strip(src);
+        let code = s.code.join("\n");
+        assert!(!code.contains("unwrap"));
+        assert!(code.contains("&'a u8"), "{code}");
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let s = strip("/* a /* b */ c */ live();");
+        assert!(s.code.join("\n").contains("live();"));
+        assert!(s.comments.join("\n").contains('b'));
+    }
+
+    #[test]
+    fn cfg_test_regions_cover_the_braced_item() {
+        let src = "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n  fn t() { y.unwrap(); }\n}\nfn b() {}\n";
+        let s = strip(src);
+        let flags = test_region_lines(&s.code);
+        assert!(!flags[0]);
+        assert!(flags[1] && flags[2] && flags[3] && flags[4]);
+        assert!(!flags[5]);
+    }
+
+    #[test]
+    fn waivers_need_a_class_and_a_reason() {
+        let src = "// analysis: allow(panic, the loop always yields)\nx();\n// analysis: allow(panic)\ny();\n";
+        let s = strip(src);
+        let w = waivers(&s.comments);
+        assert!(w.get(&0).is_some_and(|c| c.contains("panic")));
+        assert!(!w.contains_key(&2), "missing reason must not register");
+    }
+
+    #[test]
+    fn waiver_applies_to_same_and_next_line_only() {
+        let src = "// analysis: allow(float-eq, exact sentinel)\nif x == 0.5 {}\nif y == 0.5 {}\n";
+        let f = SourceFile::parse("m.rs", src);
+        assert!(f.is_waived(1, "float-eq"));
+        assert!(!f.is_waived(2, "float-eq"));
+        assert!(!f.is_waived(1, "panic"), "class must match");
+    }
+}

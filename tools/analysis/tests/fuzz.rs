@@ -1,0 +1,27 @@
+//! Fuzz tiers. The fast tier runs the full acceptance budget (12 000
+//! hostile inputs across the three targets) on every `cargo test -p
+//! analysis`; the long tier multiplies it 10× and is `#[ignore]`d —
+//! run it with `cargo test -p analysis -- --ignored fuzz_long`.
+
+#[test]
+fn fuzz_fast_tier_12k_inputs_no_panics() {
+    let outcomes = analysis::fuzz::run(0xF00D, 1).expect("fuzz failure");
+    let total: u64 = outcomes.iter().map(|o| o.inputs).sum();
+    assert!(total >= 10_000, "acceptance gate: >=10k inputs, got {total}");
+    for o in &outcomes {
+        assert!(
+            o.rejected > 0,
+            "{}: hostile inputs must exercise the rejection path",
+            o.target
+        );
+        assert_eq!(o.inputs, o.accepted + o.rejected, "{}: every input classified", o.target);
+    }
+}
+
+#[test]
+#[ignore = "10x budget; run with --ignored"]
+fn fuzz_long_tier_120k_inputs_no_panics() {
+    let outcomes = analysis::fuzz::run(0xF00D_F00D, 10).expect("fuzz failure");
+    let total: u64 = outcomes.iter().map(|o| o.inputs).sum();
+    assert_eq!(total, 120_000);
+}

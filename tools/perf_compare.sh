@@ -1,0 +1,97 @@
+#!/usr/bin/env bash
+# Compare two sets of BENCH_PR*.json perf records (written by
+# `cargo bench -p cnn2gate`) and fail on regressions.
+#
+#   tools/perf_compare.sh <baseline-dir> <current-dir> [threshold-pct]
+#
+# Every numeric leaf in each record is compared under a direction
+# inferred from its key: *seconds / *wall* / *cycles / *_ms / p50 / p99 /
+# max are lower-is-better; *speedup / *per_s / *gain* / candidates are
+# higher-is-better; anything else (job counts, worker counts) is
+# informational only. A metric that moved in the bad direction by more
+# than <threshold-pct> percent (default 10) is a regression and the
+# script exits 1. Records present on only one side are reported and
+# skipped — benches are allowed to gain metrics across PRs.
+set -euo pipefail
+
+if [ "$#" -lt 2 ] || [ "$#" -gt 3 ]; then
+    echo "usage: $0 <baseline-dir> <current-dir> [threshold-pct]" >&2
+    exit 2
+fi
+
+BASE_DIR=$1 CUR_DIR=$2 THRESHOLD=${3:-10} python3 - <<'EOF'
+import glob
+import json
+import os
+import sys
+
+base_dir = os.environ["BASE_DIR"]
+cur_dir = os.environ["CUR_DIR"]
+threshold = float(os.environ["THRESHOLD"]) / 100.0
+
+LOWER_BETTER = ("seconds", "wall", "cycles", "_ms", "p50", "p99", "max")
+HIGHER_BETTER = ("speedup", "per_s", "gain", "candidates")
+
+
+def direction(key):
+    leaf = key.rsplit(".", 1)[-1].lower()
+    if any(m in leaf for m in LOWER_BETTER):
+        return -1
+    if any(m in leaf for m in HIGHER_BETTER):
+        return +1
+    return 0
+
+
+def flatten(doc, prefix=""):
+    out = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            out.update(flatten(v, f"{prefix}{k}." if prefix or k else k))
+    elif isinstance(doc, (int, float)) and not isinstance(doc, bool):
+        out[prefix.rstrip(".")] = float(doc)
+    return out
+
+
+def load(path):
+    with open(path) as f:
+        return flatten(json.load(f))
+
+
+base_files = {os.path.basename(p): p for p in glob.glob(os.path.join(base_dir, "BENCH_PR*.json"))}
+cur_files = {os.path.basename(p): p for p in glob.glob(os.path.join(cur_dir, "BENCH_PR*.json"))}
+if not base_files:
+    print(f"perf_compare: no BENCH_PR*.json in baseline dir {base_dir}", file=sys.stderr)
+    sys.exit(2)
+
+regressions = 0
+for name in sorted(set(base_files) | set(cur_files)):
+    if name not in base_files or name not in cur_files:
+        side = "baseline" if name in base_files else "current"
+        print(f"{name}: only in {side} — skipped")
+        continue
+    base, cur = load(base_files[name]), load(cur_files[name])
+    print(f"{name}:")
+    for key in sorted(set(base) | set(cur)):
+        if key.endswith("format"):
+            continue
+        if key not in base or key not in cur:
+            print(f"  {key:48s} only in {'baseline' if key in base else 'current'}")
+            continue
+        b, c = base[key], cur[key]
+        d = direction(key)
+        delta = (c - b) / b if b else 0.0
+        tag = "="
+        if d != 0 and b:
+            worse = delta > threshold if d < 0 else delta < -threshold
+            better = delta < -threshold if d < 0 else delta > threshold
+            if worse:
+                tag, regressions = "REGRESSION", regressions + 1
+            elif better:
+                tag = "improved"
+        print(f"  {key:48s} {b:14.4f} -> {c:14.4f}  ({delta:+7.1%}) {tag}")
+
+if regressions:
+    print(f"perf_compare: {regressions} regression(s) beyond {threshold:.0%}")
+    sys.exit(1)
+print("perf_compare: no regressions")
+EOF
