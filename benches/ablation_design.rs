@@ -28,6 +28,7 @@ fn main() {
         bytes_per_step: 48,
         ddr_bytes_per_cycle: 40.0,
         out_bytes: 32,
+        batch: 1,
     };
     // NB: PIPE_DEPTH is a compile-time constant in the estimator; the
     // stepped sim exposes the effect through the work's burstiness knobs

@@ -1,23 +1,56 @@
-//! Batch-size throughput sweep — the paper's §5 remark: "There are also
-//! other latency reports in the literature such as [7]. However, those
-//! latency reports are measured in the favorable batch size (e.g. 16).
-//! Increasing batch size can make more parallelism available to the
-//! algorithm that can lead to higher throughput."
+//! Batch-size throughput sweep + the PR-8 perf gates — the paper's §5
+//! remark: "There are also other latency reports in the literature such
+//! as [7]. However, those latency reports are measured in the favorable
+//! batch size (e.g. 16). Increasing batch size can make more
+//! parallelism available to the algorithm that can lead to higher
+//! throughput."
 //!
-//! This bench regenerates that claim as a curve: per-frame latency and
-//! GOp/s for batch 1..32 on both evaluation nets.
+//! Two tiers:
+//!
+//! * the analytical curve: per-frame latency and GOp/s for batch 1..32
+//!   on both evaluation nets (`simulate_batched`), monotone in B;
+//! * the stepped-full gates: on AlexNet/Arria-10 the cycle-accurate
+//!   batched pipeline (`step_network_batched`) must serve ≥ 3x the
+//!   frames/s at B = 16 that it serves at B = 1, and the rounds that
+//!   are DDR-starved under the uniform streamed kernel at B = 1 must
+//!   all flip compute-bound once the weight stream amortizes over the
+//!   batch.
+//!
+//! Writes `BENCH_PR8.json` (machine-readable: stepped frames/s at B = 1
+//! and B = 16, the speedup, the starved-round census, the analytical
+//! batch-16 gains) for cross-commit comparison via
+//! `tools/perf_compare.sh`. Every recorded metric is a deterministic
+//! model output — no wall-clock — so the comparison cannot flake on
+//! runner noise.
 
 mod common;
 
 use cnn2gate::estimator::device::ARRIA_10_GX1150;
+use cnn2gate::estimator::estimate;
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::onnx::zoo;
-use cnn2gate::sim::{simulate, simulate_batched};
+use cnn2gate::sim::{simulate, simulate_batched, step_network_batched, NetworkStepReport};
+use cnn2gate::util::json::{Json, JsonObj};
 use cnn2gate::util::table::Table;
 use common::Harness;
 
+/// DDR-starvation verdict threshold — the same 25% the stepped census
+/// table uses to call a round memory-bound.
+const STARVED_FRAC: f64 = 0.25;
+
+/// Rounds whose conv lanes sat DDR-starved more than the verdict
+/// threshold.
+fn starved_rounds(net: &NetworkStepReport) -> usize {
+    net.layers
+        .iter()
+        .filter(|l| l.conv_empty_stalls as f64 / l.cycles.max(1) as f64 > STARVED_FRAC)
+        .count()
+}
+
 fn main() {
     let mut h = Harness::new();
+
+    // -- analytical tier: the batch curve on both evaluation nets ------
     for model in ["alexnet", "vgg16"] {
         let flow = ComputationFlow::extract(&zoo::build(model, false).unwrap()).unwrap();
         h.bench(&format!("batch_sim/{model}"), 100, || {
@@ -60,13 +93,77 @@ fn main() {
     // AlexNet gains more than VGG (fc-dominated vs conv-dominated)
     let a = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
     let v = ComputationFlow::extract(&zoo::build("vgg16", false).unwrap()).unwrap();
-    let ga = simulate_batched(&a, &ARRIA_10_GX1150, 16, 32, 16).gops_per_s
-        / simulate_batched(&a, &ARRIA_10_GX1150, 16, 32, 1).gops_per_s;
-    let gv = simulate_batched(&v, &ARRIA_10_GX1150, 16, 32, 16).gops_per_s
-        / simulate_batched(&v, &ARRIA_10_GX1150, 16, 32, 1).gops_per_s;
+    let gain_at_16 = |f: &ComputationFlow| {
+        simulate_batched(f, &ARRIA_10_GX1150, 16, 32, 16).gops_per_s
+            / simulate_batched(f, &ARRIA_10_GX1150, 16, 32, 1).gops_per_s
+    };
+    let (ga, gv) = (gain_at_16(&a), gain_at_16(&v));
     h.check(
         ga > gv,
         &format!("batching helps AlexNet ({ga:.2}x) more than VGG ({gv:.2}x)"),
     );
+
+    // -- stepped-full tier: the PR-8 frames/s gate ---------------------
+    // the uniform flow ships one generic (streamed) memory-read kernel,
+    // so at B = 1 every AlexNet round re-fetches its weight slice per
+    // reduction step and sits DDR-starved; holding the slice across a
+    // 16-frame batch divides that stream by 16
+    let est = estimate(&a, &ARRIA_10_GX1150, 16, 32);
+    let b1 = step_network_batched(&a, &ARRIA_10_GX1150, est.fmax_mhz, 16, 32, 1);
+    h.bench("stepped_full/alexnet_b16", 5, || {
+        step_network_batched(&a, &ARRIA_10_GX1150, est.fmax_mhz, 16, 32, 16)
+    });
+    let b16 = step_network_batched(&a, &ARRIA_10_GX1150, est.fmax_mhz, 16, 32, 16);
+    let speedup = b16.frames_per_s() / b1.frames_per_s();
+    println!(
+        "  stepped-full: B=1 {:.2} ms ({:.1} frames/s) -> B=16 {:.2} ms batch ({:.1} frames/s), {speedup:.2}x",
+        b1.total_millis(),
+        b1.frames_per_s(),
+        b16.total_millis(),
+        b16.frames_per_s(),
+    );
+    h.check(
+        speedup >= 3.0,
+        &format!("stepped-full B=16 serves {speedup:.2}x >= 3x the B=1 frames/s"),
+    );
+    h.check(
+        b16.millis_per_frame() < b1.total_millis(),
+        "amortized per-frame latency drops under batching",
+    );
+    let (s1, s16) = (starved_rounds(&b1), starved_rounds(&b16));
+    let rounds = b1.layers.len();
+    println!("  DDR-starved rounds (> {STARVED_FRAC:.2}): B=1 {s1}/{rounds}, B=16 {s16}/{rounds}");
+    h.check(
+        s1 == b1.layers.len(),
+        &format!("B=1: all {s1}/{} rounds DDR-starved under the streamed kernel", b1.layers.len()),
+    );
+    h.check(
+        s16 == 0,
+        &format!("B=16: every round flips compute-bound ({s16} still starved)"),
+    );
+
+    // machine-readable PR-8 perf record — deterministic model outputs
+    // only, so tools/perf_compare.sh diffs are noise-free
+    {
+        let mut stepped = JsonObj::new();
+        stepped.insert("b1_batch_millis", b1.total_millis().into());
+        stepped.insert("b16_batch_millis", b16.total_millis().into());
+        stepped.insert("b1_frames_per_s", b1.frames_per_s().into());
+        stepped.insert("b16_frames_per_s", b16.frames_per_s().into());
+        stepped.insert("frames_per_s_speedup", speedup.into());
+        stepped.insert("starved_rounds_b1", s1.into());
+        stepped.insert("starved_rounds_b16", s16.into());
+        let mut analytical = JsonObj::new();
+        analytical.insert("alexnet_b16_gain", ga.into());
+        analytical.insert("vgg16_b16_gain", gv.into());
+        let mut doc = JsonObj::new();
+        doc.insert("format", "cnn2gate-bench-pr8".into());
+        doc.insert("stepped", Json::Obj(stepped));
+        doc.insert("analytical", Json::Obj(analytical));
+        let path = std::path::Path::new("BENCH_PR8.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).unwrap();
+        println!("perf record written to {}", path.display());
+    }
+
     h.finish();
 }

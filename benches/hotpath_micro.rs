@@ -92,6 +92,7 @@ fn main() {
         bytes_per_step: 16,
         ddr_bytes_per_cycle: 40.0,
         out_bytes: 32,
+        batch: 1,
     };
     let cycles = step_round(&work).cycles as f64;
     let t = h.bench("sim/step_round(alexnet-conv2-ish)", 200, || step_round(&work));

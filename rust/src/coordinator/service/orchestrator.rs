@@ -303,6 +303,8 @@ fn run_job(
         spec.job.quant.as_ref(),
         req,
         spec.job.specialize,
+        &spec.job.batches,
+        spec.job.latency_slo_ms,
         &hooks,
     )?;
     let outcome = Outcome {

@@ -50,8 +50,8 @@ use anyhow::{anyhow, Context};
 use crate::estimator::{estimate, Device, ResourceEstimate, Thresholds};
 use crate::ir::ComputationFlow;
 use crate::sim::{
-    dominant_round_work, simulate_with_estimate, step_network, step_round, LayerTiming,
-    NetworkStepReport, SimReport, StepReport,
+    dominant_round_work_batched, simulate_batched, simulate_with_estimate, step_network_batched,
+    step_round, BatchReport, LayerTiming, NetworkStepReport, SimReport, StepReport,
 };
 use crate::util::json::{Json, JsonObj};
 use crate::util::sync::locked;
@@ -138,15 +138,19 @@ pub struct EvalRequest {
     /// Census-reward γ (exact f64; -0.0 normalizes to +0.0 in the key).
     pub census_gamma: f64,
     pub tenant: TenantId,
+    /// Frames simulated per weight fetch (cross-frame reuse); 1 is the
+    /// classic single-frame evaluation, 0 normalizes to 1 in the key.
+    pub batch: usize,
 }
 
 impl EvalRequest {
-    /// Unshaped request: γ = 0, default tenant.
+    /// Unshaped request: γ = 0, default tenant, batch 1.
     pub fn at(fidelity: Fidelity) -> EvalRequest {
         EvalRequest {
             fidelity,
             census_gamma: 0.0,
             tenant: TenantId::DEFAULT,
+            batch: 1,
         }
     }
 
@@ -162,6 +166,14 @@ impl EvalRequest {
     pub fn tenant(self, tenant: TenantId) -> EvalRequest {
         EvalRequest { tenant, ..self }
     }
+
+    /// The same request at batch size `batch` (0 normalizes to 1).
+    pub fn batched(self, batch: usize) -> EvalRequest {
+        EvalRequest {
+            batch: batch.max(1),
+            ..self
+        }
+    }
 }
 
 /// Everything one estimator/simulator query produces for a candidate.
@@ -169,10 +181,15 @@ impl EvalRequest {
 pub struct Evaluation {
     pub ni: usize,
     pub nl: usize,
+    /// Batch size the stepped/batched payloads were simulated at (1 for
+    /// classic single-frame evaluations).
+    pub batch: usize,
     pub estimate: ResourceEstimate,
-    /// Closed-form latency at this option (computed for every candidate,
-    /// feasible or not — fleet reports rank by it).
+    /// Closed-form batch-1 latency at this option (computed for every
+    /// candidate, feasible or not — fleet reports rank by it).
     pub latency: SimReport,
+    /// Closed-form batched latency/throughput (present iff batch ≥ 2).
+    pub batched: Option<BatchReport>,
     /// Cycle-stepped dominant-round census (stepped-dominant fidelity).
     pub stepped: Option<StepReport>,
     /// Cycle-stepped census of every round (stepped-full fidelity).
@@ -180,7 +197,8 @@ pub struct Evaluation {
 }
 
 impl Evaluation {
-    /// Compute from scratch — the pure function the cache memoizes.
+    /// Compute from scratch at batch 1 — the pure function the cache
+    /// memoizes for classic single-frame requests.
     pub fn compute(
         flow: &ComputationFlow,
         device: &Device,
@@ -188,27 +206,46 @@ impl Evaluation {
         nl: usize,
         fidelity: Fidelity,
     ) -> Evaluation {
+        Evaluation::compute_batched(flow, device, ni, nl, fidelity, 1)
+    }
+
+    /// Compute from scratch at batch `batch`: the stepped payloads run
+    /// the batched recurrence (weights fetched once per group pass, held
+    /// across the B frames) and, at batch ≥ 2, the closed-form batched
+    /// throughput model rides along in [`Evaluation::batched`].
+    pub fn compute_batched(
+        flow: &ComputationFlow,
+        device: &Device,
+        ni: usize,
+        nl: usize,
+        fidelity: Fidelity,
+        batch: usize,
+    ) -> Evaluation {
+        let batch = batch.max(1);
         let estimate = estimate(flow, device, ni, nl);
         // reuse the estimate for the latency model (one estimator call
         // per candidate, exactly like the sequential seed path)
         let latency = simulate_with_estimate(flow, device, &estimate);
+        let batched = (batch >= 2).then(|| simulate_batched(flow, device, ni, nl, batch));
         let (stepped, stepped_network) = match fidelity {
             Fidelity::Analytical => (None, None),
             Fidelity::SteppedDominantRound => (
-                dominant_round_work(flow, device, estimate.fmax_mhz, ni, nl)
+                dominant_round_work_batched(flow, device, estimate.fmax_mhz, ni, nl, batch)
                     .map(|work| step_round(&work)),
                 None,
             ),
             Fidelity::SteppedFullNetwork => (
                 None,
-                Some(step_network(flow, device, estimate.fmax_mhz, ni, nl)),
+                Some(step_network_batched(flow, device, estimate.fmax_mhz, ni, nl, batch)),
             ),
         };
         Evaluation {
             ni,
             nl,
+            batch,
             estimate,
             latency,
+            batched,
             stepped,
             stepped_network,
         }
@@ -244,6 +281,8 @@ struct EvalKey {
     census_gamma: u64,
     /// The request's [`TenantId`] (0 for the default namespace).
     tenant: u64,
+    /// Batch size the payload was simulated at (1 for single-frame).
+    batch: usize,
 }
 
 /// The γ component of the memo key: exact f64 bits, with -0.0
@@ -270,13 +309,24 @@ impl EvalKey {
             fidelity: req.fidelity,
             census_gamma: gamma_key_bits(req.census_gamma),
             tenant: req.tenant.as_u64(),
+            batch: req.batch.max(1),
         }
     }
 
     /// Deterministic total order for serialization and eviction ties.
-    fn sort_key(&self) -> (u64, u64, usize, usize, u8, u64, u64) {
+    #[allow(clippy::type_complexity)]
+    fn sort_key(&self) -> (u64, u64, usize, usize, u8, u64, u64, usize) {
         let rank = fidelity_rank(self.fidelity);
-        (self.model, self.device, self.ni, self.nl, rank, self.census_gamma, self.tenant)
+        (
+            self.model,
+            self.device,
+            self.ni,
+            self.nl,
+            rank,
+            self.census_gamma,
+            self.tenant,
+            self.batch,
+        )
     }
 }
 
@@ -380,7 +430,9 @@ impl EvalCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return (Arc::clone(&found.eval), true);
         }
-        let eval = Arc::new(Evaluation::compute(flow, device, key.ni, key.nl, fidelity));
+        let eval = Arc::new(Evaluation::compute_batched(
+            flow, device, key.ni, key.nl, fidelity, key.batch,
+        ));
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = locked(&self.map);
         let entry = map.entry(key).or_insert_with(|| CacheEntry {
@@ -419,6 +471,7 @@ impl EvalCache {
                 fidelity: req.fidelity,
                 census_gamma: gamma_key_bits(req.census_gamma),
                 tenant: req.tenant.as_u64(),
+                batch: req.batch.max(1),
             };
             if let Some(entry) = map.get_mut(&key) {
                 entry.last_used = entry.last_used.max(stamp);
@@ -479,13 +532,16 @@ impl EvalCache {
 // entries — and the CLI falls back to a cold cache with a warning via
 // [`EvalCache::load_or_cold`].
 //
-// v4 (this version) additionally records each entry's tenant namespace
-// (a 16-hex-digit fingerprint, part of the key). Older files still
-// load:
+// v5 (this version) additionally records each entry's batch size (part
+// of the key) plus, at batch ≥ 2, the closed-form batched throughput
+// payload. Older files still load:
 //
+// * v4 entries carry over unchanged at batch = 1 — a single-frame v4
+//   evaluation is bit-identical to a fresh batch-1 computation, so
+//   nothing is dropped.
 // * v3 entries carry over unchanged into the tenant-0 (default)
-//   namespace — the payload layout is identical, only the namespace
-//   component is new.
+//   namespace at batch = 1 — the payload layout is identical, only the
+//   namespace and batch components are new.
 // * v2 analytical entries carry over (keyed at γ = 0, tenant 0); v2
 //   *stepped* entries are dropped, because v3 replaced the whole-byte
 //   DDR credit with the exact fractional-rational model
@@ -499,7 +555,7 @@ impl EvalCache {
 /// Format tag of the on-disk cache file.
 pub const CACHE_FORMAT: &str = "cnn2gate-evalcache-v1";
 /// Schema version within the format; bumped on any layout change.
-pub const CACHE_VERSION: i64 = 4;
+pub const CACHE_VERSION: i64 = 5;
 /// Oldest version [`EvalCache::from_json`] still accepts.
 pub const CACHE_VERSION_MIN: i64 = 1;
 /// Largest integer `util::json` round-trips exactly (below 2^53).
@@ -574,6 +630,12 @@ fn json_safe(e: &Evaluation, last_used: u64) -> bool {
                 .iter()
                 .flat_map(|l| [l.macs, l.compute_cycles, l.ddr_cycles, l.cycles]),
         )
+        .chain(
+            e.batched
+                .iter()
+                .flat_map(|b| b.layers.iter())
+                .flat_map(|l| [l.macs, l.compute_cycles, l.ddr_cycles, l.cycles]),
+        )
         .chain(e.stepped.iter().flat_map(step_ints))
         .chain(
             e.stepped_network
@@ -600,6 +662,12 @@ fn json_safe(e: &Evaluation, last_used: u64) -> bool {
     .iter()
     .all(|v| v.is_finite())
         && e.latency.layers.iter().all(|l| l.millis.is_finite())
+        && e.batched.iter().all(|b| {
+            b.total_millis.is_finite()
+                && b.millis_per_frame.is_finite()
+                && b.gops_per_s.is_finite()
+                && b.layers.iter().all(|l| l.millis.is_finite())
+        })
         && e.stepped_network.iter().all(|n| n.fmax_mhz.is_finite());
     ints_ok && floats_ok
 }
@@ -728,6 +796,7 @@ fn step_from_json(v: &Json) -> Result<StepReport, String> {
 pub(crate) fn net_to_json(n: &NetworkStepReport) -> Json {
     let mut o = JsonObj::new();
     o.insert("fmax_mhz", n.fmax_mhz.into());
+    o.insert("batch", n.batch.into());
     o.insert("layers", Json::Arr(n.layers.iter().map(step_to_json).collect()));
     Json::Obj(o)
 }
@@ -742,6 +811,35 @@ fn net_from_json(v: &Json) -> Result<NetworkStepReport, String> {
         .collect::<Result<Vec<_>, String>>()?;
     Ok(NetworkStepReport {
         fmax_mhz: jf(v, "fmax_mhz")?,
+        // pre-v5 censuses predate the batch dimension (single-frame)
+        batch: v.get("batch").as_usize().unwrap_or(1),
+        layers,
+    })
+}
+
+fn batch_to_json(b: &BatchReport) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("batch", b.batch.into());
+    o.insert("total_millis", b.total_millis.into());
+    o.insert("millis_per_frame", b.millis_per_frame.into());
+    o.insert("gops_per_s", b.gops_per_s.into());
+    o.insert("layers", Json::Arr(b.layers.iter().map(layer_to_json).collect()));
+    Json::Obj(o)
+}
+
+fn batch_from_json(v: &Json) -> Result<BatchReport, String> {
+    let layers = v
+        .get("layers")
+        .as_arr()
+        .ok_or_else(|| "batched missing 'layers'".to_string())?
+        .iter()
+        .map(layer_from_json)
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(BatchReport {
+        batch: jus(v, "batch")?,
+        total_millis: jf(v, "total_millis")?,
+        millis_per_frame: jf(v, "millis_per_frame")?,
+        gops_per_s: jf(v, "gops_per_s")?,
         layers,
     })
 }
@@ -752,12 +850,20 @@ fn entry_to_json(key: &EvalKey, eval: &Evaluation, last_used: u64) -> Json {
     o.insert("device", Json::Str(hex16(key.device)));
     o.insert("ni", key.ni.into());
     o.insert("nl", key.nl.into());
+    o.insert("batch", key.batch.into());
     o.insert("fidelity", fidelity_tag(key.fidelity).into());
     o.insert("census_gamma", Json::Num(f64::from_bits(key.census_gamma)));
     o.insert("tenant", Json::Str(hex16(key.tenant)));
     o.insert("last_used", Json::Num(last_used as f64));
     o.insert("estimate", est_to_json(&eval.estimate));
     o.insert("latency", sim_to_json(&eval.latency));
+    o.insert(
+        "batched",
+        match &eval.batched {
+            Some(b) => batch_to_json(b),
+            None => Json::Null,
+        },
+    );
     o.insert(
         "stepped_report",
         match &eval.stepped {
@@ -775,18 +881,30 @@ fn entry_to_json(key: &EvalKey, eval: &Evaluation, last_used: u64) -> Json {
     Json::Obj(o)
 }
 
-/// Parse one v4 entry; `Err` rejects the whole file.
+/// Parse one v5 entry; `Err` rejects the whole file.
+fn entry_from_json_v5(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
+    let census_gamma = jf(v, "census_gamma")?;
+    let tenant = parse_hex16(&js(v, "tenant")?)?;
+    let batch = jus(v, "batch")?;
+    if batch == 0 {
+        return Err("zero batch".to_string());
+    }
+    entry_from_json_tagged(v, census_gamma, tenant, batch)
+}
+
+/// Parse one v4 entry (no batch field; carries over at batch = 1);
+/// `Err` rejects the whole file.
 fn entry_from_json_v4(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
     let census_gamma = jf(v, "census_gamma")?;
     let tenant = parse_hex16(&js(v, "tenant")?)?;
-    entry_from_json_tagged(v, census_gamma, tenant)
+    entry_from_json_tagged(v, census_gamma, tenant, 1)
 }
 
 /// Parse one v3 entry (no tenant field; carries into the default
-/// namespace); `Err` rejects the whole file.
+/// namespace at batch = 1); `Err` rejects the whole file.
 fn entry_from_json_v3(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
     let census_gamma = jf(v, "census_gamma")?;
-    entry_from_json_tagged(v, census_gamma, 0)
+    entry_from_json_tagged(v, census_gamma, 0, 1)
 }
 
 /// Parse one v2 entry. `Ok(None)` means a valid-but-dropped entry (v2
@@ -797,15 +915,16 @@ fn entry_from_json_v2(v: &Json) -> Result<Option<(EvalKey, Evaluation, u64)>, St
     if parse_fidelity_tag(&js(v, "fidelity")?)? != Fidelity::Analytical {
         return Ok(None);
     }
-    entry_from_json_tagged(v, 0.0, 0).map(Some)
+    entry_from_json_tagged(v, 0.0, 0, 1).map(Some)
 }
 
-/// The shared v2/v3/v4 entry body (v4 carries both the γ and tenant
-/// fields, v3 the γ field only, v2 neither).
+/// The shared v2/v3/v4/v5 entry body (v5 carries the γ, tenant and batch
+/// fields, v4 γ and tenant, v3 the γ field only, v2 none of them).
 fn entry_from_json_tagged(
     v: &Json,
     census_gamma: f64,
     tenant: u64,
+    batch: usize,
 ) -> Result<(EvalKey, Evaluation, u64), String> {
     let fidelity = parse_fidelity_tag(&js(v, "fidelity")?)?;
     let key = EvalKey {
@@ -816,10 +935,17 @@ fn entry_from_json_tagged(
         fidelity,
         census_gamma: gamma_key_bits(census_gamma),
         tenant,
+        batch,
     };
     let last_used = ju(v, "last_used")?;
     let estimate = est_from_json(v.get("estimate"))?;
     let latency = sim_from_json(v.get("latency"))?;
+    // pre-v5 entries have no batched payload; at their batch = 1 the
+    // shape check below demands None, so the two cases coincide
+    let batched = match v.get("batched") {
+        Json::Null => None,
+        b => Some(batch_from_json(b)?),
+    };
     let stepped = match v.get("stepped_report") {
         Json::Null => None,
         s => Some(step_from_json(s)?),
@@ -854,6 +980,26 @@ fn entry_from_json_tagged(
             fidelity_tag(fidelity)
         ));
     }
+    if batched.is_some() != (batch >= 2) {
+        return Err(format!(
+            "batch {batch} contradicts batched payload presence"
+        ));
+    }
+    if let Some(b) = &batched {
+        if b.batch != batch {
+            return Err(format!(
+                "batched payload says batch {} but key says {batch}",
+                b.batch
+            ));
+        }
+        if b.layers.len() != latency.layers.len() {
+            return Err(format!(
+                "batched payload has {} rounds but latency has {}",
+                b.layers.len(),
+                latency.layers.len()
+            ));
+        }
+    }
     if let Some(net) = &stepped_network {
         if net.layers.len() != latency.layers.len() {
             return Err(format!(
@@ -862,12 +1008,20 @@ fn entry_from_json_tagged(
                 latency.layers.len()
             ));
         }
+        if net.batch != batch {
+            return Err(format!(
+                "stepped_network census says batch {} but key says {batch}",
+                net.batch
+            ));
+        }
     }
     let eval = Evaluation {
         ni: key.ni,
         nl: key.nl,
+        batch,
         estimate,
         latency,
+        batched,
         stepped,
         stepped_network,
     };
@@ -889,6 +1043,7 @@ fn entry_from_json_v1(v: &Json) -> Result<Option<(EvalKey, Evaluation, u64)>, St
         fidelity: Fidelity::Analytical,
         census_gamma: 0f64.to_bits(),
         tenant: 0,
+        batch: 1,
     };
     let estimate = est_from_json(v.get("estimate"))?;
     let latency = sim_from_json(v.get("latency"))?;
@@ -910,8 +1065,10 @@ fn entry_from_json_v1(v: &Json) -> Result<Option<(EvalKey, Evaluation, u64)>, St
     let eval = Evaluation {
         ni: key.ni,
         nl: key.nl,
+        batch: 1,
         estimate,
         latency,
+        batched: None,
         stepped: None,
         stepped_network: None,
     };
@@ -941,7 +1098,7 @@ impl EvalCache {
         Json::Obj(o)
     }
 
-    /// Deserialize a cache document (current v4 or legacy v1/v2/v3 —
+    /// Deserialize a cache document (current v5 or legacy v1/v2/v3/v4 —
     /// see the module docs for the carry-over rules). Strict: schema
     /// mismatches, missing fields, duplicate keys and key/payload
     /// contradictions all reject the whole document. Counters start at
@@ -978,7 +1135,8 @@ impl EvalCache {
                     1 => entry_from_json_v1(row).map_err(|e| format!("entry {i}: {e}"))?,
                     2 => entry_from_json_v2(row).map_err(|e| format!("entry {i}: {e}"))?,
                     3 => Some(entry_from_json_v3(row).map_err(|e| format!("entry {i}: {e}"))?),
-                    _ => Some(entry_from_json_v4(row).map_err(|e| format!("entry {i}: {e}"))?),
+                    4 => Some(entry_from_json_v4(row).map_err(|e| format!("entry {i}: {e}"))?),
+                    _ => Some(entry_from_json_v5(row).map_err(|e| format!("entry {i}: {e}"))?),
                 };
                 let Some((key, eval, last_used)) = parsed else {
                     continue; // dropped legacy stepped entry
@@ -1173,6 +1331,7 @@ impl Evaluator {
             fidelity,
             census_gamma: gamma_key_bits(req.census_gamma),
             tenant: req.tenant.as_u64(),
+            batch: req.batch.max(1),
         };
         if pairs.len() < 2 || self.pool.size() < 2 {
             return pairs
@@ -1584,7 +1743,7 @@ mod tests {
         ev.cache().save(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let v1 = text
-            .replace("\"version\": 4", "\"version\": 1")
+            .replace("\"version\": 5", "\"version\": 1")
             .replace("\"fidelity\": \"analytical\"", "\"stepped\": false")
             .replace(
                 "\"fidelity\": \"stepped-dominant-round\"",
@@ -1620,12 +1779,14 @@ mod tests {
         let path = tmp_path("v2compat");
         ev.cache().save(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        // a v2 entry is the v4 shape minus the census_gamma and tenant
-        // fields
+        // a v2 entry is the v5 shape minus the census_gamma, tenant,
+        // batch and batched fields
         let v2 = text
-            .replace("\"version\": 4", "\"version\": 2")
+            .replace("\"version\": 5", "\"version\": 2")
             .replace("\"census_gamma\": 0,", "")
-            .replace("\"tenant\": \"0000000000000000\",", "");
+            .replace("\"tenant\": \"0000000000000000\",", "")
+            .replace("\"batch\": 1,", "")
+            .replace("\"batched\": null,", "");
         assert_ne!(text, v2, "rewrite must land");
         std::fs::write(&path, &v2).unwrap();
         let loaded = EvalCache::load(&path).unwrap();
@@ -1654,10 +1815,13 @@ mod tests {
         let path = tmp_path("v3compat");
         ev.cache().save(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        // a v3 entry is the v4 shape minus the tenant field
+        // a v3 entry is the v5 shape minus the tenant, batch and
+        // batched fields
         let v3 = text
-            .replace("\"version\": 4", "\"version\": 3")
-            .replace("\"tenant\": \"0000000000000000\",", "");
+            .replace("\"version\": 5", "\"version\": 3")
+            .replace("\"tenant\": \"0000000000000000\",", "")
+            .replace("\"batch\": 1,", "")
+            .replace("\"batched\": null,", "");
         assert_ne!(text, v3, "rewrite must land");
         std::fs::write(&path, &v3).unwrap();
         let loaded = EvalCache::load(&path).unwrap();
@@ -1673,6 +1837,100 @@ mod tests {
         let other = req(Fidelity::Analytical).tenant(TenantId::of("acme"));
         let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, other);
         assert!(!hit, "v3 entries land in the default namespace only");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v4_files_carry_every_entry_over_at_batch_1() {
+        // v4 files predate only the batch key component; every entry
+        // carries over at batch = 1 (a single-frame v4 evaluation is
+        // bit-identical to a fresh batch-1 computation)
+        let f = flow("tiny");
+        let ev = Evaluator::new(2);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 8, req(Fidelity::SteppedFullNetwork));
+        let acme = req(Fidelity::Analytical).tenant(TenantId::of("acme"));
+        ev.evaluate(&f, &ARRIA_10_GX1150, 8, 4, acme);
+        let path = tmp_path("v4compat");
+        ev.cache().save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // a v4 entry is the v5 shape minus the batch and batched fields
+        let v4 = text
+            .replace("\"version\": 5", "\"version\": 4")
+            .replace("\"batch\": 1,", "")
+            .replace("\"batched\": null,", "");
+        assert_ne!(text, v4, "rewrite must land");
+        std::fs::write(&path, &v4).unwrap();
+        let loaded = EvalCache::load(&path).unwrap();
+        assert_eq!(loaded.stats().entries, 3, "every v4 entry carries over");
+        let warm = Evaluator::with_cache(2, Arc::new(loaded));
+        let (eval, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, req(Fidelity::Analytical));
+        assert!(hit, "analytical v4 entry carried over at batch 1");
+        assert_eq!(
+            *eval,
+            Evaluation::compute(&f, &ARRIA_10_GX1150, 4, 4, Fidelity::Analytical)
+        );
+        let (net, hit) =
+            warm.evaluate(&f, &ARRIA_10_GX1150, 4, 8, req(Fidelity::SteppedFullNetwork));
+        assert!(hit, "stepped v4 entry carried over");
+        assert_eq!(net.stepped_network.as_ref().unwrap().batch, 1);
+        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 8, 4, acme);
+        assert!(hit, "tenant v4 entry carried over");
+        // a batched request never borrows the single-frame carry-over
+        let batched = req(Fidelity::Analytical).batched(16);
+        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, batched);
+        assert!(!hit, "batch 16 is a distinct key");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn batched_requests_namespace_the_cache_and_roundtrip() {
+        let f = flow("tiny");
+        let ev = Evaluator::new(2);
+        let base = req(Fidelity::SteppedFullNetwork);
+        let b16 = base.batched(16);
+        ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, base);
+        let (eval, hit) = ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, b16);
+        assert!(!hit, "a batched request must miss the batch-1 entry");
+        assert_eq!(eval.batch, 16);
+        let net = eval.stepped_network.as_ref().expect("batched census");
+        assert_eq!(net.batch, 16);
+        let b = eval.batched.as_ref().expect("closed-form batched payload");
+        assert_eq!(b.batch, 16);
+        assert!(b.frames_per_s() > 0.0);
+        assert_eq!(
+            *eval,
+            Evaluation::compute_batched(
+                &f,
+                &ARRIA_10_GX1150,
+                4,
+                4,
+                Fidelity::SteppedFullNetwork,
+                16
+            )
+        );
+        // batch 0 normalizes to 1 and shares the batch-1 entry
+        let (eval0, hit) =
+            ev.evaluate(&f, &ARRIA_10_GX1150, 4, 4, base.batched(0));
+        assert!(hit, "batch 0 normalizes to the batch-1 key");
+        assert_eq!(eval0.batch, 1);
+        assert!(eval0.batched.is_none(), "no batched payload at batch 1");
+        // round-trip: the batched entry survives disk with its key and
+        // payloads intact
+        let path = tmp_path("batched");
+        assert_eq!(ev.cache().save(&path).unwrap(), 2);
+        let warm = Evaluator::with_cache(2, Arc::new(EvalCache::load(&path).unwrap()));
+        let (roundtrip, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, b16);
+        assert!(hit, "batched entry survives the round trip");
+        assert_eq!(*roundtrip, *eval, "batched payload drifted through disk");
+        let (_, hit) = warm.evaluate(&f, &ARRIA_10_GX1150, 4, 4, base.batched(8));
+        assert!(!hit, "a different batch size never borrows it");
+        // tampering with the batch key is caught by the payload checks
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replacen("\"batch\": 16,", "\"batch\": 8,", 1);
+        assert_ne!(text, tampered, "tamper must land");
+        std::fs::write(&path, tampered).unwrap();
+        assert!(EvalCache::load(&path).is_err(), "batch tamper rejected");
         std::fs::remove_file(&path).ok();
     }
 

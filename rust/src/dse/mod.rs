@@ -19,7 +19,11 @@
 //! the census back into Algorithm 1 as a bottleneck-stall penalty
 //! ([`reward::RewardShaper::eval_censused`]). The [`specialize()`](specialize::specialize) pass
 //! then converts the winner's census into per-layer (N_i, N_l) options
-//! and weight schedules ([`SpecializationReport`]).
+//! and weight schedules ([`SpecializationReport`]). For serving, the
+//! [`throughput`] pass re-runs the configured explorer across candidate
+//! batch sizes (each under its own `(…, B)` memo keys) and picks the
+//! highest-frames/s (N_i, N_l, B) whose batch makespan meets the
+//! optional latency SLO ([`co_optimize`]).
 
 pub mod brute;
 pub mod eval;
@@ -28,6 +32,7 @@ pub mod options;
 pub mod reward;
 pub mod rl;
 pub mod specialize;
+pub mod throughput;
 
 pub use brute::DseResult;
 pub use eval::{
@@ -38,3 +43,4 @@ pub use options::OptionSpace;
 pub use reward::RewardShaper;
 pub use rl::RlConfig;
 pub use specialize::{specialize, LayerSpecialization, SpecializationReport};
+pub use throughput::{co_optimize, BatchCandidate, ThroughputChoice};

@@ -34,7 +34,7 @@ use cnn2gate::quant::QuantSpec;
 use cnn2gate::report::{
     baselines, comparison_table, fig6, fig6_specialized, fleet_table, specialization_table,
     stepped_census_table, sweep_best_device_table, sweep_best_model_table, sweep_pareto_table,
-    sweep_table, table1, table2,
+    sweep_table, sweep_throughput_table, table1, table2,
 };
 use cnn2gate::runtime::{load_golden, Manifest, Tensor};
 use cnn2gate::session::{CompileJob, Session, SessionBuilder};
@@ -114,6 +114,8 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("explorer", "rl|bf"),
             opt("fidelity", "analytical|stepped|stepped-full"),
             opt("census-gamma", "<g>"),
+            opt("batch", "b1,b2,..."),
+            opt("latency-slo", "<ms>"),
             opt("threads", "N"),
             opt("cache-file", "F"),
             opt("cache-max-entries", "N"),
@@ -132,6 +134,8 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("explorer", "rl|bf"),
             opt("fidelity", "analytical|stepped|stepped-full"),
             opt("census-gamma", "<g>"),
+            opt("batch", "b1,b2,..."),
+            opt("latency-slo", "<ms>"),
             opt("threads", "N"),
             opt("cache-file", "F"),
             opt("cache-max-entries", "N"),
@@ -150,6 +154,8 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("device", "<d>"),
             opt("explorer", "rl|bf"),
             opt("census-gamma", "<g>"),
+            opt("batch", "b1,b2,..."),
+            opt("latency-slo", "<ms>"),
             opt("threads", "N"),
             opt("cache-file", "F"),
             opt("cache-max-entries", "N"),
@@ -174,6 +180,7 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("artifacts", "DIR"),
             opt("requests", "N"),
             opt("batch", "B"),
+            opt("latency-slo", "<ms>"),
             opt("workers", "N"),
             opt("queue", "N"),
             opt("compile-models", "m1,m2,..."),
@@ -210,11 +217,18 @@ census's bottleneck stall fraction (0 = the paper's Algorithm 1; the
 stall term is live under stepped-full fidelity). `--cache-max-entries N`
 LRU-evicts the --cache-file before saving. `--json` on
 synth/fit-fleet/sweep emits the stable machine-readable outcome document
-instead of tables. `serve` runs the in-process compile-service daemon:
+instead of tables. `--batch b1,b2,...` on synth/fit-fleet/sweep runs the
+(Ni,Nl,B) throughput co-optimization: the explorer re-runs per batch
+size (weights fetched once per group pass, held across the B frames) and
+the highest-frames/s batch whose makespan meets `--latency-slo <ms>`
+wins; sweep prints a frames/s ranking table for the explored batches.
+`serve` runs the in-process compile-service daemon:
 `--compile-models m1,m2` submits fleet compile jobs that stream typed
 admission/progress events (`--workers`/`--queue` bound concurrency and
 admission), while `--requests N` inferences ride the same daemon's
-batched emulation lane when PJRT artifacts exist.
+batched emulation lane when PJRT artifacts exist. Without `serve
+--batch B` the inference micro-batch cap is sized by the throughput DSE
+of the served model (under `--latency-slo` when given).
 ";
 
 /// The USAGE text, generated from [`SUBCOMMANDS`] so it cannot drift
@@ -320,6 +334,35 @@ fn close_session(session: &Session, json: bool) -> Result<()> {
     Ok(())
 }
 
+/// Apply the throughput-mode flags (`--batch`, `--latency-slo`) to a
+/// job builder — shared by synth, fit-fleet and sweep.
+fn throughput_flags(
+    mut builder: cnn2gate::session::CompileJobBuilder,
+    args: &Args,
+) -> Result<cnn2gate::session::CompileJobBuilder> {
+    builder = builder.batches(CompileJob::batches_from_args(args)?);
+    if let Some(ms) = CompileJob::latency_slo_from_args(args)? {
+        builder = builder.latency_slo_ms(ms);
+    }
+    Ok(builder)
+}
+
+/// One human-readable line for a report's throughput choice, when the
+/// job ran in throughput mode.
+fn throughput_line(rep: &cnn2gate::synth::SynthReport) -> Option<String> {
+    let choice = rep.throughput.as_ref()?;
+    let c = choice.chosen_candidate()?;
+    let slo = match (choice.latency_slo_ms, choice.slo_satisfied) {
+        (Some(ms), true) => format!(" (meets {ms:.1} ms SLO)"),
+        (Some(ms), false) => format!(" (MISSES {ms:.1} ms SLO — best effort)"),
+        (None, _) => String::new(),
+    };
+    Some(format!(
+        "throughput: batch {} — {:.1} frames/s, {:.2} ms batch makespan{slo}",
+        c.batch, c.frames_per_s, c.batch_millis
+    ))
+}
+
 fn scheduler_line(outcome: &cnn2gate::session::Outcome) -> String {
     format!(
         "scheduler: {} items, {} steals on {} workers",
@@ -419,11 +462,11 @@ fn cmd_fit_fleet(args: &Args) -> Result<()> {
     let model = args.require("model")?;
     let g = pipeline::load_model(model, false)?;
     let session = open_session(args)?;
-    let job = CompileJob::builder()
+    let builder = CompileJob::builder()
         .model(g)
         .all_devices()
-        .explorer(CompileJob::explorer_from_args(args)?)
-        .build()?;
+        .explorer(CompileJob::explorer_from_args(args)?);
+    let job = throughput_flags(builder, args)?.build()?;
     let outcome = session.run(&job)?;
     let json = args.has("json");
     if json {
@@ -442,6 +485,11 @@ fn cmd_fit_fleet(args: &Args) -> Result<()> {
                 _ => println!("recommended: {}", best.device),
             },
             None => println!("recommended: none — {model} fits no device in the database"),
+        }
+        for entry in &rep.entries {
+            if let Some(line) = throughput_line(entry) {
+                println!("{}: {line}", entry.device);
+            }
         }
         let stats = outcome.cache;
         println!(
@@ -463,11 +511,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         graphs.push(pipeline::load_model(name, false)?);
     }
     let session = open_session(args)?;
-    let job = CompileJob::builder()
+    let builder = CompileJob::builder()
         .models(graphs)
         .all_devices()
-        .explorer(CompileJob::explorer_from_args(args)?)
-        .build()?;
+        .explorer(CompileJob::explorer_from_args(args)?);
+    let job = throughput_flags(builder, args)?.build()?;
     let outcome = session.run(&job)?;
     let json = args.has("json");
     if json {
@@ -475,6 +523,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     } else {
         let rep = outcome.to_sweep_report();
         println!("{}", sweep_table(&rep).render());
+        if rep.entries.iter().any(|e| e.throughput.is_some()) {
+            println!("{}", sweep_throughput_table(&rep).render());
+        }
         println!("{}", sweep_best_device_table(&rep).render());
         println!("{}", sweep_best_model_table(&rep).render());
         println!("{}", sweep_pareto_table(&rep).render());
@@ -516,6 +567,7 @@ fn cmd_synth(args: &Args) -> Result<()> {
     if args.has("specialize") {
         builder = builder.specialize();
     }
+    builder = throughput_flags(builder, args)?;
     let outcome = session.run(&builder.build()?)?;
     let json = args.has("json");
     if json {
@@ -561,6 +613,9 @@ fn cmd_synth(args: &Args) -> Result<()> {
             }
         }
         _ => println!("Does not fit on {}", rep.device),
+    }
+    if let Some(line) = throughput_line(rep) {
+        println!("{line}");
     }
     if (args.has("report") || args.has("specialize")) && !rep.fits() {
         println!("(no stepped census: the design does not fit)");
@@ -610,6 +665,30 @@ fn cmd_emulate(args: &Args) -> Result<()> {
     }
 }
 
+/// Size the serving micro-batch from the throughput DSE: co-optimize
+/// (N_i, N_l, B) for the served model on the reference Arria 10 board
+/// (analytical fidelity, brute force — a handful of closed-form
+/// evaluations) and take the chosen B. Falls back to 1 when the model
+/// fits nowhere.
+fn throughput_batch_for(model: &str, latency_slo_ms: Option<f64>) -> Result<usize> {
+    use cnn2gate::dse::{eval, throughput, EvalRequest};
+    use cnn2gate::estimator::Thresholds;
+    let g = pipeline::load_model(model, false)?;
+    let flow = ComputationFlow::extract(&g).map_err(|e| anyhow!("{e}"))?;
+    let dev = &device::ARRIA_10_GX1150;
+    let ev = eval::global();
+    let choice = throughput::co_optimize(
+        ev,
+        &flow,
+        dev,
+        EvalRequest::at(Fidelity::Analytical),
+        &[1, 2, 4, 8, 16],
+        latency_slo_ms,
+        |req| brute::explore_with_fidelity(ev, &flow, dev, Thresholds::default(), req),
+    );
+    Ok(choice.chosen_batch())
+}
+
 /// Start the compile service with its inference lane bound to
 /// `model`'s artifact, returning the input shape the demo feeds it.
 fn start_infer_service(
@@ -630,14 +709,32 @@ fn start_infer_service(
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let compile_models = args.get_list("compile-models", &[]);
+    let model = args.get("model").unwrap_or("lenet5");
+    // --batch pins the inference micro-batch cap; otherwise the
+    // throughput DSE sizes it from the served model's (Ni, Nl, B)
+    // co-optimization under the optional --latency-slo
+    let max_batch = match args.get("batch") {
+        Some(_) => args.get_usize("batch", 8)?,
+        None => {
+            let slo = CompileJob::latency_slo_from_args(args)?;
+            let chosen = throughput_batch_for(model, slo)?;
+            println!(
+                "serve: micro-batch sized to {chosen} by the throughput DSE{}",
+                match slo {
+                    Some(ms) => format!(" under a {ms:.1} ms SLO"),
+                    None => String::new(),
+                }
+            );
+            chosen
+        }
+    };
     let cfg = ServiceConfig {
         workers: args.get_usize("workers", 2)?,
         queue_capacity: args.get_usize("queue", 64)?,
-        max_batch: args.get_usize("batch", 8)?,
+        max_batch,
         ..ServiceConfig::default()
     };
-    let compile_models = args.get_list("compile-models", &[]);
-    let model = args.get("model").unwrap_or("lenet5");
     let dir = artifacts_dir(args);
 
     // One daemon serves both lanes. Without --compile-models the

@@ -8,5 +8,5 @@ pub use baselines::BaselineRow;
 pub use tables::{
     comparison_table, fig6, fig6_specialized, fleet_table, specialization_table,
     stepped_census_table, sweep_best_device_table, sweep_best_model_table, sweep_pareto_table,
-    sweep_table, table1, table2,
+    sweep_table, sweep_throughput_table, table1, table2,
 };

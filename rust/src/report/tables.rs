@@ -131,7 +131,7 @@ pub fn fleet_table(model: &str, entries: &[SynthReport]) -> Table {
             }
         }
     }
-    t.footnote("devices in database order; latency simulated at batch 1");
+    t.footnote(format!("devices in database order; {}", batch_note(entries)));
     t
 }
 
@@ -139,6 +139,24 @@ fn explorer_tag(explorer: Explorer) -> &'static str {
     match explorer {
         Explorer::BruteForce => "bf",
         Explorer::Reinforcement => "rl",
+    }
+}
+
+/// The latency footnote's batch clause, derived from the entries the
+/// table renders (the old hardcoded "batch 1" misreported
+/// throughput-mode runs, whose latencies are simulated at each entry's
+/// chosen batch).
+fn batch_note(entries: &[SynthReport]) -> String {
+    let mut batches: Vec<usize> = entries.iter().map(|e| e.batch.max(1)).collect();
+    batches.sort_unstable();
+    batches.dedup();
+    match batches.as_slice() {
+        [] => "latency simulated at batch 1".to_string(),
+        [b] => format!("latency simulated at batch {b}"),
+        many => format!(
+            "latency simulated at batches {}",
+            many.iter().map(|b| b.to_string()).collect::<Vec<_>>().join("/")
+        ),
     }
 }
 
@@ -212,7 +230,76 @@ pub fn sweep_table(rep: &SweepReport) -> Table {
             }
         }
     }
-    t.footnote("model-major, devices in job order; latency simulated at batch 1");
+    t.footnote(format!(
+        "model-major, devices in job order; {}",
+        batch_note(&rep.entries)
+    ));
+    t
+}
+
+/// Frames/s ranking from a throughput-mode sweep (`sweep --batch`):
+/// one row per entry that ran the (Ni, Nl, B) co-optimization, ranked
+/// by frames/s descending (ties keep job order, so the rendering is
+/// deterministic). Entries without a throughput sweep — classic
+/// batch-1 jobs mixed into the matrix — are skipped.
+pub fn sweep_throughput_table(rep: &SweepReport) -> Table {
+    let mut t = Table::new(
+        "Throughput ranking: frames/s at the chosen batch",
+        &[
+            "Model",
+            "Device",
+            "Batch",
+            "Option (Ni,Nl)",
+            "Frames/s",
+            "Batch makespan",
+            "SLO",
+        ],
+    );
+    let mut ranked: Vec<&SynthReport> =
+        rep.entries.iter().filter(|e| e.throughput.is_some()).collect();
+    ranked.sort_by(|a, b| {
+        let fps = |e: &SynthReport| {
+            e.throughput
+                .as_ref()
+                .and_then(|c| c.chosen_candidate())
+                .map_or(0.0, |c| c.frames_per_s)
+        };
+        fps(b).total_cmp(&fps(a))
+    });
+    for e in ranked {
+        let choice = e.throughput.as_ref().expect("filtered to Some above");
+        match choice.chosen_candidate() {
+            Some(c) => {
+                let slo = match choice.latency_slo_ms {
+                    Some(ms) if c.meets_slo => format!("meets {ms:.1} ms"),
+                    Some(ms) => format!("misses {ms:.1} ms"),
+                    None => "-".into(),
+                };
+                t.row(&[
+                    e.model.clone(),
+                    e.device.to_string(),
+                    c.batch.to_string(),
+                    c.option()
+                        .map_or("-".into(), |(ni, nl)| format!("({ni},{nl})")),
+                    format!("{:.1}", c.frames_per_s),
+                    format!("{:.2} ms", c.batch_millis),
+                    slo,
+                ]);
+            }
+            None => {
+                t.row(&[
+                    e.model.clone(),
+                    e.device.to_string(),
+                    "-".into(),
+                    "Does not fit".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t.footnote("frames/s descending; each row's batch is its own co-optimization winner");
     t
 }
 
@@ -637,6 +724,52 @@ mod tests {
             !s.contains("none fits"),
             "no spurious rows for devices the job never evaluated: {s}"
         );
+    }
+
+    #[test]
+    fn batch_note_derives_from_the_entries() {
+        assert_eq!(batch_note(&[]), "latency simulated at batch 1");
+        let a = solo("alexnet", &ARRIA_10_GX1150);
+        assert_eq!(a.batch, 1, "classic jobs report batch 1");
+        assert_eq!(batch_note(&[a.clone()]), "latency simulated at batch 1");
+        let mut b = a.clone();
+        b.batch = 16;
+        assert_eq!(batch_note(&[b.clone()]), "latency simulated at batch 16");
+        assert_eq!(
+            batch_note(&[a, b]),
+            "latency simulated at batches 1/16",
+            "mixed batches list every distinct B"
+        );
+    }
+
+    #[test]
+    fn sweep_throughput_table_ranks_the_co_optimization() {
+        let session = Session::builder().threads(4).build();
+        let job = CompileJob::builder()
+            .model(zoo::build("alexnet", false).unwrap())
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .batches([1, 16])
+            .latency_slo_ms(1000.0)
+            .build()
+            .unwrap();
+        let rep = session.run(&job).unwrap().to_sweep_report();
+        let t = sweep_throughput_table(&rep);
+        assert_eq!(t.rows.len(), 1, "one throughput row per entry");
+        let s = t.render();
+        assert!(s.contains("(16,32)"), "{s}");
+        assert!(s.contains("meets 1000.0 ms"), "{s}");
+        // the matrix footnote now reports the chosen batch, not a
+        // hardcoded "batch 1"
+        let matrix = sweep_table(&rep).render();
+        assert!(matrix.contains("latency simulated at batch 16"), "{matrix}");
+        // classic sweeps have no throughput rows and keep the old note
+        let classic = full_sweep(&["alexnet"]);
+        assert!(classic.entries.iter().all(|e| e.throughput.is_none()));
+        assert_eq!(sweep_throughput_table(&classic).rows.len(), 0);
+        assert!(sweep_table(&classic)
+            .render()
+            .contains("latency simulated at batch 1"));
     }
 
     #[test]

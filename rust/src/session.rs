@@ -76,8 +76,8 @@ use crate::cli::Args;
 use crate::coordinator::pipeline::{FleetReport, SweepReport};
 use crate::coordinator::scheduler::{work_steal_map_seeded, StealStats};
 use crate::dse::{
-    brute, eval, rl, CacheStats, EvalCache, EvalRequest, Evaluator, Fidelity, OptionSpace,
-    RlConfig, TenantId,
+    brute, eval, rl, throughput, CacheStats, EvalCache, EvalRequest, Evaluator, Fidelity,
+    OptionSpace, RlConfig, TenantId,
 };
 use crate::estimator::{device, synthesis_minutes, Device, Thresholds};
 use crate::ir::{ComputationFlow, Graph};
@@ -89,8 +89,9 @@ use crate::util::json::{Json, JsonObj};
 pub const OUTCOME_FORMAT: &str = "cnn2gate-outcome";
 /// Schema version of the [`Outcome::to_json`] document; bumped on any
 /// layout change (v2: top-level `census_gamma`, per-entry
-/// `specialization`).
-pub const OUTCOME_VERSION: i64 = 2;
+/// `specialization`; v3: per-entry `batch` + `throughput` and
+/// `specialization.batch` for the batched serving flow).
+pub const OUTCOME_VERSION: i64 = 3;
 
 /// Candidates per work-stealing prewarm item. Small enough that a
 /// VGG-16-sized grid splits across several workers, big enough that the
@@ -368,6 +369,8 @@ impl Session {
             job.quant.as_ref(),
             self.request(),
             job.specialize,
+            &job.batches,
+            job.latency_slo_ms,
             &ExecHooks::default(),
         )?;
         Ok(Outcome {
@@ -421,6 +424,16 @@ pub struct CompileJob {
     /// Run the per-layer (N_i, N_l) specialization pass on every fitting
     /// cell (requires the session's `Fidelity::SteppedFullNetwork`).
     pub specialize: bool,
+    /// Candidate batch sizes for the throughput co-optimization
+    /// ([`crate::dse::throughput`]). The default `[1]` keeps the classic
+    /// latency-mode flow; anything else (or a latency SLO) re-runs the
+    /// explorer per batch size and reports the highest-frames/s
+    /// (N_i, N_l, B).
+    pub batches: Vec<usize>,
+    /// Optional serving SLO in ms: the chosen batch's makespan (the
+    /// worst-case latency of a frame landing first in a batch) must stay
+    /// under it.
+    pub latency_slo_ms: Option<f64>,
 }
 
 impl CompileJob {
@@ -436,6 +449,44 @@ impl CompileJob {
             _ => Explorer::Reinforcement,
         })
     }
+
+    /// Parse `--batch b1,b2,...` (default `[1]`, the single-frame
+    /// schedule). Rejects empty items and zeros; the engine normalizes
+    /// (sort + dedup) later.
+    pub fn batches_from_args(args: &Args) -> Result<Vec<usize>> {
+        let items = args.get_list("batch", &[]);
+        if items.is_empty() {
+            return Ok(vec![1]);
+        }
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            let b: usize = item
+                .parse()
+                .map_err(|_| anyhow!("--batch expects positive integers, got {item:?}"))?;
+            if b == 0 {
+                bail!("--batch sizes must be >= 1, got 0");
+            }
+            out.push(b);
+        }
+        Ok(out)
+    }
+
+    /// Parse `--latency-slo <ms>` (absent = unconstrained throughput).
+    /// Rejects non-positive and non-finite values.
+    pub fn latency_slo_from_args(args: &Args) -> Result<Option<f64>> {
+        match args.get("latency-slo") {
+            None => Ok(None),
+            Some(raw) => {
+                let ms: f64 = raw
+                    .parse()
+                    .map_err(|_| anyhow!("--latency-slo expects milliseconds, got {raw:?}"))?;
+                if !ms.is_finite() || ms <= 0.0 {
+                    bail!("--latency-slo must be a finite positive number of ms, got {ms}");
+                }
+                Ok(Some(ms))
+            }
+        }
+    }
 }
 
 /// Typed builder for [`CompileJob`].
@@ -446,6 +497,8 @@ pub struct CompileJobBuilder {
     explorer: Explorer,
     quant: Option<QuantSpec>,
     specialize: bool,
+    batches: Vec<usize>,
+    latency_slo_ms: Option<f64>,
 }
 
 impl Default for CompileJobBuilder {
@@ -456,6 +509,8 @@ impl Default for CompileJobBuilder {
             explorer: Explorer::Reinforcement,
             quant: None,
             specialize: false,
+            batches: Vec::new(),
+            latency_slo_ms: None,
         }
     }
 }
@@ -515,16 +570,45 @@ impl CompileJobBuilder {
         self
     }
 
+    /// Candidate batch sizes for the (N_i, N_l, B) throughput
+    /// co-optimization (`--batch`). An empty list — the default — keeps
+    /// the classic single-frame flow.
+    pub fn batches(mut self, batches: impl IntoIterator<Item = usize>) -> CompileJobBuilder {
+        self.batches.extend(batches);
+        self
+    }
+
+    /// Serving latency SLO in ms (`--latency-slo`): the chosen batch's
+    /// makespan must stay under it.
+    pub fn latency_slo_ms(mut self, ms: f64) -> CompileJobBuilder {
+        self.latency_slo_ms = Some(ms);
+        self
+    }
+
     /// Validate and build. A job needs at least one model; an empty
-    /// device list targets the whole database.
+    /// device list targets the whole database; an empty batch list means
+    /// the single-frame schedule.
     pub fn build(self) -> Result<CompileJob> {
         if self.models.is_empty() {
             bail!("compile job needs at least one model");
+        }
+        if self.batches.contains(&0) {
+            bail!("compile job batch sizes must be >= 1");
+        }
+        if let Some(ms) = self.latency_slo_ms {
+            if !ms.is_finite() || ms <= 0.0 {
+                bail!("compile job latency SLO must be a finite positive number of ms, got {ms}");
+            }
         }
         let devices = if self.devices.is_empty() {
             device::all()
         } else {
             self.devices
+        };
+        let batches = if self.batches.is_empty() {
+            vec![1]
+        } else {
+            self.batches
         };
         Ok(CompileJob {
             models: self.models,
@@ -532,6 +616,8 @@ impl CompileJobBuilder {
             explorer: self.explorer,
             quant: self.quant,
             specialize: self.specialize,
+            batches,
+            latency_slo_ms: self.latency_slo_ms,
         })
     }
 }
@@ -775,6 +861,7 @@ fn entry_to_json(rep: &SynthReport) -> Json {
     let mut o = JsonObj::new();
     o.insert("model", rep.model.as_str().into());
     o.insert("device", rep.device.into());
+    o.insert("batch", rep.batch.into());
     o.insert("fits", rep.fits().into());
     o.insert(
         "option",
@@ -812,6 +899,10 @@ fn entry_to_json(rep: &SynthReport) -> Json {
         rep.sim.as_ref().map_or(Json::Null, eval::sim_to_json),
     );
     o.insert(
+        "throughput",
+        rep.throughput.as_ref().map_or(Json::Null, throughput_to_json),
+    );
+    o.insert(
         "stepped_network",
         rep.stepped_network.as_ref().map_or(Json::Null, eval::net_to_json),
     );
@@ -832,12 +923,50 @@ fn entry_to_json(rep: &SynthReport) -> Json {
     Json::Obj(o)
 }
 
-/// The specialization section of one entry (schema v2).
+/// The (N_i, N_l, B) throughput co-optimization section of one entry
+/// (schema v3; present only when the job ran in throughput mode).
+fn throughput_to_json(choice: &crate::dse::ThroughputChoice) -> Json {
+    let mut o = JsonObj::new();
+    o.insert(
+        "latency_slo_ms",
+        choice.latency_slo_ms.map_or(Json::Null, Json::Num),
+    );
+    o.insert("slo_satisfied", choice.slo_satisfied.into());
+    o.insert("chosen_batch", choice.chosen_batch().into());
+    o.insert(
+        "candidates",
+        Json::Arr(
+            choice
+                .candidates
+                .iter()
+                .map(|c| {
+                    let mut r = JsonObj::new();
+                    r.insert("batch", c.batch.into());
+                    r.insert(
+                        "option",
+                        match c.option() {
+                            Some((ni, nl)) => Json::Arr(vec![ni.into(), nl.into()]),
+                            None => Json::Null,
+                        },
+                    );
+                    r.insert("frames_per_s", c.frames_per_s.into());
+                    r.insert("batch_millis", c.batch_millis.into());
+                    r.insert("meets_slo", c.meets_slo.into());
+                    Json::Obj(r)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(o)
+}
+
+/// The specialization section of one entry (schema v2; `batch` since v3).
 fn spec_to_json(spec: &crate::dse::SpecializationReport) -> Json {
     let mut o = JsonObj::new();
     o.insert("uniform", Json::Arr(vec![spec.uniform.0.into(), spec.uniform.1.into()]));
     o.insert("envelope", Json::Arr(vec![spec.envelope.0.into(), spec.envelope.1.into()]));
     o.insert("fmax_mhz", spec.fmax_mhz.into());
+    o.insert("batch", spec.batch.into());
     o.insert("uniform_total_cycles", Json::Num(spec.uniform_total_cycles() as f64));
     o.insert("specialized_total_cycles", Json::Num(spec.specialized_total_cycles() as f64));
     o.insert("envelope_estimate", eval::est_to_json(&spec.envelope_estimate));
@@ -929,8 +1058,11 @@ fn merge_steals(a: StealStats, b: StealStats) -> StealStats {
 /// and the saved cache bytes are scheduling-independent.
 ///
 /// `req` names the [`Fidelity`], census γ and tenant namespace every
-/// candidate is scored under; `hooks` carries the compile service's
-/// cancel flag and progress callback (see [`ExecHooks`]).
+/// candidate is scored under; `batches`/`latency_slo_ms` select the
+/// throughput co-optimization (the prewarm scores every grid once per
+/// normalized batch size so the per-batch explorer passes stay
+/// hit-only); `hooks` carries the compile service's cancel flag and
+/// progress callback (see [`ExecHooks`]).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn execute(
     evaluator: &Evaluator,
@@ -941,6 +1073,8 @@ pub(crate) fn execute(
     quant: Option<&QuantSpec>,
     req: EvalRequest,
     specialize: bool,
+    batches: &[usize],
+    latency_slo_ms: Option<f64>,
     hooks: &ExecHooks,
 ) -> Result<EngineRun> {
     if models.is_empty() {
@@ -970,16 +1104,22 @@ pub(crate) fn execute(
         None => vec![None; models.len()],
     };
 
-    // phase 1: work-stealing prewarm
+    // phase 1: work-stealing prewarm — once per normalized batch size,
+    // so the throughput co-optimization's per-batch explorer passes are
+    // answered entirely from the memo
+    let norm_batches = throughput::normalize_batches(batches);
+    let reqs: Vec<EvalRequest> = norm_batches.iter().map(|&b| req.batched(b)).collect();
     let grids: Vec<Vec<(usize, usize)>> = flows
         .iter()
         .map(|f| OptionSpace::from_flow(f).pairs())
         .collect();
-    let mut chunks: Vec<(usize, &'static Device, Vec<(usize, usize)>)> = Vec::new();
+    let mut chunks: Vec<(usize, &'static Device, EvalRequest, Vec<(usize, usize)>)> = Vec::new();
     for (mi, grid) in grids.iter().enumerate() {
         for &dev in devices {
-            for chunk in grid.chunks(CHUNK) {
-                chunks.push((mi, dev, chunk.to_vec()));
+            for &breq in &reqs {
+                for chunk in grid.chunks(CHUNK) {
+                    chunks.push((mi, dev, breq, chunk.to_vec()));
+                }
             }
         }
     }
@@ -994,12 +1134,12 @@ pub(crate) fn execute(
     let stamp = evaluator.cache().tick();
     let prewarm_width = chunks.len().min(eval::default_threads());
     let (_, prewarm_steals) =
-        work_steal_map_seeded(&chunks, prewarm_width, |i| i, |(mi, dev, options)| {
+        work_steal_map_seeded(&chunks, prewarm_width, |i| i, |(mi, dev, breq, options)| {
             if hooks.cancelled() {
                 return;
             }
             for &(ni, nl) in options {
-                evaluator.cache().get_or_compute_at(stamp, &flows[*mi], dev, ni, nl, req);
+                evaluator.cache().get_or_compute_at(stamp, &flows[*mi], dev, ni, nl, *breq);
             }
             hooks.report(done.fetch_add(1, Ordering::Relaxed) + 1, total);
         });
@@ -1024,6 +1164,8 @@ pub(crate) fn execute(
                 quants[mi].as_ref(),
                 req,
                 specialize,
+                &norm_batches,
+                latency_slo_ms,
             )?;
             hooks.report(done.fetch_add(1, Ordering::Relaxed) + 1, total);
             Ok(entry)
@@ -1033,10 +1175,12 @@ pub(crate) fn execute(
         entries.push(result?);
     }
 
-    // deterministic re-stamp (see the function docs)
+    // deterministic re-stamp (see the function docs), once per batch
     for (flow, grid) in flows.iter().zip(&grids) {
         for &dev in devices {
-            evaluator.cache().touch_present(flow, dev, grid, req);
+            for &breq in &reqs {
+                evaluator.cache().touch_present(flow, dev, grid, breq);
+            }
         }
     }
     Ok(EngineRun {
@@ -1050,6 +1194,12 @@ pub(crate) fn execute(
 /// model → latency (pulled from the memo; the chosen option was already
 /// scored during exploration, so nothing is recomputed) → optional
 /// per-layer specialization of the chosen design.
+///
+/// With the default `batches == [1]` and no SLO this is the classic
+/// latency-mode flow, bit-identical to pre-batch outputs. Otherwise the
+/// [`throughput`] pass re-runs the explorer per batch size (all memo
+/// hits after the prewarm), the entry reports the chosen batch's
+/// winner, and the full sweep rides along in [`SynthReport::throughput`].
 #[allow(clippy::too_many_arguments)]
 fn compile_pair(
     evaluator: &Evaluator,
@@ -1061,14 +1211,33 @@ fn compile_pair(
     quant: Option<&QuantReport>,
     req: EvalRequest,
     specialize: bool,
+    norm_batches: &[usize],
+    latency_slo_ms: Option<f64>,
 ) -> Result<SynthReport> {
-    let dse = match explorer {
+    let explore_at = |r: EvalRequest| match explorer {
         Explorer::BruteForce => {
-            brute::explore_with_fidelity(evaluator, flow, device, thresholds, req)
+            brute::explore_with_fidelity(evaluator, flow, device, thresholds, r)
         }
         Explorer::Reinforcement => {
-            rl::explore_with_fidelity(evaluator, flow, device, thresholds, RlConfig::default(), req)
+            rl::explore_with_fidelity(evaluator, flow, device, thresholds, RlConfig::default(), r)
         }
+    };
+    let throughput_mode = norm_batches != [1] || latency_slo_ms.is_some();
+    let (dse, batch, choice, req) = if throughput_mode {
+        let choice = throughput::co_optimize(
+            evaluator,
+            flow,
+            device,
+            req,
+            norm_batches,
+            latency_slo_ms,
+            explore_at,
+        );
+        let batch = choice.chosen_batch();
+        let dse = choice.candidates[choice.chosen].dse.clone();
+        (dse, batch, Some(choice), req.batched(batch))
+    } else {
+        (explore_at(req), 1, None, req)
     };
 
     let (estimate, synth_min, sim, stepped_network, specialization) =
@@ -1101,6 +1270,8 @@ fn compile_pair(
         model: graph.name.clone(),
         device: device.name,
         explorer,
+        batch,
+        throughput: choice,
         dse,
         estimate,
         synthesis_minutes: synth_min,
@@ -1239,6 +1410,29 @@ mod tests {
         assert_eq!(CompileJob::explorer_from_args(&empty).unwrap(), Explorer::Reinforcement);
         let bad = Args::parse(&sv(&["synth", "--explorer", "x"]), &["explorer"], &[]).unwrap();
         assert!(CompileJob::explorer_from_args(&bad).is_err());
+        // so do the throughput knobs
+        let batched = Args::parse(
+            &sv(&["synth", "--batch", "16,1,4", "--latency-slo", "25"]),
+            &["batch", "latency-slo"],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(CompileJob::batches_from_args(&batched).unwrap(), vec![16, 1, 4]);
+        assert_eq!(CompileJob::latency_slo_from_args(&batched).unwrap(), Some(25.0));
+        assert_eq!(CompileJob::batches_from_args(&empty).unwrap(), vec![1]);
+        assert_eq!(CompileJob::latency_slo_from_args(&empty).unwrap(), None);
+        for bad in ["0", "x", "-2"] {
+            let a = Args::parse(&sv(&["synth", "--batch", bad]), &["batch"], &[]).unwrap();
+            assert!(CompileJob::batches_from_args(&a).is_err(), "batch={bad} must be rejected");
+        }
+        for bad in ["0", "-5", "NaN", "x"] {
+            let a =
+                Args::parse(&sv(&["synth", "--latency-slo", bad]), &["latency-slo"], &[]).unwrap();
+            assert!(
+                CompileJob::latency_slo_from_args(&a).is_err(),
+                "slo={bad} must be rejected"
+            );
+        }
     }
 
     #[test]
@@ -1253,6 +1447,29 @@ mod tests {
         assert_eq!(job.explorer, Explorer::Reinforcement);
         assert!(job.quant.is_none());
         assert!(!job.specialize);
+        assert_eq!(job.batches, vec![1], "default is the single-frame schedule");
+        assert!(job.latency_slo_ms.is_none());
+        // throughput knobs are validated at build time
+        let err = CompileJob::builder()
+            .model(zoo::build("tiny", false).unwrap())
+            .batches([4, 0])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("batch sizes"));
+        let err = CompileJob::builder()
+            .model(zoo::build("tiny", false).unwrap())
+            .latency_slo_ms(-1.0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("latency SLO"));
+        let job = CompileJob::builder()
+            .model(zoo::build("tiny", false).unwrap())
+            .batches([16, 1, 4])
+            .latency_slo_ms(25.0)
+            .build()
+            .unwrap();
+        assert_eq!(job.batches, vec![16, 1, 4], "engine normalizes, builder preserves");
+        assert_eq!(job.latency_slo_ms, Some(25.0));
     }
 
     #[test]
@@ -1391,6 +1608,55 @@ mod tests {
         assert_eq!(per_device.len(), 2, "only the job's devices are ranked");
         assert!(per_device[0].1.is_none(), "nothing fits the 5CSEMA4");
         assert_eq!(per_device[1].1.unwrap().model, "alexnet");
+    }
+
+    #[test]
+    fn throughput_job_reports_the_chosen_batch() {
+        let session = Session::builder().threads(2).build();
+        let job = CompileJob::builder()
+            .model(zoo::build("alexnet", false).unwrap())
+            .device(&ARRIA_10_GX1150)
+            .explorer(Explorer::BruteForce)
+            .batches([1, 16])
+            .build()
+            .unwrap();
+        let outcome = session.run(&job).unwrap();
+        let rep = outcome.synth_report().expect("1x1 view");
+        // unconstrained throughput mode picks the largest batch — the
+        // cross-frame weight reuse strictly grows frames/s here
+        assert_eq!(rep.batch, 16);
+        assert_eq!(rep.option(), Some((16, 32)), "winner matches latency mode");
+        let choice = rep.throughput.as_ref().expect("throughput sweep on the entry");
+        assert_eq!(choice.candidates.len(), 2);
+        assert!(choice.slo_satisfied);
+        assert_eq!(choice.chosen_batch(), 16);
+        assert!(
+            choice.candidates[1].frames_per_s > choice.candidates[0].frames_per_s,
+            "B=16 serves more frames/s than B=1"
+        );
+        // the JSON document carries the new v3 sections
+        let doc = outcome.to_json();
+        let entry = &doc.get("entries").as_arr().unwrap()[0];
+        assert_eq!(entry.get("batch").as_i64(), Some(16));
+        assert_eq!(
+            entry.get("throughput").get("chosen_batch").as_i64(),
+            Some(16)
+        );
+        // a classic job reports batch 1 and no throughput section
+        let classic = session
+            .run(
+                &CompileJob::builder()
+                    .model(zoo::build("alexnet", false).unwrap())
+                    .device(&ARRIA_10_GX1150)
+                    .explorer(Explorer::BruteForce)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        let base = classic.synth_report().unwrap();
+        assert_eq!(base.batch, 1);
+        assert!(base.throughput.is_none());
+        assert_eq!(base.option(), rep.option());
     }
 
     #[test]

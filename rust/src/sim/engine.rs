@@ -97,19 +97,7 @@ pub fn simulate_layer(
 
     // -- DDR stream ----------------------------------------------------------
     let bytes_per_cycle = device.ddr_gbytes_per_s * 1e9 / (est.fmax_mhz * 1e6);
-    // weight slices: streamed once per group pass (int8 codes)
-    let weight_bytes = (groups * (red * nl) as u64) as f64;
-    // features: read once, unless the input exceeds the feature-buffer
-    // budget, in which case every group pass re-fetches its tiles
-    let in_bytes = layer.input_elems() as f64;
-    let feat_budget_bytes = device.family.consts().feat_budget_frac * device.mem_bits as f64 / 8.0;
-    let feature_bytes = if in_bytes > feat_budget_bytes {
-        in_bytes * groups as f64
-    } else {
-        in_bytes
-    };
-    let out_bytes = layer.output_elems() as f64;
-    let ddr = ((weight_bytes + feature_bytes + out_bytes) / bytes_per_cycle).ceil() as u64;
+    let ddr = (round_ddr_bytes(layer, device, nl, 1) / bytes_per_cycle).ceil() as u64;
 
     let raw = compute.max(ddr);
     let cycles = (raw as f64 / device.duty_factor).ceil() as u64;
@@ -125,6 +113,34 @@ pub fn simulate_layer(
         millis,
         memory_bound: ddr > compute,
     }
+}
+
+/// THE per-round DDR byte formula — the single place the analytical
+/// model charges a round's traffic, shared by [`simulate_layer`]
+/// (`batch = 1`) and [`simulate_batched`], and the closed-form
+/// counterpart of the stepped model's
+/// [`super::kernels::bytes_per_step_with_reuse`]:
+///
+/// * weight slices stream once per group pass (int8 codes) and are
+///   **held across the whole batch** — the cross-frame reuse that makes
+///   batching pay;
+/// * features are read once per frame, unless the input exceeds the
+///   feature-buffer budget, in which case every group pass re-fetches
+///   its tiles (per frame);
+/// * output feature codes retire once per frame.
+fn round_ddr_bytes(layer: &FusedLayer, device: &Device, nl: usize, batch: usize) -> f64 {
+    let red = layer.reduction_dim();
+    let groups = layer.out_features().div_ceil(nl) as u64;
+    let weight_bytes = (groups * (red * nl) as u64) as f64;
+    let in_bytes = layer.input_elems() as f64;
+    let feat_budget_bytes = device.family.consts().feat_budget_frac * device.mem_bits as f64 / 8.0;
+    let feature_bytes = if in_bytes > feat_budget_bytes {
+        in_bytes * groups as f64
+    } else {
+        in_bytes
+    };
+    let out_bytes = layer.output_elems() as f64;
+    weight_bytes + (feature_bytes + out_bytes) * batch.max(1) as f64
 }
 
 /// Simulate the full network at option (ni, nl) on `device`.
@@ -178,7 +194,7 @@ pub fn simulate_with_estimate(
 /// amortizes while compute scales linearly. FC rounds (weight-bound at
 /// batch 1) benefit the most — exactly why PipeCNN's headline numbers
 /// used batch 16.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BatchReport {
     pub batch: usize,
     pub total_millis: f64,
@@ -187,7 +203,21 @@ pub struct BatchReport {
     pub layers: Vec<LayerTiming>,
 }
 
-/// Simulate a batch of `batch` frames at option (ni, nl).
+impl BatchReport {
+    /// Steady-state serving throughput at this batch size: the batch's
+    /// frames over its makespan.
+    pub fn frames_per_s(&self) -> f64 {
+        if self.millis_per_frame <= 0.0 {
+            return 0.0;
+        }
+        1e3 / self.millis_per_frame
+    }
+}
+
+/// Simulate a batch of `batch` frames at option (ni, nl). The per-layer
+/// timings carry the *batched* compute/DDR streams (one round pass over
+/// all B frames) and derive from the same [`round_ddr_bytes`] formula as
+/// [`simulate_layer`] — at `batch = 1` the two agree exactly.
 pub fn simulate_batched(
     flow: &ComputationFlow,
     device: &Device,
@@ -202,19 +232,16 @@ pub fn simulate_batched(
     let mut total_cycles = 0u64;
     for layer in &flow.layers {
         let single = simulate_layer(layer, device, &est, ni, nl);
-        // compute stream scales with the batch
+        // compute stream scales with the batch; the weight stream inside
+        // round_ddr_bytes is fetched once and held across the B frames
         let compute = single.compute_cycles * batch as u64;
-        // weights stream ONCE per batch; activations scale per frame
-        let red = layer.reduction_dim();
-        let groups = layer.out_features().div_ceil(nl) as u64;
-        let weight_bytes = (groups * (red * nl) as u64) as f64;
-        let act_bytes =
-            (layer.input_elems() + layer.output_elems()) as f64 * batch as f64;
-        let ddr = ((weight_bytes + act_bytes) / bytes_per_cycle).ceil() as u64;
+        let ddr = (round_ddr_bytes(layer, device, nl, batch) / bytes_per_cycle).ceil() as u64;
         let raw = compute.max(ddr);
         let cycles = (raw as f64 / device.duty_factor).ceil() as u64;
         total_cycles += cycles;
         layers.push(LayerTiming {
+            compute_cycles: compute,
+            ddr_cycles: ddr,
             cycles,
             millis: cycles as f64 / (est.fmax_mhz * 1e6) * 1e3,
             memory_bound: ddr > compute,
@@ -360,6 +387,32 @@ mod tests {
         // batch 1 must agree with the frame simulator
         let single = simulate(&f, &ARRIA_10_GX1150, 16, 32);
         assert!((b1.total_millis - single.total_millis).abs() / single.total_millis < 0.02);
+    }
+
+    #[test]
+    fn batched_layer_timings_share_the_single_frame_formula() {
+        // one shared per-round byte formula: at batch 1 every per-layer
+        // timing matches simulate() exactly — including the
+        // feature-budget re-fetch rule simulate_batched used to drop
+        // (VGG's early conv inputs exceed the Arria 10 feature budget)
+        for name in ["alexnet", "vgg16"] {
+            let f = flow(name);
+            let single = simulate(&f, &ARRIA_10_GX1150, 16, 32);
+            let b1 = simulate_batched(&f, &ARRIA_10_GX1150, 16, 32, 1);
+            assert_eq!(b1.layers, single.layers, "{name}");
+            let rel = (b1.total_millis - single.total_millis).abs() / single.total_millis;
+            assert!(rel < 1e-12, "{name}: {rel}");
+        }
+        // frames/s is the inverse amortized frame latency
+        let b16 = simulate_batched(&flow("alexnet"), &ARRIA_10_GX1150, 16, 32, 16);
+        let fps = b16.frames_per_s();
+        assert!((fps - 1e3 / b16.millis_per_frame).abs() / fps < 1e-12);
+        // the batched timings carry the batched streams, not frame ones
+        let single = simulate(&flow("alexnet"), &ARRIA_10_GX1150, 16, 32);
+        for (b, s) in b16.layers.iter().zip(&single.layers) {
+            assert_eq!(b.compute_cycles, 16 * s.compute_cycles, "{}", s.label);
+            assert!(b.ddr_cycles < 16 * s.ddr_cycles, "{}", s.label);
+        }
     }
 
     #[test]

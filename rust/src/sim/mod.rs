@@ -11,8 +11,10 @@ pub use engine::{
     SimReport,
 };
 pub use kernels::{
-    analytical_cycles, ddr_credit_rate, dominant_round_work, layer_round_work, network_round_work,
-    schedule_tag, scheduled_round_work, slice_resident_allowed, step_network, step_round,
-    step_round_reference, NetworkStepReport, RoundWork, StepReport, WeightSchedule,
+    analytical_cycles, bytes_per_step_with_reuse, ddr_credit_rate, dominant_round_work,
+    dominant_round_work_batched, layer_round_work, layer_round_work_batched, network_round_work,
+    network_round_work_batched, schedule_tag, scheduled_round_work, scheduled_round_work_batched,
+    slice_resident_allowed, step_network, step_network_batched, step_round, step_round_reference,
+    NetworkStepReport, RoundWork, StepReport, WeightSchedule,
 };
 pub use pipe::Pipe;

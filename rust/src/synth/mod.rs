@@ -19,7 +19,7 @@
 //! Session-vs-Session determinism instead of shim identity. This module
 //! keeps the report types the session produces.
 
-use crate::dse::{DseResult, SpecializationReport};
+use crate::dse::{DseResult, SpecializationReport, ThroughputChoice};
 use crate::estimator::ResourceEstimate;
 use crate::quant::QuantReport;
 use crate::sim::{NetworkStepReport, SimReport};
@@ -46,6 +46,13 @@ pub struct SynthReport {
     pub model: String,
     pub device: &'static str,
     pub explorer: Explorer,
+    /// Batch size the reported design was evaluated at (1 for the
+    /// classic single-frame flow; the chosen B when the job ran the
+    /// throughput co-optimization).
+    pub batch: usize,
+    /// Full (N_i, N_l, B) co-optimization sweep (present when the job
+    /// asked for throughput mode — `--batch`/`--latency-slo`).
+    pub throughput: Option<ThroughputChoice>,
     pub dse: DseResult,
     /// Present when the design fits.
     pub estimate: Option<ResourceEstimate>,

@@ -33,6 +33,29 @@ fn assert_report_identity(a: &SynthReport, b: &SynthReport, ctx: &str) {
     assert_eq!(a.model, b.model, "{ctx}");
     assert_eq!(a.device, b.device, "{ctx}");
     assert_eq!(a.option(), b.option(), "{ctx}");
+    assert_eq!(a.batch, b.batch, "{ctx}: chosen batch");
+    let sweep_view = |r: &SynthReport| {
+        r.throughput.as_ref().map(|c| {
+            (
+                c.chosen,
+                c.chosen_batch(),
+                c.slo_satisfied,
+                c.candidates
+                    .iter()
+                    .map(|x| {
+                        (
+                            x.batch,
+                            x.option(),
+                            x.frames_per_s.to_bits(),
+                            x.batch_millis.to_bits(),
+                            x.meets_slo,
+                        )
+                    })
+                    .collect::<Vec<_>>(),
+            )
+        })
+    };
+    assert_eq!(sweep_view(a), sweep_view(b), "{ctx}: throughput sweep");
     assert_eq!(a.dse.trace, b.dse.trace, "{ctx}: DSE traces");
     assert_eq!(a.dse.queries, b.dse.queries, "{ctx}");
     assert_eq!(a.dse.cache_hits, b.dse.cache_hits, "{ctx}");
@@ -309,6 +332,22 @@ fn quantized_stepped_outcome() -> Outcome {
         .unwrap()
 }
 
+fn throughput_outcome() -> Outcome {
+    let session = Session::builder().threads(4).build();
+    session
+        .run(
+            &CompileJob::builder()
+                .model(zoo::build("alexnet", false).unwrap())
+                .device(&device::ARRIA_10_GX1150)
+                .explorer(Explorer::BruteForce)
+                .batches([1, 16])
+                .latency_slo_ms(1000.0)
+                .build()
+                .unwrap(),
+        )
+        .unwrap()
+}
+
 #[test]
 fn outcome_json_is_stable_across_cold_and_warm_runs() {
     let cold = analytical_outcome().to_json().to_string_pretty();
@@ -370,18 +409,20 @@ fn collect_paths(v: &Json, prefix: &str, out: &mut BTreeSet<String>) {
 #[test]
 fn outcome_json_matches_the_golden_schema() {
     // union of the fitting/non-fitting analytical sweep (nulls, option
-    // arrays, rankings) and a quantized+specialized stepped-full 1×1
-    // (quant + stepped_network + specialization sections): together they
-    // exercise every key the v2 schema can emit
+    // arrays, rankings), a quantized+specialized stepped-full 1×1
+    // (quant + stepped_network + specialization sections), and a
+    // throughput-mode 1×1 (per-entry batch + throughput sweep): together
+    // they exercise every key the v3 schema can emit
     let mut got = BTreeSet::new();
     collect_paths(&analytical_outcome().to_json(), "", &mut got);
     collect_paths(&quantized_stepped_outcome().to_json(), "", &mut got);
+    collect_paths(&throughput_outcome().to_json(), "", &mut got);
 
     let golden_path =
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/outcome_v2_paths.txt");
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/outcome_v3_paths.txt");
     if std::env::var("CNN2GATE_UPDATE_GOLDENS").is_ok() {
         let mut text = String::from(
-            "# Key paths of the cnn2gate-outcome v2 JSON document (--json).\n\
+            "# Key paths of the cnn2gate-outcome v3 JSON document (--json).\n\
              # Regenerate with CNN2GATE_UPDATE_GOLDENS=1 cargo test outcome_json_matches.\n",
         );
         for p in &got {
@@ -391,7 +432,7 @@ fn outcome_json_matches_the_golden_schema() {
         std::fs::write(&golden_path, text).unwrap();
     }
     let want: BTreeSet<String> = std::fs::read_to_string(&golden_path)
-        .expect("golden schema file committed at rust/tests/golden/outcome_v2_paths.txt")
+        .expect("golden schema file committed at rust/tests/golden/outcome_v3_paths.txt")
         .lines()
         .map(str::trim)
         .filter(|l| !l.is_empty() && !l.starts_with('#'))
@@ -409,7 +450,7 @@ fn outcome_json_matches_the_golden_schema() {
 fn outcome_json_carries_the_acceptance_payload() {
     let doc = analytical_outcome().to_json();
     assert_eq!(doc.get("format").as_str(), Some("cnn2gate-outcome"));
-    assert_eq!(doc.get("version").as_i64(), Some(2));
+    assert_eq!(doc.get("version").as_i64(), Some(3));
     assert_eq!(doc.get("explorer").as_str(), Some("bf"));
     assert_eq!(doc.get("fidelity").as_str(), Some("analytical"));
     assert_eq!(doc.get("census_gamma").as_f64(), Some(0.0));
@@ -454,5 +495,24 @@ fn outcome_json_carries_the_acceptance_payload() {
     assert_eq!(
         spec.get("layers").as_arr().unwrap().len(),
         entry.get("latency").get("layers").as_arr().unwrap().len()
+    );
+    // classic entries pin batch 1 with a null throughput section
+    assert_eq!(arria.get("batch").as_i64(), Some(1));
+    assert!(arria.get("throughput").is_null());
+    assert_eq!(spec.get("batch").as_i64(), Some(1));
+    // the throughput-mode shape carries the (Ni, Nl, B) sweep: weight
+    // reuse makes B=16 the frames/s winner within the generous SLO
+    let batched = throughput_outcome().to_json();
+    let entry = batched.get("entries").idx(0);
+    assert_eq!(entry.get("batch").as_i64(), Some(16));
+    let thr = entry.get("throughput");
+    assert_eq!(thr.get("chosen_batch").as_i64(), Some(16));
+    assert_eq!(thr.get("latency_slo_ms").as_f64(), Some(1000.0));
+    assert_eq!(thr.get("slo_satisfied").as_bool(), Some(true));
+    let candidates = thr.get("candidates").as_arr().unwrap();
+    assert_eq!(candidates.len(), 2);
+    assert!(
+        candidates[1].get("frames_per_s").as_f64().unwrap()
+            > candidates[0].get("frames_per_s").as_f64().unwrap()
     );
 }
