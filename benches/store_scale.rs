@@ -1,0 +1,216 @@
+//! Cache-store scale bench (the PR-9 tentpole's perf gate): generate a
+//! 100 000-entry evaluation memo across 10 tenant shards, then measure
+//! the three store paths against the legacy v5 single-file cache:
+//!
+//!   * cold full save (one base rewrite per shard) and streamed load;
+//!   * the legacy whole-document save/load baseline;
+//!   * the differential win — appending ONE new entry to the 100k-entry
+//!     store must cost bytes proportional to the entry, not the corpus.
+//!
+//! Shape gates (fatal at finish()):
+//!   * the store round-trips bit-identically: the incremental history
+//!     (full save → +1 delta append → compaction) reproduces byte-for-
+//!     byte the base files of a single-shot save of the same memo;
+//!   * the 1-entry delta append writes >100× fewer bytes than the v5
+//!     whole-file rewrite (the asymptotic I/O gain, measured ~10⁵).
+//!
+//! Writes `BENCH_PR9.json` (gitignored) for `tools/perf_compare.sh`:
+//! wall times are lower-is-better keys, the I/O gain is higher-is-
+//! better, raw byte counts ride along as informational.
+
+mod common;
+
+use std::time::Instant;
+
+use cnn2gate::dse::{CacheStore, EvalCache, EvalRequest, Fidelity, TenantId};
+use cnn2gate::estimator::device::CYCLONE_V_5CSEMA5;
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::zoo;
+use cnn2gate::util::json::{Json, JsonObj};
+use common::Harness;
+
+const TENANTS: usize = 10;
+const NI_MAX: usize = 25;
+const NL_MAX: usize = 25;
+const BATCH_MAX: usize = 16;
+// 10 tenants x 25 x 25 options x 16 batch sizes
+const ENTRIES: usize = TENANTS * NI_MAX * NL_MAX * BATCH_MAX;
+
+/// Sum of the store's delta-log sizes (the bytes a differential save
+/// actually wrote).
+fn delta_bytes(dir: &std::path::Path) -> u64 {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().ends_with(".delta.jsonl"))
+                .filter_map(|e| e.metadata().ok().map(|m| m.len()))
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+/// Names and bytes of every canonical (non-delta) store file.
+fn canonical_files(dir: &std::path::Path) -> Vec<(String, Vec<u8>)> {
+    let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| !e.file_name().to_string_lossy().ends_with(".delta.jsonl"))
+        .filter(|e| e.file_name().to_string_lossy() != "store.lock")
+        .map(|e| {
+            let name = e.file_name().to_string_lossy().into_owned();
+            (name, std::fs::read(e.path()).unwrap())
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+fn main() {
+    let mut h = Harness::new();
+    let graph = zoo::build("tiny", false).expect("zoo model 'tiny'");
+    let flow = ComputationFlow::extract(&graph).expect("tiny flow");
+    let dev = &CYCLONE_V_5CSEMA5;
+
+    let tmp = std::env::temp_dir().join(format!("cnn2gate-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    let store_dir = tmp.join("store"); // incremental history
+    let fresh_dir = tmp.join("fresh"); // single-shot history
+    let legacy_path = tmp.join("legacy.json");
+
+    // -- generate: 100k distinct (tenant, ni, nl, batch) evaluations
+    let t0 = Instant::now();
+    let cache = EvalCache::new();
+    for t in 0..TENANTS {
+        let tenant = TenantId::of(&format!("tenant-{t}"));
+        for ni in 1..=NI_MAX {
+            for nl in 1..=NL_MAX {
+                for b in 1..=BATCH_MAX {
+                    cache.get_or_compute(
+                        &flow,
+                        dev,
+                        ni,
+                        nl,
+                        EvalRequest::at(Fidelity::Analytical).tenant(tenant).batched(b),
+                    );
+                }
+            }
+        }
+    }
+    let generate_s = t0.elapsed().as_secs_f64();
+    println!("bench store/generate({ENTRIES} entries) {:>18} {generate_s:.3} s wall", "");
+    h.check(cache.stats().entries == ENTRIES, &format!("{ENTRIES} distinct memo entries"));
+
+    // -- cold full save: one base rewrite per (tenant, model) shard
+    let opened = CacheStore::open(&store_dir);
+    let t0 = Instant::now();
+    let saved = opened.store.save(&cache).unwrap();
+    let cold_save_s = t0.elapsed().as_secs_f64();
+    let store_bytes: u64 = canonical_files(&store_dir).iter().map(|(_, b)| b.len() as u64).sum();
+    println!(
+        "bench store/cold_save({} shards, {:.1} MB) {:>8} {cold_save_s:.3} s wall",
+        saved.rewritten,
+        store_bytes as f64 / 1e6,
+        ""
+    );
+    h.check(saved.rewritten == TENANTS, "one fresh shard per tenant");
+    h.check(saved.entries == ENTRIES, "every safe entry persisted");
+
+    // -- streamed load: line-per-entry, no whole-document tree
+    let t0 = Instant::now();
+    let reopened = CacheStore::open(&store_dir);
+    let load_s = t0.elapsed().as_secs_f64();
+    println!("bench store/load({ENTRIES} entries) {:>22} {load_s:.3} s wall", "");
+    h.check(reopened.warnings.is_empty(), "scale load is warning-free");
+    h.check(reopened.cache.stats().entries == ENTRIES, "scale load is complete");
+
+    // -- legacy v5 baseline: whole-document save + load
+    let t0 = Instant::now();
+    let legacy_written = cache.save(&legacy_path).unwrap();
+    let legacy_save_s = t0.elapsed().as_secs_f64();
+    let legacy_bytes = std::fs::metadata(&legacy_path).unwrap().len();
+    let t0 = Instant::now();
+    let (legacy_cache, legacy_warn) = EvalCache::load_or_cold(&legacy_path);
+    let legacy_load_s = t0.elapsed().as_secs_f64();
+    println!(
+        "bench legacy/save+load({:.1} MB) {:>15} {legacy_save_s:.3} s / {legacy_load_s:.3} s wall",
+        legacy_bytes as f64 / 1e6,
+        ""
+    );
+    h.check(legacy_written == ENTRIES, "legacy baseline saved every entry");
+    h.check(
+        legacy_warn.is_none() && legacy_cache.stats().entries == ENTRIES,
+        "legacy baseline loads clean",
+    );
+
+    // -- the differential win: ONE new evaluation lands in the loaded
+    // store as a single appended delta record, while the legacy format
+    // re-serializes the whole 100k-entry world
+    reopened.cache.get_or_compute(
+        &flow,
+        dev,
+        NI_MAX + 1,
+        NL_MAX + 1,
+        EvalRequest::at(Fidelity::Analytical).tenant(TenantId::of("tenant-0")),
+    );
+    let t0 = Instant::now();
+    let inc = reopened.store.save(&reopened.cache).unwrap();
+    let append_s = t0.elapsed().as_secs_f64();
+    let appended_bytes = delta_bytes(&store_dir);
+    println!(
+        "bench store/append_1({appended_bytes} B vs {:.1} MB rewrite) {append_s:.3} s wall",
+        legacy_bytes as f64 / 1e6
+    );
+    h.check(
+        inc.appended == 1 && inc.rewritten == 0 && inc.tombstones == 0,
+        "one new entry appends exactly one delta record",
+    );
+    let io_gain = legacy_bytes as f64 / (appended_bytes.max(1) as f64);
+    h.check(
+        io_gain > 100.0,
+        &format!("delta append beats the whole-file rewrite {io_gain:.0}x on bytes written"),
+    );
+
+    // -- bit-identical round-trip: compact the incremental history,
+    // then save the same memo single-shot; every canonical file agrees
+    let compacted = reopened.store.compact_all().unwrap();
+    h.check(compacted == 1, "only the appended shard needed compaction");
+    let fresh = CacheStore::open(&fresh_dir);
+    fresh.store.save(&reopened.cache).unwrap();
+    let a = canonical_files(&store_dir);
+    let b = canonical_files(&fresh_dir);
+    h.check(
+        a == b,
+        "100k store round-trips through shard+delta+compaction bit-identically",
+    );
+
+    // -- machine-readable PR-9 perf record
+    {
+        let mut store = JsonObj::new();
+        store.insert("entries", ENTRIES.into());
+        store.insert("shards", TENANTS.into());
+        store.insert("generate_seconds", generate_s.into());
+        store.insert("cold_save_seconds", cold_save_s.into());
+        store.insert("load_seconds", load_s.into());
+        store.insert("bytes", (store_bytes as i64).into());
+        let mut legacy = JsonObj::new();
+        legacy.insert("save_seconds", legacy_save_s.into());
+        legacy.insert("load_seconds", legacy_load_s.into());
+        legacy.insert("bytes", (legacy_bytes as i64).into());
+        let mut delta = JsonObj::new();
+        delta.insert("append_seconds", append_s.into());
+        delta.insert("appended_bytes", (appended_bytes as i64).into());
+        delta.insert("io_gain", io_gain.into());
+        let mut doc = JsonObj::new();
+        doc.insert("format", "cnn2gate-bench-pr9".into());
+        doc.insert("store", Json::Obj(store));
+        doc.insert("legacy", Json::Obj(legacy));
+        doc.insert("delta", Json::Obj(delta));
+        let path = std::path::Path::new("BENCH_PR9.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).unwrap();
+        println!("perf record written to {}", path.display());
+    }
+
+    std::fs::remove_dir_all(&tmp).ok();
+    h.finish();
+}

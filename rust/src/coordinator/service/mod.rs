@@ -54,7 +54,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::dse::{eval, Evaluator};
+use crate::dse::{eval, EvalCache, Evaluator};
 use crate::ir::DType;
 use crate::runtime::{ModelArtifact, Tensor};
 
@@ -122,12 +122,19 @@ pub struct CompileService {
 impl CompileService {
     /// Start the daemon with compile lanes only.
     pub fn start(cfg: ServiceConfig) -> CompileService {
+        CompileService::start_with_cache(cfg, Arc::new(EvalCache::new()))
+    }
+
+    /// Start the daemon with its shared evaluator seeded from an
+    /// existing memo — e.g. a session's store-backed cache, so `serve`
+    /// compile jobs hit entries persisted by earlier CLI sweeps.
+    pub fn start_with_cache(cfg: ServiceConfig, cache: Arc<EvalCache>) -> CompileService {
         let threads = if cfg.threads == 0 {
             eval::default_threads()
         } else {
             cfg.threads
         };
-        let evaluator = Arc::new(Evaluator::new(threads));
+        let evaluator = Arc::new(Evaluator::with_cache(threads, cache));
         let (tx, daemon) = orchestrator::spawn(cfg, Arc::clone(&evaluator));
         CompileService {
             tx,
@@ -146,8 +153,20 @@ impl CompileService {
         art: &ModelArtifact,
         weights: Vec<Tensor>,
     ) -> Result<CompileService> {
+        CompileService::start_with_inference_cached(cfg, art, weights, Arc::new(EvalCache::new()))
+    }
+
+    /// [`CompileService::start_with_inference`] with the seeded memo of
+    /// [`CompileService::start_with_cache`]: both lanes come up, and
+    /// compile jobs run against the caller's cache handle.
+    pub fn start_with_inference_cached(
+        cfg: ServiceConfig,
+        art: &ModelArtifact,
+        weights: Vec<Tensor>,
+        cache: Arc<EvalCache>,
+    ) -> Result<CompileService> {
         let lane = InferLane::start(&cfg, art, weights)?;
-        let mut service = CompileService::start(cfg);
+        let mut service = CompileService::start_with_cache(cfg, cache);
         service.infer = Some(lane);
         Ok(service)
     }

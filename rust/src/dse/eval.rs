@@ -86,7 +86,7 @@ pub fn fidelity_tag(f: Fidelity) -> &'static str {
     }
 }
 
-fn parse_fidelity_tag(s: &str) -> Result<Fidelity, String> {
+pub(crate) fn parse_fidelity_tag(s: &str) -> Result<Fidelity, String> {
     match s {
         "analytical" => Ok(Fidelity::Analytical),
         "stepped-dominant-round" => Ok(Fidelity::SteppedDominantRound),
@@ -271,25 +271,25 @@ impl Evaluation {
 /// compile service folds each job's [`TenantId`] into the key, so one
 /// tenant's working set can neither poison nor age out another's.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-struct EvalKey {
-    model: u64,
-    device: u64,
-    ni: usize,
-    nl: usize,
-    fidelity: Fidelity,
+pub(crate) struct EvalKey {
+    pub(crate) model: u64,
+    pub(crate) device: u64,
+    pub(crate) ni: usize,
+    pub(crate) nl: usize,
+    pub(crate) fidelity: Fidelity,
     /// `f64::to_bits` of the run's census γ (0.0 for unshaped runs).
-    census_gamma: u64,
+    pub(crate) census_gamma: u64,
     /// The request's [`TenantId`] (0 for the default namespace).
-    tenant: u64,
+    pub(crate) tenant: u64,
     /// Batch size the payload was simulated at (1 for single-frame).
-    batch: usize,
+    pub(crate) batch: usize,
 }
 
 /// The γ component of the memo key: exact f64 bits, with -0.0
 /// normalized to +0.0 so the unshaped key is unique (JSON cannot tell
 /// the zeros apart, and neither can the reward). Every key construction
 /// site goes through this one helper.
-fn gamma_key_bits(census_gamma: f64) -> u64 {
+pub(crate) fn gamma_key_bits(census_gamma: f64) -> u64 {
     (census_gamma + 0.0).to_bits()
 }
 
@@ -315,7 +315,7 @@ impl EvalKey {
 
     /// Deterministic total order for serialization and eviction ties.
     #[allow(clippy::type_complexity)]
-    fn sort_key(&self) -> (u64, u64, usize, usize, u8, u64, u64, usize) {
+    pub(crate) fn sort_key(&self) -> (u64, u64, usize, usize, u8, u64, u64, usize) {
         let rank = fidelity_rank(self.fidelity);
         (
             self.model,
@@ -561,18 +561,18 @@ pub const CACHE_VERSION_MIN: i64 = 1;
 /// Largest integer `util::json` round-trips exactly (below 2^53).
 const JSON_MAX_INT: u64 = 9_000_000_000_000_000;
 
-fn hex16(v: u64) -> String {
+pub(crate) fn hex16(v: u64) -> String {
     format!("{v:016x}")
 }
 
-fn parse_hex16(s: &str) -> Result<u64, String> {
+pub(crate) fn parse_hex16(s: &str) -> Result<u64, String> {
     if s.len() != 16 {
         return Err(format!("bad fingerprint '{s}' (want 16 hex digits)"));
     }
     u64::from_str_radix(s, 16).map_err(|e| format!("bad fingerprint '{s}': {e}"))
 }
 
-fn jf(v: &Json, key: &str) -> Result<f64, String> {
+pub(crate) fn jf(v: &Json, key: &str) -> Result<f64, String> {
     v.get(key)
         .as_f64()
         .filter(|x| x.is_finite())
@@ -587,7 +587,7 @@ fn ju(v: &Json, key: &str) -> Result<u64, String> {
     u64::try_from(n).map_err(|_| format!("negative '{key}'"))
 }
 
-fn jus(v: &Json, key: &str) -> Result<usize, String> {
+pub(crate) fn jus(v: &Json, key: &str) -> Result<usize, String> {
     v.get(key)
         .as_usize()
         .ok_or_else(|| format!("missing count '{key}'"))
@@ -599,7 +599,7 @@ fn jb(v: &Json, key: &str) -> Result<bool, String> {
         .ok_or_else(|| format!("missing bool '{key}'"))
 }
 
-fn js(v: &Json, key: &str) -> Result<String, String> {
+pub(crate) fn js(v: &Json, key: &str) -> Result<String, String> {
     v.get(key)
         .as_str()
         .map(str::to_string)
@@ -621,7 +621,7 @@ fn step_ints(s: &StepReport) -> [u64; 7] {
 /// Whether every integer/float in the evaluation survives a JSON
 /// round-trip bit-for-bit; unsafe entries are skipped on save rather
 /// than persisted lossily.
-fn json_safe(e: &Evaluation, last_used: u64) -> bool {
+pub(crate) fn json_safe(e: &Evaluation, last_used: u64) -> bool {
     let ints_ok = std::iter::once(e.latency.total_cycles)
         .chain(std::iter::once(last_used))
         .chain(
@@ -844,7 +844,7 @@ fn batch_from_json(v: &Json) -> Result<BatchReport, String> {
     })
 }
 
-fn entry_to_json(key: &EvalKey, eval: &Evaluation, last_used: u64) -> Json {
+pub(crate) fn entry_to_json(key: &EvalKey, eval: &Evaluation, last_used: u64) -> Json {
     let mut o = JsonObj::new();
     o.insert("model", Json::Str(hex16(key.model)));
     o.insert("device", Json::Str(hex16(key.device)));
@@ -882,7 +882,7 @@ fn entry_to_json(key: &EvalKey, eval: &Evaluation, last_used: u64) -> Json {
 }
 
 /// Parse one v5 entry; `Err` rejects the whole file.
-fn entry_from_json_v5(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
+pub(crate) fn entry_from_json_v5(v: &Json) -> Result<(EvalKey, Evaluation, u64), String> {
     let census_gamma = jf(v, "census_gamma")?;
     let tenant = parse_hex16(&js(v, "tenant")?)?;
     let batch = jus(v, "batch")?;
@@ -1076,14 +1076,57 @@ fn entry_from_json_v1(v: &Json) -> Result<Option<(EvalKey, Evaluation, u64)>, St
 }
 
 impl EvalCache {
-    /// Serialize every (JSON-safe) entry. Entries are sorted by key so
-    /// repeated saves of the same cache are byte-identical (diff-stable).
-    pub fn to_json(&self) -> Json {
+    /// Snapshot every entry as `(key, payload, LRU stamp)`, sorted by
+    /// [`EvalKey::sort_key`] — the deterministic export both the legacy
+    /// whole-file serializer and the sharded store diff against.
+    pub(crate) fn export_entries(&self) -> Vec<(EvalKey, Arc<Evaluation>, u64)> {
         let mut entries: Vec<(EvalKey, Arc<Evaluation>, u64)> = locked(&self.map)
             .iter()
             .map(|(k, e)| (*k, Arc::clone(&e.eval), e.last_used))
             .collect();
         entries.sort_by_key(|(k, _, _)| k.sort_key());
+        entries
+    }
+
+    /// Insert one deserialized entry. Returns `false` (and keeps the
+    /// resident entry) when the key is already present — loaders use
+    /// this to make the first-loaded source win deterministically.
+    pub(crate) fn insert_entry(&self, key: EvalKey, eval: Arc<Evaluation>, last_used: u64) -> bool {
+        let mut map = locked(&self.map);
+        if map.contains_key(&key) {
+            return false;
+        }
+        map.insert(key, CacheEntry { eval, last_used });
+        true
+    }
+
+    /// Advance the LRU clock to at least `stamp`, so generations issued
+    /// after a load always outrank every loaded entry's stamp.
+    pub(crate) fn resume_clock(&self, stamp: u64) {
+        self.clock.fetch_max(stamp, Ordering::Relaxed);
+    }
+
+    /// Copy every entry of `other` that this cache does not already
+    /// have (this cache's entries win conflicts) and resume the clock
+    /// past the absorbed stamps; returns how many entries were copied.
+    /// This is the one-shot legacy-file → store migration primitive.
+    pub(crate) fn absorb_missing(&self, other: &EvalCache) -> usize {
+        let mut absorbed = 0;
+        let mut newest = 0u64;
+        for (key, eval, last_used) in other.export_entries() {
+            newest = newest.max(last_used);
+            if self.insert_entry(key, eval, last_used) {
+                absorbed += 1;
+            }
+        }
+        self.resume_clock(newest);
+        absorbed
+    }
+
+    /// Serialize every (JSON-safe) entry. Entries are sorted by key so
+    /// repeated saves of the same cache are byte-identical (diff-stable).
+    pub fn to_json(&self) -> Json {
+        let entries = self.export_entries();
         let rows: Vec<Json> = entries
             .iter()
             .filter(|(k, e, last_used)| {
@@ -1290,6 +1333,13 @@ impl Evaluator {
 
     pub fn cache(&self) -> &EvalCache {
         &self.cache
+    }
+
+    /// The shared cache handle itself — for seeding another evaluator
+    /// with the same memo (e.g. `serve` sharing a session's store-backed
+    /// cache with its compile daemon).
+    pub fn cache_handle(&self) -> Arc<EvalCache> {
+        Arc::clone(&self.cache)
     }
 
     /// Evaluate one candidate inline (cache-aware, no pool dispatch) —

@@ -22,8 +22,16 @@
 //! and weight schedules ([`SpecializationReport`]). For serving, the
 //! [`throughput`] pass re-runs the configured explorer across candidate
 //! batch sizes (each under its own `(…, B)` memo keys) and picks the
-//! highest-frames/s (N_i, N_l, B) whose batch makespan meets the
-//! optional latency SLO ([`co_optimize`]).
+//! highest-frames/s (N_i, N_l, B) whose end-to-end latency — queueing
+//! delay plus batch makespan — meets the optional SLO
+//! ([`co_optimize`]).
+//!
+//! The memo cache persists through [`store`] — a sharded, append-only
+//! store directory (`--cache-dir`) where each `(tenant, model)` shard
+//! is its own line-delimited file with a differential delta log, so
+//! fleet-scale sweeps load by streaming and save by appending exactly
+//! what changed. The legacy single-file `--cache-file` document still
+//! loads (one-shot migration) but its save path is deprecated.
 
 pub mod brute;
 pub mod eval;
@@ -32,6 +40,7 @@ pub mod options;
 pub mod reward;
 pub mod rl;
 pub mod specialize;
+pub mod store;
 pub mod throughput;
 
 pub use brute::DseResult;
@@ -43,4 +52,5 @@ pub use options::OptionSpace;
 pub use reward::RewardShaper;
 pub use rl::RlConfig;
 pub use specialize::{specialize, LayerSpecialization, SpecializationReport};
+pub use store::{CacheStore, StoreOpen, StoreSave};
 pub use throughput::{co_optimize, BatchCandidate, ThroughputChoice};

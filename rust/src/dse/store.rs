@@ -1,0 +1,1127 @@
+//! Sharded, append-only, streaming persistence for the evaluation memo
+//! — the fleet-scale replacement for the single `--cache-file` JSON
+//! document.
+//!
+//! The v5 cache file is one key-sorted document rewritten atomically in
+//! full on every save: fine for thousands of entries, wrong for a
+//! fleet-wide store millions of evaluations deep, where a sweep that
+//! touches 4 models would re-serialize the other 96. This module keeps
+//! the exact v5 *entry* codec (one [`eval::entry_to_json`] object per
+//! entry, every paranoid cross-check of
+//! [`eval::entry_from_json_v5`]) but changes the *container*:
+//!
+//! * **Line-delimited records.** Every file is JSON-lines: one compact
+//!   [`crate::util::json`] document per line, so loads stream line by
+//!   line and saves append records instead of re-serializing the world.
+//! * **Sharding.** Entries live in one file per `(tenant, model)`
+//!   fingerprint pair — the compile service's per-tenant namespaces are
+//!   a shard key dimension, so tenants never share files. A small
+//!   versioned manifest (`store.json`) catalogs the shards.
+//! * **Differential persistence.** Each shard owns an append-only delta
+//!   log (`<shard>.delta.jsonl`): new and updated entries append as
+//!   `put` records, evictions as `del` tombstones. A size/ratio trigger
+//!   compacts the shard back to its canonical key-sorted base file —
+//!   whose bytes depend only on the logical entry set, never on the
+//!   put/del history that produced it.
+//! * **Advisory locking.** A `store.lock` file taken shared for loads
+//!   and exclusive for saves/compactions (std `File` locking) keeps
+//!   concurrent `serve` daemons and CLI sweeps from corrupting each
+//!   other; writers from separate processes interleave their appends
+//!   safely under it.
+//!
+//! Loading keeps the strict paranoid semantics of the legacy file, per
+//! shard: format/version checks on the manifest and every shard header,
+//! strictly-ascending (therefore duplicate-free) keys in the base,
+//! shard-membership checks on every record, and all the payload-vs-key
+//! contradictions [`eval::entry_from_json_v5`] rejects. A corrupt shard
+//! goes cold with a loud warning — its suspect entries are never served
+//! — while healthy shards still load; a *torn final delta record*
+//! (crash mid-append: the trailing newline never hit disk) drops only
+//! that record, with a warning, and the next exclusive-lock write
+//! truncates the torn tail before appending.
+//!
+//! Migration from the v5 single file is one-shot: configure both
+//! `--cache-dir` (the store) and `--cache-file` (the legacy document)
+//! and the session absorbs every legacy entry the store doesn't already
+//! have, then saves through the store only. The legacy whole-file save
+//! path remains for `--cache-file`-only flows but is deprecated.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context};
+
+use super::eval::{self, EvalCache, EvalKey, Evaluation};
+use crate::util::json::{Json, JsonObj};
+use crate::util::sync::locked;
+
+/// Format tag of the store manifest (`store.json`).
+pub const STORE_FORMAT: &str = "cnn2gate-store";
+/// Format tag of every shard base file's header line.
+pub const SHARD_FORMAT: &str = "cnn2gate-shard";
+/// Schema version of the manifest, shard headers and delta records;
+/// bumped on any container layout change (entry payloads version
+/// independently via `entry_version` = [`eval::CACHE_VERSION`]).
+pub const STORE_VERSION: i64 = 1;
+/// Manifest file name inside the store directory.
+pub const MANIFEST_FILE: &str = "store.json";
+/// Advisory lock file name inside the store directory.
+pub const LOCK_FILE: &str = "store.lock";
+
+/// Compact a shard once its delta log holds at least this many records…
+const COMPACT_MIN_DELTA: usize = 256;
+/// …or once it holds more than `base_entries / COMPACT_RATIO` records,
+/// whichever threshold is larger — so a 1-entry append into a
+/// 100k-entry shard stays an O(1) append, while a shard whose history
+/// outgrows its base folds back to canonical form.
+const COMPACT_RATIO: usize = 4;
+
+/// The total order [`EvalKey::sort_key`] serializes to.
+type SortKey = (u64, u64, usize, usize, u8, u64, u64, usize);
+
+// ---------------------------------------------------------------------------
+// Shard identity
+// ---------------------------------------------------------------------------
+
+/// A shard's identity: the `(tenant, model)` fingerprint pair every key
+/// in it must carry. File names derive from it (`t<tenant>-m<model>`),
+/// and the fixed-width hex means lexical file order equals numeric
+/// `(tenant, model)` order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct ShardId {
+    tenant: u64,
+    model: u64,
+}
+
+impl ShardId {
+    fn of(key: &EvalKey) -> ShardId {
+        ShardId {
+            tenant: key.tenant,
+            model: key.model,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("t{}-m{}", eval::hex16(self.tenant), eval::hex16(self.model))
+    }
+
+    fn parse(s: &str) -> Result<ShardId, String> {
+        let rest = s
+            .strip_prefix('t')
+            .ok_or_else(|| format!("bad shard id '{s}' (want t<hex16>-m<hex16>)"))?;
+        let (tenant, model) = rest
+            .split_once("-m")
+            .ok_or_else(|| format!("bad shard id '{s}' (want t<hex16>-m<hex16>)"))?;
+        Ok(ShardId {
+            tenant: eval::parse_hex16(tenant)?,
+            model: eval::parse_hex16(model)?,
+        })
+    }
+}
+
+fn base_path(dir: &Path, id: ShardId) -> PathBuf {
+    dir.join(format!("{}.jsonl", id.name()))
+}
+
+fn delta_path(dir: &Path, id: ShardId) -> PathBuf {
+    dir.join(format!("{}.delta.jsonl", id.name()))
+}
+
+// ---------------------------------------------------------------------------
+// Record codecs (all single-line, via the compact Json Display form)
+// ---------------------------------------------------------------------------
+
+fn manifest_json(ids: &BTreeSet<ShardId>) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("format", STORE_FORMAT.into());
+    o.insert("version", STORE_VERSION.into());
+    o.insert("entry_version", eval::CACHE_VERSION.into());
+    o.insert(
+        "shards",
+        Json::Arr(ids.iter().map(|id| id.name().into()).collect()),
+    );
+    Json::Obj(o)
+}
+
+fn parse_manifest(doc: &Json) -> Result<Vec<ShardId>, String> {
+    match doc.get("format").as_str() {
+        Some(f) if f == STORE_FORMAT => {}
+        other => {
+            return Err(format!(
+                "unsupported store format {other:?} (want {STORE_FORMAT:?})"
+            ))
+        }
+    }
+    match doc.get("version").as_i64() {
+        Some(STORE_VERSION) => {}
+        other => {
+            return Err(format!(
+                "unsupported store version {other:?} (want {STORE_VERSION})"
+            ))
+        }
+    }
+    match doc.get("entry_version").as_i64() {
+        Some(v) if v == eval::CACHE_VERSION => {}
+        other => {
+            return Err(format!(
+                "unsupported store entry version {other:?} (want {})",
+                eval::CACHE_VERSION
+            ))
+        }
+    }
+    let arr = doc
+        .get("shards")
+        .as_arr()
+        .ok_or_else(|| "missing 'shards' array".to_string())?;
+    let mut ids = Vec::with_capacity(arr.len());
+    let mut prev: Option<ShardId> = None;
+    for (i, v) in arr.iter().enumerate() {
+        let s = v
+            .as_str()
+            .ok_or_else(|| format!("shard {i}: not a string"))?;
+        let id = ShardId::parse(s).map_err(|e| format!("shard {i}: {e}"))?;
+        if prev.is_some_and(|p| id <= p) {
+            return Err(format!("shard {i}: ids out of order or duplicated"));
+        }
+        prev = Some(id);
+        ids.push(id);
+    }
+    Ok(ids)
+}
+
+fn shard_header(id: ShardId, entries: usize) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("format", SHARD_FORMAT.into());
+    o.insert("version", STORE_VERSION.into());
+    o.insert("entry_version", eval::CACHE_VERSION.into());
+    o.insert("shard", Json::Str(id.name()));
+    o.insert("entries", entries.into());
+    Json::Obj(o)
+}
+
+fn parse_shard_header(doc: &Json, id: ShardId) -> Result<usize, String> {
+    match doc.get("format").as_str() {
+        Some(f) if f == SHARD_FORMAT => {}
+        other => {
+            return Err(format!(
+                "unsupported shard format {other:?} (want {SHARD_FORMAT:?})"
+            ))
+        }
+    }
+    match doc.get("version").as_i64() {
+        Some(STORE_VERSION) => {}
+        other => {
+            return Err(format!(
+                "unsupported shard version {other:?} (want {STORE_VERSION})"
+            ))
+        }
+    }
+    match doc.get("entry_version").as_i64() {
+        Some(v) if v == eval::CACHE_VERSION => {}
+        other => {
+            return Err(format!(
+                "unsupported shard entry version {other:?} (want {})",
+                eval::CACHE_VERSION
+            ))
+        }
+    }
+    let named = eval::js(doc, "shard")?;
+    if named != id.name() {
+        return Err(format!(
+            "shard header names '{named}' but the file is '{}'",
+            id.name()
+        ));
+    }
+    eval::jus(doc, "entries")
+}
+
+/// Serialize a bare [`EvalKey`] (the `del` tombstone payload) in the
+/// same field spellings the v5 entry codec uses.
+fn key_to_json(key: &EvalKey) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("model", Json::Str(eval::hex16(key.model)));
+    o.insert("device", Json::Str(eval::hex16(key.device)));
+    o.insert("ni", key.ni.into());
+    o.insert("nl", key.nl.into());
+    o.insert("batch", key.batch.into());
+    o.insert("fidelity", eval::fidelity_tag(key.fidelity).into());
+    o.insert("census_gamma", Json::Num(f64::from_bits(key.census_gamma)));
+    o.insert("tenant", Json::Str(eval::hex16(key.tenant)));
+    Json::Obj(o)
+}
+
+fn key_from_json(v: &Json) -> Result<EvalKey, String> {
+    let batch = eval::jus(v, "batch")?;
+    if batch == 0 {
+        return Err("zero batch".to_string());
+    }
+    Ok(EvalKey {
+        model: eval::parse_hex16(&eval::js(v, "model")?)?,
+        device: eval::parse_hex16(&eval::js(v, "device")?)?,
+        ni: eval::jus(v, "ni")?,
+        nl: eval::jus(v, "nl")?,
+        fidelity: eval::parse_fidelity_tag(&eval::js(v, "fidelity")?)?,
+        census_gamma: eval::gamma_key_bits(eval::jf(v, "census_gamma")?),
+        tenant: eval::parse_hex16(&eval::js(v, "tenant")?)?,
+        batch,
+    })
+}
+
+fn put_record(key: &EvalKey, payload: &Evaluation, last_used: u64) -> String {
+    let mut o = JsonObj::new();
+    o.insert("op", "put".into());
+    o.insert("entry", eval::entry_to_json(key, payload, last_used));
+    format!("{}\n", Json::Obj(o))
+}
+
+fn del_record(key: &EvalKey) -> String {
+    let mut o = JsonObj::new();
+    o.insert("op", "del".into());
+    o.insert("key", key_to_json(key));
+    format!("{}\n", Json::Obj(o))
+}
+
+// ---------------------------------------------------------------------------
+// Advisory locking
+// ---------------------------------------------------------------------------
+
+/// Take the store-wide advisory lock: shared for loads, exclusive for
+/// saves and compactions. The lock is held by the returned `File` and
+/// released when it drops. Lock files are advisory — they serialize
+/// cooperating cnn2gate processes, they do not fence other tools.
+fn store_lock(dir: &Path, exclusive: bool) -> std::io::Result<File> {
+    let lockfile = OpenOptions::new()
+        .create(true)
+        .truncate(false)
+        .read(true)
+        .write(true)
+        .open(dir.join(LOCK_FILE))?;
+    if exclusive {
+        lockfile.lock()?;
+    } else {
+        lockfile.lock_shared()?;
+    }
+    Ok(lockfile)
+}
+
+// ---------------------------------------------------------------------------
+// Loading
+// ---------------------------------------------------------------------------
+
+/// One shard's fully-validated on-disk state: base ∪ delta applied.
+struct LoadedShard {
+    /// Logical entries after replaying the delta, in key order.
+    entries: BTreeMap<SortKey, (EvalKey, Evaluation, u64)>,
+    base_entries: usize,
+    delta_records: usize,
+    /// Set when the final delta record was torn (truncated mid-line):
+    /// the recovered-prefix warning the caller must surface.
+    torn_warning: Option<String>,
+}
+
+fn apply_delta_record(
+    id: ShardId,
+    v: &Json,
+    entries: &mut BTreeMap<SortKey, (EvalKey, Evaluation, u64)>,
+) -> Result<(), String> {
+    match v.get("op").as_str() {
+        Some("put") => {
+            let (key, payload, last_used) = eval::entry_from_json_v5(v.get("entry"))?;
+            if ShardId::of(&key) != id {
+                return Err(format!(
+                    "put record belongs to shard {}, not {}",
+                    ShardId::of(&key).name(),
+                    id.name()
+                ));
+            }
+            entries.insert(key.sort_key(), (key, payload, last_used));
+            Ok(())
+        }
+        Some("del") => {
+            let key = key_from_json(v.get("key"))?;
+            if ShardId::of(&key) != id {
+                return Err(format!(
+                    "del record belongs to shard {}, not {}",
+                    ShardId::of(&key).name(),
+                    id.name()
+                ));
+            }
+            // deleting an absent key is fine: a crash between base
+            // compaction and delta truncation replays old tombstones
+            entries.remove(&key.sort_key());
+            Ok(())
+        }
+        other => Err(format!("unknown delta op {other:?}")),
+    }
+}
+
+/// Strict streaming load of one shard: header checks, strictly
+/// ascending base keys (canonical order, no duplicates), membership
+/// checks on every record, delta replay in append order. Only the
+/// *final* delta record may be torn (no trailing newline — the crash
+/// signature of an interrupted append); anything else wrong rejects the
+/// whole shard.
+fn load_shard(dir: &Path, id: ShardId) -> Result<LoadedShard, String> {
+    let bpath = base_path(dir, id);
+    let text = std::fs::read_to_string(&bpath)
+        .map_err(|e| format!("reading {}: {e}", bpath.display()))?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| format!("{}: empty shard file", bpath.display()))?;
+    let hdoc = Json::parse(header).map_err(|e| format!("{}: header: {e}", bpath.display()))?;
+    let declared =
+        parse_shard_header(&hdoc, id).map_err(|e| format!("{}: header: {e}", bpath.display()))?;
+    let mut entries: BTreeMap<SortKey, (EvalKey, Evaluation, u64)> = BTreeMap::new();
+    let mut prev: Option<SortKey> = None;
+    for (no, line) in lines.enumerate() {
+        let at = || format!("{}: entry {}", bpath.display(), no + 1);
+        let v = Json::parse(line).map_err(|e| format!("{}: {e}", at()))?;
+        let (key, payload, last_used) =
+            eval::entry_from_json_v5(&v).map_err(|e| format!("{}: {e}", at()))?;
+        if ShardId::of(&key) != id {
+            return Err(format!(
+                "{}: entry belongs to shard {}, not {}",
+                at(),
+                ShardId::of(&key).name(),
+                id.name()
+            ));
+        }
+        let sk = key.sort_key();
+        if prev.is_some_and(|p| sk <= p) {
+            return Err(format!("{}: keys out of order or duplicated", at()));
+        }
+        prev = Some(sk);
+        entries.insert(sk, (key, payload, last_used));
+    }
+    let base_entries = entries.len();
+    if base_entries != declared {
+        return Err(format!(
+            "{}: header declares {declared} entries, found {base_entries}",
+            bpath.display()
+        ));
+    }
+
+    let dpath = delta_path(dir, id);
+    let dtext = match std::fs::read_to_string(&dpath) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+        Err(e) => return Err(format!("reading {}: {e}", dpath.display())),
+    };
+    let mut delta_records = 0usize;
+    let mut torn_warning = None;
+    let records: Vec<&str> = dtext.split_inclusive('\n').collect();
+    for (i, raw) in records.iter().enumerate() {
+        let last = i + 1 == records.len();
+        if !raw.ends_with('\n') {
+            // only reachable on the final chunk: a record is durable
+            // only once its newline hit disk, so drop it — loudly
+            torn_warning = Some(format!(
+                "cache store: dropped a torn final delta record in {} \
+                 (truncated mid-line; {delta_records} records recovered)",
+                dpath.display()
+            ));
+            break;
+        }
+        let line = raw.trim_end_matches('\n');
+        let applied = Json::parse(line)
+            .map_err(|e| e.to_string())
+            .and_then(|v| apply_delta_record(id, &v, &mut entries));
+        match applied {
+            Ok(()) => delta_records += 1,
+            Err(e) if last => {
+                return Err(format!("{}: final delta record: {e}", dpath.display()))
+            }
+            Err(e) => {
+                return Err(format!(
+                    "{}: delta record {}: {e}",
+                    dpath.display(),
+                    i + 1
+                ))
+            }
+        }
+    }
+    Ok(LoadedShard {
+        entries,
+        base_entries,
+        delta_records,
+        torn_warning,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------------
+
+/// Differential bookkeeping for one shard: the stamps this process last
+/// saw on disk, so a save appends exactly the entries that changed.
+#[derive(Debug, Default)]
+struct ShardState {
+    /// On-disk `(key, last_used)` per sort key (base ∪ delta applied).
+    stamps: BTreeMap<SortKey, (EvalKey, u64)>,
+    /// Entry count of the base file (drives the compaction ratio).
+    base_entries: usize,
+    /// Record count of the delta log (drives the compaction trigger).
+    delta_records: usize,
+    /// The shard failed to load: the next save rewrites it canonically
+    /// instead of appending to files that cannot be trusted.
+    corrupt: bool,
+}
+
+/// What [`CacheStore::open`] produced: the store handle, the cache
+/// seeded from every healthy shard, and the (possibly empty) list of
+/// warnings — corrupt shards gone cold, torn delta tails dropped.
+pub struct StoreOpen {
+    pub store: CacheStore,
+    pub cache: EvalCache,
+    pub warnings: Vec<String>,
+}
+
+/// What one [`CacheStore::save`] did, for CLI reporting and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreSave {
+    /// Shards whose files changed (appended, rewritten or compacted).
+    pub shards_written: usize,
+    /// `put` records appended across all delta logs.
+    pub appended: usize,
+    /// `del` tombstones appended across all delta logs.
+    pub tombstones: usize,
+    /// Shards rewritten canonically from scratch (new or healed).
+    pub rewritten: usize,
+    /// Shards compacted after their append tripped the trigger.
+    pub compacted: usize,
+    /// Total logical entries persisted across the store after the save.
+    pub entries: usize,
+}
+
+/// Handle on a sharded cache store directory. Open one with
+/// [`CacheStore::open`] (which also loads the cache it persists), run
+/// the session, then [`CacheStore::save`] appends exactly what changed.
+pub struct CacheStore {
+    dir: PathBuf,
+    /// Per-shard differential state; the file lock orders cross-process
+    /// access, this mutex orders threads sharing the handle.
+    snapshot: Mutex<BTreeMap<ShardId, ShardState>>,
+}
+
+impl CacheStore {
+    /// Open (or prepare to create) the store at `dir` and load every
+    /// healthy shard into a fresh [`EvalCache`]. Never fails and never
+    /// panics: a missing directory or manifest is a silent cold start
+    /// (the first save creates both); a corrupt manifest or shard goes
+    /// cold with a warning — suspect entries are never served.
+    pub fn open(dir: impl Into<PathBuf>) -> StoreOpen {
+        let dir = dir.into();
+        let cache = EvalCache::new();
+        let mut warnings = Vec::new();
+        let mut shards: BTreeMap<ShardId, ShardState> = BTreeMap::new();
+        if dir.join(MANIFEST_FILE).exists() {
+            // shared lock for the whole read: a concurrent compaction
+            // must not swap shard files out from under the load
+            match store_lock(&dir, false) {
+                Err(e) => warnings.push(format!(
+                    "cache store {}: could not take the shared lock ({e}); starting cold",
+                    dir.display()
+                )),
+                Ok(_lockfile) => {
+                    load_store(&dir, &cache, &mut shards, &mut warnings);
+                }
+            }
+        }
+        StoreOpen {
+            store: CacheStore {
+                dir,
+                snapshot: Mutex::new(shards),
+            },
+            cache,
+            warnings,
+        }
+    }
+
+    /// The store directory this handle persists to.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Persist `cache` differentially: for every shard, append `put`
+    /// records for new/updated entries and `del` tombstones for evicted
+    /// ones; brand-new and corrupt shards are written canonically from
+    /// scratch; shards whose delta log trips the size/ratio trigger are
+    /// compacted. Untouched shards' files are not opened at all. The
+    /// whole save runs under the exclusive store lock.
+    pub fn save(&self, cache: &EvalCache) -> anyhow::Result<StoreSave> {
+        // export before taking any store lock: the cache's own mutex
+        // must never nest inside the store's
+        let all = cache.export_entries();
+        struct Live {
+            key: EvalKey,
+            payload: Arc<Evaluation>,
+            last_used: u64,
+            /// JSON-safe entries persist; unsafe ones stay resident but
+            /// are neither appended nor tombstoned (the legacy
+            /// skip-on-save rule).
+            safe: bool,
+        }
+        let mut live: BTreeMap<ShardId, Vec<Live>> = BTreeMap::new();
+        for (key, payload, last_used) in all {
+            let safe = eval::json_safe(&payload, last_used)
+                && f64::from_bits(key.census_gamma).is_finite();
+            live.entry(ShardId::of(&key)).or_default().push(Live {
+                key,
+                payload,
+                last_used,
+                safe,
+            });
+        }
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating store directory {}", self.dir.display()))?;
+        let _lockfile = store_lock(&self.dir, true)
+            .with_context(|| format!("locking store {}", self.dir.display()))?;
+        let mut snap = locked(&self.snapshot);
+        let mut out = StoreSave::default();
+        let ids: BTreeSet<ShardId> = live.keys().chain(snap.keys()).copied().collect();
+        for id in ids {
+            let known = snap.contains_key(&id);
+            let entries = live.get(&id).map(Vec::as_slice).unwrap_or(&[]);
+            let safe: Vec<&Live> = entries.iter().filter(|e| e.safe).collect();
+            let fresh = !known && !base_path(&self.dir, id).exists();
+            if fresh && safe.is_empty() {
+                continue; // nothing persistable; don't create an empty shard
+            }
+            let state = snap.entry(id).or_default();
+            if fresh || state.corrupt {
+                // canonical full write. Remove the (untrusted) delta
+                // FIRST: a crash between the two steps leaves the old
+                // corrupt base — still corrupt, healed again next save —
+                // never a fresh base polluted by stale delta records.
+                let dpath = delta_path(&self.dir, id);
+                if state.corrupt && dpath.exists() {
+                    std::fs::remove_file(&dpath)
+                        .with_context(|| format!("removing {}", dpath.display()))?;
+                }
+                write_base(
+                    &self.dir,
+                    id,
+                    safe.len(),
+                    safe.iter().map(|e| (&e.key, e.payload.as_ref(), e.last_used)),
+                )?;
+                state.stamps = safe
+                    .iter()
+                    .map(|e| (e.key.sort_key(), (e.key, e.last_used)))
+                    .collect();
+                state.base_entries = safe.len();
+                state.delta_records = 0;
+                state.corrupt = false;
+                out.rewritten += 1;
+                out.shards_written += 1;
+                continue;
+            }
+            // differential append: diff the JSON-safe entries against
+            // the stamps this process last saw on disk
+            let puts: Vec<&Live> = safe
+                .iter()
+                .filter(|e| match state.stamps.get(&e.key.sort_key()) {
+                    Some((_, stamp)) => *stamp != e.last_used,
+                    None => true,
+                })
+                .copied()
+                .collect();
+            let present: BTreeSet<SortKey> =
+                entries.iter().map(|e| e.key.sort_key()).collect();
+            let dels: Vec<EvalKey> = state
+                .stamps
+                .iter()
+                .filter(|(sk, _)| !present.contains(*sk))
+                .map(|(_, (key, _))| *key)
+                .collect();
+            if puts.is_empty() && dels.is_empty() {
+                continue; // untouched shard: no file I/O at all
+            }
+            let dpath = delta_path(&self.dir, id);
+            repair_delta_tail(&dpath)
+                .with_context(|| format!("repairing torn tail of {}", dpath.display()))?;
+            let mut buf = String::new();
+            for e in &puts {
+                buf.push_str(&put_record(&e.key, &e.payload, e.last_used));
+            }
+            for key in &dels {
+                buf.push_str(&del_record(key));
+            }
+            let mut file = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&dpath)
+                .with_context(|| format!("opening {}", dpath.display()))?;
+            file.write_all(buf.as_bytes())
+                .with_context(|| format!("appending to {}", dpath.display()))?;
+            for e in &puts {
+                state
+                    .stamps
+                    .insert(e.key.sort_key(), (e.key, e.last_used));
+            }
+            for key in &dels {
+                state.stamps.remove(&key.sort_key());
+            }
+            state.delta_records += puts.len() + dels.len();
+            out.appended += puts.len();
+            out.tombstones += dels.len();
+            out.shards_written += 1;
+            if state.delta_records >= COMPACT_MIN_DELTA.max(state.base_entries / COMPACT_RATIO) {
+                compact_shard(&self.dir, id, state)?;
+                out.compacted += 1;
+            }
+        }
+        out.entries = snap.values().map(|s| s.stamps.len()).sum();
+        write_manifest(&self.dir, &snap)?;
+        Ok(out)
+    }
+
+    /// Compact every shard that has delta records, folding base ∪ delta
+    /// back to the canonical key-sorted base file (whose bytes depend
+    /// only on the logical entry set). Returns how many shards were
+    /// compacted. Corrupt shards are skipped (the next save heals
+    /// them); concurrent writers' appends are preserved because
+    /// compaction re-reads the files under the exclusive lock.
+    pub fn compact_all(&self) -> anyhow::Result<usize> {
+        if !self.dir.exists() {
+            return Ok(0);
+        }
+        let _lockfile = store_lock(&self.dir, true)
+            .with_context(|| format!("locking store {}", self.dir.display()))?;
+        let mut snap = locked(&self.snapshot);
+        let mut compacted = 0;
+        for (id, state) in snap.iter_mut() {
+            if state.corrupt {
+                continue;
+            }
+            let dpath = delta_path(&self.dir, *id);
+            let has_delta = std::fs::metadata(&dpath).map(|m| m.len() > 0).unwrap_or(false);
+            if !has_delta {
+                continue;
+            }
+            compact_shard(&self.dir, *id, state)?;
+            compacted += 1;
+        }
+        Ok(compacted)
+    }
+}
+
+/// The body of [`CacheStore::open`] once the shared lock is held.
+fn load_store(
+    dir: &Path,
+    cache: &EvalCache,
+    shards: &mut BTreeMap<ShardId, ShardState>,
+    warnings: &mut Vec<String>,
+) {
+    let ids = match read_manifest(dir) {
+        Ok(ids) => ids,
+        Err(e) => {
+            warnings.push(format!(
+                "cache store {}: corrupt manifest ({e}); starting cold \
+                 (the next save rebuilds it)",
+                dir.display()
+            ));
+            return;
+        }
+    };
+    let mut newest = 0u64;
+    for id in ids {
+        match load_shard(dir, id) {
+            Ok(loaded) => {
+                if let Some(w) = loaded.torn_warning {
+                    warnings.push(w);
+                }
+                let mut stamps = BTreeMap::new();
+                for (sk, (key, payload, last_used)) in loaded.entries {
+                    newest = newest.max(last_used);
+                    stamps.insert(sk, (key, last_used));
+                    // shard membership was checked per record and keys
+                    // are unique per shard, so this cannot collide
+                    let _ = cache.insert_entry(key, Arc::new(payload), last_used);
+                }
+                shards.insert(
+                    id,
+                    ShardState {
+                        stamps,
+                        base_entries: loaded.base_entries,
+                        delta_records: loaded.delta_records,
+                        corrupt: false,
+                    },
+                );
+            }
+            Err(e) => {
+                warnings.push(format!(
+                    "cache store: shard {} is corrupt ({e}); its entries start \
+                     cold and the next save rewrites it",
+                    id.name()
+                ));
+                shards.insert(
+                    id,
+                    ShardState {
+                        corrupt: true,
+                        ..ShardState::default()
+                    },
+                );
+            }
+        }
+    }
+    cache.resume_clock(newest);
+}
+
+fn read_manifest(dir: &Path) -> Result<Vec<ShardId>, String> {
+    let path = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse_manifest(&doc).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Rewrite the manifest iff its shard catalog changed. The on-disk
+/// manifest is re-read under the exclusive lock and unioned with ours,
+/// so one writer publishing a new shard never drops another's.
+fn write_manifest(dir: &Path, snap: &BTreeMap<ShardId, ShardState>) -> anyhow::Result<()> {
+    let mut ids: BTreeSet<ShardId> = read_manifest(dir).unwrap_or_default().into_iter().collect();
+    ids.extend(snap.keys().copied());
+    let rendered = manifest_json(&ids).to_string_pretty();
+    let path = dir.join(MANIFEST_FILE);
+    if std::fs::read_to_string(&path).ok().as_deref() == Some(rendered.as_str()) {
+        return Ok(());
+    }
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, rendered).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("moving manifest into place at {}", path.display()))?;
+    Ok(())
+}
+
+/// Write a shard's canonical base file: the header line followed by one
+/// compact entry per line in key order, via tmp + rename so a crash
+/// mid-write never publishes a truncated base.
+fn write_base<'a>(
+    dir: &Path,
+    id: ShardId,
+    count: usize,
+    rows: impl Iterator<Item = (&'a EvalKey, &'a Evaluation, u64)>,
+) -> anyhow::Result<()> {
+    let mut text = String::new();
+    text.push_str(&shard_header(id, count).to_string());
+    text.push('\n');
+    for (key, payload, last_used) in rows {
+        text.push_str(&eval::entry_to_json(key, payload, last_used).to_string());
+        text.push('\n');
+    }
+    let path = base_path(dir, id);
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("moving shard into place at {}", path.display()))?;
+    Ok(())
+}
+
+/// Truncate a torn final delta record (no trailing newline) back to the
+/// last complete line. Called under the exclusive lock before every
+/// append, so a crash by any writer — including one that raced between
+/// this process's open and its save — can't garble the next record.
+fn repair_delta_tail(path: &Path) -> std::io::Result<()> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e),
+    };
+    if bytes.is_empty() || bytes.ends_with(b"\n") {
+        return Ok(());
+    }
+    let valid = bytes.iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1);
+    let file = OpenOptions::new().write(true).open(path)?;
+    file.set_len(valid as u64)
+}
+
+/// Fold base ∪ delta back to the canonical base. Reads the files — not
+/// this process's memory — so entries a concurrent writer appended are
+/// preserved; afterwards this process's differential state is exactly
+/// the on-disk union. The delta truncates only AFTER the new base is
+/// in place: replaying it over the compacted base is idempotent (puts
+/// re-assert identical entries, dels remove already-absent keys), so
+/// the crash window between the two steps is safe.
+fn compact_shard(dir: &Path, id: ShardId, state: &mut ShardState) -> anyhow::Result<()> {
+    let loaded =
+        load_shard(dir, id).map_err(|e| anyhow!("compacting shard {}: {e}", id.name()))?;
+    write_base(
+        dir,
+        id,
+        loaded.entries.len(),
+        loaded
+            .entries
+            .values()
+            .map(|(key, payload, last_used)| (key, payload, *last_used)),
+    )?;
+    let dpath = delta_path(dir, id);
+    if dpath.exists() {
+        std::fs::remove_file(&dpath).with_context(|| format!("removing {}", dpath.display()))?;
+    }
+    state.stamps = loaded
+        .entries
+        .iter()
+        .map(|(sk, (key, _, last_used))| (*sk, (*key, *last_used)))
+        .collect();
+    state.base_entries = loaded.entries.len();
+    state.delta_records = 0;
+    state.corrupt = false;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::eval::{EvalRequest, Evaluator, Fidelity};
+    use crate::estimator::device;
+    use crate::ir::ComputationFlow;
+    use crate::onnx::zoo;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cnn2gate-store-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn warm_cache(batches: &[usize]) -> EvalCache {
+        let flow = ComputationFlow::extract(&zoo::build("tiny", false).unwrap()).unwrap();
+        let dev = &device::CYCLONE_V_5CSEMA5;
+        let cache = EvalCache::new();
+        for &b in batches {
+            for (ni, nl) in [(2, 2), (4, 4), (4, 8)] {
+                cache.get_or_compute(
+                    &flow,
+                    dev,
+                    ni,
+                    nl,
+                    EvalRequest::at(Fidelity::Analytical).batched(b),
+                );
+            }
+        }
+        cache
+    }
+
+    fn entry_set(cache: &EvalCache) -> Vec<(SortKey, u64)> {
+        cache
+            .export_entries()
+            .iter()
+            .map(|(k, _, stamp)| (k.sort_key(), *stamp))
+            .collect()
+    }
+
+    #[test]
+    fn shard_id_round_trips_and_orders() {
+        let id = ShardId {
+            tenant: 0xDEAD_BEEF,
+            model: 7,
+        };
+        assert_eq!(ShardId::parse(&id.name()), Ok(id));
+        assert!(ShardId::parse("nonsense").is_err());
+        assert!(ShardId::parse("t123-m456").is_err(), "hex16 is fixed-width");
+        // lexical file-name order equals numeric (tenant, model) order
+        let lo = ShardId { tenant: 1, model: 2 };
+        let hi = ShardId { tenant: 1, model: 3 };
+        assert!(lo.name() < hi.name());
+    }
+
+    #[test]
+    fn key_codec_round_trips() {
+        let key = EvalKey {
+            model: 11,
+            device: 22,
+            ni: 4,
+            nl: 8,
+            fidelity: Fidelity::SteppedFullNetwork,
+            census_gamma: eval::gamma_key_bits(0.25),
+            tenant: 33,
+            batch: 16,
+        };
+        assert_eq!(key_from_json(&key_to_json(&key)), Ok(key));
+        assert!(key_from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn fresh_store_round_trips_and_loads_warm() {
+        let dir = tmp_dir("roundtrip");
+        let cache = warm_cache(&[1, 4]);
+        let open = CacheStore::open(&dir);
+        assert!(open.warnings.is_empty());
+        let save = open.store.save(&cache).unwrap();
+        assert_eq!(save.rewritten, 1, "one (tenant 0, tiny) shard");
+        assert_eq!(save.entries, 6);
+        let reopened = CacheStore::open(&dir);
+        assert!(reopened.warnings.is_empty(), "{:?}", reopened.warnings);
+        assert_eq!(entry_set(&reopened.cache), entry_set(&cache));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn second_save_appends_a_delta_instead_of_rewriting() {
+        let dir = tmp_dir("delta");
+        let cache = warm_cache(&[1]);
+        let open = CacheStore::open(&dir);
+        open.store.save(&cache).unwrap();
+        let base = base_path(&dir, ShardId::parse_first(&dir));
+        let before = std::fs::read(&base).unwrap();
+        // warm one more candidate: the next save must append, not rewrite
+        let flow = ComputationFlow::extract(&zoo::build("tiny", false).unwrap()).unwrap();
+        cache.get_or_compute(
+            &flow,
+            &device::CYCLONE_V_5CSEMA5,
+            8,
+            8,
+            EvalRequest::at(Fidelity::Analytical),
+        );
+        let save = open.store.save(&cache).unwrap();
+        assert_eq!(save.rewritten, 0);
+        assert!(save.appended >= 1);
+        assert_eq!(save.compacted, 0);
+        assert_eq!(std::fs::read(&base).unwrap(), before, "base untouched");
+        // and the union loads back
+        let reopened = CacheStore::open(&dir);
+        assert!(reopened.warnings.is_empty(), "{:?}", reopened.warnings);
+        assert_eq!(entry_set(&reopened.cache), entry_set(&cache));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_appends_tombstones_that_replay() {
+        let dir = tmp_dir("tombstone");
+        let cache = warm_cache(&[1, 4]);
+        let open = CacheStore::open(&dir);
+        open.store.save(&cache).unwrap();
+        let evicted = cache.evict_lru(2);
+        assert!(evicted > 0);
+        let save = open.store.save(&cache).unwrap();
+        assert_eq!(save.tombstones, evicted);
+        assert_eq!(save.entries, 2);
+        let reopened = CacheStore::open(&dir);
+        assert!(reopened.warnings.is_empty(), "{:?}", reopened.warnings);
+        assert_eq!(entry_set(&reopened.cache), entry_set(&cache));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_is_byte_stable_across_histories() {
+        // same logical entries via different put/del histories must
+        // compact to byte-identical base files
+        let dir_a = tmp_dir("stable-a");
+        let dir_b = tmp_dir("stable-b");
+        let cache = warm_cache(&[1, 4]);
+        let a = CacheStore::open(&dir_a);
+        a.store.save(&cache).unwrap();
+        // history B: save a subset first, then the rest (delta), then compact
+        let sub = warm_cache(&[1]);
+        let b = CacheStore::open(&dir_b);
+        b.store.save(&sub).unwrap();
+        // then the full set, stamps and all, so the logical sets agree
+        let fixed = EvalCache::new();
+        fixed.absorb_missing(&cache);
+        b.store.save(&fixed).unwrap();
+        assert_eq!(a.store.compact_all().unwrap(), 0, "no delta after a fresh write");
+        assert!(b.store.compact_all().unwrap() >= 1);
+        let id = ShardId::parse_first(&dir_a);
+        let bytes_a = std::fs::read(base_path(&dir_a, id)).unwrap();
+        let bytes_b = std::fs::read(base_path(&dir_b, id)).unwrap();
+        assert_eq!(bytes_a, bytes_b, "canonical bytes depend only on the entry set");
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+    }
+
+    #[test]
+    fn corrupt_shard_goes_cold_with_warning_and_heals() {
+        let dir = tmp_dir("corrupt");
+        let cache = warm_cache(&[1]);
+        let open = CacheStore::open(&dir);
+        open.store.save(&cache).unwrap();
+        let id = ShardId::parse_first(&dir);
+        // garble a middle byte of the base
+        let path = base_path(&dir, id);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] = b'!';
+        std::fs::write(&path, &bytes).unwrap();
+        let reopened = CacheStore::open(&dir);
+        assert_eq!(reopened.warnings.len(), 1, "{:?}", reopened.warnings);
+        assert!(reopened.warnings[0].contains("corrupt"));
+        assert_eq!(reopened.cache.stats().entries, 0, "suspect entries never load");
+        // the next save heals the shard canonically
+        let save = reopened.store.save(&cache).unwrap();
+        assert_eq!(save.rewritten, 1);
+        let healed = CacheStore::open(&dir);
+        assert!(healed.warnings.is_empty(), "{:?}", healed.warnings);
+        assert_eq!(entry_set(&healed.cache), entry_set(&cache));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_manifest_is_a_cold_start_with_warning() {
+        let dir = tmp_dir("badmanifest");
+        let cache = warm_cache(&[1]);
+        let open = CacheStore::open(&dir);
+        open.store.save(&cache).unwrap();
+        std::fs::write(dir.join(MANIFEST_FILE), "not json").unwrap();
+        let reopened = CacheStore::open(&dir);
+        assert_eq!(reopened.warnings.len(), 1);
+        assert!(reopened.warnings[0].contains("manifest"));
+        assert_eq!(reopened.cache.stats().entries, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mis_sharded_records_reject_the_shard() {
+        let dir = tmp_dir("missharded");
+        let cache = warm_cache(&[1]);
+        let open = CacheStore::open(&dir);
+        open.store.save(&cache).unwrap();
+        let id = ShardId::parse_first(&dir);
+        // rename the shard files to a different (tenant, model): every
+        // record now contradicts its container
+        let other = ShardId {
+            tenant: id.tenant,
+            model: id.model ^ 1,
+        };
+        std::fs::rename(base_path(&dir, id), base_path(&dir, other)).unwrap();
+        let mut ids = BTreeSet::new();
+        ids.insert(other);
+        std::fs::write(dir.join(MANIFEST_FILE), manifest_json(&ids).to_string_pretty()).unwrap();
+        let reopened = CacheStore::open(&dir);
+        assert_eq!(reopened.warnings.len(), 1, "{:?}", reopened.warnings);
+        assert_eq!(reopened.cache.stats().entries, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn evaluator_integration_serves_store_entries_as_hits() {
+        let dir = tmp_dir("hits");
+        let cache = warm_cache(&[1]);
+        let open = CacheStore::open(&dir);
+        open.store.save(&cache).unwrap();
+        let reopened = CacheStore::open(&dir);
+        let ev = Evaluator::with_cache(2, std::sync::Arc::new(reopened.cache));
+        let flow = ComputationFlow::extract(&zoo::build("tiny", false).unwrap()).unwrap();
+        let (_, hit) = ev.evaluate(
+            &flow,
+            &device::CYCLONE_V_5CSEMA5,
+            2,
+            2,
+            EvalRequest::at(Fidelity::Analytical),
+        );
+        assert!(hit, "store-loaded entry must serve as a cache hit");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    impl ShardId {
+        /// Test helper: the first shard named by the store's manifest.
+        fn parse_first(dir: &Path) -> ShardId {
+            read_manifest(dir).unwrap()[0]
+        }
+    }
+}

@@ -9,8 +9,13 @@
 //! modest batch sizes. [`co_optimize`] runs the configured explorer once
 //! per candidate batch size (each under its own `(…, B)` memo keys),
 //! scores every winner by its closed-form frames/s, and picks the
-//! highest-throughput batch whose batch makespan still meets the
-//! optional latency SLO.
+//! highest-throughput batch whose *end-to-end* latency still meets the
+//! optional SLO. End-to-end means queueing delay plus makespan: in the
+//! steady state a new batch launches every makespan, so the worst-case
+//! frame arrives just after a batch closes, waits one full batch period,
+//! then rides the next batch — `2 × batch_millis` in total. An SLO that
+//! only bounded the makespan would under-count exactly the large
+//! batches it exists to police.
 //!
 //! The pass is explorer-agnostic: callers hand it a closure that runs
 //! their explorer under a given [`EvalRequest`], so BF, RL and joint
@@ -35,10 +40,15 @@ pub struct BatchCandidate {
     /// fits).
     pub frames_per_s: f64,
     /// Makespan of one batch through the winner's schedule in ms — the
-    /// worst-case latency a frame waits when it lands first in a batch
+    /// compute latency a frame sees when it lands first in a batch
     /// (0 when nothing fits).
     pub batch_millis: f64,
-    /// Whether `batch_millis` meets the latency SLO (always true when
+    /// Worst-case end-to-end latency in ms: a frame arriving just after
+    /// a batch closes waits one batch period for its batch to launch,
+    /// then the batch makespan — `2 × batch_millis` (0 when nothing
+    /// fits).
+    pub e2e_millis: f64,
+    /// Whether `e2e_millis` meets the latency SLO (always true when
     /// no SLO was requested; false when nothing fits).
     pub meets_slo: bool,
 }
@@ -59,10 +69,10 @@ pub struct ThroughputChoice {
     pub candidates: Vec<BatchCandidate>,
     /// Index into `candidates` of the chosen batch size (the highest
     /// frames/s among fitting, SLO-meeting candidates; ties prefer the
-    /// smaller B). When no candidate meets the SLO the lowest-makespan
-    /// fitting candidate is chosen instead — the closest the design
-    /// space gets to the requested latency. `None` only when nothing
-    /// fits at any batch size.
+    /// smaller B). When no candidate meets the SLO the fitting
+    /// candidate with the lowest end-to-end latency is chosen instead —
+    /// the closest the design space gets to the requested latency.
+    /// `None` only when nothing fits at any batch size.
     pub chosen: usize,
     /// True when the chosen candidate satisfies the SLO; false means
     /// the choice is the documented best-effort fallback.
@@ -96,10 +106,10 @@ pub fn normalize_batches(batches: &[usize]) -> Vec<usize> {
 }
 
 /// Run `explore_at` once per batch size and rank the winners by
-/// frames/s under the optional latency SLO (batch makespan ≤ SLO).
-/// Deterministic: batches are normalized ascending, the serving metrics
-/// come from the closed-form batched model, and ties break toward the
-/// smaller batch.
+/// frames/s under the optional latency SLO (end-to-end latency —
+/// queueing delay + batch makespan — ≤ SLO). Deterministic: batches are
+/// normalized ascending, the serving metrics come from the closed-form
+/// batched model, and ties break toward the smaller batch.
 pub fn co_optimize<F>(
     evaluator: &Evaluator,
     flow: &ComputationFlow,
@@ -131,13 +141,17 @@ where
             }
             None => (0.0, 0.0),
         };
+        // worst case: miss one batch launch, wait a full period, then
+        // ride the next batch — the steady-state period is the makespan
+        let e2e_millis = 2.0 * batch_millis;
         let meets_slo =
-            dse.best.is_some() && latency_slo_ms.map_or(true, |slo| batch_millis <= slo);
+            dse.best.is_some() && latency_slo_ms.map_or(true, |slo| e2e_millis <= slo);
         candidates.push(BatchCandidate {
             batch: b,
             dse,
             frames_per_s,
             batch_millis,
+            e2e_millis,
             meets_slo,
         });
     }
@@ -158,14 +172,15 @@ where
     }
     let slo_satisfied = chosen.is_some();
     // fallback: nothing meets the SLO — serve the fitting candidate
-    // closest to it (lowest batch makespan; ties on the smaller batch)
+    // closest to it (lowest end-to-end latency; ties on the smaller
+    // batch)
     if chosen.is_none() {
         for (i, c) in candidates.iter().enumerate() {
             if c.dse.best.is_none() {
                 continue;
             }
             let better = match chosen {
-                Some(j) => c.batch_millis < candidates[j].batch_millis,
+                Some(j) => c.e2e_millis < candidates[j].e2e_millis,
                 None => true,
             };
             if better {
@@ -245,23 +260,51 @@ mod tests {
 
     #[test]
     fn latency_slo_caps_the_batch() {
-        // pick an SLO between the B=1 and B=16 makespans: the sweep
-        // must fall back to the largest batch that still meets it
+        // pick an SLO between the B=1 and B=16 end-to-end latencies:
+        // the sweep must fall back to the largest batch that still
+        // meets it
         let f = flow("alexnet");
         let (_, unconstrained) = sweep(&f, &ARRIA_10_GX1150, &[1, 16], None);
-        let b1 = unconstrained.candidates[0].batch_millis;
-        let b16 = unconstrained.candidates[1].batch_millis;
-        assert!(b16 > b1, "a 16-frame batch takes longer than one frame");
-        let slo = (b1 + b16) / 2.0;
+        let e1 = unconstrained.candidates[0].e2e_millis;
+        let e16 = unconstrained.candidates[1].e2e_millis;
+        assert!(e16 > e1, "a 16-frame batch takes longer than one frame");
+        let slo = (e1 + e16) / 2.0;
         let (_, capped) = sweep(&f, &ARRIA_10_GX1150, &[1, 16], Some(slo));
         assert!(capped.slo_satisfied);
         assert_eq!(capped.chosen_batch(), 1, "B=16 breaks the {slo:.2} ms SLO");
-        // an SLO tighter than every makespan falls back to the lowest
-        // makespan and reports the SLO as unsatisfied
-        let (_, strict) = sweep(&f, &ARRIA_10_GX1150, &[1, 16], Some(b1 / 2.0));
+        // an SLO tighter than every end-to-end latency falls back to
+        // the lowest one and reports the SLO as unsatisfied
+        let (_, strict) = sweep(&f, &ARRIA_10_GX1150, &[1, 16], Some(e1 / 2.0));
         assert!(!strict.slo_satisfied, "nothing meets half the B=1 latency");
         assert_eq!(strict.chosen_batch(), 1, "fallback picks the closest");
         assert!(strict.chosen_candidate().is_some());
+    }
+
+    #[test]
+    fn slo_bounds_end_to_end_latency_not_makespan() {
+        // the boundary batch: an SLO the B=16 *makespan* meets but its
+        // end-to-end latency (one batch period of queueing delay + the
+        // makespan) does not. A bare makespan check would accept it;
+        // the queueing-aware check must reject it.
+        let f = flow("alexnet");
+        let (_, unconstrained) = sweep(&f, &ARRIA_10_GX1150, &[16], None);
+        let c16 = &unconstrained.candidates[0];
+        assert_eq!(c16.batch, 16);
+        assert!(c16.batch_millis > 0.0, "alexnet fits the Arria 10");
+        assert_eq!(
+            c16.e2e_millis.to_bits(),
+            (2.0 * c16.batch_millis).to_bits(),
+            "e2e is exactly one queueing period plus the makespan"
+        );
+        let slo = 1.5 * c16.batch_millis;
+        assert!(c16.batch_millis < slo && slo < c16.e2e_millis);
+        let (_, capped) = sweep(&f, &ARRIA_10_GX1150, &[16], Some(slo));
+        assert!(
+            !capped.candidates[0].meets_slo,
+            "makespan fits under the SLO but end-to-end latency must not"
+        );
+        assert!(!capped.slo_satisfied);
+        assert_eq!(capped.chosen_batch(), 16, "best-effort fallback still serves");
     }
 
     #[test]
@@ -286,7 +329,14 @@ mod tests {
                 c.slo_satisfied,
                 c.candidates
                     .iter()
-                    .map(|x| (x.batch, x.frames_per_s.to_bits(), x.batch_millis.to_bits()))
+                    .map(|x| {
+                        (
+                            x.batch,
+                            x.frames_per_s.to_bits(),
+                            x.batch_millis.to_bits(),
+                            x.e2e_millis.to_bits(),
+                        )
+                    })
                     .collect::<Vec<_>>(),
             )
         };

@@ -51,10 +51,14 @@
 //! deduplicates the estimator + simulator queries that the RL/joint
 //! agents revisit constantly. The memo
 //! persists: the FNV fingerprints are process-stable, so
-//! [`dse::EvalCache`] serializes to a versioned, corruption-tolerant
-//! JSON file (`--cache-file` on the CLI, LRU-bounded by
-//! `--cache-max-entries`) and repeat explorations across processes
-//! start warm. Ground truth is affordable: the cycle-stepped
+//! [`dse::CacheStore`] keeps a sharded, append-only store on disk
+//! (`--cache-dir` on the CLI) — one line-delimited shard per
+//! (tenant, model) with a differential delta log, compaction and an
+//! advisory file lock for concurrent sessions — and repeat
+//! explorations across processes start warm. The legacy
+//! single-file [`dse::EvalCache`] format (`--cache-file`,
+//! LRU-bounded by `--cache-max-entries`) still loads and migrates
+//! into the store one-shot. Ground truth is affordable: the cycle-stepped
 //! simulator's **epoch skip-ahead engine** ([`sim::step_round`], exact
 //! u128 fixed-point fractional DDR credit via [`sim::ddr_credit_rate`])
 //! fast-forwards steady-state stretches in closed form — bit-identical

@@ -20,12 +20,14 @@
 //! [`Outcome`](cnn2gate::session::Outcome) as a stable machine-readable
 //! document instead of tables.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Result};
 
 use cnn2gate::cli::Args;
 use cnn2gate::coordinator::service::{Event, JobState};
 use cnn2gate::coordinator::{pipeline, CompileService, JobSpec, ServiceConfig};
-use cnn2gate::dse::{brute, rl, Fidelity, RlConfig};
+use cnn2gate::dse::{brute, rl, EvalCache, Fidelity, RlConfig};
 use cnn2gate::estimator::{device, estimate};
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::metrics;
@@ -97,6 +99,7 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("census-gamma", "<g>"),
             opt("seed", "N"),
             opt("threads", "N"),
+            opt("cache-dir", "D"),
             opt("cache-file", "F"),
             opt("cache-max-entries", "N"),
             opt("max-lut", "<pct>"),
@@ -117,6 +120,7 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("batch", "b1,b2,..."),
             opt("latency-slo", "<ms>"),
             opt("threads", "N"),
+            opt("cache-dir", "D"),
             opt("cache-file", "F"),
             opt("cache-max-entries", "N"),
             opt("max-lut", "<pct>"),
@@ -137,6 +141,7 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("batch", "b1,b2,..."),
             opt("latency-slo", "<ms>"),
             opt("threads", "N"),
+            opt("cache-dir", "D"),
             opt("cache-file", "F"),
             opt("cache-max-entries", "N"),
             opt("max-lut", "<pct>"),
@@ -157,6 +162,7 @@ static SUBCOMMANDS: &[Subcommand] = &[
             opt("batch", "b1,b2,..."),
             opt("latency-slo", "<ms>"),
             opt("threads", "N"),
+            opt("cache-dir", "D"),
             opt("cache-file", "F"),
             opt("cache-max-entries", "N"),
             opt("max-lut", "<pct>"),
@@ -177,12 +183,17 @@ static SUBCOMMANDS: &[Subcommand] = &[
         name: "serve",
         flags: &[
             opt("model", "<m>"),
+            opt("device", "<d>"),
             opt("artifacts", "DIR"),
             opt("requests", "N"),
             opt("batch", "B"),
             opt("latency-slo", "<ms>"),
             opt("workers", "N"),
             opt("queue", "N"),
+            opt("threads", "N"),
+            opt("cache-dir", "D"),
+            opt("cache-file", "F"),
+            opt("cache-max-entries", "N"),
             opt("compile-models", "m1,m2,..."),
         ],
         switches: &[],
@@ -214,21 +225,29 @@ runs the cycle-accurate simulator on each candidate's dominant round;
 and weight schedule (both switches imply stepped-full fidelity).
 `--census-gamma g` shapes every explorer reward with the stepped
 census's bottleneck stall fraction (0 = the paper's Algorithm 1; the
-stall term is live under stepped-full fidelity). `--cache-max-entries N`
-LRU-evicts the --cache-file before saving. `--json` on
-synth/fit-fleet/sweep emits the stable machine-readable outcome document
-instead of tables. `--batch b1,b2,...` on synth/fit-fleet/sweep runs the
-(Ni,Nl,B) throughput co-optimization: the explorer re-runs per batch
-size (weights fetched once per group pass, held across the B frames) and
-the highest-frames/s batch whose makespan meets `--latency-slo <ms>`
-wins; sweep prints a frames/s ranking table for the explored batches.
-`serve` runs the in-process compile-service daemon:
-`--compile-models m1,m2` submits fleet compile jobs that stream typed
-admission/progress events (`--workers`/`--queue` bound concurrency and
-admission), while `--requests N` inferences ride the same daemon's
-batched emulation lane when PJRT artifacts exist. Without `serve
---batch B` the inference micro-batch cap is sized by the throughput DSE
-of the served model (under `--latency-slo` when given).
+stall term is live under stepped-full fidelity). `--cache-dir D`
+persists the evaluation memo as a sharded append-only store (one shard
+per (tenant, model), delta logs + compaction, advisory-locked for
+concurrent writers); `--cache-file F` is the legacy single-file cache —
+still loaded (and migrated into the store when both are given), but the
+store is the recommended persistence. `--cache-max-entries N` LRU-evicts
+the memo before saving. `--json` on synth/fit-fleet/sweep emits the
+stable machine-readable outcome document instead of tables.
+`--batch b1,b2,...` on synth/fit-fleet/sweep runs the (Ni,Nl,B)
+throughput co-optimization: the explorer re-runs per batch size (weights
+fetched once per group pass, held across the B frames) and the
+highest-frames/s batch whose end-to-end latency — queueing delay plus
+batch makespan — meets `--latency-slo <ms>` wins; sweep prints a
+frames/s ranking table for the explored batches. `serve` runs the
+in-process compile-service daemon: `--compile-models m1,m2` submits
+fleet compile jobs that stream typed admission/progress events
+(`--workers`/`--queue` bound concurrency and admission), while
+`--requests N` inferences ride the same daemon's batched emulation lane
+when PJRT artifacts exist. Without `serve --batch B` the inference
+micro-batch cap is sized by the throughput DSE of the served model on
+`--device` (under `--latency-slo` when given); the daemon's compile
+jobs share the session memo, so `serve --cache-dir D` both seeds the
+daemon from earlier sweeps and persists what it computes.
 ";
 
 /// The USAGE text, generated from [`SUBCOMMANDS`] so it cannot drift
@@ -328,6 +347,18 @@ fn close_session(session: &Session, json: bool) -> Result<()> {
             session.cache_policy().max_entries
         ));
     }
+    if let Some((saved, dir)) = save.store {
+        note(format!(
+            "cache store: {} entries in {} ({} shards touched: {} appended, {} tombstones, {} rewritten, {} compacted)",
+            saved.entries,
+            dir.display(),
+            saved.shards_written,
+            saved.appended,
+            saved.tombstones,
+            saved.rewritten,
+            saved.compacted
+        ));
+    }
     if let Some((written, path)) = save.written {
         note(format!("cache: {written} entries saved to {}", path.display()));
     }
@@ -358,8 +389,8 @@ fn throughput_line(rep: &cnn2gate::synth::SynthReport) -> Option<String> {
         (None, _) => String::new(),
     };
     Some(format!(
-        "throughput: batch {} — {:.1} frames/s, {:.2} ms batch makespan{slo}",
-        c.batch, c.frames_per_s, c.batch_millis
+        "throughput: batch {} — {:.1} frames/s, {:.2} ms batch makespan, {:.2} ms end-to-end{slo}",
+        c.batch, c.frames_per_s, c.batch_millis, c.e2e_millis
     ))
 }
 
@@ -666,17 +697,22 @@ fn cmd_emulate(args: &Args) -> Result<()> {
 }
 
 /// Size the serving micro-batch from the throughput DSE: co-optimize
-/// (N_i, N_l, B) for the served model on the reference Arria 10 board
+/// (N_i, N_l, B) for the served model on the session's `--device`
 /// (analytical fidelity, brute force — a handful of closed-form
-/// evaluations) and take the chosen B. Falls back to 1 when the model
-/// fits nowhere.
-fn throughput_batch_for(model: &str, latency_slo_ms: Option<f64>) -> Result<usize> {
-    use cnn2gate::dse::{eval, throughput, EvalRequest};
-    use cnn2gate::estimator::Thresholds;
+/// evaluations) and take the chosen B. Runs on the session evaluator,
+/// so a `--cache-dir` store both serves warm entries and absorbs the
+/// sizing sweep. Falls back to 1 when the model fits nowhere.
+fn throughput_batch_for(
+    session: &Session,
+    dev: &'static cnn2gate::estimator::Device,
+    model: &str,
+    latency_slo_ms: Option<f64>,
+) -> Result<usize> {
+    use cnn2gate::dse::{throughput, EvalRequest};
     let g = pipeline::load_model(model, false)?;
     let flow = ComputationFlow::extract(&g).map_err(|e| anyhow!("{e}"))?;
-    let dev = &device::ARRIA_10_GX1150;
-    let ev = eval::global();
+    let ev = session.evaluator();
+    let th = session.thresholds();
     let choice = throughput::co_optimize(
         ev,
         &flow,
@@ -684,17 +720,20 @@ fn throughput_batch_for(model: &str, latency_slo_ms: Option<f64>) -> Result<usiz
         EvalRequest::at(Fidelity::Analytical),
         &[1, 2, 4, 8, 16],
         latency_slo_ms,
-        |req| brute::explore_with_fidelity(ev, &flow, dev, Thresholds::default(), req),
+        |req| brute::explore_with_fidelity(ev, &flow, dev, th, req),
     );
     Ok(choice.chosen_batch())
 }
 
 /// Start the compile service with its inference lane bound to
 /// `model`'s artifact, returning the input shape the demo feeds it.
+/// The compile lane's evaluator shares `cache` (the serve session's
+/// possibly store-backed memo).
 fn start_infer_service(
     dir: &std::path::Path,
     model: &str,
     cfg: ServiceConfig,
+    cache: Arc<EvalCache>,
 ) -> Result<(CompileService, Vec<usize>)> {
     let manifest = Manifest::load(dir)?;
     let art = manifest
@@ -704,13 +743,19 @@ fn start_infer_service(
         Some(g) => load_golden(g)?.params,
         None => pipeline::synthetic_weights(art, 7),
     };
-    let service = CompileService::start_with_inference(cfg, art, weights)?;
+    let service = CompileService::start_with_inference_cached(cfg, art, weights, cache)?;
     Ok((service, art.input.shape.clone()))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let compile_models = args.get_list("compile-models", &[]);
     let model = args.get("model").unwrap_or("lenet5");
+    let dev = pipeline::load_device(args.get("device").unwrap_or("arria10"))?;
+    // The session carries the cache policy: a --cache-dir store (or
+    // legacy --cache-file) seeds both the batch-sizing DSE below and
+    // the daemon's compile lane, and close_session persists what the
+    // whole serve run computed.
+    let session = open_session(args)?;
     // --batch pins the inference micro-batch cap; otherwise the
     // throughput DSE sizes it from the served model's (Ni, Nl, B)
     // co-optimization under the optional --latency-slo
@@ -718,11 +763,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(_) => args.get_usize("batch", 8)?,
         None => {
             let slo = CompileJob::latency_slo_from_args(args)?;
-            let chosen = throughput_batch_for(model, slo)?;
+            let chosen = throughput_batch_for(&session, dev, model, slo)?;
             println!(
-                "serve: micro-batch sized to {chosen} by the throughput DSE{}",
+                "serve: micro-batch sized to {chosen} by the throughput DSE on {}{}",
+                dev.name,
                 match slo {
-                    Some(ms) => format!(" under a {ms:.1} ms SLO"),
+                    Some(ms) => format!(" under a {ms:.1} ms end-to-end SLO"),
                     None => String::new(),
                 }
             );
@@ -737,16 +783,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let dir = artifacts_dir(args);
 
-    // One daemon serves both lanes. Without --compile-models the
-    // inference lane is the whole demo, so its startup errors stay
-    // fatal (the seed's behavior); with compile work queued the lane
-    // is best-effort and the daemon comes up without it.
-    let (service, input_shape) = match start_infer_service(&dir, model, cfg) {
+    // One daemon serves both lanes, compile jobs running on the
+    // session's cache handle. Without --compile-models the inference
+    // lane is the whole demo, so its startup errors stay fatal (the
+    // seed's behavior); with compile work queued the lane is
+    // best-effort and the daemon comes up without it.
+    let cache = session.evaluator().cache_handle();
+    let (service, input_shape) = match start_infer_service(&dir, model, cfg, Arc::clone(&cache)) {
         Ok((service, shape)) => (service, Some(shape)),
         Err(e) if compile_models.is_empty() => return Err(e),
         Err(e) => {
             eprintln!("note: inference lane disabled — {e:#}");
-            (CompileService::start(cfg), None)
+            (CompileService::start_with_cache(cfg, cache), None)
         }
     };
 
@@ -826,7 +874,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             stats.e2e.p99_ms
         );
     }
-    Ok(())
+    // persist everything the sizing sweep AND the daemon's compile
+    // jobs added to the shared memo
+    close_session(&session, false)
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {

@@ -252,6 +252,7 @@ pub fn sweep_throughput_table(rep: &SweepReport) -> Table {
             "Option (Ni,Nl)",
             "Frames/s",
             "Batch makespan",
+            "E2E latency",
             "SLO",
         ],
     );
@@ -283,6 +284,7 @@ pub fn sweep_throughput_table(rep: &SweepReport) -> Table {
                         .map_or("-".into(), |(ni, nl)| format!("({ni},{nl})")),
                     format!("{:.1}", c.frames_per_s),
                     format!("{:.2} ms", c.batch_millis),
+                    format!("{:.2} ms", c.e2e_millis),
                     slo,
                 ]);
             }
@@ -292,6 +294,7 @@ pub fn sweep_throughput_table(rep: &SweepReport) -> Table {
                     e.device.to_string(),
                     "-".into(),
                     "Does not fit".into(),
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),

@@ -76,8 +76,8 @@ use crate::cli::Args;
 use crate::coordinator::pipeline::{FleetReport, SweepReport};
 use crate::coordinator::scheduler::{work_steal_map_seeded, StealStats};
 use crate::dse::{
-    brute, eval, rl, throughput, CacheStats, EvalCache, EvalRequest, Evaluator, Fidelity,
-    OptionSpace, RlConfig, TenantId,
+    brute, eval, rl, throughput, CacheStats, CacheStore, EvalCache, EvalRequest, Evaluator,
+    Fidelity, OptionSpace, RlConfig, StoreSave, TenantId,
 };
 use crate::estimator::{device, synthesis_minutes, Device, Thresholds};
 use crate::ir::{ComputationFlow, Graph};
@@ -90,8 +90,10 @@ pub const OUTCOME_FORMAT: &str = "cnn2gate-outcome";
 /// Schema version of the [`Outcome::to_json`] document; bumped on any
 /// layout change (v2: top-level `census_gamma`, per-entry
 /// `specialization`; v3: per-entry `batch` + `throughput` and
-/// `specialization.batch` for the batched serving flow).
-pub const OUTCOME_VERSION: i64 = 3;
+/// `specialization.batch` for the batched serving flow; v4: per-
+/// candidate `e2e_millis` — queueing delay + makespan — which the
+/// latency SLO now bounds instead of the bare makespan).
+pub const OUTCOME_VERSION: i64 = 4;
 
 /// Candidates per work-stealing prewarm item. Small enough that a
 /// VGG-16-sized grid splits across several workers, big enough that the
@@ -103,11 +105,19 @@ const CHUNK: usize = 4;
 // ---------------------------------------------------------------------------
 
 /// How the session's estimator memo persists across processes: the
-/// `--cache-file` the memo is seeded from and written back to, and the
+/// `--cache-dir` store (sharded + differential, the current format) or
+/// the legacy `--cache-file` document it migrates from, plus the
 /// `--cache-max-entries` LRU bound applied before saving (0 = unlimited).
 #[derive(Debug, Clone, Default)]
 pub struct CachePolicy {
-    /// Disk home of the memo; `None` keeps the cache in-process only.
+    /// Sharded store directory ([`CacheStore`]); the preferred home.
+    /// When both `dir` and `file` are set, the legacy file is loaded
+    /// once and absorbed into the store (the store wins conflicts) —
+    /// the one-shot v5 migration path.
+    pub dir: Option<PathBuf>,
+    /// Legacy single-document home of the memo; `None` (like `dir`
+    /// `None`) keeps the cache in-process only. Its whole-file save
+    /// path is deprecated: it only runs when no `dir` is configured.
     pub file: Option<PathBuf>,
     /// LRU-evict down to this many entries before saving (0 = unlimited).
     pub max_entries: usize,
@@ -145,13 +155,14 @@ impl SessionBuilder {
     }
 
     /// Build a session straight from parsed CLI flags — the one place
-    /// `--threads`, `--cache-file`, `--cache-max-entries`, `--fidelity`
-    /// and the `--max-*` thresholds are interpreted (every subcommand
-    /// used to hand-roll its own copies).
+    /// `--threads`, `--cache-dir`, `--cache-file`, `--cache-max-entries`,
+    /// `--fidelity` and the `--max-*` thresholds are interpreted (every
+    /// subcommand used to hand-roll its own copies).
     pub fn from_args(args: &Args) -> Result<SessionBuilder> {
         Ok(SessionBuilder::new()
             .threads(args.get_usize("threads", 0)?)
             .cache_policy(CachePolicy {
+                dir: args.get("cache-dir").map(PathBuf::from),
                 file: args.get("cache-file").map(PathBuf::from),
                 max_entries: args.get_usize("cache-max-entries", 0)?,
             })
@@ -209,9 +220,18 @@ impl SessionBuilder {
         self
     }
 
-    /// Seed the memo from (and save it back to) this file.
+    /// Seed the memo from (and save it back to) this file. Deprecated
+    /// in favor of [`SessionBuilder::cache_dir`]; with both set, the
+    /// file only seeds (one-shot migration) and is never written.
     pub fn cache_file(mut self, path: impl Into<PathBuf>) -> SessionBuilder {
         self.cache.file = Some(path.into());
+        self
+    }
+
+    /// Seed the memo from (and save it back to) the sharded store at
+    /// this directory ([`CacheStore`]).
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> SessionBuilder {
+        self.cache.dir = Some(dir.into());
         self
     }
 
@@ -249,17 +269,41 @@ impl SessionBuilder {
         self
     }
 
-    /// Build the session. With a cache file the evaluator is private and
-    /// disk-seeded (tolerantly: a missing file starts cold silently, a
-    /// corrupt or stale one starts cold with a [`Session::load_warning`]
-    /// — it is never trusted); with only `threads` the pool is private
-    /// but cold; with neither, the process-global evaluator is shared.
+    /// Build the session. With a cache dir the evaluator is private and
+    /// seeded from the sharded [`CacheStore`]; with a cache file it is
+    /// seeded from the legacy document (and with both, the store loads
+    /// first and absorbs whatever legacy entries it lacks — the one-shot
+    /// v5 migration). Loading is tolerant either way: a missing
+    /// file/store starts cold silently, a corrupt one starts cold with a
+    /// [`Session::load_warning`] — suspect entries are never trusted.
+    /// With only `threads` the pool is private but cold; with nothing,
+    /// the process-global evaluator is shared.
     pub fn build(self) -> Session {
         let mut load_warning = None;
-        let evaluator = match (&self.cache.file, self.threads) {
-            (None, 0) => None,
-            (None, n) => Some(Evaluator::new(n)),
-            (Some(path), n) => {
+        let mut store = None;
+        let evaluator = match (&self.cache.dir, &self.cache.file, self.threads) {
+            (None, None, 0) => None,
+            (None, None, n) => Some(Evaluator::new(n)),
+            (Some(dir), legacy, n) => {
+                let opened = CacheStore::open(dir);
+                let mut warnings = opened.warnings;
+                if let Some(path) = legacy {
+                    // one-shot migration: absorb every legacy entry the
+                    // store doesn't already have (the store wins
+                    // conflicts); close() then saves through the store
+                    // only, leaving the legacy file untouched
+                    let (old, warning) = EvalCache::load_or_cold(path);
+                    warnings.extend(warning);
+                    opened.cache.absorb_missing(&old);
+                }
+                if !warnings.is_empty() {
+                    load_warning = Some(warnings.join("; "));
+                }
+                store = Some(opened.store);
+                let n = if n == 0 { eval::default_threads() } else { n };
+                Some(Evaluator::with_cache(n, Arc::new(opened.cache)))
+            }
+            (None, Some(path), n) => {
                 let (cache, warning) = EvalCache::load_or_cold(path);
                 load_warning = warning;
                 let n = if n == 0 { eval::default_threads() } else { n };
@@ -268,6 +312,7 @@ impl SessionBuilder {
         };
         Session {
             evaluator,
+            store,
             cache: self.cache,
             thresholds: self.thresholds,
             fidelity: self.fidelity,
@@ -279,12 +324,17 @@ impl SessionBuilder {
 }
 
 /// What [`Session::close`] did: how many memo entries were LRU-evicted
-/// and, when a cache file is configured, how many were written where.
+/// and, when a cache store or file is configured, what was written
+/// where.
 #[derive(Debug, Clone, Default)]
 pub struct CacheSave {
     pub evicted: usize,
-    /// `(entries written, path)` when a cache file was configured.
+    /// `(entries written, path)` when only a legacy cache file was
+    /// configured (the deprecated whole-file save path).
     pub written: Option<(usize, PathBuf)>,
+    /// `(differential save counters, store dir)` when a cache dir was
+    /// configured.
+    pub store: Option<(StoreSave, PathBuf)>,
 }
 
 /// The run-scoped machinery every [`CompileJob`] executes through. See
@@ -292,6 +342,8 @@ pub struct CacheSave {
 pub struct Session {
     /// `None` shares the process-global evaluator ([`eval::global`]).
     evaluator: Option<Evaluator>,
+    /// The sharded store backing the memo when `--cache-dir` is set.
+    store: Option<CacheStore>,
     cache: CachePolicy,
     thresholds: Thresholds,
     fidelity: Fidelity,
@@ -386,16 +438,27 @@ impl Session {
         })
     }
 
-    /// Persist the memo back to the [`CachePolicy`]'s file (when one is
-    /// configured), LRU-evicting first when `max_entries` bounds it.
-    /// A no-op session close (no cache file) returns a default
-    /// [`CacheSave`].
+    /// The sharded [`CacheStore`] backing this session's memo, when a
+    /// cache dir is configured.
+    pub fn store(&self) -> Option<&CacheStore> {
+        self.store.as_ref()
+    }
+
+    /// Persist the memo back to the [`CachePolicy`]'s store (when a
+    /// cache dir is configured) or its legacy file (when only a cache
+    /// file is), LRU-evicting first when `max_entries` bounds it. The
+    /// store save is differential — it appends what changed instead of
+    /// rewriting the world. A no-op session close (no persistence
+    /// configured) returns a default [`CacheSave`].
     pub fn close(&self) -> Result<CacheSave> {
         let mut out = CacheSave::default();
-        if let Some(path) = &self.cache.file {
-            if self.cache.max_entries > 0 {
-                out.evicted = self.evaluator().cache().evict_lru(self.cache.max_entries);
-            }
+        if self.cache.max_entries > 0 && (self.store.is_some() || self.cache.file.is_some()) {
+            out.evicted = self.evaluator().cache().evict_lru(self.cache.max_entries);
+        }
+        if let Some(store) = &self.store {
+            let saved = store.save(self.evaluator().cache())?;
+            out.store = Some((saved, store.dir().to_path_buf()));
+        } else if let Some(path) = &self.cache.file {
             let written = self.evaluator().cache().save(path)?;
             out.written = Some((written, path.clone()));
         }
@@ -430,9 +493,10 @@ pub struct CompileJob {
     /// explorer per batch size and reports the highest-frames/s
     /// (N_i, N_l, B).
     pub batches: Vec<usize>,
-    /// Optional serving SLO in ms: the chosen batch's makespan (the
-    /// worst-case latency of a frame landing first in a batch) must stay
-    /// under it.
+    /// Optional serving SLO in ms: the chosen batch's end-to-end
+    /// latency — queueing delay (a frame can wait up to one batch
+    /// period before its batch launches) plus the batch makespan —
+    /// must stay under it.
     pub latency_slo_ms: Option<f64>,
 }
 
@@ -579,7 +643,8 @@ impl CompileJobBuilder {
     }
 
     /// Serving latency SLO in ms (`--latency-slo`): the chosen batch's
-    /// makespan must stay under it.
+    /// end-to-end latency (queueing delay + makespan) must stay under
+    /// it.
     pub fn latency_slo_ms(mut self, ms: f64) -> CompileJobBuilder {
         self.latency_slo_ms = Some(ms);
         self
@@ -924,7 +989,7 @@ fn entry_to_json(rep: &SynthReport) -> Json {
 }
 
 /// The (N_i, N_l, B) throughput co-optimization section of one entry
-/// (schema v3; present only when the job ran in throughput mode).
+/// (schema v4; present only when the job ran in throughput mode).
 fn throughput_to_json(choice: &crate::dse::ThroughputChoice) -> Json {
     let mut o = JsonObj::new();
     o.insert(
@@ -951,6 +1016,7 @@ fn throughput_to_json(choice: &crate::dse::ThroughputChoice) -> Json {
                     );
                     r.insert("frames_per_s", c.frames_per_s.into());
                     r.insert("batch_millis", c.batch_millis.into());
+                    r.insert("e2e_millis", c.e2e_millis.into());
                     r.insert("meets_slo", c.meets_slo.into());
                     Json::Obj(r)
                 })

@@ -48,6 +48,7 @@ fn assert_report_identity(a: &SynthReport, b: &SynthReport, ctx: &str) {
                             x.option(),
                             x.frames_per_s.to_bits(),
                             x.batch_millis.to_bits(),
+                            x.e2e_millis.to_bits(),
                             x.meets_slo,
                         )
                     })
@@ -341,7 +342,7 @@ fn throughput_outcome() -> Outcome {
                 .device(&device::ARRIA_10_GX1150)
                 .explorer(Explorer::BruteForce)
                 .batches([1, 16])
-                .latency_slo_ms(1000.0)
+                .latency_slo_ms(10_000.0)
                 .build()
                 .unwrap(),
         )
@@ -412,17 +413,17 @@ fn outcome_json_matches_the_golden_schema() {
     // arrays, rankings), a quantized+specialized stepped-full 1×1
     // (quant + stepped_network + specialization sections), and a
     // throughput-mode 1×1 (per-entry batch + throughput sweep): together
-    // they exercise every key the v3 schema can emit
+    // they exercise every key the v4 schema can emit
     let mut got = BTreeSet::new();
     collect_paths(&analytical_outcome().to_json(), "", &mut got);
     collect_paths(&quantized_stepped_outcome().to_json(), "", &mut got);
     collect_paths(&throughput_outcome().to_json(), "", &mut got);
 
     let golden_path =
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/outcome_v3_paths.txt");
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/outcome_v4_paths.txt");
     if std::env::var("CNN2GATE_UPDATE_GOLDENS").is_ok() {
         let mut text = String::from(
-            "# Key paths of the cnn2gate-outcome v3 JSON document (--json).\n\
+            "# Key paths of the cnn2gate-outcome v4 JSON document (--json).\n\
              # Regenerate with CNN2GATE_UPDATE_GOLDENS=1 cargo test outcome_json_matches.\n",
         );
         for p in &got {
@@ -432,7 +433,7 @@ fn outcome_json_matches_the_golden_schema() {
         std::fs::write(&golden_path, text).unwrap();
     }
     let want: BTreeSet<String> = std::fs::read_to_string(&golden_path)
-        .expect("golden schema file committed at rust/tests/golden/outcome_v3_paths.txt")
+        .expect("golden schema file committed at rust/tests/golden/outcome_v4_paths.txt")
         .lines()
         .map(str::trim)
         .filter(|l| !l.is_empty() && !l.starts_with('#'))
@@ -450,7 +451,7 @@ fn outcome_json_matches_the_golden_schema() {
 fn outcome_json_carries_the_acceptance_payload() {
     let doc = analytical_outcome().to_json();
     assert_eq!(doc.get("format").as_str(), Some("cnn2gate-outcome"));
-    assert_eq!(doc.get("version").as_i64(), Some(3));
+    assert_eq!(doc.get("version").as_i64(), Some(4));
     assert_eq!(doc.get("explorer").as_str(), Some("bf"));
     assert_eq!(doc.get("fidelity").as_str(), Some("analytical"));
     assert_eq!(doc.get("census_gamma").as_f64(), Some(0.0));
@@ -507,7 +508,7 @@ fn outcome_json_carries_the_acceptance_payload() {
     assert_eq!(entry.get("batch").as_i64(), Some(16));
     let thr = entry.get("throughput");
     assert_eq!(thr.get("chosen_batch").as_i64(), Some(16));
-    assert_eq!(thr.get("latency_slo_ms").as_f64(), Some(1000.0));
+    assert_eq!(thr.get("latency_slo_ms").as_f64(), Some(10_000.0));
     assert_eq!(thr.get("slo_satisfied").as_bool(), Some(true));
     let candidates = thr.get("candidates").as_arr().unwrap();
     assert_eq!(candidates.len(), 2);

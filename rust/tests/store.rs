@@ -1,0 +1,262 @@
+//! Cache-store integration tests: the sharded, append-only
+//! [`CacheStore`] under the conditions the in-process unit tests can't
+//! reach from inside the crate — two concurrent writers appending to
+//! one shard under the advisory lock, a torn final delta record left
+//! by a crashed writer, the compaction crash window replayed against a
+//! restored delta log, legacy `--cache-file` migration, and the
+//! acceptance pin: a sweep served warm from the store reproduces the
+//! cold outcome document and tables byte-for-byte.
+
+use std::path::{Path, PathBuf};
+
+use cnn2gate::dse::{CacheStore, EvalCache, EvalRequest, Fidelity};
+use cnn2gate::estimator::device;
+use cnn2gate::ir::ComputationFlow;
+use cnn2gate::onnx::zoo;
+use cnn2gate::report::{
+    sweep_best_device_table, sweep_best_model_table, sweep_pareto_table, sweep_table,
+};
+use cnn2gate::session::{CompileJob, Outcome, Session};
+use cnn2gate::synth::Explorer;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cnn2gate-store-it-{}-{tag}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Warm `cache` with the tiny-model analytical grid at each batch size
+/// — 3 entries per batch, all landing in ONE (tenant, model) shard.
+fn warm(cache: &EvalCache, batches: &[usize]) {
+    let g = zoo::build("tiny", false).unwrap();
+    let flow = ComputationFlow::extract(&g).unwrap();
+    for &b in batches {
+        for (ni, nl) in [(2usize, 2usize), (4, 4), (4, 8)] {
+            cache.get_or_compute(
+                &flow,
+                &device::CYCLONE_V_5CSEMA5,
+                ni,
+                nl,
+                EvalRequest::at(Fidelity::Analytical).batched(b),
+            );
+        }
+    }
+}
+
+/// The single shard's (base, delta) paths — fails if the store holds
+/// more than one shard.
+fn shard_paths(dir: &Path) -> (PathBuf, PathBuf) {
+    let mut bases: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            let name = p.file_name().unwrap().to_string_lossy().into_owned();
+            name.ends_with(".jsonl") && !name.ends_with(".delta.jsonl")
+        })
+        .collect();
+    assert_eq!(bases.len(), 1, "expected exactly one shard base in {}", dir.display());
+    let base = bases.pop().unwrap();
+    let name = base.file_name().unwrap().to_string_lossy().into_owned();
+    let delta = base.with_file_name(name.replace(".jsonl", ".delta.jsonl"));
+    (base, delta)
+}
+
+#[test]
+fn two_writers_append_to_one_shard_under_the_lock() {
+    let dir = tmp_dir("two-writers");
+
+    // seed the shard so both writers open a shared base
+    let seed = CacheStore::open(&dir);
+    assert!(seed.warnings.is_empty(), "{:?}", seed.warnings);
+    warm(&seed.cache, &[1]);
+    let first = seed.store.save(&seed.cache).unwrap();
+    assert_eq!(first.rewritten, 1);
+    assert_eq!(first.entries, 3);
+
+    // two independent handles — a serve daemon and a CLI sweep — each
+    // warmed with disjoint batch sizes, saving concurrently: the
+    // advisory lock serializes the appends, and neither writer may
+    // tombstone entries the other added after its snapshot
+    let a = CacheStore::open(&dir);
+    let b = CacheStore::open(&dir);
+    assert_eq!(a.cache.stats().entries, 3);
+    assert_eq!(b.cache.stats().entries, 3);
+    std::thread::scope(|scope| {
+        let ta = scope.spawn(|| {
+            warm(&a.cache, &[2]);
+            a.store.save(&a.cache).unwrap()
+        });
+        let tb = scope.spawn(|| {
+            warm(&b.cache, &[3]);
+            b.store.save(&b.cache).unwrap()
+        });
+        let (sa, sb) = (ta.join().unwrap(), tb.join().unwrap());
+        assert_eq!(sa.tombstones, 0, "writer A tombstoned a peer's entries");
+        assert_eq!(sb.tombstones, 0, "writer B tombstoned a peer's entries");
+        assert!(sa.appended >= 3 && sb.appended >= 3);
+        assert_eq!(sa.rewritten + sb.rewritten, 0, "existing shard must append, not rewrite");
+    });
+
+    let merged = CacheStore::open(&dir);
+    assert!(merged.warnings.is_empty(), "{:?}", merged.warnings);
+    assert_eq!(merged.cache.stats().entries, 9, "union of the base and both writers' deltas");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_final_delta_record_recovers_the_prefix_loudly() {
+    let dir = tmp_dir("torn");
+    let seed = CacheStore::open(&dir);
+    warm(&seed.cache, &[1]);
+    seed.store.save(&seed.cache).unwrap(); // base: 3 entries
+
+    let writer = CacheStore::open(&dir);
+    warm(&writer.cache, &[2, 3]); // 6 delta puts
+    let saved = writer.store.save(&writer.cache).unwrap();
+    assert!(saved.appended >= 6, "{saved:?}");
+
+    // crash mid-append: chop into the middle of the LAST delta record
+    let (_, delta) = shard_paths(&dir);
+    let bytes = std::fs::read(&delta).unwrap();
+    std::fs::write(&delta, &bytes[..bytes.len() - 10]).unwrap();
+
+    // strict load drops exactly the torn record, keeps the prefix, and
+    // says so out loud
+    let torn = CacheStore::open(&dir);
+    assert_eq!(torn.warnings.len(), 1, "{:?}", torn.warnings);
+    assert!(torn.warnings[0].contains("torn"), "{}", torn.warnings[0]);
+    assert_eq!(torn.cache.stats().entries, 8, "base 3 + 5 recovered delta records");
+
+    // the next exclusive save trims the torn tail before appending, so
+    // a reopen is clean
+    warm(&torn.cache, &[4]);
+    torn.store.save(&torn.cache).unwrap();
+    let healed = CacheStore::open(&dir);
+    assert!(healed.warnings.is_empty(), "{:?}", healed.warnings);
+    assert_eq!(healed.cache.stats().entries, 11);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn compaction_crash_window_replays_idempotently() {
+    let dir = tmp_dir("compact-crash");
+    let seed = CacheStore::open(&dir);
+    warm(&seed.cache, &[1]);
+    seed.store.save(&seed.cache).unwrap();
+
+    // a second generation: 3 new puts and 2 tombstones in the delta
+    let writer = CacheStore::open(&dir);
+    warm(&writer.cache, &[2]);
+    let evicted = writer.cache.evict_lru(4);
+    assert_eq!(evicted, 2);
+    let saved = writer.store.save(&writer.cache).unwrap();
+    assert!(saved.appended >= 3 && saved.tombstones == 2, "{saved:?}");
+
+    let (base, delta) = shard_paths(&dir);
+    let delta_bytes = std::fs::read(&delta).unwrap();
+    let reader = CacheStore::open(&dir);
+    assert!(reader.warnings.is_empty(), "{:?}", reader.warnings);
+    let pre_entries = reader.cache.stats().entries;
+    assert_eq!(pre_entries, 4);
+
+    // compact, then restore the delta log — the crash window between
+    // the canonical base rename and the delta removal
+    assert_eq!(reader.store.compact_all().unwrap(), 1);
+    let canonical = std::fs::read(&base).unwrap();
+    assert!(!delta.exists(), "compaction folds the delta away");
+    std::fs::write(&delta, &delta_bytes).unwrap();
+
+    // replaying the stale delta over the canonical base is idempotent:
+    // puts upsert to identical payloads, dels tolerate absent keys
+    let replay = CacheStore::open(&dir);
+    assert!(replay.warnings.is_empty(), "{:?}", replay.warnings);
+    assert_eq!(replay.cache.stats().entries, pre_entries);
+
+    // recompacting reproduces the canonical bytes exactly
+    assert_eq!(replay.store.compact_all().unwrap(), 1);
+    assert_eq!(std::fs::read(&base).unwrap(), canonical, "recompaction drifted");
+    assert!(!delta.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn legacy_cache_file_migrates_into_the_store() {
+    let file = std::env::temp_dir()
+        .join(format!("cnn2gate-store-it-{}-legacy.json", std::process::id()));
+    let legacy = EvalCache::new();
+    warm(&legacy, &[1]);
+    assert_eq!(legacy.save(&file).unwrap(), 3);
+    let legacy_bytes = std::fs::read(&file).unwrap();
+
+    // --cache-dir + --cache-file: the store absorbs the v5 entries and
+    // owns persistence from here on; the legacy file is never rewritten
+    let dir = tmp_dir("migrate");
+    let session = Session::builder().cache_dir(&dir).cache_file(&file).build();
+    assert!(session.load_warning().is_none());
+    assert_eq!(session.evaluator().cache().stats().entries, 3);
+    let save = session.close().unwrap();
+    let (saved, _) = save.store.expect("a cache-dir session persists through the store");
+    assert_eq!(saved.entries, 3);
+    assert!(save.written.is_none(), "deprecated single-file save path ran alongside the store");
+    assert_eq!(std::fs::read(&file).unwrap(), legacy_bytes, "legacy file was rewritten");
+
+    // the store alone now serves the migrated entries
+    let migrated = CacheStore::open(&dir);
+    assert!(migrated.warnings.is_empty(), "{:?}", migrated.warnings);
+    assert_eq!(migrated.cache.stats().entries, 3);
+    std::fs::remove_file(&file).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn sweep_tables(outcome: &Outcome) -> String {
+    let rep = outcome.to_sweep_report();
+    format!(
+        "{}{}{}{}",
+        sweep_table(&rep).render(),
+        sweep_best_device_table(&rep).render(),
+        sweep_best_model_table(&rep).render(),
+        sweep_pareto_table(&rep).render()
+    )
+}
+
+#[test]
+fn warm_store_sweep_reproduces_cold_outcome_byte_for_byte() {
+    let dir = tmp_dir("warm-sweep");
+    let job = CompileJob::builder()
+        .models([zoo::build("tiny", false).unwrap(), zoo::build("lenet5", false).unwrap()])
+        .all_devices()
+        .explorer(Explorer::BruteForce)
+        .build()
+        .unwrap();
+
+    let cold_session = Session::builder().threads(2).cache_dir(&dir).build();
+    assert!(cold_session.load_warning().is_none());
+    let cold_outcome = cold_session.run(&job).unwrap();
+    let cold_json = cold_outcome.to_json().to_string_pretty();
+    let cold_tables = sweep_tables(&cold_outcome);
+    let save = cold_session.close().unwrap();
+    let (saved, path) = save.store.expect("cache-dir session persists through the store");
+    assert!(saved.entries > 0 && saved.rewritten >= 1, "{saved:?}");
+    assert_eq!(path, dir);
+
+    // warm: every evaluation comes off disk, and both the machine
+    // document and the rendered tables are byte-identical to cold
+    let warm_session = Session::builder().threads(2).cache_dir(&dir).build();
+    assert!(warm_session.load_warning().is_none());
+    let warm_outcome = warm_session.run(&job).unwrap();
+    assert_eq!(warm_session.evaluator().cache().stats().misses, 0, "store-warm run recomputed");
+    assert_eq!(warm_outcome.to_json().to_string_pretty(), cold_json);
+    assert_eq!(sweep_tables(&warm_outcome), cold_tables);
+
+    // first close persists the warm run's LRU stamp bumps; a second
+    // close with nothing changed touches no shard file at all
+    warm_session.close().unwrap();
+    let idle = warm_session.close().unwrap();
+    let (idle_saved, _) = idle.store.unwrap();
+    assert_eq!(
+        idle_saved.appended + idle_saved.tombstones + idle_saved.rewritten + idle_saved.compacted,
+        0,
+        "an untouched store must be zero shard I/O: {idle_saved:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

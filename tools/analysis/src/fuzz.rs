@@ -1,5 +1,7 @@
-//! Hostile-input fuzz harnesses for the repo's three parsing surfaces:
-//! [`Json::parse`], [`onnx::parse_doc`] and [`EvalCache::from_json`].
+//! Hostile-input fuzz harnesses for the repo's four parsing surfaces:
+//! [`Json::parse`], [`onnx::parse_doc`], [`EvalCache::from_json`] and
+//! the sharded cache-store loader [`CacheStore::open`] (hostile
+//! manifests, shard bases and delta logs, including torn tails).
 //!
 //! Everything is deterministic: inputs come from the repo's own
 //! [`util::rng`](cnn2gate::util::rng) xoshiro generator seeded per
@@ -17,7 +19,7 @@
 
 use std::panic::{self, AssertUnwindSafe};
 
-use cnn2gate::dse::{EvalCache, EvalRequest, Evaluator, Fidelity};
+use cnn2gate::dse::{CacheStore, EvalCache, EvalRequest, Evaluator, Fidelity};
 use cnn2gate::estimator::device::ARRIA_10_GX1150;
 use cnn2gate::ir::ComputationFlow;
 use cnn2gate::onnx::{parse_doc, zoo};
@@ -432,8 +434,182 @@ pub fn fuzz_cache(seed: u64, iters: u64) -> Result<FuzzOutcome, String> {
     Ok(out)
 }
 
-/// Run all three harnesses at `scale`× the fast-tier budget (scale 1 =
-/// 12 000 inputs total, past the 10k acceptance gate). Returns per-
+/// On-disk texts of a small valid store (manifest + one shard's base
+/// and delta log), captured once and re-written per fuzz iteration.
+struct StoreTemplate {
+    manifest: String,
+    base_name: String,
+    base: String,
+    delta_name: String,
+    delta: String,
+}
+
+/// A scratch directory unique per call — parallel harnesses (e.g. two
+/// unit tests in one process) must never share a store directory.
+fn store_scratch_dir(tag: &str) -> std::path::PathBuf {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir().join(format!("cnn2gate-fuzz-store-{tag}-{}-{n}", std::process::id()))
+}
+
+/// Build the template store: two generations of tiny-model analytical
+/// entries, so the directory holds a manifest, a base AND a live delta.
+fn store_template() -> Result<StoreTemplate, String> {
+    let dir = store_scratch_dir("template");
+    let _ = std::fs::remove_dir_all(&dir);
+    let graph = zoo::build("tiny", false).ok_or("zoo model 'tiny' missing")?;
+    let flow = ComputationFlow::extract(&graph).map_err(|e| format!("{e:?}"))?;
+    let first = CacheStore::open(&dir);
+    first
+        .cache
+        .get_or_compute(&flow, &ARRIA_10_GX1150, 4, 4, EvalRequest::at(Fidelity::Analytical));
+    first
+        .cache
+        .get_or_compute(&flow, &ARRIA_10_GX1150, 8, 4, EvalRequest::at(Fidelity::Analytical));
+    first.store.save(&first.cache).map_err(|e| format!("{e:#}"))?;
+    let second = CacheStore::open(&dir);
+    second
+        .cache
+        .get_or_compute(&flow, &ARRIA_10_GX1150, 8, 8, EvalRequest::at(Fidelity::Analytical));
+    second.store.save(&second.cache).map_err(|e| format!("{e:#}"))?;
+
+    let mut base = None;
+    let mut delta = None;
+    for entry in std::fs::read_dir(&dir).map_err(|e| e.to_string())? {
+        let path = entry.map_err(|e| e.to_string())?.path();
+        let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+        let text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+        if name.ends_with(".delta.jsonl") {
+            delta = Some((name, text));
+        } else if name.ends_with(".jsonl") {
+            base = Some((name, text));
+        }
+    }
+    let manifest = std::fs::read_to_string(dir.join("store.json")).map_err(|e| e.to_string())?;
+    std::fs::remove_dir_all(&dir).ok();
+    let (base_name, base) = base.ok_or("template store grew no shard base")?;
+    let (delta_name, delta) = delta.ok_or("template store grew no delta log")?;
+    Ok(StoreTemplate {
+        manifest,
+        base_name,
+        base,
+        delta_name,
+        delta,
+    })
+}
+
+/// Hostile mutation of one line-oriented store file: byte noise, a
+/// torn tail (mid-line truncation), line drop/duplicate/swap, or a
+/// structural mutation of one line's JSON record.
+fn hostile_store_text(rng: &mut Rng, text: &str) -> String {
+    match rng.below(7) {
+        0 => byte_mutate(rng, text),
+        1 => soup_string(rng, 200),
+        2 => {
+            // torn tail: cut mid-way into the final record (byte-level,
+            // so multi-byte codepoints can't panic the generator)
+            let cut = text.len().saturating_sub(1 + rng.below(40) as usize);
+            String::from_utf8_lossy(&text.as_bytes()[..cut]).into_owned()
+        }
+        kind => {
+            let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+            if lines.is_empty() {
+                return soup_string(rng, 80);
+            }
+            let at = rng.below(lines.len() as u64) as usize;
+            match kind {
+                3 => {
+                    lines.remove(at);
+                }
+                4 => lines.insert(at, lines[at].clone()), // duplicate record
+                5 => {
+                    let other = rng.below(lines.len() as u64) as usize;
+                    lines.swap(at, other); // break the sorted-key order
+                }
+                _ => {
+                    lines[at] = match Json::parse(&lines[at]) {
+                        Ok(doc) => mutate_tree(rng, &doc).to_string(),
+                        Err(_) => soup_string(rng, 80),
+                    };
+                }
+            }
+            let mut out = lines.join("\n");
+            out.push('\n');
+            out
+        }
+    }
+}
+
+/// Fuzz [`CacheStore::open`] with hostile store directories. Invariant:
+/// the strict loader never panics — it loads cleanly or degrades (cold
+/// or partial) with a warning — and a subsequent `save` + `compact_all`
+/// always heals the directory into one that reopens warning-free.
+pub fn fuzz_store(seed: u64, iters: u64) -> Result<FuzzOutcome, String> {
+    let mut rng = Rng::new(seed ^ 0x7374_6f72);
+    let t = store_template()?;
+    let dir = store_scratch_dir(&format!("run-{seed:x}"));
+    let mut out = FuzzOutcome {
+        target: "dse::CacheStore::open",
+        inputs: 0,
+        accepted: 0,
+        rejected: 0,
+    };
+    for i in 0..iters {
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).map_err(|e| format!("store scratch dir: {e}"))?;
+        let victim = rng.below(7);
+        let render = |rng: &mut Rng, hit: bool, text: &str| {
+            if hit {
+                hostile_store_text(rng, text)
+            } else {
+                text.to_string()
+            }
+        };
+        let manifest = render(&mut rng, matches!(victim, 0 | 1), &t.manifest);
+        let base = render(&mut rng, matches!(victim, 2 | 3), &t.base);
+        let delta = render(&mut rng, matches!(victim, 4 | 5), &t.delta);
+        // victim == 6 leaves everything intact: the accept path
+        for (name, text) in [
+            ("store.json", &manifest),
+            (t.base_name.as_str(), &base),
+            (t.delta_name.as_str(), &delta),
+        ] {
+            std::fs::write(dir.join(name), text).map_err(|e| format!("store scratch: {e}"))?;
+        }
+        out.inputs += 1;
+        let opened = shielded(|| CacheStore::open(&dir))
+            .map_err(|p| format!("store seed={seed} iter={i} victim={victim}: panicked: {p}"))?;
+        if opened.warnings.is_empty() {
+            out.accepted += 1;
+        } else {
+            out.rejected += 1;
+        }
+        // heal invariant (sampled — it costs a full save + compaction):
+        // whatever survived the strict load persists into a directory
+        // that reopens with no warnings at all
+        if rng.below(16) == 0 {
+            shielded(|| opened.store.save(&opened.cache))
+                .map_err(|p| format!("store seed={seed} iter={i}: save panicked: {p}"))?
+                .map_err(|e| format!("store seed={seed} iter={i}: save after load failed: {e:#}"))?;
+            shielded(|| opened.store.compact_all())
+                .map_err(|p| format!("store seed={seed} iter={i}: compact panicked: {p}"))?
+                .map_err(|e| format!("store seed={seed} iter={i}: compact failed: {e:#}"))?;
+            let healed = shielded(|| CacheStore::open(&dir))
+                .map_err(|p| format!("store seed={seed} iter={i}: reopen panicked: {p}"))?;
+            if !healed.warnings.is_empty() {
+                return Err(format!(
+                    "store seed={seed} iter={i} victim={victim}: save+compact did not heal: {:?}",
+                    healed.warnings
+                ));
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(out)
+}
+
+/// Run all four harnesses at `scale`× the fast-tier budget (scale 1 =
+/// 15 000 inputs total, past the 10k acceptance gate). Returns per-
 /// target outcomes or the first failure with its replay coordinates.
 pub fn run(seed: u64, scale: u64) -> Result<Vec<FuzzOutcome>, String> {
     hushed(|| {
@@ -441,6 +617,7 @@ pub fn run(seed: u64, scale: u64) -> Result<Vec<FuzzOutcome>, String> {
             fuzz_json(seed, 6_000 * scale)?,
             fuzz_onnx(seed, 3_000 * scale)?,
             fuzz_cache(seed, 3_000 * scale)?,
+            fuzz_store(seed, 3_000 * scale)?,
         ])
     })
 }
@@ -469,6 +646,23 @@ mod tests {
         let out = hushed(|| fuzz_cache(7, 600)).expect("no panics");
         assert_eq!(out.inputs, 600);
         assert!(out.rejected > 0, "mutations must produce invalid docs");
+    }
+
+    #[test]
+    fn store_harness_accepts_and_rejects() {
+        let out = hushed(|| fuzz_store(7, 300)).expect("no panics");
+        assert_eq!(out.inputs, 300);
+        assert!(out.accepted > 0, "the intact-directory path must accept");
+        assert!(out.rejected > 0, "hostile manifests/shards must reject");
+    }
+
+    #[test]
+    fn store_template_is_itself_valid() {
+        let t = store_template().unwrap();
+        assert!(t.manifest.contains("cnn2gate-store"));
+        assert!(t.base.lines().count() >= 3, "header + 2 entries");
+        assert!(!t.delta.is_empty() && t.delta.ends_with('\n'));
+        assert_eq!(t.base_name.replace(".jsonl", ".delta.jsonl"), t.delta_name);
     }
 
     #[test]

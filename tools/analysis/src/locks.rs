@@ -35,6 +35,7 @@ pub const SCOPED_FILES: &[&str] = &[
     "coordinator/scheduler.rs",
     "coordinator/service/orchestrator.rs",
     "dse/eval.rs",
+    "dse/store.rs",
 ];
 
 /// One declared lock: a canonical name plus the receiver spellings that

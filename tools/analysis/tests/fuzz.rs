@@ -1,13 +1,14 @@
-//! Fuzz tiers. The fast tier runs the full acceptance budget (12 000
-//! hostile inputs across the three targets) on every `cargo test -p
+//! Fuzz tiers. The fast tier runs the full acceptance budget (15 000
+//! hostile inputs across the four targets) on every `cargo test -p
 //! analysis`; the long tier multiplies it 10× and is `#[ignore]`d —
 //! run it with `cargo test -p analysis -- --ignored fuzz_long`.
 
 #[test]
-fn fuzz_fast_tier_12k_inputs_no_panics() {
+fn fuzz_fast_tier_15k_inputs_no_panics() {
     let outcomes = analysis::fuzz::run(0xF00D, 1).expect("fuzz failure");
     let total: u64 = outcomes.iter().map(|o| o.inputs).sum();
     assert!(total >= 10_000, "acceptance gate: >=10k inputs, got {total}");
+    assert_eq!(outcomes.len(), 4, "json, onnx, cache AND store targets");
     for o in &outcomes {
         assert!(
             o.rejected > 0,
@@ -20,8 +21,8 @@ fn fuzz_fast_tier_12k_inputs_no_panics() {
 
 #[test]
 #[ignore = "10x budget; run with --ignored"]
-fn fuzz_long_tier_120k_inputs_no_panics() {
+fn fuzz_long_tier_150k_inputs_no_panics() {
     let outcomes = analysis::fuzz::run(0xF00D_F00D, 10).expect("fuzz failure");
     let total: u64 = outcomes.iter().map(|o| o.inputs).sum();
-    assert_eq!(total, 120_000);
+    assert_eq!(total, 150_000);
 }
