@@ -26,6 +26,7 @@ fn main() {
         groups: 6,
         red_steps: 100,
         bytes_per_step: 48,
+        feed2_bytes_per_step: 0,
         ddr_bytes_per_cycle: 40.0,
         out_bytes: 32,
         batch: 1,

@@ -1,0 +1,148 @@
+//! Branched-family gates — the PR-10 perf fence for the DAG-aware
+//! fused-round IR: ResNet-class residual joins and MobileNet-class
+//! depthwise/separable stacks through the cycle-accurate stepper.
+//!
+//! Three tiers:
+//!
+//! * structure: resnet18 extracts as a DAG with its 8 residual
+//!   Add-merge rounds, mobilenetv1 as a linear chain of 13 depthwise +
+//!   pointwise pairs;
+//! * bit-identity + the skip-ahead gate: EVERY resnet18 fused round —
+//!   including the dual-feed Add rounds — stepped by the skip-ahead
+//!   engine must match the naive per-cycle oracle field-for-field, and
+//!   the skip-ahead pass over the whole network must run ≥ 10x faster
+//!   than the oracle pass (wall clock);
+//! * serving: both branched families produce a finite stepped-full
+//!   frames/s, and the Add rounds' per-feed starvation census is
+//!   populated (one read port alternating two feeds starves the
+//!   lagging branch deterministically).
+//!
+//! Writes `BENCH_PR10.json` for cross-commit comparison via
+//! `tools/perf_compare.sh`. Gated metrics are deterministic model
+//! outputs (cycles, frames/s, round counts); the measured oracle wall
+//! ratio is recorded under a key the compare treats as informational,
+//! so runner noise cannot flake the fence.
+
+mod common;
+
+use cnn2gate::estimator::device::ARRIA_10_GX1150;
+use cnn2gate::estimator::estimate;
+use cnn2gate::ir::{ComputationFlow, LayerKind};
+use cnn2gate::onnx::zoo;
+use cnn2gate::sim::{network_round_work, step_network, step_round, step_round_reference};
+use cnn2gate::util::json::{Json, JsonObj};
+use common::Harness;
+use std::time::Instant;
+
+fn main() {
+    let mut h = Harness::new();
+
+    // -- structure tier ------------------------------------------------
+    let res = ComputationFlow::extract(&zoo::build("resnet18", false).unwrap()).unwrap();
+    let mob = ComputationFlow::extract(&zoo::build("mobilenetv1", false).unwrap()).unwrap();
+    h.check(!res.is_linear_chain(), "resnet18 extracts as a DAG");
+    let adds = res
+        .layers
+        .iter()
+        .filter(|l| matches!(l.kind, LayerKind::Add { .. }))
+        .count();
+    h.check(adds == 8, &format!("resnet18 carries 8 residual Add rounds (got {adds})"));
+    h.check(
+        res.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Add { .. }))
+            .all(|l| l.producers.len() == 2),
+        "every Add round reads two producer rounds",
+    );
+    let depthwise = mob.layers.iter().filter(|l| l.is_depthwise()).count();
+    h.check(
+        depthwise == 13,
+        &format!("mobilenetv1 carries 13 depthwise rounds (got {depthwise})"),
+    );
+    h.check(mob.is_linear_chain(), "mobilenetv1 stays a linear chain (no joins)");
+
+    // -- bit-identity + the ≥10x skip-ahead gate -----------------------
+    let (ni, nl) = (16, 32);
+    let est = estimate(&res, &ARRIA_10_GX1150, ni, nl);
+    let rounds = network_round_work(&res, &ARRIA_10_GX1150, est.fmax_mhz, ni, nl);
+
+    let t0 = Instant::now();
+    let skip: Vec<_> = rounds.iter().map(step_round).collect();
+    let skip_wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let oracle: Vec<_> = rounds.iter().map(step_round_reference).collect();
+    let oracle_wall = t0.elapsed().as_secs_f64();
+
+    let mut identical = true;
+    for (i, (s, o)) in skip.iter().zip(&oracle).enumerate() {
+        if s != o {
+            identical = false;
+            println!("  round {i} diverges:\n    skip   {s:?}\n    oracle {o:?}");
+        }
+    }
+    h.check(
+        identical,
+        "skip-ahead census bit-identical to the per-cycle oracle on all resnet18 rounds",
+    );
+    let ratio = oracle_wall / skip_wall.max(1e-12);
+    println!(
+        "  resnet18 full network: skip-ahead {:.3} ms, oracle {:.1} ms ({ratio:.0}x)",
+        skip_wall * 1e3,
+        oracle_wall * 1e3
+    );
+    h.check(
+        ratio >= 10.0,
+        &format!("skip-ahead {ratio:.0}x >= 10x faster than the oracle on resnet18"),
+    );
+    h.bench("stepped_full/resnet18_skip_ahead", 20, || {
+        rounds.iter().map(step_round).collect::<Vec<_>>()
+    });
+
+    // -- serving tier --------------------------------------------------
+    let res_net = step_network(&res, &ARRIA_10_GX1150, est.fmax_mhz, ni, nl);
+    let mob_est = estimate(&mob, &ARRIA_10_GX1150, ni, nl);
+    let mob_net = step_network(&mob, &ARRIA_10_GX1150, mob_est.fmax_mhz, ni, nl);
+    println!(
+        "  stepped-full serving: resnet18 {:.1} frames/s, mobilenetv1 {:.1} frames/s",
+        res_net.frames_per_s(),
+        mob_net.frames_per_s()
+    );
+    h.check(res_net.frames_per_s() > 0.0, "resnet18 serves finite stepped-full frames/s");
+    h.check(mob_net.frames_per_s() > 0.0, "mobilenetv1 serves finite stepped-full frames/s");
+    let add_feed_stalls: u64 = res
+        .layers
+        .iter()
+        .zip(&res_net.layers)
+        .filter(|(l, _)| matches!(l.kind, LayerKind::Add { .. }))
+        .map(|(_, s)| s.feed_a_empty_stalls + s.feed_b_empty_stalls)
+        .sum();
+    h.check(
+        add_feed_stalls > 0,
+        "Add rounds record per-feed starvation (one port, two feeds)",
+    );
+
+    // machine-readable PR-10 perf record — every gated metric is a
+    // deterministic model output; the wall ratio rides along under an
+    // informational key
+    {
+        let mut doc = JsonObj::new();
+        doc.insert("format", "cnn2gate-bench-pr10".into());
+        let mut resnet = JsonObj::new();
+        resnet.insert("add_rounds", adds.into());
+        resnet.insert("total_cycles", (res_net.total_cycles() as f64).into());
+        resnet.insert("frames_per_s", res_net.frames_per_s().into());
+        resnet.insert("add_feed_stalls", (add_feed_stalls as f64).into());
+        doc.insert("resnet18", Json::Obj(resnet));
+        let mut mobilenet = JsonObj::new();
+        mobilenet.insert("depthwise_rounds", depthwise.into());
+        mobilenet.insert("total_cycles", (mob_net.total_cycles() as f64).into());
+        mobilenet.insert("frames_per_s", mob_net.frames_per_s().into());
+        doc.insert("mobilenetv1", Json::Obj(mobilenet));
+        doc.insert("oracle_vs_skip_wall_ratio", ratio.into());
+        let path = std::path::Path::new("BENCH_PR10.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).unwrap();
+        println!("perf record written to {}", path.display());
+    }
+
+    h.finish();
+}

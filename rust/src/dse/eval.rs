@@ -606,7 +606,7 @@ pub(crate) fn js(v: &Json, key: &str) -> Result<String, String> {
         .ok_or_else(|| format!("missing string '{key}'"))
 }
 
-fn step_ints(s: &StepReport) -> [u64; 7] {
+fn step_ints(s: &StepReport) -> [u64; 9] {
     [
         s.cycles,
         s.rd_busy,
@@ -615,6 +615,8 @@ fn step_ints(s: &StepReport) -> [u64; 7] {
         s.rd_to_conv_full_stalls,
         s.conv_to_wr_full_stalls,
         s.conv_empty_stalls,
+        s.feed_a_empty_stalls,
+        s.feed_b_empty_stalls,
     ]
 }
 
@@ -778,6 +780,15 @@ fn step_to_json(s: &StepReport) -> Json {
     o.insert("rd_to_conv_full_stalls", Json::Num(s.rd_to_conv_full_stalls as f64));
     o.insert("conv_to_wr_full_stalls", Json::Num(s.conv_to_wr_full_stalls as f64));
     o.insert("conv_empty_stalls", Json::Num(s.conv_empty_stalls as f64));
+    // per-feed starvation attribution only exists on multi-producer
+    // (Add-merge) rounds; emitting the fields only when nonzero keeps
+    // every linear-chain census byte-identical to its pre-branch form
+    if s.feed_a_empty_stalls != 0 {
+        o.insert("feed_a_empty_stalls", Json::Num(s.feed_a_empty_stalls as f64));
+    }
+    if s.feed_b_empty_stalls != 0 {
+        o.insert("feed_b_empty_stalls", Json::Num(s.feed_b_empty_stalls as f64));
+    }
     Json::Obj(o)
 }
 
@@ -790,6 +801,9 @@ fn step_from_json(v: &Json) -> Result<StepReport, String> {
         rd_to_conv_full_stalls: ju(v, "rd_to_conv_full_stalls")?,
         conv_to_wr_full_stalls: ju(v, "conv_to_wr_full_stalls")?,
         conv_empty_stalls: ju(v, "conv_empty_stalls")?,
+        // absent on single-feed rounds and in every pre-v5 census
+        feed_a_empty_stalls: v.get("feed_a_empty_stalls").as_usize().unwrap_or(0) as u64,
+        feed_b_empty_stalls: v.get("feed_b_empty_stalls").as_usize().unwrap_or(0) as u64,
     })
 }
 

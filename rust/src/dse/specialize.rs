@@ -134,6 +134,17 @@ impl SpecializationReport {
         self.specialized_millis() / self.batch.max(1) as f64
     }
 
+    /// Specialized steady-state throughput in frames per second — the
+    /// serving-facing payoff figure: batch frames delivered per batch
+    /// makespan at the report's kernel clock.
+    pub fn specialized_frames_per_s(&self) -> f64 {
+        let ms = self.specialized_millis();
+        if ms <= 0.0 {
+            return 0.0;
+        }
+        1e3 * self.batch.max(1) as f64 / ms
+    }
+
     /// How many rounds the pass actually changed.
     pub fn specialized_rounds(&self) -> usize {
         self.layers.iter().filter(|l| l.specialized()).count()
@@ -250,7 +261,14 @@ pub fn specialize(
                 // it is what the flow already runs, padding included
                 if (ni, nl) != uniform_opt {
                     let conv = layer.is_conv();
-                    if conv && Some(li) != first_conv && layer.reduction_dim() % ni != 0 {
+                    // depthwise rounds reduce over k² alone, which no
+                    // power-of-two N_i divides — they pad via div_ceil
+                    // like FC rounds, so the divisor filter exempts them
+                    if conv
+                        && Some(li) != first_conv
+                        && !layer.is_depthwise()
+                        && layer.reduction_dim() % ni != 0
+                    {
                         continue;
                     }
                     if conv && layer.out_features() % nl != 0 {
@@ -432,6 +450,13 @@ mod tests {
             (rep16.specialized_millis_per_frame() - rep16.specialized_millis() / 16.0).abs()
                 < 1e-12
         );
+        // frames/s is the same figure inverted: batch frames per batch
+        // makespan, and batching must beat single-frame throughput
+        assert!(
+            (rep16.specialized_frames_per_s() - 1e3 * 16.0 / rep16.specialized_millis()).abs()
+                < 1e-9
+        );
+        assert!(rep16.specialized_frames_per_s() > rep1.specialized_frames_per_s());
         // determinism holds at B=16 too
         let again = specialize(&flow, &ARRIA_10_GX1150, &th, &est, &census16);
         assert_eq!(rep16, again);
@@ -468,6 +493,33 @@ mod tests {
             assert_eq!(rep.fmax_mhz, est.fmax_mhz, "{model} on {}", device.name);
             assert_eq!(rep.envelope_estimate.fmax_mhz, est.fmax_mhz);
             assert!(rep.envelope.0 >= est.ni && rep.envelope.1 >= est.nl);
+        }
+    }
+
+    #[test]
+    fn branched_models_specialize_without_regressions() {
+        // residual Adds (no weights — never slice-resident) and
+        // depthwise rounds (k² reduction — exempt from the N_i divisor
+        // filter) flow through the pass without regressing any round
+        for model in ["tinyres", "mobilenetv1"] {
+            let (flow, est, census) = setup(model, &ARRIA_10_GX1150);
+            // tinyres joins branches; mobilenet's separable stack is a
+            // chain of depthwise rounds with no join
+            assert_eq!(flow.is_linear_chain(), model == "mobilenetv1", "{model}");
+            let rep = specialize(&flow, &ARRIA_10_GX1150, &Thresholds::default(), &est, &census);
+            assert_eq!(rep.layers.len(), flow.layers.len());
+            for (l, layer) in rep.layers.iter().zip(&flow.layers) {
+                assert!(l.cycles <= l.uniform_cycles, "{model}: {} regressed", l.label);
+                if !layer.has_weights() {
+                    assert_eq!(
+                        l.schedule,
+                        WeightSchedule::Streamed,
+                        "{model}: Add rounds carry no weights to pin"
+                    );
+                }
+            }
+            assert!(rep.envelope_estimate.fits(&Thresholds::default()));
+            assert!(rep.specialized_frames_per_s() > 0.0);
         }
     }
 

@@ -7,8 +7,21 @@
 //! on the same lane array with the pool stage passing through
 //! (paper §3.2.3 / §5). AlexNet therefore becomes 5 fused conv/pool
 //! rounds + 3 FC rounds — exactly the 8 bars of the paper's Fig. 6.
+//!
+//! Beyond strict chains, the flow is a **DAG of rounds**: every
+//! [`FusedLayer`] carries the indices of the rounds that produce its
+//! feed streams ([`FusedLayer::producers`]), so residual topologies
+//! (ResNet basic blocks) become [`LayerKind::Add`] merge rounds with two
+//! producers, and depthwise convolutions (MobileNet separable stacks)
+//! become [`LayerKind::DepthwiseConvPool`] rounds whose reduction dim is
+//! the k×k window alone. Linear chains extract exactly as before: each
+//! round's producer list is `[index - 1]` (empty for the input round)
+//! and the fingerprint folds the same words, so AlexNet/VGG cache keys
+//! and goldens are byte-identical to the chain-era extractor.
 
-use super::graph::Graph;
+use std::collections::HashMap;
+
+use super::graph::{Graph, Node};
 use super::ops::{ConvAttrs, Op, PoolAttrs};
 use super::shape::{infer_shapes, ShapeError};
 
@@ -26,6 +39,26 @@ pub enum LayerKind {
         /// Spatial size after the (optional) pool stage.
         out_hw: (usize, usize),
     },
+    /// Depthwise conv round (`groups == cin == cout`): each channel is
+    /// convolved with its own k×k filter, so the lane array reduces over
+    /// the window alone and the weight tensor is `channels·k²`.
+    DepthwiseConvPool {
+        conv: ConvAttrs,
+        channels: usize,
+        in_hw: (usize, usize),
+        conv_out_hw: (usize, usize),
+        relu: bool,
+        pool: Option<PoolAttrs>,
+        out_hw: (usize, usize),
+    },
+    /// Element-wise residual join on the write-back path: two producer
+    /// rounds feed one round that adds them (and optionally applies the
+    /// trailing Relu) — no weights, reduction dim 1.
+    Add {
+        channels: usize,
+        hw: (usize, usize),
+        relu: bool,
+    },
     Fc {
         in_features: usize,
         out_features: usize,
@@ -37,12 +70,18 @@ pub enum LayerKind {
 #[derive(Debug, Clone, PartialEq)]
 pub struct FusedLayer {
     pub index: usize,
+    /// Round indices producing this round's feed streams, in feed order
+    /// (an [`LayerKind::Add`] round lists feed A then feed B). Empty
+    /// means the round reads the graph input; a linear chain is
+    /// `[index - 1]`.
+    pub producers: Vec<usize>,
     pub kind: LayerKind,
 }
 
 impl FusedLayer {
     /// Multiply-accumulates in this round (the conv/FC dominates; pool
-    /// comparisons are not MACs).
+    /// comparisons are not MACs, the Add's element-wise sums count one
+    /// op per element).
     pub fn macs(&self) -> u64 {
         match &self.kind {
             LayerKind::ConvPool {
@@ -52,9 +91,20 @@ impl FusedLayer {
                 conv_out_hw,
                 ..
             } => {
-                (conv_out_hw.0 * conv_out_hw.1 * cout * cin * conv.kernel[0] * conv.kernel[1])
+                (conv_out_hw.0 * conv_out_hw.1 * cout * (cin / conv.groups)
+                    * conv.kernel[0]
+                    * conv.kernel[1]) as u64
+            }
+            LayerKind::DepthwiseConvPool {
+                conv,
+                channels,
+                conv_out_hw,
+                ..
+            } => {
+                (conv_out_hw.0 * conv_out_hw.1 * channels * conv.kernel[0] * conv.kernel[1])
                     as u64
             }
+            LayerKind::Add { channels, hw, .. } => (channels * hw.0 * hw.1) as u64,
             LayerKind::Fc {
                 in_features,
                 out_features,
@@ -63,13 +113,16 @@ impl FusedLayer {
         }
     }
 
-    /// Reduction-dimension length fed to the lane array (Cin*KH*KW for
-    /// conv rounds, K for FC rounds) — the axis the `N_i` vectors tile.
+    /// Reduction-dimension length fed to the lane array (Cin/g·KH·KW for
+    /// conv rounds, KH·KW for depthwise rounds, K for FC rounds, 1 for
+    /// Add merges) — the axis the `N_i` vectors tile.
     pub fn reduction_dim(&self) -> usize {
         match &self.kind {
-            LayerKind::ConvPool {
-                conv, cin, ..
-            } => cin * conv.kernel[0] * conv.kernel[1],
+            LayerKind::ConvPool { conv, cin, .. } => {
+                (cin / conv.groups) * conv.kernel[0] * conv.kernel[1]
+            }
+            LayerKind::DepthwiseConvPool { conv, .. } => conv.kernel[0] * conv.kernel[1],
+            LayerKind::Add { .. } => 1,
             LayerKind::Fc { in_features, .. } => *in_features,
         }
     }
@@ -78,6 +131,8 @@ impl FusedLayer {
     pub fn out_features(&self) -> usize {
         match &self.kind {
             LayerKind::ConvPool { cout, .. } => *cout,
+            LayerKind::DepthwiseConvPool { channels, .. } => *channels,
+            LayerKind::Add { channels, .. } => *channels,
             LayerKind::Fc { out_features, .. } => *out_features,
         }
     }
@@ -86,16 +141,23 @@ impl FusedLayer {
     pub fn out_pixels(&self) -> usize {
         match &self.kind {
             LayerKind::ConvPool { conv_out_hw, .. } => conv_out_hw.0 * conv_out_hw.1,
+            LayerKind::DepthwiseConvPool { conv_out_hw, .. } => conv_out_hw.0 * conv_out_hw.1,
+            LayerKind::Add { hw, .. } => hw.0 * hw.1,
             LayerKind::Fc { .. } => 1,
         }
     }
 
-    /// Weight elements this round streams from memory.
+    /// Weight elements this round streams from memory (grouped convs
+    /// scale by 1/groups; Add merges carry none).
     pub fn weight_elems(&self) -> usize {
         match &self.kind {
             LayerKind::ConvPool {
                 conv, cin, cout, ..
-            } => cout * cin * conv.kernel[0] * conv.kernel[1] + cout,
+            } => cout * (cin / conv.groups) * conv.kernel[0] * conv.kernel[1] + cout,
+            LayerKind::DepthwiseConvPool { conv, channels, .. } => {
+                channels * conv.kernel[0] * conv.kernel[1] + channels
+            }
+            LayerKind::Add { .. } => 0,
             LayerKind::Fc {
                 in_features,
                 out_features,
@@ -104,10 +166,15 @@ impl FusedLayer {
         }
     }
 
-    /// Input activation elements this round reads.
+    /// Input activation elements this round reads (an Add reads both
+    /// operand streams).
     pub fn input_elems(&self) -> usize {
         match &self.kind {
             LayerKind::ConvPool { cin, in_hw, .. } => cin * in_hw.0 * in_hw.1,
+            LayerKind::DepthwiseConvPool {
+                channels, in_hw, ..
+            } => channels * in_hw.0 * in_hw.1,
+            LayerKind::Add { channels, hw, .. } => 2 * channels * hw.0 * hw.1,
             LayerKind::Fc { in_features, .. } => *in_features,
         }
     }
@@ -116,12 +183,55 @@ impl FusedLayer {
     pub fn output_elems(&self) -> usize {
         match &self.kind {
             LayerKind::ConvPool { cout, out_hw, .. } => cout * out_hw.0 * out_hw.1,
+            LayerKind::DepthwiseConvPool {
+                channels, out_hw, ..
+            } => channels * out_hw.0 * out_hw.1,
+            LayerKind::Add { channels, hw, .. } => channels * hw.0 * hw.1,
             LayerKind::Fc { out_features, .. } => *out_features,
         }
     }
 
     pub fn is_conv(&self) -> bool {
-        matches!(self.kind, LayerKind::ConvPool { .. })
+        matches!(
+            self.kind,
+            LayerKind::ConvPool { .. } | LayerKind::DepthwiseConvPool { .. }
+        )
+    }
+
+    /// Depthwise rounds reduce over k² alone (9 for the ubiquitous 3×3),
+    /// which no power-of-two `N_i` divides — the divisor constraints and
+    /// the specialization pass both exempt them (padding via `div_ceil`,
+    /// as FC rounds always have).
+    pub fn is_depthwise(&self) -> bool {
+        matches!(self.kind, LayerKind::DepthwiseConvPool { .. })
+    }
+
+    /// Whether the round streams a weight tensor (everything except the
+    /// Add merge) — gates weight DDR traffic and the slice-resident
+    /// schedule.
+    pub fn has_weights(&self) -> bool {
+        !matches!(self.kind, LayerKind::Add { .. })
+    }
+
+    /// Whether this round's feed wiring is the linear-chain default:
+    /// round 0 reads the graph input, round i reads round i-1.
+    pub fn linear_producers(&self) -> bool {
+        if self.index == 0 {
+            self.producers.is_empty()
+        } else {
+            self.producers.as_slice() == [self.index - 1]
+        }
+    }
+
+    /// Structural kind tag for the fingerprint: 0 for the chain-era
+    /// kinds (dense conv, FC), nonzero for the branch-family extensions.
+    fn kind_tag(&self) -> u64 {
+        match &self.kind {
+            LayerKind::ConvPool { conv, .. } => u64::from(conv.groups > 1),
+            LayerKind::DepthwiseConvPool { .. } => 2,
+            LayerKind::Add { .. } => 3,
+            LayerKind::Fc { .. } => 0,
+        }
     }
 
     /// Human-readable round label ("L2 conv+pool", "L6 fc") — shared by
@@ -136,6 +246,14 @@ impl FusedLayer {
                     format!("L{} conv", self.index + 1)
                 }
             }
+            LayerKind::DepthwiseConvPool { pool, .. } => {
+                if pool.is_some() {
+                    format!("L{} dwconv+pool", self.index + 1)
+                } else {
+                    format!("L{} dwconv", self.index + 1)
+                }
+            }
+            LayerKind::Add { .. } => format!("L{} add", self.index + 1),
             LayerKind::Fc { .. } => format!("L{} fc", self.index + 1),
         }
     }
@@ -152,10 +270,36 @@ pub struct ComputationFlow {
 
 impl ComputationFlow {
     /// Extract from a validated, shape-inferred graph.
+    ///
+    /// Fusion safety on a DAG: a trailing Relu/MaxPool folds into the
+    /// producing round only when it is the *sole* consumer of that
+    /// round's output (first input, consumer count 1, not the graph
+    /// output) — on a residual branch the pre-activation tensor also
+    /// feeds the skip Add, so it must stay a round boundary. Linear
+    /// chains satisfy the condition trivially and fuse exactly as the
+    /// chain-era extractor did.
     pub fn extract(g: &Graph) -> Result<ComputationFlow, ShapeError> {
         g.validate().map_err(ShapeError)?;
         let shapes = infer_shapes(g)?;
-        let mut layers = Vec::new();
+        // consumer counts decide fusion safety; origin maps a tensor
+        // name to the round that produces it (None: the graph input)
+        let mut consumers: HashMap<&str, usize> = HashMap::new();
+        for node in &g.nodes {
+            for input in &node.inputs {
+                *consumers.entry(input.as_str()).or_insert(0) += 1;
+            }
+        }
+        let fusable = |out: &str, next: &Node| -> bool {
+            next.inputs.first().map(String::as_str) == Some(out)
+                && consumers.get(out).copied().unwrap_or(0) == 1
+                && out != g.output_name
+        };
+        let mut origin: HashMap<String, Option<usize>> = HashMap::new();
+        origin.insert(g.input_name.clone(), None);
+        let feed = |origin: &HashMap<String, Option<usize>>, names: &[&String]| -> Vec<usize> {
+            names.iter().filter_map(|n| origin.get(n.as_str()).copied().flatten()).collect()
+        };
+        let mut layers: Vec<FusedLayer> = Vec::new();
         let mut has_softmax = false;
         let mut i = 0;
         while i < g.nodes.len() {
@@ -167,27 +311,43 @@ impl ComputationFlow {
                     let conv_out = &shapes[&node.outputs[0]];
                     let cout = conv_out.shape[0];
                     let conv_out_hw = (conv_out.shape[1], conv_out.shape[2]);
+                    let producers = feed(&origin, &[&node.inputs[0]]);
                     let mut relu = false;
                     let mut pool = None;
                     let mut out_hw = conv_out_hw;
+                    let mut out_name = &node.outputs[0];
                     let mut j = i + 1;
                     if let Some(n) = g.nodes.get(j) {
-                        if matches!(n.op, Op::Relu) {
+                        if matches!(n.op, Op::Relu) && fusable(out_name, n) {
                             relu = true;
+                            out_name = &n.outputs[0];
                             j += 1;
                         }
                     }
                     if let Some(n) = g.nodes.get(j) {
                         if let Op::MaxPool(pattrs) = &n.op {
-                            pool = Some(*pattrs);
-                            let po = &shapes[&n.outputs[0]];
-                            out_hw = (po.shape[1], po.shape[2]);
-                            j += 1;
+                            if fusable(out_name, n) {
+                                pool = Some(*pattrs);
+                                let po = &shapes[&n.outputs[0]];
+                                out_hw = (po.shape[1], po.shape[2]);
+                                out_name = &n.outputs[0];
+                                j += 1;
+                            }
                         }
                     }
-                    layers.push(FusedLayer {
-                        index: layers.len(),
-                        kind: LayerKind::ConvPool {
+                    let index = layers.len();
+                    let kind = if attrs.groups == cin && cout == cin {
+                        LayerKind::DepthwiseConvPool {
+                            conv: *attrs,
+                            channels: cin,
+                            in_hw: (h, w),
+                            conv_out_hw,
+                            relu,
+                            pool,
+                            out_hw,
+                        }
+                    } else {
+                        LayerKind::ConvPool {
                             conv: *attrs,
                             cin,
                             cout,
@@ -196,19 +356,26 @@ impl ComputationFlow {
                             relu,
                             pool,
                             out_hw,
-                        },
+                        }
+                    };
+                    layers.push(FusedLayer {
+                        index,
+                        producers,
+                        kind,
                     });
+                    origin.insert(out_name.clone(), Some(index));
                     i = j;
                 }
                 Op::MaxPool(pattrs) => {
-                    // standalone pool (no preceding conv): model it as a
-                    // pass-through conv round with a 1x1 identity — rare,
-                    // but keeps the flow total.
+                    // standalone pool (no preceding fusable conv): model
+                    // it as a pass-through conv round with a 1x1 identity
                     let x = &shapes[&node.inputs[0]];
                     let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
                     let po = &shapes[&node.outputs[0]];
+                    let index = layers.len();
                     layers.push(FusedLayer {
-                        index: layers.len(),
+                        index,
+                        producers: feed(&origin, &[&node.inputs[0]]),
                         kind: LayerKind::ConvPool {
                             conv: ConvAttrs::unit([1, 1]),
                             cin: c,
@@ -220,36 +387,103 @@ impl ComputationFlow {
                             out_hw: (po.shape[1], po.shape[2]),
                         },
                     });
+                    origin.insert(node.outputs[0].clone(), Some(index));
                     i += 1;
+                }
+                Op::GlobalAveragePool => {
+                    // spatial mean over the full plane: a pass-through
+                    // conv round whose pool window is the whole (h, w)
+                    let x = &shapes[&node.inputs[0]];
+                    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+                    let index = layers.len();
+                    layers.push(FusedLayer {
+                        index,
+                        producers: feed(&origin, &[&node.inputs[0]]),
+                        kind: LayerKind::ConvPool {
+                            conv: ConvAttrs::unit([1, 1]),
+                            cin: c,
+                            cout: c,
+                            in_hw: (h, w),
+                            conv_out_hw: (h, w),
+                            relu: false,
+                            pool: Some(PoolAttrs {
+                                kernel: [h, w],
+                                strides: [h.max(1), w.max(1)],
+                                pads: [0, 0],
+                                dilations: [1, 1],
+                            }),
+                            out_hw: (1, 1),
+                        },
+                    });
+                    origin.insert(node.outputs[0].clone(), Some(index));
+                    i += 1;
+                }
+                Op::Add => {
+                    let x = &shapes[&node.inputs[0]];
+                    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+                    let producers = feed(&origin, &[&node.inputs[0], &node.inputs[1]]);
+                    let mut relu = false;
+                    let mut out_name = &node.outputs[0];
+                    let mut j = i + 1;
+                    if let Some(n) = g.nodes.get(j) {
+                        if matches!(n.op, Op::Relu) && fusable(out_name, n) {
+                            relu = true;
+                            out_name = &n.outputs[0];
+                            j += 1;
+                        }
+                    }
+                    let index = layers.len();
+                    layers.push(FusedLayer {
+                        index,
+                        producers,
+                        kind: LayerKind::Add {
+                            channels: c,
+                            hw: (h, w),
+                            relu,
+                        },
+                    });
+                    origin.insert(out_name.clone(), Some(index));
+                    i = j;
                 }
                 Op::Gemm { .. } => {
                     let x = &shapes[&node.inputs[0]];
                     let out = &shapes[&node.outputs[0]];
+                    let producers = feed(&origin, &[&node.inputs[0]]);
                     let mut relu = false;
+                    let mut out_name = &node.outputs[0];
                     let mut j = i + 1;
                     if let Some(n) = g.nodes.get(j) {
-                        if matches!(n.op, Op::Relu) {
+                        if matches!(n.op, Op::Relu) && fusable(out_name, n) {
                             relu = true;
+                            out_name = &n.outputs[0];
                             j += 1;
                         }
                     }
+                    let index = layers.len();
                     layers.push(FusedLayer {
-                        index: layers.len(),
+                        index,
+                        producers,
                         kind: LayerKind::Fc {
                             in_features: x.shape[0],
                             out_features: out.shape[0],
                             relu,
                         },
                     });
+                    origin.insert(out_name.clone(), Some(index));
                     i = j;
                 }
                 Op::Softmax => {
                     has_softmax = true;
+                    let o = origin.get(node.inputs[0].as_str()).copied().flatten();
+                    origin.insert(node.outputs[0].clone(), o);
                     i += 1;
                 }
                 Op::Flatten | Op::Relu => {
                     // Flatten is free (address remap); a Relu that was not
                     // fused above is element-wise on the write-back path.
+                    // Both alias their producer for downstream feeds.
+                    let o = origin.get(node.inputs[0].as_str()).copied().flatten();
+                    origin.insert(node.outputs[0].clone(), o);
                     i += 1;
                 }
             }
@@ -272,18 +506,30 @@ impl ComputationFlow {
     }
 
     pub fn fc_rounds(&self) -> usize {
-        self.layers.len() - self.conv_rounds()
+        self.layers.iter().filter(|l| matches!(l.kind, LayerKind::Fc { .. })).count()
+    }
+
+    /// Whether the flow is a chain-era linear pipeline: every round's
+    /// feed wiring is `[index - 1]` and no branch-family round kinds
+    /// (Add merges, depthwise convs, grouped convs) appear. Linear flows
+    /// take the exact code paths — and produce the exact bytes — of the
+    /// pre-DAG extractor.
+    pub fn is_linear_chain(&self) -> bool {
+        self.layers.iter().all(|l| l.linear_producers() && l.kind_tag() == 0)
     }
 
     /// Reduction dims of every conv round except the first (the input
     /// round is zero-padded by the host, PipeCNN-style) — the `N_i`
-    /// divisor constraint of paper §4.2.
+    /// divisor constraint of paper §4.2. Depthwise rounds are exempt:
+    /// their k² reduction admits no power-of-two divisor, so they pad
+    /// via `div_ceil` like FC rounds.
     pub fn ni_constraint_dims(&self) -> Vec<usize> {
+        let first_conv = self.layers.iter().position(|l| l.is_conv());
         self.layers
             .iter()
-            .filter(|l| l.is_conv())
-            .skip(1)
-            .map(|l| l.reduction_dim())
+            .enumerate()
+            .filter(|(i, l)| l.is_conv() && Some(*i) != first_conv && !l.is_depthwise())
+            .map(|(_, l)| l.reduction_dim())
             .collect()
     }
 
@@ -321,7 +567,11 @@ impl ComputationFlow {
     /// Stable structural fingerprint (FNV-1a over the layer census) —
     /// the model component of the [`crate::dse::eval`] cache key. Two
     /// flows with the same name, input shape and per-round dimensions
-    /// hash identically; any structural difference perturbs it.
+    /// hash identically; any structural difference perturbs it. For
+    /// chain-era rounds (dense conv, FC, linear feed wiring) the fold is
+    /// word-for-word the pre-DAG fingerprint, so existing cache entries
+    /// stay valid; branch-family rounds fold an extension record (kind
+    /// tag + producer indices) after their census words.
     pub fn fingerprint(&self) -> u64 {
         use crate::util::hash::{fold_bytes, fold_u64, FNV_OFFSET};
         let mut h = fold_bytes(FNV_OFFSET, self.model_name.as_bytes());
@@ -340,6 +590,17 @@ impl ComputationFlow {
                 l.macs(),
             ] {
                 h = fold_u64(h, word);
+            }
+            let tag = l.kind_tag();
+            if tag != 0 || !l.linear_producers() {
+                // branch-extension record: a marker no census word can
+                // collide with cheaply, then the structural facts
+                h = fold_u64(h, 0xDA6_0F_B0A6C4);
+                h = fold_u64(h, tag);
+                h = fold_u64(h, l.producers.len() as u64);
+                for &p in &l.producers {
+                    h = fold_u64(h, p as u64);
+                }
             }
         }
         h
@@ -416,5 +677,140 @@ mod tests {
             assert!(flow.layers.iter().all(|l| l.macs() > 0));
             assert!(flow.has_softmax);
         }
+    }
+
+    #[test]
+    fn linear_chains_carry_linear_producers() {
+        for name in ["tiny", "lenet5", "alexnet", "vgg16"] {
+            let g = zoo::build(name, false).unwrap();
+            let flow = ComputationFlow::extract(&g).unwrap();
+            assert!(flow.is_linear_chain(), "{name}");
+            for (i, l) in flow.layers.iter().enumerate() {
+                assert!(l.linear_producers(), "{name} L{}", i + 1);
+                if i == 0 {
+                    assert!(l.producers.is_empty());
+                } else {
+                    assert_eq!(l.producers, vec![i - 1]);
+                }
+                assert!(l.has_weights());
+            }
+        }
+    }
+
+    #[test]
+    fn linear_fingerprint_matches_the_chain_era_fold() {
+        // the exact 7-word-per-round fold the pre-DAG extractor used —
+        // linear flows must keep producing its bytes so cache keys and
+        // goldens carry over unchanged
+        use crate::util::hash::{fold_bytes, fold_u64, FNV_OFFSET};
+        for name in ["tiny", "lenet5", "alexnet", "vgg16"] {
+            let flow = ComputationFlow::extract(&zoo::build(name, false).unwrap()).unwrap();
+            let mut h = fold_bytes(FNV_OFFSET, flow.model_name.as_bytes());
+            h = fold_u64(h, flow.input_shape.len() as u64);
+            for &d in &flow.input_shape {
+                h = fold_u64(h, d as u64);
+            }
+            for l in &flow.layers {
+                for word in [
+                    l.is_conv() as u64,
+                    l.reduction_dim() as u64,
+                    l.out_features() as u64,
+                    l.out_pixels() as u64,
+                    l.input_elems() as u64,
+                    l.output_elems() as u64,
+                    l.macs(),
+                ] {
+                    h = fold_u64(h, word);
+                }
+            }
+            assert_eq!(flow.fingerprint(), h, "{name}: linear fingerprint drifted");
+        }
+    }
+
+    #[test]
+    fn resnet18_extracts_a_residual_dag() {
+        let g = zoo::build("resnet18", false).unwrap();
+        let flow = ComputationFlow::extract(&g).unwrap();
+        assert!(!flow.is_linear_chain());
+        let adds: Vec<&FusedLayer> = flow
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Add { .. }))
+            .collect();
+        assert_eq!(adds.len(), 8, "two basic blocks per stage, four stages");
+        for add in &adds {
+            assert_eq!(add.producers.len(), 2, "{}", add.label());
+            assert!(add.producers.iter().all(|&p| p < add.index));
+            assert_eq!(add.reduction_dim(), 1);
+            assert!(!add.has_weights());
+            assert_eq!(add.input_elems(), 2 * add.output_elems());
+            match &add.kind {
+                LayerKind::Add { relu, .. } => assert!(relu, "block Adds fuse their Relu"),
+                _ => unreachable!(),
+            }
+        }
+        // the pre-Add conv of each block must NOT have fused its
+        // (post-Add) relu, and the skip producer differs from the linear
+        // predecessor on downsample blocks
+        assert!(flow.layers.iter().any(|l| !l.linear_producers()));
+        // (16, 32) style options stay admissible: every constraint dim
+        // is a multiple of 16/32 respectively... the stages are 64-wide
+        for d in flow.ni_constraint_dims() {
+            assert_eq!(d % 16, 0, "N_i=16 must divide {d}");
+        }
+        for d in flow.nl_constraint_dims() {
+            assert_eq!(d % 32, 0, "N_l=32 must divide {d}");
+        }
+    }
+
+    #[test]
+    fn mobilenetv1_extracts_depthwise_rounds() {
+        let g = zoo::build("mobilenetv1", false).unwrap();
+        let flow = ComputationFlow::extract(&g).unwrap();
+        let dw: Vec<&FusedLayer> = flow.layers.iter().filter(|l| l.is_depthwise()).collect();
+        assert_eq!(dw.len(), 13, "13 separable blocks");
+        for l in &dw {
+            assert_eq!(l.reduction_dim(), 9, "depthwise reduces over k² alone");
+            assert!(l.is_conv());
+            assert!(l.has_weights());
+            match &l.kind {
+                LayerKind::DepthwiseConvPool { channels, conv, .. } => {
+                    assert_eq!(l.weight_elems(), channels * 9 + channels);
+                    assert_eq!(conv.groups, *channels);
+                }
+                _ => unreachable!(),
+            }
+        }
+        // depthwise k² = 9 never lands in the ni constraints
+        assert!(flow.ni_constraint_dims().iter().all(|&d| d != 9));
+        // separable stacks stay a linear pipeline (no Adds), just not
+        // chain-era kinds
+        assert!(!flow.is_linear_chain());
+        assert!(flow.layers.iter().all(|l| l.linear_producers()));
+    }
+
+    #[test]
+    fn branch_kinds_perturb_the_fingerprint() {
+        let res = ComputationFlow::extract(&zoo::build("resnet18", false).unwrap()).unwrap();
+        let mobile =
+            ComputationFlow::extract(&zoo::build("mobilenetv1", false).unwrap()).unwrap();
+        let alex = ComputationFlow::extract(&zoo::build("alexnet", false).unwrap()).unwrap();
+        let prints = [res.fingerprint(), mobile.fingerprint(), alex.fingerprint()];
+        assert_eq!(
+            prints.iter().collect::<std::collections::HashSet<_>>().len(),
+            3,
+            "fingerprints must be distinct"
+        );
+        // and rewiring a producer changes the bytes even when the census
+        // words are identical
+        let mut rewired = res.clone();
+        if let Some(add) = rewired
+            .layers
+            .iter_mut()
+            .find(|l| matches!(l.kind, LayerKind::Add { .. }))
+        {
+            add.producers.swap(0, 1);
+        }
+        assert_ne!(rewired.fingerprint(), res.fingerprint());
     }
 }

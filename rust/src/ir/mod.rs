@@ -2,11 +2,18 @@
 //!
 //! The ONNX front-end parses into [`Graph`]; shape inference
 //! ([`shape`]) annotates every edge with its tensor shape using the
-//! paper's output-size equations (3)-(4); [`flow`] then extracts the
-//! *computation flow* — the fused conv(+relu)(+pool) / fully-connected
-//! rounds that the estimator, DSE, simulator and synthesis stages all
-//! consume (paper: "we can merge convolution and pooling layers as one
-//! layer" — AlexNet becomes 5 fused conv/pool rounds + 3 FC rounds).
+//! paper's output-size equations (3)-(4), extended with dilation and
+//! channel groups; [`flow`] then extracts the *computation flow* — a
+//! DAG of fused rounds the estimator, DSE, simulator and synthesis
+//! stages all consume (paper: "we can merge convolution and pooling
+//! layers as one layer" — AlexNet becomes 5 fused conv/pool rounds +
+//! 3 FC rounds). Every [`FusedLayer`] names its producer rounds, so
+//! beyond the linear conv(+relu)(+pool) / FC chains the flow carries
+//! ResNet-class residual [`LayerKind::Add`] merges (two feeds,
+//! trailing Relu fused in) and MobileNet-class
+//! [`LayerKind::DepthwiseConvPool`] rounds (groups == cin); a linear
+//! chain is the special case `producers == [i-1]` and takes an
+//! unchanged code path.
 
 pub mod flow;
 pub mod graph;

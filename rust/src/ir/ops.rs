@@ -1,5 +1,7 @@
 //! Operator set of paper §4.1: Conv, MaxPool, Relu, Gemm, Softmax (+
-//! Flatten, which ONNX inserts before Gemm).
+//! Flatten, which ONNX inserts before Gemm), extended with the
+//! branch-family ops (Add, GlobalAveragePool) and grouped/dilated Conv
+//! that ResNet/MobileNet-class graphs require.
 
 use std::fmt;
 
@@ -44,7 +46,10 @@ impl fmt::Display for DType {
 }
 
 /// Conv attributes exactly as the paper's parser extracts them
-/// ("dilations, pads, kernel shape, and stride").
+/// ("dilations, pads, kernel shape, and stride"), plus ONNX `group`:
+/// `groups == 1` is a dense conv, `groups == cin` a depthwise conv, and
+/// anything between a grouped conv (MACs and weights scale by
+/// `cin·cout/groups·k²`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvAttrs {
     pub kernel: [usize; 2],
@@ -53,6 +58,9 @@ pub struct ConvAttrs {
     /// symmetric by the parser and folded to 2.
     pub pads: [usize; 2],
     pub dilations: [usize; 2],
+    /// ONNX `group`: input channels are split into `groups` slices, each
+    /// convolved with its own `cout/groups` filters.
+    pub groups: usize,
 }
 
 impl ConvAttrs {
@@ -62,6 +70,7 @@ impl ConvAttrs {
             strides: [1, 1],
             pads: [0, 0],
             dilations: [1, 1],
+            groups: 1,
         }
     }
 
@@ -76,13 +85,15 @@ impl ConvAttrs {
     }
 }
 
-/// MaxPool attributes (same fields, no dilation in our zoo but kept for
-/// ONNX parity).
+/// MaxPool attributes. Dilation participates in the output-size
+/// equation exactly as for Conv (a parsed dilated MaxPool must not
+/// silently compute the undilated window).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PoolAttrs {
     pub kernel: [usize; 2],
     pub strides: [usize; 2],
     pub pads: [usize; 2],
+    pub dilations: [usize; 2],
 }
 
 impl PoolAttrs {
@@ -91,7 +102,8 @@ impl PoolAttrs {
             kernel: self.kernel,
             strides: self.strides,
             pads: self.pads,
-            dilations: [1, 1],
+            dilations: self.dilations,
+            groups: 1,
         }
         .out_hw(h, w)
     }
@@ -109,6 +121,10 @@ pub enum Op {
         trans_b: bool,
     },
     Softmax,
+    /// Element-wise residual join of two equal-shape tensors.
+    Add,
+    /// Spatial mean over the full (h, w) plane: [c, h, w] -> [c, 1, 1].
+    GlobalAveragePool,
 }
 
 impl Op {
@@ -120,6 +136,8 @@ impl Op {
             Op::Flatten => "Flatten",
             Op::Gemm { .. } => "Gemm",
             Op::Softmax => "Softmax",
+            Op::Add => "Add",
+            Op::GlobalAveragePool => "GlobalAveragePool",
         }
     }
 }
@@ -131,6 +149,7 @@ pub struct Attrs {
     pub strides: Option<Vec<usize>>,
     pub pads: Option<Vec<usize>>,
     pub dilations: Option<Vec<usize>>,
+    pub group: Option<usize>,
     pub trans_b: Option<bool>,
 }
 
@@ -146,6 +165,7 @@ mod tests {
             strides: [4, 4],
             pads: [2, 2],
             dilations: [1, 1],
+            groups: 1,
         };
         assert_eq!(a.out_hw(224, 224), Some((55, 55)));
         // VGG 3x3 s1 p1 preserves size
@@ -154,6 +174,7 @@ mod tests {
             strides: [1, 1],
             pads: [1, 1],
             dilations: [1, 1],
+            groups: 1,
         };
         assert_eq!(v.out_hw(224, 224), Some((224, 224)));
         // dilation shrinks the effective window
@@ -162,6 +183,7 @@ mod tests {
             strides: [1, 1],
             pads: [0, 0],
             dilations: [2, 2],
+            groups: 1,
         };
         assert_eq!(d.out_hw(10, 10), Some((6, 6)));
     }
@@ -170,6 +192,16 @@ mod tests {
     fn conv_out_none_when_window_exceeds_input() {
         let a = ConvAttrs::unit([7, 7]);
         assert_eq!(a.out_hw(3, 3), None);
+        assert_eq!(a.groups, 1, "unit() is a dense conv");
+    }
+
+    #[test]
+    fn grouped_conv_shares_the_window_math() {
+        // groups only reshapes the weight tensor; the spatial equation
+        // is untouched
+        let mut g = ConvAttrs::unit([3, 3]);
+        g.groups = 4;
+        assert_eq!(g.out_hw(8, 8), ConvAttrs::unit([3, 3]).out_hw(8, 8));
     }
 
     #[test]
@@ -179,8 +211,23 @@ mod tests {
             kernel: [3, 3],
             strides: [2, 2],
             pads: [0, 0],
+            dilations: [1, 1],
         };
         assert_eq!(p.out_hw(55, 55), Some((27, 27)));
+    }
+
+    #[test]
+    fn dilated_pool_shrinks_the_window() {
+        // a dilated MaxPool widens the effective kernel: k3 d2 covers 5
+        let p = PoolAttrs {
+            kernel: [3, 3],
+            strides: [1, 1],
+            pads: [0, 0],
+            dilations: [2, 2],
+        };
+        assert_eq!(p.out_hw(10, 10), Some((6, 6)));
+        // and an oversized dilated window is a shape error, not a wrap
+        assert_eq!(p.out_hw(4, 4), None);
     }
 
     #[test]

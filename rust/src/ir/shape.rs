@@ -49,9 +49,16 @@ pub fn infer_shapes(g: &Graph) -> Result<HashMap<String, TensorInfo>, ShapeError
                 }
                 let (cin, h, win) = (x.shape[0], x.shape[1], x.shape[2]);
                 let (cout, wcin, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
-                if cin != wcin {
+                let groups = attrs.groups;
+                if groups == 0 || cin % groups != 0 || cout % groups != 0 {
                     return Err(ShapeError(format!(
-                        "node {i}: Conv channel mismatch: input Cin={cin}, weight Cin={wcin}"
+                        "node {i}: Conv group={groups} must divide Cin={cin} and Cout={cout}"
+                    )));
+                }
+                if cin / groups != wcin {
+                    return Err(ShapeError(format!(
+                        "node {i}: Conv channel mismatch: input Cin={cin} / group={groups}, \
+                         weight Cin={wcin}"
                     )));
                 }
                 if [kh, kw] != attrs.kernel {
@@ -101,6 +108,30 @@ pub fn infer_shapes(g: &Graph) -> Result<HashMap<String, TensorInfo>, ShapeError
                 }
             }
             Op::Relu | Op::Softmax => get(&node.inputs[0])?.clone(),
+            Op::Add => {
+                let a = get(&node.inputs[0])?;
+                let b = get(&node.inputs[1])?;
+                if a.shape != b.shape {
+                    return Err(ShapeError(format!(
+                        "node {i}: Add operand shapes differ: {:?} vs {:?}",
+                        a.shape, b.shape
+                    )));
+                }
+                a.clone()
+            }
+            Op::GlobalAveragePool => {
+                let x = get(&node.inputs[0])?;
+                if x.shape.len() != 3 {
+                    return Err(ShapeError(format!(
+                        "node {i}: GlobalAveragePool input must be CHW, got {:?}",
+                        x.shape
+                    )));
+                }
+                TensorInfo {
+                    shape: vec![x.shape[0], 1, 1],
+                    dtype: x.dtype,
+                }
+            }
             Op::Flatten => {
                 let x = get(&node.inputs[0])?;
                 TensorInfo {
@@ -206,5 +237,106 @@ mod tests {
         let m = max_activation_elems(&g).unwrap();
         // VGG block1 keeps 224x224 at 64 channels: 3.2M elements
         assert_eq!(m, 64 * 224 * 224);
+    }
+
+    #[test]
+    fn grouped_conv_checks_the_per_group_weight_cin() {
+        use crate::ir::graph::{Initializer, Node};
+        use crate::ir::ops::ConvAttrs;
+        use std::collections::HashMap;
+        let build = |groups: usize, wcin: usize| {
+            let mut attrs = ConvAttrs::unit([3, 3]);
+            attrs.pads = [1, 1];
+            attrs.groups = groups;
+            let mut initializers = HashMap::new();
+            initializers.insert(
+                "w".to_string(),
+                Initializer {
+                    info: TensorInfo {
+                        shape: vec![8, wcin, 3, 3],
+                        dtype: DType::F32,
+                    },
+                    data: None,
+                },
+            );
+            Graph {
+                name: "g".into(),
+                input_name: "input".into(),
+                input: TensorInfo {
+                    shape: vec![8, 6, 6],
+                    dtype: DType::F32,
+                },
+                output_name: "y".into(),
+                nodes: vec![Node {
+                    op: Op::Conv(attrs),
+                    inputs: vec!["input".into(), "w".into()],
+                    outputs: vec!["y".into()],
+                }],
+                initializers,
+            }
+        };
+        // dense: wcin == cin; grouped: wcin == cin/groups; depthwise: 1
+        for (groups, wcin) in [(1, 8), (4, 2), (8, 1)] {
+            let shapes = infer_shapes(&build(groups, wcin)).unwrap();
+            assert_eq!(shapes["y"].shape, vec![8, 6, 6], "groups={groups}");
+        }
+        // wrong per-group Cin, a group that doesn't divide, and group 0
+        assert!(infer_shapes(&build(4, 8)).is_err());
+        assert!(infer_shapes(&build(3, 2)).is_err());
+        assert!(infer_shapes(&build(0, 8)).is_err());
+    }
+
+    #[test]
+    fn add_and_gap_shapes() {
+        use crate::ir::graph::Node;
+        use crate::ir::ops::ConvAttrs;
+        use std::collections::HashMap;
+        // input -> conv(1x1, identity channel count) -> add(input, conv) -> gap
+        let mut initializers = HashMap::new();
+        initializers.insert(
+            "w".to_string(),
+            crate::ir::graph::Initializer {
+                info: TensorInfo {
+                    shape: vec![4, 4, 1, 1],
+                    dtype: DType::F32,
+                },
+                data: None,
+            },
+        );
+        let g = Graph {
+            name: "res".into(),
+            input_name: "input".into(),
+            input: TensorInfo {
+                shape: vec![4, 5, 5],
+                dtype: DType::F32,
+            },
+            output_name: "gap".into(),
+            nodes: vec![
+                Node {
+                    op: Op::Conv(ConvAttrs::unit([1, 1])),
+                    inputs: vec!["input".into(), "w".into()],
+                    outputs: vec!["c".into()],
+                },
+                Node {
+                    op: Op::Add,
+                    inputs: vec!["input".into(), "c".into()],
+                    outputs: vec!["s".into()],
+                },
+                Node {
+                    op: Op::GlobalAveragePool,
+                    inputs: vec!["s".into()],
+                    outputs: vec!["gap".into()],
+                },
+            ],
+            initializers,
+        };
+        let shapes = infer_shapes(&g).unwrap();
+        assert_eq!(shapes["s"].shape, vec![4, 5, 5]);
+        assert_eq!(shapes["gap"].shape, vec![4, 1, 1]);
+        // mismatched Add operands are rejected
+        let mut bad = g.clone();
+        bad.initializers.get_mut("w").unwrap().info.shape = vec![8, 4, 1, 1];
+        let err = infer_shapes(&bad).unwrap_err();
+        assert!(err.0.contains("Add operand shapes differ"), "{err}");
     }
 }

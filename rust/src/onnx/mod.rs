@@ -1,8 +1,13 @@
 //! ONNX front-end: the generalized model-analysis layer of paper §4.1.
 //!
-//! `parser` reads the ONNX-subset exchange files; `zoo` builds the
-//! evaluation topologies programmatically (AlexNet, VGG-16, LeNet-5,
-//! tiny). Both produce the same [`crate::ir::Graph`] IR.
+//! `parser` reads the ONNX-subset exchange files — the operator set
+//! covers {Conv (grouped/dilated included), MaxPool, Relu, Flatten,
+//! Gemm, Softmax, Add, GlobalAveragePool}, so residual and
+//! depthwise/separable graphs parse alongside the linear chains;
+//! `zoo` builds the evaluation topologies programmatically (AlexNet,
+//! VGG-16, LeNet-5, tiny, plus the branched families: resnet18,
+//! mobilenetv1, tinyres). Both produce the same [`crate::ir::Graph`]
+//! IR.
 
 pub mod parser;
 pub mod zoo;

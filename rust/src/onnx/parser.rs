@@ -2,9 +2,12 @@
 //!
 //! Reads the `cnn2gate-onnx-subset-v1` JSON files written by
 //! `python/compile/aot.py` (and by hand, if a user authors one): an
-//! acyclic node list over the operator set {Conv, MaxPool, Relu, Flatten,
-//! Gemm, Softmax}, with initializer tensors stored in an external raw
-//! little-endian sidecar, exactly like ONNX's external-data convention.
+//! acyclic node list over the operator set {Conv (grouped/dilated
+//! included), MaxPool, Relu, Flatten, Gemm, Softmax, Add,
+//! GlobalAveragePool}, with initializer tensors stored in an external
+//! raw little-endian sidecar, exactly like ONNX's external-data
+//! convention. Add takes two activation inputs (the residual join);
+//! everything the DAG flow extractor needs rides the node list as-is.
 //!
 //! The parser extracts the computation data-flow *plus weights and
 //! biases* (paper: "parses the computation dataflow — or the arrangement
@@ -154,6 +157,7 @@ pub fn parse_doc(doc: &Json, raw: Option<&[u8]>) -> Result<Graph> {
         let arity_ok = match &op {
             Op::Conv(_) => inputs.len() == 2 || inputs.len() == 3,
             Op::Gemm { .. } => inputs.len() == 2 || inputs.len() == 3,
+            Op::Add => inputs.len() == 2,
             _ => inputs.len() == 1,
         };
         if !arity_ok {
@@ -200,6 +204,7 @@ fn parse_attrs(a: &Json) -> Attrs {
         strides: a.get("strides").as_usize_vec(),
         pads: a.get("pads").as_usize_vec(),
         dilations: a.get("dilations").as_usize_vec(),
+        group: a.get("group").as_usize(),
         trans_b: a.get("transB").as_i64().map(|v| v != 0),
     }
 }
@@ -236,11 +241,16 @@ fn build_op(op_type: &str, attrs: &Attrs) -> Result<Op> {
                 .as_ref()
                 .ok_or_else(|| anyhow!("Conv missing kernel_shape"))?;
             let kernel = pair(&Some(kernel.clone()), [1, 1], "kernel_shape")?;
+            let groups = attrs.group.unwrap_or(1);
+            if groups == 0 {
+                bail!("Conv group must be >= 1");
+            }
             Op::Conv(ConvAttrs {
                 kernel,
                 strides: pair(&attrs.strides, [1, 1], "strides")?,
                 pads: fold_pads(&attrs.pads)?,
                 dilations: pair(&attrs.dilations, [1, 1], "dilations")?,
+                groups,
             })
         }
         "MaxPool" => {
@@ -253,6 +263,7 @@ fn build_op(op_type: &str, attrs: &Attrs) -> Result<Op> {
                 kernel,
                 strides: pair(&attrs.strides, kernel, "strides")?,
                 pads: fold_pads(&attrs.pads)?,
+                dilations: pair(&attrs.dilations, [1, 1], "dilations")?,
             })
         }
         "Relu" => Op::Relu,
@@ -261,6 +272,8 @@ fn build_op(op_type: &str, attrs: &Attrs) -> Result<Op> {
             trans_b: attrs.trans_b.unwrap_or(false),
         },
         "Softmax" => Op::Softmax,
+        "Add" => Op::Add,
+        "GlobalAveragePool" => Op::GlobalAveragePool,
         other => bail!("unsupported operator '{other}'"),
     })
 }
@@ -360,6 +373,69 @@ mod tests {
             .unwrap_err()
             .to_string()
             .contains("shape implies"));
+    }
+
+    #[test]
+    fn parses_grouped_and_dilated_conv() {
+        let node = CONV.replace(
+            r#""dilations": [1, 1]"#,
+            r#""dilations": [2, 2], "group": 1"#,
+        );
+        let doc = Json::parse(&minimal_doc(&node)).unwrap();
+        let g = parse_doc(&doc, None).unwrap();
+        match &g.nodes[0].op {
+            Op::Conv(a) => {
+                assert_eq!(a.dilations, [2, 2]);
+                assert_eq!(a.groups, 1);
+            }
+            _ => panic!(),
+        }
+        // absent group defaults to 1 (dense)
+        let doc = Json::parse(&minimal_doc(CONV)).unwrap();
+        match &parse_doc(&doc, None).unwrap().nodes[0].op {
+            Op::Conv(a) => assert_eq!(a.groups, 1),
+            _ => panic!(),
+        }
+        // group 0 is rejected at parse time, before shape inference
+        let node = CONV.replace(r#""dilations": [1, 1]"#, r#""dilations": [1, 1], "group": 0"#);
+        let doc = Json::parse(&minimal_doc(&node)).unwrap();
+        let err = format!("{:#}", parse_doc(&doc, None).unwrap_err());
+        assert!(err.contains("group must be >= 1"), "{err}");
+    }
+
+    #[test]
+    fn parses_residual_add_and_gap() {
+        // a residual bypass: conv -> add(input, conv) -> gap, the exact
+        // structure a ResNet block tail lowers to
+        let text = r#"{
+  "format": "cnn2gate-onnx-subset-v1",
+  "name": "res",
+  "input": {"name": "input", "shape": [2, 4, 4], "dtype": "float32"},
+  "output": {"name": "out"},
+  "nodes": [
+    {"op_type": "Conv", "inputs": ["input", "w"], "outputs": ["c"],
+     "attrs": {"kernel_shape": [3, 3], "strides": [1, 1], "pads": [1, 1, 1, 1]}},
+    {"op_type": "Add", "inputs": ["input", "c"], "outputs": ["s"], "attrs": {}},
+    {"op_type": "GlobalAveragePool", "inputs": ["s"], "outputs": ["out"], "attrs": {}}
+  ],
+  "initializers": [
+    {"name": "w", "shape": [2, 2, 3, 3], "dtype": "float32", "offset": 0, "nbytes": 144}
+  ],
+  "external_data": null
+}"#;
+        let doc = Json::parse(text).unwrap();
+        let g = parse_doc(&doc, None).unwrap();
+        assert_eq!(g.op_names(), vec!["Conv", "Add", "GlobalAveragePool"]);
+        let flow = crate::ir::ComputationFlow::extract(&g).unwrap();
+        // conv round + Add merge + GAP pass-through round
+        assert_eq!(flow.layers.len(), 3);
+        assert_eq!(flow.layers[1].producers, vec![0], "input branch is a graph feed");
+        assert!(!flow.layers[1].has_weights());
+        // a one-input Add is an arity error, not a later shape panic
+        let bad_text = text.replace(r#"["input", "c"]"#, r#"["c"]"#);
+        let bad = Json::parse(&bad_text).unwrap();
+        let err = format!("{:#}", parse_doc(&bad, None).unwrap_err());
+        assert!(err.contains("wrong arity"), "{err}");
     }
 
     #[test]

@@ -1,9 +1,16 @@
 //! Model zoo: programmatic builders for the topologies the paper
-//! evaluates (AlexNet, VGG-16) plus LeNet-5 and a tiny test CNN.
+//! evaluates (AlexNet, VGG-16) plus LeNet-5 and a tiny test CNN, and
+//! the branch-family additions: ResNet-18 (residual basic blocks),
+//! MobileNetV1 (depthwise-separable stacks) and `tinyres` (a small
+//! residual+depthwise net for fast tests).
 //!
-//! These mirror `python/compile/model.py` layer-for-layer; the pytest /
-//! cargo integration tests cross-check both sides against the ONNX-subset
-//! JSON emitted by `make artifacts`.
+//! The linear models mirror `python/compile/model.py` layer-for-layer;
+//! the pytest / cargo integration tests cross-check both sides against
+//! the ONNX-subset JSON emitted by `make artifacts`. The branched
+//! models are built on [`BranchBuilder`], which emits the same node
+//! idiom (`l{li}_w`/`l{li}_b` initializers, `t{n}` tensors, biases on
+//! every parameterized layer, no batch-norm — folded into conv params,
+//! as a deployment-ready graph would carry).
 
 use std::collections::HashMap;
 
@@ -105,13 +112,30 @@ fn spec(name: &str) -> Option<(Vec<usize>, Vec<L>)> {
 
 /// Names available in the zoo.
 pub fn names() -> &'static [&'static str] {
-    &["tiny", "lenet5", "alexnet", "vgg16"]
+    &[
+        "tiny",
+        "lenet5",
+        "alexnet",
+        "vgg16",
+        "resnet18",
+        "mobilenetv1",
+        "tinyres",
+    ]
 }
 
 /// Build a zoo model. `with_weights` materializes He-initialized
 /// synthetic parameters (deterministic seed per model); without it the
 /// initializers carry shape/dtype only (ONNX external-data style).
 pub fn build(name: &str, with_weights: bool) -> Option<Graph> {
+    match name {
+        "resnet18" => build_resnet18(with_weights),
+        "mobilenetv1" => build_mobilenetv1(with_weights),
+        "tinyres" => build_tinyres(with_weights),
+        _ => build_linear(name, with_weights),
+    }
+}
+
+fn build_linear(name: &str, with_weights: bool) -> Option<Graph> {
     let (input_shape, layers) = spec(name)?;
     let mut rng = Rng::new(0xC44_2_6A7E ^ name.len() as u64);
     let mut nodes = Vec::new();
@@ -156,6 +180,7 @@ pub fn build(name: &str, with_weights: bool) -> Option<Graph> {
                     strides: [*s, *s],
                     pads: [*p, *p],
                     dilations: [1, 1],
+                    groups: 1,
                 };
                 let out = fresh(&mut t);
                 nodes.push(Node {
@@ -181,6 +206,7 @@ pub fn build(name: &str, with_weights: bool) -> Option<Graph> {
                     kernel: [*k, *k],
                     strides: [*s, *s],
                     pads: [0, 0],
+                    dilations: [1, 1],
                 };
                 let out = fresh(&mut t);
                 nodes.push(Node {
@@ -265,6 +291,331 @@ pub fn build(name: &str, with_weights: bool) -> Option<Graph> {
     })
 }
 
+/// A named tensor with its CHW shape, threaded through [`BranchBuilder`].
+#[derive(Clone)]
+struct T {
+    name: String,
+    shape: Vec<usize>,
+}
+
+/// Emits branched graphs (residual joins, depthwise convolutions) in
+/// the same node/initializer idiom as the linear builder: parameterized
+/// layers mint `l{li}_w`/`l{li}_b`, intermediate tensors mint `t{n}`,
+/// and every model ends in Softmax.
+struct BranchBuilder {
+    rng: Rng,
+    with_weights: bool,
+    nodes: Vec<Node>,
+    initializers: HashMap<String, Initializer>,
+    t: usize,
+    li: usize,
+}
+
+impl BranchBuilder {
+    fn new(name: &str, with_weights: bool) -> Self {
+        BranchBuilder {
+            rng: Rng::new(0xC44_2_6A7E ^ name.len() as u64),
+            with_weights,
+            nodes: Vec::new(),
+            initializers: HashMap::new(),
+            t: 0,
+            li: 0,
+        }
+    }
+
+    fn fresh(&mut self) -> String {
+        let n = format!("t{}", self.t);
+        self.t += 1;
+        n
+    }
+
+    fn weight(&mut self, shape: Vec<usize>, fan_in: usize) -> String {
+        let wname = format!("l{}_w", self.li);
+        let numel: usize = shape.iter().product();
+        let data = if self.with_weights {
+            Some(self.rng.he_weights(numel, fan_in))
+        } else {
+            None
+        };
+        self.initializers.insert(
+            wname.clone(),
+            Initializer {
+                info: TensorInfo {
+                    shape,
+                    dtype: DType::F32,
+                },
+                data,
+            },
+        );
+        wname
+    }
+
+    fn bias(&mut self, n: usize) -> String {
+        let bname = format!("l{}_b", self.li);
+        let data = if self.with_weights {
+            Some((0..n).map(|_| (self.rng.normal() * 0.05) as f32).collect())
+        } else {
+            None
+        };
+        self.initializers.insert(
+            bname.clone(),
+            Initializer {
+                info: TensorInfo {
+                    shape: vec![n],
+                    dtype: DType::F32,
+                },
+                data,
+            },
+        );
+        bname
+    }
+
+    fn relu(&mut self, x: &T) -> T {
+        let out = self.fresh();
+        self.nodes.push(Node {
+            op: Op::Relu,
+            inputs: vec![x.name.clone()],
+            outputs: vec![out.clone()],
+        });
+        T {
+            name: out,
+            shape: x.shape.clone(),
+        }
+    }
+
+    /// `groups == cin` (with `cout == cin`) emits a depthwise conv.
+    #[allow(clippy::too_many_arguments)]
+    fn conv(
+        &mut self,
+        x: &T,
+        cout: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+        groups: usize,
+        relu: bool,
+    ) -> Option<T> {
+        let cin = x.shape[0];
+        let wname = self.weight(vec![cout, cin / groups, k, k], (cin / groups) * k * k);
+        let bname = self.bias(cout);
+        self.li += 1;
+        let attrs = ConvAttrs {
+            kernel: [k, k],
+            strides: [s, s],
+            pads: [p, p],
+            dilations: [1, 1],
+            groups,
+        };
+        let out = self.fresh();
+        self.nodes.push(Node {
+            op: Op::Conv(attrs),
+            inputs: vec![x.name.clone(), wname, bname],
+            outputs: vec![out.clone()],
+        });
+        let (oh, ow) = attrs.out_hw(x.shape[1], x.shape[2])?;
+        let cur = T {
+            name: out,
+            shape: vec![cout, oh, ow],
+        };
+        Some(if relu { self.relu(&cur) } else { cur })
+    }
+
+    fn max_pool(&mut self, x: &T, k: usize, s: usize, p: usize) -> Option<T> {
+        let attrs = PoolAttrs {
+            kernel: [k, k],
+            strides: [s, s],
+            pads: [p, p],
+            dilations: [1, 1],
+        };
+        let out = self.fresh();
+        self.nodes.push(Node {
+            op: Op::MaxPool(attrs),
+            inputs: vec![x.name.clone()],
+            outputs: vec![out.clone()],
+        });
+        let (oh, ow) = attrs.out_hw(x.shape[1], x.shape[2])?;
+        Some(T {
+            name: out,
+            shape: vec![x.shape[0], oh, ow],
+        })
+    }
+
+    /// Residual join: `a + b`, optionally with a fused trailing Relu.
+    /// `a` is the main branch (feed A once fused), `b` the skip path.
+    fn add(&mut self, a: &T, b: &T, relu: bool) -> T {
+        let out = self.fresh();
+        self.nodes.push(Node {
+            op: Op::Add,
+            inputs: vec![a.name.clone(), b.name.clone()],
+            outputs: vec![out.clone()],
+        });
+        let cur = T {
+            name: out,
+            shape: a.shape.clone(),
+        };
+        if relu {
+            self.relu(&cur)
+        } else {
+            cur
+        }
+    }
+
+    fn gap(&mut self, x: &T) -> T {
+        let out = self.fresh();
+        self.nodes.push(Node {
+            op: Op::GlobalAveragePool,
+            inputs: vec![x.name.clone()],
+            outputs: vec![out.clone()],
+        });
+        T {
+            name: out,
+            shape: vec![x.shape[0], 1, 1],
+        }
+    }
+
+    fn fc(&mut self, x: &T, n: usize, relu: bool) -> T {
+        let mut cur = x.clone();
+        if cur.shape.len() > 1 {
+            let out = self.fresh();
+            self.nodes.push(Node {
+                op: Op::Flatten,
+                inputs: vec![cur.name.clone()],
+                outputs: vec![out.clone()],
+            });
+            cur = T {
+                name: out,
+                shape: vec![cur.shape.iter().product()],
+            };
+        }
+        let kdim = cur.shape[0];
+        let wname = self.weight(vec![n, kdim], kdim);
+        let bname = self.bias(n);
+        self.li += 1;
+        let out = self.fresh();
+        self.nodes.push(Node {
+            op: Op::Gemm { trans_b: true },
+            inputs: vec![cur.name.clone(), wname, bname],
+            outputs: vec![out.clone()],
+        });
+        let cur = T {
+            name: out,
+            shape: vec![n],
+        };
+        if relu {
+            self.relu(&cur)
+        } else {
+            cur
+        }
+    }
+
+    /// ResNet basic block: 3x3 conv (+relu), 3x3 conv, skip (identity
+    /// or 1x1/s projection when the shape changes), Add+relu.
+    fn basic_block(&mut self, x: &T, cout: usize, stride: usize) -> Option<T> {
+        let c1 = self.conv(x, cout, 3, stride, 1, 1, true)?;
+        let c2 = self.conv(&c1, cout, 3, 1, 1, 1, false)?;
+        let skip = if stride != 1 || x.shape[0] != cout {
+            self.conv(x, cout, 1, stride, 0, 1, false)?
+        } else {
+            x.clone()
+        };
+        Some(self.add(&c2, &skip, true))
+    }
+
+    fn finish(mut self, name: &str, input_shape: Vec<usize>, last: T) -> Graph {
+        let out = self.fresh();
+        self.nodes.push(Node {
+            op: Op::Softmax,
+            inputs: vec![last.name.clone()],
+            outputs: vec![out.clone()],
+        });
+        Graph {
+            name: name.to_string(),
+            input_name: "input".into(),
+            input: TensorInfo {
+                shape: input_shape,
+                dtype: DType::F32,
+            },
+            output_name: out,
+            nodes: self.nodes,
+            initializers: self.initializers,
+        }
+    }
+}
+
+/// ResNet-18 (He et al.): 7x7/2 stem, 3x3/2 max-pool, four stages of
+/// two basic blocks (64/128/256/512 channels; stages 2-4 downsample on
+/// their first block via a 1x1/2 projection), global average pool and
+/// a 1000-way classifier. 11,684,712 parameters (conv/fc + biases,
+/// batch-norm folded).
+fn build_resnet18(with_weights: bool) -> Option<Graph> {
+    let input_shape = vec![3, 224, 224];
+    let mut b = BranchBuilder::new("resnet18", with_weights);
+    let input = T {
+        name: "input".into(),
+        shape: input_shape.clone(),
+    };
+    let mut cur = b.conv(&input, 64, 7, 2, 3, 1, true)?;
+    cur = b.max_pool(&cur, 3, 2, 1)?;
+    for (cout, stride) in [
+        (64, 1),
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+    ] {
+        cur = b.basic_block(&cur, cout, stride)?;
+    }
+    cur = b.gap(&cur);
+    cur = b.fc(&cur, 1000, false);
+    Some(b.finish("resnet18", input_shape, cur))
+}
+
+/// MobileNetV1 (Howard et al.): 3x3/2 stem then thirteen depthwise
+/// (3x3, groups == channels) / pointwise (1x1) separable pairs, global
+/// average pool, 1000-way classifier. 4,221,032 parameters.
+fn build_mobilenetv1(with_weights: bool) -> Option<Graph> {
+    let input_shape = vec![3, 224, 224];
+    let mut b = BranchBuilder::new("mobilenetv1", with_weights);
+    let input = T {
+        name: "input".into(),
+        shape: input_shape.clone(),
+    };
+    let mut cur = b.conv(&input, 32, 3, 2, 1, 1, true)?;
+    let dw_strides = [1, 2, 1, 2, 1, 2, 1, 1, 1, 1, 1, 2, 1];
+    let pw_couts = [64, 128, 128, 256, 256, 512, 512, 512, 512, 512, 512, 1024, 1024];
+    for (s, cout) in dw_strides.iter().zip(pw_couts) {
+        let ch = cur.shape[0];
+        cur = b.conv(&cur, ch, 3, *s, 1, ch, true)?;
+        cur = b.conv(&cur, cout, 1, 1, 0, 1, true)?;
+    }
+    cur = b.gap(&cur);
+    cur = b.fc(&cur, 1000, false);
+    Some(b.finish("mobilenetv1", input_shape, cur))
+}
+
+/// A toy residual+depthwise network sized for exhaustive simulator
+/// tests: one basic block plus one separable pair on 8x8 inputs, with
+/// channel counts divisible by 4 so tiny (ni, nl) designs admit it.
+fn build_tinyres(with_weights: bool) -> Option<Graph> {
+    let input_shape = vec![4, 8, 8];
+    let mut b = BranchBuilder::new("tinyres", with_weights);
+    let input = T {
+        name: "input".into(),
+        shape: input_shape.clone(),
+    };
+    let mut cur = b.conv(&input, 8, 3, 1, 1, 1, true)?;
+    cur = b.basic_block(&cur, 8, 1)?;
+    let ch = cur.shape[0];
+    cur = b.conv(&cur, ch, 3, 1, 1, ch, true)?;
+    cur = b.conv(&cur, 16, 1, 1, 0, 1, true)?;
+    cur = b.gap(&cur);
+    cur = b.fc(&cur, 10, false);
+    Some(b.finish("tinyres", input_shape, cur))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,6 +648,48 @@ mod tests {
         assert!((alex.param_count() as f64 / 1e6 - 61.1).abs() < 0.5);
         let vgg = build("vgg16", false).unwrap();
         assert!((vgg.param_count() as f64 / 1e6 - 138.4).abs() < 0.5);
+    }
+
+    #[test]
+    fn branch_family_param_counts_are_pinned() {
+        // conv1 9_472 + stages (147_712 + 524_928 + 2_098_432 +
+        // 8_391_168) + fc 513_000.
+        let resnet = build("resnet18", false).unwrap();
+        assert_eq!(resnet.param_count(), 11_684_712);
+        // conv1 896 + depthwise 49_600 + pointwise 3_145_536 +
+        // fc 1_025_000.
+        let mobile = build("mobilenetv1", false).unwrap();
+        assert_eq!(mobile.param_count(), 4_221_032);
+    }
+
+    #[test]
+    fn branched_models_materialize_deterministic_weights() {
+        let a = build("tinyres", true).unwrap();
+        let b = build("tinyres", true).unwrap();
+        assert!(a.has_weights());
+        for (k, init) in &a.initializers {
+            assert_eq!(init.data, b.initializers[k].data, "{k}");
+            assert_eq!(init.data.as_ref().unwrap().len(), init.info.numel(), "{k}");
+        }
+    }
+
+    #[test]
+    fn mobilenet_depthwise_weights_have_unit_cin() {
+        let g = build("mobilenetv1", false).unwrap();
+        let dw: Vec<_> = g
+            .nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Conv(a) if a.groups > 1 => Some((n, a)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(dw.len(), 13);
+        for (n, a) in dw {
+            let w = &g.initializers[&n.inputs[1]];
+            assert_eq!(w.info.shape[1], 1, "depthwise weight cin/groups");
+            assert_eq!(w.info.shape[0], a.groups, "depthwise cout == groups");
+        }
     }
 
     #[test]

@@ -408,8 +408,17 @@ pub fn stepped_census_table(sim: &SimReport, net: &NetworkStepReport) -> Table {
         let starved = census.conv_empty_stalls as f64 / cycles as f64;
         let backpressure =
             (census.rd_to_conv_full_stalls + census.conv_to_wr_full_stalls) as f64 / cycles as f64;
+        // multi-producer (Add-merge) rounds carry per-feed starvation
+        // counters; when one branch dominates, name it — that is the
+        // branch whose upstream round the schedule should rebalance
         let verdict = if starved > 0.25 {
-            "memory-bound (starved)"
+            if census.feed_b_empty_stalls > census.feed_a_empty_stalls {
+                "memory-bound (skip branch starved)"
+            } else if census.feed_a_empty_stalls > census.feed_b_empty_stalls {
+                "memory-bound (main branch starved)"
+            } else {
+                "memory-bound (starved)"
+            }
         } else if backpressure > 0.25 {
             "write-bound (backpressured)"
         } else {
@@ -477,8 +486,19 @@ pub fn specialization_table(
     }
     let delta_alms = spec.envelope_estimate.alms
         - rep.estimate.as_ref().map_or(spec.envelope_estimate.alms, |e| e.alms);
+    // batched runs add the serving payoff; batch-1 footnotes are
+    // byte-identical to the chain-era rendering
+    let serving = if spec.batch > 1 {
+        format!(
+            "; batch {} serves {:.1} frames/s specialized",
+            spec.batch,
+            spec.specialized_frames_per_s()
+        )
+    } else {
+        String::new()
+    };
     t.footnote(format!(
-        "total {} -> {} cycles ({:.1}% fewer) at {:.0} MHz; envelope ({},{}), resource delta {:+.0} ALMs",
+        "total {} -> {} cycles ({:.1}% fewer) at {:.0} MHz; envelope ({},{}), resource delta {:+.0} ALMs{}",
         fmt_count(spec.uniform_total_cycles() as f64),
         fmt_count(spec.specialized_total_cycles() as f64),
         100.0 * spec.gain_fraction(),
@@ -486,6 +506,7 @@ pub fn specialization_table(
         spec.envelope.0,
         spec.envelope.1,
         delta_alms,
+        serving,
     ));
     t
 }

@@ -92,8 +92,12 @@ pub const OUTCOME_FORMAT: &str = "cnn2gate-outcome";
 /// `specialization`; v3: per-entry `batch` + `throughput` and
 /// `specialization.batch` for the batched serving flow; v4: per-
 /// candidate `e2e_millis` — queueing delay + makespan — which the
-/// latency SLO now bounds instead of the bare makespan).
-pub const OUTCOME_VERSION: i64 = 4;
+/// latency SLO now bounds instead of the bare makespan; v5: branched
+/// graph families — per-entry `round_producers` (DAG wiring, emitted
+/// only for non-linear flows), per-feed starvation counters inside
+/// stepped censuses (emitted only when nonzero) and
+/// `specialization.specialized_frames_per_s`).
+pub const OUTCOME_VERSION: i64 = 5;
 
 /// Candidates per work-stealing prewarm item. Small enough that a
 /// VGG-16-sized grid splits across several workers, big enough that the
@@ -921,7 +925,9 @@ impl Outcome {
 
 /// One (model, device) entry of the JSON document. Every entry carries
 /// the same key set (absent sections are `null`) so consumers — and the
-/// golden schema test — see one shape.
+/// golden schema test — see one shape. The one exception is
+/// `round_producers` (schema v5): it exists only for non-linear flows,
+/// so every chain-era document keeps its exact byte layout.
 fn entry_to_json(rep: &SynthReport) -> Json {
     let mut o = JsonObj::new();
     o.insert("model", rep.model.as_str().into());
@@ -971,6 +977,17 @@ fn entry_to_json(rep: &SynthReport) -> Json {
         "stepped_network",
         rep.stepped_network.as_ref().map_or(Json::Null, eval::net_to_json),
     );
+    if let Some(producers) = &rep.round_producers {
+        o.insert(
+            "round_producers",
+            Json::Arr(
+                producers
+                    .iter()
+                    .map(|ps| Json::Arr(ps.iter().map(|&p| p.into()).collect()))
+                    .collect(),
+            ),
+        );
+    }
     o.insert("specialization", rep.specialization.as_ref().map_or(Json::Null, spec_to_json));
     o.insert(
         "quant",
@@ -1026,7 +1043,8 @@ fn throughput_to_json(choice: &crate::dse::ThroughputChoice) -> Json {
     Json::Obj(o)
 }
 
-/// The specialization section of one entry (schema v2; `batch` since v3).
+/// The specialization section of one entry (schema v2; `batch` since
+/// v3, `specialized_frames_per_s` since v5).
 fn spec_to_json(spec: &crate::dse::SpecializationReport) -> Json {
     let mut o = JsonObj::new();
     o.insert("uniform", Json::Arr(vec![spec.uniform.0.into(), spec.uniform.1.into()]));
@@ -1035,6 +1053,7 @@ fn spec_to_json(spec: &crate::dse::SpecializationReport) -> Json {
     o.insert("batch", spec.batch.into());
     o.insert("uniform_total_cycles", Json::Num(spec.uniform_total_cycles() as f64));
     o.insert("specialized_total_cycles", Json::Num(spec.specialized_total_cycles() as f64));
+    o.insert("specialized_frames_per_s", spec.specialized_frames_per_s().into());
     o.insert("envelope_estimate", eval::est_to_json(&spec.envelope_estimate));
     o.insert(
         "layers",
@@ -1344,6 +1363,8 @@ fn compile_pair(
         sim,
         stepped_network,
         specialization,
+        round_producers: (!flow.is_linear_chain())
+            .then(|| flow.layers.iter().map(|l| l.producers.clone()).collect()),
         quant: quant.cloned(),
     })
 }

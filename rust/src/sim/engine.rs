@@ -89,6 +89,8 @@ pub fn simulate_layer(
     let label = layer.label();
     let rows = match &layer.kind {
         LayerKind::ConvPool { conv_out_hw, .. } => conv_out_hw.0 as u64,
+        LayerKind::DepthwiseConvPool { conv_out_hw, .. } => conv_out_hw.0 as u64,
+        LayerKind::Add { hw, .. } => hw.0 as u64,
         LayerKind::Fc { .. } => 1,
     };
 
@@ -131,7 +133,13 @@ pub fn simulate_layer(
 fn round_ddr_bytes(layer: &FusedLayer, device: &Device, nl: usize, batch: usize) -> f64 {
     let red = layer.reduction_dim();
     let groups = layer.out_features().div_ceil(nl) as u64;
-    let weight_bytes = (groups * (red * nl) as u64) as f64;
+    // Add merges carry no weight tensor; their traffic is both operand
+    // streams (input_elems already counts 2×) plus the write-back
+    let weight_bytes = if layer.has_weights() {
+        (groups * (red * nl) as u64) as f64
+    } else {
+        0.0
+    };
     let in_bytes = layer.input_elems() as f64;
     let feat_budget_bytes = device.family.consts().feat_budget_frac * device.mem_bits as f64 / 8.0;
     let feature_bytes = if in_bytes > feat_budget_bytes {
@@ -413,6 +421,35 @@ mod tests {
             assert_eq!(b.compute_cycles, 16 * s.compute_cycles, "{}", s.label);
             assert!(b.ddr_cycles < 16 * s.ddr_cycles, "{}", s.label);
         }
+    }
+
+    #[test]
+    fn branch_families_simulate_end_to_end() {
+        // the analytical model must speak the new families: residual
+        // Adds are weight-free rounds, depthwise rounds reduce over k²
+        // alone, and both networks produce finite positive timings
+        for name in ["resnet18", "mobilenetv1", "tinyres"] {
+            let f = flow(name);
+            let rep = simulate(&f, &ARRIA_10_GX1150, 16, 32);
+            assert_eq!(rep.layers.len(), f.layers.len(), "{name}");
+            assert!(rep.total_millis > 0.0 && rep.total_millis.is_finite(), "{name}");
+            let b4 = simulate_batched(&f, &ARRIA_10_GX1150, 16, 32, 4);
+            assert!(b4.gops_per_s > 0.0, "{name}");
+        }
+        let res = flow("resnet18");
+        let rep = simulate(&res, &ARRIA_10_GX1150, 16, 32);
+        // an Add round's DDR traffic is pure activations: far below a
+        // same-size dense conv's weight-laden stream — and it never
+        // dominates a stage's 3x3 convs
+        let add_t = rep
+            .layers
+            .iter()
+            .zip(&res.layers)
+            .find(|(_, l)| !l.has_weights())
+            .map(|(t, _)| t)
+            .unwrap();
+        let conv2_t = &rep.layers[2];
+        assert!(add_t.millis < conv2_t.millis, "{} vs {}", add_t.millis, conv2_t.millis);
     }
 
     #[test]

@@ -26,6 +26,18 @@
 //!   bit-identical to the reference, stall counters included. The
 //!   property and adversarial tests below enforce that identity.
 //!
+//! Both engines speak **multi-producer rounds**: an Add-merge round
+//! ([`crate::ir::LayerKind::Add`]) is fed by two upstream rounds, so its
+//! [`RoundWork`] carries a second feed stream
+//! ([`RoundWork::feed2_bytes_per_step`] > 0). The single memory-read
+//! port then fetches one token per cycle into whichever stream is
+//! further behind (ties go to feed A), the lane array consumes one token
+//! from EACH stream per vector step, and starvation is attributed per
+//! branch ([`StepReport::feed_a_empty_stalls`]/
+//! [`StepReport::feed_b_empty_stalls`]) so the census can name the
+//! bottleneck branch. Single-feed rounds (`feed2 == 0`) dispatch to the
+//! exact pre-DAG engines — linear-chain censuses are byte-identical.
+//!
 //! DDR credit is exact u128 fixed-point fractional arithmetic
 //! ([`ddr_credit_rate`]): the per-cycle inflow is an integer number of
 //! credit units (`num` units per cycle, `den` units per byte), so the
@@ -69,6 +81,13 @@ pub struct RoundWork {
     /// Bytes the memory-read kernel must fetch per reduction step
     /// (feature vector broadcast + per-lane weight vectors).
     pub bytes_per_step: usize,
+    /// Bytes per reduction step of the SECOND feed stream — `0` for
+    /// ordinary single-producer rounds (the overwhelmingly common case,
+    /// dispatched to the classic single-feed engines), nonzero for
+    /// multi-producer merges (an Add round reads `N_l` bytes from each
+    /// branch per step). The conv stage consumes one token from each
+    /// stream per vector step.
+    pub feed2_bytes_per_step: usize,
     /// DDR bytes deliverable per cycle at the kernel clock (snapped to
     /// an exact per-round rational by the steppers — see
     /// [`ddr_credit_rate`]).
@@ -128,6 +147,12 @@ pub struct StepReport {
     pub rd_to_conv_full_stalls: u64,
     pub conv_to_wr_full_stalls: u64,
     pub conv_empty_stalls: u64,
+    /// Per-branch starvation attribution on multi-producer rounds: the
+    /// conv-empty cycles where feed A (resp. B) was the empty stream
+    /// (both can be charged in one cycle; `conv_empty_stalls` counts the
+    /// cycle once). Always 0 on single-feed rounds.
+    pub feed_a_empty_stalls: u64,
+    pub feed_b_empty_stalls: u64,
 }
 
 impl StepReport {
@@ -161,7 +186,9 @@ const SNAP_REL_TOL: f64 = 1e-3;
 /// one write (≤ G bytes), which the saturated inflow already covers
 /// sixty-four times over — DDR is simply never the limiter there.
 pub fn ddr_credit_rate(work: &RoundWork) -> (u64, u64) {
-    let group = (work.red_steps * work.bytes_per_step + work.out_bytes).max(1) as u64;
+    let group = (work.red_steps * (work.bytes_per_step + work.feed2_bytes_per_step)
+        + work.out_bytes)
+        .max(1) as u64;
     let rate = work.ddr_bytes_per_cycle;
     if !(rate.is_finite() && rate > 0.0) {
         return (1, 1);
@@ -202,8 +229,19 @@ pub fn ddr_credit_rate(work: &RoundWork) -> (u64, u64) {
 ///   vector token; after `red_steps` tokens a group-slice (N_l elements)
 ///   is complete and pushed to the pool pipe.
 /// * mem_read: if DDR credit covers `bytes_per_step` and the feed pipe
-///   has room, produce one vector token.
+///   has room, produce one vector token. On dual-feed rounds the single
+///   read port targets whichever stream is further behind (tie: feed A).
 pub fn step_round(work: &RoundWork) -> StepReport {
+    if work.feed2_bytes_per_step == 0 {
+        step_round_single(work)
+    } else {
+        step_round_dual(work)
+    }
+}
+
+/// The classic single-feed skip-ahead engine — the exact pre-DAG code
+/// path every linear-chain round takes (byte-identical censuses).
+fn step_round_single(work: &RoundWork) -> StepReport {
     let total_outputs = work.total_outputs();
     let total_steps = work.total_steps();
     let pipe_cap = PIPE_DEPTH.max(1) as u64;
@@ -401,11 +439,348 @@ struct EpochSnap {
     written: u64,
 }
 
+/// The dual-feed skip-ahead engine for multi-producer rounds. Identical
+/// cycle skeleton to [`step_round_single`]; the differences are exactly
+/// the dual-feed semantics (see module docs): two feed occupancies in
+/// the recurrence key, a second produced-count in the snapshot (and a
+/// matching skip bound), behind-first read arbitration, and per-branch
+/// starvation attribution. Bit-identical to
+/// [`step_round_reference_dual`], enforced by the tests below.
+fn step_round_dual(work: &RoundWork) -> StepReport {
+    let total_outputs = work.total_outputs();
+    let total_steps = work.total_steps();
+    let pipe_cap = PIPE_DEPTH.max(1) as u64;
+    let (num, den) = ddr_credit_rate(work);
+    let bw = num as u128;
+    let bps_a = work.bytes_per_step as u128 * den as u128;
+    let bps_b = work.feed2_bytes_per_step as u128 * den as u128;
+    let ob = work.out_bytes as u128 * den as u128;
+    let cap = (8 * bw).max(2 * bps_a.max(bps_b).max(ob));
+
+    let mut rep = StepReport::default();
+    let mut produced_a = 0u64;
+    let mut produced_b = 0u64;
+    let mut consumed = 0u64;
+    let mut emitted = 0u64;
+    let mut written = 0u64;
+    let mut red_progress = 0u64;
+    let mut pending_slice = false;
+    let mut feed_a_len = 0u64;
+    let mut feed_b_len = 0u64;
+    let mut out_len = 0u64;
+    let mut credit = 0u128;
+
+    // analysis: allow(nondet, the epoch-recurrence memo is keyed lookup only; census counters never iterate it)
+    let mut seen: HashMap<DualEpochKey, DualEpochSnap> = HashMap::new();
+
+    while written < total_outputs {
+        rep.cycles += 1;
+        credit += bw;
+
+        // -- memory write --
+        let mut wrote = false;
+        if out_len > 0 && credit >= ob {
+            out_len -= 1;
+            written += 1;
+            credit -= ob;
+            rep.wr_busy += 1;
+            wrote = true;
+        }
+
+        // -- conv lane array --
+        if pending_slice {
+            if out_len < pipe_cap {
+                out_len += 1;
+                emitted += 1;
+                pending_slice = false;
+            } else {
+                rep.conv_to_wr_full_stalls += 1;
+            }
+        }
+        if !pending_slice && consumed < total_steps {
+            if feed_a_len > 0 && feed_b_len > 0 {
+                feed_a_len -= 1;
+                feed_b_len -= 1;
+                consumed += 1;
+                red_progress += 1;
+                rep.conv_busy += 1;
+                if red_progress == work.red_steps as u64 {
+                    red_progress = 0;
+                    if out_len < pipe_cap {
+                        out_len += 1;
+                        emitted += 1;
+                    } else {
+                        pending_slice = true;
+                        rep.conv_to_wr_full_stalls += 1;
+                    }
+                }
+            } else {
+                rep.conv_empty_stalls += 1;
+                if feed_a_len == 0 {
+                    rep.feed_a_empty_stalls += 1;
+                }
+                if feed_b_len == 0 {
+                    rep.feed_b_empty_stalls += 1;
+                }
+            }
+        }
+
+        // -- memory read: one port, behind-first arbitration --
+        let want_a = produced_a < total_steps;
+        let want_b = produced_b < total_steps;
+        let pick_b = want_b && (!want_a || produced_b < produced_a);
+        if pick_b {
+            if credit >= bps_b {
+                if feed_b_len < pipe_cap {
+                    feed_b_len += 1;
+                    produced_b += 1;
+                    credit -= bps_b;
+                    rep.rd_busy += 1;
+                } else {
+                    rep.rd_to_conv_full_stalls += 1;
+                }
+            }
+        } else if want_a && credit >= bps_a {
+            if feed_a_len < pipe_cap {
+                feed_a_len += 1;
+                produced_a += 1;
+                credit -= bps_a;
+                rep.rd_busy += 1;
+            } else {
+                rep.rd_to_conv_full_stalls += 1;
+            }
+        }
+
+        credit = credit.min(cap);
+
+        // -- epoch skip-ahead (anchored on write-retire cycles) --
+        if !wrote || written >= total_outputs {
+            continue;
+        }
+        let key = DualEpochKey {
+            feed_a: feed_a_len as u32,
+            feed_b: feed_b_len as u32,
+            out: out_len as u32,
+            red: red_progress as u32,
+            pending: pending_slice,
+            credit,
+        };
+        let Some(&prev) = seen.get(&key) else {
+            if seen.len() >= EPOCH_WINDOW {
+                seen.clear();
+            }
+            seen.insert(
+                key,
+                DualEpochSnap {
+                    cycles: rep.cycles,
+                    rd_busy: rep.rd_busy,
+                    conv_busy: rep.conv_busy,
+                    wr_busy: rep.wr_busy,
+                    rd_to_conv: rep.rd_to_conv_full_stalls,
+                    conv_to_wr: rep.conv_to_wr_full_stalls,
+                    conv_empty: rep.conv_empty_stalls,
+                    feed_a_empty: rep.feed_a_empty_stalls,
+                    feed_b_empty: rep.feed_b_empty_stalls,
+                    produced_a,
+                    produced_b,
+                    consumed,
+                    emitted,
+                    written,
+                },
+            );
+            continue;
+        };
+        let d_written = written - prev.written;
+        if d_written == 0 {
+            continue;
+        }
+        let d_produced_a = produced_a - prev.produced_a;
+        let d_produced_b = produced_b - prev.produced_b;
+        let d_consumed = consumed - prev.consumed;
+        let d_emitted = emitted - prev.emitted;
+        let mut k = ((total_outputs - written) / d_written).saturating_sub(1);
+        if d_produced_a > 0 {
+            k = k.min(((total_steps - produced_a) / d_produced_a).saturating_sub(1));
+        }
+        if d_produced_b > 0 {
+            k = k.min(((total_steps - produced_b) / d_produced_b).saturating_sub(1));
+        }
+        if d_consumed > 0 {
+            k = k.min(((total_steps - consumed) / d_consumed).saturating_sub(1));
+        }
+        if d_emitted > 0 {
+            k = k.min(((total_outputs - emitted) / d_emitted).saturating_sub(1));
+        }
+        if k == 0 {
+            continue;
+        }
+        rep.cycles += (rep.cycles - prev.cycles) * k;
+        rep.rd_busy += (rep.rd_busy - prev.rd_busy) * k;
+        rep.conv_busy += (rep.conv_busy - prev.conv_busy) * k;
+        rep.wr_busy += (rep.wr_busy - prev.wr_busy) * k;
+        rep.rd_to_conv_full_stalls += (rep.rd_to_conv_full_stalls - prev.rd_to_conv) * k;
+        rep.conv_to_wr_full_stalls += (rep.conv_to_wr_full_stalls - prev.conv_to_wr) * k;
+        rep.conv_empty_stalls += (rep.conv_empty_stalls - prev.conv_empty) * k;
+        rep.feed_a_empty_stalls += (rep.feed_a_empty_stalls - prev.feed_a_empty) * k;
+        rep.feed_b_empty_stalls += (rep.feed_b_empty_stalls - prev.feed_b_empty) * k;
+        produced_a += d_produced_a * k;
+        produced_b += d_produced_b * k;
+        consumed += d_consumed * k;
+        emitted += d_emitted * k;
+        written += d_written * k;
+        seen.clear();
+    }
+    rep
+}
+
+/// Compact dual-feed pipeline state at a write-retire cycle: the
+/// single-feed [`EpochKey`] plus the second feed occupancy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct DualEpochKey {
+    feed_a: u32,
+    feed_b: u32,
+    out: u32,
+    red: u32,
+    pending: bool,
+    credit: u128,
+}
+
+/// Census + stream counters at a dual-feed anchor.
+#[derive(Debug, Clone, Copy)]
+struct DualEpochSnap {
+    cycles: u64,
+    rd_busy: u64,
+    conv_busy: u64,
+    wr_busy: u64,
+    rd_to_conv: u64,
+    conv_to_wr: u64,
+    conv_empty: u64,
+    feed_a_empty: u64,
+    feed_b_empty: u64,
+    produced_a: u64,
+    produced_b: u64,
+    consumed: u64,
+    emitted: u64,
+    written: u64,
+}
+
 /// The naive per-cycle oracle the skip-ahead engine is validated
 /// against: one loop iteration per kernel cycle over real [`Pipe`]s.
 /// Same cycle semantics as [`step_round`] (see there), ~1000x slower on
 /// round-scale work.
 pub fn step_round_reference(work: &RoundWork) -> StepReport {
+    if work.feed2_bytes_per_step == 0 {
+        step_round_reference_single(work)
+    } else {
+        step_round_reference_dual(work)
+    }
+}
+
+/// The naive dual-feed oracle: real [`Pipe`]s for both feed streams,
+/// one loop iteration per cycle. Ground truth for [`step_round_dual`].
+fn step_round_reference_dual(work: &RoundWork) -> StepReport {
+    let total_outputs = work.total_outputs();
+    let total_steps = work.total_steps();
+    let mut feed_a = Pipe::new("rdA->conv", PIPE_DEPTH.max(1));
+    let mut feed_b = Pipe::new("rdB->conv", PIPE_DEPTH.max(1));
+    let mut out = Pipe::new("conv->wr", PIPE_DEPTH.max(1));
+    let mut rep = StepReport::default();
+
+    let (num, den) = ddr_credit_rate(work);
+    let bw = num as u128;
+    let bps_a = work.bytes_per_step as u128 * den as u128;
+    let bps_b = work.feed2_bytes_per_step as u128 * den as u128;
+    let ob = work.out_bytes as u128 * den as u128;
+    let cap = (8 * bw).max(2 * bps_a.max(bps_b).max(ob));
+
+    let mut produced_a = 0u64;
+    let mut produced_b = 0u64;
+    let mut consumed_steps = 0u64;
+    let mut emitted = 0u64;
+    let mut written = 0u64;
+    let mut red_progress = 0u64;
+    let mut pending_slice = false;
+    let mut ddr_credit = 0u128;
+
+    while written < total_outputs {
+        rep.cycles += 1;
+        ddr_credit += bw;
+
+        // -- memory write --
+        if !out.is_empty() && ddr_credit >= ob {
+            out.pop();
+            written += 1;
+            ddr_credit -= ob;
+            rep.wr_busy += 1;
+        }
+
+        // -- conv lane array: one token from EACH feed per vector step --
+        if pending_slice {
+            if out.push(emitted) {
+                emitted += 1;
+                pending_slice = false;
+            } else {
+                rep.conv_to_wr_full_stalls += 1;
+            }
+        }
+        if !pending_slice && consumed_steps < total_steps {
+            if !feed_a.is_empty() && !feed_b.is_empty() {
+                feed_a.pop();
+                feed_b.pop();
+                consumed_steps += 1;
+                red_progress += 1;
+                rep.conv_busy += 1;
+                if red_progress == work.red_steps as u64 {
+                    red_progress = 0;
+                    if out.push(emitted) {
+                        emitted += 1;
+                    } else {
+                        pending_slice = true;
+                        rep.conv_to_wr_full_stalls += 1;
+                    }
+                }
+            } else {
+                rep.conv_empty_stalls += 1;
+                if feed_a.is_empty() {
+                    rep.feed_a_empty_stalls += 1;
+                }
+                if feed_b.is_empty() {
+                    rep.feed_b_empty_stalls += 1;
+                }
+            }
+        }
+
+        // -- memory read: one port, behind-first arbitration --
+        let want_a = produced_a < total_steps;
+        let want_b = produced_b < total_steps;
+        let pick_b = want_b && (!want_a || produced_b < produced_a);
+        if pick_b {
+            if ddr_credit >= bps_b {
+                if feed_b.push(produced_b) {
+                    produced_b += 1;
+                    ddr_credit -= bps_b;
+                    rep.rd_busy += 1;
+                } else {
+                    rep.rd_to_conv_full_stalls += 1;
+                }
+            }
+        } else if want_a && ddr_credit >= bps_a {
+            if feed_a.push(produced_a) {
+                produced_a += 1;
+                ddr_credit -= bps_a;
+                rep.rd_busy += 1;
+            } else {
+                rep.rd_to_conv_full_stalls += 1;
+            }
+        }
+
+        ddr_credit = ddr_credit.min(cap);
+    }
+    rep
+}
+
+/// The classic single-feed oracle (the exact pre-DAG code path).
+fn step_round_reference_single(work: &RoundWork) -> StepReport {
     let total_outputs = work.total_outputs(); // group-slices to emit
     let total_steps = work.total_steps(); // vector MACs
     let mut feed = Pipe::new("rd->conv", PIPE_DEPTH.max(1));
@@ -516,12 +891,30 @@ pub fn layer_round_work_batched(
     batch: usize,
 ) -> RoundWork {
     let batch = batch.max(1);
+    let ddr_bytes_per_cycle = device.ddr_gbytes_per_s * 1e9 / (fmax_mhz * 1e6);
+    if !layer.has_weights() {
+        // Add merge: no weight stream to amortize — each vector step
+        // reads N_l activation bytes from EACH producer branch and
+        // retires N_l bytes. Activations scale per frame, so the batch
+        // rides total_outputs/total_steps alone.
+        return RoundWork {
+            pixels: layer.out_pixels().max(1),
+            groups: layer.out_features().div_ceil(nl).max(1),
+            red_steps: layer.reduction_dim().div_ceil(ni).max(1),
+            bytes_per_step: nl,
+            feed2_bytes_per_step: nl,
+            ddr_bytes_per_cycle,
+            out_bytes: nl,
+            batch,
+        };
+    }
     RoundWork {
         pixels: layer.out_pixels().max(1),
         groups: layer.out_features().div_ceil(nl).max(1),
         red_steps: layer.reduction_dim().div_ceil(ni).max(1),
         bytes_per_step: bytes_per_step_with_reuse(ni, nl, batch),
-        ddr_bytes_per_cycle: device.ddr_gbytes_per_s * 1e9 / (fmax_mhz * 1e6),
+        feed2_bytes_per_step: 0,
+        ddr_bytes_per_cycle,
         out_bytes: nl,
         batch,
     }
@@ -602,7 +995,7 @@ pub fn scheduled_round_work_batched(
 ) -> RoundWork {
     let batch = batch.max(1);
     let mut work = layer_round_work_batched(layer, device, fmax_mhz, ni, nl, batch);
-    if schedule == WeightSchedule::SliceResident {
+    if schedule == WeightSchedule::SliceResident && layer.has_weights() {
         work.bytes_per_step = bytes_per_step_with_reuse(ni, nl, work.pixels * batch);
     }
     work
@@ -725,6 +1118,8 @@ impl NetworkStepReport {
             t.rd_to_conv_full_stalls += l.rd_to_conv_full_stalls;
             t.conv_to_wr_full_stalls += l.conv_to_wr_full_stalls;
             t.conv_empty_stalls += l.conv_empty_stalls;
+            t.feed_a_empty_stalls += l.feed_a_empty_stalls;
+            t.feed_b_empty_stalls += l.feed_b_empty_stalls;
         }
         t
     }
@@ -802,10 +1197,18 @@ pub fn analytical_cycles(work: &RoundWork) -> u64 {
     let total_outputs = work.total_outputs();
     let compute = work.total_steps();
     let (num, den) = ddr_credit_rate(work);
-    let rd_bytes = compute as u128 * work.bytes_per_step as u128;
+    let rd_bytes =
+        compute as u128 * (work.bytes_per_step + work.feed2_bytes_per_step) as u128;
     let wr_bytes = total_outputs as u128 * work.out_bytes as u128;
     let ddr = ((rd_bytes + wr_bytes) * den as u128).div_ceil(num as u128) as u64;
-    compute.max(ddr) + work.red_steps as u64 + 2 // + pipeline fill
+    // dual-feed rounds share ONE read port: two fetches per vector step
+    // bound the steady state at 2 cycles/step even when DDR is ample
+    let port = if work.feed2_bytes_per_step > 0 {
+        2 * compute
+    } else {
+        compute
+    };
+    compute.max(port).max(ddr) + work.red_steps as u64 + 2 // + pipeline fill
 }
 
 #[cfg(test)]
@@ -827,6 +1230,7 @@ mod tests {
             groups: 2,
             red_steps: 10,
             bytes_per_step: 4,
+            feed2_bytes_per_step: 0,
             ddr_bytes_per_cycle: 1000.0, // DDR never the limit
             out_bytes: 4,
             batch: 1,
@@ -845,6 +1249,7 @@ mod tests {
             groups: 2,
             red_steps: 8,
             bytes_per_step: 64,
+            feed2_bytes_per_step: 0,
             ddr_bytes_per_cycle: 8.0, // 8x slower than compute needs
             out_bytes: 8,
             batch: 1,
@@ -870,6 +1275,7 @@ mod tests {
                 groups: g.usize(1, 8),
                 red_steps: g.usize(1, 64),
                 bytes_per_step: g.usize(1, 128),
+                feed2_bytes_per_step: 0,
                 ddr_bytes_per_cycle: g.f64(1.0, 256.0),
                 out_bytes: g.usize(1, 32),
                 batch,
@@ -903,6 +1309,9 @@ mod tests {
                 groups: g.usize(1, 8),
                 red_steps: g.usize(1, 64),
                 bytes_per_step: g.usize(1, 128),
+                // a second feed stream on a third of the draws: the
+                // dual-feed recurrence rides the same identity contract
+                feed2_bytes_per_step: [0, 0, g.usize(1, 64)][g.usize(0, 2)],
                 // sub-1 byte/cycle rates are first-class under the
                 // fractional credit model (the whole-byte stepper
                 // clamped them to 1)
@@ -952,6 +1361,7 @@ mod tests {
                     groups,
                     red_steps,
                     bytes_per_step,
+                    feed2_bytes_per_step: 0,
                     ddr_bytes_per_cycle: ddr,
                     out_bytes,
                     batch,
@@ -967,6 +1377,7 @@ mod tests {
             groups: 6,
             red_steps: 100,
             bytes_per_step: bytes_per_step_with_reuse(16, 32, 16),
+            feed2_bytes_per_step: 0,
             ddr_bytes_per_cycle: 40.201_005_025_125_63,
             out_bytes: 32,
             batch: 16,
@@ -983,6 +1394,7 @@ mod tests {
             groups: 1,
             red_steps: 1,
             bytes_per_step: 1,
+            feed2_bytes_per_step: 0,
             ddr_bytes_per_cycle: 1.25,
             out_bytes: 64,
             batch: 1,
@@ -1019,6 +1431,7 @@ mod tests {
                 groups: 3,
                 red_steps: 5,
                 bytes_per_step: 12,
+                feed2_bytes_per_step: 0,
                 ddr_bytes_per_cycle: 20.0,
                 out_bytes: 6,
                 batch,
@@ -1083,6 +1496,7 @@ mod tests {
             groups: 6,
             red_steps: 100,
             bytes_per_step: 528,
+            feed2_bytes_per_step: 0,
             ddr_bytes_per_cycle: rate,
             out_bytes: 32,
             batch: 1,
@@ -1267,6 +1681,164 @@ mod tests {
         let fps = net.frames_per_s();
         let inv = 1e3 / net.millis_per_frame();
         assert!((fps - inv).abs() / fps < 1e-12, "fps {fps} vs {inv}");
+    }
+
+    #[test]
+    fn dual_feed_skip_ahead_is_bit_identical_property() {
+        // the multi-producer tentpole contract: the dual-feed skip-ahead
+        // engine matches its naive oracle bit for bit — cycles, busy
+        // counters, shared stall counters AND the per-branch starvation
+        // attribution — across B ∈ {1, 4, 16}
+        for_all("dual step_round == reference", |g| {
+            let batch = [1usize, 4, 16][g.usize(0, 2)];
+            let scale = if batch >= 16 { 8 } else { batch };
+            let w = RoundWork {
+                pixels: g.usize(1, 96 / scale),
+                groups: g.usize(1, 8),
+                red_steps: g.usize(1, 16),
+                bytes_per_step: g.usize(1, 64),
+                feed2_bytes_per_step: g.usize(1, 64),
+                ddr_bytes_per_cycle: g.f64(0.3, 256.0),
+                out_bytes: g.usize(1, 32),
+                batch,
+            };
+            assert_eq!(step_round(&w), step_round_reference(&w), "{w:?}");
+        });
+    }
+
+    #[test]
+    fn dual_feed_skip_ahead_is_bit_identical_on_adversarial_rounds() {
+        // corners specific to the second stream: wildly asymmetric
+        // per-stream byte costs (the behind-first arbitration starves
+        // the cheap stream while the expensive one catches up),
+        // red_steps == 1 rollback storms through the dual path, sub-byte
+        // buses where neither fetch fits most cycles, and the Add-merge
+        // shape (bps_a == bps_b == out_bytes) the IR actually emits.
+        let cases: [(usize, usize, usize, usize, usize, f64, usize); 10] = [
+            (64, 2, 1, 32, 32, 8.0, 32),      // the real Add shape (nl=32)
+            (64, 2, 1, 32, 32, 1000.0, 32),   // Add, DDR ample: port-bound
+            (500, 4, 1, 4, 64, 3.0, 64),      // asymmetric feeds, rollback
+            (2000, 1, 1, 1, 1, 1.25, 64),     // starved writes, dual drain
+            (400, 4, 17, 601, 7, 255.4, 64),  // coprime rates, long residue
+            (81, 2, 25, 528, 528, 7.0, 32),   // symmetric heavyweight feeds
+            (40, 2, 3, 7, 11, 0.37, 5),       // sub-byte-per-cycle bus
+            (200, 1, 2, 3, 5, 0.999_999_9, 4), // just below a whole byte
+            (64, 3, 4, 9, 1, 2.5, 6),         // cheap B stream races ahead
+            (729, 6, 1, 32, 32, 40.2, 32),    // conv2-scale Add merge
+        ];
+        for (pixels, groups, red_steps, bps_a, bps_b, ddr, out_bytes) in cases {
+            for batch in [1usize, 2, 16] {
+                if batch > 1 && pixels * groups * red_steps * batch > 400_000 {
+                    continue;
+                }
+                let w = RoundWork {
+                    pixels,
+                    groups,
+                    red_steps,
+                    bytes_per_step: bps_a,
+                    feed2_bytes_per_step: bps_b,
+                    ddr_bytes_per_cycle: ddr,
+                    out_bytes,
+                    batch,
+                };
+                assert_eq!(step_round(&w), step_round_reference(&w), "{w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dual_feed_conserves_and_attributes_branches() {
+        // an Add-merge round must retire every slice, MAC every pair,
+        // and fetch BOTH streams in full through the one read port
+        let w = RoundWork {
+            pixels: 49,
+            groups: 4,
+            red_steps: 1,
+            bytes_per_step: 32,
+            feed2_bytes_per_step: 32,
+            ddr_bytes_per_cycle: 1000.0,
+            out_bytes: 32,
+            batch: 2,
+        };
+        let rep = step_round(&w);
+        let outputs = w.total_outputs();
+        assert_eq!(rep.wr_busy, outputs);
+        assert_eq!(rep.conv_busy, w.total_steps());
+        assert_eq!(rep.rd_busy, 2 * w.total_steps(), "both streams fetched in full");
+        // the port admits one token per cycle while conv wants a pair:
+        // the lane array starves roughly every other cycle, and every
+        // starved cycle names at least one empty branch
+        assert!(rep.conv_empty_stalls > 0);
+        assert!(
+            rep.feed_a_empty_stalls + rep.feed_b_empty_stalls >= rep.conv_empty_stalls,
+            "every starved cycle must blame a branch"
+        );
+        // DDR ample + one port: the round is port-bound at ~2 cycles/step
+        let analytical = analytical_cycles(&w);
+        assert!(analytical as f64 >= 2.0 * w.total_steps() as f64);
+        let rel = (rep.cycles as f64 - analytical as f64).abs() / rep.cycles as f64;
+        assert!(rel < 0.15, "stepped {} vs analytical {analytical}", rep.cycles);
+        // single-feed rounds never charge the branch counters
+        let single = RoundWork {
+            feed2_bytes_per_step: 0,
+            ..w
+        };
+        let srep = step_round(&single);
+        assert_eq!(srep.feed_a_empty_stalls, 0);
+        assert_eq!(srep.feed_b_empty_stalls, 0);
+    }
+
+    #[test]
+    fn add_round_work_has_two_symmetric_feeds() {
+        let flow =
+            ComputationFlow::extract(&zoo::build("resnet18", false).unwrap()).unwrap();
+        let add = flow.layers.iter().find(|l| !l.has_weights()).unwrap();
+        let w = layer_round_work_batched(add, &ARRIA_10_GX1150, 199.0, 16, 32, 4);
+        assert_eq!(w.bytes_per_step, 32, "feed A reads N_l activation bytes");
+        assert_eq!(w.feed2_bytes_per_step, 32, "feed B mirrors it");
+        assert_eq!(w.red_steps, 1);
+        assert_eq!(w.out_bytes, 32);
+        assert_eq!(w.batch, 4);
+        // no weight stream: the batch does not amortize bytes_per_step
+        let w1 = layer_round_work_batched(add, &ARRIA_10_GX1150, 199.0, 16, 32, 1);
+        assert_eq!(w.bytes_per_step, w1.bytes_per_step);
+        // ... and the slice-resident override is a no-op on Add rounds
+        let res = scheduled_round_work_batched(
+            add,
+            &ARRIA_10_GX1150,
+            199.0,
+            16,
+            32,
+            WeightSchedule::SliceResident,
+            4,
+        );
+        assert_eq!(res, w);
+        // conv rounds are untouched by the dual-feed plumbing
+        let conv = flow.layers.iter().find(|l| l.is_conv()).unwrap();
+        let cw = layer_round_work(conv, &ARRIA_10_GX1150, 199.0, 16, 32);
+        assert_eq!(cw.feed2_bytes_per_step, 0);
+    }
+
+    #[test]
+    fn branched_network_census_is_bit_identical_to_oracle() {
+        // whole-network identity on a real residual graph: every round
+        // of the tinyres zoo model (Adds included) stepped by both
+        // engines at B ∈ {1, 2, 16}
+        let flow =
+            ComputationFlow::extract(&zoo::build("tinyres", false).unwrap()).unwrap();
+        assert!(flow.layers.iter().any(|l| !l.has_weights()), "tinyres has Adds");
+        for batch in [1usize, 2, 16] {
+            let works =
+                network_round_work_batched(&flow, &ARRIA_10_GX1150, 199.0, 4, 4, batch);
+            for (w, layer) in works.iter().zip(&flow.layers) {
+                assert_eq!(
+                    step_round(w),
+                    step_round_reference(w),
+                    "B={batch} {}",
+                    layer.label()
+                );
+            }
+        }
     }
 
     /// The batched counterpart of the ≥10x CI gate: skip-ahead must

@@ -1,6 +1,17 @@
 //! Cycle-level simulator of the deeply pipelined OpenCL kernel
 //! architecture (paper §3.2, Fig. 3c/5) — the stand-in for FPGA
 //! execution that regenerates Table 1 and Fig. 6.
+//!
+//! Rounds are stepped by the epoch skip-ahead engine
+//! ([`kernels::step_round`]), bit-identical to the naive per-cycle
+//! oracle ([`kernels::step_round_reference`]). Residual Add-merge
+//! rounds are dual-feed: one read port alternates between the two
+//! producer streams (fetching into whichever feed is further behind),
+//! the conv stage consumes one token from each feed per step, and the
+//! census attributes starvation per branch
+//! (`feed_a_empty_stalls`/`feed_b_empty_stalls`). Single-feed rounds
+//! (`feed2_bytes_per_step == 0`) take the pre-DAG code path verbatim,
+//! so linear-chain censuses are byte-for-byte unchanged.
 
 pub mod engine;
 pub mod kernels;

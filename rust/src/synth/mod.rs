@@ -68,6 +68,11 @@ pub struct SynthReport {
     /// --specialize` — the flow ran at stepped-full fidelity, and the
     /// design fits).
     pub specialization: Option<SpecializationReport>,
+    /// Producer round indices per fused round — the DAG wiring of
+    /// branched (residual/separable) models. `None` on linear chains,
+    /// whose wiring is implied (round i reads round i-1), so chain-era
+    /// reports and documents are unchanged.
+    pub round_producers: Option<Vec<Vec<usize>>>,
     pub quant: Option<QuantReport>,
 }
 

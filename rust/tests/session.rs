@@ -67,6 +67,7 @@ fn assert_report_identity(a: &SynthReport, b: &SynthReport, ctx: &str) {
     assert_eq!(a.sim, b.sim, "{ctx}");
     assert_eq!(a.stepped_network, b.stepped_network, "{ctx}");
     assert_eq!(a.specialization, b.specialization, "{ctx}");
+    assert_eq!(a.round_producers, b.round_producers, "{ctx}: DAG wiring");
 }
 
 fn synth_job(specialize: bool) -> CompileJob {
@@ -349,6 +350,27 @@ fn throughput_outcome() -> Outcome {
         .unwrap()
 }
 
+/// A branched (residual + depthwise) model through the stepped-full +
+/// specialize flow: the v5 shape with `round_producers` DAG wiring and
+/// per-feed starvation counters on the Add-merge rounds.
+fn branched_stepped_outcome() -> Outcome {
+    let session = Session::builder()
+        .threads(4)
+        .fidelity(Fidelity::SteppedFullNetwork)
+        .build();
+    session
+        .run(
+            &CompileJob::builder()
+                .model(zoo::build("tinyres", false).unwrap())
+                .device(&device::ARRIA_10_GX1150)
+                .explorer(Explorer::BruteForce)
+                .specialize()
+                .build()
+                .unwrap(),
+        )
+        .unwrap()
+}
+
 #[test]
 fn outcome_json_is_stable_across_cold_and_warm_runs() {
     let cold = analytical_outcome().to_json().to_string_pretty();
@@ -411,19 +433,22 @@ fn collect_paths(v: &Json, prefix: &str, out: &mut BTreeSet<String>) {
 fn outcome_json_matches_the_golden_schema() {
     // union of the fitting/non-fitting analytical sweep (nulls, option
     // arrays, rankings), a quantized+specialized stepped-full 1×1
-    // (quant + stepped_network + specialization sections), and a
-    // throughput-mode 1×1 (per-entry batch + throughput sweep): together
-    // they exercise every key the v4 schema can emit
+    // (quant + stepped_network + specialization sections), a
+    // throughput-mode 1×1 (per-entry batch + throughput sweep), and a
+    // branched stepped-full 1×1 (round_producers DAG wiring + per-feed
+    // starvation counters): together they exercise every key the v5
+    // schema can emit
     let mut got = BTreeSet::new();
     collect_paths(&analytical_outcome().to_json(), "", &mut got);
     collect_paths(&quantized_stepped_outcome().to_json(), "", &mut got);
     collect_paths(&throughput_outcome().to_json(), "", &mut got);
+    collect_paths(&branched_stepped_outcome().to_json(), "", &mut got);
 
     let golden_path =
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/outcome_v4_paths.txt");
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/outcome_v5_paths.txt");
     if std::env::var("CNN2GATE_UPDATE_GOLDENS").is_ok() {
         let mut text = String::from(
-            "# Key paths of the cnn2gate-outcome v4 JSON document (--json).\n\
+            "# Key paths of the cnn2gate-outcome v5 JSON document (--json).\n\
              # Regenerate with CNN2GATE_UPDATE_GOLDENS=1 cargo test outcome_json_matches.\n",
         );
         for p in &got {
@@ -433,7 +458,7 @@ fn outcome_json_matches_the_golden_schema() {
         std::fs::write(&golden_path, text).unwrap();
     }
     let want: BTreeSet<String> = std::fs::read_to_string(&golden_path)
-        .expect("golden schema file committed at rust/tests/golden/outcome_v4_paths.txt")
+        .expect("golden schema file committed at rust/tests/golden/outcome_v5_paths.txt")
         .lines()
         .map(str::trim)
         .filter(|l| !l.is_empty() && !l.starts_with('#'))
@@ -451,7 +476,7 @@ fn outcome_json_matches_the_golden_schema() {
 fn outcome_json_carries_the_acceptance_payload() {
     let doc = analytical_outcome().to_json();
     assert_eq!(doc.get("format").as_str(), Some("cnn2gate-outcome"));
-    assert_eq!(doc.get("version").as_i64(), Some(4));
+    assert_eq!(doc.get("version").as_i64(), Some(5));
     assert_eq!(doc.get("explorer").as_str(), Some("bf"));
     assert_eq!(doc.get("fidelity").as_str(), Some("analytical"));
     assert_eq!(doc.get("census_gamma").as_f64(), Some(0.0));
@@ -516,4 +541,77 @@ fn outcome_json_carries_the_acceptance_payload() {
         candidates[1].get("frames_per_s").as_f64().unwrap()
             > candidates[0].get("frames_per_s").as_f64().unwrap()
     );
+}
+
+#[test]
+fn branched_outcome_carries_dag_wiring_and_feed_stalls() {
+    let outcome = branched_stepped_outcome();
+    let doc = outcome.to_json();
+    let rep = outcome.into_synth_report().unwrap();
+    assert!(rep.fits(), "tinyres fits the Arria 10");
+
+    // the DAG wiring rides the report: one producer list per fused
+    // round, and at least one Add-merge round reads two of them
+    let producers = rep.round_producers.as_ref().expect("branched model carries wiring");
+    assert_eq!(producers.len(), rep.sim.as_ref().unwrap().layers.len());
+    assert!(
+        producers.iter().any(|ps| ps.len() == 2),
+        "tinyres has a residual join: {producers:?}"
+    );
+
+    // ...and into the document, alongside per-feed starvation counters
+    // on the Add rounds (one read port alternating two feeds starves
+    // the lagging feed deterministically) and the serving rate
+    let entry = doc.get("entries").idx(0);
+    let wired = entry.get("round_producers").as_arr().unwrap();
+    assert_eq!(wired.len(), producers.len());
+    assert!(wired.iter().any(|ps| ps.as_arr().unwrap().len() == 2));
+    let spec = entry.get("specialization");
+    assert!(spec.get("specialized_frames_per_s").as_f64().unwrap() > 0.0);
+    let text = doc.to_string_pretty();
+    assert!(text.contains("feed_a_empty_stalls"), "main-branch starvation recorded");
+    assert!(text.contains("feed_b_empty_stalls"), "skip-branch starvation recorded");
+
+    // linear chains carry none of the branch-era artifacts: their
+    // documents are the chain-era bytes plus only the version literal
+    for linear in [analytical_outcome(), quantized_stepped_outcome()] {
+        let text = linear.to_json().to_string_pretty();
+        assert!(!text.contains("round_producers"), "linear chains imply their wiring");
+        assert!(!text.contains("feed_a_empty_stalls"));
+        assert!(!text.contains("feed_b_empty_stalls"));
+    }
+}
+
+#[test]
+fn linear_chain_outcome_bytes_are_stable_across_sessions() {
+    // AlexNet + VGG16 through two independent cold sessions: the whole
+    // rendered document must be byte-identical, at schema v5, with zero
+    // branch-era keys — the provably-identical linear path of the DAG
+    // refactor, pinned end-to-end
+    let run = || {
+        let session = Session::builder().threads(4).build();
+        let mut texts = Vec::new();
+        for model in ["alexnet", "vgg16"] {
+            let outcome = session
+                .run(
+                    &CompileJob::builder()
+                        .model(zoo::build(model, false).unwrap())
+                        .device(&device::ARRIA_10_GX1150)
+                        .explorer(Explorer::BruteForce)
+                        .build()
+                        .unwrap(),
+                )
+                .unwrap();
+            texts.push(outcome.to_json().to_string_pretty());
+        }
+        texts
+    };
+    let (first, second) = (run(), run());
+    assert_eq!(first, second, "linear outcome bytes drift across sessions");
+    for text in &first {
+        assert!(text.contains("\"version\": 5"));
+        assert!(!text.contains("round_producers"));
+        assert!(!text.contains("feed_a_empty_stalls"));
+        assert!(!text.contains("feed_b_empty_stalls"));
+    }
 }

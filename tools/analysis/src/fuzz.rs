@@ -283,6 +283,39 @@ const ONNX_CHAIN_DOC: &str = r#"{
   "external_data": null
 }"#;
 
+/// The PR-10 attack surface: a residual Add join fed by a grouped +
+/// dilated Conv on one branch and a 1x1 projection on the other, closed
+/// by GlobalAveragePool — every parser arm the branch-aware IR added.
+const ONNX_BRANCH_DOC: &str = r#"{
+  "format": "cnn2gate-onnx-subset-v1",
+  "name": "m3",
+  "input": {"name": "input", "shape": [2, 4, 4], "dtype": "float32"},
+  "output": {"name": "out"},
+  "nodes": [
+    {"op_type": "Conv", "inputs": ["input", "w1", "b1"], "outputs": ["t1"],
+     "attrs": {"kernel_shape": [3, 3], "strides": [1, 1], "pads": [2, 2, 2, 2],
+               "dilations": [2, 2], "group": 2}},
+    {"op_type": "Conv", "inputs": ["input", "w2", "b2"], "outputs": ["t2"],
+     "attrs": {"kernel_shape": [1, 1], "strides": [1, 1], "pads": [0, 0, 0, 0],
+               "dilations": [1, 1]}},
+    {"op_type": "Add", "inputs": ["t1", "t2"], "outputs": ["s"], "attrs": {}},
+    {"op_type": "Relu", "inputs": ["s"], "outputs": ["r"], "attrs": {}},
+    {"op_type": "GlobalAveragePool", "inputs": ["r"], "outputs": ["g"], "attrs": {}},
+    {"op_type": "Flatten", "inputs": ["g"], "outputs": ["f"], "attrs": {}},
+    {"op_type": "Gemm", "inputs": ["f", "w3", "b3"], "outputs": ["y"], "attrs": {"transB": 1}},
+    {"op_type": "Softmax", "inputs": ["y"], "outputs": ["out"], "attrs": {}}
+  ],
+  "initializers": [
+    {"name": "w1", "shape": [4, 1, 3, 3], "dtype": "float32", "offset": 0, "nbytes": 144},
+    {"name": "b1", "shape": [4], "dtype": "float32", "offset": 144, "nbytes": 16},
+    {"name": "w2", "shape": [4, 2, 1, 1], "dtype": "float32", "offset": 160, "nbytes": 32},
+    {"name": "b2", "shape": [4], "dtype": "float32", "offset": 192, "nbytes": 16},
+    {"name": "w3", "shape": [3, 4], "dtype": "float32", "offset": 208, "nbytes": 48},
+    {"name": "b3", "shape": [3], "dtype": "float32", "offset": 256, "nbytes": 12}
+  ],
+  "external_data": null
+}"#;
+
 /// Fuzz [`Json::parse`]. Invariant: never panics; on accept, the tree
 /// renders and reparses to an equal tree (exact when all numbers are
 /// finite — NaN/Inf degrade to `null` by design).
@@ -343,6 +376,7 @@ pub fn fuzz_onnx(seed: u64, iters: u64) -> Result<FuzzOutcome, String> {
     let mut rng = Rng::new(seed ^ 0x6f6e_6e78);
     let conv = Json::parse(ONNX_CONV_DOC).map_err(|e| e.message)?;
     let chain = Json::parse(ONNX_CHAIN_DOC).map_err(|e| e.message)?;
+    let branch = Json::parse(ONNX_BRANCH_DOC).map_err(|e| e.message)?;
     let mut out = FuzzOutcome {
         target: "onnx::parse_doc",
         inputs: 0,
@@ -350,7 +384,11 @@ pub fn fuzz_onnx(seed: u64, iters: u64) -> Result<FuzzOutcome, String> {
         rejected: 0,
     };
     for i in 0..iters {
-        let base = if rng.below(2) == 0 { &conv } else { &chain };
+        let base = match rng.below(3) {
+            0 => &conv,
+            1 => &chain,
+            _ => &branch,
+        };
         let doc = match rng.below(4) {
             0 | 1 => mutate_tree(&mut rng, base),
             2 => {
@@ -663,6 +701,16 @@ mod tests {
         assert!(t.base.lines().count() >= 3, "header + 2 entries");
         assert!(!t.delta.is_empty() && t.delta.ends_with('\n'));
         assert_eq!(t.base_name.replace(".jsonl", ".delta.jsonl"), t.delta_name);
+    }
+
+    #[test]
+    fn branch_template_is_itself_valid() {
+        let doc = Json::parse(ONNX_BRANCH_DOC).unwrap();
+        let g = parse_doc(&doc, None).expect("unmutated branched template must parse");
+        assert_eq!(
+            g.op_names(),
+            vec!["Conv", "Conv", "Add", "Relu", "GlobalAveragePool", "Flatten", "Gemm", "Softmax"]
+        );
     }
 
     #[test]
